@@ -1,0 +1,78 @@
+//! RQ3 case study driver: the mHC kernels (paper §5.4).
+//!
+//! Generates AscendC for `mHC_post` and `mHC_post_grad` (novel kernels
+//! outside the benchmark), verifies against host references, and compares
+//! three execution paths — eager, generated, expert-optimized — at the
+//! default case-study shapes. When `make artifacts` has been run, the
+//! simulator outputs are additionally cross-checked against the JAX/Pallas
+//! golden oracles.
+//!
+//! Run: `cargo run --release --example mhc_casestudy`
+
+use ascendcraft::mhc::{
+    self, eager_cycles, eager_grad_ops, eager_post_ops, run_case_study_paper_shapes, MhcDims,
+};
+use ascendcraft::runtime::OracleRegistry;
+use ascendcraft::util::compare::allclose_report;
+
+fn main() {
+    let dims = MhcDims::default();
+    let (post, grad) = (MhcDims::post_default(), MhcDims::grad_default());
+    println!(
+        "mHC case study: n={} streams, d={}; post rows={}, grad rows={}",
+        dims.n, dims.d, post.rows, grad.rows
+    );
+    println!(
+        "eager baselines: post={:.0} cycles ({} launches), grad={:.0} cycles ({} launches)\n",
+        eager_cycles(&eager_post_ops(&post)),
+        eager_post_ops(&post).len(),
+        eager_cycles(&eager_grad_ops(&grad)),
+        eager_grad_ops(&grad).len(),
+    );
+
+    let runs = run_case_study_paper_shapes(42);
+    println!("{:<28} {:>8} {:>14} {:>10}", "variant", "correct", "cycles", "speedup");
+    for r in &runs {
+        println!(
+            "{:<28} {:>8} {:>14.0} {:>9.2}x",
+            r.variant, r.correct, r.cycles, r.speedup_vs_eager
+        );
+        assert!(r.correct, "{}: {:?}", r.variant, r.failure);
+    }
+
+    // the paper's qualitative claims must hold:
+    // generated kernels beat eager; optimized beats generated substantially
+    let (pg, po, gg, go) = (&runs[0], &runs[1], &runs[2], &runs[3]);
+    assert!(pg.speedup_vs_eager > 1.5, "generated post should beat eager");
+    assert!(gg.speedup_vs_eager > 1.5, "generated grad should beat eager");
+    assert!(po.speedup_vs_eager > 1.8 * pg.speedup_vs_eager, "optimized post gains");
+    assert!(go.speedup_vs_eager > 1.8 * gg.speedup_vs_eager, "optimized grad gains");
+
+    // PJRT golden cross-check (when artifacts are built): the Pallas mHC
+    // kernels and the Rust reference must agree
+    let reg = OracleRegistry::default_dir();
+    if reg.available("mhc_post") {
+        let inputs = mhc::make_inputs(&dims, 42, false);
+        let want = mhc::reference::post_reference(&dims, &inputs);
+        let oracle = reg.get("mhc_post").expect("load mhc_post oracle");
+        let got = oracle
+            .run(&[&inputs["h"], &inputs["w"], &inputs["g"]])
+            .expect("run mhc_post oracle");
+        let rep = allclose_report(&got[0], &want, 1e-3, 1e-4);
+        assert!(rep.ok, "mhc_post golden mismatch: {}", rep.summary());
+        println!("\nPJRT golden cross-check: mhc_post Pallas kernel == rust reference");
+    } else {
+        println!("\n(run `make artifacts` for the Pallas/PJRT golden cross-check)");
+    }
+    if reg.available("mhc_post_grad") {
+        let inputs = mhc::make_inputs(&dims, 42, true);
+        let want = mhc::reference::post_grad_reference(&dims, &inputs);
+        let oracle = reg.get("mhc_post_grad").expect("load mhc_post_grad oracle");
+        let got = oracle
+            .run(&[&inputs["h"], &inputs["w"], &inputs["g"], &inputs["dy"]])
+            .expect("run mhc_post_grad oracle");
+        let rep = allclose_report(&got[0], &want, 1e-3, 1e-4);
+        assert!(rep.ok, "mhc_post_grad golden mismatch: {}", rep.summary());
+        println!("PJRT golden cross-check: mhc_post_grad Pallas kernel == rust reference");
+    }
+}

@@ -1,0 +1,70 @@
+//! End-to-end MultiKernelBench driver — the repository's headline
+//! validation run (DESIGN.md E1+E2).
+//!
+//! Runs all 52 Level-1 tasks through the full AscendCraft pipeline on the
+//! worker pool, verifies every kernel against host references (and the
+//! PJRT golden oracles where `make artifacts` has produced them), and
+//! regenerates the paper's Table 1 and Table 2. Writes a JSON report next
+//! to the binary output for EXPERIMENTS.md.
+//!
+//! Run: `cargo run --release --example multikernelbench`
+
+use ascendcraft::bench_suite::tasks::all_tasks;
+use ascendcraft::coordinator::service::{run_suite, SuiteConfig};
+use ascendcraft::runtime::OracleRegistry;
+use ascendcraft::util::compare::allclose_report;
+
+fn main() {
+    let tasks = all_tasks();
+    println!("running {} tasks on {} workers ...", tasks.len(), SuiteConfig::default().workers);
+    let cfg = SuiteConfig { verbose: true, ..Default::default() };
+    let started = std::time::Instant::now();
+    let suite = run_suite(&tasks, &cfg);
+    println!("\nsuite wall-clock: {:.1}s", started.elapsed().as_secs_f64());
+
+    println!("\n{}", suite.render_table1());
+    println!("{}", suite.render_table2());
+
+    // cross-check the rust references against the JAX/PJRT golden oracles
+    // for every artifact that exists (L2 <-> L3 agreement)
+    let reg = OracleRegistry::default_dir();
+    let artifact_names = reg.list();
+    if artifact_names.is_empty() {
+        println!("(no artifacts/ — run `make artifacts` for the PJRT golden cross-check)");
+    } else {
+        println!("PJRT golden cross-check ({} artifacts):", artifact_names.len());
+        let mut checked = 0;
+        for name in &artifact_names {
+            let Some(task) = tasks.iter().find(|t| t.name == name.as_str()) else {
+                continue;
+            };
+            let oracle = match reg.get(name) {
+                Ok(o) => o,
+                Err(e) => {
+                    println!("  {name:<14} load failed: {e}");
+                    continue;
+                }
+            };
+            let inputs = task.make_inputs(77);
+            let ins: Vec<_> = task.inputs.iter().map(|(n, _, _)| &inputs[*n]).collect();
+            let want = task.reference(&inputs);
+            let got = oracle.run(&ins).expect("oracle run");
+            let rep = allclose_report(&got[0], &want[task.outputs[0].0], 1e-3, 1e-4);
+            println!("  {name:<14} {}", if rep.ok { "ok" } else { "MISMATCH" });
+            assert!(rep.ok, "{name}: {}", rep.summary());
+            checked += 1;
+        }
+        println!("  ({checked} oracles agree with the rust references)");
+    }
+
+    // persist the per-task report
+    let json = suite.to_json().to_pretty();
+    std::fs::write("multikernelbench_report.json", &json).expect("write report");
+    println!("\nwrote multikernelbench_report.json ({} bytes)", json.len());
+
+    // headline assertions (EXPERIMENTS.md E1): Table 1 must match the paper
+    let totals = suite.totals();
+    assert!((totals.comp_pct() - 98.1).abs() < 0.1, "Comp@1 {}", totals.comp_pct());
+    assert!((totals.pass_pct() - 90.4).abs() < 0.1, "Pass@1 {}", totals.pass_pct());
+    println!("Table 1 headline matches the paper: Comp@1 98.1, Pass@1 90.4");
+}

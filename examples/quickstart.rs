@@ -1,0 +1,59 @@
+//! Quickstart: generate, compile, verify and time one kernel end-to-end.
+//!
+//! Walks a single task (the paper's Figure-2 softmax) through every stage
+//! of the public API, printing the intermediate artifacts:
+//!
+//! 1. prompt assembly (DSL spec + category expert examples),
+//! 2. DSL generation (the knowledge-base synthesizer),
+//! 3. DSL frontend validation,
+//! 4. four-pass transcompilation to AscendC (+ compile diagnostics),
+//! 5. NPU simulation: numerics vs the reference + modeled cycles,
+//! 6. comparison against the PyTorch-eager baseline cost.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use ascendcraft::ascendc::print_ascendc;
+use ascendcraft::baselines::eager::eager_cycles;
+use ascendcraft::bench_suite::tasks::task_by_name;
+use ascendcraft::coordinator::pipeline::{run_task, PipelineConfig};
+use ascendcraft::synth::prompt::build_prompt;
+
+fn main() {
+    let task = task_by_name("softmax").expect("softmax task");
+
+    println!("=== 1. prompt (what a real-LLM deployment would send) ===");
+    let p = build_prompt(&task);
+    for line in p.lines().take(12) {
+        println!("  {line}");
+    }
+    println!("  ... ({} more lines)\n", p.lines().count().saturating_sub(12));
+
+    println!("=== 2-5. full pipeline ===");
+    let art = run_task(&task, &PipelineConfig::default());
+
+    println!("--- generated DSL (paper Fig. 2 structure) ---");
+    let dsl = art.dsl_source.as_deref().unwrap_or("(none)");
+    for line in dsl.lines().take(24) {
+        println!("  {line}");
+    }
+    println!("  ... ({} more lines)\n", dsl.lines().count().saturating_sub(24));
+
+    println!("--- transcompiled AscendC (passes 1-4) ---");
+    if let Some(program) = &art.program {
+        let text = print_ascendc(program);
+        for line in text.lines().take(28) {
+            println!("  {line}");
+        }
+        println!("  ... ({} more lines)\n", text.lines().count().saturating_sub(28));
+    }
+
+    println!("=== 6. result ===");
+    let r = &art.result;
+    println!("  compiled (Comp@1):     {}", r.compiled);
+    println!("  correct  (Pass@1):     {}", r.correct);
+    println!("  repair rounds:         {}", r.repair_rounds);
+    println!("  generated cycles:      {:.0}", r.generated_cycles.unwrap_or(f64::NAN));
+    println!("  eager baseline cycles: {:.0}", eager_cycles(&task));
+    println!("  speedup vs eager:      {:.2}x", r.speedup().unwrap_or(0.0));
+    assert!(r.correct, "quickstart kernel must verify: {:?}", r.failure);
+}

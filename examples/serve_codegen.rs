@@ -1,0 +1,108 @@
+//! Codegen-service demo: AscendCraft as a deployed kernel-generation
+//! service (the L3 coordinator's intended shape).
+//!
+//! A client thread submits kernel requests (task specs) to a bounded job
+//! queue; a worker pool drains it, running the full generation pipeline
+//! per request and returning verified AscendC plus a report. Demonstrates
+//! concurrency, per-request artifacts, and failure reporting for
+//! unsupported requests (the bool-dtype kernel).
+//!
+//! Run: `cargo run --release --example serve_codegen`
+
+use ascendcraft::bench_suite::tasks::task_by_name;
+use ascendcraft::coordinator::pipeline::{run_task, PipelineConfig};
+use std::sync::mpsc;
+use std::time::Instant;
+
+struct Request {
+    id: usize,
+    task_name: &'static str,
+}
+
+struct Response {
+    id: usize,
+    task_name: &'static str,
+    ok: bool,
+    detail: String,
+    ascendc_lines: usize,
+    secs: f64,
+}
+
+fn main() {
+    let (req_tx, req_rx) = mpsc::channel::<Request>();
+    let (resp_tx, resp_rx) = mpsc::channel::<Response>();
+    let req_rx = std::sync::Arc::new(std::sync::Mutex::new(req_rx));
+
+    let workers = 4;
+    std::thread::scope(|scope| {
+        // worker pool
+        for worker_id in 0..workers {
+            let req_rx = std::sync::Arc::clone(&req_rx);
+            let resp_tx = resp_tx.clone();
+            scope.spawn(move || loop {
+                let req = {
+                    let guard = req_rx.lock().unwrap();
+                    guard.recv()
+                };
+                let Ok(req) = req else { return };
+                let started = Instant::now();
+                let task = task_by_name(req.task_name).expect("known task");
+                let art = run_task(&task, &PipelineConfig::default());
+                let ascendc_lines = art
+                    .program
+                    .as_ref()
+                    .map(|p| ascendcraft::ascendc::print_ascendc(p).lines().count())
+                    .unwrap_or(0);
+                let _ = resp_tx.send(Response {
+                    id: req.id,
+                    task_name: req.task_name,
+                    ok: art.result.correct,
+                    detail: art
+                        .result
+                        .failure
+                        .clone()
+                        .unwrap_or_else(|| {
+                            format!(
+                                "verified, {:.2}x vs eager, {} repair rounds (worker {worker_id})",
+                                art.result.speedup().unwrap_or(0.0),
+                                art.result.repair_rounds
+                            )
+                        }),
+                    ascendc_lines,
+                    secs: started.elapsed().as_secs_f64(),
+                });
+            });
+        }
+        drop(resp_tx);
+
+        // client: submit a mixed batch of requests, including one the
+        // service must reject (bool mask kernel)
+        let batch = [
+            "relu", "gelu", "softmax", "adam", "cumsum", "mse_loss", "mask_cumsum", "l2norm",
+        ];
+        for (id, name) in batch.iter().enumerate() {
+            req_tx.send(Request { id, task_name: name }).unwrap();
+        }
+        drop(req_tx);
+
+        let mut responses: Vec<Response> = resp_rx.iter().collect();
+        responses.sort_by_key(|r| r.id);
+        println!("{:<4} {:<14} {:<6} {:>8} {:>7}  detail", "id", "kernel", "ok", "ascendc", "secs");
+        let mut ok_count = 0;
+        for r in &responses {
+            println!(
+                "{:<4} {:<14} {:<6} {:>8} {:>6.2}s  {}",
+                r.id,
+                r.task_name,
+                r.ok,
+                r.ascendc_lines,
+                r.secs,
+                &r.detail[..r.detail.len().min(80)]
+            );
+            ok_count += r.ok as usize;
+        }
+        assert_eq!(responses.len(), batch.len());
+        assert_eq!(ok_count, batch.len() - 1, "exactly mask_cumsum should fail");
+        println!("\nserved {} requests, {} verified kernels", responses.len(), ok_count);
+    });
+}

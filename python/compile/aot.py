@@ -1,0 +1,59 @@
+"""AOT lowering: jax -> HLO *text* artifacts for the Rust PJRT runtime.
+
+Usage (from python/):  python -m compile.aot [--out-dir ../artifacts] [ops...]
+
+HLO text — not `.serialize()` — is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids, which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. Lowered with return_tuple=True; the
+Rust side unwraps the tuple. See /opt/xla-example/README.md.
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import OPS
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(name: str, out_dir: str) -> str:
+    fn, args = OPS[name]
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    return path
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("ops", nargs="*", help="ops to build (default: all)")
+    ns = ap.parse_args()
+    os.makedirs(ns.out_dir, exist_ok=True)
+    names = ns.ops or list(OPS)
+    unknown = [n for n in names if n not in OPS]
+    if unknown:
+        print(f"unknown ops: {unknown}; known: {sorted(OPS)}", file=sys.stderr)
+        return 1
+    for name in names:
+        path = build(name, ns.out_dir)
+        size = os.path.getsize(path)
+        print(f"  wrote {path} ({size} bytes)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

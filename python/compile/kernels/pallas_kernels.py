@@ -1,0 +1,177 @@
+"""Layer-1 Pallas kernels — the compute hot-spots, written with the same
+staged tiling structure the AscendCraft DSL expresses (DESIGN.md
+§Hardware-Adaptation):
+
+* Unified Buffer (Ascend) maps to VMEM (TPU): every kernel stages blocks
+  into VMEM via `BlockSpec` and keeps the per-step footprint well under
+  16 MiB;
+* the DSL's copyin/compute/copyout staging becomes Pallas grid steps —
+  the grid pipeline overlaps HBM<->VMEM copies with compute the way TQue
+  double buffering does on Ascend;
+* MXU-friendly tiles: trailing dims stay multiples of 128, row blocks
+  multiples of 8.
+
+All kernels run `interpret=True`: the CPU PJRT client cannot execute
+Mosaic custom-calls, and interpret mode lowers to plain HLO so the
+surrounding jit lowers into a single artifact the Rust runtime loads
+(see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-5
+
+# Row-block size: 8 rows per grid step (8 x 2048 f32 = 64 KiB in VMEM,
+# comfortably inside the ~16 MiB budget with double buffering).
+ROW_BLOCK = 8
+
+
+def _softmax_kernel(x_ref, o_ref, *, col_tile: int):
+    """Figure-2-style tiled softmax: three passes over column tiles.
+
+    Pass 1 computes the running row max, pass 2 the sum of exp(x - max),
+    pass 3 normalizes — the same 3-pass dataflow the DSL example encodes,
+    with `fori_loop` playing the role of the DSL's tile loop.
+    """
+    rows, cols = x_ref.shape
+    n_tiles = cols // col_tile
+
+    def pass1(t, row_max):
+        tile = x_ref[:, pl.dslice(t * col_tile, col_tile)]
+        return jnp.maximum(row_max, jnp.max(tile, axis=-1))
+
+    row_max = jax.lax.fori_loop(0, n_tiles, pass1, jnp.full((rows,), -jnp.inf, x_ref.dtype))
+
+    def pass2(t, row_sum):
+        tile = x_ref[:, pl.dslice(t * col_tile, col_tile)]
+        return row_sum + jnp.sum(jnp.exp(tile - row_max[:, None]), axis=-1)
+
+    row_sum = jax.lax.fori_loop(0, n_tiles, pass2, jnp.zeros((rows,), x_ref.dtype))
+
+    def pass3(t, _):
+        tile = x_ref[:, pl.dslice(t * col_tile, col_tile)]
+        o_ref[:, pl.dslice(t * col_tile, col_tile)] = (
+            jnp.exp(tile - row_max[:, None]) / row_sum[:, None]
+        )
+        return 0
+
+    jax.lax.fori_loop(0, n_tiles, pass3, 0)
+
+
+def softmax(x, col_tile: int = 1024):
+    """Tiled softmax over the last axis of a 2D array."""
+    rows, cols = x.shape
+    col_tile = min(col_tile, cols)
+    assert cols % col_tile == 0, "column tile must divide cols"
+    block_rows = ROW_BLOCK if rows % ROW_BLOCK == 0 else 1
+    return pl.pallas_call(
+        functools.partial(_softmax_kernel, col_tile=col_tile),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        grid=(rows // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+        interpret=True,
+    )(x)
+
+
+def _adam_kernel(p_ref, g_ref, m_ref, v_ref, po_ref, mo_ref, vo_ref, *, lr, b1, b2, eps):
+    """Fused Adam step over one 1D tile (the optimizer-category fusion)."""
+    g = g_ref[...]
+    m_new = b1 * m_ref[...] + (1.0 - b1) * g
+    v_new = b2 * v_ref[...] + (1.0 - b2) * g * g
+    mo_ref[...] = m_new
+    vo_ref[...] = v_new
+    po_ref[...] = p_ref[...] - lr * m_new / (jnp.sqrt(v_new) + eps)
+
+
+def adam_step(param, grad, m, v, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8, tile=65536):
+    """Fused Adam update over flat parameter vectors."""
+    (n,) = param.shape
+    tile = min(tile, n)
+    assert n % tile == 0
+    shape = jax.ShapeDtypeStruct(param.shape, param.dtype)
+    spec = pl.BlockSpec((tile,), lambda i: (i,))
+    return pl.pallas_call(
+        functools.partial(_adam_kernel, lr=lr, b1=b1, b2=b2, eps=eps),
+        out_shape=(shape, shape, shape),
+        grid=(n // tile,),
+        in_specs=[spec, spec, spec, spec],
+        out_specs=(spec, spec, spec),
+        interpret=True,
+    )(param, grad, m, v)
+
+
+def _mhc_post_kernel(h_ref, p_ref, g_ref, y_ref):
+    """Fused mHC post-merge over a row block of all streams.
+
+    Mirrors the 'optimized' AscendC variant: each grid step loads one row
+    block of every stream once, mixes with the doubly-stochastic P, RMS
+    gates and adds the residual.
+    """
+    h = h_ref[...]  # [n, block_rows, d]
+    p = p_ref[...]  # [n, n]
+    g = g_ref[...]  # [n]
+    m = jnp.einsum("ji,jrd->ird", p, h)
+    inv = 1.0 / jnp.sqrt(jnp.mean(m * m, axis=-1, keepdims=True) + EPS)
+    y_ref[...] = h + g[:, None, None] * m * inv
+
+
+def mhc_post(h, w, g, iters: int = 5):
+    """mHC post-merge; Sinkhorn projection runs at the JAX level (it is a
+    4x4 computation), the heavy mixing/gating runs in the Pallas kernel."""
+    from .ref import sinkhorn_ref
+
+    n, rows, d = h.shape
+    p = sinkhorn_ref(w, iters)
+    block_rows = ROW_BLOCK if rows % ROW_BLOCK == 0 else 1
+    return pl.pallas_call(
+        _mhc_post_kernel,
+        out_shape=jax.ShapeDtypeStruct(h.shape, h.dtype),
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((n, block_rows, d), lambda i: (0, i, 0)),
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((n, block_rows, d), lambda i: (0, i, 0)),
+        interpret=True,
+    )(h, p, g)
+
+
+def _mhc_post_grad_kernel(h_ref, p_ref, g_ref, dy_ref, dh_ref):
+    """Fused mHC post-merge VJP over a row block (optimized variant)."""
+    h = h_ref[...]
+    p = p_ref[...]
+    g = g_ref[...]
+    dy = dy_ref[...]
+    d = h.shape[-1]
+    m = jnp.einsum("ji,jrd->ird", p, h)
+    inv = 1.0 / jnp.sqrt(jnp.mean(m * m, axis=-1, keepdims=True) + EPS)
+    dot = jnp.sum(dy * m, axis=-1, keepdims=True)
+    dm = g[:, None, None] * (inv * dy - m * (inv**3) / d * dot)
+    dh_ref[...] = dy + jnp.einsum("ji,ird->jrd", p, dm)
+
+
+def mhc_post_grad(h, w, g, dy, iters: int = 5):
+    from .ref import sinkhorn_ref
+
+    n, rows, d = h.shape
+    p = sinkhorn_ref(w, iters)
+    block_rows = ROW_BLOCK if rows % ROW_BLOCK == 0 else 1
+    return pl.pallas_call(
+        _mhc_post_grad_kernel,
+        out_shape=jax.ShapeDtypeStruct(h.shape, h.dtype),
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((n, block_rows, d), lambda i: (0, i, 0)),
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n, block_rows, d), lambda i: (0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((n, block_rows, d), lambda i: (0, i, 0)),
+        interpret=True,
+    )(h, p, g, dy)

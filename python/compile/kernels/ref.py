@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness references).
+
+Every Pallas kernel in this package is checked against these functions by
+pytest before its surrounding computation is AOT-lowered for the Rust
+runtime. Keep these boring and obviously correct.
+"""
+
+import jax.numpy as jnp
+
+EPS = 1e-5
+
+
+def softmax_ref(x):
+    """Row-wise numerically-stable softmax over the last axis."""
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def adam_ref(param, grad, m, v, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    """One fused Adam step (no bias correction, matching the Rust task)."""
+    m_new = b1 * m + (1.0 - b1) * grad
+    v_new = b2 * v + (1.0 - b2) * grad * grad
+    param_new = param - lr * m_new / (jnp.sqrt(v_new) + eps)
+    return param_new, m_new, v_new
+
+
+def sinkhorn_ref(w, iters=5):
+    """Project exp(w) onto the doubly-stochastic manifold."""
+    p = jnp.exp(w)
+    for _ in range(iters):
+        p = p / jnp.sum(p, axis=1, keepdims=True)
+        p = p / jnp.sum(p, axis=0, keepdims=True)
+    return p
+
+
+def mhc_post_ref(h, w, g, iters=5):
+    """mHC post-merge: Y[i] = H[i] + g[i] * rmsnorm(sum_j P[j,i] H[j]).
+
+    h: [n, rows, d]; w: [n, n]; g: [n].
+    """
+    p = sinkhorn_ref(w, iters)
+    m = jnp.einsum("ji,jrd->ird", p, h)
+    inv = 1.0 / jnp.sqrt(jnp.mean(m * m, axis=-1, keepdims=True) + EPS)
+    return h + g[:, None, None] * m * inv
+
+
+def mhc_post_grad_ref(h, w, g, dy, iters=5):
+    """VJP of mhc_post w.r.t. h, with stop-gradient through Sinkhorn."""
+    p = sinkhorn_ref(w, iters)
+    m = jnp.einsum("ji,jrd->ird", p, h)
+    d = h.shape[-1]
+    inv = 1.0 / jnp.sqrt(jnp.mean(m * m, axis=-1, keepdims=True) + EPS)
+    dot = jnp.sum(dy * m, axis=-1, keepdims=True)
+    dm = g[:, None, None] * (inv * dy - m * (inv**3) / d * dot)
+    return dy + jnp.einsum("ji,ird->jrd", p, dm)

@@ -1,0 +1,123 @@
+"""Layer-2 JAX reference library: the golden-oracle implementations of the
+benchmark operators, AOT-lowered by aot.py into `artifacts/*.hlo.txt` for
+the Rust runtime.
+
+Each entry is (function, example-argument shapes matching the Rust task
+specs). The showcase entries (softmax, adam, mhc_*) route through the L1
+Pallas kernels so the lowered artifact exercises the full three-layer
+stack; the rest are pure jnp. Python runs only at build time — the Rust
+binary never imports any of this.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import pallas_kernels as pk
+from .kernels import ref as kref
+
+
+# --------------------------------------------------------------- operators
+# Shapes mirror rust/src/bench_suite/tasks.rs and rust/src/mhc.
+
+EW = (1024, 4096)
+ROWS = (512, 2048)
+MHC = (4, 1792, 1024)
+
+
+def relu(x):
+    return (jnp.maximum(x, 0.0),)
+
+
+def gelu(x):
+    inner = 0.7978845608 * (x + 0.044715 * x * x * x)
+    return (0.5 * x * (1.0 + jnp.tanh(inner)),)
+
+
+def sigmoid(x):
+    return (1.0 / (1.0 + jnp.exp(-x)),)
+
+
+def silu(x):
+    return (x * (1.0 / (1.0 + jnp.exp(-x))),)
+
+
+def softmax(x):
+    # L1 Pallas kernel (tiled 3-pass, Figure 2 structure)
+    return (pk.softmax(x),)
+
+
+def log_softmax(x):
+    m = jnp.max(x, axis=-1, keepdims=True)
+    s = jnp.sum(jnp.exp(x - m), axis=-1, keepdims=True)
+    return ((x - m) - jnp.log(s),)
+
+
+def layernorm(x, gamma, beta):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    return ((x - mean) / jnp.sqrt(var + 1e-5) * gamma + beta,)
+
+
+def rmsnorm(x, gamma):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x / jnp.sqrt(ms + 1e-5) * gamma,)
+
+
+def adam(param, grad, m, v):
+    # L1 Pallas fused optimizer step
+    return pk.adam_step(param, grad, m, v)
+
+
+def mse_loss(pred, target):
+    return (jnp.mean((pred - target) ** 2, keepdims=True).reshape(1),)
+
+
+def cumsum(x):
+    return (jnp.cumsum(x, axis=-1),)
+
+
+def logsumexp(x):
+    m = jnp.max(x, axis=-1)
+    return (m + jnp.log(jnp.sum(jnp.exp(x - m[:, None]), axis=-1)),)
+
+
+def sum_dim(x):
+    return (jnp.sum(x, axis=-1),)
+
+
+def mhc_post(h, w, g):
+    return (pk.mhc_post(h, w, g),)
+
+
+def mhc_post_grad(h, w, g, dy):
+    return (pk.mhc_post_grad(h, w, g, dy),)
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+#: name -> (fn, example args). This is the artifact manifest.
+OPS = {
+    "relu": (relu, [_f32(*EW)]),
+    "gelu": (gelu, [_f32(*EW)]),
+    "sigmoid": (sigmoid, [_f32(*EW)]),
+    "silu": (silu, [_f32(*EW)]),
+    "softmax": (softmax, [_f32(*ROWS)]),
+    "log_softmax": (log_softmax, [_f32(*ROWS)]),
+    "layernorm": (layernorm, [_f32(*ROWS), _f32(ROWS[1]), _f32(ROWS[1])]),
+    "rmsnorm": (rmsnorm, [_f32(*ROWS), _f32(ROWS[1])]),
+    "adam": (adam, [_f32(4 * 1024 * 1024)] * 4),
+    "mse_loss": (mse_loss, [_f32(*EW), _f32(*EW)]),
+    "cumsum": (cumsum, [_f32(512, 2048)]),
+    "logsumexp": (logsumexp, [_f32(512, 2048)]),
+    "sum_dim": (sum_dim, [_f32(1024, 4096)]),
+    "mhc_post": (mhc_post, [_f32(*MHC), _f32(4, 4), _f32(4)]),
+    "mhc_post_grad": (mhc_post_grad, [_f32(*MHC), _f32(4, 4), _f32(4), _f32(*MHC)]),
+}
+
+# re-export the kernel oracles for the test-suite's convenience
+softmax_ref = kref.softmax_ref
+adam_ref = kref.adam_ref
+mhc_post_ref = kref.mhc_post_ref
+mhc_post_grad_ref = kref.mhc_post_grad_ref

@@ -1,0 +1,147 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+This is the core build-time correctness signal (interpret=True on CPU).
+Shape/seed sweeps play the role of hypothesis-style property tests.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from compile.kernels import pallas_kernels as pk
+from compile.kernels import ref
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+# ------------------------------------------------------------------ softmax
+
+SOFTMAX_SHAPES = [(8, 128), (16, 1024), (64, 2048), (8, 4096), (3, 256)]
+
+
+@pytest.mark.parametrize("shape", SOFTMAX_SHAPES)
+@pytest.mark.parametrize("seed", [0, 1])
+def test_softmax_matches_ref(shape, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, *shape)
+    got = pk.softmax(x, col_tile=min(128, shape[1]))
+    want = ref.softmax_ref(x)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_softmax_rows_sum_to_one():
+    rng = np.random.default_rng(7)
+    x = rand(rng, 16, 512)
+    got = pk.softmax(x, col_tile=128)
+    np.testing.assert_allclose(np.sum(got, axis=-1), np.ones(16), rtol=1e-5)
+
+
+def test_softmax_is_stable_for_large_logits():
+    # the kernel's 3-pass max-rescale must survive the inputs that break
+    # the knowledge-gapped cross_entropy kernel (scale-30 logits)
+    rng = np.random.default_rng(3)
+    x = 30.0 * rand(rng, 8, 256)
+    got = pk.softmax(x, col_tile=128)
+    assert np.all(np.isfinite(got))
+    np.testing.assert_allclose(got, ref.softmax_ref(x), rtol=1e-4, atol=1e-6)
+
+
+def test_softmax_column_tiling_is_invisible():
+    rng = np.random.default_rng(5)
+    x = rand(rng, 8, 1024)
+    a = pk.softmax(x, col_tile=128)
+    b = pk.softmax(x, col_tile=1024)
+    np.testing.assert_allclose(a, b, rtol=1e-6)
+
+
+# --------------------------------------------------------------------- adam
+
+
+@pytest.mark.parametrize("n", [1 << 12, 1 << 16])
+@pytest.mark.parametrize("seed", [0, 2])
+def test_adam_matches_ref(n, seed):
+    rng = np.random.default_rng(seed)
+    p = rand(rng, n)
+    g = rand(rng, n)
+    m = rand(rng, n)
+    v = jnp.abs(rand(rng, n))
+    got = pk.adam_step(p, g, m, v, tile=min(4096, n))
+    want = ref.adam_ref(p, g, m, v)
+    for got_t, want_t in zip(got, want):
+        np.testing.assert_allclose(got_t, want_t, rtol=1e-6, atol=1e-7)
+
+
+def test_adam_zero_grad_decays_moment_only():
+    n = 4096
+    rng = np.random.default_rng(1)
+    p = rand(rng, n)
+    m = rand(rng, n)
+    v = jnp.abs(rand(rng, n))
+    p2, m2, v2 = pk.adam_step(p, jnp.zeros(n), m, v, tile=n)
+    np.testing.assert_allclose(m2, 0.9 * m, rtol=1e-6)
+    np.testing.assert_allclose(v2, 0.999 * v, rtol=1e-6)
+    assert not np.allclose(p2, p)  # momentum still moves params
+
+
+# ---------------------------------------------------------------------- mhc
+
+MHC_SHAPES = [(4, 8, 128), (4, 32, 256), (2, 16, 512)]
+
+
+@pytest.mark.parametrize("shape", MHC_SHAPES)
+def test_mhc_post_matches_ref(shape):
+    n, rows, d = shape
+    rng = np.random.default_rng(11)
+    h = rand(rng, n, rows, d)
+    w = jnp.asarray(rng.uniform(-0.5, 0.5, (n, n)).astype(np.float32))
+    g = jnp.asarray(rng.uniform(0.5, 1.5, (n,)).astype(np.float32))
+    got = pk.mhc_post(h, w, g)
+    want = ref.mhc_post_ref(h, w, g)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", MHC_SHAPES)
+def test_mhc_post_grad_matches_ref(shape):
+    n, rows, d = shape
+    rng = np.random.default_rng(13)
+    h = rand(rng, n, rows, d)
+    w = jnp.asarray(rng.uniform(-0.5, 0.5, (n, n)).astype(np.float32))
+    g = jnp.asarray(rng.uniform(0.5, 1.5, (n,)).astype(np.float32))
+    dy = rand(rng, n, rows, d)
+    got = pk.mhc_post_grad(h, w, g, dy)
+    want = ref.mhc_post_grad_ref(h, w, g, dy)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_mhc_grad_matches_jax_autodiff():
+    """The hand-derived VJP must agree with jax.vjp through the reference
+    (with stop_gradient on the Sinkhorn projection)."""
+    import jax
+
+    n, rows, d = 2, 4, 64
+    rng = np.random.default_rng(17)
+    h = rand(rng, n, rows, d)
+    w = jnp.asarray(rng.uniform(-0.5, 0.5, (n, n)).astype(np.float32))
+    g = jnp.asarray(rng.uniform(0.5, 1.5, (n,)).astype(np.float32))
+    dy = rand(rng, n, rows, d)
+
+    def fwd(hh):
+        p = jax.lax.stop_gradient(ref.sinkhorn_ref(w))
+        m = jnp.einsum("ji,jrd->ird", p, hh)
+        inv = 1.0 / jnp.sqrt(jnp.mean(m * m, axis=-1, keepdims=True) + ref.EPS)
+        return hh + g[:, None, None] * m * inv
+
+    _, vjp = jax.vjp(fwd, h)
+    (want,) = vjp(dy)
+    got = ref.mhc_post_grad_ref(h, w, g, dy)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_sinkhorn_is_doubly_stochastic():
+    rng = np.random.default_rng(19)
+    w = jnp.asarray(rng.uniform(-1, 1, (4, 4)).astype(np.float32))
+    p = ref.sinkhorn_ref(w, iters=8)
+    np.testing.assert_allclose(np.sum(p, axis=1), np.ones(4), rtol=1e-3)
+    np.testing.assert_allclose(np.sum(p, axis=0), np.ones(4), rtol=1e-3)

@@ -1,0 +1,103 @@
+//! Bench E7 — hot-path microbenchmarks for the §Perf optimization pass:
+//!
+//! * simulator elementwise throughput (modeled elements / wall second),
+//! * full pipeline latency per task class (generation -> verified kernel),
+//! * suite wall-clock scaling with worker threads,
+//! * DSL frontend + transcompiler throughput.
+//!
+//! Run: `cargo bench --bench hotpath`
+
+use ascendcraft::bench_suite::tasks::task_by_name;
+use ascendcraft::coordinator::pipeline::{run_task, PipelineConfig};
+use ascendcraft::coordinator::service::{run_suite, SuiteConfig};
+use ascendcraft::dsl;
+use ascendcraft::synth::{templates::KnowledgeBaseSynthesizer, Generator};
+use ascendcraft::transpile::{transpile, TranspileOptions};
+use std::time::Instant;
+
+fn time<T>(label: &str, iters: usize, mut f: impl FnMut() -> T) -> f64 {
+    // warmup
+    let _ = f();
+    let started = Instant::now();
+    for _ in 0..iters {
+        std::hint::black_box(f());
+    }
+    let secs = started.elapsed().as_secs_f64() / iters as f64;
+    println!("{label:<46} {:>10.2} ms/iter", secs * 1e3);
+    secs
+}
+
+fn main() {
+    println!("hot-path microbenchmarks (release, single thread unless noted):\n");
+
+    // 1. simulator throughput on a bandwidth-bound elementwise kernel
+    let relu = task_by_name("relu").unwrap();
+    let n = relu.primary_numel() as f64;
+    let secs = time("sim: relu 4.2M elements end-to-end", 5, || {
+        run_task(&relu, &PipelineConfig::default())
+    });
+    println!(
+        "{:<46} {:>10.1} M modeled elements/s\n",
+        "  -> simulator functional throughput",
+        n / secs / 1e6
+    );
+
+    // 2. pipeline latency per task class
+    for name in ["gelu", "softmax", "adam", "cumsum", "maxpool2d"] {
+        let task = task_by_name(name).unwrap();
+        time(&format!("pipeline: {name}"), 3, || run_task(&task, &PipelineConfig::default()));
+    }
+    println!();
+
+    // 3. frontend + transcompiler throughput (no simulation)
+    let synth = KnowledgeBaseSynthesizer::default();
+    let task = task_by_name("adam").unwrap();
+    let gen = synth.generate(&task).unwrap();
+    let inputs = {
+        let mut m = task.make_inputs(1);
+        for (name, shape) in &gen.scratch {
+            m.insert(name.clone(), ascendcraft::util::tensor::Tensor::zeros(shape));
+        }
+        m
+    };
+    time("dsl: parse+validate adam program", 200, || dsl::frontend(&gen.dsl_source).unwrap());
+    let program = dsl::frontend(&gen.dsl_source).unwrap();
+    time("transpile: 4 passes adam program", 200, || {
+        transpile(&program, &inputs, &TranspileOptions::default()).unwrap()
+    });
+    println!();
+
+    // 4. worker scaling on a 12-task slice (NOTE: on a single-core host
+    // this demonstrates oversubscription cost, not speedup)
+    println!(
+        "host parallelism: {} core(s)",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    );
+    let slice: Vec<_> = [
+        "relu", "gelu", "sigmoid", "silu", "mish", "softsign", "softmax", "rmsnorm", "l2norm",
+        "cumsum", "sum_dim", "mse_loss",
+    ]
+    .iter()
+    .map(|n| task_by_name(n).unwrap())
+    .collect();
+    let mut base = 0.0;
+    let max_workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    for workers in [1usize, 2, 4, 8].into_iter().filter(|w| *w <= max_workers.max(2)) {
+        let cfg = SuiteConfig {
+            workers,
+            verbose: false,
+            ..Default::default()
+        };
+        let started = Instant::now();
+        let suite = run_suite(&slice, &cfg);
+        let secs = started.elapsed().as_secs_f64();
+        assert!(suite.totals().correct == slice.len());
+        if workers == 1 {
+            base = secs;
+        }
+        println!(
+            "suite slice (12 tasks) with {workers} workers: {secs:>6.2}s  (speedup {:.2}x)",
+            base / secs
+        );
+    }
+}

@@ -1,0 +1,65 @@
+//! Bench E4 — the RQ3 mHC numbers: generated and optimized kernel speedups
+//! over eager for mHC_post and mHC_post_grad, compared with the paper's
+//! 6.6x / 3.0x (generated) and 15.9x / 7.2x (optimized).
+//!
+//! Run: `cargo bench --bench rq3_mhc`
+
+use ascendcraft::mhc::{run_case_study, run_case_study_paper_shapes, MhcDims};
+
+const PAPER: &[(&str, f64)] = &[
+    ("mhc_post/generated", 6.6),
+    ("mhc_post/optimized", 15.9),
+    ("mhc_post_grad/generated", 3.0),
+    ("mhc_post_grad/optimized", 7.2),
+];
+
+fn main() {
+    let (post, grad) = (MhcDims::post_default(), MhcDims::grad_default());
+    println!(
+        "mHC case study: n={}, d={}; post rows={}, grad rows={}\n",
+        post.n, post.d, post.rows, grad.rows
+    );
+    let runs = run_case_study_paper_shapes(42);
+    println!(
+        "{:<28} {:>8} {:>12} {:>14} {:>12}",
+        "variant", "correct", "cycles", "paper speedup", "ours"
+    );
+    for (r, (pname, pspeed)) in runs.iter().zip(PAPER) {
+        assert_eq!(&r.variant, pname);
+        println!(
+            "{:<28} {:>8} {:>12.0} {:>13.1}x {:>11.2}x",
+            r.variant, r.correct, r.cycles, pspeed, r.speedup_vs_eager
+        );
+        assert!(r.correct, "{}: {:?}", r.variant, r.failure);
+    }
+
+    // the paper's qualitative RQ3 claims:
+    // 1. both kernels generated correct in a single pass (asserted above)
+    // 2. generated kernels substantially beat eager
+    for r in &runs {
+        assert!(r.speedup_vs_eager > 1.5, "{} only {:.2}x", r.variant, r.speedup_vs_eager);
+    }
+    // 3. expert optimization roughly doubles-plus the generated speedup
+    let ratio_post = runs[1].speedup_vs_eager / runs[0].speedup_vs_eager;
+    let ratio_grad = runs[3].speedup_vs_eager / runs[2].speedup_vs_eager;
+    println!(
+        "\noptimized/generated gain: post {ratio_post:.2}x (paper {:.2}x), grad {ratio_grad:.2}x (paper {:.2}x)",
+        15.9 / 6.6,
+        7.2 / 3.0
+    );
+    assert!(ratio_post > 1.8 && ratio_grad > 1.8);
+
+    // scaling: smaller problems are more launch-bound, widening the gap
+    println!("\nspeedup vs problem size (rows sweep):");
+    for rows in [512usize, 1024, 1792, 3072] {
+        let d = MhcDims { rows, ..MhcDims::default() };
+        let runs = run_case_study(&d, 42);
+        println!(
+            "  rows={rows:<5} post gen {:>5.2}x opt {:>5.2}x | grad gen {:>5.2}x opt {:>5.2}x",
+            runs[0].speedup_vs_eager,
+            runs[1].speedup_vs_eager,
+            runs[2].speedup_vs_eager,
+            runs[3].speedup_vs_eager
+        );
+    }
+}

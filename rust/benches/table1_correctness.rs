@@ -1,0 +1,72 @@
+//! Bench E1 — regenerates paper Table 1 (Comp@1 / Pass@1 per category)
+//! and compares every cell against the published values.
+//!
+//! criterion is not in the offline crate set; this is a `harness = false`
+//! bench binary using std::time. Run: `cargo bench --bench table1_correctness`
+
+use ascendcraft::bench_suite::tasks::all_tasks;
+use ascendcraft::coordinator::service::{run_suite, SuiteConfig};
+use std::time::Instant;
+
+/// Paper Table 1 (Comp@1, Pass@1) per category, in category order.
+const PAPER_TABLE1: &[(&str, f64, f64)] = &[
+    ("Activation", 100.0, 100.0),
+    ("Loss", 100.0, 85.7),
+    ("Math", 83.3, 83.3),
+    ("Normalization", 100.0, 87.5),
+    ("Optimizer", 100.0, 100.0),
+    ("Reduce", 100.0, 100.0),
+    ("Pooling", 100.0, 66.7),
+];
+const PAPER_TOTAL: (f64, f64) = (98.1, 90.4);
+
+fn main() {
+    let tasks = all_tasks();
+    let started = Instant::now();
+    let suite = run_suite(&tasks, &SuiteConfig::default());
+    let elapsed = started.elapsed().as_secs_f64();
+
+    println!("{}", suite.render_table1());
+    println!("pipeline wall-clock for 52 tasks: {elapsed:.1}s\n");
+
+    println!(
+        "{:<16} {:>14} {:>14} {:>14} {:>14}",
+        "category", "paper Comp@1", "ours Comp@1", "paper Pass@1", "ours Pass@1"
+    );
+    let rows = suite.by_category();
+    let mut all_match = true;
+    for ((paper_name, p_comp, p_pass), row) in PAPER_TABLE1.iter().zip(&rows) {
+        assert!(row.category.starts_with(paper_name), "category order");
+        let (comp, pass) = (row.metrics.comp_pct(), row.metrics.pass_pct());
+        let ok = (comp - p_comp).abs() < 0.1 && (pass - p_pass).abs() < 0.1;
+        all_match &= ok;
+        println!(
+            "{:<16} {:>14.1} {:>14.1} {:>14.1} {:>14.1} {}",
+            paper_name,
+            p_comp,
+            comp,
+            p_pass,
+            pass,
+            if ok { "" } else { "  <-- differs" }
+        );
+    }
+    let t = suite.totals();
+    println!(
+        "{:<16} {:>14.1} {:>14.1} {:>14.1} {:>14.1}",
+        "Total",
+        PAPER_TOTAL.0,
+        t.comp_pct(),
+        PAPER_TOTAL.1,
+        t.pass_pct()
+    );
+    assert!((t.comp_pct() - PAPER_TOTAL.0).abs() < 0.1, "total Comp@1");
+    assert!((t.pass_pct() - PAPER_TOTAL.1).abs() < 0.1, "total Pass@1");
+    println!(
+        "\nTable 1: {}",
+        if all_match {
+            "every category cell matches the paper"
+        } else {
+            "totals match the paper; per-cell diffs marked above"
+        }
+    );
+}

@@ -1,0 +1,77 @@
+//! Bench E2 — regenerates paper Table 2 (Fast₀.₂/₀.₈/₁.₀ per category)
+//! on the simulated 910B and reports paper-vs-measured per cell, plus the
+//! per-task speedup distribution behind the percentages.
+//!
+//! Run: `cargo bench --bench table2_performance`
+
+use ascendcraft::bench_suite::tasks::all_tasks;
+use ascendcraft::coordinator::service::{run_suite, SuiteConfig};
+
+/// Paper Table 2 (Fast0.2, Fast0.8, Fast1.0) per category, category order.
+const PAPER_TABLE2: &[(&str, f64, f64, f64)] = &[
+    ("Activation", 100.0, 80.0, 40.0),
+    ("Loss", 85.7, 85.7, 85.7),
+    ("Math", 83.3, 66.7, 66.7),
+    ("Normalization", 50.0, 37.5, 37.5),
+    ("Optimizer", 100.0, 100.0, 100.0),
+    ("Reduce", 100.0, 0.0, 0.0),
+    ("Pooling", 50.0, 0.0, 0.0),
+];
+const PAPER_TOTAL: (f64, f64, f64) = (82.7, 57.7, 46.2);
+
+fn main() {
+    let tasks = all_tasks();
+    let suite = run_suite(&tasks, &SuiteConfig::default());
+
+    println!("{}", suite.render_table2());
+
+    println!("paper vs measured (Fast0.2 | Fast0.8 | Fast1.0):");
+    for ((name, p02, p08, p10), row) in PAPER_TABLE2.iter().zip(suite.by_category()) {
+        let m = &row.metrics;
+        println!(
+            "  {:<16} paper {:>5.1} {:>5.1} {:>5.1}   ours {:>5.1} {:>5.1} {:>5.1}",
+            name,
+            p02,
+            p08,
+            p10,
+            m.fast02_pct(),
+            m.fast08_pct(),
+            m.fast10_pct()
+        );
+    }
+    let t = suite.totals();
+    println!(
+        "  {:<16} paper {:>5.1} {:>5.1} {:>5.1}   ours {:>5.1} {:>5.1} {:>5.1}",
+        "Total",
+        PAPER_TOTAL.0,
+        PAPER_TOTAL.1,
+        PAPER_TOTAL.2,
+        t.fast02_pct(),
+        t.fast08_pct(),
+        t.fast10_pct()
+    );
+
+    println!("\nper-task speedups (eager cycles / generated cycles):");
+    for r in &suite.results {
+        match r.speedup() {
+            Some(s) => println!("  {:<18} {:>7.2}x", r.name, s),
+            None => println!("  {:<18} {:>8}", r.name, if r.compiled { "wrong" } else { "nocomp" }),
+        }
+    }
+
+    // qualitative shape assertions (DESIGN.md E2): who wins must match
+    let rows = suite.by_category();
+    let get = |name: &str| rows.iter().find(|r| r.category.starts_with(name)).unwrap();
+    // fusion-heavy categories win outright
+    assert_eq!(get("Optimizer").metrics.fast10_pct(), 100.0);
+    assert!(get("Loss").metrics.fast10_pct() >= 80.0);
+    // tuned eager built-ins stay unbeaten
+    assert_eq!(get("Reduce").metrics.fast10_pct(), 0.0);
+    assert_eq!(get("Pooling").metrics.fast10_pct(), 0.0);
+    assert_eq!(get("Reduce").metrics.fast08_pct(), 0.0);
+    // activation Fast1.0 matches exactly (composite-eager fusion wins)
+    assert_eq!(get("Activation").metrics.fast10_pct(), 40.0);
+    // normalization Fast0.8/1.0 match exactly
+    assert!((get("Normalization").metrics.fast10_pct() - 37.5).abs() < 0.1);
+    println!("\nTable 2: qualitative shape (who wins / who loses per category) matches the paper");
+}

@@ -1,0 +1,479 @@
+//! AscendC intermediate representation.
+//!
+//! This IR models the subset of AscendC that the paper's transcompiler
+//! targets: pipeline kernels built from `TQue`/`TBuf` resources, `DataCopy`
+//! data movement, Vector-unit math, a handful of Scalar-unit operations,
+//! and the Cube-unit `Mmad`. The structure is deliberately explicit — one
+//! stage function per DSL stage block, queue traffic spelled out — because
+//! that explicitness is what Pass 3 of the paper enforces and what the
+//! validator checks.
+
+use crate::util::tensor::DType;
+
+/// Scalar binary operators usable in index arithmetic / scalar math.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CBinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    FloorDiv,
+    Mod,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Eq,
+    Ne,
+    And,
+    Or,
+}
+
+/// Scalar unary functions (executed on the Scalar unit).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CUnFn {
+    Neg,
+    Not,
+    Exp,
+    Ln,
+    Sqrt,
+    Abs,
+}
+
+/// Scalar expressions.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CExpr {
+    Int(i64),
+    Float(f64),
+    /// Scalar variable (kernel local or tiling member).
+    Var(String),
+    Bin(CBinOp, Box<CExpr>, Box<CExpr>),
+    Un(CUnFn, Box<CExpr>),
+    Min(Box<CExpr>, Box<CExpr>),
+    Max(Box<CExpr>, Box<CExpr>),
+    /// `GetBlockIdx()` — this AI Core's block id.
+    GetBlockIdx,
+    /// Host-side only: `<arg>.shape[dim]` of a launch argument.
+    ShapeOf(String, usize),
+}
+
+impl CExpr {
+    pub fn var(n: &str) -> CExpr {
+        CExpr::Var(n.to_string())
+    }
+    pub fn bin(op: CBinOp, a: CExpr, b: CExpr) -> CExpr {
+        CExpr::Bin(op, Box::new(a), Box::new(b))
+    }
+    pub fn add(a: CExpr, b: CExpr) -> CExpr {
+        CExpr::bin(CBinOp::Add, a, b)
+    }
+    pub fn sub(a: CExpr, b: CExpr) -> CExpr {
+        CExpr::bin(CBinOp::Sub, a, b)
+    }
+    pub fn mul(a: CExpr, b: CExpr) -> CExpr {
+        CExpr::bin(CBinOp::Mul, a, b)
+    }
+    pub fn floordiv(a: CExpr, b: CExpr) -> CExpr {
+        CExpr::bin(CBinOp::FloorDiv, a, b)
+    }
+
+    /// Walk all sub-expressions.
+    pub fn walk(&self, f: &mut impl FnMut(&CExpr)) {
+        f(self);
+        match self {
+            CExpr::Bin(_, a, b) | CExpr::Min(a, b) | CExpr::Max(a, b) => {
+                a.walk(f);
+                b.walk(f);
+            }
+            CExpr::Un(_, a) => a.walk(f),
+            _ => {}
+        }
+    }
+}
+
+/// Queue position — which pipeline boundary the queue crosses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueuePos {
+    /// `TPosition::VECIN`: CopyIn produces, Compute consumes.
+    VecIn,
+    /// `TPosition::VECOUT`: Compute produces, CopyOut consumes.
+    VecOut,
+}
+
+/// A `TQue` declaration. `depth >= 2` enables double buffering.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QueueDecl {
+    pub name: String,
+    pub pos: QueuePos,
+    pub depth: usize,
+    pub dtype: DType,
+    /// Capacity of each tensor in elements (the `InitBuffer` size).
+    pub capacity: usize,
+}
+
+impl QueueDecl {
+    /// Unified Buffer bytes consumed by this queue.
+    pub fn ub_bytes(&self) -> usize {
+        self.depth * self.capacity * self.dtype.size_bytes()
+    }
+}
+
+/// A `TBuf` declaration (stage-internal scratch, no queue semantics).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TBufDecl {
+    pub name: String,
+    pub dtype: DType,
+    pub capacity: usize,
+}
+
+impl TBufDecl {
+    pub fn ub_bytes(&self) -> usize {
+        self.capacity * self.dtype.size_bytes()
+    }
+}
+
+/// A `GlobalTensor` member bound to the k-th kernel argument.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GlobalDecl {
+    pub name: String,
+    pub dtype: DType,
+    /// Index into the launch argument list this global binds to.
+    pub arg_index: usize,
+}
+
+/// Reference to a tensor location: a local tensor variable or a global,
+/// plus an element offset.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorRef {
+    pub name: String,
+    pub offset: CExpr,
+}
+
+impl TensorRef {
+    pub fn at(name: &str, offset: CExpr) -> TensorRef {
+        TensorRef { name: name.to_string(), offset }
+    }
+    pub fn base(name: &str) -> TensorRef {
+        TensorRef { name: name.to_string(), offset: CExpr::Int(0) }
+    }
+}
+
+/// Vector-unit element-wise binary operations (tensor ⊕ tensor).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VecBinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Max,
+    Min,
+}
+
+/// Vector-unit tensor ⊕ scalar operations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VecScalarOp {
+    Adds,
+    Muls,
+    Maxs,
+    Mins,
+}
+
+/// Vector-unit unary operations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VecUnOp {
+    Exp,
+    Ln,
+    Abs,
+    Sqrt,
+    Rsqrt,
+    Reciprocal,
+    Relu,
+    Tanh,
+    Sign,
+    Floor,
+    Copy,
+}
+
+/// Whole-tile reductions (write result to `dst[0]`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReduceKind {
+    Sum,
+    Max,
+    Min,
+}
+
+/// Prefix scans. AscendC has no native vector scan — the paper's RQ2
+/// discussion notes exactly this — so scans execute on the Scalar unit and
+/// are priced accordingly by the simulator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScanKind {
+    Sum,
+    Prod,
+}
+
+/// IR statements.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CStmt {
+    /// `int64_t name = value;` / `float name = value;`
+    DeclAssign { name: String, value: CExpr },
+    /// `name = value;`
+    Assign { name: String, value: CExpr },
+    /// `LocalTensor<T> var = queue.AllocTensor<T>();`
+    AllocTensor { queue: String, var: String },
+    /// `queue.EnQue(var);`
+    EnQue { queue: String, var: String },
+    /// `LocalTensor<T> var = queue.DeQue<T>();`
+    DeQue { queue: String, var: String },
+    /// `queue.FreeTensor(var);`
+    FreeTensor { queue: String, var: String },
+    /// `LocalTensor<T> var = tbuf.Get<T>();`
+    GetTBuf { tbuf: String, var: String },
+    /// `DataCopy(dst[...], src[...], count);` — requires 32-byte alignment.
+    DataCopy { dst: TensorRef, src: TensorRef, count: CExpr },
+    /// `DataCopyPad(dst[...], src[...], params);` — tolerates unaligned
+    /// counts at a small bandwidth penalty.
+    DataCopyPad { dst: TensorRef, src: TensorRef, count: CExpr },
+    /// Vector binary: `Add(dst, a, b, count);`
+    VecBin { op: VecBinOp, dst: TensorRef, a: TensorRef, b: TensorRef, count: CExpr },
+    /// Vector tensor-scalar: `Adds(dst, src, scalar, count);`
+    VecScalar { op: VecScalarOp, dst: TensorRef, src: TensorRef, scalar: CExpr, count: CExpr },
+    /// Vector unary: `Exp(dst, src, count);`
+    VecUn { op: VecUnOp, dst: TensorRef, src: TensorRef, count: CExpr },
+    /// `Duplicate(dst, value, count);` — fill.
+    Duplicate { dst: TensorRef, value: CExpr, count: CExpr },
+    /// `ReduceSum/ReduceMax/ReduceMin(dst, src, work, count);` result in dst[0].
+    Reduce { kind: ReduceKind, dst: TensorRef, src: TensorRef, count: CExpr },
+    /// Scalar-unit prefix scan over `count` elements.
+    Scan { kind: ScanKind, dst: TensorRef, src: TensorRef, count: CExpr, reverse: bool },
+    /// `Select(dst, cond, a, b, count)`: dst[i] = cond[i] >= 0 ? a[i] : b[i].
+    SelectGe { dst: TensorRef, cond: TensorRef, a: TensorRef, b: TensorRef, count: CExpr },
+    /// Cube unit: C[m,n] (+)= A[m,k] * B[k,n].
+    Mmad { c: TensorRef, a: TensorRef, b: TensorRef, m: CExpr, k: CExpr, n: CExpr },
+    /// Scalar-unit element write: `tensor.SetValue(index, value);`
+    SetValue { tensor: TensorRef, index: CExpr, value: CExpr },
+    /// Scalar-unit element read: `float var = tensor.GetValue(index);`
+    GetValue { var: String, tensor: TensorRef, index: CExpr },
+    /// `Cast(dst, src, RoundMode, count)` — dtype conversion in UB.
+    Cast { dst: TensorRef, src: TensorRef, to: DType, count: CExpr },
+    /// `for (int64_t var = start; var < end; var += step) { body }`
+    For { var: String, start: CExpr, end: CExpr, step: CExpr, body: Vec<CStmt> },
+    /// `while (cond) { body }` (scalar-unit loop, e.g. Hillis–Steele shifts)
+    While { cond: CExpr, body: Vec<CStmt> },
+    /// `if (cond) { then } else { orelse }`
+    If { cond: CExpr, then: Vec<CStmt>, orelse: Vec<CStmt> },
+    /// Invoke a stage function with scalar arguments.
+    CallStage { name: String, args: Vec<CExpr> },
+    /// Cross-core barrier.
+    SyncAll,
+    /// Source comment (printer only; no semantics).
+    Comment(String),
+}
+
+impl CStmt {
+    /// Visit this statement and all nested statements.
+    pub fn walk(&self, f: &mut impl FnMut(&CStmt)) {
+        f(self);
+        match self {
+            CStmt::For { body, .. } | CStmt::While { body, .. } => {
+                for s in body {
+                    s.walk(f);
+                }
+            }
+            CStmt::If { then, orelse, .. } => {
+                for s in then {
+                    s.walk(f);
+                }
+                for s in orelse {
+                    s.walk(f);
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Role of a stage function (mirrors the DSL stages).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum StageKind {
+    CopyIn,
+    Compute,
+    CopyOut,
+}
+
+impl StageKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            StageKind::CopyIn => "CopyIn",
+            StageKind::Compute => "Compute",
+            StageKind::CopyOut => "CopyOut",
+        }
+    }
+}
+
+/// An `__aicore__ inline` stage function.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StageFn {
+    pub name: String,
+    pub kind: StageKind,
+    /// Scalar parameters (loop indices, offsets).
+    pub params: Vec<String>,
+    pub body: Vec<CStmt>,
+}
+
+/// An AscendC kernel class.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AscKernel {
+    pub name: String,
+    /// Tiling struct fields copied into kernel members at Init.
+    pub tiling_fields: Vec<String>,
+    pub globals: Vec<GlobalDecl>,
+    pub queues: Vec<QueueDecl>,
+    pub tbufs: Vec<TBufDecl>,
+    /// Init(): per-block offset computation (after tiling copy + InitBuffer).
+    pub init_body: Vec<CStmt>,
+    pub stages: Vec<StageFn>,
+    /// Process(): the per-core execution loop calling stage functions.
+    pub process_body: Vec<CStmt>,
+}
+
+impl AscKernel {
+    pub fn queue(&self, name: &str) -> Option<&QueueDecl> {
+        self.queues.iter().find(|q| q.name == name)
+    }
+    pub fn tbuf(&self, name: &str) -> Option<&TBufDecl> {
+        self.tbufs.iter().find(|t| t.name == name)
+    }
+    pub fn stage(&self, name: &str) -> Option<&StageFn> {
+        self.stages.iter().find(|s| s.name == name)
+    }
+    pub fn global(&self, name: &str) -> Option<&GlobalDecl> {
+        self.globals.iter().find(|g| g.name == name)
+    }
+
+    /// Total Unified Buffer bytes reserved by queues + tbufs.
+    pub fn ub_bytes(&self) -> usize {
+        self.queues.iter().map(|q| q.ub_bytes()).sum::<usize>()
+            + self.tbufs.iter().map(|t| t.ub_bytes()).sum::<usize>()
+    }
+
+    /// Iterate every statement in init/stages/process.
+    pub fn walk_stmts(&self, mut f: impl FnMut(Option<&StageFn>, &CStmt)) {
+        for s in &self.init_body {
+            s.walk(&mut |st| f(None, st));
+        }
+        for stage in &self.stages {
+            for s in &stage.body {
+                s.walk(&mut |st| f(Some(stage), st));
+            }
+        }
+        for s in &self.process_body {
+            s.walk(&mut |st| f(None, st));
+        }
+    }
+}
+
+/// A host-side tiling computation + kernel launch.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Launch {
+    pub kernel: String,
+    pub block_dim: CExpr,
+    /// Launch arguments: names of host tensors, in kernel-global order.
+    pub args: Vec<String>,
+}
+
+/// Host program: tiling-field assignments (evaluated against real input
+/// shapes via `CExpr::ShapeOf`) followed by one or more launches.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AscHost {
+    pub name: String,
+    /// Host tensor parameter names, in order (inputs then outputs).
+    pub params: Vec<String>,
+    pub tiling_assigns: Vec<(String, CExpr)>,
+    pub launches: Vec<Launch>,
+}
+
+/// A complete AscendC program: host + kernels.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AscProgram {
+    pub host: AscHost,
+    pub kernels: Vec<AscKernel>,
+}
+
+impl AscProgram {
+    pub fn kernel(&self, name: &str) -> Option<&AscKernel> {
+        self.kernels.iter().find(|k| k.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_kernel() -> AscKernel {
+        AscKernel {
+            name: "k".into(),
+            tiling_fields: vec!["tileLen".into()],
+            globals: vec![GlobalDecl { name: "xGm".into(), dtype: DType::F32, arg_index: 0 }],
+            queues: vec![QueueDecl {
+                name: "inQueueX".into(),
+                pos: QueuePos::VecIn,
+                depth: 2,
+                dtype: DType::F32,
+                capacity: 1024,
+            }],
+            tbufs: vec![TBufDecl { name: "tmpBuf".into(), dtype: DType::F32, capacity: 256 }],
+            init_body: vec![],
+            stages: vec![],
+            process_body: vec![],
+        }
+    }
+
+    #[test]
+    fn ub_budget_accounts_depth() {
+        let k = small_kernel();
+        // 2 * 1024 * 4 + 256 * 4
+        assert_eq!(k.ub_bytes(), 8192 + 1024);
+    }
+
+    #[test]
+    fn lookup_helpers() {
+        let k = small_kernel();
+        assert!(k.queue("inQueueX").is_some());
+        assert!(k.queue("nope").is_none());
+        assert!(k.tbuf("tmpBuf").is_some());
+        assert!(k.global("xGm").is_some());
+    }
+
+    #[test]
+    fn cexpr_walk() {
+        let e = CExpr::add(CExpr::mul(CExpr::var("a"), CExpr::Int(2)), CExpr::GetBlockIdx);
+        let mut n = 0;
+        e.walk(&mut |_| n += 1);
+        assert_eq!(n, 5);
+    }
+
+    #[test]
+    fn cstmt_walk_recurses() {
+        let s = CStmt::For {
+            var: "i".into(),
+            start: CExpr::Int(0),
+            end: CExpr::Int(4),
+            step: CExpr::Int(1),
+            body: vec![CStmt::If {
+                cond: CExpr::bin(CBinOp::Gt, CExpr::var("i"), CExpr::Int(1)),
+                then: vec![CStmt::SyncAll],
+                orelse: vec![],
+            }],
+        };
+        let mut n = 0;
+        s.walk(&mut |_| n += 1);
+        assert_eq!(n, 3);
+    }
+
+    #[test]
+    fn tensor_ref_builders() {
+        let r = TensorRef::at("xGm", CExpr::var("off"));
+        assert_eq!(r.name, "xGm");
+        assert_eq!(TensorRef::base("y").offset, CExpr::Int(0));
+    }
+}

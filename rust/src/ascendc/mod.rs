@@ -1,0 +1,23 @@
+//! The AscendC target: an IR that mirrors the AscendC programming model
+//! (paper §2.2), a structural validator standing in for the CANN compiler,
+//! and a C++-style source printer.
+//!
+//! Generated kernels are *structured* exactly the way the paper's Pass 3
+//! enforces: a kernel class with `Init` (queue/buffer setup, per-block
+//! offsets), a `Process` loop, and one `__aicore__` stage function per DSL
+//! `copyin` / `compute` / `copyout` block. Data moves through `TQue`
+//! (VECIN/VECOUT) tensor queues; temporaries live in `TBuf`.
+//!
+//! The [`validate`] module is the "compiler" of this reproduction: it
+//! enforces the documented AscendC constraints (32-byte alignment for
+//! `DataCopy`, queue discipline, Unified Buffer capacity, dtype support,
+//! stage-role legality) and emits diagnostics that drive the per-pass
+//! correction feedback loop of paper §4.2.
+
+pub mod ir;
+pub mod printer;
+pub mod validate;
+
+pub use ir::*;
+pub use printer::print_program as print_ascendc;
+pub use validate::{validate, AscDiagnostic, Severity};

@@ -1,0 +1,926 @@
+//! Structural validator for AscendC IR — this reproduction's stand-in for
+//! the CANN compiler front-end. A kernel that passes validation "compiles"
+//! (Comp@1); diagnostics feed the per-pass correction loop of paper §4.2.
+//!
+//! Checked constraint families (codes are stable; the repair engine in
+//! `synth::repair` pattern-matches them):
+//!
+//! * `A1xx` — alignment. `DataCopy` moves must be 32-byte aligned in both
+//!   count and offsets; `DataCopyPad` is exempt (that is its purpose).
+//! * `A2xx` — queue discipline. `TQue` traffic must follow the pipeline
+//!   roles: VECIN queues are produced by CopyIn (`AllocTensor`/`EnQue`) and
+//!   consumed by Compute (`DeQue`/`FreeTensor`); VECOUT queues the reverse.
+//!   Alloc/Free and EnQue/DeQue must balance within each stage.
+//! * `A3xx` — memory. Total queue + tbuf reservation must fit the Unified
+//!   Buffer (192 KiB on 910B-class cores); depths are bounded.
+//! * `A4xx` — dtype support. LocalTensor vector math exists for f32/f16/i32
+//!   only; `bool` buffers have no UB mapping (the `mask_cumsum` failure the
+//!   paper reports).
+//! * `A5xx` — structure. Vector/Cube ops only inside Compute stages;
+//!   DataCopy only inside CopyIn/CopyOut; stage calls must resolve;
+//!   referenced queues/tbufs/globals must be declared.
+
+use super::ir::*;
+use crate::util::tensor::DType;
+use std::collections::{HashMap, HashSet};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Severity {
+    Error,
+    Warning,
+}
+
+/// A compiler-style diagnostic.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AscDiagnostic {
+    pub code: String,
+    pub severity: Severity,
+    pub message: String,
+    /// Kernel and stage the diagnostic points into (empty = host).
+    pub kernel: String,
+    pub stage: String,
+}
+
+impl AscDiagnostic {
+    pub fn is_error(&self) -> bool {
+        self.severity == Severity::Error
+    }
+}
+
+/// Validation environment: concrete tiling values (from evaluating the host
+/// against representative input shapes) let the validator decide alignment
+/// for symbolic counts, exactly the way the real toolchain surfaces these
+/// errors at tiling time.
+#[derive(Clone, Debug, Default)]
+pub struct ValidateEnv {
+    pub tiling: HashMap<String, i64>,
+    /// Unified Buffer capacity in bytes (910B AI Core: 192 KiB).
+    pub ub_capacity: usize,
+}
+
+impl ValidateEnv {
+    pub fn new(tiling: HashMap<String, i64>) -> ValidateEnv {
+        ValidateEnv { tiling, ub_capacity: 192 * 1024 }
+    }
+
+    /// Try to evaluate a scalar expression using only tiling values and
+    /// integer literals. Loop variables and block ids are not resolvable.
+    fn try_eval(&self, e: &CExpr) -> Option<i64> {
+        match e {
+            CExpr::Int(v) => Some(*v),
+            CExpr::Float(_) => None,
+            CExpr::Var(n) => self.tiling.get(n).copied(),
+            CExpr::Bin(op, a, b) => {
+                let (a, b) = (self.try_eval(a)?, self.try_eval(b)?);
+                Some(match op {
+                    CBinOp::Add => a + b,
+                    CBinOp::Sub => a - b,
+                    CBinOp::Mul => a * b,
+                    CBinOp::Div | CBinOp::FloorDiv => {
+                        if b == 0 {
+                            return None;
+                        }
+                        a.div_euclid(b)
+                    }
+                    CBinOp::Mod => {
+                        if b == 0 {
+                            return None;
+                        }
+                        a.rem_euclid(b)
+                    }
+                    CBinOp::Lt => (a < b) as i64,
+                    CBinOp::Le => (a <= b) as i64,
+                    CBinOp::Gt => (a > b) as i64,
+                    CBinOp::Ge => (a >= b) as i64,
+                    CBinOp::Eq => (a == b) as i64,
+                    CBinOp::Ne => (a != b) as i64,
+                    CBinOp::And => ((a != 0) && (b != 0)) as i64,
+                    CBinOp::Or => ((a != 0) || (b != 0)) as i64,
+                })
+            }
+            CExpr::Min(a, b) => Some(self.try_eval(a)?.min(self.try_eval(b)?)),
+            CExpr::Max(a, b) => Some(self.try_eval(a)?.max(self.try_eval(b)?)),
+            CExpr::Un(CUnFn::Neg, a) => Some(-self.try_eval(a)?),
+            _ => None,
+        }
+    }
+}
+
+/// UB-mappable dtypes for LocalTensor vector math.
+fn ub_supported(d: DType) -> bool {
+    matches!(d, DType::F32 | DType::F16 | DType::I32)
+}
+
+/// Validate a whole program. Returns all diagnostics (errors + warnings).
+pub fn validate(program: &AscProgram, env: &ValidateEnv) -> Vec<AscDiagnostic> {
+    let mut diags = Vec::new();
+    validate_host(program, &mut diags);
+    for kernel in &program.kernels {
+        validate_kernel(kernel, env, &mut diags);
+    }
+    diags
+}
+
+/// Convenience: errors only.
+pub fn validate_errors(program: &AscProgram, env: &ValidateEnv) -> Vec<AscDiagnostic> {
+    validate(program, env).into_iter().filter(|d| d.is_error()).collect()
+}
+
+fn validate_host(program: &AscProgram, diags: &mut Vec<AscDiagnostic>) {
+    for launch in &program.host.launches {
+        match program.kernel(&launch.kernel) {
+            None => diags.push(AscDiagnostic {
+                code: "A504".into(),
+                severity: Severity::Error,
+                message: format!("host launches unknown kernel '{}'", launch.kernel),
+                kernel: String::new(),
+                stage: String::new(),
+            }),
+            Some(k) => {
+                if launch.args.len() != k.globals.len() {
+                    diags.push(AscDiagnostic {
+                        code: "A505".into(),
+                        severity: Severity::Error,
+                        message: format!(
+                            "kernel '{}' declares {} GlobalTensor bindings but launch passes {} arguments",
+                            k.name,
+                            k.globals.len(),
+                            launch.args.len()
+                        ),
+                        kernel: k.name.clone(),
+                        stage: String::new(),
+                    });
+                }
+            }
+        }
+    }
+}
+
+struct KernelChecker<'a> {
+    kernel: &'a AscKernel,
+    env: &'a ValidateEnv,
+    diags: &'a mut Vec<AscDiagnostic>,
+    /// local tensor var -> backing queue/tbuf dtype
+    local_dtypes: HashMap<String, DType>,
+    stage_name: String,
+}
+
+impl<'a> KernelChecker<'a> {
+    fn push(&mut self, code: &str, severity: Severity, message: String) {
+        self.diags.push(AscDiagnostic {
+            code: code.into(),
+            severity,
+            message,
+            kernel: self.kernel.name.clone(),
+            stage: self.stage_name.clone(),
+        });
+    }
+
+    fn err(&mut self, code: &str, message: String) {
+        self.push(code, Severity::Error, message);
+    }
+
+    fn warn(&mut self, code: &str, message: String) {
+        self.push(code, Severity::Warning, message);
+    }
+}
+
+fn validate_kernel(kernel: &AscKernel, env: &ValidateEnv, diags: &mut Vec<AscDiagnostic>) {
+    let mut ck = KernelChecker {
+        kernel,
+        env,
+        diags,
+        local_dtypes: HashMap::new(),
+        stage_name: String::new(),
+    };
+
+    // --- resource declarations ---
+    for q in &kernel.queues {
+        if !ub_supported(q.dtype) {
+            ck.err(
+                "A401",
+                format!("queue '{}' declares unsupported LocalTensor dtype '{}' (no Unified Buffer mapping)", q.name, q.dtype),
+            );
+        }
+        if q.depth == 0 || q.depth > 4 {
+            ck.err("A302", format!("queue '{}' depth {} out of range 1..=4", q.name, q.depth));
+        }
+        if q.capacity == 0 {
+            ck.err("A303", format!("queue '{}' has zero capacity", q.name));
+        }
+    }
+    for t in &kernel.tbufs {
+        if !ub_supported(t.dtype) {
+            ck.err(
+                "A401",
+                format!("tbuf '{}' declares unsupported LocalTensor dtype '{}'", t.name, t.dtype),
+            );
+        }
+    }
+    for g in &kernel.globals {
+        if g.dtype == DType::Bool {
+            // GlobalTensor<bool> exists but cannot be DataCopy'd into UB
+            // vector buffers; flag at declaration for a clear message.
+            ck.err(
+                "A402",
+                format!("GlobalTensor '{}' has dtype bool; no DataCopy path into Unified Buffer exists for bool", g.name),
+            );
+        }
+    }
+    let ub = kernel.ub_bytes();
+    if ub > env.ub_capacity {
+        ck.err(
+            "A301",
+            format!(
+                "Unified Buffer over-subscription: queues+tbufs reserve {} bytes > {} available",
+                ub, env.ub_capacity
+            ),
+        );
+    }
+
+    // duplicate resource names
+    let mut seen = HashSet::new();
+    for name in kernel
+        .queues
+        .iter()
+        .map(|q| &q.name)
+        .chain(kernel.tbufs.iter().map(|t| &t.name))
+        .chain(kernel.globals.iter().map(|g| &g.name))
+    {
+        if !seen.insert(name.clone()) {
+            ck.err("A304", format!("duplicate resource name '{name}'"));
+        }
+    }
+
+    // --- stage bodies ---
+    // Init body: treated as scalar-only; queue ops are illegal there.
+    ck.stage_name = "Init".into();
+    for stmt in &kernel.init_body {
+        check_init_stmt(&mut ck, stmt);
+    }
+
+    let stage_kinds: HashMap<String, StageKind> =
+        kernel.stages.iter().map(|s| (s.name.clone(), s.kind)).collect();
+
+    for stage in &kernel.stages {
+        ck.stage_name = stage.name.clone();
+        ck.local_dtypes.clear();
+        let mut balance: HashMap<String, QueueBalance> = HashMap::new();
+        for stmt in &stage.body {
+            check_stage_stmt(&mut ck, stage.kind, stmt, &mut balance);
+        }
+        // queue traffic balance within the stage
+        for (qname, b) in balance {
+            if b.alloc != b.enque && ck.kernel.queue(&qname).is_some() {
+                ck.err(
+                    "A203",
+                    format!(
+                        "queue '{qname}': {} AllocTensor vs {} EnQue in stage '{}' (must balance)",
+                        b.alloc, b.enque, stage.name
+                    ),
+                );
+            }
+            if b.deque != b.free && ck.kernel.queue(&qname).is_some() {
+                ck.err(
+                    "A204",
+                    format!(
+                        "queue '{qname}': {} DeQue vs {} FreeTensor in stage '{}' (must balance)",
+                        b.deque, b.free, stage.name
+                    ),
+                );
+            }
+        }
+    }
+
+    // --- process body: only scalar control flow + stage calls + SyncAll ---
+    ck.stage_name = "Process".into();
+    for stmt in &kernel.process_body {
+        check_process_stmt(&mut ck, stmt, &stage_kinds);
+    }
+}
+
+#[derive(Default)]
+struct QueueBalance {
+    alloc: usize,
+    enque: usize,
+    deque: usize,
+    free: usize,
+}
+
+fn check_init_stmt(ck: &mut KernelChecker, stmt: &CStmt) {
+    stmt.walk(&mut |s| match s {
+        CStmt::AllocTensor { queue, .. }
+        | CStmt::EnQue { queue, .. }
+        | CStmt::DeQue { queue, .. }
+        | CStmt::FreeTensor { queue, .. } => {
+            let q = queue.clone();
+            ck.err("A501", format!("queue operation on '{q}' in Init (queue traffic belongs to stage functions)"));
+        }
+        CStmt::VecBin { .. }
+        | CStmt::VecScalar { .. }
+        | CStmt::VecUn { .. }
+        | CStmt::Reduce { .. }
+        | CStmt::Mmad { .. }
+        | CStmt::Scan { .. } => {
+            ck.err("A501", "compute operation in Init (compute belongs to Compute stages)".into());
+        }
+        CStmt::DataCopy { .. } | CStmt::DataCopyPad { .. } => {
+            ck.err("A501", "DataCopy in Init (data movement belongs to CopyIn/CopyOut stages)".into());
+        }
+        _ => {}
+    });
+}
+
+fn check_process_stmt(
+    ck: &mut KernelChecker,
+    stmt: &CStmt,
+    stage_kinds: &HashMap<String, StageKind>,
+) {
+    stmt.walk(&mut |s| match s {
+        CStmt::CallStage { name, args } => match ck.kernel.stage(name) {
+            None => {
+                ck.err("A502", format!("Process calls undefined stage function '{name}'"));
+            }
+            Some(st) => {
+                if st.params.len() != args.len() {
+                    ck.err(
+                        "A503",
+                        format!(
+                            "stage '{name}' takes {} parameters, called with {}",
+                            st.params.len(),
+                            args.len()
+                        ),
+                    );
+                }
+                debug_assert!(stage_kinds.contains_key(name));
+            }
+        },
+        CStmt::VecBin { .. }
+        | CStmt::VecScalar { .. }
+        | CStmt::VecUn { .. }
+        | CStmt::Reduce { .. }
+        | CStmt::Mmad { .. }
+        | CStmt::DataCopy { .. }
+        | CStmt::DataCopyPad { .. }
+        | CStmt::AllocTensor { .. }
+        | CStmt::EnQue { .. }
+        | CStmt::DeQue { .. }
+        | CStmt::FreeTensor { .. } => {
+            ck.err(
+                "A506",
+                "Process must orchestrate stage calls only; data movement and compute belong inside stage functions".into(),
+            );
+        }
+        _ => {}
+    });
+}
+
+fn check_stage_stmt(
+    ck: &mut KernelChecker,
+    kind: StageKind,
+    stmt: &CStmt,
+    balance: &mut HashMap<String, QueueBalance>,
+) {
+    match stmt {
+        CStmt::For { body, .. } | CStmt::While { body, .. } => {
+            for s in body {
+                check_stage_stmt(ck, kind, s, balance);
+            }
+            return;
+        }
+        CStmt::If { then, orelse, .. } => {
+            for s in then {
+                check_stage_stmt(ck, kind, s, balance);
+            }
+            for s in orelse {
+                check_stage_stmt(ck, kind, s, balance);
+            }
+            return;
+        }
+        _ => {}
+    }
+    match stmt {
+        CStmt::AllocTensor { queue, var } => {
+            let Some(q) = ck.kernel.queue(queue) else {
+                let queue = queue.clone();
+                ck.err("A507", format!("AllocTensor on undeclared queue '{queue}'"));
+                return;
+            };
+            let legal = match q.pos {
+                QueuePos::VecIn => kind == StageKind::CopyIn,
+                QueuePos::VecOut => kind == StageKind::Compute,
+            };
+            if !legal {
+                let (queue, pos) = (queue.clone(), q.pos);
+                ck.err(
+                    "A201",
+                    format!("AllocTensor on {pos:?} queue '{queue}' in {} stage (illegal interleaving)", kind.name()),
+                );
+            }
+            ck.local_dtypes.insert(var.clone(), q.dtype);
+            balance.entry(queue.clone()).or_default().alloc += 1;
+        }
+        CStmt::EnQue { queue, var: _ } => {
+            let Some(q) = ck.kernel.queue(queue) else {
+                let queue = queue.clone();
+                ck.err("A507", format!("EnQue on undeclared queue '{queue}'"));
+                return;
+            };
+            let legal = match q.pos {
+                QueuePos::VecIn => kind == StageKind::CopyIn,
+                QueuePos::VecOut => kind == StageKind::Compute,
+            };
+            if !legal {
+                let (queue, pos) = (queue.clone(), q.pos);
+                ck.err("A201", format!("EnQue on {pos:?} queue '{queue}' in {} stage", kind.name()));
+            }
+            balance.entry(queue.clone()).or_default().enque += 1;
+        }
+        CStmt::DeQue { queue, var } => {
+            let Some(q) = ck.kernel.queue(queue) else {
+                let queue = queue.clone();
+                ck.err("A507", format!("DeQue on undeclared queue '{queue}'"));
+                return;
+            };
+            let legal = match q.pos {
+                QueuePos::VecIn => kind == StageKind::Compute,
+                QueuePos::VecOut => kind == StageKind::CopyOut,
+            };
+            if !legal {
+                let (queue, pos) = (queue.clone(), q.pos);
+                ck.err("A202", format!("DeQue on {pos:?} queue '{queue}' in {} stage", kind.name()));
+            }
+            ck.local_dtypes.insert(var.clone(), q.dtype);
+            balance.entry(queue.clone()).or_default().deque += 1;
+        }
+        CStmt::FreeTensor { queue, .. } => {
+            let Some(q) = ck.kernel.queue(queue) else {
+                let queue = queue.clone();
+                ck.err("A507", format!("FreeTensor on undeclared queue '{queue}'"));
+                return;
+            };
+            let legal = match q.pos {
+                QueuePos::VecIn => kind == StageKind::Compute,
+                QueuePos::VecOut => kind == StageKind::CopyOut,
+            };
+            if !legal {
+                let (queue, pos) = (queue.clone(), q.pos);
+                ck.err("A202", format!("FreeTensor on {pos:?} queue '{queue}' in {} stage", kind.name()));
+            }
+            balance.entry(queue.clone()).or_default().free += 1;
+        }
+        CStmt::GetTBuf { tbuf, var } => {
+            match ck.kernel.tbuf(tbuf) {
+                None => {
+                    let tbuf = tbuf.clone();
+                    ck.err("A507", format!("Get on undeclared TBuf '{tbuf}'"));
+                }
+                Some(t) => {
+                    ck.local_dtypes.insert(var.clone(), t.dtype);
+                }
+            };
+        }
+        CStmt::DataCopy { dst, src, count } => {
+            if kind == StageKind::Compute {
+                ck.err("A501", "DataCopy inside a Compute stage (move data in CopyIn/CopyOut)".into());
+            }
+            check_datacopy_alignment(ck, dst, src, count, false);
+        }
+        CStmt::DataCopyPad { dst, src, count } => {
+            if kind == StageKind::Compute {
+                ck.err("A501", "DataCopyPad inside a Compute stage".into());
+            }
+            check_datacopy_alignment(ck, dst, src, count, true);
+        }
+        CStmt::VecBin { .. }
+        | CStmt::VecScalar { .. }
+        | CStmt::VecUn { .. }
+        | CStmt::Duplicate { .. }
+        | CStmt::Reduce { .. }
+        | CStmt::Scan { .. }
+        | CStmt::SelectGe { .. }
+        | CStmt::Cast { .. }
+        | CStmt::Mmad { .. } => {
+            if kind != StageKind::Compute {
+                ck.err(
+                    "A501",
+                    format!("compute operation in {} stage (compute belongs to Compute stages)", kind.name()),
+                );
+            }
+            check_operand_decls(ck, stmt);
+        }
+        CStmt::SetValue { tensor, .. } | CStmt::GetValue { tensor, .. } => {
+            check_ref_known(ck, tensor);
+        }
+        _ => {}
+    }
+}
+
+fn check_operand_decls(ck: &mut KernelChecker, stmt: &CStmt) {
+    let refs: Vec<&TensorRef> = match stmt {
+        CStmt::VecBin { dst, a, b, .. } => vec![dst, a, b],
+        CStmt::VecScalar { dst, src, .. } => vec![dst, src],
+        CStmt::VecUn { dst, src, .. } => vec![dst, src],
+        CStmt::Duplicate { dst, .. } => vec![dst],
+        CStmt::Reduce { dst, src, .. } => vec![dst, src],
+        CStmt::Scan { dst, src, .. } => vec![dst, src],
+        CStmt::SelectGe { dst, cond, a, b, .. } => vec![dst, cond, a, b],
+        CStmt::Cast { dst, src, .. } => vec![dst, src],
+        CStmt::Mmad { c, a, b, .. } => vec![c, a, b],
+        _ => vec![],
+    };
+    for r in refs {
+        // Vector/cube operands must be local tensors, not globals.
+        if ck.kernel.global(&r.name).is_some() {
+            let name = r.name.clone();
+            ck.err(
+                "A508",
+                format!("vector/cube operand '{name}' is a GlobalTensor; compute units only address the Unified Buffer"),
+            );
+        } else {
+            check_ref_known(ck, r);
+        }
+    }
+}
+
+fn check_ref_known(ck: &mut KernelChecker, r: &TensorRef) {
+    let known = ck.local_dtypes.contains_key(&r.name)
+        || ck.kernel.global(&r.name).is_some()
+        || ck.kernel.tbuf(&r.name).is_some();
+    if !known {
+        let name = r.name.clone();
+        ck.warn("A509", format!("tensor reference '{name}' is not visibly bound in this stage"));
+    }
+}
+
+fn check_datacopy_alignment(
+    ck: &mut KernelChecker,
+    dst: &TensorRef,
+    src: &TensorRef,
+    count: &CExpr,
+    is_pad: bool,
+) {
+    // element size: prefer the global side's dtype, else local binding
+    let dtype = ck
+        .kernel
+        .global(&dst.name)
+        .or_else(|| ck.kernel.global(&src.name))
+        .map(|g| g.dtype)
+        .or_else(|| ck.local_dtypes.get(&dst.name).copied())
+        .or_else(|| ck.local_dtypes.get(&src.name).copied())
+        .unwrap_or(DType::F32);
+    if dtype == DType::Bool {
+        ck.err("A402", "DataCopy of bool data: no Unified Buffer mapping exists for bool".into());
+        return;
+    }
+    if is_pad {
+        return; // DataCopyPad handles arbitrary counts/offsets
+    }
+    let esz = dtype.size_bytes() as i64;
+    match ck.env.try_eval(count) {
+        Some(c) => {
+            if (c * esz) % 32 != 0 {
+                ck.err(
+                    "A101",
+                    format!(
+                        "DataCopy of {c} x {dtype} = {} bytes violates 32-byte alignment; use DataCopyPad",
+                        c * esz
+                    ),
+                );
+            }
+        }
+        None => {
+            ck.warn(
+                "A102",
+                "DataCopy count is not statically alignable from tiling; consider DataCopyPad".into(),
+            );
+        }
+    }
+    for r in [dst, src] {
+        if let Some(off) = ck.env.try_eval(&r.offset) {
+            if (off * esz) % 32 != 0 {
+                let name = r.name.clone();
+                ck.err(
+                    "A103",
+                    format!("DataCopy offset {off} elements into '{name}' is not 32-byte aligned; use DataCopyPad"),
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env_with(pairs: &[(&str, i64)]) -> ValidateEnv {
+        ValidateEnv::new(pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect())
+    }
+
+    /// A minimal well-formed elementwise kernel:
+    /// CopyIn: alloc/copy/enque; Compute: deque/exp/alloc-out/enque/free;
+    /// CopyOut: deque/copy/free.
+    fn good_kernel() -> AscKernel {
+        AscKernel {
+            name: "exp_k".into(),
+            tiling_fields: vec!["tileLen".into(), "nTiles".into()],
+            globals: vec![
+                GlobalDecl { name: "xGm".into(), dtype: DType::F32, arg_index: 0 },
+                GlobalDecl { name: "yGm".into(), dtype: DType::F32, arg_index: 1 },
+            ],
+            queues: vec![
+                QueueDecl { name: "inQ".into(), pos: QueuePos::VecIn, depth: 2, dtype: DType::F32, capacity: 1024 },
+                QueueDecl { name: "outQ".into(), pos: QueuePos::VecOut, depth: 2, dtype: DType::F32, capacity: 1024 },
+            ],
+            tbufs: vec![],
+            init_body: vec![CStmt::DeclAssign {
+                name: "blockOffset".into(),
+                value: CExpr::mul(CExpr::GetBlockIdx, CExpr::var("tileLen")),
+            }],
+            stages: vec![
+                StageFn {
+                    name: "CopyIn0".into(),
+                    kind: StageKind::CopyIn,
+                    params: vec!["off".into()],
+                    body: vec![
+                        CStmt::AllocTensor { queue: "inQ".into(), var: "xLocal".into() },
+                        CStmt::DataCopy {
+                            dst: TensorRef::base("xLocal"),
+                            src: TensorRef::at("xGm", CExpr::var("off")),
+                            count: CExpr::var("tileLen"),
+                        },
+                        CStmt::EnQue { queue: "inQ".into(), var: "xLocal".into() },
+                    ],
+                },
+                StageFn {
+                    name: "Compute0".into(),
+                    kind: StageKind::Compute,
+                    params: vec![],
+                    body: vec![
+                        CStmt::DeQue { queue: "inQ".into(), var: "xLocal".into() },
+                        CStmt::AllocTensor { queue: "outQ".into(), var: "yLocal".into() },
+                        CStmt::VecUn {
+                            op: VecUnOp::Exp,
+                            dst: TensorRef::base("yLocal"),
+                            src: TensorRef::base("xLocal"),
+                            count: CExpr::var("tileLen"),
+                        },
+                        CStmt::EnQue { queue: "outQ".into(), var: "yLocal".into() },
+                        CStmt::FreeTensor { queue: "inQ".into(), var: "xLocal".into() },
+                    ],
+                },
+                StageFn {
+                    name: "CopyOut0".into(),
+                    kind: StageKind::CopyOut,
+                    params: vec!["off".into()],
+                    body: vec![
+                        CStmt::DeQue { queue: "outQ".into(), var: "yLocal".into() },
+                        CStmt::DataCopy {
+                            dst: TensorRef::at("yGm", CExpr::var("off")),
+                            src: TensorRef::base("yLocal"),
+                            count: CExpr::var("tileLen"),
+                        },
+                        CStmt::FreeTensor { queue: "outQ".into(), var: "yLocal".into() },
+                    ],
+                },
+            ],
+            process_body: vec![CStmt::For {
+                var: "t".into(),
+                start: CExpr::Int(0),
+                end: CExpr::var("nTiles"),
+                step: CExpr::Int(1),
+                body: vec![
+                    CStmt::CallStage {
+                        name: "CopyIn0".into(),
+                        args: vec![CExpr::mul(CExpr::var("t"), CExpr::var("tileLen"))],
+                    },
+                    CStmt::CallStage { name: "Compute0".into(), args: vec![] },
+                    CStmt::CallStage {
+                        name: "CopyOut0".into(),
+                        args: vec![CExpr::mul(CExpr::var("t"), CExpr::var("tileLen"))],
+                    },
+                ],
+            }],
+        }
+    }
+
+    fn good_program() -> AscProgram {
+        AscProgram {
+            host: AscHost {
+                name: "exp_host".into(),
+                params: vec!["x".into(), "y".into()],
+                tiling_assigns: vec![
+                    ("tileLen".into(), CExpr::Int(1024)),
+                    ("nTiles".into(), CExpr::Int(16)),
+                ],
+                launches: vec![Launch {
+                    kernel: "exp_k".into(),
+                    block_dim: CExpr::Int(8),
+                    args: vec!["x".into(), "y".into()],
+                }],
+            },
+            kernels: vec![good_kernel()],
+        }
+    }
+
+    fn errors(p: &AscProgram, env: &ValidateEnv) -> Vec<String> {
+        validate(p, env).into_iter().filter(|d| d.is_error()).map(|d| d.code).collect()
+    }
+
+    #[test]
+    fn well_formed_kernel_validates() {
+        let p = good_program();
+        let env = env_with(&[("tileLen", 1024), ("nTiles", 16)]);
+        assert!(errors(&p, &env).is_empty(), "{:?}", validate(&p, &env));
+    }
+
+    #[test]
+    fn unaligned_datacopy_rejected() {
+        let p = good_program();
+        let env = env_with(&[("tileLen", 1001), ("nTiles", 16)]); // 4004 bytes % 32 != 0
+        assert!(errors(&p, &env).contains(&"A101".to_string()));
+    }
+
+    #[test]
+    fn datacopypad_accepts_unaligned() {
+        let mut p = good_program();
+        // replace both DataCopy with DataCopyPad
+        for k in &mut p.kernels {
+            for s in &mut k.stages {
+                for st in &mut s.body {
+                    if let CStmt::DataCopy { dst, src, count } = st.clone() {
+                        *st = CStmt::DataCopyPad { dst, src, count };
+                    }
+                }
+            }
+        }
+        let env = env_with(&[("tileLen", 1000), ("nTiles", 16)]);
+        assert!(errors(&p, &env).is_empty());
+    }
+
+    #[test]
+    fn bool_queue_dtype_rejected() {
+        let mut p = good_program();
+        p.kernels[0].queues[0].dtype = DType::Bool;
+        let env = env_with(&[("tileLen", 1024), ("nTiles", 16)]);
+        assert!(errors(&p, &env).contains(&"A401".to_string()));
+    }
+
+    #[test]
+    fn bool_global_rejected() {
+        let mut p = good_program();
+        p.kernels[0].globals[0].dtype = DType::Bool;
+        let env = env_with(&[("tileLen", 1024), ("nTiles", 16)]);
+        assert!(errors(&p, &env).contains(&"A402".to_string()));
+    }
+
+    #[test]
+    fn ub_oversubscription_rejected() {
+        let mut p = good_program();
+        p.kernels[0].queues[0].capacity = 40_000; // 2*40000*4 = 320 KB > 192 KB
+        let env = env_with(&[("tileLen", 1024), ("nTiles", 16)]);
+        assert!(errors(&p, &env).contains(&"A301".to_string()));
+    }
+
+    #[test]
+    fn enque_in_wrong_stage_rejected() {
+        let mut p = good_program();
+        // move the CopyIn EnQue into the Compute stage (illegal interleave)
+        let enque = p.kernels[0].stages[0].body.pop().unwrap();
+        p.kernels[0].stages[1].body.insert(0, enque);
+        let env = env_with(&[("tileLen", 1024), ("nTiles", 16)]);
+        let errs = errors(&p, &env);
+        assert!(errs.contains(&"A201".to_string()), "{errs:?}");
+    }
+
+    #[test]
+    fn unbalanced_alloc_enque_rejected() {
+        let mut p = good_program();
+        p.kernels[0].stages[0].body.pop(); // drop EnQue
+        let env = env_with(&[("tileLen", 1024), ("nTiles", 16)]);
+        assert!(errors(&p, &env).contains(&"A203".to_string()));
+    }
+
+    #[test]
+    fn compute_op_in_copyin_rejected() {
+        let mut p = good_program();
+        p.kernels[0].stages[0].body.push(CStmt::VecUn {
+            op: VecUnOp::Exp,
+            dst: TensorRef::base("xLocal"),
+            src: TensorRef::base("xLocal"),
+            count: CExpr::var("tileLen"),
+        });
+        let env = env_with(&[("tileLen", 1024), ("nTiles", 16)]);
+        assert!(errors(&p, &env).contains(&"A501".to_string()));
+    }
+
+    #[test]
+    fn datacopy_in_compute_rejected() {
+        let mut p = good_program();
+        p.kernels[0].stages[1].body.push(CStmt::DataCopy {
+            dst: TensorRef::base("yLocal"),
+            src: TensorRef::at("xGm", CExpr::Int(0)),
+            count: CExpr::var("tileLen"),
+        });
+        let env = env_with(&[("tileLen", 1024), ("nTiles", 16)]);
+        assert!(errors(&p, &env).contains(&"A501".to_string()));
+    }
+
+    #[test]
+    fn vector_op_on_global_rejected() {
+        let mut p = good_program();
+        p.kernels[0].stages[1].body.push(CStmt::VecUn {
+            op: VecUnOp::Exp,
+            dst: TensorRef::base("yLocal"),
+            src: TensorRef::base("xGm"),
+            count: CExpr::var("tileLen"),
+        });
+        let env = env_with(&[("tileLen", 1024), ("nTiles", 16)]);
+        assert!(errors(&p, &env).contains(&"A508".to_string()));
+    }
+
+    #[test]
+    fn process_with_inline_compute_rejected() {
+        let mut p = good_program();
+        p.kernels[0].process_body.push(CStmt::VecUn {
+            op: VecUnOp::Exp,
+            dst: TensorRef::base("a"),
+            src: TensorRef::base("b"),
+            count: CExpr::Int(64),
+        });
+        let env = env_with(&[("tileLen", 1024), ("nTiles", 16)]);
+        assert!(errors(&p, &env).contains(&"A506".to_string()));
+    }
+
+    #[test]
+    fn call_to_unknown_stage_rejected() {
+        let mut p = good_program();
+        p.kernels[0].process_body.push(CStmt::CallStage { name: "Nope".into(), args: vec![] });
+        let env = env_with(&[("tileLen", 1024), ("nTiles", 16)]);
+        assert!(errors(&p, &env).contains(&"A502".to_string()));
+    }
+
+    #[test]
+    fn stage_arity_mismatch_rejected() {
+        let mut p = good_program();
+        p.kernels[0].process_body.push(CStmt::CallStage { name: "Compute0".into(), args: vec![CExpr::Int(1)] });
+        let env = env_with(&[("tileLen", 1024), ("nTiles", 16)]);
+        assert!(errors(&p, &env).contains(&"A503".to_string()));
+    }
+
+    #[test]
+    fn launch_arity_mismatch_rejected() {
+        let mut p = good_program();
+        p.host.launches[0].args.pop();
+        let env = env_with(&[("tileLen", 1024), ("nTiles", 16)]);
+        assert!(errors(&p, &env).contains(&"A505".to_string()));
+    }
+
+    #[test]
+    fn unknown_launch_kernel_rejected() {
+        let mut p = good_program();
+        p.host.launches[0].kernel = "ghost".into();
+        let env = env_with(&[]);
+        assert!(errors(&p, &env).contains(&"A504".to_string()));
+    }
+
+    #[test]
+    fn queue_depth_bounds() {
+        let mut p = good_program();
+        p.kernels[0].queues[0].depth = 9;
+        let env = env_with(&[("tileLen", 1024), ("nTiles", 16)]);
+        assert!(errors(&p, &env).contains(&"A302".to_string()));
+    }
+
+    #[test]
+    fn symbolic_count_warns_not_errors() {
+        let p = good_program();
+        // tiling env missing tileLen -> count not evaluable
+        let env = env_with(&[("nTiles", 16)]);
+        let all = validate(&p, &env);
+        assert!(all.iter().any(|d| d.code == "A102" && d.severity == Severity::Warning));
+        assert!(all.iter().all(|d| !d.is_error()));
+    }
+
+    #[test]
+    fn unaligned_offset_rejected() {
+        let mut p = good_program();
+        if let CStmt::DataCopy { src, .. } = &mut p.kernels[0].stages[0].body[1] {
+            src.offset = CExpr::Int(3); // 12 bytes, unaligned
+        }
+        let env = env_with(&[("tileLen", 1024), ("nTiles", 16)]);
+        assert!(errors(&p, &env).contains(&"A103".to_string()));
+    }
+
+    #[test]
+    fn try_eval_arithmetic() {
+        let env = env_with(&[("a", 10), ("b", 3)]);
+        let e = CExpr::bin(CBinOp::FloorDiv, CExpr::var("a"), CExpr::var("b"));
+        assert_eq!(env.try_eval(&e), Some(3));
+        let e = CExpr::Min(Box::new(CExpr::var("a")), Box::new(CExpr::Int(7)));
+        assert_eq!(env.try_eval(&e), Some(7));
+        assert_eq!(env.try_eval(&CExpr::var("zzz")), None);
+        let div0 = CExpr::bin(CBinOp::Mod, CExpr::var("a"), CExpr::Int(0));
+        assert_eq!(env.try_eval(&div0), None);
+    }
+}

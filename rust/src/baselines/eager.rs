@@ -1,0 +1,87 @@
+//! PyTorch-eager baseline cost model.
+//!
+//! Eager execution on the NPU dispatches one *prebuilt, tuned* CANN kernel
+//! per framework primitive: each op reads its inputs from GM and writes its
+//! outputs back to GM at a high fraction of the memory-bandwidth roofline,
+//! with a kernel-launch overhead per op and **no fusion between ops** —
+//! exactly the cost structure PyTorch eager has on real Ascend silicon
+//! (and the reason the paper's fused generated kernels win on Optimizer /
+//! Loss while tuned reduce/pooling built-ins stay hard to beat).
+//!
+//! The model intentionally shares the MTE bandwidth constants with the
+//! simulator in [`crate::sim::cost`] so Fastₓ ratios compare like with like.
+
+use crate::bench_suite::spec::{EagerOp, TaskSpec};
+use crate::sim::cost;
+
+/// Cycles one tuned eager kernel takes: reads and writes stream through
+/// the MTE engines of all cores in parallel at `eff` × roofline, and the
+/// two directions overlap (separate engines), so the slower one dominates.
+pub fn eager_op_cycles(op: &EagerOp, cores: usize) -> f64 {
+    let read_bytes = (op.reads * 4) as f64;
+    let write_bytes = (op.writes * 4) as f64;
+    let read_cycles = read_bytes / (cost::MTE2_BYTES_PER_CYCLE * cores as f64 * op.eff);
+    let write_cycles = write_bytes / (cost::MTE3_BYTES_PER_CYCLE * cores as f64 * op.eff);
+    cost::LAUNCH_OVERHEAD + read_cycles.max(write_cycles)
+}
+
+/// Total eager-baseline cycles for a task (sequential op launches).
+pub fn eager_cycles(task: &TaskSpec) -> f64 {
+    eager_cycles_with_cores(task, cost::NUM_CORES)
+}
+
+pub fn eager_cycles_with_cores(task: &TaskSpec, cores: usize) -> f64 {
+    task.eager.iter().map(|op| eager_op_cycles(op, cores)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite::spec::EagerOp;
+    use crate::bench_suite::tasks::task_by_name;
+
+    #[test]
+    fn bandwidth_bound_scaling() {
+        let small = EagerOp::map("Relu", 1 << 20, 1 << 20);
+        let big = EagerOp::map("Relu", 1 << 24, 1 << 24);
+        let (a, b) = (eager_op_cycles(&small, 32), eager_op_cycles(&big, 32));
+        // 16x the data -> ~16x the bandwidth term
+        let ratio = (b - cost::LAUNCH_OVERHEAD) / (a - cost::LAUNCH_OVERHEAD);
+        assert!((ratio - 16.0).abs() < 0.1, "{ratio}");
+    }
+
+    #[test]
+    fn more_cores_go_faster() {
+        let op = EagerOp::map("Relu", 1 << 24, 1 << 24);
+        assert!(eager_op_cycles(&op, 32) < eager_op_cycles(&op, 8));
+    }
+
+    #[test]
+    fn lower_efficiency_costs_more() {
+        let tuned = EagerOp::map("Relu", 1 << 22, 1 << 22);
+        let scan = EagerOp::map("CumSum", 1 << 22, 1 << 22).with_eff(0.3);
+        assert!(eager_op_cycles(&scan, 32) > 2.0 * (eager_op_cycles(&tuned, 32) - cost::LAUNCH_OVERHEAD));
+    }
+
+    #[test]
+    fn composite_activation_costs_more_than_native() {
+        let relu = task_by_name("relu").unwrap();
+        let hswish = task_by_name("hardswish").unwrap();
+        assert!(eager_cycles(&hswish) > 3.0 * eager_cycles(&relu) * 0.8);
+    }
+
+    #[test]
+    fn adam_eager_pays_many_launches() {
+        let adam = task_by_name("adam").unwrap();
+        let sgd = task_by_name("sgd_momentum").unwrap();
+        assert!(eager_cycles(&adam) > eager_cycles(&sgd) * 1.8);
+    }
+
+    #[test]
+    fn all_tasks_have_finite_eager_cost() {
+        for t in crate::bench_suite::tasks::all_tasks() {
+            let c = eager_cycles(&t);
+            assert!(c.is_finite() && c > 0.0, "{}: {c}", t.name);
+        }
+    }
+}

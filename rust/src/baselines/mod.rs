@@ -1,0 +1,10 @@
+//! Baseline executors the paper compares against:
+//!
+//! * [`eager`] — the PyTorch-eager-on-NPU cost model: one tuned CANN kernel
+//!   per framework primitive, no fusion, a launch per op.
+//! * the *direct LLM generation* baseline lives in `synth::direct` (it
+//!   shares the generator interface).
+
+pub mod eager;
+
+pub use eager::eager_cycles;

@@ -1,0 +1,294 @@
+//! Benchmark metrics: Comp@1, Pass@1, Fast₀.₂/₀.₈/₁.₀ (paper §5.1) and the
+//! Table 1 / Table 2 renderers.
+//!
+//! Fastₓ counts a kernel when `eager_cycles / generated_cycles >= x`, i.e.
+//! the generated kernel reaches at least x× the eager baseline's speed.
+//! Percentages are over *all* kernels in a category (incorrect kernels can
+//! never be fast), matching the paper's arithmetic (e.g. Loss Fast = 85.7%
+//! = 6/7 with one incorrect kernel).
+
+use super::spec::Category;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Outcome of one task through the full pipeline.
+#[derive(Clone, Debug)]
+pub struct TaskResult {
+    pub name: String,
+    pub category: Category,
+    pub compiled: bool,
+    pub correct: bool,
+    /// Simulated cycles of the generated kernel (if it ran).
+    pub generated_cycles: Option<f64>,
+    /// Simulated cycles of the eager baseline.
+    pub eager_cycles: f64,
+    /// Failure detail for reports.
+    pub failure: Option<String>,
+    /// Number of repair-feedback rounds consumed across passes.
+    pub repair_rounds: usize,
+    /// Wall-clock seconds the pipeline spent on this task.
+    pub pipeline_secs: f64,
+}
+
+impl TaskResult {
+    /// eager/generated speed ratio (>= 1.0 means generated wins).
+    pub fn speedup(&self) -> Option<f64> {
+        match (self.correct, self.generated_cycles) {
+            (true, Some(g)) if g > 0.0 => Some(self.eager_cycles / g),
+            _ => None,
+        }
+    }
+
+    pub fn fast_at(&self, x: f64) -> bool {
+        self.speedup().map(|s| s >= x).unwrap_or(false)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("name", self.name.as_str())
+            .set("category", self.category.name())
+            .set("compiled", self.compiled)
+            .set("correct", self.correct)
+            .set("eager_cycles", self.eager_cycles)
+            .set("repair_rounds", self.repair_rounds)
+            .set("pipeline_secs", self.pipeline_secs);
+        match self.generated_cycles {
+            Some(g) => j.set("generated_cycles", g),
+            None => j.set("generated_cycles", Json::Null),
+        };
+        match self.speedup() {
+            Some(s) => j.set("speedup", s),
+            None => j.set("speedup", Json::Null),
+        };
+        if let Some(f) = &self.failure {
+            j.set("failure", f.as_str());
+        }
+        j
+    }
+}
+
+/// Aggregate metrics for a set of task results.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub total: usize,
+    pub compiled: usize,
+    pub correct: usize,
+    pub fast02: usize,
+    pub fast08: usize,
+    pub fast10: usize,
+}
+
+impl Metrics {
+    pub fn from_results<'a>(results: impl Iterator<Item = &'a TaskResult>) -> Metrics {
+        let mut m = Metrics::default();
+        for r in results {
+            m.total += 1;
+            m.compiled += r.compiled as usize;
+            m.correct += r.correct as usize;
+            m.fast02 += r.fast_at(0.2) as usize;
+            m.fast08 += r.fast_at(0.8) as usize;
+            m.fast10 += r.fast_at(1.0) as usize;
+        }
+        m
+    }
+
+    pub fn pct(num: usize, den: usize) -> f64 {
+        if den == 0 {
+            0.0
+        } else {
+            100.0 * num as f64 / den as f64
+        }
+    }
+
+    pub fn comp_pct(&self) -> f64 {
+        Metrics::pct(self.compiled, self.total)
+    }
+    pub fn pass_pct(&self) -> f64 {
+        Metrics::pct(self.correct, self.total)
+    }
+    pub fn fast02_pct(&self) -> f64 {
+        Metrics::pct(self.fast02, self.total)
+    }
+    pub fn fast08_pct(&self) -> f64 {
+        Metrics::pct(self.fast08, self.total)
+    }
+    pub fn fast10_pct(&self) -> f64 {
+        Metrics::pct(self.fast10, self.total)
+    }
+}
+
+/// One rendered row of Table 1 / Table 2.
+#[derive(Clone, Debug)]
+pub struct CategoryRow {
+    pub category: String,
+    pub metrics: Metrics,
+}
+
+/// Full-suite result with table renderers.
+#[derive(Clone, Debug)]
+pub struct SuiteResult {
+    pub results: Vec<TaskResult>,
+}
+
+impl SuiteResult {
+    pub fn by_category(&self) -> Vec<CategoryRow> {
+        let mut groups: BTreeMap<Category, Vec<&TaskResult>> = BTreeMap::new();
+        for r in &self.results {
+            groups.entry(r.category).or_default().push(r);
+        }
+        groups
+            .into_iter()
+            .map(|(c, rs)| CategoryRow {
+                category: format!("{} ({} kernels)", c.name(), rs.len()),
+                metrics: Metrics::from_results(rs.into_iter()),
+            })
+            .collect()
+    }
+
+    pub fn totals(&self) -> Metrics {
+        Metrics::from_results(self.results.iter())
+    }
+
+    /// Render Table 1 (correctness by category) as aligned text.
+    pub fn render_table1(&self) -> String {
+        let mut s = String::new();
+        s.push_str("Table 1. Correctness evaluation by category.\n");
+        s.push_str(&format!("{:<28} {:>8} {:>8}\n", "Kernel Category", "Comp@1", "Pass@1"));
+        for row in self.by_category() {
+            s.push_str(&format!(
+                "{:<28} {:>8.1} {:>8.1}\n",
+                row.category,
+                row.metrics.comp_pct(),
+                row.metrics.pass_pct()
+            ));
+        }
+        let t = self.totals();
+        s.push_str(&format!(
+            "{:<28} {:>8.1} {:>8.1}\n",
+            format!("Total ({} kernels)", t.total),
+            t.comp_pct(),
+            t.pass_pct()
+        ));
+        s
+    }
+
+    /// Render Table 2 (performance by category) as aligned text.
+    pub fn render_table2(&self) -> String {
+        let mut s = String::new();
+        s.push_str("Table 2. Performance vs PyTorch-eager baseline by category.\n");
+        s.push_str(&format!(
+            "{:<28} {:>10} {:>10} {:>10}\n",
+            "Kernel Category", "Fast0.2@1", "Fast0.8@1", "Fast1.0@1"
+        ));
+        for row in self.by_category() {
+            s.push_str(&format!(
+                "{:<28} {:>10.1} {:>10.1} {:>10.1}\n",
+                row.category,
+                row.metrics.fast02_pct(),
+                row.metrics.fast08_pct(),
+                row.metrics.fast10_pct()
+            ));
+        }
+        let t = self.totals();
+        s.push_str(&format!(
+            "{:<28} {:>10.1} {:>10.1} {:>10.1}\n",
+            "Total",
+            t.fast02_pct(),
+            t.fast08_pct(),
+            t.fast10_pct()
+        ));
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut tasks = Json::Arr(vec![]);
+        for r in &self.results {
+            tasks.push(r.to_json());
+        }
+        let t = self.totals();
+        let mut totals = Json::obj();
+        totals
+            .set("comp_pct", t.comp_pct())
+            .set("pass_pct", t.pass_pct())
+            .set("fast02_pct", t.fast02_pct())
+            .set("fast08_pct", t.fast08_pct())
+            .set("fast10_pct", t.fast10_pct());
+        let mut j = Json::obj();
+        j.set("tasks", tasks).set("totals", totals);
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result(cat: Category, compiled: bool, correct: bool, gen: Option<f64>, eager: f64) -> TaskResult {
+        TaskResult {
+            name: "t".into(),
+            category: cat,
+            compiled,
+            correct,
+            generated_cycles: gen,
+            eager_cycles: eager,
+            failure: None,
+            repair_rounds: 0,
+            pipeline_secs: 0.0,
+        }
+    }
+
+    #[test]
+    fn speedup_and_fast_thresholds() {
+        let r = result(Category::Activation, true, true, Some(500.0), 1000.0);
+        assert_eq!(r.speedup(), Some(2.0));
+        assert!(r.fast_at(0.2) && r.fast_at(0.8) && r.fast_at(1.0) && r.fast_at(2.0));
+        assert!(!r.fast_at(2.1));
+    }
+
+    #[test]
+    fn incorrect_kernels_are_never_fast() {
+        let r = result(Category::Loss, true, false, Some(1.0), 1000.0);
+        assert_eq!(r.speedup(), None);
+        assert!(!r.fast_at(0.2));
+    }
+
+    #[test]
+    fn metrics_percentages() {
+        let rs = vec![
+            result(Category::Loss, true, true, Some(500.0), 1000.0), // 2.0x
+            result(Category::Loss, true, true, Some(2000.0), 1000.0), // 0.5x
+            result(Category::Loss, false, false, None, 1000.0),
+        ];
+        let m = Metrics::from_results(rs.iter());
+        assert_eq!(m.total, 3);
+        assert!((m.comp_pct() - 66.7).abs() < 0.1);
+        assert!((m.pass_pct() - 66.7).abs() < 0.1);
+        assert!((m.fast02_pct() - 66.7).abs() < 0.1);
+        assert!((m.fast10_pct() - 33.3).abs() < 0.1);
+    }
+
+    #[test]
+    fn table_renderers_include_all_categories() {
+        let rs = vec![
+            result(Category::Activation, true, true, Some(1.0), 1.0),
+            result(Category::Pooling, true, false, None, 1.0),
+        ];
+        let s = SuiteResult { results: rs };
+        let t1 = s.render_table1();
+        assert!(t1.contains("Activation"));
+        assert!(t1.contains("Pooling"));
+        assert!(t1.contains("Total"));
+        let t2 = s.render_table2();
+        assert!(t2.contains("Fast0.2@1"));
+    }
+
+    #[test]
+    fn json_export_has_tasks_and_totals() {
+        let s = SuiteResult {
+            results: vec![result(Category::Math, true, true, Some(10.0), 100.0)],
+        };
+        let j = s.to_json().to_string();
+        assert!(j.contains("\"totals\""));
+        assert!(j.contains("\"speedup\":10"));
+    }
+}

@@ -1,0 +1,25 @@
+//! MultiKernelBench-style benchmark suite (paper §5.1).
+//!
+//! 52 single-operator kernel tasks across the paper's seven Level-1
+//! categories (Activation 15, Loss 7, Math 6, Normalization 8, Optimizer 5,
+//! Reduce 5, Pooling 6), with:
+//!
+//! * a declarative [`spec::ComputeSpec`] per task (what to compute),
+//! * reference numerics evaluated directly on host tensors (the Pass@1
+//!   oracle, cross-checked against the JAX/PJRT goldens where artifacts
+//!   exist),
+//! * a PyTorch-eager-style baseline decomposition (one tuned CANN kernel
+//!   per framework primitive — see `baselines::eager`),
+//! * metric computation (Comp@1 / Pass@1 / Fast₀.₂ / Fast₀.₈ / Fast₁.₀).
+//!
+//! Task shapes follow the KernelBench v0.1 convention of "large enough that
+//! kernel time dominates launch overhead", scaled to keep the simulator's
+//! full-suite runtime in seconds.
+
+pub mod metrics;
+pub mod spec;
+pub mod tasks;
+
+pub use metrics::{CategoryRow, Metrics, SuiteResult, TaskResult};
+pub use spec::{Category, ComputeSpec, EagerOp, OpExpr, TaskSpec};
+pub use tasks::all_tasks;

@@ -1,0 +1,497 @@
+//! Task specification model: what each benchmark kernel computes, how the
+//! PyTorch-eager baseline would execute it, and reference numerics.
+//!
+//! The `ComputeSpec` is the machine-readable task description the
+//! synthesizer's category templates consume — the analogue of the
+//! "reference PyTorch implementation + input shapes" a task gives the LLM
+//! in the paper's pipeline.
+
+use crate::util::rng::XorShiftRng;
+use crate::util::tensor::{DType, Tensor};
+use std::collections::HashMap;
+
+/// The paper's seven MultiKernelBench Level-1 categories.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Category {
+    Activation,
+    Loss,
+    Math,
+    Normalization,
+    Optimizer,
+    Reduce,
+    Pooling,
+}
+
+impl Category {
+    pub fn name(self) -> &'static str {
+        match self {
+            Category::Activation => "Activation",
+            Category::Loss => "Loss",
+            Category::Math => "Math",
+            Category::Normalization => "Normalization",
+            Category::Optimizer => "Optimizer",
+            Category::Reduce => "Reduce",
+            Category::Pooling => "Pooling",
+        }
+    }
+
+    pub fn all() -> [Category; 7] {
+        [
+            Category::Activation,
+            Category::Loss,
+            Category::Math,
+            Category::Normalization,
+            Category::Optimizer,
+            Category::Reduce,
+            Category::Pooling,
+        ]
+    }
+}
+
+/// Scalar-to-scalar expression trees for element-wise computation. The
+/// synthesizer lowers these to three-address DSL vector ops; the reference
+/// evaluates them directly.
+#[derive(Clone, Debug, PartialEq)]
+pub enum OpExpr {
+    /// i-th input tensor element.
+    In(usize),
+    Const(f64),
+    Un(UnFn, Box<OpExpr>),
+    Bin(BinFn, Box<OpExpr>, Box<OpExpr>),
+    /// select(c, a, b): c >= 0 ? a : b
+    SelectGe(Box<OpExpr>, Box<OpExpr>, Box<OpExpr>),
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UnFn {
+    Exp,
+    Log,
+    Abs,
+    Sqrt,
+    Tanh,
+    Neg,
+    Recip,
+    Relu,
+    Sign,
+    Floor,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BinFn {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Max,
+    Min,
+}
+
+impl OpExpr {
+    pub fn input(i: usize) -> OpExpr {
+        OpExpr::In(i)
+    }
+    pub fn c(v: f64) -> OpExpr {
+        OpExpr::Const(v)
+    }
+    pub fn un(f: UnFn, a: OpExpr) -> OpExpr {
+        OpExpr::Un(f, Box::new(a))
+    }
+    pub fn bin(f: BinFn, a: OpExpr, b: OpExpr) -> OpExpr {
+        OpExpr::Bin(f, Box::new(a), Box::new(b))
+    }
+    pub fn add(a: OpExpr, b: OpExpr) -> OpExpr {
+        OpExpr::bin(BinFn::Add, a, b)
+    }
+    pub fn sub(a: OpExpr, b: OpExpr) -> OpExpr {
+        OpExpr::bin(BinFn::Sub, a, b)
+    }
+    pub fn mul(a: OpExpr, b: OpExpr) -> OpExpr {
+        OpExpr::bin(BinFn::Mul, a, b)
+    }
+    pub fn div(a: OpExpr, b: OpExpr) -> OpExpr {
+        OpExpr::bin(BinFn::Div, a, b)
+    }
+
+    /// Evaluate on one element vector (xs[i] = value of In(i)).
+    pub fn eval(&self, xs: &[f32]) -> f32 {
+        match self {
+            OpExpr::In(i) => xs[*i],
+            OpExpr::Const(v) => *v as f32,
+            OpExpr::Un(f, a) => {
+                let x = a.eval(xs);
+                match f {
+                    UnFn::Exp => x.exp(),
+                    UnFn::Log => x.ln(),
+                    UnFn::Abs => x.abs(),
+                    UnFn::Sqrt => x.sqrt(),
+                    UnFn::Tanh => x.tanh(),
+                    UnFn::Neg => -x,
+                    UnFn::Recip => 1.0 / x,
+                    UnFn::Relu => x.max(0.0),
+                    UnFn::Sign => {
+                        if x > 0.0 {
+                            1.0
+                        } else if x < 0.0 {
+                            -1.0
+                        } else {
+                            0.0
+                        }
+                    }
+                    UnFn::Floor => x.floor(),
+                }
+            }
+            OpExpr::Bin(f, a, b) => {
+                let (x, y) = (a.eval(xs), b.eval(xs));
+                match f {
+                    BinFn::Add => x + y,
+                    BinFn::Sub => x - y,
+                    BinFn::Mul => x * y,
+                    BinFn::Div => x / y,
+                    BinFn::Max => x.max(y),
+                    BinFn::Min => x.min(y),
+                }
+            }
+            OpExpr::SelectGe(c, a, b) => {
+                if c.eval(xs) >= 0.0 {
+                    a.eval(xs)
+                } else {
+                    b.eval(xs)
+                }
+            }
+        }
+    }
+
+    /// Vectorized evaluation: one tree walk with tight per-op loops over
+    /// whole arrays (§Perf P4 — replaces per-element tree dispatch in the
+    /// reference oracle, which the pipeline profile showed at ~10%).
+    pub fn eval_bulk(&self, inputs: &[&[f32]]) -> Vec<f32> {
+        let n = inputs.first().map(|s| s.len()).unwrap_or(0);
+        match self {
+            OpExpr::In(i) => inputs[*i].to_vec(),
+            OpExpr::Const(v) => vec![*v as f32; n],
+            OpExpr::Un(f, a) => {
+                let mut x = a.eval_bulk(inputs);
+                match f {
+                    UnFn::Exp => x.iter_mut().for_each(|v| *v = v.exp()),
+                    UnFn::Log => x.iter_mut().for_each(|v| *v = v.ln()),
+                    UnFn::Abs => x.iter_mut().for_each(|v| *v = v.abs()),
+                    UnFn::Sqrt => x.iter_mut().for_each(|v| *v = v.sqrt()),
+                    UnFn::Tanh => x.iter_mut().for_each(|v| *v = v.tanh()),
+                    UnFn::Neg => x.iter_mut().for_each(|v| *v = -*v),
+                    UnFn::Recip => x.iter_mut().for_each(|v| *v = 1.0 / *v),
+                    UnFn::Relu => x.iter_mut().for_each(|v| *v = v.max(0.0)),
+                    UnFn::Sign => x.iter_mut().for_each(|v| {
+                        *v = if *v > 0.0 {
+                            1.0
+                        } else if *v < 0.0 {
+                            -1.0
+                        } else {
+                            0.0
+                        }
+                    }),
+                    UnFn::Floor => x.iter_mut().for_each(|v| *v = v.floor()),
+                }
+                x
+            }
+            OpExpr::Bin(f, a, b) => {
+                let mut x = a.eval_bulk(inputs);
+                let y = b.eval_bulk(inputs);
+                match f {
+                    BinFn::Add => x.iter_mut().zip(&y).for_each(|(v, &w)| *v += w),
+                    BinFn::Sub => x.iter_mut().zip(&y).for_each(|(v, &w)| *v -= w),
+                    BinFn::Mul => x.iter_mut().zip(&y).for_each(|(v, &w)| *v *= w),
+                    BinFn::Div => x.iter_mut().zip(&y).for_each(|(v, &w)| *v /= w),
+                    BinFn::Max => x.iter_mut().zip(&y).for_each(|(v, &w)| *v = v.max(w)),
+                    BinFn::Min => x.iter_mut().zip(&y).for_each(|(v, &w)| *v = v.min(w)),
+                }
+                x
+            }
+            OpExpr::SelectGe(c, a, b) => {
+                let cv = c.eval_bulk(inputs);
+                let mut av = a.eval_bulk(inputs);
+                let bv = b.eval_bulk(inputs);
+                for i in 0..av.len() {
+                    if cv[i] < 0.0 {
+                        av[i] = bv[i];
+                    }
+                }
+                av
+            }
+        }
+    }
+
+    /// Number of non-leaf nodes — the op count a naive decomposition pays.
+    pub fn op_count(&self) -> usize {
+        match self {
+            OpExpr::In(_) | OpExpr::Const(_) => 0,
+            OpExpr::Un(_, a) => 1 + a.op_count(),
+            OpExpr::Bin(_, a, b) => 1 + a.op_count() + b.op_count(),
+            OpExpr::SelectGe(c, a, b) => 1 + c.op_count() + a.op_count() + b.op_count(),
+        }
+    }
+
+    /// Highest input index referenced + 1.
+    pub fn arity(&self) -> usize {
+        match self {
+            OpExpr::In(i) => i + 1,
+            OpExpr::Const(_) => 0,
+            OpExpr::Un(_, a) => a.arity(),
+            OpExpr::Bin(_, a, b) => a.arity().max(b.arity()),
+            OpExpr::SelectGe(c, a, b) => c.arity().max(a.arity()).max(b.arity()),
+        }
+    }
+}
+
+/// Loss function kinds (pointwise + mean reduction over all elements).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LossKind {
+    Mse,
+    Mae,
+    Huber,
+    Bce,
+    KlDiv,
+    Hinge,
+    /// Fused log-softmax cross-entropy over logits[N, C] and class targets.
+    CrossEntropy,
+}
+
+/// Row-wise (last axis) reduction kinds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReduceOpKind {
+    Sum,
+    Max,
+    Min,
+    Mean,
+    Prod,
+}
+
+/// Normalization kinds over [rows, cols] (normalize the last axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NormKind {
+    Softmax,
+    LogSoftmax,
+    /// LayerNorm with learned gamma/beta (inputs 1, 2).
+    LayerNorm,
+    RmsNorm,
+    /// Inference-mode batchnorm over [N, C] with per-column mean/var/γ/β.
+    BatchNorm,
+    /// Instance norm: same math as layernorm without affine params.
+    InstanceNorm,
+    GroupNorm { groups: usize },
+    L2Norm,
+}
+
+/// Scan (prefix) kinds along the last axis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScanOpKind {
+    Sum,
+    Prod,
+}
+
+/// Pooling kinds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolKind {
+    Max,
+    Avg,
+}
+
+/// What a task computes.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ComputeSpec {
+    /// out = expr(inputs) element-wise.
+    Elementwise { expr: OpExpr },
+    /// Scalar loss: pointwise expr over (pred, target) then mean.
+    Loss { kind: LossKind },
+    /// In-place state updates: out[i] <- expr_i(inputs) element-wise.
+    /// Inputs are (param, grad, state...); each update is (index into
+    /// `task.outputs`, expression over the *old* input state).
+    Optimizer { updates: Vec<(usize, OpExpr)> },
+    /// Reduce the last axis of input 0.
+    Reduce { kind: ReduceOpKind },
+    /// Normalize the last axis of input 0.
+    Normalization { kind: NormKind },
+    /// Prefix scan along the last axis; `masked` adds a bool mask input
+    /// (elements where mask == 0 contribute identity).
+    Scan { op: ScanOpKind, reverse: bool, masked: bool },
+    /// Pooling. `dims` 1 or 2; window/stride in each spatial dim;
+    /// input layout: 1D = [batch, length]; 2D = [batch, h, w]. `padding`
+    /// pads each spatial edge (max: -inf; avg: excluded from the count,
+    /// i.e. count_include_pad = False).
+    Pooling { kind: PoolKind, window: usize, stride: usize, dims: usize, padding: usize },
+    /// Composite row-wise math (logsumexp etc.) identified by name.
+    RowComposite { kind: RowCompositeKind },
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RowCompositeKind {
+    LogSumExp,
+    FrobeniusNorm,
+}
+
+/// One PyTorch-eager primitive launch: a tuned CANN kernel reading
+/// `reads` and writing `writes` elements at `eff` × memory roofline.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EagerOp {
+    pub name: &'static str,
+    pub reads: usize,
+    pub writes: usize,
+    /// Fraction of memory-bandwidth roofline this tuned kernel achieves.
+    pub eff: f64,
+}
+
+impl EagerOp {
+    pub fn map(name: &'static str, reads: usize, writes: usize) -> EagerOp {
+        // tuned elementwise CANN kernels run very close to roofline
+        EagerOp { name, reads, writes, eff: 0.95 }
+    }
+    pub fn with_eff(mut self, eff: f64) -> EagerOp {
+        self.eff = eff;
+        self
+    }
+}
+
+/// A benchmark task.
+#[derive(Clone, Debug)]
+pub struct TaskSpec {
+    pub name: &'static str,
+    pub category: Category,
+    /// Input tensors: (name, shape, dtype). Outputs are allocated zeroed.
+    pub inputs: Vec<(&'static str, Vec<usize>, DType)>,
+    pub outputs: Vec<(&'static str, Vec<usize>)>,
+    pub compute: ComputeSpec,
+    /// The eager-baseline decomposition (one tuned kernel per primitive
+    /// PyTorch would dispatch on the NPU backend).
+    pub eager: Vec<EagerOp>,
+    /// Pass@1 comparison tolerances.
+    pub rtol: f32,
+    pub atol: f32,
+}
+
+impl TaskSpec {
+    /// Deterministic random inputs (plus zeroed outputs) for this task.
+    pub fn make_inputs(&self, seed: u64) -> HashMap<String, Tensor> {
+        let mut rng = XorShiftRng::new(seed ^ fxhash(self.name));
+        let mut m = HashMap::new();
+        for (name, shape, dtype) in &self.inputs {
+            let n: usize = shape.iter().product();
+            let data = match (*dtype, self.category, *name) {
+                (DType::Bool, _, _) => rng.mask_vec(n, 0.5),
+                // probabilities for BCE/KL targets
+                (_, Category::Loss, "target") if matches!(self.compute, ComputeSpec::Loss { kind: LossKind::Bce } | ComputeSpec::Loss { kind: LossKind::KlDiv }) => {
+                    rng.uniform_vec(n, 0.05, 0.95)
+                }
+                (_, Category::Loss, "pred") if matches!(self.compute, ComputeSpec::Loss { kind: LossKind::Bce }) => {
+                    rng.uniform_vec(n, 0.05, 0.95)
+                }
+                (_, Category::Loss, "pred") if matches!(self.compute, ComputeSpec::Loss { kind: LossKind::KlDiv }) => {
+                    rng.uniform_vec(n, 0.05, 0.95)
+                }
+                // large-scale logits: kernels that skip the max-rescale
+                // overflow exp() here (the cross_entropy Pass@1 failure)
+                (_, Category::Loss, "pred") if matches!(self.compute, ComputeSpec::Loss { kind: LossKind::CrossEntropy }) => {
+                    let mut v = rng.normal_vec(n);
+                    v.iter_mut().for_each(|x| *x *= 30.0);
+                    v
+                }
+                // class indices for cross-entropy targets
+                (_, Category::Loss, "target") if matches!(self.compute, ComputeSpec::Loss { kind: LossKind::CrossEntropy }) => {
+                    let classes = self.inputs[0].1[1];
+                    (0..n).map(|_| rng.uniform_usize(0, classes) as f32).collect()
+                }
+                // strictly positive for log-domain ops (cumprod and the
+                // prod reduction, whose expert kernel uses exp-sum-log)
+                (_, _, _) if matches!(
+                    self.compute,
+                    ComputeSpec::Scan { op: ScanOpKind::Prod, .. }
+                        | ComputeSpec::Reduce { kind: ReduceOpKind::Prod }
+                ) => {
+                    rng.uniform_vec(n, 0.9, 1.1)
+                }
+                // variance inputs must be positive
+                (_, _, "var") => rng.uniform_vec(n, 0.5, 2.0),
+                // second-moment / accumulator optimizer state is non-negative
+                (_, Category::Optimizer, "v") | (_, Category::Optimizer, "s") => {
+                    rng.uniform_vec(n, 0.0, 1.0)
+                }
+                (_, _, "gamma") => rng.uniform_vec(n, 0.5, 1.5),
+                (_, _, "beta") => rng.uniform_vec(n, -0.5, 0.5),
+                _ => rng.normal_vec(n),
+            };
+            m.insert(name.to_string(), Tensor::new(shape.clone(), *dtype, data));
+        }
+        for (name, shape) in &self.outputs {
+            m.insert(name.to_string(), Tensor::zeros(shape));
+        }
+        m
+    }
+
+    /// Reference (oracle) outputs for the given inputs.
+    pub fn reference(&self, tensors: &HashMap<String, Tensor>) -> HashMap<String, Tensor> {
+        super::tasks::reference(self, tensors)
+    }
+
+    /// Total elements of the primary input.
+    pub fn primary_numel(&self) -> usize {
+        self.inputs[0].1.iter().product()
+    }
+}
+
+/// Tiny deterministic string hash for per-task seeds.
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opexpr_eval_composites() {
+        // sigmoid(x) = 1 / (1 + exp(-x))
+        let sigmoid = OpExpr::div(
+            OpExpr::c(1.0),
+            OpExpr::add(OpExpr::c(1.0), OpExpr::un(UnFn::Exp, OpExpr::un(UnFn::Neg, OpExpr::input(0)))),
+        );
+        let x = 0.7f32;
+        let want = 1.0 / (1.0 + (-x).exp());
+        assert!((sigmoid.eval(&[x]) - want).abs() < 1e-6);
+        assert_eq!(sigmoid.op_count(), 4);
+        assert_eq!(sigmoid.arity(), 1);
+    }
+
+    #[test]
+    fn selectge_semantics() {
+        let e = OpExpr::SelectGe(
+            Box::new(OpExpr::input(0)),
+            Box::new(OpExpr::c(1.0)),
+            Box::new(OpExpr::c(-1.0)),
+        );
+        assert_eq!(e.eval(&[0.5]), 1.0);
+        assert_eq!(e.eval(&[0.0]), 1.0);
+        assert_eq!(e.eval(&[-0.5]), -1.0);
+    }
+
+    #[test]
+    fn make_inputs_is_deterministic() {
+        let t = crate::bench_suite::tasks::all_tasks();
+        let relu = t.iter().find(|t| t.name == "relu").unwrap();
+        let a = relu.make_inputs(42);
+        let b = relu.make_inputs(42);
+        assert_eq!(a["x"], b["x"]);
+        let c = relu.make_inputs(43);
+        assert_ne!(a["x"], c["x"]);
+    }
+
+    #[test]
+    fn outputs_are_zeroed() {
+        let t = crate::bench_suite::tasks::all_tasks();
+        let relu = t.iter().find(|t| t.name == "relu").unwrap();
+        let m = relu.make_inputs(1);
+        assert!(m["y"].data.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,18 @@
+//! L3 coordinator: the AscendCraft code-generation service.
+//!
+//! * [`pipeline`] — the end-to-end per-task driver: DSL generation →
+//!   frontend validation → four transcompilation passes with the per-pass
+//!   compile-feedback repair loop → NPU simulation → Pass@1/Fastₓ scoring.
+//! * [`service`] — a std-thread worker pool that runs many tasks
+//!   concurrently (the deployment shape: a codegen service consuming kernel
+//!   requests and emitting verified AscendC), plus suite runners for the
+//!   benchmark tables.
+//!
+//! Python never appears on this path; the JAX/PJRT golden oracle in
+//! `runtime` is an optional cross-check loaded from pre-built artifacts.
+
+pub mod pipeline;
+pub mod service;
+
+pub use pipeline::{run_task, PipelineConfig, PipelineMode};
+pub use service::{run_suite, SuiteConfig};

@@ -1,0 +1,294 @@
+//! End-to-end per-task pipeline: the paper's Figure 3 flow.
+//!
+//! ```text
+//! task ──► DSL generation (synth) ──► DSL frontend (parse+validate)
+//!      ──► transcompile passes 1–4 ──► "compile" (AscendC validator)
+//!            ▲                │ errors
+//!            └── repair ◄─────┘            (bounded feedback rounds)
+//!      ──► NPU simulation (functional+timing) ──► Pass@1 / Fastₓ scoring
+//! ```
+
+use crate::ascendc::AscProgram;
+use crate::baselines::eager::eager_cycles;
+use crate::bench_suite::metrics::TaskResult;
+use crate::bench_suite::spec::TaskSpec;
+use crate::dsl;
+use crate::sim;
+use crate::synth::{self, direct::DirectGenerator, repair, GenResult, Generator};
+use crate::transpile::{self, TranspileOptions};
+use crate::util::compare::allclose_report;
+use crate::util::tensor::Tensor;
+use std::time::Instant;
+
+/// Which generation path to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PipelineMode {
+    /// Full AscendCraft: DSL generation + 4-pass transcompilation + repair.
+    AscendCraft,
+    /// Direct AscendC generation baseline (E3).
+    Direct,
+    /// Category knowledge ablated: generic elementwise template only.
+    GenericExamples,
+}
+
+/// Pipeline configuration (ablation knobs included).
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    pub mode: PipelineMode,
+    pub options: TranspileOptions,
+    /// Max compile-feedback rounds (0 = feedback ablated off).
+    pub max_repair_rounds: usize,
+    /// Input-data seed.
+    pub seed: u64,
+    /// Simulated core count.
+    pub cores: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> PipelineConfig {
+        PipelineConfig {
+            mode: PipelineMode::AscendCraft,
+            options: TranspileOptions::default(),
+            max_repair_rounds: 4,
+            seed: 0xA5CE_17D0,
+            cores: crate::sim::cost::NUM_CORES,
+        }
+    }
+}
+
+/// Everything the pipeline produced for one task (result + artifacts).
+#[derive(Clone, Debug)]
+pub struct PipelineArtifacts {
+    pub result: TaskResult,
+    pub dsl_source: Option<String>,
+    pub program: Option<AscProgram>,
+}
+
+/// Run one task through the configured pipeline.
+pub fn run_task(task: &TaskSpec, cfg: &PipelineConfig) -> PipelineArtifacts {
+    let started = Instant::now();
+    let fail = |compiled: bool, msg: String, dsl: Option<String>, rounds: usize| PipelineArtifacts {
+        result: TaskResult {
+            name: task.name.to_string(),
+            category: task.category,
+            compiled,
+            correct: false,
+            generated_cycles: None,
+            eager_cycles: eager_cycles(task),
+            failure: Some(msg),
+            repair_rounds: rounds,
+            pipeline_secs: started.elapsed().as_secs_f64(),
+        },
+        dsl_source: dsl,
+        program: None,
+    };
+
+    let mut inputs = task.make_inputs(cfg.seed);
+
+    // --- generation stage ---
+    let (program, dsl_source, rounds) = match cfg.mode {
+        PipelineMode::Direct => {
+            let program = DirectGenerator.generate(task);
+            let env = crate::ascendc::validate::ValidateEnv::new(Default::default());
+            let errors = crate::ascendc::validate::validate_errors(&program, &env);
+            if !errors.is_empty() {
+                return fail(
+                    false,
+                    format!("direct generation failed to compile: {}", errors[0].message),
+                    None,
+                    0,
+                );
+            }
+            (program, None, 0)
+        }
+        PipelineMode::AscendCraft | PipelineMode::GenericExamples => {
+            let generator = synth::templates::KnowledgeBaseSynthesizer {
+                generic_only: cfg.mode == PipelineMode::GenericExamples,
+            };
+            let GenResult { mut dsl_source, scratch } = match generator.generate(task) {
+                Ok(r) => r,
+                Err(e) => return fail(false, format!("generation: {e}"), None, 0),
+            };
+            for (name, shape) in &scratch {
+                inputs.insert(name.clone(), Tensor::zeros(shape));
+            }
+            // DSL frontend
+            let mut dsl_program = match dsl::frontend(&dsl_source) {
+                Ok(p) => p,
+                Err(diags) => {
+                    return fail(
+                        false,
+                        format!("DSL validation: {}", diags[0].message),
+                        Some(dsl_source),
+                        0,
+                    )
+                }
+            };
+            // transcompile with per-pass correction feedback
+            let mut options = cfg.options.clone();
+            let mut rounds = 0usize;
+            let program = loop {
+                let out = match transpile::transpile(&dsl_program, &inputs, &options) {
+                    Ok(o) => o,
+                    Err(e) => return fail(false, format!("transpile: {e}"), Some(dsl_source), rounds),
+                };
+                let errors: Vec<_> =
+                    out.diagnostics.iter().filter(|d| d.is_error()).cloned().collect();
+                if errors.is_empty() {
+                    break out.program;
+                }
+                if rounds >= cfg.max_repair_rounds {
+                    return fail(
+                        false,
+                        format!("compile: {} (after {rounds} repair rounds)", errors[0].message),
+                        Some(dsl_source),
+                        rounds,
+                    );
+                }
+                match repair::propose(&errors, &dsl_source, &options) {
+                    Some(outcome) => {
+                        rounds += 1;
+                        dsl_source = outcome.dsl_source;
+                        options = outcome.options;
+                        dsl_program = match dsl::frontend(&dsl_source) {
+                            Ok(p) => p,
+                            Err(diags) => {
+                                return fail(
+                                    false,
+                                    format!("repaired DSL invalid: {}", diags[0].message),
+                                    Some(dsl_source),
+                                    rounds,
+                                )
+                            }
+                        };
+                    }
+                    None => {
+                        return fail(
+                            false,
+                            format!("compile: {} (no repair rule)", errors[0].message),
+                            Some(dsl_source),
+                            rounds,
+                        )
+                    }
+                }
+            };
+            (program, Some(dsl_source), rounds)
+        }
+    };
+
+    // --- execution + scoring ---
+    // reference first (it only reads inputs), then move the tensors into
+    // the simulator without an extra GM-sized clone (§Perf P5)
+    let reference = task.reference(&inputs);
+    let sim_out = match sim::simulate_owned(&program, inputs, cfg.cores) {
+        Ok(o) => o,
+        Err(e) => {
+            let mut art = fail(true, format!("simulation: {e}"), dsl_source.clone(), rounds);
+            art.program = Some(program);
+            return art;
+        }
+    };
+    let mut correct = true;
+    let mut failure = None;
+    for (name, want) in &reference {
+        let Some(got) = sim_out.tensors.get(name) else {
+            correct = false;
+            failure = Some(format!("output '{name}' missing"));
+            break;
+        };
+        if got.shape != want.shape {
+            correct = false;
+            failure = Some(format!(
+                "output '{name}' shape {:?} != reference {:?}",
+                got.shape, want.shape
+            ));
+            break;
+        }
+        let rep = allclose_report(got, want, task.rtol, task.atol);
+        if !rep.ok {
+            correct = false;
+            failure = Some(format!("output '{name}': {}", rep.summary()));
+            break;
+        }
+    }
+
+    PipelineArtifacts {
+        result: TaskResult {
+            name: task.name.to_string(),
+            category: task.category,
+            compiled: true,
+            correct,
+            generated_cycles: Some(sim_out.timing.total_cycles),
+            eager_cycles: eager_cycles(task),
+            failure,
+            repair_rounds: rounds,
+            pipeline_secs: started.elapsed().as_secs_f64(),
+        },
+        dsl_source,
+        program: Some(program),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite::tasks::task_by_name;
+
+    fn run(name: &str) -> PipelineArtifacts {
+        run_task(&task_by_name(name).unwrap(), &PipelineConfig::default())
+    }
+
+    #[test]
+    fn relu_end_to_end() {
+        let art = run("relu");
+        assert!(art.result.compiled, "{:?}", art.result.failure);
+        assert!(art.result.correct, "{:?}", art.result.failure);
+        assert!(art.result.generated_cycles.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn softmax_end_to_end() {
+        let art = run("softmax");
+        assert!(art.result.correct, "{:?}", art.result.failure);
+    }
+
+    #[test]
+    fn mse_loss_multi_kernel_end_to_end() {
+        let art = run("mse_loss");
+        assert!(art.result.correct, "{:?}", art.result.failure);
+        // two kernels: partial + combine
+        assert_eq!(art.program.unwrap().kernels.len(), 2);
+    }
+
+    #[test]
+    fn adam_repairs_ub_oversubscription() {
+        let art = run("adam");
+        assert!(art.result.correct, "{:?}", art.result.failure);
+        assert!(art.result.repair_rounds >= 1, "adam should trip the UB budget");
+    }
+
+    #[test]
+    fn mask_cumsum_fails_to_compile() {
+        let art = run("mask_cumsum");
+        assert!(!art.result.compiled);
+        let msg = art.result.failure.unwrap();
+        assert!(msg.contains("bool") || msg.contains("A40"), "{msg}");
+    }
+
+    #[test]
+    fn cross_entropy_fails_numerically() {
+        let art = run("cross_entropy");
+        assert!(art.result.compiled, "{:?}", art.result.failure);
+        assert!(!art.result.correct, "fused log-softmax without rescale must overflow");
+    }
+
+    #[test]
+    fn direct_mode_fails_on_complex_tasks() {
+        let cfg = PipelineConfig { mode: PipelineMode::Direct, ..Default::default() };
+        let art = run_task(&task_by_name("softmax").unwrap(), &cfg);
+        assert!(!art.result.compiled);
+        let art = run_task(&task_by_name("relu").unwrap(), &cfg);
+        assert!(art.result.compiled);
+        assert!(art.result.correct, "{:?}", art.result.failure);
+    }
+}

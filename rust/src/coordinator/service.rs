@@ -1,0 +1,121 @@
+//! Codegen service: a worker pool that runs many kernel-generation jobs
+//! concurrently and aggregates suite results. This is the deployment shape
+//! of AscendCraft — a service that takes kernel requests (task specs) and
+//! returns verified AscendC — scaled down to std threads (tokio is not in
+//! the offline crate set; generation jobs are CPU-bound anyway).
+
+use super::pipeline::{run_task, PipelineArtifacts, PipelineConfig};
+use crate::bench_suite::metrics::SuiteResult;
+use crate::bench_suite::spec::TaskSpec;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// Suite-run configuration.
+#[derive(Clone, Debug)]
+pub struct SuiteConfig {
+    pub pipeline: PipelineConfig,
+    pub workers: usize,
+    /// Print one line per finished task.
+    pub verbose: bool,
+}
+
+impl Default for SuiteConfig {
+    fn default() -> SuiteConfig {
+        SuiteConfig {
+            pipeline: PipelineConfig::default(),
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            verbose: false,
+        }
+    }
+}
+
+/// Run a set of tasks on the worker pool; results come back in task order.
+pub fn run_suite(tasks: &[TaskSpec], cfg: &SuiteConfig) -> SuiteResult {
+    let artifacts = run_suite_artifacts(tasks, cfg);
+    SuiteResult { results: artifacts.into_iter().map(|a| a.result).collect() }
+}
+
+/// Like [`run_suite`] but keeps the generated DSL/AscendC artifacts.
+pub fn run_suite_artifacts(tasks: &[TaskSpec], cfg: &SuiteConfig) -> Vec<PipelineArtifacts> {
+    let n = tasks.len();
+    let next = Arc::new(Mutex::new(0usize));
+    let (tx, rx) = mpsc::channel::<(usize, PipelineArtifacts)>();
+
+    std::thread::scope(|scope| {
+        for _ in 0..cfg.workers.max(1).min(n.max(1)) {
+            let next = Arc::clone(&next);
+            let tx = tx.clone();
+            let pipeline = cfg.pipeline.clone();
+            let verbose = cfg.verbose;
+            scope.spawn(move || loop {
+                let idx = {
+                    let mut guard = next.lock().unwrap();
+                    if *guard >= n {
+                        return;
+                    }
+                    let i = *guard;
+                    *guard += 1;
+                    i
+                };
+                let art = run_task(&tasks[idx], &pipeline);
+                if verbose {
+                    let r = &art.result;
+                    let status = if r.correct {
+                        format!("pass  {:>7.2}x", r.speedup().unwrap_or(0.0))
+                    } else if r.compiled {
+                        "WRONG     ".to_string()
+                    } else {
+                        "NOCOMPILE ".to_string()
+                    };
+                    eprintln!(
+                        "[{:>2}/{n}] {:<18} {status}  ({} repairs, {:.2}s)",
+                        idx + 1,
+                        r.name,
+                        r.repair_rounds,
+                        r.pipeline_secs
+                    );
+                }
+                let _ = tx.send((idx, art));
+            });
+        }
+        drop(tx);
+        let mut out: Vec<Option<PipelineArtifacts>> = (0..n).map(|_| None).collect();
+        for (idx, art) in rx {
+            out[idx] = Some(art);
+        }
+        out.into_iter().map(|a| a.expect("worker dropped a task")).collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite::tasks::task_by_name;
+
+    #[test]
+    fn suite_runs_in_parallel_and_preserves_order() {
+        let tasks: Vec<_> = ["relu", "tanh_act", "softsign", "relu6"]
+            .iter()
+            .map(|n| task_by_name(n).unwrap())
+            .collect();
+        let cfg = SuiteConfig { workers: 4, ..Default::default() };
+        let suite = run_suite(&tasks, &cfg);
+        assert_eq!(suite.results.len(), 4);
+        for (t, r) in tasks.iter().zip(&suite.results) {
+            assert_eq!(t.name, r.name);
+            assert!(r.correct, "{}: {:?}", r.name, r.failure);
+        }
+    }
+
+    #[test]
+    fn single_worker_matches_parallel() {
+        let tasks: Vec<_> =
+            ["relu", "sigmoid"].iter().map(|n| task_by_name(n).unwrap()).collect();
+        let a = run_suite(&tasks, &SuiteConfig { workers: 1, ..Default::default() });
+        let b = run_suite(&tasks, &SuiteConfig { workers: 2, ..Default::default() });
+        for (x, y) in a.results.iter().zip(&b.results) {
+            assert_eq!(x.correct, y.correct);
+            assert_eq!(x.generated_cycles, y.generated_cycles);
+        }
+    }
+}

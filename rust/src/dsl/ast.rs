@@ -1,0 +1,308 @@
+//! Abstract syntax tree for the AscendCraft DSL (paper §3, Figure 2).
+//!
+//! A `DslProgram` is one `@ascend_kernel` function plus one host function.
+//! Kernel bodies are statement lists with three distinguished `with` stages
+//! (`tl.copyin()`, `tl.compute()`, `tl.copyout()`); host bodies are scalar
+//! planning code ending in a `kernel[n_cores](...)` launch.
+
+use crate::util::tensor::DType;
+
+/// Execution stage of a `with tl.<stage>():` block — the paper's staged
+/// execution model, preserved all the way into AscendC stage functions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Stage {
+    CopyIn,
+    Compute,
+    CopyOut,
+}
+
+impl Stage {
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::CopyIn => "copyin",
+            Stage::Compute => "compute",
+            Stage::CopyOut => "copyout",
+        }
+    }
+}
+
+/// Binary operators on scalars (host + kernel index arithmetic).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,      // float division
+    FloorDiv, // //
+    Mod,
+    Pow,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Eq,
+    Ne,
+    And,
+    Or,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UnOp {
+    Neg,
+    Not,
+}
+
+/// Expressions. The DSL deliberately keeps one expression grammar for both
+/// host and kernel; validation decides which calls are legal where.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Expr {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    /// Variable reference (`tile_length`) or dotted name (`tl.float32`,
+    /// `x.shape`) — dotted paths are kept as a joined name for simplicity.
+    Name(String),
+    /// Binary operation.
+    Bin(BinOp, Box<Expr>, Box<Expr>),
+    Un(UnOp, Box<Expr>),
+    /// Function call: callee is a dotted name (`tl.load`, `min`, `range`).
+    Call { func: String, args: Vec<Expr>, kwargs: Vec<(String, Expr)> },
+    /// Subscript `base[index]` (e.g. `x.shape[0]`, `buf[i]`).
+    Index { base: Box<Expr>, index: Box<Expr> },
+}
+
+impl Expr {
+    pub fn call(func: &str, args: Vec<Expr>) -> Expr {
+        Expr::Call { func: func.to_string(), args, kwargs: vec![] }
+    }
+
+    pub fn name(n: &str) -> Expr {
+        Expr::Name(n.to_string())
+    }
+
+    /// Walk every sub-expression (including self), calling `f`.
+    pub fn walk(&self, f: &mut impl FnMut(&Expr)) {
+        f(self);
+        match self {
+            Expr::Bin(_, a, b) => {
+                a.walk(f);
+                b.walk(f);
+            }
+            Expr::Un(_, a) => a.walk(f),
+            Expr::Call { args, kwargs, .. } => {
+                for a in args {
+                    a.walk(f);
+                }
+                for (_, v) in kwargs {
+                    v.walk(f);
+                }
+            }
+            Expr::Index { base, index } => {
+                base.walk(f);
+                index.walk(f);
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Statements.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Stmt {
+    /// `name = expr` — also covers `buf = tl.alloc_ub(...)`.
+    Assign { target: String, value: Expr, line: usize },
+    /// Augmented assignment `x += e` etc., desugared op retained.
+    AugAssign { target: String, op: BinOp, value: Expr, line: usize },
+    /// `for var in range(start, end[, step]):`
+    For { var: String, start: Expr, end: Expr, step: Option<Expr>, body: Vec<Stmt>, line: usize },
+    /// `while cond:` (used rarely; kept for expressiveness)
+    While { cond: Expr, body: Vec<Stmt>, line: usize },
+    /// `if cond: ... [elif/else ...]` — elif chains are nested If in else.
+    If { cond: Expr, then: Vec<Stmt>, orelse: Vec<Stmt>, line: usize },
+    /// `with tl.copyin():` etc.
+    WithStage { stage: Stage, body: Vec<Stmt>, line: usize },
+    /// Bare call expression statement (`tl.store(...)`).
+    ExprStmt { expr: Expr, line: usize },
+    /// `kernel_name[grid_expr](arg, ...)` — host-side launch.
+    Launch { kernel: String, grid: Expr, args: Vec<Expr>, line: usize },
+    /// `pass`
+    Pass { line: usize },
+    /// `return expr?` (host only)
+    Return { value: Option<Expr>, line: usize },
+}
+
+impl Stmt {
+    pub fn line(&self) -> usize {
+        match self {
+            Stmt::Assign { line, .. }
+            | Stmt::AugAssign { line, .. }
+            | Stmt::For { line, .. }
+            | Stmt::While { line, .. }
+            | Stmt::If { line, .. }
+            | Stmt::WithStage { line, .. }
+            | Stmt::ExprStmt { line, .. }
+            | Stmt::Launch { line, .. }
+            | Stmt::Pass { line }
+            | Stmt::Return { line, .. } => *line,
+        }
+    }
+
+    /// Recursively visit this statement and all nested statements.
+    pub fn walk(&self, f: &mut impl FnMut(&Stmt)) {
+        f(self);
+        match self {
+            Stmt::For { body, .. } | Stmt::While { body, .. } | Stmt::WithStage { body, .. } => {
+                for s in body {
+                    s.walk(f);
+                }
+            }
+            Stmt::If { then, orelse, .. } => {
+                for s in then {
+                    s.walk(f);
+                }
+                for s in orelse {
+                    s.walk(f);
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// A kernel parameter. Pointer parameters are global-tensor handles; scalar
+/// parameters carry tiling values from the host.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Param {
+    pub name: String,
+}
+
+/// The `@ascend_kernel` function.
+#[derive(Clone, Debug, PartialEq)]
+pub struct KernelFn {
+    pub name: String,
+    pub params: Vec<Param>,
+    pub body: Vec<Stmt>,
+    pub line: usize,
+}
+
+/// The host function.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostFn {
+    pub name: String,
+    pub params: Vec<Param>,
+    pub body: Vec<Stmt>,
+    pub line: usize,
+}
+
+/// A complete DSL program.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DslProgram {
+    pub kernel: KernelFn,
+    pub host: HostFn,
+    /// Additional kernels (multi-kernel programs, e.g. two-phase reductions
+    /// with a cross-core combine kernel).
+    pub extra_kernels: Vec<KernelFn>,
+}
+
+impl DslProgram {
+    /// All kernels, primary first.
+    pub fn kernels(&self) -> impl Iterator<Item = &KernelFn> {
+        std::iter::once(&self.kernel).chain(self.extra_kernels.iter())
+    }
+
+    pub fn kernel_by_name(&self, name: &str) -> Option<&KernelFn> {
+        self.kernels().find(|k| k.name == name)
+    }
+}
+
+/// Buffer allocation kinds in the kernel (`tl.alloc_ub` / `tl.alloc_l1`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllocKind {
+    Ub,
+    L1,
+}
+
+/// Recognize a buffer-allocation call; returns (kind, length expr, dtype).
+pub fn as_alloc(expr: &Expr) -> Option<(AllocKind, &Expr, DType)> {
+    if let Expr::Call { func, args, kwargs } = expr {
+        let kind = match func.as_str() {
+            "tl.alloc_ub" => AllocKind::Ub,
+            "tl.alloc_l1" => AllocKind::L1,
+            _ => return None,
+        };
+        let len = args.first()?;
+        let dtype = kwargs
+            .iter()
+            .find(|(k, _)| k == "dtype")
+            .and_then(|(_, v)| match v {
+                Expr::Name(n) => DType::parse_dsl(n),
+                _ => None,
+            })
+            .unwrap_or(DType::F32);
+        return Some((kind, len, dtype));
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_names() {
+        assert_eq!(Stage::CopyIn.name(), "copyin");
+        assert_eq!(Stage::Compute.name(), "compute");
+        assert_eq!(Stage::CopyOut.name(), "copyout");
+    }
+
+    #[test]
+    fn as_alloc_recognizes_ub() {
+        let e = Expr::Call {
+            func: "tl.alloc_ub".into(),
+            args: vec![Expr::Name("tile_length".into())],
+            kwargs: vec![("dtype".into(), Expr::Name("tl.float16".into()))],
+        };
+        let (kind, len, dtype) = as_alloc(&e).unwrap();
+        assert_eq!(kind, AllocKind::Ub);
+        assert_eq!(len, &Expr::Name("tile_length".into()));
+        assert_eq!(dtype, DType::F16);
+    }
+
+    #[test]
+    fn as_alloc_defaults_to_f32() {
+        let e = Expr::call("tl.alloc_ub", vec![Expr::Int(128)]);
+        let (_, _, dtype) = as_alloc(&e).unwrap();
+        assert_eq!(dtype, DType::F32);
+    }
+
+    #[test]
+    fn as_alloc_rejects_other_calls() {
+        let e = Expr::call("tl.load", vec![]);
+        assert!(as_alloc(&e).is_none());
+    }
+
+    #[test]
+    fn expr_walk_visits_all() {
+        let e = Expr::Bin(
+            BinOp::Add,
+            Box::new(Expr::call("f", vec![Expr::Int(1)])),
+            Box::new(Expr::Index { base: Box::new(Expr::name("x")), index: Box::new(Expr::Int(0)) }),
+        );
+        let mut n = 0;
+        e.walk(&mut |_| n += 1);
+        assert_eq!(n, 6);
+    }
+
+    #[test]
+    fn stmt_walk_recurses_into_stage() {
+        let s = Stmt::WithStage {
+            stage: Stage::Compute,
+            body: vec![Stmt::Pass { line: 2 }],
+            line: 1,
+        };
+        let mut lines = vec![];
+        s.walk(&mut |st| lines.push(st.line()));
+        assert_eq!(lines, vec![1, 2]);
+    }
+}

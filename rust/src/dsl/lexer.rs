@@ -1,0 +1,507 @@
+//! Indentation-aware lexer for the AscendCraft DSL.
+//!
+//! Produces a flat token stream with explicit `Indent` / `Dedent` tokens in
+//! the Python style: at the start of each logical line, the leading-space
+//! count is compared against the indent stack. Blank lines and `#` comments
+//! are skipped. Line continuations inside brackets are handled by tracking
+//! bracket depth (like Python's implicit joining).
+
+use std::fmt;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tok {
+    // structure
+    Newline,
+    Indent,
+    Dedent,
+    // words
+    Ident(String),
+    Int(i64),
+    Float(f64),
+    Str(String),
+    // keywords
+    Def,
+    For,
+    While,
+    If,
+    Elif,
+    Else,
+    With,
+    Return,
+    In,
+    Range,
+    Import,
+    As,
+    Pass,
+    And,
+    Or,
+    Not,
+    True,
+    False,
+    None_,
+    // punctuation / operators
+    At,        // @
+    LParen,
+    RParen,
+    LBracket,
+    RBracket,
+    Colon,
+    Comma,
+    Dot,
+    Assign,    // =
+    PlusEq,
+    MinusEq,
+    TimesEq,
+    DivEq,
+    Plus,
+    Minus,
+    Star,
+    StarStar,
+    Slash,
+    SlashSlash,
+    Percent,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    EqEq,
+    NotEq,
+    Arrow, // ->
+    Eof,
+}
+
+impl fmt::Display for Tok {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Tok::Ident(s) => write!(f, "identifier '{s}'"),
+            Tok::Int(v) => write!(f, "int {v}"),
+            Tok::Float(v) => write!(f, "float {v}"),
+            Tok::Str(s) => write!(f, "string {s:?}"),
+            other => write!(f, "{other:?}"),
+        }
+    }
+}
+
+/// A token plus its source line (1-based) for diagnostics.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Token {
+    pub tok: Tok,
+    pub line: usize,
+}
+
+/// Lexing error with location.
+#[derive(Clone, Debug)]
+pub struct LexError {
+    pub message: String,
+    pub line: usize,
+}
+
+impl fmt::Display for LexError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for LexError {}
+
+pub fn lex(source: &str) -> Result<Vec<Token>, LexError> {
+    let mut tokens = Vec::new();
+    let mut indents: Vec<usize> = vec![0];
+    let mut bracket_depth = 0usize;
+    let mut pending_line = false; // have we emitted any token on this logical line?
+
+    for (line_no, raw_line) in source.lines().enumerate() {
+        let line_no = line_no + 1;
+        let line = raw_line;
+        // Strip comments outside of strings (the DSL has no '#' in strings
+        // we care about; keep it simple but respect quotes).
+        let code = strip_comment(line);
+        if bracket_depth == 0 {
+            if code.trim().is_empty() {
+                continue; // blank or comment-only line
+            }
+            // indentation handling
+            let indent = code.len() - code.trim_start_matches(' ').len();
+            if code.as_bytes().first() == Some(&b'\t') {
+                return Err(LexError { message: "tabs are not allowed for indentation".into(), line: line_no });
+            }
+            if pending_line {
+                tokens.push(Token { tok: Tok::Newline, line: line_no });
+            }
+            let current = *indents.last().unwrap();
+            if indent > current {
+                indents.push(indent);
+                tokens.push(Token { tok: Tok::Indent, line: line_no });
+            } else if indent < current {
+                while *indents.last().unwrap() > indent {
+                    indents.pop();
+                    tokens.push(Token { tok: Tok::Dedent, line: line_no });
+                }
+                if *indents.last().unwrap() != indent {
+                    return Err(LexError {
+                        message: format!("unindent to {indent} does not match any outer level"),
+                        line: line_no,
+                    });
+                }
+            }
+        }
+        lex_line(code.trim_start_matches(' '), line_no, &mut tokens, &mut bracket_depth)?;
+        pending_line = true;
+    }
+    if pending_line {
+        tokens.push(Token { tok: Tok::Newline, line: source.lines().count() });
+    }
+    while indents.len() > 1 {
+        indents.pop();
+        tokens.push(Token { tok: Tok::Dedent, line: source.lines().count() });
+    }
+    tokens.push(Token { tok: Tok::Eof, line: source.lines().count() });
+    Ok(tokens)
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str: Option<char> = None;
+    for (i, c) in line.char_indices() {
+        match (in_str, c) {
+            (None, '#') => return &line[..i],
+            (None, '"') | (None, '\'') => in_str = Some(c),
+            (Some(q), c) if c == q => in_str = None,
+            _ => {}
+        }
+    }
+    line
+}
+
+fn keyword(word: &str) -> Option<Tok> {
+    Some(match word {
+        "def" => Tok::Def,
+        "for" => Tok::For,
+        "while" => Tok::While,
+        "if" => Tok::If,
+        "elif" => Tok::Elif,
+        "else" => Tok::Else,
+        "with" => Tok::With,
+        "return" => Tok::Return,
+        "in" => Tok::In,
+        "range" => Tok::Range,
+        "import" => Tok::Import,
+        "as" => Tok::As,
+        "pass" => Tok::Pass,
+        "and" => Tok::And,
+        "or" => Tok::Or,
+        "not" => Tok::Not,
+        "True" => Tok::True,
+        "False" => Tok::False,
+        "None" => Tok::None_,
+        _ => return None,
+    })
+}
+
+fn lex_line(
+    code: &str,
+    line_no: usize,
+    tokens: &mut Vec<Token>,
+    bracket_depth: &mut usize,
+) -> Result<(), LexError> {
+    let bytes = code.as_bytes();
+    let mut i = 0usize;
+    let push = |tokens: &mut Vec<Token>, tok: Tok| tokens.push(Token { tok, line: line_no });
+    while i < bytes.len() {
+        let c = bytes[i] as char;
+        match c {
+            ' ' => {
+                i += 1;
+            }
+            '0'..='9' => {
+                let start = i;
+                let mut is_float = false;
+                while i < bytes.len()
+                    && (bytes[i].is_ascii_digit()
+                        || bytes[i] == b'.'
+                        || bytes[i] == b'e'
+                        || bytes[i] == b'E'
+                        || ((bytes[i] == b'+' || bytes[i] == b'-')
+                            && i > start
+                            && (bytes[i - 1] == b'e' || bytes[i - 1] == b'E')))
+                {
+                    if bytes[i] == b'.' || bytes[i] == b'e' || bytes[i] == b'E' {
+                        is_float = true;
+                    }
+                    i += 1;
+                }
+                let text = &code[start..i];
+                if is_float {
+                    let v: f64 = text.parse().map_err(|_| LexError {
+                        message: format!("bad float literal '{text}'"),
+                        line: line_no,
+                    })?;
+                    push(tokens, Tok::Float(v));
+                } else {
+                    let v: i64 = text.parse().map_err(|_| LexError {
+                        message: format!("bad int literal '{text}'"),
+                        line: line_no,
+                    })?;
+                    push(tokens, Tok::Int(v));
+                }
+            }
+            'a'..='z' | 'A'..='Z' | '_' => {
+                let start = i;
+                while i < bytes.len() && (bytes[i].is_ascii_alphanumeric() || bytes[i] == b'_') {
+                    i += 1;
+                }
+                let word = &code[start..i];
+                match keyword(word) {
+                    Some(k) => push(tokens, k),
+                    None => push(tokens, Tok::Ident(word.to_string())),
+                }
+            }
+            '"' | '\'' => {
+                let quote = c;
+                let start = i + 1;
+                i += 1;
+                while i < bytes.len() && bytes[i] as char != quote {
+                    i += 1;
+                }
+                if i >= bytes.len() {
+                    return Err(LexError { message: "unterminated string".into(), line: line_no });
+                }
+                push(tokens, Tok::Str(code[start..i].to_string()));
+                i += 1;
+            }
+            '@' => {
+                push(tokens, Tok::At);
+                i += 1;
+            }
+            '(' => {
+                *bracket_depth += 1;
+                push(tokens, Tok::LParen);
+                i += 1;
+            }
+            ')' => {
+                *bracket_depth = bracket_depth.saturating_sub(1);
+                push(tokens, Tok::RParen);
+                i += 1;
+            }
+            '[' => {
+                *bracket_depth += 1;
+                push(tokens, Tok::LBracket);
+                i += 1;
+            }
+            ']' => {
+                *bracket_depth = bracket_depth.saturating_sub(1);
+                push(tokens, Tok::RBracket);
+                i += 1;
+            }
+            ':' => {
+                push(tokens, Tok::Colon);
+                i += 1;
+            }
+            ',' => {
+                push(tokens, Tok::Comma);
+                i += 1;
+            }
+            '.' => {
+                push(tokens, Tok::Dot);
+                i += 1;
+            }
+            '+' => {
+                if bytes.get(i + 1) == Some(&b'=') {
+                    push(tokens, Tok::PlusEq);
+                    i += 2;
+                } else {
+                    push(tokens, Tok::Plus);
+                    i += 1;
+                }
+            }
+            '-' => {
+                if bytes.get(i + 1) == Some(&b'=') {
+                    push(tokens, Tok::MinusEq);
+                    i += 2;
+                } else if bytes.get(i + 1) == Some(&b'>') {
+                    push(tokens, Tok::Arrow);
+                    i += 2;
+                } else {
+                    push(tokens, Tok::Minus);
+                    i += 1;
+                }
+            }
+            '*' => {
+                if bytes.get(i + 1) == Some(&b'*') {
+                    push(tokens, Tok::StarStar);
+                    i += 2;
+                } else if bytes.get(i + 1) == Some(&b'=') {
+                    push(tokens, Tok::TimesEq);
+                    i += 2;
+                } else {
+                    push(tokens, Tok::Star);
+                    i += 1;
+                }
+            }
+            '/' => {
+                if bytes.get(i + 1) == Some(&b'/') {
+                    push(tokens, Tok::SlashSlash);
+                    i += 2;
+                } else if bytes.get(i + 1) == Some(&b'=') {
+                    push(tokens, Tok::DivEq);
+                    i += 2;
+                } else {
+                    push(tokens, Tok::Slash);
+                    i += 1;
+                }
+            }
+            '%' => {
+                push(tokens, Tok::Percent);
+                i += 1;
+            }
+            '<' => {
+                if bytes.get(i + 1) == Some(&b'=') {
+                    push(tokens, Tok::Le);
+                    i += 2;
+                } else {
+                    push(tokens, Tok::Lt);
+                    i += 1;
+                }
+            }
+            '>' => {
+                if bytes.get(i + 1) == Some(&b'=') {
+                    push(tokens, Tok::Ge);
+                    i += 2;
+                } else {
+                    push(tokens, Tok::Gt);
+                    i += 1;
+                }
+            }
+            '=' => {
+                if bytes.get(i + 1) == Some(&b'=') {
+                    push(tokens, Tok::EqEq);
+                    i += 2;
+                } else {
+                    push(tokens, Tok::Assign);
+                    i += 1;
+                }
+            }
+            '!' => {
+                if bytes.get(i + 1) == Some(&b'=') {
+                    push(tokens, Tok::NotEq);
+                    i += 2;
+                } else {
+                    return Err(LexError { message: "unexpected '!'".into(), line: line_no });
+                }
+            }
+            '\t' => {
+                i += 1; // interior tabs treated as spaces
+            }
+            other => {
+                return Err(LexError {
+                    message: format!("unexpected character '{other}'"),
+                    line: line_no,
+                });
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<Tok> {
+        lex(src).unwrap().into_iter().map(|t| t.tok).collect()
+    }
+
+    #[test]
+    fn lex_simple_assignment() {
+        let toks = kinds("x = 1 + 2.5");
+        assert_eq!(
+            toks,
+            vec![
+                Tok::Ident("x".into()),
+                Tok::Assign,
+                Tok::Int(1),
+                Tok::Plus,
+                Tok::Float(2.5),
+                Tok::Newline,
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn indent_dedent_pairs() {
+        let src = "def f():\n    x = 1\n    y = 2\nz = 3\n";
+        let toks = kinds(src);
+        let indents = toks.iter().filter(|t| **t == Tok::Indent).count();
+        let dedents = toks.iter().filter(|t| **t == Tok::Dedent).count();
+        assert_eq!(indents, 1);
+        assert_eq!(dedents, 1);
+    }
+
+    #[test]
+    fn nested_indentation() {
+        let src = "def f():\n    for i in range(3):\n        x = i\n";
+        let toks = kinds(src);
+        let indents = toks.iter().filter(|t| **t == Tok::Indent).count();
+        let dedents = toks.iter().filter(|t| **t == Tok::Dedent).count();
+        assert_eq!(indents, 2);
+        assert_eq!(dedents, 2); // closed at EOF
+    }
+
+    #[test]
+    fn comments_and_blank_lines_skipped() {
+        let src = "# header\n\nx = 1  # trailing\n\n";
+        let toks = kinds(src);
+        assert_eq!(toks, vec![Tok::Ident("x".into()), Tok::Assign, Tok::Int(1), Tok::Newline, Tok::Eof]);
+    }
+
+    #[test]
+    fn bracket_continuation_joins_lines() {
+        let src = "x = f(1,\n      2)\ny = 3\n";
+        let toks = kinds(src);
+        // only two logical lines -> two Newlines
+        assert_eq!(toks.iter().filter(|t| **t == Tok::Newline).count(), 2);
+        assert_eq!(toks.iter().filter(|t| **t == Tok::Indent).count(), 0);
+    }
+
+    #[test]
+    fn operators() {
+        let toks = kinds("a // b % c ** d != e <= f");
+        assert!(toks.contains(&Tok::SlashSlash));
+        assert!(toks.contains(&Tok::Percent));
+        assert!(toks.contains(&Tok::StarStar));
+        assert!(toks.contains(&Tok::NotEq));
+        assert!(toks.contains(&Tok::Le));
+    }
+
+    #[test]
+    fn decorator_and_subscript() {
+        let toks = kinds("@ascend_kernel\ndef k():\n    pass\n");
+        assert_eq!(toks[0], Tok::At);
+        assert_eq!(toks[1], Tok::Ident("ascend_kernel".into()));
+    }
+
+    #[test]
+    fn float_with_exponent() {
+        let toks = kinds("x = -1e30");
+        assert!(toks.contains(&Tok::Float(1e30)));
+        assert!(toks.contains(&Tok::Minus));
+    }
+
+    #[test]
+    fn bad_unindent_is_error() {
+        let src = "def f():\n    x = 1\n  y = 2\n";
+        assert!(lex(src).is_err());
+    }
+
+    #[test]
+    fn unterminated_string_is_error() {
+        assert!(lex("x = \"abc").is_err());
+    }
+
+    #[test]
+    fn line_numbers_recorded() {
+        let toks = lex("a = 1\nb = 2\n").unwrap();
+        let b = toks.iter().find(|t| t.tok == Tok::Ident("b".into())).unwrap();
+        assert_eq!(b.line, 2);
+    }
+}

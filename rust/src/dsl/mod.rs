@@ -1,0 +1,38 @@
+//! The AscendCraft DSL frontend (paper §3).
+//!
+//! The DSL is a restricted, indentation-sensitive Python subset in the style
+//! of the paper's Figure 2: a program is a `@ascend_kernel` kernel function
+//! plus a host function. The kernel expresses on-chip behaviour — explicit
+//! `tl.alloc_ub` buffer allocation and staged `with tl.copyin(): /
+//! tl.compute(): / tl.copyout():` blocks — while the host expresses global
+//! planning: core partitioning, tiling strategy, and the launch
+//! `kernel[n_cores](...)`.
+//!
+//! Pipeline: [`lexer`] → [`parser`] → [`ast`] → [`validate`] (staging rules,
+//! explicit allocation, no implicit aliasing) → consumed by
+//! `transpile` (lowering to AscendC) and `synth` (example library).
+
+pub mod ast;
+pub mod lexer;
+pub mod parser;
+pub mod printer;
+pub mod validate;
+
+pub use ast::{DslProgram, HostFn, KernelFn};
+pub use parser::parse_program;
+pub use validate::{validate_program, DslDiagnostic};
+
+/// Parse + semantically validate DSL source. This is the "does the DSL
+/// program even make sense" gate that the synthesizer's output must pass
+/// before transcompilation begins.
+pub fn frontend(source: &str) -> Result<DslProgram, Vec<DslDiagnostic>> {
+    let program = parser::parse_program(source).map_err(|e| {
+        vec![DslDiagnostic { code: "P000".into(), message: e.to_string(), line: e.line }]
+    })?;
+    let diags = validate::validate_program(&program);
+    if diags.is_empty() {
+        Ok(program)
+    } else {
+        Err(diags)
+    }
+}

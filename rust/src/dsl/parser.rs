@@ -1,0 +1,786 @@
+//! Recursive-descent parser for the AscendCraft DSL.
+//!
+//! Grammar (informal):
+//! ```text
+//! program   := (import | kernel_def | host_def)*
+//! kernel_def:= '@' 'ascend_kernel' NEWLINE 'def' IDENT '(' params ')' ':' block
+//! host_def  := 'def' IDENT '(' params ')' ':' block
+//! block     := NEWLINE INDENT stmt+ DEDENT
+//! stmt      := assign | augassign | for | while | if | with_stage
+//!            | launch | expr_stmt | 'pass' | 'return' [expr]
+//! for       := 'for' IDENT 'in' 'range' '(' expr [',' expr [',' expr]] ')' ':' block
+//! with_stage:= 'with' ('tl.copyin'|'tl.compute'|'tl.copyout') '(' ')' ':' block
+//! launch    := IDENT '[' expr ']' '(' exprlist ')'
+//! ```
+//! Expressions use Python precedence: `or < and < not < comparison <
+//! add/sub < mul/div/floordiv/mod < unary < power < postfix`.
+
+use super::ast::*;
+use super::lexer::{lex, Tok, Token};
+use std::fmt;
+
+#[derive(Clone, Debug)]
+pub struct ParseError {
+    pub message: String,
+    pub line: usize,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "parse error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+pub fn parse_program(source: &str) -> Result<DslProgram, ParseError> {
+    let tokens =
+        lex(source).map_err(|e| ParseError { message: e.message, line: e.line })?;
+    Parser { tokens, pos: 0 }.program()
+}
+
+struct Parser {
+    tokens: Vec<Token>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> &Tok {
+        &self.tokens[self.pos].tok
+    }
+
+    fn peek2(&self) -> &Tok {
+        self.tokens.get(self.pos + 1).map(|t| &t.tok).unwrap_or(&Tok::Eof)
+    }
+
+    fn line(&self) -> usize {
+        self.tokens[self.pos].line
+    }
+
+    fn bump(&mut self) -> Tok {
+        let t = self.tokens[self.pos].tok.clone();
+        if self.pos + 1 < self.tokens.len() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn eat(&mut self, tok: &Tok) -> bool {
+        if self.peek() == tok {
+            self.bump();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect(&mut self, tok: Tok) -> Result<(), ParseError> {
+        if self.peek() == &tok {
+            self.bump();
+            Ok(())
+        } else {
+            Err(self.err(format!("expected {tok}, found {}", self.peek())))
+        }
+    }
+
+    fn err(&self, message: String) -> ParseError {
+        ParseError { message, line: self.line() }
+    }
+
+    fn ident(&mut self) -> Result<String, ParseError> {
+        match self.bump() {
+            Tok::Ident(s) => Ok(s),
+            other => Err(ParseError {
+                message: format!("expected identifier, found {other}"),
+                line: self.tokens[self.pos.saturating_sub(1)].line,
+            }),
+        }
+    }
+
+    /// Dotted name: IDENT ('.' IDENT)* joined with '.'.
+    fn dotted_name(&mut self) -> Result<String, ParseError> {
+        let mut name = self.ident()?;
+        while self.peek() == &Tok::Dot {
+            self.bump();
+            name.push('.');
+            name.push_str(&self.ident()?);
+        }
+        Ok(name)
+    }
+
+    fn program(&mut self) -> Result<DslProgram, ParseError> {
+        let mut kernels: Vec<KernelFn> = Vec::new();
+        let mut hosts: Vec<HostFn> = Vec::new();
+        loop {
+            match self.peek() {
+                Tok::Eof => break,
+                Tok::Newline => {
+                    self.bump();
+                }
+                Tok::Import => {
+                    self.skip_import()?;
+                }
+                Tok::At => {
+                    self.bump();
+                    let deco = self.dotted_name()?;
+                    if deco != "ascend_kernel" && deco != "tl.ascend_kernel" {
+                        return Err(self.err(format!("unknown decorator '@{deco}'")));
+                    }
+                    self.expect(Tok::Newline)?;
+                    let f = self.def()?;
+                    kernels.push(KernelFn { name: f.0, params: f.1, body: f.2, line: f.3 });
+                }
+                Tok::Def => {
+                    let f = self.def()?;
+                    hosts.push(HostFn { name: f.0, params: f.1, body: f.2, line: f.3 });
+                }
+                other => {
+                    return Err(self.err(format!(
+                        "expected import / @ascend_kernel / def at top level, found {other}"
+                    )))
+                }
+            }
+        }
+        if kernels.is_empty() {
+            return Err(ParseError { message: "program has no @ascend_kernel function".into(), line: 1 });
+        }
+        let host = hosts
+            .pop()
+            .ok_or(ParseError { message: "program has no host function".into(), line: 1 })?;
+        let kernel = kernels.remove(0);
+        Ok(DslProgram { kernel, host, extra_kernels: kernels })
+    }
+
+    fn skip_import(&mut self) -> Result<(), ParseError> {
+        self.expect(Tok::Import)?;
+        self.dotted_name()?;
+        if self.eat(&Tok::As) {
+            self.ident()?;
+        }
+        self.expect(Tok::Newline)
+    }
+
+    /// Parse `def name(params): block`; returns (name, params, body, line).
+    fn def(&mut self) -> Result<(String, Vec<Param>, Vec<Stmt>, usize), ParseError> {
+        let line = self.line();
+        self.expect(Tok::Def)?;
+        let name = self.ident()?;
+        self.expect(Tok::LParen)?;
+        let mut params = Vec::new();
+        while self.peek() != &Tok::RParen {
+            let pname = self.ident()?;
+            // optional annotation `: torch.Tensor`
+            if self.eat(&Tok::Colon) {
+                self.dotted_name()?;
+            }
+            // optional default `= expr`
+            if self.eat(&Tok::Assign) {
+                self.expr()?;
+            }
+            params.push(Param { name: pname });
+            if !self.eat(&Tok::Comma) {
+                break;
+            }
+        }
+        self.expect(Tok::RParen)?;
+        // optional return annotation
+        if self.eat(&Tok::Arrow) {
+            self.dotted_name()?;
+        }
+        self.expect(Tok::Colon)?;
+        let body = self.block()?;
+        Ok((name, params, body, line))
+    }
+
+    fn block(&mut self) -> Result<Vec<Stmt>, ParseError> {
+        self.expect(Tok::Newline)?;
+        self.expect(Tok::Indent)?;
+        let mut stmts = Vec::new();
+        while self.peek() != &Tok::Dedent && self.peek() != &Tok::Eof {
+            if self.eat(&Tok::Newline) {
+                continue;
+            }
+            stmts.push(self.stmt()?);
+        }
+        self.expect(Tok::Dedent)?;
+        if stmts.is_empty() {
+            return Err(self.err("empty block".into()));
+        }
+        Ok(stmts)
+    }
+
+    fn stmt(&mut self) -> Result<Stmt, ParseError> {
+        let line = self.line();
+        match self.peek().clone() {
+            Tok::Pass => {
+                self.bump();
+                self.expect(Tok::Newline)?;
+                Ok(Stmt::Pass { line })
+            }
+            Tok::Return => {
+                self.bump();
+                let value =
+                    if self.peek() == &Tok::Newline { None } else { Some(self.expr()?) };
+                self.expect(Tok::Newline)?;
+                Ok(Stmt::Return { value, line })
+            }
+            Tok::For => self.for_stmt(),
+            Tok::While => {
+                self.bump();
+                let cond = self.expr()?;
+                self.expect(Tok::Colon)?;
+                let body = self.block()?;
+                Ok(Stmt::While { cond, body, line })
+            }
+            Tok::If => self.if_stmt(),
+            Tok::With => self.with_stmt(),
+            Tok::Ident(name) => {
+                // launch: IDENT '[' expr ']' '(' ... ')'
+                if self.peek2() == &Tok::LBracket {
+                    return self.launch_stmt(name);
+                }
+                // assignment or expression statement
+                self.assign_or_expr_stmt()
+            }
+            _ => self.assign_or_expr_stmt(),
+        }
+    }
+
+    fn launch_stmt(&mut self, kernel: String) -> Result<Stmt, ParseError> {
+        let line = self.line();
+        self.bump(); // ident
+        self.expect(Tok::LBracket)?;
+        let grid = self.expr()?;
+        self.expect(Tok::RBracket)?;
+        self.expect(Tok::LParen)?;
+        let mut args = Vec::new();
+        while self.peek() != &Tok::RParen {
+            args.push(self.expr()?);
+            if !self.eat(&Tok::Comma) {
+                break;
+            }
+        }
+        self.expect(Tok::RParen)?;
+        self.expect(Tok::Newline)?;
+        Ok(Stmt::Launch { kernel, grid, args, line })
+    }
+
+    fn for_stmt(&mut self) -> Result<Stmt, ParseError> {
+        let line = self.line();
+        self.expect(Tok::For)?;
+        let var = self.ident()?;
+        self.expect(Tok::In)?;
+        self.expect(Tok::Range)?;
+        self.expect(Tok::LParen)?;
+        let first = self.expr()?;
+        let (start, end, step) = if self.eat(&Tok::Comma) {
+            let second = self.expr()?;
+            if self.eat(&Tok::Comma) {
+                let third = self.expr()?;
+                (first, second, Some(third))
+            } else {
+                (first, second, None)
+            }
+        } else {
+            (Expr::Int(0), first, None)
+        };
+        self.expect(Tok::RParen)?;
+        self.expect(Tok::Colon)?;
+        let body = self.block()?;
+        Ok(Stmt::For { var, start, end, step, body, line })
+    }
+
+    fn if_stmt(&mut self) -> Result<Stmt, ParseError> {
+        let line = self.line();
+        // 'if' or 'elif' already distinguished by caller
+        self.bump();
+        let cond = self.expr()?;
+        self.expect(Tok::Colon)?;
+        let then = self.block()?;
+        let orelse = match self.peek() {
+            Tok::Elif => vec![self.if_stmt()?],
+            Tok::Else => {
+                self.bump();
+                self.expect(Tok::Colon)?;
+                self.block()?
+            }
+            _ => vec![],
+        };
+        Ok(Stmt::If { cond, then, orelse, line })
+    }
+
+    fn with_stmt(&mut self) -> Result<Stmt, ParseError> {
+        let line = self.line();
+        self.expect(Tok::With)?;
+        let name = self.dotted_name()?;
+        let stage = match name.as_str() {
+            "tl.copyin" => Stage::CopyIn,
+            "tl.compute" => Stage::Compute,
+            "tl.copyout" => Stage::CopyOut,
+            other => return Err(self.err(format!("unknown with-context '{other}' (expected tl.copyin/tl.compute/tl.copyout)"))),
+        };
+        self.expect(Tok::LParen)?;
+        self.expect(Tok::RParen)?;
+        self.expect(Tok::Colon)?;
+        let body = self.block()?;
+        Ok(Stmt::WithStage { stage, body, line })
+    }
+
+    fn assign_or_expr_stmt(&mut self) -> Result<Stmt, ParseError> {
+        let line = self.line();
+        // Try: IDENT (=|+=|-=|*=|/=) expr
+        if let Tok::Ident(name) = self.peek().clone() {
+            let op = match self.peek2() {
+                Tok::Assign => Some(None),
+                Tok::PlusEq => Some(Some(BinOp::Add)),
+                Tok::MinusEq => Some(Some(BinOp::Sub)),
+                Tok::TimesEq => Some(Some(BinOp::Mul)),
+                Tok::DivEq => Some(Some(BinOp::Div)),
+                _ => None,
+            };
+            if let Some(maybe_op) = op {
+                self.bump(); // ident
+                self.bump(); // op
+                let value = self.expr()?;
+                self.expect(Tok::Newline)?;
+                return Ok(match maybe_op {
+                    None => Stmt::Assign { target: name, value, line },
+                    Some(op) => Stmt::AugAssign { target: name, op, value, line },
+                });
+            }
+        }
+        let expr = self.expr()?;
+        self.expect(Tok::Newline)?;
+        Ok(Stmt::ExprStmt { expr, line })
+    }
+
+    // ---- expressions ----
+
+    fn expr(&mut self) -> Result<Expr, ParseError> {
+        self.or_expr()
+    }
+
+    fn or_expr(&mut self) -> Result<Expr, ParseError> {
+        let mut lhs = self.and_expr()?;
+        while self.eat(&Tok::Or) {
+            let rhs = self.and_expr()?;
+            lhs = Expr::Bin(BinOp::Or, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn and_expr(&mut self) -> Result<Expr, ParseError> {
+        let mut lhs = self.not_expr()?;
+        while self.eat(&Tok::And) {
+            let rhs = self.not_expr()?;
+            lhs = Expr::Bin(BinOp::And, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn not_expr(&mut self) -> Result<Expr, ParseError> {
+        if self.eat(&Tok::Not) {
+            let e = self.not_expr()?;
+            return Ok(Expr::Un(UnOp::Not, Box::new(e)));
+        }
+        self.comparison()
+    }
+
+    fn comparison(&mut self) -> Result<Expr, ParseError> {
+        let lhs = self.add_expr()?;
+        let op = match self.peek() {
+            Tok::Lt => BinOp::Lt,
+            Tok::Le => BinOp::Le,
+            Tok::Gt => BinOp::Gt,
+            Tok::Ge => BinOp::Ge,
+            Tok::EqEq => BinOp::Eq,
+            Tok::NotEq => BinOp::Ne,
+            _ => return Ok(lhs),
+        };
+        self.bump();
+        let rhs = self.add_expr()?;
+        Ok(Expr::Bin(op, Box::new(lhs), Box::new(rhs)))
+    }
+
+    fn add_expr(&mut self) -> Result<Expr, ParseError> {
+        let mut lhs = self.mul_expr()?;
+        loop {
+            let op = match self.peek() {
+                Tok::Plus => BinOp::Add,
+                Tok::Minus => BinOp::Sub,
+                _ => break,
+            };
+            self.bump();
+            let rhs = self.mul_expr()?;
+            lhs = Expr::Bin(op, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn mul_expr(&mut self) -> Result<Expr, ParseError> {
+        let mut lhs = self.unary_expr()?;
+        loop {
+            let op = match self.peek() {
+                Tok::Star => BinOp::Mul,
+                Tok::Slash => BinOp::Div,
+                Tok::SlashSlash => BinOp::FloorDiv,
+                Tok::Percent => BinOp::Mod,
+                _ => break,
+            };
+            self.bump();
+            let rhs = self.unary_expr()?;
+            lhs = Expr::Bin(op, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn unary_expr(&mut self) -> Result<Expr, ParseError> {
+        if self.eat(&Tok::Minus) {
+            let e = self.unary_expr()?;
+            // fold literal negation so `-1e30` is a literal
+            return Ok(match e {
+                Expr::Int(v) => Expr::Int(-v),
+                Expr::Float(v) => Expr::Float(-v),
+                other => Expr::Un(UnOp::Neg, Box::new(other)),
+            });
+        }
+        if self.eat(&Tok::Plus) {
+            return self.unary_expr();
+        }
+        self.power_expr()
+    }
+
+    fn power_expr(&mut self) -> Result<Expr, ParseError> {
+        let base = self.postfix_expr()?;
+        if self.eat(&Tok::StarStar) {
+            let exp = self.unary_expr()?; // right-assoc
+            return Ok(Expr::Bin(BinOp::Pow, Box::new(base), Box::new(exp)));
+        }
+        Ok(base)
+    }
+
+    fn postfix_expr(&mut self) -> Result<Expr, ParseError> {
+        let mut e = self.primary()?;
+        loop {
+            match self.peek() {
+                Tok::LParen => {
+                    let func = match &e {
+                        Expr::Name(n) => n.clone(),
+                        _ => return Err(self.err("can only call named functions".into())),
+                    };
+                    self.bump();
+                    let (args, kwargs) = self.call_args()?;
+                    e = Expr::Call { func, args, kwargs };
+                }
+                Tok::LBracket => {
+                    self.bump();
+                    let index = self.expr()?;
+                    self.expect(Tok::RBracket)?;
+                    e = Expr::Index { base: Box::new(e), index: Box::new(index) };
+                }
+                Tok::Dot => {
+                    self.bump();
+                    let attr = self.ident()?;
+                    match e {
+                        Expr::Name(n) => e = Expr::Name(format!("{n}.{attr}")),
+                        _ => return Err(self.err("attribute access only on names".into())),
+                    }
+                }
+                _ => break,
+            }
+        }
+        Ok(e)
+    }
+
+    fn call_args(&mut self) -> Result<(Vec<Expr>, Vec<(String, Expr)>), ParseError> {
+        let mut args = Vec::new();
+        let mut kwargs = Vec::new();
+        while self.peek() != &Tok::RParen {
+            // kwarg? IDENT '=' expr (but not IDENT '==')
+            if let Tok::Ident(name) = self.peek().clone() {
+                if self.peek2() == &Tok::Assign {
+                    self.bump();
+                    self.bump();
+                    let v = self.expr()?;
+                    kwargs.push((name, v));
+                    if !self.eat(&Tok::Comma) {
+                        break;
+                    }
+                    continue;
+                }
+            }
+            args.push(self.expr()?);
+            if !self.eat(&Tok::Comma) {
+                break;
+            }
+        }
+        self.expect(Tok::RParen)?;
+        Ok((args, kwargs))
+    }
+
+    fn primary(&mut self) -> Result<Expr, ParseError> {
+        let line = self.line();
+        match self.bump() {
+            Tok::Int(v) => Ok(Expr::Int(v)),
+            Tok::Float(v) => Ok(Expr::Float(v)),
+            Tok::Str(s) => Ok(Expr::Str(s)),
+            Tok::True => Ok(Expr::Bool(true)),
+            Tok::False => Ok(Expr::Bool(false)),
+            Tok::None_ => Ok(Expr::Name("None".into())),
+            Tok::Ident(name) => Ok(Expr::Name(name)),
+            Tok::Range => Ok(Expr::Name("range".into())), // range used as value is checked later
+            Tok::LParen => {
+                let e = self.expr()?;
+                self.expect(Tok::RParen)?;
+                Ok(e)
+            }
+            other => Err(ParseError { message: format!("unexpected {other} in expression"), line }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SOFTMAX: &str = r#"
+import tile.language as tl
+
+@ascend_kernel
+def softmax_kernel(input_ptr, output_ptr, rows_per_core, tile_length, n_tiles):
+    pid = tl.program_id(0)
+    row_start_idx = pid * rows_per_core
+    row_end_idx = row_start_idx + rows_per_core
+    row_tile_ub = tl.alloc_ub(tile_length, dtype=tl.float32)
+    shared_ub = tl.alloc_ub(8, dtype=tl.float32)
+    for row_idx in range(row_start_idx, row_end_idx):
+        row_max = -1e30
+        for tile_id in range(n_tiles):
+            col_start = tile_id * tile_length
+            offsets = row_idx * (tile_length * n_tiles) + col_start
+            with tl.copyin():
+                tl.load(input_ptr + offsets, row_tile_ub, tile_length)
+            with tl.compute():
+                tl.reduce_max(shared_ub, row_tile_ub, tile_length)
+                row_max = tl.max(row_max, tl.extract_scalar(shared_ub, 0))
+
+def softmax_host(x, output):
+    rows = x.shape[0]
+    cols = x.shape[1]
+    n_cores = 32
+    rows_per_core = rows // n_cores
+    max_tile_len = 4096
+    tile_length = min(max_tile_len, cols)
+    n_tiles = (cols + tile_length - 1) // tile_length
+    softmax_kernel[n_cores](x, output, rows_per_core, tile_length, n_tiles)
+"#;
+
+    #[test]
+    fn parses_figure2_style_softmax() {
+        let p = parse_program(SOFTMAX).unwrap();
+        assert_eq!(p.kernel.name, "softmax_kernel");
+        assert_eq!(p.kernel.params.len(), 5);
+        assert_eq!(p.host.name, "softmax_host");
+        assert!(p.extra_kernels.is_empty());
+    }
+
+    #[test]
+    fn host_has_launch_with_grid() {
+        let p = parse_program(SOFTMAX).unwrap();
+        let launch = p
+            .host
+            .body
+            .iter()
+            .find_map(|s| match s {
+                Stmt::Launch { kernel, grid, args, .. } => Some((kernel.clone(), grid.clone(), args.len())),
+                _ => None,
+            })
+            .expect("launch statement");
+        assert_eq!(launch.0, "softmax_kernel");
+        assert_eq!(launch.1, Expr::name("n_cores"));
+        assert_eq!(launch.2, 5);
+    }
+
+    #[test]
+    fn kernel_contains_stage_blocks() {
+        let p = parse_program(SOFTMAX).unwrap();
+        let mut stages = vec![];
+        for s in &p.kernel.body {
+            s.walk(&mut |st| {
+                if let Stmt::WithStage { stage, .. } = st {
+                    stages.push(*stage);
+                }
+            });
+        }
+        assert_eq!(stages, vec![Stage::CopyIn, Stage::Compute]);
+    }
+
+    #[test]
+    fn range_single_arg_defaults_start_zero() {
+        let p = parse_program(SOFTMAX).unwrap();
+        let mut found = false;
+        for s in &p.kernel.body {
+            s.walk(&mut |st| {
+                if let Stmt::For { var, start, .. } = st {
+                    if var == "tile_id" {
+                        assert_eq!(start, &Expr::Int(0));
+                        found = true;
+                    }
+                }
+            });
+        }
+        assert!(found);
+    }
+
+    #[test]
+    fn alloc_with_dtype_kwarg() {
+        let p = parse_program(SOFTMAX).unwrap();
+        let alloc = p
+            .kernel
+            .body
+            .iter()
+            .find_map(|s| match s {
+                Stmt::Assign { target, value, .. } if target == "row_tile_ub" => Some(value.clone()),
+                _ => None,
+            })
+            .unwrap();
+        let (kind, _, dtype) = crate::dsl::ast::as_alloc(&alloc).unwrap();
+        assert_eq!(kind, AllocKind::Ub);
+        assert_eq!(dtype, crate::util::tensor::DType::F32);
+    }
+
+    #[test]
+    fn if_elif_else() {
+        let src = "
+@ascend_kernel
+def k(a):
+    x = 1
+    if a > 0:
+        x = 2
+    elif a < 0:
+        x = 3
+    else:
+        x = 4
+
+def h(t):
+    k[1](t)
+";
+        let p = parse_program(src).unwrap();
+        let has_if = p.kernel.body.iter().any(|s| matches!(s, Stmt::If { orelse, .. } if !orelse.is_empty()));
+        assert!(has_if);
+    }
+
+    #[test]
+    fn augmented_assignment() {
+        let src = "
+@ascend_kernel
+def k(a):
+    x = 0
+    x += 1
+    x *= 2
+
+def h(t):
+    k[1](t)
+";
+        let p = parse_program(src).unwrap();
+        let augs: Vec<_> = p
+            .kernel
+            .body
+            .iter()
+            .filter_map(|s| match s {
+                Stmt::AugAssign { op, .. } => Some(*op),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(augs, vec![BinOp::Add, BinOp::Mul]);
+    }
+
+    #[test]
+    fn missing_kernel_is_error() {
+        let err = parse_program("def h(x):\n    y = 1\n").unwrap_err();
+        assert!(err.message.contains("no @ascend_kernel"));
+    }
+
+    #[test]
+    fn missing_host_is_error() {
+        let err = parse_program("@ascend_kernel\ndef k(x):\n    y = 1\n").unwrap_err();
+        assert!(err.message.contains("no host function"));
+    }
+
+    #[test]
+    fn unknown_with_context_is_error() {
+        let src = "
+@ascend_kernel
+def k(a):
+    with tl.compute_fast():
+        pass
+
+def h(t):
+    k[1](t)
+";
+        let err = parse_program(src).unwrap_err();
+        assert!(err.message.contains("unknown with-context"));
+    }
+
+    #[test]
+    fn unknown_decorator_is_error() {
+        let err = parse_program("@gpu_kernel\ndef k(x):\n    pass\n").unwrap_err();
+        assert!(err.message.contains("unknown decorator"));
+    }
+
+    #[test]
+    fn multi_kernel_program() {
+        let src = "
+@ascend_kernel
+def k1(a):
+    pass
+
+@ascend_kernel
+def k2(a):
+    pass
+
+def h(t):
+    k1[4](t)
+    k2[1](t)
+";
+        let p = parse_program(src).unwrap();
+        assert_eq!(p.kernel.name, "k1");
+        assert_eq!(p.extra_kernels.len(), 1);
+        assert_eq!(p.extra_kernels[0].name, "k2");
+        assert!(p.kernel_by_name("k2").is_some());
+    }
+
+    #[test]
+    fn operator_precedence() {
+        let src = "
+@ascend_kernel
+def k(a):
+    x = 1 + 2 * 3
+
+def h(t):
+    k[1](t)
+";
+        let p = parse_program(src).unwrap();
+        match &p.kernel.body[0] {
+            Stmt::Assign { value: Expr::Bin(BinOp::Add, l, r), .. } => {
+                assert_eq!(**l, Expr::Int(1));
+                assert!(matches!(**r, Expr::Bin(BinOp::Mul, _, _)));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn negative_literal_folding() {
+        let src = "
+@ascend_kernel
+def k(a):
+    x = -1e30
+
+def h(t):
+    k[1](t)
+";
+        let p = parse_program(src).unwrap();
+        assert!(matches!(&p.kernel.body[0], Stmt::Assign { value: Expr::Float(v), .. } if *v == -1e30));
+    }
+}

@@ -1,0 +1,266 @@
+//! Pretty-printer for DSL programs: renders an AST back to canonical DSL
+//! source. Used by the CLI (`ascendcraft gen --emit-dsl`), by the expert
+//! example library's self-checks (every example must round-trip through
+//! parse → print → parse), and by failure reports.
+
+use super::ast::*;
+use std::fmt::Write as _;
+
+pub fn print_program(p: &DslProgram) -> String {
+    let mut out = String::from("import tile.language as tl\n");
+    for k in p.kernels() {
+        out.push('\n');
+        print_kernel(&mut out, k);
+    }
+    out.push('\n');
+    print_host(&mut out, &p.host);
+    out
+}
+
+fn print_kernel(out: &mut String, k: &KernelFn) {
+    let params: Vec<&str> = k.params.iter().map(|p| p.name.as_str()).collect();
+    let _ = writeln!(out, "@ascend_kernel");
+    let _ = writeln!(out, "def {}({}):", k.name, params.join(", "));
+    print_stmts(out, &k.body, 1);
+}
+
+fn print_host(out: &mut String, h: &HostFn) {
+    let params: Vec<&str> = h.params.iter().map(|p| p.name.as_str()).collect();
+    let _ = writeln!(out, "def {}({}):", h.name, params.join(", "));
+    print_stmts(out, &h.body, 1);
+}
+
+fn indent(out: &mut String, level: usize) {
+    for _ in 0..level {
+        out.push_str("    ");
+    }
+}
+
+fn print_stmts(out: &mut String, stmts: &[Stmt], level: usize) {
+    for s in stmts {
+        print_stmt(out, s, level);
+    }
+}
+
+fn print_stmt(out: &mut String, stmt: &Stmt, level: usize) {
+    indent(out, level);
+    match stmt {
+        Stmt::Assign { target, value, .. } => {
+            let _ = writeln!(out, "{target} = {}", print_expr(value));
+        }
+        Stmt::AugAssign { target, op, value, .. } => {
+            let sym = match op {
+                BinOp::Add => "+=",
+                BinOp::Sub => "-=",
+                BinOp::Mul => "*=",
+                BinOp::Div => "/=",
+                _ => "=",
+            };
+            let _ = writeln!(out, "{target} {sym} {}", print_expr(value));
+        }
+        Stmt::For { var, start, end, step, body, .. } => {
+            let range = match (start, step) {
+                (Expr::Int(0), None) => format!("range({})", print_expr(end)),
+                (_, None) => format!("range({}, {})", print_expr(start), print_expr(end)),
+                (_, Some(st)) => {
+                    format!("range({}, {}, {})", print_expr(start), print_expr(end), print_expr(st))
+                }
+            };
+            let _ = writeln!(out, "for {var} in {range}:");
+            print_stmts(out, body, level + 1);
+        }
+        Stmt::While { cond, body, .. } => {
+            let _ = writeln!(out, "while {}:", print_expr(cond));
+            print_stmts(out, body, level + 1);
+        }
+        Stmt::If { cond, then, orelse, .. } => {
+            let _ = writeln!(out, "if {}:", print_expr(cond));
+            print_stmts(out, then, level + 1);
+            if !orelse.is_empty() {
+                indent(out, level);
+                let _ = writeln!(out, "else:");
+                print_stmts(out, orelse, level + 1);
+            }
+        }
+        Stmt::WithStage { stage, body, .. } => {
+            let _ = writeln!(out, "with tl.{}():", stage.name());
+            print_stmts(out, body, level + 1);
+        }
+        Stmt::ExprStmt { expr, .. } => {
+            let _ = writeln!(out, "{}", print_expr(expr));
+        }
+        Stmt::Launch { kernel, grid, args, .. } => {
+            let args: Vec<String> = args.iter().map(print_expr).collect();
+            let _ = writeln!(out, "{kernel}[{}]({})", print_expr(grid), args.join(", "));
+        }
+        Stmt::Pass { .. } => {
+            let _ = writeln!(out, "pass");
+        }
+        Stmt::Return { value, .. } => match value {
+            Some(v) => {
+                let _ = writeln!(out, "return {}", print_expr(v));
+            }
+            None => {
+                let _ = writeln!(out, "return");
+            }
+        },
+    }
+}
+
+fn binop_sym(op: BinOp) -> &'static str {
+    match op {
+        BinOp::Add => "+",
+        BinOp::Sub => "-",
+        BinOp::Mul => "*",
+        BinOp::Div => "/",
+        BinOp::FloorDiv => "//",
+        BinOp::Mod => "%",
+        BinOp::Pow => "**",
+        BinOp::Lt => "<",
+        BinOp::Le => "<=",
+        BinOp::Gt => ">",
+        BinOp::Ge => ">=",
+        BinOp::Eq => "==",
+        BinOp::Ne => "!=",
+        BinOp::And => "and",
+        BinOp::Or => "or",
+    }
+}
+
+fn prec(op: BinOp) -> u8 {
+    match op {
+        BinOp::Or => 1,
+        BinOp::And => 2,
+        BinOp::Lt | BinOp::Le | BinOp::Gt | BinOp::Ge | BinOp::Eq | BinOp::Ne => 3,
+        BinOp::Add | BinOp::Sub => 4,
+        BinOp::Mul | BinOp::Div | BinOp::FloorDiv | BinOp::Mod => 5,
+        BinOp::Pow => 7,
+    }
+}
+
+pub fn print_expr(e: &Expr) -> String {
+    print_expr_prec(e, 0)
+}
+
+fn print_expr_prec(e: &Expr, parent: u8) -> String {
+    match e {
+        Expr::Int(v) => v.to_string(),
+        Expr::Float(v) => {
+            if v.fract() == 0.0 && v.abs() < 1e16 {
+                format!("{:.1}", v)
+            } else if v.abs() >= 1e16 || (*v != 0.0 && v.abs() < 1e-4) {
+                // scientific notation so the literal survives re-lexing
+                format!("{:e}", v)
+            } else {
+                format!("{v}")
+            }
+        }
+        Expr::Bool(b) => (if *b { "True" } else { "False" }).to_string(),
+        Expr::Str(s) => format!("\"{s}\""),
+        Expr::Name(n) => n.clone(),
+        Expr::Bin(op, a, b) => {
+            let p = prec(*op);
+            let s = format!(
+                "{} {} {}",
+                print_expr_prec(a, p),
+                binop_sym(*op),
+                print_expr_prec(b, p + 1)
+            );
+            if p < parent {
+                format!("({s})")
+            } else {
+                s
+            }
+        }
+        Expr::Un(UnOp::Neg, a) => format!("-{}", print_expr_prec(a, 6)),
+        Expr::Un(UnOp::Not, a) => format!("not {}", print_expr_prec(a, 3)),
+        Expr::Call { func, args, kwargs } => {
+            let mut parts: Vec<String> = args.iter().map(print_expr).collect();
+            for (k, v) in kwargs {
+                parts.push(format!("{k}={}", print_expr(v)));
+            }
+            format!("{func}({})", parts.join(", "))
+        }
+        Expr::Index { base, index } => {
+            format!("{}[{}]", print_expr_prec(base, 8), print_expr(index))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::parser::parse_program;
+
+    const SRC: &str = "
+@ascend_kernel
+def k(x_ptr, y_ptr, n, tile_len, n_tiles):
+    pid = tl.program_id(0)
+    in_ub = tl.alloc_ub(tile_len, dtype=tl.float32)
+    acc = -1e30
+    for t in range(n_tiles):
+        off = pid * n + t * tile_len
+        with tl.copyin():
+            tl.load(x_ptr + off, in_ub, tile_len)
+        with tl.compute():
+            tl.vexp(in_ub, in_ub, tile_len)
+        with tl.copyout():
+            tl.store(y_ptr + off, in_ub, tile_len)
+    if n > 0:
+        acc += 1
+    else:
+        acc = 0
+
+def h(x, y):
+    n = x.shape[0]
+    k[8](x, y, n, 1024, (n + 1023) // 1024)
+";
+
+    #[test]
+    fn roundtrip_is_stable() {
+        let p1 = parse_program(SRC).unwrap();
+        let printed1 = print_program(&p1);
+        let p2 = parse_program(&printed1).unwrap();
+        let printed2 = print_program(&p2);
+        assert_eq!(printed1, printed2);
+    }
+
+    #[test]
+    fn roundtrip_preserves_ast() {
+        // ASTs are compared via their canonical printed form, which is
+        // line-number-insensitive (printing normalizes locations).
+        let p1 = parse_program(SRC).unwrap();
+        let p2 = parse_program(&print_program(&p1)).unwrap();
+        assert_eq!(print_program(&p1), print_program(&p2));
+        assert_eq!(p1.kernel.name, p2.kernel.name);
+        assert_eq!(p1.kernel.params, p2.kernel.params);
+    }
+
+    #[test]
+    fn parenthesization_preserves_precedence() {
+        let e = Expr::Bin(
+            BinOp::Mul,
+            Box::new(Expr::Bin(BinOp::Add, Box::new(Expr::name("a")), Box::new(Expr::name("b")))),
+            Box::new(Expr::name("c")),
+        );
+        assert_eq!(print_expr(&e), "(a + b) * c");
+    }
+
+    #[test]
+    fn kwargs_printed() {
+        let e = Expr::Call {
+            func: "tl.alloc_ub".into(),
+            args: vec![Expr::Int(64)],
+            kwargs: vec![("dtype".into(), Expr::name("tl.float16"))],
+        };
+        assert_eq!(print_expr(&e), "tl.alloc_ub(64, dtype=tl.float16)");
+    }
+
+    #[test]
+    fn float_formatting_reparses() {
+        let e = Expr::Float(2.0);
+        assert_eq!(print_expr(&e), "2.0");
+        let e = Expr::Float(-1e30);
+        assert_eq!(print_expr(&e), "-1e30");
+    }
+}

@@ -1,0 +1,545 @@
+//! Semantic validation of DSL programs — the language rules from paper §3:
+//!
+//! * **Staging rules.** `tl.load` only inside `copyin`, `tl.store` only
+//!   inside `copyout`, vector/reduce compute primitives only inside
+//!   `compute`; stages may not nest; scalar bookkeeping is allowed anywhere.
+//! * **Explicit allocation.** Every buffer used by load/store/compute must
+//!   come from `tl.alloc_ub` / `tl.alloc_l1` in the same kernel; allocation
+//!   must happen outside stage blocks and outside loops (on-chip buffers are
+//!   a static resource plan, not a dynamic heap).
+//! * **No implicit aliasing.** A buffer name is assigned exactly once.
+//! * **Launch discipline.** The host must launch every kernel exactly once
+//!   per program point with an argument count matching the kernel signature.
+//!
+//! Diagnostics carry stable codes (`D1xx` staging, `D2xx` buffers, `D3xx`
+//! host) so the synthesizer's repair engine can pattern-match them.
+
+use super::ast::*;
+use std::collections::{HashMap, HashSet};
+
+/// A validation diagnostic. `line` is 1-based source line.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DslDiagnostic {
+    pub code: String,
+    pub message: String,
+    pub line: usize,
+}
+
+impl DslDiagnostic {
+    fn new(code: &str, line: usize, message: String) -> DslDiagnostic {
+        DslDiagnostic { code: code.to_string(), message, line }
+    }
+}
+
+/// Primitives legal only in a given stage. Everything else (`tl.program_id`,
+/// `tl.max`, `tl.extract_scalar`, arithmetic) is stage-neutral scalar code.
+fn required_stage(func: &str) -> Option<Stage> {
+    match func {
+        "tl.load" => Some(Stage::CopyIn),
+        "tl.store" => Some(Stage::CopyOut),
+        _ if is_compute_primitive(func) => Some(Stage::Compute),
+        _ => None,
+    }
+}
+
+/// Vector/cube/reduce primitives that execute on compute units.
+pub fn is_compute_primitive(func: &str) -> bool {
+    matches!(
+        func,
+        "tl.vadd"
+            | "tl.vsub"
+            | "tl.vmul"
+            | "tl.vdiv"
+            | "tl.vmax"
+            | "tl.vmin"
+            | "tl.vexp"
+            | "tl.vlog"
+            | "tl.vabs"
+            | "tl.vsqrt"
+            | "tl.vrsqrt"
+            | "tl.vrec"
+            | "tl.vneg"
+            | "tl.vtanh"
+            | "tl.vrelu"
+            | "tl.vsign"
+            | "tl.vfloor"
+            | "tl.adds"
+            | "tl.muls"
+            | "tl.maxs"
+            | "tl.mins"
+            | "tl.vcopy"
+            | "tl.vselect_ge"
+            | "tl.vcmp_gt"
+            | "tl.reduce_sum"
+            | "tl.reduce_max"
+            | "tl.reduce_min"
+            | "tl.cumsum"
+            | "tl.cumprod"
+            | "tl.memset"
+            | "tl.cast"
+            | "tl.matmul"
+            | "tl.vpow"
+    )
+}
+
+/// All known `tl.` functions (anything else is an unknown primitive).
+fn is_known_tl(func: &str) -> bool {
+    is_compute_primitive(func)
+        || matches!(
+            func,
+            "tl.load"
+                | "tl.store"
+                | "tl.alloc_ub"
+                | "tl.alloc_l1"
+                | "tl.program_id"
+                | "tl.num_programs"
+                | "tl.arange"
+                | "tl.max"
+                | "tl.min"
+                | "tl.extract_scalar"
+                | "tl.insert_scalar"
+                | "tl.sync_all"
+                | "tl.exp"
+                | "tl.log"
+                | "tl.sqrt"
+                | "tl.abs"
+        )
+}
+
+pub fn validate_program(program: &DslProgram) -> Vec<DslDiagnostic> {
+    let mut diags = Vec::new();
+    for kernel in program.kernels() {
+        validate_kernel(kernel, &mut diags);
+    }
+    validate_host(program, &mut diags);
+    diags
+}
+
+struct KernelCtx<'a> {
+    kernel: &'a KernelFn,
+    buffers: HashMap<String, AllocKind>,
+    assigned: HashSet<String>,
+}
+
+fn validate_kernel(kernel: &KernelFn, diags: &mut Vec<DslDiagnostic>) {
+    let mut ctx = KernelCtx {
+        kernel,
+        buffers: HashMap::new(),
+        assigned: kernel.params.iter().map(|p| p.name.clone()).collect(),
+    };
+    // Collect buffer allocations first (they must be top-level).
+    collect_allocs(&kernel.body, true, false, &mut ctx, diags);
+    // Then walk with stage context.
+    walk_stmts(&kernel.body, None, &mut ctx, diags);
+}
+
+fn collect_allocs(
+    stmts: &[Stmt],
+    top_level: bool,
+    in_stage: bool,
+    ctx: &mut KernelCtx,
+    diags: &mut Vec<DslDiagnostic>,
+) {
+    for stmt in stmts {
+        match stmt {
+            Stmt::Assign { target, value, line } => {
+                if let Some((kind, _, _)) = as_alloc(value) {
+                    if in_stage {
+                        diags.push(DslDiagnostic::new(
+                            "D201",
+                            *line,
+                            format!("buffer '{target}' allocated inside a stage block; on-chip buffers must be planned at kernel top level"),
+                        ));
+                    } else if !top_level {
+                        diags.push(DslDiagnostic::new(
+                            "D202",
+                            *line,
+                            format!("buffer '{target}' allocated inside a loop/branch; allocation must be static (kernel top level)"),
+                        ));
+                    }
+                    if ctx.buffers.insert(target.clone(), kind).is_some() {
+                        diags.push(DslDiagnostic::new(
+                            "D203",
+                            *line,
+                            format!("buffer '{target}' allocated more than once (implicit aliasing is disallowed)"),
+                        ));
+                    }
+                }
+            }
+            Stmt::For { body, .. } | Stmt::While { body, .. } => {
+                collect_allocs(body, false, in_stage, ctx, diags)
+            }
+            Stmt::WithStage { body, .. } => collect_allocs(body, false, true, ctx, diags),
+            Stmt::If { then, orelse, .. } => {
+                collect_allocs(then, false, in_stage, ctx, diags);
+                collect_allocs(orelse, false, in_stage, ctx, diags);
+            }
+            _ => {}
+        }
+    }
+}
+
+fn walk_stmts(
+    stmts: &[Stmt],
+    stage: Option<Stage>,
+    ctx: &mut KernelCtx,
+    diags: &mut Vec<DslDiagnostic>,
+) {
+    for stmt in stmts {
+        match stmt {
+            Stmt::WithStage { stage: s, body, line } => {
+                if stage.is_some() {
+                    diags.push(DslDiagnostic::new(
+                        "D101",
+                        *line,
+                        format!("stage '{}' nested inside stage '{}'; stages must not nest", s.name(), stage.unwrap().name()),
+                    ));
+                }
+                walk_stmts(body, Some(*s), ctx, diags);
+            }
+            Stmt::Assign { target, value, line } => {
+                check_expr(value, stage, ctx, diags, *line);
+                if !as_alloc(value).is_some() && ctx.buffers.contains_key(target) {
+                    diags.push(DslDiagnostic::new(
+                        "D204",
+                        *line,
+                        format!("buffer '{target}' reassigned to a non-buffer value (implicit aliasing)"),
+                    ));
+                }
+                ctx.assigned.insert(target.clone());
+            }
+            Stmt::AugAssign { target, value, line, .. } => {
+                check_expr(value, stage, ctx, diags, *line);
+                if !ctx.assigned.contains(target) {
+                    diags.push(DslDiagnostic::new(
+                        "D301",
+                        *line,
+                        format!("augmented assignment to undefined variable '{target}'"),
+                    ));
+                }
+            }
+            Stmt::For { var, start, end, step, body, line } => {
+                check_expr(start, stage, ctx, diags, *line);
+                check_expr(end, stage, ctx, diags, *line);
+                if let Some(s) = step {
+                    check_expr(s, stage, ctx, diags, *line);
+                }
+                ctx.assigned.insert(var.clone());
+                walk_stmts(body, stage, ctx, diags);
+            }
+            Stmt::While { cond, body, line } => {
+                check_expr(cond, stage, ctx, diags, *line);
+                walk_stmts(body, stage, ctx, diags);
+            }
+            Stmt::If { cond, then, orelse, line } => {
+                check_expr(cond, stage, ctx, diags, *line);
+                walk_stmts(then, stage, ctx, diags);
+                walk_stmts(orelse, stage, ctx, diags);
+            }
+            Stmt::ExprStmt { expr, line } => check_expr(expr, stage, ctx, diags, *line),
+            Stmt::Launch { line, .. } => {
+                diags.push(DslDiagnostic::new(
+                    "D102",
+                    *line,
+                    "kernel launch inside a kernel function (launches belong to the host)".into(),
+                ));
+            }
+            Stmt::Pass { .. } | Stmt::Return { .. } => {}
+        }
+    }
+}
+
+fn check_expr(
+    expr: &Expr,
+    stage: Option<Stage>,
+    ctx: &mut KernelCtx,
+    diags: &mut Vec<DslDiagnostic>,
+    line: usize,
+) {
+    expr.walk(&mut |e| {
+        if let Expr::Call { func, args, .. } = e {
+            if func.starts_with("tl.") && !is_known_tl(func) {
+                diags.push(DslDiagnostic::new(
+                    "D103",
+                    line,
+                    format!("unknown DSL primitive '{func}'"),
+                ));
+            }
+            if let Some(required) = required_stage(func) {
+                match stage {
+                    Some(s) if s == required => {}
+                    Some(s) => diags.push(DslDiagnostic::new(
+                        "D104",
+                        line,
+                        format!("'{func}' requires stage '{}' but appears in stage '{}'", required.name(), s.name()),
+                    )),
+                    None => diags.push(DslDiagnostic::new(
+                        "D105",
+                        line,
+                        format!("'{func}' requires stage '{}' but appears outside any stage block", required.name()),
+                    )),
+                }
+            }
+            // buffer arguments must be allocated
+            for a in args {
+                if let Expr::Name(n) = a {
+                    if n.ends_with("_ub") || n.ends_with("_l1") {
+                        if !ctx.buffers.contains_key(n)
+                            && !ctx.kernel.params.iter().any(|p| &p.name == n)
+                        {
+                            diags.push(DslDiagnostic::new(
+                                "D205",
+                                line,
+                                format!("buffer '{n}' used before allocation (tl.alloc_ub/tl.alloc_l1 required)"),
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+fn validate_host(program: &DslProgram, diags: &mut Vec<DslDiagnostic>) {
+    let host = &program.host;
+    let mut launches: HashMap<String, usize> = HashMap::new();
+    for stmt in &host.body {
+        stmt.walk(&mut |s| {
+            match s {
+                Stmt::Launch { kernel, args, line, .. } => {
+                    match program.kernel_by_name(kernel) {
+                        None => diags.push(DslDiagnostic::new(
+                            "D302",
+                            *line,
+                            format!("launch of unknown kernel '{kernel}'"),
+                        )),
+                        Some(k) => {
+                            if args.len() != k.params.len() {
+                                diags.push(DslDiagnostic::new(
+                                    "D303",
+                                    *line,
+                                    format!(
+                                        "kernel '{kernel}' expects {} arguments, launch passes {}",
+                                        k.params.len(),
+                                        args.len()
+                                    ),
+                                ));
+                            }
+                        }
+                    }
+                    *launches.entry(kernel.clone()).or_insert(0) += 1;
+                }
+                Stmt::WithStage { line, .. } => diags.push(DslDiagnostic::new(
+                    "D304",
+                    *line,
+                    "stage blocks are kernel-only; host code cannot contain tl.copyin/compute/copyout".into(),
+                )),
+                _ => {}
+            }
+        });
+    }
+    for k in program.kernels() {
+        if !launches.contains_key(k.name.as_str()) {
+            diags.push(DslDiagnostic::new(
+                "D305",
+                host.line,
+                format!("kernel '{}' is never launched by the host", k.name),
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::parser::parse_program;
+
+    fn diags_for(src: &str) -> Vec<DslDiagnostic> {
+        validate_program(&parse_program(src).unwrap())
+    }
+
+    fn codes(src: &str) -> Vec<String> {
+        diags_for(src).into_iter().map(|d| d.code).collect()
+    }
+
+    const OK_PROGRAM: &str = "
+@ascend_kernel
+def k(x_ptr, y_ptr, n, tile_len, n_tiles):
+    pid = tl.program_id(0)
+    in_ub = tl.alloc_ub(tile_len, dtype=tl.float32)
+    out_ub = tl.alloc_ub(tile_len, dtype=tl.float32)
+    for t in range(n_tiles):
+        off = pid * n + t * tile_len
+        with tl.copyin():
+            tl.load(x_ptr + off, in_ub, tile_len)
+        with tl.compute():
+            tl.vexp(out_ub, in_ub, tile_len)
+        with tl.copyout():
+            tl.store(y_ptr + off, out_ub, tile_len)
+
+def h(x, y):
+    n = x.shape[0]
+    n_cores = 8
+    per = n // n_cores
+    tile_len = 1024
+    n_tiles = (per + tile_len - 1) // tile_len
+    k[n_cores](x, y, per, tile_len, n_tiles)
+";
+
+    #[test]
+    fn clean_program_has_no_diagnostics() {
+        assert!(diags_for(OK_PROGRAM).is_empty(), "{:?}", diags_for(OK_PROGRAM));
+    }
+
+    #[test]
+    fn load_outside_copyin_flagged() {
+        let src = OK_PROGRAM.replace("with tl.copyin():\n            tl.load", "with tl.compute():\n            tl.load");
+        assert!(codes(&src).contains(&"D104".to_string()));
+    }
+
+    #[test]
+    fn compute_outside_stage_flagged() {
+        let src = "
+@ascend_kernel
+def k(x_ptr, y_ptr, tile_len):
+    a_ub = tl.alloc_ub(tile_len, dtype=tl.float32)
+    tl.vexp(a_ub, a_ub, tile_len)
+
+def h(x, y):
+    k[1](x, y, 128)
+";
+        assert!(codes(src).contains(&"D105".to_string()));
+    }
+
+    #[test]
+    fn nested_stage_flagged() {
+        let src = "
+@ascend_kernel
+def k(x_ptr, tile_len):
+    a_ub = tl.alloc_ub(tile_len, dtype=tl.float32)
+    with tl.compute():
+        with tl.copyin():
+            tl.load(x_ptr, a_ub, tile_len)
+
+def h(x):
+    k[1](x, 64)
+";
+        assert!(codes(src).contains(&"D101".to_string()));
+    }
+
+    #[test]
+    fn alloc_in_loop_flagged() {
+        let src = "
+@ascend_kernel
+def k(x_ptr, n_tiles, tile_len):
+    for t in range(n_tiles):
+        a_ub = tl.alloc_ub(tile_len, dtype=tl.float32)
+
+def h(x):
+    k[1](x, 4, 64)
+";
+        assert!(codes(src).contains(&"D202".to_string()));
+    }
+
+    #[test]
+    fn double_alloc_flagged() {
+        let src = "
+@ascend_kernel
+def k(x_ptr, tile_len):
+    a_ub = tl.alloc_ub(tile_len, dtype=tl.float32)
+    a_ub = tl.alloc_ub(tile_len, dtype=tl.float32)
+
+def h(x):
+    k[1](x, 64)
+";
+        assert!(codes(src).contains(&"D203".to_string()));
+    }
+
+    #[test]
+    fn unallocated_buffer_use_flagged() {
+        let src = "
+@ascend_kernel
+def k(x_ptr, tile_len):
+    with tl.copyin():
+        tl.load(x_ptr, ghost_ub, tile_len)
+
+def h(x):
+    k[1](x, 64)
+";
+        assert!(codes(src).contains(&"D205".to_string()));
+    }
+
+    #[test]
+    fn unknown_primitive_flagged() {
+        let src = "
+@ascend_kernel
+def k(x_ptr, tile_len):
+    a_ub = tl.alloc_ub(tile_len, dtype=tl.float32)
+    with tl.compute():
+        tl.vsoftmax(a_ub, a_ub, tile_len)
+
+def h(x):
+    k[1](x, 64)
+";
+        assert!(codes(src).contains(&"D103".to_string()));
+    }
+
+    #[test]
+    fn launch_argument_mismatch_flagged() {
+        let src = "
+@ascend_kernel
+def k(x_ptr, y_ptr, n):
+    pid = tl.program_id(0)
+
+def h(x, y):
+    k[4](x, y)
+";
+        assert!(codes(src).contains(&"D303".to_string()));
+    }
+
+    #[test]
+    fn unlaunched_kernel_flagged() {
+        let src = "
+@ascend_kernel
+def k(x_ptr):
+    pid = tl.program_id(0)
+
+def h(x):
+    n = 1
+";
+        assert!(codes(src).contains(&"D305".to_string()));
+    }
+
+    #[test]
+    fn launch_of_unknown_kernel_flagged() {
+        let src = "
+@ascend_kernel
+def k(x_ptr):
+    pid = tl.program_id(0)
+
+def h(x):
+    k[1](x)
+    other[1](x)
+";
+        assert!(codes(src).contains(&"D302".to_string()));
+    }
+
+    #[test]
+    fn buffer_reassigned_to_scalar_flagged() {
+        let src = "
+@ascend_kernel
+def k(x_ptr, tile_len):
+    a_ub = tl.alloc_ub(tile_len, dtype=tl.float32)
+    a_ub = 3
+
+def h(x):
+    k[1](x, 64)
+";
+        assert!(codes(src).contains(&"D204".to_string()));
+    }
+
+    #[test]
+    fn frontend_roundtrip_ok() {
+        assert!(crate::dsl::frontend(OK_PROGRAM).is_ok());
+    }
+}

@@ -1,0 +1,12 @@
+//! AscendCraft: DSL-guided transcompilation for Ascend NPU kernel generation.
+pub mod ascendc;
+pub mod baselines;
+pub mod bench_suite;
+pub mod coordinator;
+pub mod dsl;
+pub mod mhc;
+pub mod runtime;
+pub mod sim;
+pub mod synth;
+pub mod transpile;
+pub mod util;

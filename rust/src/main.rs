@@ -1,0 +1,294 @@
+//! AscendCraft CLI — the leader entrypoint.
+//!
+//! ```text
+//! ascendcraft suite [--mode ascendcraft|direct|generic] [--workers N]
+//!                   [--json PATH] [--quiet]          reproduce Tables 1+2
+//! ascendcraft gen --task NAME [--emit-dsl] [--emit-ascendc] [--emit-prompt]
+//! ascendcraft mhc [--rows N]                         RQ3 case study
+//! ascendcraft oracle [--op NAME]                     PJRT golden cross-check
+//! ascendcraft list                                   list benchmark tasks
+//! ascendcraft prompt CATEGORY                        show a category prompt
+//! ```
+//!
+//! (clap is not in the offline crate set; arguments are parsed by hand.)
+
+use ascendcraft::bench_suite::spec::Category;
+use ascendcraft::bench_suite::tasks::{all_tasks, task_by_name};
+use ascendcraft::coordinator::pipeline::{run_task, PipelineConfig, PipelineMode};
+use ascendcraft::coordinator::service::{run_suite, SuiteConfig};
+use ascendcraft::mhc::{run_case_study, MhcDims};
+use ascendcraft::runtime::OracleRegistry;
+use ascendcraft::synth::prompt;
+use ascendcraft::util::compare::allclose_report;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(String::as_str) {
+        Some("suite") => cmd_suite(&args[1..]),
+        Some("gen") => cmd_gen(&args[1..]),
+        Some("mhc") => cmd_mhc(&args[1..]),
+        Some("oracle") => cmd_oracle(&args[1..]),
+        Some("list") => cmd_list(),
+        Some("export") => cmd_export(&args[1..]),
+        Some("prompt") => cmd_prompt(&args[1..]),
+        Some("--help") | Some("-h") | None => {
+            print_usage();
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown command '{other}'");
+            print_usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_usage() {
+    eprintln!(
+        "AscendCraft: DSL-guided AscendC kernel generation (reproduction)\n\
+         \n\
+         USAGE:\n\
+         \x20 ascendcraft suite [--mode ascendcraft|direct|generic] [--workers N] [--json PATH] [--quiet]\n\
+         \x20 ascendcraft gen --task NAME [--emit-dsl] [--emit-ascendc] [--emit-prompt]\n\
+         \x20 ascendcraft mhc [--rows N]\n\
+         \x20 ascendcraft oracle [--op NAME]\n\
+         \x20 ascendcraft list\n\
+         \x20 ascendcraft export [--out DIR]   write DSL+AscendC for all tasks\n\
+         \x20 ascendcraft prompt CATEGORY"
+    );
+}
+
+fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).map(String::as_str)
+}
+
+fn has_flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+fn cmd_suite(args: &[String]) -> i32 {
+    let mode = match flag_value(args, "--mode").unwrap_or("ascendcraft") {
+        "ascendcraft" => PipelineMode::AscendCraft,
+        "direct" => PipelineMode::Direct,
+        "generic" => PipelineMode::GenericExamples,
+        other => {
+            eprintln!("unknown mode '{other}'");
+            return 2;
+        }
+    };
+    let mut cfg = SuiteConfig {
+        pipeline: PipelineConfig { mode, ..Default::default() },
+        verbose: !has_flag(args, "--quiet"),
+        ..Default::default()
+    };
+    if let Some(w) = flag_value(args, "--workers").and_then(|v| v.parse().ok()) {
+        cfg.workers = w;
+    }
+    let tasks = all_tasks();
+    let suite = run_suite(&tasks, &cfg);
+    println!("\n{}", suite.render_table1());
+    println!("{}", suite.render_table2());
+    if let Some(path) = flag_value(args, "--json") {
+        if let Err(e) = std::fs::write(path, suite.to_json().to_pretty()) {
+            eprintln!("writing {path}: {e}");
+            return 1;
+        }
+        println!("wrote {path}");
+    }
+    0
+}
+
+fn cmd_gen(args: &[String]) -> i32 {
+    let Some(name) = flag_value(args, "--task") else {
+        eprintln!("gen requires --task NAME (see 'ascendcraft list')");
+        return 2;
+    };
+    let Some(task) = task_by_name(name) else {
+        eprintln!("unknown task '{name}'");
+        return 2;
+    };
+    if has_flag(args, "--emit-prompt") {
+        println!("{}", prompt::build_prompt(&task));
+        return 0;
+    }
+    let art = run_task(&task, &PipelineConfig::default());
+    if has_flag(args, "--emit-dsl") {
+        match &art.dsl_source {
+            Some(src) => println!("# --- generated DSL ---\n{src}"),
+            None => println!("(no DSL generated)"),
+        }
+    }
+    if has_flag(args, "--emit-ascendc") {
+        match &art.program {
+            Some(p) => {
+                println!("// --- generated AscendC ---\n{}", ascendcraft::ascendc::print_ascendc(p))
+            }
+            None => println!("(no AscendC generated)"),
+        }
+    }
+    let r = &art.result;
+    println!(
+        "task {:<18} compiled={} correct={} repairs={} speedup={}",
+        r.name,
+        r.compiled,
+        r.correct,
+        r.repair_rounds,
+        r.speedup().map(|s| format!("{s:.2}x")).unwrap_or_else(|| "-".into())
+    );
+    if let Some(f) = &r.failure {
+        println!("failure: {f}");
+    }
+    if r.correct {
+        0
+    } else {
+        1
+    }
+}
+
+fn cmd_mhc(args: &[String]) -> i32 {
+    let mut dims = MhcDims::default();
+    if let Some(r) = flag_value(args, "--rows").and_then(|v| v.parse().ok()) {
+        dims.rows = r;
+    }
+    println!(
+        "mHC case study (n={} streams, rows={}, d={}, sinkhorn={})",
+        dims.n, dims.rows, dims.d, dims.sinkhorn_iters
+    );
+    let mut ok = true;
+    for r in run_case_study(&dims, 42) {
+        println!(
+            "  {:<26} correct={:<5} cycles={:>12.0} speedup vs eager={:>6.2}x",
+            r.variant, r.correct, r.cycles, r.speedup_vs_eager
+        );
+        if let Some(f) = &r.failure {
+            println!("    failure: {f}");
+        }
+        ok &= r.correct;
+    }
+    if ok {
+        0
+    } else {
+        1
+    }
+}
+
+fn cmd_oracle(args: &[String]) -> i32 {
+    let reg = OracleRegistry::default_dir();
+    let names = match flag_value(args, "--op") {
+        Some(op) => vec![op.to_string()],
+        None => reg.list(),
+    };
+    if names.is_empty() {
+        eprintln!("no artifacts found; run `make artifacts` first");
+        return 1;
+    }
+    let mut failures = 0;
+    for name in names {
+        let Some(task) = task_by_name(&name) else {
+            println!("  {name:<18} (no matching benchmark task; skipping numeric check)");
+            continue;
+        };
+        let oracle = match reg.get(&name) {
+            Ok(o) => o,
+            Err(e) => {
+                println!("  {name:<18} LOAD FAILED: {e}");
+                failures += 1;
+                continue;
+            }
+        };
+        let inputs = task.make_inputs(1234);
+        let ins: Vec<&ascendcraft::util::tensor::Tensor> =
+            task.inputs.iter().map(|(n, _, _)| &inputs[*n]).collect();
+        let want = task.reference(&inputs);
+        match oracle.run(&ins) {
+            Ok(outs) => {
+                let first_out = task.outputs[0].0;
+                let rep = allclose_report(&outs[0], &want[first_out], 1e-3, 1e-4);
+                println!(
+                    "  {name:<18} {}",
+                    if rep.ok { "golden == rust reference" } else { "MISMATCH" }
+                );
+                if !rep.ok {
+                    println!("    {}", rep.summary());
+                    failures += 1;
+                }
+            }
+            Err(e) => {
+                println!("  {name:<18} EXEC FAILED: {e}");
+                failures += 1;
+            }
+        }
+    }
+    if failures == 0 {
+        0
+    } else {
+        1
+    }
+}
+
+/// Export the generated DSL and AscendC for every benchmark task — the
+/// repository's human-readable kernel gallery (generated/<task>.{dsl,cpp}).
+fn cmd_export(args: &[String]) -> i32 {
+    let out_dir = flag_value(args, "--out").unwrap_or("generated");
+    if let Err(e) = std::fs::create_dir_all(out_dir) {
+        eprintln!("creating {out_dir}: {e}");
+        return 1;
+    }
+    let mut written = 0;
+    for task in all_tasks() {
+        let art = run_task(&task, &PipelineConfig::default());
+        if let Some(dsl) = &art.dsl_source {
+            let _ = std::fs::write(format!("{out_dir}/{}.dsl", task.name), dsl);
+            written += 1;
+        }
+        if let Some(p) = &art.program {
+            let _ = std::fs::write(
+                format!("{out_dir}/{}.cpp", task.name),
+                ascendcraft::ascendc::print_ascendc(p),
+            );
+        }
+        let status = if art.result.correct {
+            "ok"
+        } else if art.result.compiled {
+            "wrong"
+        } else {
+            "nocompile"
+        };
+        println!("  {:<18} {status}", task.name);
+    }
+    println!("wrote {written} kernel sources to {out_dir}/");
+    0
+}
+
+fn cmd_list() -> i32 {
+    let tasks = all_tasks();
+    for c in Category::all() {
+        println!("{}:", c.name());
+        for t in tasks.iter().filter(|t| t.category == c) {
+            let shape = &t.inputs[0].1;
+            println!("  {:<18} {:?}", t.name, shape);
+        }
+    }
+    0
+}
+
+fn cmd_prompt(args: &[String]) -> i32 {
+    let Some(name) = args.first() else {
+        eprintln!(
+            "prompt requires a category (Activation, Loss, Math, Normalization, Optimizer, Reduce, Pooling)"
+        );
+        return 2;
+    };
+    let cat = Category::all().into_iter().find(|c| c.name().eq_ignore_ascii_case(name));
+    match cat {
+        Some(c) => {
+            println!("{}", prompt::category_prompt(c));
+            0
+        }
+        None => {
+            eprintln!("unknown category '{name}'");
+            2
+        }
+    }
+}

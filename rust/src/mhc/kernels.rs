@@ -1,0 +1,561 @@
+//! DSL programs for the mHC kernels: the pipeline's first-pass "generated"
+//! variants and the human+LLM "optimized" variants (paper RQ3).
+//!
+//! Generated variants favor clarity over traffic: separate kernels with GM
+//! temporaries, re-loading the streams per output. Optimized variants load
+//! every row of every stream exactly once and fuse mixing + RMS gating (+
+//! the whole VJP) into a single Compute stage — the kind of rewrite the
+//! paper's expert produced in a day starting from the generated code.
+
+use super::MhcDims;
+use std::fmt::Write as _;
+
+struct S(String, usize);
+impl S {
+    fn new() -> S {
+        S(String::from("import tile.language as tl\n\n"), 0)
+    }
+    fn p(&mut self, line: &str) {
+        for _ in 0..self.1 {
+            self.0.push_str("    ");
+        }
+        self.0.push_str(line);
+        self.0.push('\n');
+    }
+    fn pf(&mut self, args: std::fmt::Arguments) {
+        let mut line = String::new();
+        let _ = line.write_fmt(args);
+        self.p(&line);
+    }
+    fn open(&mut self, line: &str) {
+        self.p(line);
+        self.1 += 1;
+    }
+    fn openf(&mut self, args: std::fmt::Arguments) {
+        let mut line = String::new();
+        let _ = line.write_fmt(args);
+        self.open(&line);
+    }
+    fn close(&mut self) {
+        self.1 -= 1;
+    }
+    fn blank(&mut self) {
+        self.0.push('\n');
+    }
+}
+
+/// Sinkhorn projection kernel (single block; n*n is tiny).
+fn emit_sinkhorn(s: &mut S, dims: &MhcDims) {
+    let n = dims.n;
+    let nn = n * n;
+    s.p("@ascend_kernel");
+    s.open("def sinkhorn_kernel(w_ptr, p_ptr):");
+    s.pf(format_args!("w_in_ub = tl.alloc_ub({nn}, dtype=tl.float32)"));
+    s.pf(format_args!("p_out_ub = tl.alloc_ub({nn}, dtype=tl.float32)"));
+    s.pf(format_args!("work_ub = tl.alloc_ub({nn}, dtype=tl.float32)"));
+    s.p("red_ub = tl.alloc_ub(8, dtype=tl.float32)");
+    s.open("with tl.copyin():");
+    s.pf(format_args!("tl.load(w_ptr, w_in_ub, {nn})"));
+    s.close();
+    s.open("with tl.compute():");
+    s.pf(format_args!("tl.vexp(work_ub, w_in_ub, {nn})"));
+    s.openf(format_args!("for it in range({}):", dims.sinkhorn_iters));
+    // row normalization (vectorized per row)
+    s.openf(format_args!("for r in range({n}):"));
+    s.pf(format_args!("tl.reduce_sum(red_ub, work_ub + r * {n}, {n})"));
+    s.p("row_sum = tl.extract_scalar(red_ub, 0)");
+    s.pf(format_args!("tl.muls(work_ub + r * {n}, work_ub + r * {n}, 1.0 / row_sum, {n})"));
+    s.close();
+    // column normalization (scalar; columns are strided)
+    s.openf(format_args!("for c in range({n}):"));
+    let terms: Vec<String> =
+        (0..n).map(|r| format!("tl.extract_scalar(work_ub, {} + c)", r * n)).collect();
+    s.pf(format_args!("col_sum = {}", terms.join(" + ")));
+    s.openf(format_args!("for r in range({n}):"));
+    s.pf(format_args!(
+        "tl.insert_scalar(work_ub, r * {n} + c, tl.extract_scalar(work_ub, r * {n} + c) / col_sum)"
+    ));
+    s.close();
+    s.close();
+    s.close();
+    s.pf(format_args!("tl.vcopy(p_out_ub, work_ub, {nn})"));
+    s.close();
+    s.open("with tl.copyout():");
+    s.pf(format_args!("tl.store(p_ptr, p_out_ub, {nn})"));
+    s.close();
+    s.close();
+    s.blank();
+}
+
+/// Shared host prologue computing rows/d/stride tiling.
+fn host_tiling(s: &mut S) {
+    s.p("streams = h.shape[0]");
+    s.p("rows = h.shape[1]");
+    s.p("d = h.shape[2]");
+    s.p("stride = rows * d");
+    s.p("n_cores = 32");
+    s.p("rows_per_core = rows // n_cores");
+}
+
+/// Generated mHC_post: sinkhorn + per-stream mixing kernel (reads the
+/// streams once *per output stream*) + RMS-gate kernel over a GM temp.
+pub fn post_generated_dsl(dims: &MhcDims) -> (String, Vec<(String, Vec<usize>)>) {
+    let n = dims.n;
+    let mut s = S::new();
+    emit_sinkhorn(&mut s, dims);
+
+    // mixing kernel
+    s.p("@ascend_kernel");
+    s.open("def mix_kernel(h_ptr, p_ptr, m_ptr, rows_per_core, d, stride):");
+    s.p("pid = tl.program_id(0)");
+    s.p("row_start = pid * rows_per_core");
+    s.pf(format_args!("p_in_ub = tl.alloc_ub({}, dtype=tl.float32)", n * n));
+    s.pf(format_args!("p_buf_ub = tl.alloc_ub({}, dtype=tl.float32)", n * n));
+    for j in 0..n {
+        s.pf(format_args!("h{j}_ub = tl.alloc_ub(d, dtype=tl.float32)"));
+    }
+    s.p("m_out_ub = tl.alloc_ub(d, dtype=tl.float32)");
+    s.p("tmp_ub = tl.alloc_ub(d, dtype=tl.float32)");
+    s.open("with tl.copyin():");
+    s.pf(format_args!("tl.load(p_ptr, p_in_ub, {})", n * n));
+    s.close();
+    s.open("with tl.compute():");
+    s.pf(format_args!("tl.vcopy(p_buf_ub, p_in_ub, {})", n * n));
+    s.close();
+    s.openf(format_args!("for i in range({n}):"));
+    s.open("for ri in range(rows_per_core):");
+    s.p("row = row_start + ri");
+    s.open("with tl.copyin():");
+    for j in 0..n {
+        s.pf(format_args!("tl.load(h_ptr + {j} * stride + row * d, h{j}_ub, d)"));
+    }
+    s.close();
+    s.open("with tl.compute():");
+    s.pf(format_args!("p0 = tl.extract_scalar(p_buf_ub, 0 * {n} + i)"));
+    s.p("tl.muls(m_out_ub, h0_ub, p0, d)");
+    for j in 1..n {
+        s.pf(format_args!("p{j} = tl.extract_scalar(p_buf_ub, {j} * {n} + i)"));
+        s.pf(format_args!("tl.muls(tmp_ub, h{j}_ub, p{j}, d)"));
+        s.p("tl.vadd(m_out_ub, m_out_ub, tmp_ub, d)");
+    }
+    s.close();
+    s.open("with tl.copyout():");
+    s.p("tl.store(m_ptr + i * stride + row * d, m_out_ub, d)");
+    s.close();
+    s.close();
+    s.close();
+    s.close();
+    s.blank();
+
+    // rms-gate kernel
+    s.p("@ascend_kernel");
+    s.open("def rmsgate_kernel(h_ptr, m_ptr, g_ptr, y_ptr, rows_per_core, d, stride):");
+    s.p("pid = tl.program_id(0)");
+    s.p("row_start = pid * rows_per_core");
+    s.p("g_in_ub = tl.alloc_ub(8, dtype=tl.float32)");
+    s.p("g_buf_ub = tl.alloc_ub(8, dtype=tl.float32)");
+    s.p("hrow_ub = tl.alloc_ub(d, dtype=tl.float32)");
+    s.p("mrow_ub = tl.alloc_ub(d, dtype=tl.float32)");
+    s.p("sq_ub = tl.alloc_ub(d, dtype=tl.float32)");
+    s.p("y_out_ub = tl.alloc_ub(d, dtype=tl.float32)");
+    s.p("red_ub = tl.alloc_ub(8, dtype=tl.float32)");
+    s.open("with tl.copyin():");
+    s.pf(format_args!("tl.load(g_ptr, g_in_ub, {n})"));
+    s.close();
+    s.open("with tl.compute():");
+    s.pf(format_args!("tl.vcopy(g_buf_ub, g_in_ub, {n})"));
+    s.close();
+    s.openf(format_args!("for i in range({n}):"));
+    s.open("for ri in range(rows_per_core):");
+    s.p("row = row_start + ri");
+    s.open("with tl.copyin():");
+    s.p("tl.load(h_ptr + i * stride + row * d, hrow_ub, d)");
+    s.p("tl.load(m_ptr + i * stride + row * d, mrow_ub, d)");
+    s.close();
+    s.open("with tl.compute():");
+    s.p("tl.vmul(sq_ub, mrow_ub, mrow_ub, d)");
+    s.p("tl.reduce_sum(red_ub, sq_ub, d)");
+    s.p("inv = 1.0 / tl.sqrt(tl.extract_scalar(red_ub, 0) / d + 1e-5)");
+    s.p("gi = tl.extract_scalar(g_buf_ub, i)");
+    s.p("tl.muls(y_out_ub, mrow_ub, gi * inv, d)");
+    s.p("tl.vadd(y_out_ub, y_out_ub, hrow_ub, d)");
+    s.close();
+    s.open("with tl.copyout():");
+    s.p("tl.store(y_ptr + i * stride + row * d, y_out_ub, d)");
+    s.close();
+    s.close();
+    s.close();
+    s.close();
+    s.blank();
+
+    s.open("def mhc_post_host(h, w, g, p_scratch, m_scratch, y):");
+    host_tiling(&mut s);
+    s.p("sinkhorn_kernel[1](w, p_scratch)");
+    s.p("mix_kernel[n_cores](h, p_scratch, m_scratch, rows_per_core, d, stride)");
+    s.p("rmsgate_kernel[n_cores](h, m_scratch, g, y, rows_per_core, d, stride)");
+    s.close();
+
+    (
+        s.0,
+        vec![
+            ("p_scratch".to_string(), vec![n * n]),
+            ("m_scratch".to_string(), vec![n, dims.rows, dims.d]),
+        ],
+    )
+}
+
+/// Optimized mHC_post: sinkhorn + one fused kernel that loads each row of
+/// every stream once and produces every output stream.
+pub fn post_optimized_dsl(dims: &MhcDims) -> (String, Vec<(String, Vec<usize>)>) {
+    let n = dims.n;
+    let mut s = S::new();
+    emit_sinkhorn(&mut s, dims);
+
+    s.p("@ascend_kernel");
+    s.open("def fused_post_kernel(h_ptr, p_ptr, g_ptr, y_ptr, rows_per_core, d, stride):");
+    s.p("pid = tl.program_id(0)");
+    s.p("row_start = pid * rows_per_core");
+    s.pf(format_args!("p_in_ub = tl.alloc_ub({}, dtype=tl.float32)", n * n));
+    s.pf(format_args!("p_buf_ub = tl.alloc_ub({}, dtype=tl.float32)", n * n));
+    s.p("g_in_ub = tl.alloc_ub(8, dtype=tl.float32)");
+    s.p("g_buf_ub = tl.alloc_ub(8, dtype=tl.float32)");
+    for j in 0..n {
+        s.pf(format_args!("h{j}_ub = tl.alloc_ub(d, dtype=tl.float32)"));
+        s.pf(format_args!("y{j}_ub = tl.alloc_ub(d, dtype=tl.float32)"));
+    }
+    s.p("mrow_ub = tl.alloc_ub(d, dtype=tl.float32)");
+    s.p("tmp_ub = tl.alloc_ub(d, dtype=tl.float32)");
+    s.p("red_ub = tl.alloc_ub(8, dtype=tl.float32)");
+    s.open("with tl.copyin():");
+    s.pf(format_args!("tl.load(p_ptr, p_in_ub, {})", n * n));
+    s.pf(format_args!("tl.load(g_ptr, g_in_ub, {n})"));
+    s.close();
+    s.open("with tl.compute():");
+    s.pf(format_args!("tl.vcopy(p_buf_ub, p_in_ub, {})", n * n));
+    s.pf(format_args!("tl.vcopy(g_buf_ub, g_in_ub, {n})"));
+    s.close();
+    s.open("for ri in range(rows_per_core):");
+    s.p("row = row_start + ri");
+    s.open("with tl.copyin():");
+    for j in 0..n {
+        s.pf(format_args!("tl.load(h_ptr + {j} * stride + row * d, h{j}_ub, d)"));
+    }
+    s.close();
+    s.open("with tl.compute():");
+    for i in 0..n {
+        s.pf(format_args!("p0_{i} = tl.extract_scalar(p_buf_ub, 0 * {n} + {i})"));
+        s.pf(format_args!("tl.muls(mrow_ub, h0_ub, p0_{i}, d)"));
+        for j in 1..n {
+            s.pf(format_args!("p{j}_{i} = tl.extract_scalar(p_buf_ub, {j} * {n} + {i})"));
+            s.pf(format_args!("tl.muls(tmp_ub, h{j}_ub, p{j}_{i}, d)"));
+            s.p("tl.vadd(mrow_ub, mrow_ub, tmp_ub, d)");
+        }
+        s.p("tl.vmul(tmp_ub, mrow_ub, mrow_ub, d)");
+        s.p("tl.reduce_sum(red_ub, tmp_ub, d)");
+        s.pf(format_args!("inv_{i} = 1.0 / tl.sqrt(tl.extract_scalar(red_ub, 0) / d + 1e-5)"));
+        s.pf(format_args!("gi_{i} = tl.extract_scalar(g_buf_ub, {i})"));
+        s.pf(format_args!("tl.muls(y{i}_ub, mrow_ub, gi_{i} * inv_{i}, d)"));
+        s.pf(format_args!("tl.vadd(y{i}_ub, y{i}_ub, h{i}_ub, d)"));
+    }
+    s.close();
+    s.open("with tl.copyout():");
+    for i in 0..n {
+        s.pf(format_args!("tl.store(y_ptr + {i} * stride + row * d, y{i}_ub, d)"));
+    }
+    s.close();
+    s.close();
+    s.close();
+    s.blank();
+
+    s.open("def mhc_post_opt_host(h, w, g, p_scratch, y):");
+    host_tiling(&mut s);
+    s.p("sinkhorn_kernel[1](w, p_scratch)");
+    s.p("fused_post_kernel[n_cores](h, p_scratch, g, y, rows_per_core, d, stride)");
+    s.close();
+
+    (s.0, vec![("p_scratch".to_string(), vec![n * n])])
+}
+
+/// Generated mHC_post_grad: sinkhorn + mix (recompute M) + dM kernel +
+/// transpose-mix kernel, all through GM temporaries.
+pub fn grad_generated_dsl(dims: &MhcDims) -> (String, Vec<(String, Vec<usize>)>) {
+    let n = dims.n;
+    let mut s = S::new();
+    emit_sinkhorn(&mut s, dims);
+
+    // reuse the post mixing kernel to recompute M
+    s.p("@ascend_kernel");
+    s.open("def mix_kernel(h_ptr, p_ptr, m_ptr, rows_per_core, d, stride):");
+    s.p("pid = tl.program_id(0)");
+    s.p("row_start = pid * rows_per_core");
+    s.pf(format_args!("p_in_ub = tl.alloc_ub({}, dtype=tl.float32)", n * n));
+    s.pf(format_args!("p_buf_ub = tl.alloc_ub({}, dtype=tl.float32)", n * n));
+    for j in 0..n {
+        s.pf(format_args!("h{j}_ub = tl.alloc_ub(d, dtype=tl.float32)"));
+    }
+    s.p("m_out_ub = tl.alloc_ub(d, dtype=tl.float32)");
+    s.p("tmp_ub = tl.alloc_ub(d, dtype=tl.float32)");
+    s.open("with tl.copyin():");
+    s.pf(format_args!("tl.load(p_ptr, p_in_ub, {})", n * n));
+    s.close();
+    s.open("with tl.compute():");
+    s.pf(format_args!("tl.vcopy(p_buf_ub, p_in_ub, {})", n * n));
+    s.close();
+    s.openf(format_args!("for i in range({n}):"));
+    s.open("for ri in range(rows_per_core):");
+    s.p("row = row_start + ri");
+    s.open("with tl.copyin():");
+    for j in 0..n {
+        s.pf(format_args!("tl.load(h_ptr + {j} * stride + row * d, h{j}_ub, d)"));
+    }
+    s.close();
+    s.open("with tl.compute():");
+    s.pf(format_args!("p0 = tl.extract_scalar(p_buf_ub, 0 * {n} + i)"));
+    s.p("tl.muls(m_out_ub, h0_ub, p0, d)");
+    for j in 1..n {
+        s.pf(format_args!("p{j} = tl.extract_scalar(p_buf_ub, {j} * {n} + i)"));
+        s.pf(format_args!("tl.muls(tmp_ub, h{j}_ub, p{j}, d)"));
+        s.p("tl.vadd(m_out_ub, m_out_ub, tmp_ub, d)");
+    }
+    s.close();
+    s.open("with tl.copyout():");
+    s.p("tl.store(m_ptr + i * stride + row * d, m_out_ub, d)");
+    s.close();
+    s.close();
+    s.close();
+    s.close();
+    s.blank();
+
+    // dM kernel
+    s.p("@ascend_kernel");
+    s.open("def dm_kernel(m_ptr, dy_ptr, g_ptr, dm_ptr, rows_per_core, d, stride):");
+    s.p("pid = tl.program_id(0)");
+    s.p("row_start = pid * rows_per_core");
+    s.p("g_in_ub = tl.alloc_ub(8, dtype=tl.float32)");
+    s.p("g_buf_ub = tl.alloc_ub(8, dtype=tl.float32)");
+    s.p("mrow_ub = tl.alloc_ub(d, dtype=tl.float32)");
+    s.p("dyrow_ub = tl.alloc_ub(d, dtype=tl.float32)");
+    s.p("work_ub = tl.alloc_ub(d, dtype=tl.float32)");
+    s.p("dm_out_ub = tl.alloc_ub(d, dtype=tl.float32)");
+    s.p("red_ub = tl.alloc_ub(8, dtype=tl.float32)");
+    s.open("with tl.copyin():");
+    s.pf(format_args!("tl.load(g_ptr, g_in_ub, {n})"));
+    s.close();
+    s.open("with tl.compute():");
+    s.pf(format_args!("tl.vcopy(g_buf_ub, g_in_ub, {n})"));
+    s.close();
+    s.openf(format_args!("for i in range({n}):"));
+    s.open("for ri in range(rows_per_core):");
+    s.p("row = row_start + ri");
+    s.open("with tl.copyin():");
+    s.p("tl.load(m_ptr + i * stride + row * d, mrow_ub, d)");
+    s.p("tl.load(dy_ptr + i * stride + row * d, dyrow_ub, d)");
+    s.close();
+    s.open("with tl.compute():");
+    s.p("tl.vmul(work_ub, mrow_ub, mrow_ub, d)");
+    s.p("tl.reduce_sum(red_ub, work_ub, d)");
+    s.p("inv = 1.0 / tl.sqrt(tl.extract_scalar(red_ub, 0) / d + 1e-5)");
+    s.p("tl.vmul(work_ub, dyrow_ub, mrow_ub, d)");
+    s.p("tl.reduce_sum(red_ub, work_ub, d)");
+    s.p("dot = tl.extract_scalar(red_ub, 0)");
+    s.p("coef = inv * inv * inv / d * dot");
+    s.p("gi = tl.extract_scalar(g_buf_ub, i)");
+    s.p("tl.muls(dm_out_ub, dyrow_ub, gi * inv, d)");
+    s.p("tl.muls(work_ub, mrow_ub, gi * coef, d)");
+    s.p("tl.vsub(dm_out_ub, dm_out_ub, work_ub, d)");
+    s.close();
+    s.open("with tl.copyout():");
+    s.p("tl.store(dm_ptr + i * stride + row * d, dm_out_ub, d)");
+    s.close();
+    s.close();
+    s.close();
+    s.close();
+    s.blank();
+
+    // transpose mixing + residual
+    s.p("@ascend_kernel");
+    s.open("def backmix_kernel(dy_ptr, p_ptr, dm_ptr, dh_ptr, rows_per_core, d, stride):");
+    s.p("pid = tl.program_id(0)");
+    s.p("row_start = pid * rows_per_core");
+    s.pf(format_args!("p_in_ub = tl.alloc_ub({}, dtype=tl.float32)", n * n));
+    s.pf(format_args!("p_buf_ub = tl.alloc_ub({}, dtype=tl.float32)", n * n));
+    for i in 0..n {
+        s.pf(format_args!("dm{i}_ub = tl.alloc_ub(d, dtype=tl.float32)"));
+    }
+    s.p("dyrow_ub = tl.alloc_ub(d, dtype=tl.float32)");
+    s.p("dh_out_ub = tl.alloc_ub(d, dtype=tl.float32)");
+    s.p("tmp_ub = tl.alloc_ub(d, dtype=tl.float32)");
+    s.open("with tl.copyin():");
+    s.pf(format_args!("tl.load(p_ptr, p_in_ub, {})", n * n));
+    s.close();
+    s.open("with tl.compute():");
+    s.pf(format_args!("tl.vcopy(p_buf_ub, p_in_ub, {})", n * n));
+    s.close();
+    s.openf(format_args!("for j in range({n}):"));
+    s.open("for ri in range(rows_per_core):");
+    s.p("row = row_start + ri");
+    s.open("with tl.copyin():");
+    s.p("tl.load(dy_ptr + j * stride + row * d, dyrow_ub, d)");
+    for i in 0..n {
+        s.pf(format_args!("tl.load(dm_ptr + {i} * stride + row * d, dm{i}_ub, d)"));
+    }
+    s.close();
+    s.open("with tl.compute():");
+    s.p("tl.vcopy(dh_out_ub, dyrow_ub, d)");
+    for i in 0..n {
+        s.pf(format_args!("pj{i} = tl.extract_scalar(p_buf_ub, j * {n} + {i})"));
+        s.pf(format_args!("tl.muls(tmp_ub, dm{i}_ub, pj{i}, d)"));
+        s.p("tl.vadd(dh_out_ub, dh_out_ub, tmp_ub, d)");
+    }
+    s.close();
+    s.open("with tl.copyout():");
+    s.p("tl.store(dh_ptr + j * stride + row * d, dh_out_ub, d)");
+    s.close();
+    s.close();
+    s.close();
+    s.close();
+    s.blank();
+
+    s.open("def mhc_post_grad_host(h, w, g, dy, p_scratch, m_scratch, dm_scratch, dh):");
+    host_tiling(&mut s);
+    s.p("sinkhorn_kernel[1](w, p_scratch)");
+    s.p("mix_kernel[n_cores](h, p_scratch, m_scratch, rows_per_core, d, stride)");
+    s.p("dm_kernel[n_cores](m_scratch, dy, g, dm_scratch, rows_per_core, d, stride)");
+    s.p("backmix_kernel[n_cores](dy, p_scratch, dm_scratch, dh, rows_per_core, d, stride)");
+    s.close();
+
+    (
+        s.0,
+        vec![
+            ("p_scratch".to_string(), vec![n * n]),
+            ("m_scratch".to_string(), vec![n, dims.rows, dims.d]),
+            ("dm_scratch".to_string(), vec![n, dims.rows, dims.d]),
+        ],
+    )
+}
+
+/// Optimized mHC_post_grad: sinkhorn + one fused kernel (loads each row of
+/// H and dY once, computes every dH stream).
+pub fn grad_optimized_dsl(dims: &MhcDims) -> (String, Vec<(String, Vec<usize>)>) {
+    let n = dims.n;
+    let mut s = S::new();
+    emit_sinkhorn(&mut s, dims);
+
+    s.p("@ascend_kernel");
+    s.open("def fused_grad_kernel(h_ptr, p_ptr, g_ptr, dy_ptr, dh_ptr, rows_per_core, d, stride):");
+    s.p("pid = tl.program_id(0)");
+    s.p("row_start = pid * rows_per_core");
+    s.pf(format_args!("p_in_ub = tl.alloc_ub({}, dtype=tl.float32)", n * n));
+    s.pf(format_args!("p_buf_ub = tl.alloc_ub({}, dtype=tl.float32)", n * n));
+    s.p("g_in_ub = tl.alloc_ub(8, dtype=tl.float32)");
+    s.p("g_buf_ub = tl.alloc_ub(8, dtype=tl.float32)");
+    for j in 0..n {
+        s.pf(format_args!("h{j}_ub = tl.alloc_ub(d, dtype=tl.float32)"));
+        s.pf(format_args!("dy{j}_ub = tl.alloc_ub(d, dtype=tl.float32)"));
+        s.pf(format_args!("dh{j}_ub = tl.alloc_ub(d, dtype=tl.float32)"));
+        s.pf(format_args!("dm{j}_buf_ub = tl.alloc_ub(d, dtype=tl.float32)"));
+    }
+    s.p("mrow_ub = tl.alloc_ub(d, dtype=tl.float32)");
+    s.p("tmp_ub = tl.alloc_ub(d, dtype=tl.float32)");
+    s.p("red_ub = tl.alloc_ub(8, dtype=tl.float32)");
+    s.open("with tl.copyin():");
+    s.pf(format_args!("tl.load(p_ptr, p_in_ub, {})", n * n));
+    s.pf(format_args!("tl.load(g_ptr, g_in_ub, {n})"));
+    s.close();
+    s.open("with tl.compute():");
+    s.pf(format_args!("tl.vcopy(p_buf_ub, p_in_ub, {})", n * n));
+    s.pf(format_args!("tl.vcopy(g_buf_ub, g_in_ub, {n})"));
+    s.close();
+    s.open("for ri in range(rows_per_core):");
+    s.p("row = row_start + ri");
+    s.open("with tl.copyin():");
+    for j in 0..n {
+        s.pf(format_args!("tl.load(h_ptr + {j} * stride + row * d, h{j}_ub, d)"));
+        s.pf(format_args!("tl.load(dy_ptr + {j} * stride + row * d, dy{j}_ub, d)"));
+    }
+    s.close();
+    s.open("with tl.compute():");
+    // per output stream i: recompute M_i, inv, dot, dM_i
+    for i in 0..n {
+        s.pf(format_args!("q0_{i} = tl.extract_scalar(p_buf_ub, 0 * {n} + {i})"));
+        s.pf(format_args!("tl.muls(mrow_ub, h0_ub, q0_{i}, d)"));
+        for j in 1..n {
+            s.pf(format_args!("q{j}_{i} = tl.extract_scalar(p_buf_ub, {j} * {n} + {i})"));
+            s.pf(format_args!("tl.muls(tmp_ub, h{j}_ub, q{j}_{i}, d)"));
+            s.p("tl.vadd(mrow_ub, mrow_ub, tmp_ub, d)");
+        }
+        s.p("tl.vmul(tmp_ub, mrow_ub, mrow_ub, d)");
+        s.p("tl.reduce_sum(red_ub, tmp_ub, d)");
+        s.pf(format_args!("inv_{i} = 1.0 / tl.sqrt(tl.extract_scalar(red_ub, 0) / d + 1e-5)"));
+        s.pf(format_args!("tl.vmul(tmp_ub, dy{i}_ub, mrow_ub, d)"));
+        s.p("tl.reduce_sum(red_ub, tmp_ub, d)");
+        s.pf(format_args!("dot_{i} = tl.extract_scalar(red_ub, 0)"));
+        s.pf(format_args!("coef_{i} = inv_{i} * inv_{i} * inv_{i} / d * dot_{i}"));
+        s.pf(format_args!("gg_{i} = tl.extract_scalar(g_buf_ub, {i})"));
+        s.pf(format_args!("tl.muls(dm{i}_buf_ub, dy{i}_ub, gg_{i} * inv_{i}, d)"));
+        s.pf(format_args!("tl.muls(tmp_ub, mrow_ub, gg_{i} * coef_{i}, d)"));
+        s.pf(format_args!("tl.vsub(dm{i}_buf_ub, dm{i}_buf_ub, tmp_ub, d)"));
+    }
+    // dH[j] = dY[j] + sum_i P[j,i] dM[i]
+    for j in 0..n {
+        s.pf(format_args!("tl.vcopy(dh{j}_ub, dy{j}_ub, d)"));
+        for i in 0..n {
+            s.pf(format_args!("r{j}_{i} = tl.extract_scalar(p_buf_ub, {j} * {n} + {i})"));
+            s.pf(format_args!("tl.muls(tmp_ub, dm{i}_buf_ub, r{j}_{i}, d)"));
+            s.pf(format_args!("tl.vadd(dh{j}_ub, dh{j}_ub, tmp_ub, d)"));
+        }
+    }
+    s.close();
+    s.open("with tl.copyout():");
+    for j in 0..n {
+        s.pf(format_args!("tl.store(dh_ptr + {j} * stride + row * d, dh{j}_ub, d)"));
+    }
+    s.close();
+    s.close();
+    s.close();
+    s.blank();
+
+    s.open("def mhc_post_grad_opt_host(h, w, g, dy, p_scratch, dh):");
+    host_tiling(&mut s);
+    s.p("sinkhorn_kernel[1](w, p_scratch)");
+    s.p("fused_grad_kernel[n_cores](h, p_scratch, g, dy, dh, rows_per_core, d, stride)");
+    s.close();
+
+    (s.0, vec![("p_scratch".to_string(), vec![n * n])])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl;
+
+    #[test]
+    fn all_mhc_dsl_parses_and_validates() {
+        let dims = MhcDims::default();
+        for (name, (src, _)) in [
+            ("post_gen", post_generated_dsl(&dims)),
+            ("post_opt", post_optimized_dsl(&dims)),
+            ("grad_gen", grad_generated_dsl(&dims)),
+            ("grad_opt", grad_optimized_dsl(&dims)),
+        ] {
+            let r = dsl::frontend(&src);
+            assert!(r.is_ok(), "{name}: {:?}\n{src}", r.err());
+        }
+    }
+
+    #[test]
+    fn generated_post_has_three_kernels() {
+        let (src, scratch) = post_generated_dsl(&MhcDims::default());
+        let p = dsl::frontend(&src).unwrap();
+        assert_eq!(p.kernels().count(), 3);
+        assert_eq!(scratch.len(), 2);
+    }
+
+    #[test]
+    fn optimized_post_is_single_fused_kernel_plus_sinkhorn() {
+        let (src, scratch) = post_optimized_dsl(&MhcDims::default());
+        let p = dsl::frontend(&src).unwrap();
+        assert_eq!(p.kernels().count(), 2);
+        assert_eq!(scratch.len(), 1);
+    }
+}

@@ -1,0 +1,331 @@
+//! RQ3 case study: Manifold-Constrained Hyper-Connections (mHC) kernels.
+//!
+//! The paper applies AscendCraft to two kernels from DeepSeek's mHC
+//! architecture [Xie et al., 2026] — `mHC_post` and `mHC_post_grad` —
+//! novel operators outside any benchmark. The mHC paper itself is closed;
+//! we define a faithful manifold-constrained hyper-connection post-merge
+//! (DESIGN.md §Substitutions):
+//!
+//! * `mHC_post(H[n,R,D], W[n,n], g[n])`:
+//!   1. `P = Sinkhorn(exp(W))` — project the mixing matrix onto the
+//!      doubly-stochastic manifold (5 row/column normalization rounds);
+//!   2. `M[i] = Σ_j P[j,i] · H[j]` — constrained stream mixing;
+//!   3. `Y[i] = H[i] + g[i] · M[i] · rsqrt(mean_d(M[i]²) + ε)` — RMS-gated
+//!      residual merge.
+//! * `mHC_post_grad`: the VJP w.r.t. `H` with stop-gradient through the
+//!   Sinkhorn projection (standard practice):
+//!   `dM[i] = g[i]·(inv·dY[i] − M[i]·inv³/D·⟨dY[i],M[i]⟩)`,
+//!   `dH[j] = dY[j] + Σ_i P[j,i]·dM[i]`.
+//!
+//! Three execution paths are compared, as in the paper's RQ3:
+//! * **eager** — one tuned kernel per framework primitive (~30 launches);
+//! * **generated** — the pipeline's first-pass DSL: Sinkhorn kernel +
+//!   per-stream mixing kernel + RMS-gate kernel (GM temporaries between);
+//! * **optimized** — the human+LLM tuned variant: one fused kernel that
+//!   loads each row of every stream once and produces all outputs.
+
+pub mod kernels;
+pub mod reference;
+
+use crate::baselines::eager::eager_op_cycles;
+use crate::bench_suite::spec::EagerOp;
+use crate::sim;
+use crate::transpile::{self, TranspileOptions};
+use crate::util::compare::allclose_report;
+use crate::util::rng::XorShiftRng;
+use crate::util::tensor::Tensor;
+use std::collections::HashMap;
+
+/// Problem dimensions (representative shapes from the case study).
+#[derive(Clone, Copy, Debug)]
+pub struct MhcDims {
+    /// number of residual streams
+    pub n: usize,
+    /// rows (batch x sequence)
+    pub rows: usize,
+    /// hidden size
+    pub d: usize,
+    /// Sinkhorn iterations
+    pub sinkhorn_iters: usize,
+}
+
+impl Default for MhcDims {
+    fn default() -> MhcDims {
+        MhcDims { n: 4, rows: 1792, d: 1024, sinkhorn_iters: 5 }
+    }
+}
+
+impl MhcDims {
+    /// Representative case-study shape for mHC_post (forward merges run at
+    /// decode-like batch sizes; the speedup-vs-size sweep in rq3_mhc shows
+    /// this is the launch-bound regime the paper's 6.6x corresponds to).
+    pub fn post_default() -> MhcDims {
+        MhcDims { rows: 512, ..MhcDims::default() }
+    }
+
+    /// Representative shape for mHC_post_grad (training-scale rows).
+    pub fn grad_default() -> MhcDims {
+        MhcDims { rows: 1792, ..MhcDims::default() }
+    }
+}
+
+impl MhcDims {
+    pub fn numel(&self) -> usize {
+        self.n * self.rows * self.d
+    }
+}
+
+/// Deterministic case-study inputs.
+pub fn make_inputs(dims: &MhcDims, seed: u64, with_grad: bool) -> HashMap<String, Tensor> {
+    let mut rng = XorShiftRng::new(seed);
+    let mut m = HashMap::new();
+    m.insert(
+        "h".to_string(),
+        Tensor::new(vec![dims.n, dims.rows, dims.d], crate::util::tensor::DType::F32, rng.normal_vec(dims.numel())),
+    );
+    m.insert(
+        "w".to_string(),
+        Tensor::new(vec![dims.n, dims.n], crate::util::tensor::DType::F32, rng.uniform_vec(dims.n * dims.n, -0.5, 0.5)),
+    );
+    m.insert(
+        "g".to_string(),
+        Tensor::new(vec![dims.n], crate::util::tensor::DType::F32, rng.uniform_vec(dims.n, 0.5, 1.5)),
+    );
+    if with_grad {
+        m.insert(
+            "dy".to_string(),
+            Tensor::new(vec![dims.n, dims.rows, dims.d], crate::util::tensor::DType::F32, rng.normal_vec(dims.numel())),
+        );
+        m.insert("dh".to_string(), Tensor::zeros(&[dims.n, dims.rows, dims.d]));
+    } else {
+        m.insert("y".to_string(), Tensor::zeros(&[dims.n, dims.rows, dims.d]));
+    }
+    m
+}
+
+/// Eager decomposition of mHC_post: exp, 2k sinkhorn normalizations (tiny,
+/// launch-bound), n² mul + n(n-1) add mixing passes, rms (mul, mean, rsqrt,
+/// mul-row), gate (muls, add) per stream.
+pub fn eager_post_ops(dims: &MhcDims) -> Vec<EagerOp> {
+    let n = dims.n;
+    let nel = dims.rows * dims.d;
+    let mut ops = vec![EagerOp::map("Exp", n * n, n * n)];
+    // torch sinkhorn loop: sum / div per axis per iteration (tiny,
+    // launch-bound kernels)
+    for _ in 0..4 * dims.sinkhorn_iters {
+        ops.push(EagerOp::map("SinkhornStep", n * n, n * n));
+    }
+    // mixing via einsum('ji,jrd->ird'): eager materializes reshapes around
+    // a tiny-K batch matmul that runs far from roofline
+    ops.push(EagerOp::map("Reshape", n * nel, n * nel));
+    ops.push(EagerOp { name: "BmmTinyK", reads: 2 * n * nel, writes: n * nel, eff: 0.30 });
+    ops.push(EagerOp::map("Reshape", n * nel, n * nel));
+    for _ in 0..n {
+        ops.push(EagerOp::map("MulSelf", 2 * nel, nel)); // m*m
+        ops.push(EagerOp { name: "MeanRow", reads: nel, writes: dims.rows, eff: 0.9 });
+        ops.push(EagerOp::map("RsqrtRow", dims.rows, dims.rows));
+        ops.push(EagerOp::map("MulRow", nel + dims.rows, nel));
+        ops.push(EagerOp::map("MulsGate", nel, nel));
+        ops.push(EagerOp::map("Add", 2 * nel, nel));
+    }
+    ops
+}
+
+/// Eager decomposition of mHC_post_grad (more passes: dot products, scaled
+/// corrections, transpose mixing).
+pub fn eager_grad_ops(dims: &MhcDims) -> Vec<EagerOp> {
+    let n = dims.n;
+    let nel = dims.rows * dims.d;
+    let mut ops = vec![EagerOp::map("Exp", n * n, n * n)];
+    for _ in 0..2 * dims.sinkhorn_iters {
+        ops.push(EagerOp::map("SinkhornNormalize", n * n, n * n));
+    }
+    // recompute M (n² axpy), rms stats per stream
+    for _ in 0..n * n {
+        ops.push(EagerOp::map("Axpy", 2 * nel, nel));
+    }
+    for _ in 0..n {
+        ops.push(EagerOp::map("MulSelf", 2 * nel, nel));
+        ops.push(EagerOp { name: "MeanRow", reads: nel, writes: dims.rows, eff: 0.9 });
+        ops.push(EagerOp::map("RsqrtRow", dims.rows, dims.rows));
+        // dot(dy, m) per row + two correction passes + gate
+        ops.push(EagerOp::map("MulDot", 2 * nel, nel));
+        ops.push(EagerOp { name: "SumRow", reads: nel, writes: dims.rows, eff: 0.9 });
+        ops.push(EagerOp::map("ScaleCorrect", 2 * nel + dims.rows, nel));
+        ops.push(EagerOp::map("MulsGate", nel, nel));
+    }
+    // transpose mixing back + residual add
+    for _ in 0..n * n {
+        ops.push(EagerOp::map("Axpy", 2 * nel, nel));
+    }
+    for _ in 0..n {
+        ops.push(EagerOp::map("Add", 2 * nel, nel));
+    }
+    ops
+}
+
+pub fn eager_cycles(ops: &[EagerOp]) -> f64 {
+    ops.iter().map(|o| eager_op_cycles(o, sim::cost::NUM_CORES)).sum()
+}
+
+/// Result of one mHC variant run.
+#[derive(Clone, Debug)]
+pub struct MhcRun {
+    pub variant: &'static str,
+    pub correct: bool,
+    pub cycles: f64,
+    pub speedup_vs_eager: f64,
+    pub failure: Option<String>,
+}
+
+/// Run one variant (generated or optimized) of one kernel (post or grad).
+pub fn run_variant(
+    kernel: MhcKernel,
+    variant: MhcVariant,
+    dims: &MhcDims,
+    seed: u64,
+) -> MhcRun {
+    let name = match (kernel, variant) {
+        (MhcKernel::Post, MhcVariant::Generated) => "mhc_post/generated",
+        (MhcKernel::Post, MhcVariant::Optimized) => "mhc_post/optimized",
+        (MhcKernel::PostGrad, MhcVariant::Generated) => "mhc_post_grad/generated",
+        (MhcKernel::PostGrad, MhcVariant::Optimized) => "mhc_post_grad/optimized",
+    };
+    let is_grad = kernel == MhcKernel::PostGrad;
+    let mut inputs = make_inputs(dims, seed, is_grad);
+    let (dsl, scratch) = match (kernel, variant) {
+        (MhcKernel::Post, MhcVariant::Generated) => kernels::post_generated_dsl(dims),
+        (MhcKernel::Post, MhcVariant::Optimized) => kernels::post_optimized_dsl(dims),
+        (MhcKernel::PostGrad, MhcVariant::Generated) => kernels::grad_generated_dsl(dims),
+        (MhcKernel::PostGrad, MhcVariant::Optimized) => kernels::grad_optimized_dsl(dims),
+    };
+    for (n, shape) in &scratch {
+        inputs.insert(n.clone(), Tensor::zeros(shape));
+    }
+    let eager = eager_cycles(&if is_grad { eager_grad_ops(dims) } else { eager_post_ops(dims) });
+    let fail = |msg: String| MhcRun {
+        variant: name,
+        correct: false,
+        cycles: f64::NAN,
+        speedup_vs_eager: 0.0,
+        failure: Some(msg),
+    };
+
+    let program = match crate::dsl::frontend(&dsl) {
+        Ok(p) => p,
+        Err(d) => return fail(format!("DSL: {}", d[0].message)),
+    };
+    let out = match transpile::transpile(&program, &inputs, &TranspileOptions::default()) {
+        Ok(o) => o,
+        Err(e) => return fail(format!("transpile: {e}")),
+    };
+    if let Some(err) = out.diagnostics.iter().find(|d| d.is_error()) {
+        return fail(format!("compile: {}", err.message));
+    }
+    let sim_out = match sim::simulate(&out.program, &inputs) {
+        Ok(o) => o,
+        Err(e) => return fail(format!("simulate: {e}")),
+    };
+    let want = if is_grad {
+        reference::post_grad_reference(dims, &inputs)
+    } else {
+        reference::post_reference(dims, &inputs)
+    };
+    let out_name = if is_grad { "dh" } else { "y" };
+    let rep = allclose_report(&sim_out.tensors[out_name], &want, 2e-3, 2e-4);
+    MhcRun {
+        variant: name,
+        correct: rep.ok,
+        cycles: sim_out.timing.total_cycles,
+        speedup_vs_eager: eager / sim_out.timing.total_cycles,
+        failure: if rep.ok { None } else { Some(rep.summary()) },
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MhcKernel {
+    Post,
+    PostGrad,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MhcVariant {
+    Generated,
+    Optimized,
+}
+
+/// Full RQ3 case study: both kernels, both variants, at one shared shape.
+pub fn run_case_study(dims: &MhcDims, seed: u64) -> Vec<MhcRun> {
+    vec![
+        run_variant(MhcKernel::Post, MhcVariant::Generated, dims, seed),
+        run_variant(MhcKernel::Post, MhcVariant::Optimized, dims, seed),
+        run_variant(MhcKernel::PostGrad, MhcVariant::Generated, dims, seed),
+        run_variant(MhcKernel::PostGrad, MhcVariant::Optimized, dims, seed),
+    ]
+}
+
+/// The paper's RQ3 configuration: each kernel at its representative shape
+/// (post at decode-like rows, grad at training-scale rows).
+pub fn run_case_study_paper_shapes(seed: u64) -> Vec<MhcRun> {
+    let post = MhcDims::post_default();
+    let grad = MhcDims::grad_default();
+    vec![
+        run_variant(MhcKernel::Post, MhcVariant::Generated, &post, seed),
+        run_variant(MhcKernel::Post, MhcVariant::Optimized, &post, seed),
+        run_variant(MhcKernel::PostGrad, MhcVariant::Generated, &grad, seed),
+        run_variant(MhcKernel::PostGrad, MhcVariant::Optimized, &grad, seed),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> MhcDims {
+        MhcDims { n: 4, rows: 64, d: 256, sinkhorn_iters: 5 }
+    }
+
+    #[test]
+    fn post_generated_is_correct() {
+        let r = run_variant(MhcKernel::Post, MhcVariant::Generated, &small(), 3);
+        assert!(r.correct, "{:?}", r.failure);
+        assert!(r.speedup_vs_eager > 1.0, "speedup {}", r.speedup_vs_eager);
+    }
+
+    #[test]
+    fn post_optimized_is_correct_and_faster() {
+        let g = run_variant(MhcKernel::Post, MhcVariant::Generated, &small(), 3);
+        let o = run_variant(MhcKernel::Post, MhcVariant::Optimized, &small(), 3);
+        assert!(o.correct, "{:?}", o.failure);
+        assert!(o.cycles < g.cycles, "optimized {} vs generated {}", o.cycles, g.cycles);
+    }
+
+    #[test]
+    fn grad_generated_is_correct() {
+        let r = run_variant(MhcKernel::PostGrad, MhcVariant::Generated, &small(), 3);
+        assert!(r.correct, "{:?}", r.failure);
+    }
+
+    #[test]
+    fn grad_optimized_is_correct_and_faster() {
+        let g = run_variant(MhcKernel::PostGrad, MhcVariant::Generated, &small(), 3);
+        let o = run_variant(MhcKernel::PostGrad, MhcVariant::Optimized, &small(), 3);
+        assert!(o.correct, "{:?}", o.failure);
+        assert!(o.cycles < g.cycles);
+    }
+
+    #[test]
+    fn sinkhorn_projection_is_doubly_stochastic() {
+        let dims = small();
+        let inputs = make_inputs(&dims, 5, false);
+        let p = reference::sinkhorn(&inputs["w"], dims.n, dims.sinkhorn_iters);
+        for r in 0..dims.n {
+            let row: f32 = (0..dims.n).map(|c| p[r * dims.n + c]).sum();
+            assert!((row - 1.0).abs() < 1e-3, "row {r} sums to {row}");
+        }
+        for c in 0..dims.n {
+            let col: f32 = (0..dims.n).map(|r| p[r * dims.n + c]).sum();
+            assert!((col - 1.0).abs() < 1e-2, "col {c} sums to {col}");
+        }
+    }
+}

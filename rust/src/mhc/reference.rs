@@ -1,0 +1,179 @@
+//! Host reference implementations of the mHC kernels (the "PyTorch
+//! reference behavior" the paper hands to the pipeline as the task spec).
+
+use super::MhcDims;
+use crate::util::tensor::Tensor;
+use std::collections::HashMap;
+
+/// Sinkhorn projection of exp(W) onto the doubly-stochastic manifold.
+pub fn sinkhorn(w: &Tensor, n: usize, iters: usize) -> Vec<f32> {
+    let mut p: Vec<f32> = w.data.iter().map(|&v| v.exp()).collect();
+    for _ in 0..iters {
+        // row normalize
+        for r in 0..n {
+            let s: f32 = p[r * n..(r + 1) * n].iter().sum();
+            for c in 0..n {
+                p[r * n + c] /= s;
+            }
+        }
+        // column normalize
+        for c in 0..n {
+            let s: f32 = (0..n).map(|r| p[r * n + c]).sum();
+            for r in 0..n {
+                p[r * n + c] /= s;
+            }
+        }
+    }
+    p
+}
+
+const EPS: f32 = 1e-5;
+
+/// Y[i] = H[i] + g[i] * M[i] * rsqrt(mean_d(M[i]^2) + eps),
+/// M[i] = sum_j P[j,i] H[j].
+pub fn post_reference(dims: &MhcDims, inputs: &HashMap<String, Tensor>) -> Tensor {
+    let (n, rows, d) = (dims.n, dims.rows, dims.d);
+    let h = &inputs["h"];
+    let g = &inputs["g"];
+    let p = sinkhorn(&inputs["w"], n, dims.sinkhorn_iters);
+    let mut y = vec![0f32; h.numel()];
+    let stride = rows * d;
+    let mut m_row = vec![0f32; d];
+    for i in 0..n {
+        for r in 0..rows {
+            // mix
+            for x in m_row.iter_mut() {
+                *x = 0.0;
+            }
+            for j in 0..n {
+                let pji = p[j * n + i];
+                let src = &h.data[j * stride + r * d..j * stride + (r + 1) * d];
+                for (mx, &hv) in m_row.iter_mut().zip(src) {
+                    *mx += pji * hv;
+                }
+            }
+            // rms gate
+            let ms = m_row.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / d as f64;
+            let inv = 1.0 / ((ms as f32) + EPS).sqrt();
+            let dst = &mut y[i * stride + r * d..i * stride + (r + 1) * d];
+            let src = &h.data[i * stride + r * d..i * stride + (r + 1) * d];
+            for k in 0..d {
+                dst[k] = src[k] + g.data[i] * m_row[k] * inv;
+            }
+        }
+    }
+    Tensor::new(vec![n, rows, d], crate::util::tensor::DType::F32, y)
+}
+
+/// VJP w.r.t. H (stop-gradient through Sinkhorn):
+/// inv = rsqrt(mean(M^2)+eps); dM = g*(inv*dY - M*inv^3/D*<dY,M>)
+/// dH[j] = dY[j] + sum_i P[j,i] dM[i].
+pub fn post_grad_reference(dims: &MhcDims, inputs: &HashMap<String, Tensor>) -> Tensor {
+    let (n, rows, d) = (dims.n, dims.rows, dims.d);
+    let h = &inputs["h"];
+    let g = &inputs["g"];
+    let dy = &inputs["dy"];
+    let p = sinkhorn(&inputs["w"], n, dims.sinkhorn_iters);
+    let stride = rows * d;
+    let mut dh: Vec<f32> = dy.data.clone();
+    let mut m_row = vec![0f32; d];
+    let mut dm_row = vec![0f32; d];
+    for i in 0..n {
+        for r in 0..rows {
+            for x in m_row.iter_mut() {
+                *x = 0.0;
+            }
+            for j in 0..n {
+                let pji = p[j * n + i];
+                let src = &h.data[j * stride + r * d..j * stride + r * d + d];
+                for (mx, &hv) in m_row.iter_mut().zip(src) {
+                    *mx += pji * hv;
+                }
+            }
+            let ms = m_row.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / d as f64;
+            let inv = 1.0 / ((ms as f32) + EPS).sqrt();
+            let dyr = &dy.data[i * stride + r * d..i * stride + (r + 1) * d];
+            let dot = dyr
+                .iter()
+                .zip(&m_row)
+                .map(|(&a, &b)| (a as f64) * (b as f64))
+                .sum::<f64>() as f32;
+            let coef = inv * inv * inv / d as f32 * dot;
+            for k in 0..d {
+                dm_row[k] = g.data[i] * (inv * dyr[k] - m_row[k] * coef);
+            }
+            for j in 0..n {
+                let pji = p[j * n + i];
+                let dst = &mut dh[j * stride + r * d..j * stride + (r + 1) * d];
+                for (dv, &dmv) in dst.iter_mut().zip(&dm_row) {
+                    *dv += pji * dmv;
+                }
+            }
+        }
+    }
+    Tensor::new(vec![n, rows, d], crate::util::tensor::DType::F32, dh)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mhc::make_inputs;
+
+    fn dims() -> MhcDims {
+        MhcDims { n: 4, rows: 8, d: 64, sinkhorn_iters: 5 }
+    }
+
+    #[test]
+    fn post_reference_shapes() {
+        let d = dims();
+        let inputs = make_inputs(&d, 1, false);
+        let y = post_reference(&d, &inputs);
+        assert_eq!(y.shape, vec![4, 8, 64]);
+        assert!(y.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn zero_gate_returns_residual() {
+        let d = dims();
+        let mut inputs = make_inputs(&d, 1, false);
+        inputs.insert("g".to_string(), Tensor::zeros(&[4]));
+        let y = post_reference(&d, &inputs);
+        assert_eq!(y.data, inputs["h"].data);
+    }
+
+    #[test]
+    fn grad_matches_finite_differences() {
+        // directional finite-difference check of the VJP
+        let d = MhcDims { n: 2, rows: 2, d: 16, sinkhorn_iters: 5 };
+        let inputs = make_inputs(&d, 7, true);
+        let dh = post_grad_reference(&d, &inputs);
+        let dy = &inputs["dy"];
+        let h = &inputs["h"];
+        // pick a direction v; <dh, v> should equal d/dt <Y(h + t v), dy>
+        let mut rng = crate::util::rng::XorShiftRng::new(99);
+        let v: Vec<f32> = rng.normal_vec(h.numel());
+        let eps = 1e-3f32;
+        let mut ip = inputs.clone();
+        ip.insert(
+            "h".to_string(),
+            Tensor::new(h.shape.clone(), h.dtype, h.data.iter().zip(&v).map(|(&a, &b)| a + eps * b).collect()),
+        );
+        let mut im = inputs.clone();
+        im.insert(
+            "h".to_string(),
+            Tensor::new(h.shape.clone(), h.dtype, h.data.iter().zip(&v).map(|(&a, &b)| a - eps * b).collect()),
+        );
+        let yp = post_reference(&d, &ip);
+        let ym = post_reference(&d, &im);
+        let fd: f64 = yp
+            .data
+            .iter()
+            .zip(&ym.data)
+            .zip(&dy.data)
+            .map(|((&a, &b), &g)| ((a - b) as f64) / (2.0 * eps as f64) * g as f64)
+            .sum();
+        let an: f64 = dh.data.iter().zip(&v).map(|(&a, &b)| (a as f64) * (b as f64)).sum();
+        let rel = (fd - an).abs() / an.abs().max(1e-9);
+        assert!(rel < 2e-2, "finite diff {fd} vs analytic {an} (rel {rel})");
+    }
+}

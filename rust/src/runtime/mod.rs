@@ -1,0 +1,189 @@
+//! PJRT runtime: loads AOT-compiled JAX reference computations (HLO text in
+//! `artifacts/*.hlo.txt`) and executes them on the XLA CPU client. This is
+//! the L2 golden oracle — an *independent* numerical reference produced by
+//! the JAX/Pallas build path, cross-checked against the Rust references and
+//! used for Pass@1 verification of the showcase kernels.
+//!
+//! Interchange is HLO **text**, not serialized `HloModuleProto`: jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use crate::util::tensor::Tensor;
+use anyhow::{anyhow, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// A loaded, compiled golden computation.
+pub struct GoldenOracle {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+thread_local! {
+    // PjRtClient is Rc-backed (not Send); keep one per thread. Oracle use
+    // is confined to the main thread in practice (CLI, tests, benches).
+    static CLIENT: RefCell<Option<xla::PjRtClient>> = const { RefCell::new(None) };
+}
+
+/// Run `f` with the thread's lazily-created CPU client.
+fn with_client<T>(f: impl FnOnce(&xla::PjRtClient) -> Result<T>) -> Result<T> {
+    CLIENT.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        if slot.is_none() {
+            *slot = Some(xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e}"))?);
+        }
+        f(slot.as_ref().unwrap())
+    })
+}
+
+impl GoldenOracle {
+    /// Load an HLO text artifact and compile it.
+    pub fn load(path: &Path) -> Result<GoldenOracle> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = with_client(|c| {
+            c.compile(&comp).with_context(|| format!("compiling {path:?}"))
+        })?;
+        Ok(GoldenOracle {
+            exe,
+            name: path.file_stem().and_then(|s| s.to_str()).unwrap_or("oracle").to_string(),
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with f32 tensor inputs; returns the tuple of outputs.
+    /// (aot.py lowers with `return_tuple=True`.)
+    pub fn run(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let shape: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(&t.data)
+                    .reshape(&shape)
+                    .map_err(|e| anyhow!("reshape literal: {e}"))
+            })
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {}: {e}", self.name))?;
+        let out = result[0][0].to_literal_sync().map_err(|e| anyhow!("sync: {e}"))?;
+        let tuple = out.to_tuple().map_err(|e| anyhow!("untuple: {e}"))?;
+        tuple
+            .into_iter()
+            .map(|lit| {
+                let shape = lit.array_shape().map_err(|e| anyhow!("shape: {e}"))?;
+                let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+                let data = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))?;
+                Ok(Tensor::new(if dims.is_empty() { vec![1] } else { dims }, crate::util::tensor::DType::F32, data))
+            })
+            .collect()
+    }
+}
+
+/// Registry of golden oracles found under an artifacts directory
+/// (single-threaded: PJRT objects are Rc-backed).
+pub struct OracleRegistry {
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<GoldenOracle>>>,
+}
+
+impl OracleRegistry {
+    pub fn new(dir: impl Into<PathBuf>) -> OracleRegistry {
+        OracleRegistry { dir: dir.into(), cache: RefCell::new(HashMap::new()) }
+    }
+
+    /// Default artifacts directory (repo-local `artifacts/`).
+    pub fn default_dir() -> OracleRegistry {
+        OracleRegistry::new("artifacts")
+    }
+
+    /// Is the artifact for `name` present on disk?
+    pub fn available(&self, name: &str) -> bool {
+        self.path(name).exists()
+    }
+
+    fn path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    /// Load (and cache) the oracle for `name`.
+    pub fn get(&self, name: &str) -> Result<Rc<GoldenOracle>> {
+        if let Some(o) = self.cache.borrow().get(name) {
+            return Ok(Rc::clone(o));
+        }
+        let oracle = Rc::new(GoldenOracle::load(&self.path(name))?);
+        self.cache.borrow_mut().insert(name.to_string(), Rc::clone(&oracle));
+        Ok(oracle)
+    }
+
+    /// All artifact names present.
+    pub fn list(&self) -> Vec<String> {
+        let mut names = Vec::new();
+        if let Ok(entries) = std::fs::read_dir(&self.dir) {
+            for e in entries.flatten() {
+                if let Some(n) = e.file_name().to_str() {
+                    if let Some(stem) = n.strip_suffix(".hlo.txt") {
+                        names.push(stem.to_string());
+                    }
+                }
+            }
+        }
+        names.sort();
+        names
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // These tests only run when artifacts exist (make artifacts);
+    // cargo test stays self-contained without them.
+
+    #[test]
+    fn registry_lists_missing_dir_gracefully() {
+        let r = OracleRegistry::new("/nonexistent/dir");
+        assert!(r.list().is_empty());
+        assert!(!r.available("softmax"));
+    }
+
+    #[test]
+    fn golden_softmax_matches_rust_reference() {
+        let reg = OracleRegistry::default_dir();
+        if !reg.available("softmax") {
+            eprintln!("skipping: artifacts/softmax.hlo.txt not built");
+            return;
+        }
+        let oracle = reg.get("softmax").unwrap();
+        let task = crate::bench_suite::tasks::task_by_name("softmax").unwrap();
+        let inputs = task.make_inputs(11);
+        let want = task.reference(&inputs);
+        let got = oracle.run(&[&inputs["x"]]).unwrap();
+        assert_eq!(got.len(), 1);
+        assert!(crate::util::compare::allclose(&got[0], &want["y"], 1e-4, 1e-5));
+    }
+
+    #[test]
+    fn golden_gelu_matches_rust_reference() {
+        let reg = OracleRegistry::default_dir();
+        if !reg.available("gelu") {
+            eprintln!("skipping: artifacts/gelu.hlo.txt not built");
+            return;
+        }
+        let oracle = reg.get("gelu").unwrap();
+        let task = crate::bench_suite::tasks::task_by_name("gelu").unwrap();
+        let inputs = task.make_inputs(13);
+        let want = task.reference(&inputs);
+        let got = oracle.run(&[&inputs["x"]]).unwrap();
+        assert!(crate::util::compare::allclose(&got[0], &want["y"], 1e-3, 1e-4));
+    }
+}

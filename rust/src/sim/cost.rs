@@ -1,0 +1,140 @@
+//! Cycle-cost model for the simulated Ascend AI Core.
+//!
+//! The constants approximate 910B-class ratios rather than absolute
+//! datasheet numbers — what matters for reproducing the paper's Table 2 is
+//! the *relative* price of scalar vs vector vs MTE work and the benefit of
+//! pipelining/fusion, not nanoseconds. All times are in core cycles
+//! (~1.8 GHz on 910B, so 1 cycle ≈ 0.55 ns if a wall-clock mapping is ever
+//! needed).
+//!
+//! Sources for the shape of the model: the Ascend architecture paper
+//! [Liao et al., HPCA'21], the ASPLOS'25 operator-optimization study the
+//! paper cites ([Zhou et al.]), and the AscendC programming guide's
+//! documented per-instruction issue overheads.
+
+/// Number of AI Cores available for block-parallel execution (910B2-class).
+pub const NUM_CORES: usize = 32;
+
+/// Unified Buffer capacity per core, bytes (910B: 192 KiB).
+pub const UB_BYTES: usize = 192 * 1024;
+
+/// Vector unit: bytes processed per cycle per operand stream
+/// (910B VECTOR: 256B/cycle fused-ops lanes; we model 256B/c throughput).
+pub const VEC_BYTES_PER_CYCLE: f64 = 256.0;
+
+/// Fixed issue overhead per vector instruction, cycles.
+pub const VEC_ISSUE: f64 = 16.0;
+
+/// Reduction ops run a tree pass over the tile: ~2x elementwise traffic.
+pub const REDUCE_FACTOR: f64 = 2.0;
+
+/// Scalar unit: cycles per scalar ALU op / per GetValue/SetValue access.
+/// UB scalar access is slow (no cache between Scalar unit and UB), which is
+/// why scalar inner loops (pooling boundaries, scans) hurt — the effect the
+/// paper's Reduce/Pooling discussion relies on.
+pub const SCALAR_OP: f64 = 1.0;
+pub const SCALAR_UB_ACCESS: f64 = 6.0;
+
+/// Per-iteration loop bookkeeping on the Scalar unit (compare + branch +
+/// increment).
+pub const LOOP_OVERHEAD: f64 = 4.0;
+
+/// MTE2 (GM -> UB): bytes per cycle per transfer engine. 910B HBM gives
+/// ~1.6 TB/s across 24 cores ≈ 64 B/cycle/core sustained.
+pub const MTE2_BYTES_PER_CYCLE: f64 = 64.0;
+
+/// MTE3 (UB -> GM): slightly lower effective write bandwidth.
+pub const MTE3_BYTES_PER_CYCLE: f64 = 56.0;
+
+/// Fixed latency per DataCopy transfer (descriptor setup + HBM latency).
+pub const MTE_LATENCY: f64 = 250.0;
+
+/// DataCopyPad pays extra descriptor work for pad/stride handling.
+pub const MTE_PAD_EXTRA: f64 = 120.0;
+
+/// Cube unit: one 16x16x16 fp16 MACC block per cycle (f32 accumulate).
+pub const CUBE_TILE: f64 = 16.0;
+pub const CUBE_ISSUE: f64 = 32.0;
+
+/// Kernel launch overhead, cycles (runtime dispatch + tiling upload). The
+/// eager baseline pays this once per *primitive*; a fused generated kernel
+/// pays it once per *operator* — a first-order term the paper's Optimizer
+/// and Loss speedups come from.
+pub const LAUNCH_OVERHEAD: f64 = 30_000.0;
+
+/// Cross-core SyncAll barrier cost, cycles.
+pub const SYNC_ALL: f64 = 1_500.0;
+
+/// Queue EnQue/DeQue handshake cost, cycles.
+pub const QUEUE_OP: f64 = 8.0;
+
+/// Cost of a vector instruction over `n` elements of `esize`-byte dtype.
+pub fn vec_cycles(n: f64, esize: f64) -> f64 {
+    VEC_ISSUE + (n * esize / VEC_BYTES_PER_CYCLE).ceil()
+}
+
+/// Cost of a whole-tile reduction over `n` elements.
+pub fn reduce_cycles(n: f64, esize: f64) -> f64 {
+    VEC_ISSUE + (REDUCE_FACTOR * n * esize / VEC_BYTES_PER_CYCLE).ceil()
+}
+
+/// Cost of a GM->UB transfer of `bytes`.
+pub fn mte2_cycles(bytes: f64, padded: bool) -> f64 {
+    MTE_LATENCY + if padded { MTE_PAD_EXTRA } else { 0.0 } + (bytes / MTE2_BYTES_PER_CYCLE).ceil()
+}
+
+/// Cost of a UB->GM transfer of `bytes`.
+pub fn mte3_cycles(bytes: f64, padded: bool) -> f64 {
+    MTE_LATENCY + if padded { MTE_PAD_EXTRA } else { 0.0 } + (bytes / MTE3_BYTES_PER_CYCLE).ceil()
+}
+
+/// Cost of an m×k×n Mmad on the Cube unit.
+pub fn cube_cycles(m: f64, k: f64, n: f64) -> f64 {
+    CUBE_ISSUE
+        + (m / CUBE_TILE).ceil() * (k / CUBE_TILE).ceil() * (n / CUBE_TILE).ceil()
+}
+
+/// Scalar-unit prefix scan over n elements (read + op + write per element).
+pub fn scan_cycles(n: f64) -> f64 {
+    n * (2.0 * SCALAR_UB_ACCESS + SCALAR_OP + LOOP_OVERHEAD)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vector_cheaper_than_scalar_per_element() {
+        // 1024 f32 elements: vector ~32+16 cycles, scalar loop ~17k cycles.
+        let v = vec_cycles(1024.0, 4.0);
+        let s = scan_cycles(1024.0);
+        assert!(v * 50.0 < s, "vector {v} vs scalar {s}");
+    }
+
+    #[test]
+    fn mte_latency_dominates_small_transfers() {
+        let small = mte2_cycles(32.0, false);
+        assert!(small > 200.0);
+        let big = mte2_cycles(64.0 * 10_000.0, false);
+        assert!(big < MTE_LATENCY + 10_001.0);
+    }
+
+    #[test]
+    fn pad_costs_more() {
+        assert!(mte2_cycles(4096.0, true) > mte2_cycles(4096.0, false));
+    }
+
+    #[test]
+    fn cube_scales_with_tiles() {
+        let one = cube_cycles(16.0, 16.0, 16.0);
+        let eight = cube_cycles(32.0, 32.0, 32.0);
+        assert_eq!(eight - CUBE_ISSUE, 8.0 * (one - CUBE_ISSUE));
+    }
+
+    #[test]
+    fn reduce_twice_elementwise() {
+        let e = vec_cycles(4096.0, 4.0) - VEC_ISSUE;
+        let r = reduce_cycles(4096.0, 4.0) - VEC_ISSUE;
+        assert!((r / e - REDUCE_FACTOR).abs() < 0.01);
+    }
+}

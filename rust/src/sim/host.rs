@@ -1,0 +1,227 @@
+//! Host-side evaluation: runs an `AscHost` against concrete input tensors
+//! to produce the tiling environment and launch configuration. This is the
+//! simulated analogue of the AscendC host program computing `TilingData`
+//! and calling the kernel with a blockDim.
+//!
+//! The tiling environment doubles as the `ValidateEnv` the AscendC
+//! validator uses to decide alignment — the same values the real toolchain
+//! would see at tiling time.
+
+use super::SimError;
+use crate::ascendc::ir::*;
+use crate::util::tensor::Tensor;
+use std::collections::HashMap;
+
+/// Result of evaluating the host program.
+#[derive(Clone, Debug)]
+pub struct HostEval {
+    /// Tiling fields, in declaration order.
+    pub tiling: HashMap<String, i64>,
+    /// One entry per launch: (kernel name, block_dim, argument tensor names).
+    pub launches: Vec<(String, usize, Vec<String>)>,
+}
+
+/// Evaluate host tiling assignments + launches against input shapes.
+pub fn eval_host(
+    host: &AscHost,
+    tensors: &HashMap<String, Tensor>,
+) -> Result<HostEval, SimError> {
+    let mut tiling: HashMap<String, i64> = HashMap::new();
+    for (name, expr) in &host.tiling_assigns {
+        let v = eval_host_expr(expr, &tiling, tensors)?;
+        tiling.insert(name.clone(), v);
+    }
+    let mut launches = Vec::new();
+    for launch in &host.launches {
+        let bd = eval_host_expr(&launch.block_dim, &tiling, tensors)?;
+        if bd <= 0 {
+            return Err(SimError::Host(format!(
+                "launch of '{}' with non-positive blockDim {bd}",
+                launch.kernel
+            )));
+        }
+        if bd > 65_536 {
+            return Err(SimError::Host(format!(
+                "launch of '{}' with absurd blockDim {bd}",
+                launch.kernel
+            )));
+        }
+        for arg in &launch.args {
+            if !tensors.contains_key(arg) {
+                return Err(SimError::Host(format!(
+                    "launch argument '{arg}' is not a bound host tensor"
+                )));
+            }
+        }
+        launches.push((launch.kernel.clone(), bd as usize, launch.args.clone()));
+    }
+    Ok(HostEval { tiling, launches })
+}
+
+/// Evaluate a host scalar expression. Host arithmetic is integer-valued
+/// (tile counts, offsets); float subexpressions are truncated at the end.
+pub fn eval_host_expr(
+    e: &CExpr,
+    tiling: &HashMap<String, i64>,
+    tensors: &HashMap<String, Tensor>,
+) -> Result<i64, SimError> {
+    let v = eval_f(e, tiling, tensors)?;
+    Ok(v as i64)
+}
+
+fn eval_f(
+    e: &CExpr,
+    tiling: &HashMap<String, i64>,
+    tensors: &HashMap<String, Tensor>,
+) -> Result<f64, SimError> {
+    Ok(match e {
+        CExpr::Int(v) => *v as f64,
+        CExpr::Float(v) => *v,
+        CExpr::Var(n) => *tiling
+            .get(n)
+            .ok_or_else(|| SimError::Host(format!("host variable '{n}' undefined")))?
+            as f64,
+        CExpr::ShapeOf(arg, dim) => {
+            let t = tensors
+                .get(arg)
+                .ok_or_else(|| SimError::Host(format!("shape of unknown tensor '{arg}'")))?;
+            *t.shape.get(*dim).ok_or_else(|| {
+                SimError::Host(format!("tensor '{arg}' has no dimension {dim} (shape {:?})", t.shape))
+            })? as f64
+        }
+        CExpr::GetBlockIdx => {
+            return Err(SimError::Host("GetBlockIdx() in host code".into()));
+        }
+        CExpr::Min(a, b) => eval_f(a, tiling, tensors)?.min(eval_f(b, tiling, tensors)?),
+        CExpr::Max(a, b) => eval_f(a, tiling, tensors)?.max(eval_f(b, tiling, tensors)?),
+        CExpr::Un(f, a) => {
+            let x = eval_f(a, tiling, tensors)?;
+            match f {
+                CUnFn::Neg => -x,
+                CUnFn::Not => (x == 0.0) as i64 as f64,
+                CUnFn::Exp => x.exp(),
+                CUnFn::Ln => x.ln(),
+                CUnFn::Sqrt => x.sqrt(),
+                CUnFn::Abs => x.abs(),
+            }
+        }
+        CExpr::Bin(op, a, b) => {
+            let (a, b) = (eval_f(a, tiling, tensors)?, eval_f(b, tiling, tensors)?);
+            match op {
+                CBinOp::Add => a + b,
+                CBinOp::Sub => a - b,
+                CBinOp::Mul => a * b,
+                CBinOp::Div => {
+                    if b == 0.0 {
+                        return Err(SimError::Host("host division by zero".into()));
+                    }
+                    a / b
+                }
+                CBinOp::FloorDiv => {
+                    if b == 0.0 {
+                        return Err(SimError::Host("host floor-division by zero".into()));
+                    }
+                    (a / b).floor()
+                }
+                CBinOp::Mod => {
+                    if b == 0.0 {
+                        return Err(SimError::Host("host modulo by zero".into()));
+                    }
+                    a.rem_euclid(b)
+                }
+                CBinOp::Lt => (a < b) as i64 as f64,
+                CBinOp::Le => (a <= b) as i64 as f64,
+                CBinOp::Gt => (a > b) as i64 as f64,
+                CBinOp::Ge => (a >= b) as i64 as f64,
+                CBinOp::Eq => (a == b) as i64 as f64,
+                CBinOp::Ne => (a != b) as i64 as f64,
+                CBinOp::And => ((a != 0.0) && (b != 0.0)) as i64 as f64,
+                CBinOp::Or => ((a != 0.0) || (b != 0.0)) as i64 as f64,
+            }
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tensor::Tensor;
+
+    fn tensors() -> HashMap<String, Tensor> {
+        let mut m = HashMap::new();
+        m.insert("x".to_string(), Tensor::zeros(&[64, 1000]));
+        m.insert("y".to_string(), Tensor::zeros(&[64, 1000]));
+        m
+    }
+
+    fn host() -> AscHost {
+        AscHost {
+            name: "h".into(),
+            params: vec!["x".into(), "y".into()],
+            tiling_assigns: vec![
+                ("rows".into(), CExpr::ShapeOf("x".into(), 0)),
+                ("cols".into(), CExpr::ShapeOf("x".into(), 1)),
+                ("nCores".into(), CExpr::Int(32)),
+                (
+                    "rowsPerCore".into(),
+                    CExpr::floordiv(CExpr::var("rows"), CExpr::var("nCores")),
+                ),
+                (
+                    "tileLen".into(),
+                    CExpr::Min(Box::new(CExpr::Int(4096)), Box::new(CExpr::var("cols"))),
+                ),
+            ],
+            launches: vec![Launch {
+                kernel: "k".into(),
+                block_dim: CExpr::var("nCores"),
+                args: vec!["x".into(), "y".into()],
+            }],
+        }
+    }
+
+    #[test]
+    fn tiling_from_shapes() {
+        let he = eval_host(&host(), &tensors()).unwrap();
+        assert_eq!(he.tiling["rows"], 64);
+        assert_eq!(he.tiling["cols"], 1000);
+        assert_eq!(he.tiling["rowsPerCore"], 2);
+        assert_eq!(he.tiling["tileLen"], 1000);
+        assert_eq!(he.launches, vec![("k".to_string(), 32, vec!["x".to_string(), "y".to_string()])]);
+    }
+
+    #[test]
+    fn missing_tensor_is_error() {
+        let mut h = host();
+        h.launches[0].args.push("ghost".into());
+        assert!(eval_host(&h, &tensors()).is_err());
+    }
+
+    #[test]
+    fn bad_shape_dim_is_error() {
+        let mut h = host();
+        h.tiling_assigns[0].1 = CExpr::ShapeOf("x".into(), 5);
+        assert!(eval_host(&h, &tensors()).is_err());
+    }
+
+    #[test]
+    fn zero_blockdim_is_error() {
+        let mut h = host();
+        h.launches[0].block_dim = CExpr::Int(0);
+        assert!(eval_host(&h, &tensors()).is_err());
+    }
+
+    #[test]
+    fn floor_div_semantics() {
+        let t = tensors();
+        let tiling = HashMap::new();
+        let e = CExpr::floordiv(CExpr::Int(-7), CExpr::Int(2));
+        assert_eq!(eval_host_expr(&e, &tiling, &t).unwrap(), -4);
+    }
+
+    #[test]
+    fn undefined_variable_is_error() {
+        let t = tensors();
+        let tiling = HashMap::new();
+        assert!(eval_host_expr(&CExpr::var("nope"), &tiling, &t).is_err());
+    }
+}

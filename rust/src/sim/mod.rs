@@ -1,0 +1,28 @@
+//! Ascend NPU simulator (DESIGN.md §Substitutions — the stand-in for the
+//! Ascend 910B2 testbed).
+//!
+//! Two coupled models:
+//!
+//! * **Functional**: executes AscendC IR over real `f32` host data so that
+//!   Pass@1 correctness means "the generated kernel computes the right
+//!   numbers", not "it looks plausible". Blocks execute sequentially for
+//!   determinism; each block sees the shared Global Memory.
+//! * **Timing**: as instructions execute, they are priced and placed on
+//!   per-unit in-order timelines (Scalar, Vector, Cube, MTE2 GM→UB, MTE3
+//!   UB→GM) with data-dependency edges through local tensors and queue
+//!   tokens. Double buffering emerges from queue depth: an `AllocTensor`
+//!   beyond the queue's free slots stalls until a `FreeTensor` releases one,
+//!   exactly like the real TQue. Per-block makespans combine over cores in
+//!   waves. `SyncAll` aligns all blocks.
+//!
+//! The cost model constants live in [`cost`] and are documented against the
+//! 910B-class figures they approximate.
+
+pub mod cost;
+pub mod exec;
+pub mod host;
+pub mod timing;
+
+pub use exec::{simulate, simulate_owned, simulate_with_cores, SimError, SimOutput};
+pub use host::{eval_host, HostEval};
+pub use timing::TimingReport;

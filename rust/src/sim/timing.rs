@@ -1,0 +1,299 @@
+//! Per-unit pipeline timing model.
+//!
+//! Mirrors the Ascend issue model from paper §2.1: the Scalar unit walks the
+//! program in order; compute and MTE instructions are dispatched to their
+//! unit's in-order queue and execute when (a) the unit is free and (b) their
+//! data dependencies are ready. Instructions on *different* units overlap —
+//! this is where CopyIn/Compute/CopyOut pipelining and double buffering
+//! show up as real cycle savings.
+
+use std::collections::BinaryHeap;
+use std::cmp::Reverse;
+
+/// Execution units with independent in-order instruction queues.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Unit {
+    Scalar,
+    Vector,
+    Cube,
+    /// GM -> UB transfer engine.
+    Mte2,
+    /// UB -> GM transfer engine.
+    Mte3,
+}
+
+pub const ALL_UNITS: [Unit; 5] = [Unit::Scalar, Unit::Vector, Unit::Cube, Unit::Mte2, Unit::Mte3];
+
+impl Unit {
+    pub fn index(self) -> usize {
+        match self {
+            Unit::Scalar => 0,
+            Unit::Vector => 1,
+            Unit::Cube => 2,
+            Unit::Mte2 => 3,
+            Unit::Mte3 => 4,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Unit::Scalar => "scalar",
+            Unit::Vector => "vector",
+            Unit::Cube => "cube",
+            Unit::Mte2 => "mte2",
+            Unit::Mte3 => "mte3",
+        }
+    }
+}
+
+/// One AI Core's pipeline state during a block's execution.
+#[derive(Clone, Debug)]
+pub struct CoreTimeline {
+    /// When each unit finishes its most recently issued instruction.
+    unit_free: [f64; 5],
+    /// Busy cycles accumulated per unit (for utilization reporting).
+    busy: [f64; 5],
+    /// Instructions issued per unit.
+    issued: [u64; 5],
+}
+
+impl CoreTimeline {
+    pub fn new() -> CoreTimeline {
+        CoreTimeline { unit_free: [0.0; 5], busy: [0.0; 5], issued: [0u64; 5] }
+    }
+
+    /// Scalar-unit program-order clock (issue pointer).
+    pub fn scalar_now(&self) -> f64 {
+        self.unit_free[Unit::Scalar.index()]
+    }
+
+    /// Advance the scalar clock by `cycles` (pure scalar work).
+    pub fn scalar_advance(&mut self, cycles: f64) {
+        let i = Unit::Scalar.index();
+        self.unit_free[i] += cycles;
+        self.busy[i] += cycles;
+        self.issued[i] += 1;
+    }
+
+    /// Force the scalar clock to at least `t` (e.g. blocking DeQue).
+    pub fn scalar_wait_until(&mut self, t: f64) {
+        let i = Unit::Scalar.index();
+        if t > self.unit_free[i] {
+            self.unit_free[i] = t;
+        }
+    }
+
+    /// Issue an instruction on `unit` with duration `cycles`, not starting
+    /// before `deps_ready`. Returns the completion time.
+    pub fn issue(&mut self, unit: Unit, cycles: f64, deps_ready: f64) -> f64 {
+        let issue_time = self.scalar_now();
+        let i = unit.index();
+        let start = issue_time.max(self.unit_free[i]).max(deps_ready);
+        let end = start + cycles;
+        self.unit_free[i] = end;
+        self.busy[i] += cycles;
+        self.issued[i] += 1;
+        // issuing itself costs one scalar cycle
+        self.scalar_advance(1.0);
+        end
+    }
+
+    /// Completion time of everything issued so far.
+    pub fn makespan(&self) -> f64 {
+        self.unit_free.iter().fold(0.0f64, |a, &b| a.max(b))
+    }
+
+    pub fn busy_cycles(&self, unit: Unit) -> f64 {
+        self.busy[unit.index()]
+    }
+
+    pub fn issued_count(&self, unit: Unit) -> u64 {
+        self.issued[unit.index()]
+    }
+
+    /// Merge (sum) another core's counters into an aggregate report view.
+    fn accumulate_into(&self, report: &mut TimingReport) {
+        for u in ALL_UNITS {
+            report.busy[u.index()] += self.busy[u.index()];
+            report.issued[u.index()] += self.issued[u.index()];
+        }
+    }
+}
+
+/// Queue-slot pool: models TQue buffer reuse. `depth` slots; acquiring a
+/// slot returns the earliest time a slot is free (double buffering arises
+/// naturally from depth >= 2).
+#[derive(Clone, Debug)]
+pub struct SlotPool {
+    free_at: BinaryHeap<Reverse<OrdF64>>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct OrdF64(f64);
+
+impl Eq for OrdF64 {}
+impl PartialOrd for OrdF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.partial_cmp(&other.0).unwrap_or(std::cmp::Ordering::Equal)
+    }
+}
+
+impl SlotPool {
+    pub fn new(depth: usize) -> SlotPool {
+        let mut free_at = BinaryHeap::new();
+        for _ in 0..depth {
+            free_at.push(Reverse(OrdF64(0.0)));
+        }
+        SlotPool { free_at }
+    }
+
+    /// Acquire the earliest-free slot; returns the time it becomes usable.
+    pub fn acquire(&mut self) -> f64 {
+        self.free_at.pop().map(|Reverse(OrdF64(t))| t).unwrap_or(0.0)
+    }
+
+    /// Release a slot back at time `t`.
+    pub fn release(&mut self, t: f64) {
+        self.free_at.push(Reverse(OrdF64(t)));
+    }
+}
+
+/// Aggregated timing across all blocks/launches of a task.
+#[derive(Clone, Debug, Default)]
+pub struct TimingReport {
+    /// End-to-end modeled cycles (includes launch overheads and waves).
+    pub total_cycles: f64,
+    /// Sum of per-unit busy cycles across all cores.
+    pub busy: [f64; 5],
+    pub issued: [u64; 5],
+    /// Number of kernel launches.
+    pub launches: usize,
+    /// Block count summed over launches.
+    pub blocks: usize,
+}
+
+impl TimingReport {
+    pub fn add_block(&mut self, core: &CoreTimeline) {
+        core.accumulate_into(self);
+        self.blocks += 1;
+    }
+
+    /// Utilization of `unit` relative to total makespan and block count.
+    pub fn utilization(&self, unit: Unit, cores: usize) -> f64 {
+        if self.total_cycles <= 0.0 {
+            return 0.0;
+        }
+        self.busy[unit.index()] / (self.total_cycles * cores as f64)
+    }
+
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "total {:.0} cycles, {} launches, {} blocks;",
+            self.total_cycles, self.launches, self.blocks
+        );
+        for u in ALL_UNITS {
+            s.push_str(&format!(" {}={:.0}", u.name(), self.busy[u.index()]));
+        }
+        s
+    }
+}
+
+/// Schedule per-block makespans onto `cores` physical cores in waves:
+/// blocks are dispatched in order, each wave of `cores` blocks runs in
+/// parallel, waves serialize.
+pub fn wave_makespan(block_spans: &[f64], cores: usize) -> f64 {
+    let mut total = 0.0;
+    for wave in block_spans.chunks(cores.max(1)) {
+        total += wave.iter().fold(0.0f64, |a, &b| a.max(b));
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn units_overlap() {
+        let mut tl = CoreTimeline::new();
+        // long MTE2 transfer then a vector op that does NOT depend on it
+        let mte_end = tl.issue(Unit::Mte2, 1000.0, 0.0);
+        let vec_end = tl.issue(Unit::Vector, 100.0, 0.0);
+        assert!(vec_end < mte_end, "vector should overlap the copy");
+    }
+
+    #[test]
+    fn dependencies_serialize() {
+        let mut tl = CoreTimeline::new();
+        let copy_end = tl.issue(Unit::Mte2, 1000.0, 0.0);
+        let vec_end = tl.issue(Unit::Vector, 100.0, copy_end);
+        assert!(vec_end >= copy_end + 100.0);
+    }
+
+    #[test]
+    fn same_unit_serializes() {
+        let mut tl = CoreTimeline::new();
+        let a = tl.issue(Unit::Vector, 100.0, 0.0);
+        let b = tl.issue(Unit::Vector, 100.0, 0.0);
+        assert!(b >= a + 100.0);
+    }
+
+    #[test]
+    fn makespan_is_max() {
+        let mut tl = CoreTimeline::new();
+        tl.issue(Unit::Mte2, 500.0, 0.0);
+        tl.issue(Unit::Vector, 100.0, 0.0);
+        assert!(tl.makespan() >= 500.0);
+    }
+
+    #[test]
+    fn slot_pool_depth_two_allows_two_inflight() {
+        let mut pool = SlotPool::new(2);
+        assert_eq!(pool.acquire(), 0.0);
+        assert_eq!(pool.acquire(), 0.0);
+        pool.release(100.0);
+        assert_eq!(pool.acquire(), 100.0);
+    }
+
+    #[test]
+    fn slot_pool_depth_one_serializes() {
+        let mut pool = SlotPool::new(1);
+        assert_eq!(pool.acquire(), 0.0);
+        pool.release(50.0);
+        assert_eq!(pool.acquire(), 50.0);
+    }
+
+    #[test]
+    fn wave_scheduling() {
+        // 3 blocks of 100 on 2 cores: wave1 max(100,100) + wave2 100 = 200
+        assert_eq!(wave_makespan(&[100.0, 100.0, 100.0], 2), 200.0);
+        assert_eq!(wave_makespan(&[100.0, 50.0], 2), 100.0);
+        assert_eq!(wave_makespan(&[], 4), 0.0);
+    }
+
+    #[test]
+    fn scalar_wait_until_only_moves_forward() {
+        let mut tl = CoreTimeline::new();
+        tl.scalar_advance(10.0);
+        tl.scalar_wait_until(5.0);
+        assert_eq!(tl.scalar_now(), 10.0);
+        tl.scalar_wait_until(20.0);
+        assert_eq!(tl.scalar_now(), 20.0);
+    }
+
+    #[test]
+    fn report_accumulates() {
+        let mut tl = CoreTimeline::new();
+        tl.issue(Unit::Vector, 64.0, 0.0);
+        let mut r = TimingReport::default();
+        r.add_block(&tl);
+        assert_eq!(r.blocks, 1);
+        assert_eq!(r.busy[Unit::Vector.index()], 64.0);
+        assert_eq!(r.issued[Unit::Vector.index()], 1);
+    }
+}

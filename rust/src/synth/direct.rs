@@ -1,0 +1,276 @@
+//! Direct AscendC generation baseline (paper §2.3 / E3).
+//!
+//! Models what direct LLM prompting produces on AscendC: the published
+//! tutorial sample (the three-stage "AddCustom" kernel) generalizes to
+//! simple one-op elementwise kernels, but anything beyond it regresses to a
+//! monolithic kernel that mixes DataCopy and compute in one stage, ignores
+//! alignment, and mismanages queues — all of which the validator (standing
+//! in for the CANN compiler) rejects. MultiKernelBench measured ~13%
+//! end-to-end correctness for the strongest model; this baseline reproduces
+//! that failure *mechanism*, not a dialed-in number.
+
+use crate::ascendc::ir::*;
+use crate::bench_suite::spec::{ComputeSpec, OpExpr, TaskSpec, UnFn};
+use crate::util::tensor::DType;
+
+/// Outcome of direct generation: always produces *something* (LLMs do),
+/// quality varies.
+pub struct DirectGenerator;
+
+impl DirectGenerator {
+    /// Emit AscendC for the task in one shot.
+    pub fn generate(&self, task: &TaskSpec) -> AscProgram {
+        match &task.compute {
+            ComputeSpec::Elementwise { expr } if single_op(expr).is_some() => {
+                tutorial_style(task, single_op(expr).unwrap())
+            }
+            _ => monolithic(task),
+        }
+    }
+}
+
+/// Is this a single-primitive elementwise op the tutorial pattern covers?
+fn single_op(expr: &OpExpr) -> Option<VecUnOp> {
+    match expr {
+        OpExpr::Un(UnFn::Relu, a) if **a == OpExpr::In(0) => Some(VecUnOp::Relu),
+        OpExpr::Un(UnFn::Tanh, a) if **a == OpExpr::In(0) => Some(VecUnOp::Tanh),
+        OpExpr::Un(UnFn::Abs, a) if **a == OpExpr::In(0) => Some(VecUnOp::Abs),
+        OpExpr::Un(UnFn::Sqrt, a) if **a == OpExpr::In(0) => Some(VecUnOp::Sqrt),
+        OpExpr::Un(UnFn::Exp, a) if **a == OpExpr::In(0) => Some(VecUnOp::Exp),
+        _ => None,
+    }
+}
+
+/// The memorized tutorial structure: correct three-stage pipeline for one
+/// unary vector op (this is why direct generation gets *some* kernels
+/// right).
+fn tutorial_style(task: &TaskSpec, op: VecUnOp) -> AscProgram {
+    let total: usize = task.inputs[0].1.iter().product();
+    let n_cores = 8; // the tutorial hardcodes a small blockDim
+    let per_core = total / n_cores;
+    let tile_len = 2048.min(per_core);
+    let n_tiles = per_core / tile_len;
+    let kernel = AscKernel {
+        name: format!("{}_direct", task.name),
+        tiling_fields: vec![],
+        globals: vec![
+            GlobalDecl { name: "xGm".into(), dtype: DType::F32, arg_index: 0 },
+            GlobalDecl { name: "yGm".into(), dtype: DType::F32, arg_index: 1 },
+        ],
+        queues: vec![
+            QueueDecl { name: "inQueueX".into(), pos: QueuePos::VecIn, depth: 2, dtype: DType::F32, capacity: tile_len },
+            QueueDecl { name: "outQueueY".into(), pos: QueuePos::VecOut, depth: 2, dtype: DType::F32, capacity: tile_len },
+        ],
+        tbufs: vec![],
+        init_body: vec![CStmt::DeclAssign {
+            name: "base".into(),
+            value: CExpr::mul(CExpr::GetBlockIdx, CExpr::Int(per_core as i64)),
+        }],
+        stages: vec![
+            StageFn {
+                name: "CopyIn0".into(),
+                kind: StageKind::CopyIn,
+                params: vec![],
+                body: vec![
+                    CStmt::AllocTensor { queue: "inQueueX".into(), var: "xLocal".into() },
+                    CStmt::DataCopy {
+                        dst: TensorRef::base("xLocal"),
+                        src: TensorRef::at("xGm", CExpr::var("off")),
+                        count: CExpr::Int(tile_len as i64),
+                    },
+                    CStmt::EnQue { queue: "inQueueX".into(), var: "xLocal".into() },
+                ],
+            },
+            StageFn {
+                name: "Compute0".into(),
+                kind: StageKind::Compute,
+                params: vec![],
+                body: vec![
+                    CStmt::DeQue { queue: "inQueueX".into(), var: "xLocal".into() },
+                    CStmt::AllocTensor { queue: "outQueueY".into(), var: "yLocal".into() },
+                    CStmt::VecUn {
+                        op,
+                        dst: TensorRef::base("yLocal"),
+                        src: TensorRef::base("xLocal"),
+                        count: CExpr::Int(tile_len as i64),
+                    },
+                    CStmt::EnQue { queue: "outQueueY".into(), var: "yLocal".into() },
+                    CStmt::FreeTensor { queue: "inQueueX".into(), var: "xLocal".into() },
+                ],
+            },
+            StageFn {
+                name: "CopyOut0".into(),
+                kind: StageKind::CopyOut,
+                params: vec![],
+                body: vec![
+                    CStmt::DeQue { queue: "outQueueY".into(), var: "yLocal".into() },
+                    CStmt::DataCopy {
+                        dst: TensorRef::at("yGm", CExpr::var("off")),
+                        src: TensorRef::base("yLocal"),
+                        count: CExpr::Int(tile_len as i64),
+                    },
+                    CStmt::FreeTensor { queue: "outQueueY".into(), var: "yLocal".into() },
+                ],
+            },
+        ],
+        process_body: vec![CStmt::For {
+            var: "t".into(),
+            start: CExpr::Int(0),
+            end: CExpr::Int(n_tiles as i64),
+            step: CExpr::Int(1),
+            body: vec![
+                CStmt::DeclAssign {
+                    name: "off".into(),
+                    value: CExpr::add(
+                        CExpr::var("base"),
+                        CExpr::mul(CExpr::var("t"), CExpr::Int(tile_len as i64)),
+                    ),
+                },
+                CStmt::CallStage { name: "CopyIn0".into(), args: vec![] },
+                CStmt::CallStage { name: "Compute0".into(), args: vec![] },
+                CStmt::CallStage { name: "CopyOut0".into(), args: vec![] },
+            ],
+        }],
+    };
+    AscProgram {
+        host: AscHost {
+            name: format!("{}_host", task.name),
+            params: vec![task.inputs[0].0.to_string(), task.outputs[0].0.to_string()],
+            tiling_assigns: vec![],
+            launches: vec![Launch {
+                kernel: kernel.name.clone(),
+                block_dim: CExpr::Int(n_cores as i64),
+                args: vec![task.inputs[0].0.to_string(), task.outputs[0].0.to_string()],
+            }],
+        },
+        kernels: vec![kernel],
+    }
+}
+
+/// Beyond the tutorial: a monolithic single-stage kernel that mixes data
+/// movement with compute, skips queue pairing, and uses raw DataCopy for
+/// whatever count the task has — the classic hallucinated AscendC that the
+/// validator rejects (A501/A201/A101...).
+fn monolithic(task: &TaskSpec) -> AscProgram {
+    let total: usize = task.inputs[0].1.iter().product();
+    let count = (total / 8).max(1);
+    let kernel = AscKernel {
+        name: format!("{}_direct", task.name),
+        tiling_fields: vec![],
+        globals: task
+            .inputs
+            .iter()
+            .map(|(n, _, d)| (*n, *d))
+            .chain(task.outputs.iter().map(|(n, _)| (*n, DType::F32)))
+            .enumerate()
+            .map(|(i, (n, d))| GlobalDecl { name: format!("{n}Gm"), dtype: d, arg_index: i })
+            .collect(),
+        queues: vec![QueueDecl {
+            name: "workQueue".into(),
+            pos: QueuePos::VecIn,
+            depth: 1,
+            dtype: DType::F32,
+            capacity: count.min(65536),
+        }],
+        tbufs: vec![],
+        init_body: vec![],
+        stages: vec![StageFn {
+            name: "Compute0".into(),
+            kind: StageKind::Compute,
+            params: vec![],
+            // everything in one "compute" stage: alloc, copy in, math,
+            // copy out — exactly the interleaving AscendC forbids
+            body: vec![
+                CStmt::AllocTensor { queue: "workQueue".into(), var: "work".into() },
+                CStmt::DataCopy {
+                    dst: TensorRef::base("work"),
+                    src: TensorRef::at(
+                        &format!("{}Gm", task.inputs[0].0),
+                        CExpr::mul(CExpr::GetBlockIdx, CExpr::Int(count as i64)),
+                    ),
+                    count: CExpr::Int(count as i64),
+                },
+                CStmt::VecUn {
+                    op: VecUnOp::Exp,
+                    dst: TensorRef::base("work"),
+                    src: TensorRef::base("work"),
+                    count: CExpr::Int(count as i64),
+                },
+                CStmt::DataCopy {
+                    dst: TensorRef::at(
+                        &format!("{}Gm", task.outputs[0].0),
+                        CExpr::mul(CExpr::GetBlockIdx, CExpr::Int(count as i64)),
+                    ),
+                    src: TensorRef::base("work"),
+                    count: CExpr::Int(count as i64),
+                },
+            ],
+        }],
+        process_body: vec![CStmt::CallStage { name: "Compute0".into(), args: vec![] }],
+    };
+    let args: Vec<String> = task
+        .inputs
+        .iter()
+        .map(|(n, _, _)| n.to_string())
+        .chain(task.outputs.iter().map(|(n, _)| n.to_string()))
+        .collect();
+    AscProgram {
+        host: AscHost {
+            name: format!("{}_host", task.name),
+            params: args.clone(),
+            tiling_assigns: vec![],
+            launches: vec![Launch {
+                kernel: kernel.name.clone(),
+                block_dim: CExpr::Int(8),
+                args,
+            }],
+        },
+        kernels: vec![kernel],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ascendc::validate::{validate_errors, ValidateEnv};
+    use crate::bench_suite::tasks::{all_tasks, task_by_name};
+
+    #[test]
+    fn tutorial_pattern_compiles_for_single_op_activations() {
+        let g = DirectGenerator;
+        for name in ["relu", "tanh_act"] {
+            let t = task_by_name(name).unwrap();
+            let p = g.generate(&t);
+            let errs = validate_errors(&p, &ValidateEnv::new(Default::default()));
+            assert!(errs.is_empty(), "{name}: {errs:?}");
+        }
+    }
+
+    #[test]
+    fn monolithic_kernels_fail_validation() {
+        let g = DirectGenerator;
+        for name in ["softmax", "sum_dim", "adam", "cumsum"] {
+            let t = task_by_name(name).unwrap();
+            let p = g.generate(&t);
+            let errs = validate_errors(&p, &ValidateEnv::new(Default::default()));
+            assert!(!errs.is_empty(), "{name} should not compile directly");
+            assert!(errs.iter().any(|e| e.code == "A501"), "{name}: {errs:?}");
+        }
+    }
+
+    #[test]
+    fn direct_compile_rate_is_low() {
+        let g = DirectGenerator;
+        let mut compiled = 0;
+        let total = all_tasks().len();
+        for t in all_tasks() {
+            let p = g.generate(&t);
+            if validate_errors(&p, &ValidateEnv::new(Default::default())).is_empty() {
+                compiled += 1;
+            }
+        }
+        let rate = compiled as f64 / total as f64;
+        assert!(rate < 0.25, "direct compile rate {rate} should be low");
+        assert!(compiled >= 2, "the tutorial pattern should cover a few ops");
+    }
+}

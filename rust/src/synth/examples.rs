@@ -1,0 +1,259 @@
+//! The category-specific expert example library (paper §4.1).
+//!
+//! In the paper these are human-written DSL programs included in the
+//! generation prompt; here they double as (a) the displayed prompt content
+//! (`ascendcraft prompt <category>`) and (b) a self-check corpus — every
+//! example must parse and validate through the DSL frontend. The softmax
+//! example is the paper's Figure 2 program.
+
+use crate::bench_suite::spec::Category;
+
+/// One expert example.
+#[derive(Clone, Debug)]
+pub struct ExpertExample {
+    pub name: &'static str,
+    pub category: Category,
+    /// What the example teaches (shown in the prompt).
+    pub lesson: &'static str,
+    pub dsl: &'static str,
+}
+
+/// Figure 2 of the paper: tiled 3-pass softmax.
+pub const SOFTMAX_FIG2: &str = r#"import tile.language as tl
+
+@ascend_kernel
+def softmax_kernel(input_ptr, output_ptr, rows_per_core, cols, tile_length, n_tiles):
+    pid = tl.program_id(0)
+    row_start_idx = pid * rows_per_core
+    row_end_idx = row_start_idx + rows_per_core
+    row_tile_ub = tl.alloc_ub(tile_length, dtype=tl.float32)
+    exp_tile_ub = tl.alloc_ub(tile_length, dtype=tl.float32)
+    shared_ub = tl.alloc_ub(8, dtype=tl.float32)
+    for row_idx in range(row_start_idx, row_end_idx):
+        # PASS 1: compute global max of a long row (tiled)
+        row_max = -1e30
+        for tile_id in range(n_tiles):
+            offsets = row_idx * cols + tile_id * tile_length
+            with tl.copyin():
+                tl.load(input_ptr + offsets, row_tile_ub, tile_length)
+            with tl.compute():
+                tl.reduce_max(shared_ub, row_tile_ub, tile_length)
+                row_max = tl.max(row_max, tl.extract_scalar(shared_ub, 0))
+        # PASS 2: compute global sum of exp(x - row_max)
+        row_sum = 0.0
+        for tile_id in range(n_tiles):
+            offsets = row_idx * cols + tile_id * tile_length
+            with tl.copyin():
+                tl.load(input_ptr + offsets, row_tile_ub, tile_length)
+            with tl.compute():
+                tl.adds(row_tile_ub, row_tile_ub, -row_max, tile_length)
+                tl.vexp(row_tile_ub, row_tile_ub, tile_length)
+                tl.reduce_sum(shared_ub, row_tile_ub, tile_length)
+                row_sum = row_sum + tl.extract_scalar(shared_ub, 0)
+        # PASS 3: normalize each tile and store output
+        inv_sum = 1.0 / row_sum
+        for tile_id in range(n_tiles):
+            offsets = row_idx * cols + tile_id * tile_length
+            with tl.copyin():
+                tl.load(input_ptr + offsets, row_tile_ub, tile_length)
+            with tl.compute():
+                tl.adds(exp_tile_ub, row_tile_ub, -row_max, tile_length)
+                tl.vexp(exp_tile_ub, exp_tile_ub, tile_length)
+                tl.muls(exp_tile_ub, exp_tile_ub, inv_sum, tile_length)
+            with tl.copyout():
+                tl.store(output_ptr + offsets, exp_tile_ub, tile_length)
+
+def softmax_host(x, output):
+    rows = x.shape[0]
+    cols = x.shape[1]
+    # Core Partitioning
+    n_cores = 32
+    rows_per_core = rows // n_cores
+    # Tiling Strategy (column tiling): if columns too long, tile them
+    max_tile_len = 4096
+    tile_length = min(max_tile_len, cols)
+    n_tiles = cols // tile_length
+    softmax_kernel[n_cores](x, output, rows_per_core, cols, tile_length, n_tiles)
+"#;
+
+/// Elementwise expert example (Activation/Optimizer categories).
+pub const ELEMENTWISE_EXAMPLE: &str = r#"import tile.language as tl
+
+@ascend_kernel
+def gelu_like_kernel(x_ptr, y_ptr, per_core, tile_len, n_tiles):
+    pid = tl.program_id(0)
+    base = pid * per_core
+    x_ub = tl.alloc_ub(tile_len, dtype=tl.float32)
+    y_ub = tl.alloc_ub(tile_len, dtype=tl.float32)
+    for t in range(n_tiles):
+        off = base + t * tile_len
+        with tl.copyin():
+            tl.load(x_ptr + off, x_ub, tile_len)
+        with tl.compute():
+            tl.vtanh(y_ub, x_ub, tile_len)
+            tl.adds(y_ub, y_ub, 1.0, tile_len)
+            tl.vmul(y_ub, y_ub, x_ub, tile_len)
+            tl.muls(y_ub, y_ub, 0.5, tile_len)
+        with tl.copyout():
+            tl.store(y_ptr + off, y_ub, tile_len)
+
+def gelu_like_host(x, y):
+    total = x.shape[0] * x.shape[1]
+    n_cores = 32
+    per_core = total // n_cores
+    tile_len = min(8192, per_core)
+    n_tiles = per_core // tile_len
+    gelu_like_kernel[n_cores](x, y, per_core, tile_len, n_tiles)
+"#;
+
+/// Row reduction expert example (Reduce category).
+pub const REDUCE_EXAMPLE: &str = r#"import tile.language as tl
+
+@ascend_kernel
+def row_sum_kernel(x_ptr, y_ptr, rows_per_core, cols, tile_len, n_tiles):
+    pid = tl.program_id(0)
+    row_start = pid * rows_per_core
+    x_ub = tl.alloc_ub(tile_len, dtype=tl.float32)
+    red_ub = tl.alloc_ub(8, dtype=tl.float32)
+    out_ub = tl.alloc_ub(8, dtype=tl.float32)
+    for r in range(row_start, row_start + rows_per_core):
+        acc = 0.0
+        for t in range(n_tiles):
+            off = r * cols + t * tile_len
+            with tl.copyin():
+                tl.load(x_ptr + off, x_ub, tile_len)
+            with tl.compute():
+                tl.reduce_sum(red_ub, x_ub, tile_len)
+                acc = acc + tl.extract_scalar(red_ub, 0)
+        with tl.compute():
+            tl.insert_scalar(out_ub, 0, acc)
+        with tl.copyout():
+            tl.store(y_ptr + r, out_ub, 1)
+
+def row_sum_host(x, y):
+    rows = x.shape[0]
+    cols = x.shape[1]
+    n_cores = 32
+    rows_per_core = rows // n_cores
+    tile_len = min(8192, cols)
+    n_tiles = cols // tile_len
+    row_sum_kernel[n_cores](x, y, rows_per_core, cols, tile_len, n_tiles)
+"#;
+
+/// Vectorized scan expert example (Math category).
+pub const SCAN_EXAMPLE: &str = r#"import tile.language as tl
+
+@ascend_kernel
+def cumsum_kernel(x_ptr, y_ptr, rows_per_core, cols, tile_len, n_tiles):
+    pid = tl.program_id(0)
+    row_start = pid * rows_per_core
+    x_ub = tl.alloc_ub(tile_len, dtype=tl.float32)
+    y_ub = tl.alloc_ub(tile_len, dtype=tl.float32)
+    for ri in range(rows_per_core):
+        row = row_start + ri
+        carry = 0.0
+        for t in range(n_tiles):
+            off = row * cols + t * tile_len
+            with tl.copyin():
+                tl.load(x_ptr + off, x_ub, tile_len)
+            with tl.compute():
+                tl.vcopy(y_ub, x_ub, tile_len)
+                shift = 1
+                while shift < tile_len:
+                    tl.vadd(y_ub + shift, y_ub + shift, y_ub, tile_len - shift)
+                    shift = shift * 2
+                tl.adds(y_ub, y_ub, carry, tile_len)
+                carry = tl.extract_scalar(y_ub, tile_len - 1)
+            with tl.copyout():
+                tl.store(y_ptr + off, y_ub, tile_len)
+
+def cumsum_host(x, y):
+    rows = x.shape[0]
+    cols = x.shape[1]
+    n_cores = 32
+    rows_per_core = rows // n_cores
+    tile_len = min(2048, cols)
+    n_tiles = cols // tile_len
+    cumsum_kernel[n_cores](x, y, rows_per_core, cols, tile_len, n_tiles)
+"#;
+
+/// All expert examples, keyed by category.
+pub fn library() -> Vec<ExpertExample> {
+    vec![
+        ExpertExample {
+            name: "softmax_3pass",
+            category: Category::Normalization,
+            lesson: "row-per-core partitioning; tiled 3-pass max/sum/normalize; \
+                     scalar carry through tl.extract_scalar",
+            dsl: SOFTMAX_FIG2,
+        },
+        ExpertExample {
+            name: "fused_elementwise",
+            category: Category::Activation,
+            lesson: "flat 1D partitioning; fuse the whole expression into one \
+                     Compute stage; tile to fit double-buffered UB queues",
+            dsl: ELEMENTWISE_EXAMPLE,
+        },
+        ExpertExample {
+            name: "row_reduce",
+            category: Category::Reduce,
+            lesson: "tile-wise vector reduce + scalar accumulation across tiles; \
+                     single-element stores need DataCopyPad (Pass 4)",
+            dsl: REDUCE_EXAMPLE,
+        },
+        ExpertExample {
+            name: "vectorized_scan",
+            category: Category::Math,
+            lesson: "Hillis-Steele shifted vector adds instead of a scalar loop; \
+                     scalar carry across tiles",
+            dsl: SCAN_EXAMPLE,
+        },
+    ]
+}
+
+/// Examples for one category (falls back to the elementwise example, the
+/// most general lesson, when a category has no dedicated entry).
+pub fn for_category(c: Category) -> Vec<ExpertExample> {
+    let lib = library();
+    let hits: Vec<ExpertExample> = lib.iter().filter(|e| e.category == c).cloned().collect();
+    if hits.is_empty() {
+        lib.into_iter().filter(|e| e.name == "fused_elementwise").collect()
+    } else {
+        hits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl;
+
+    #[test]
+    fn all_examples_parse_and_validate() {
+        for e in library() {
+            let r = dsl::frontend(e.dsl);
+            assert!(r.is_ok(), "example '{}': {:?}", e.name, r.err());
+        }
+    }
+
+    #[test]
+    fn figure2_softmax_has_three_passes() {
+        let p = dsl::frontend(SOFTMAX_FIG2).unwrap();
+        let mut stages = 0;
+        for s in &p.kernel.body {
+            s.walk(&mut |st| {
+                if matches!(st, crate::dsl::ast::Stmt::WithStage { .. }) {
+                    stages += 1;
+                }
+            });
+        }
+        // 3 copyin + 3 compute + 1 copyout
+        assert_eq!(stages, 7);
+    }
+
+    #[test]
+    fn category_lookup_falls_back() {
+        assert!(!for_category(Category::Loss).is_empty());
+        assert_eq!(for_category(Category::Reduce)[0].name, "row_reduce");
+    }
+}

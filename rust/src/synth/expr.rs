@@ -1,0 +1,524 @@
+//! OpExpr → DSL three-address code.
+//!
+//! Lowers a task's element-wise expression tree into a sequence of DSL
+//! vector-op lines over tile buffers, with temp-buffer reuse (a stack
+//! discipline keeps the live-temp count equal to the expression's register
+//! need). Scalar constants fold into tensor-scalar ops (`tl.adds`,
+//! `tl.muls`, ...), so `x * 2 + 1` is two instructions, not four.
+
+use crate::bench_suite::spec::{BinFn, OpExpr, UnFn};
+use std::fmt::Write as _;
+
+/// An operand produced while emitting.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Val {
+    /// A buffer holding the (partial) result: input buffer or temp.
+    Buf(String),
+    /// A compile-time scalar.
+    Scalar(f64),
+}
+
+/// Emitter state.
+pub struct ExprEmitter<'a> {
+    /// Buffer names for `In(i)`.
+    pub inputs: &'a [String],
+    /// DSL count expression (e.g. "tile_len").
+    pub count: &'a str,
+    /// Emitted DSL lines.
+    pub lines: Vec<String>,
+    free_temps: Vec<String>,
+    next_temp: usize,
+    /// High-water mark of temps allocated (drives tl.alloc_ub emission).
+    pub temps_created: Vec<String>,
+}
+
+impl<'a> ExprEmitter<'a> {
+    pub fn new(inputs: &'a [String], count: &'a str) -> ExprEmitter<'a> {
+        ExprEmitter {
+            inputs,
+            count,
+            lines: Vec::new(),
+            free_temps: Vec::new(),
+            next_temp: 0,
+            temps_created: Vec::new(),
+        }
+    }
+
+    fn alloc_temp(&mut self) -> String {
+        if let Some(t) = self.free_temps.pop() {
+            return t;
+        }
+        let t = format!("t{}_ub", self.next_temp);
+        self.next_temp += 1;
+        self.temps_created.push(t.clone());
+        t
+    }
+
+    /// Release a consumed operand's temp — unless it became the output.
+    fn release_unless(&mut self, v: &Val, out: &str) {
+        if let Val::Buf(b) = v {
+            if b != out
+                && self.temps_created.contains(b)
+                && !self.free_temps.contains(b)
+            {
+                self.free_temps.push(b.clone());
+            }
+        }
+    }
+
+    fn line(&mut self, s: String) {
+        self.lines.push(s);
+    }
+
+    /// Emit the whole expression with the final result written to `dst`.
+    pub fn emit_into(&mut self, e: &OpExpr, dst: &str) {
+        let v = self.emit(e, Some(dst));
+        match v {
+            Val::Buf(b) if b == dst => {}
+            Val::Buf(b) => {
+                let count = self.count;
+                self.line(format!("tl.vcopy({dst}, {b}, {count})"));
+            }
+            Val::Scalar(c) => {
+                let count = self.count;
+                self.line(format!("tl.memset({dst}, {}, {count})", fmt_const(c)));
+            }
+        }
+    }
+
+    /// Emit `e`; `target` is the preferred output buffer for the root op.
+    fn emit(&mut self, e: &OpExpr, target: Option<&str>) -> Val {
+        match e {
+            OpExpr::In(i) => Val::Buf(self.inputs[*i].clone()),
+            OpExpr::Const(c) => Val::Scalar(*c),
+            OpExpr::Un(f, a) => {
+                // constant folding
+                if let Val::Scalar(c) = self.emit_peek_const(a) {
+                    return Val::Scalar(apply_un(*f, c));
+                }
+                let av = self.emit(a, None);
+                let Val::Buf(ab) = &av else { unreachable!() };
+                let ab = ab.clone();
+                let out = self.pick_out(target, &[&av]);
+                let count = self.count;
+                let op = match f {
+                    UnFn::Exp => "tl.vexp",
+                    UnFn::Log => "tl.vlog",
+                    UnFn::Abs => "tl.vabs",
+                    UnFn::Sqrt => "tl.vsqrt",
+                    UnFn::Tanh => "tl.vtanh",
+                    UnFn::Recip => "tl.vrec",
+                    UnFn::Relu => "tl.vrelu",
+                    UnFn::Sign => "tl.vsign",
+                    UnFn::Floor => "tl.vfloor",
+                    UnFn::Neg => {
+                        self.line(format!("tl.muls({out}, {ab}, -1.0, {count})"));
+                        self.release_unless(&av, &out);
+                        return Val::Buf(out);
+                    }
+                };
+                self.line(format!("{op}({out}, {ab}, {count})"));
+                self.release_unless(&av, &out);
+                Val::Buf(out)
+            }
+            OpExpr::Bin(f, a, b) => {
+                let (ca, cb) = (self.emit_peek_const(a), self.emit_peek_const(b));
+                match (ca, cb) {
+                    (Val::Scalar(x), Val::Scalar(y)) => Val::Scalar(apply_bin(*f, x, y)),
+                    (Val::Buf(_), Val::Scalar(c)) => self.emit_tensor_scalar(*f, a, c, target, false),
+                    (Val::Scalar(c), Val::Buf(_)) => self.emit_tensor_scalar(*f, b, c, target, true),
+                    _ => {
+                        let av = self.emit(a, None);
+                        let bv = self.emit(b, None);
+                        let (Val::Buf(ab), Val::Buf(bb)) = (&av, &bv) else { unreachable!() };
+                        let (ab, bb) = (ab.clone(), bb.clone());
+                        let out = self.pick_out(target, &[&av, &bv]);
+                        let count = self.count;
+                        let op = match f {
+                            BinFn::Add => "tl.vadd",
+                            BinFn::Sub => "tl.vsub",
+                            BinFn::Mul => "tl.vmul",
+                            BinFn::Div => "tl.vdiv",
+                            BinFn::Max => "tl.vmax",
+                            BinFn::Min => "tl.vmin",
+                        };
+                        self.line(format!("{op}({out}, {ab}, {bb}, {count})"));
+                        self.release_unless(&av, &out);
+                        self.release_unless(&bv, &out);
+                        Val::Buf(out)
+                    }
+                }
+            }
+            OpExpr::SelectGe(c, a, b) => {
+                let cv = self.emit_materialize(c);
+                let av = self.emit_materialize(a);
+                let bv = self.emit_materialize(b);
+                let (Val::Buf(cb), Val::Buf(ab), Val::Buf(bb)) = (&cv, &av, &bv) else {
+                    unreachable!()
+                };
+                let (cb, ab, bb) = (cb.clone(), ab.clone(), bb.clone());
+                let out = self.pick_out(target, &[&cv, &av, &bv]);
+                let count = self.count;
+                self.line(format!("tl.vselect_ge({out}, {cb}, {ab}, {bb}, {count})"));
+                self.release_unless(&cv, &out);
+                self.release_unless(&av, &out);
+                self.release_unless(&bv, &out);
+                Val::Buf(out)
+            }
+        }
+    }
+
+    /// Like emit but guarantees a buffer result (constants materialize).
+    fn emit_materialize(&mut self, e: &OpExpr) -> Val {
+        match self.emit(e, None) {
+            Val::Scalar(c) => {
+                let t = self.alloc_temp();
+                let count = self.count;
+                self.line(format!("tl.memset({t}, {}, {count})", fmt_const(c)));
+                Val::Buf(t)
+            }
+            v => v,
+        }
+    }
+
+    /// Constant-only pre-pass (no emission) so Bin can fold const sides.
+    fn emit_peek_const(&self, e: &OpExpr) -> Val {
+        match e {
+            OpExpr::Const(c) => Val::Scalar(*c),
+            OpExpr::Un(f, a) => match self.emit_peek_const(a) {
+                Val::Scalar(c) => Val::Scalar(apply_un(*f, c)),
+                v => v,
+            },
+            OpExpr::Bin(f, a, b) => match (self.emit_peek_const(a), self.emit_peek_const(b)) {
+                (Val::Scalar(x), Val::Scalar(y)) => Val::Scalar(apply_bin(*f, x, y)),
+                _ => Val::Buf(String::new()),
+            },
+            _ => Val::Buf(String::new()),
+        }
+    }
+
+    fn emit_tensor_scalar(
+        &mut self,
+        f: BinFn,
+        tensor_side: &OpExpr,
+        c: f64,
+        target: Option<&str>,
+        scalar_is_lhs: bool,
+    ) -> Val {
+        let tv = self.emit(tensor_side, None);
+        let Val::Buf(tb) = &tv else { unreachable!() };
+        let tb = tb.clone();
+        let out = self.pick_out(target, &[&tv]);
+        let count = self.count;
+        match (f, scalar_is_lhs) {
+            (BinFn::Add, _) => self.line(format!("tl.adds({out}, {tb}, {}, {count})", fmt_const(c))),
+            (BinFn::Mul, _) => self.line(format!("tl.muls({out}, {tb}, {}, {count})", fmt_const(c))),
+            (BinFn::Max, _) => self.line(format!("tl.maxs({out}, {tb}, {}, {count})", fmt_const(c))),
+            (BinFn::Min, _) => self.line(format!("tl.mins({out}, {tb}, {}, {count})", fmt_const(c))),
+            (BinFn::Sub, false) => {
+                self.line(format!("tl.adds({out}, {tb}, {}, {count})", fmt_const(-c)))
+            }
+            (BinFn::Sub, true) => {
+                // c - x = -x + c
+                self.line(format!("tl.muls({out}, {tb}, -1.0, {count})"));
+                self.line(format!("tl.adds({out}, {out}, {}, {count})", fmt_const(c)));
+            }
+            (BinFn::Div, false) => {
+                self.line(format!("tl.muls({out}, {tb}, {}, {count})", fmt_const(1.0 / c)))
+            }
+            (BinFn::Div, true) => {
+                // c / x = c * recip(x)
+                self.line(format!("tl.vrec({out}, {tb}, {count})"));
+                if c != 1.0 {
+                    self.line(format!("tl.muls({out}, {out}, {}, {count})", fmt_const(c)));
+                }
+            }
+        }
+        self.release_unless(&tv, &out);
+        Val::Buf(out)
+    }
+
+    /// Choose the output buffer: the caller's target if given, else reuse a
+    /// consumed temp, else a fresh temp. Never write into an input buffer.
+    fn pick_out(&mut self, target: Option<&str>, consumed: &[&Val]) -> String {
+        if let Some(t) = target {
+            return t.to_string();
+        }
+        for v in consumed {
+            if let Val::Buf(b) = v {
+                if self.temps_created.contains(b) {
+                    return b.clone();
+                }
+            }
+        }
+        self.alloc_temp()
+    }
+}
+
+fn apply_un(f: UnFn, c: f64) -> f64 {
+    match f {
+        UnFn::Exp => c.exp(),
+        UnFn::Log => c.ln(),
+        UnFn::Abs => c.abs(),
+        UnFn::Sqrt => c.sqrt(),
+        UnFn::Tanh => c.tanh(),
+        UnFn::Neg => -c,
+        UnFn::Recip => 1.0 / c,
+        UnFn::Relu => c.max(0.0),
+        UnFn::Sign => {
+            if c > 0.0 {
+                1.0
+            } else if c < 0.0 {
+                -1.0
+            } else {
+                0.0
+            }
+        }
+        UnFn::Floor => c.floor(),
+    }
+}
+
+fn apply_bin(f: BinFn, a: f64, b: f64) -> f64 {
+    match f {
+        BinFn::Add => a + b,
+        BinFn::Sub => a - b,
+        BinFn::Mul => a * b,
+        BinFn::Div => a / b,
+        BinFn::Max => a.max(b),
+        BinFn::Min => a.min(b),
+    }
+}
+
+/// Format a scalar constant as a DSL float literal.
+pub fn fmt_const(c: f64) -> String {
+    let mut s = String::new();
+    if c.fract() == 0.0 && c.abs() < 1e16 {
+        let _ = write!(s, "{:.1}", c);
+    } else if c.abs() >= 1e16 || (c != 0.0 && c.abs() < 1e-4) {
+        let _ = write!(s, "{:e}", c);
+    } else {
+        let _ = write!(s, "{c}");
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite::spec::OpExpr as E;
+
+    fn emit(e: &E) -> (Vec<String>, Vec<String>) {
+        let inputs = vec!["x_ub".to_string()];
+        let mut em = ExprEmitter::new(&inputs, "tile_len");
+        em.emit_into(e, "y_ub");
+        (em.lines, em.temps_created)
+    }
+
+    #[test]
+    fn relu_single_op() {
+        let (lines, temps) = emit(&E::un(UnFn::Relu, E::input(0)));
+        assert_eq!(lines, vec!["tl.vrelu(y_ub, x_ub, tile_len)"]);
+        assert!(temps.is_empty());
+    }
+
+    #[test]
+    fn constant_folds_into_tensor_scalar_ops() {
+        // (x * 2) + 1
+        let e = E::add(E::mul(E::input(0), E::c(2.0)), E::c(1.0));
+        let (lines, _) = emit(&e);
+        assert_eq!(
+            lines,
+            vec![
+                "tl.muls(t0_ub, x_ub, 2.0, tile_len)",
+                "tl.adds(y_ub, t0_ub, 1.0, tile_len)"
+            ]
+        );
+    }
+
+    #[test]
+    fn pure_constant_becomes_memset() {
+        let (lines, _) = emit(&E::add(E::c(1.0), E::c(2.0)));
+        assert_eq!(lines, vec!["tl.memset(y_ub, 3.0, tile_len)"]);
+    }
+
+    #[test]
+    fn sigmoid_shape() {
+        // 1 / (1 + exp(-x)) — recip path folds the leading 1/
+        let e = E::div(
+            E::c(1.0),
+            E::add(E::c(1.0), E::un(UnFn::Exp, E::un(UnFn::Neg, E::input(0)))),
+        );
+        let (lines, temps) = emit(&e);
+        // muls(-1), exp, adds(1), vrec -> 4 ops, 1 temp max
+        assert_eq!(lines.len(), 4, "{lines:?}");
+        assert!(lines.iter().any(|l| l.contains("tl.vrec")));
+        assert!(temps.len() <= 1, "{temps:?}");
+    }
+
+    #[test]
+    fn never_writes_into_input_buffer() {
+        // x * x: output must not clobber x_ub before reading
+        let e = E::mul(E::input(0), E::input(0));
+        let (lines, _) = emit(&e);
+        assert_eq!(lines, vec!["tl.vmul(y_ub, x_ub, x_ub, tile_len)"]);
+    }
+
+    #[test]
+    fn temp_reuse_bounds_buffer_count() {
+        // deep chain: tanh(exp(abs(sqrt(x)))) should reuse one temp
+        let e = E::un(
+            UnFn::Tanh,
+            E::un(UnFn::Exp, E::un(UnFn::Abs, E::un(UnFn::Sqrt, E::input(0)))),
+        );
+        let (lines, temps) = emit(&e);
+        assert_eq!(lines.len(), 4);
+        assert!(temps.len() <= 1, "{temps:?}");
+    }
+
+    #[test]
+    fn select_ge_materializes_constants() {
+        // select(x, 1, -1)
+        let e = E::SelectGe(Box::new(E::input(0)), Box::new(E::c(1.0)), Box::new(E::c(-1.0)));
+        let (lines, _) = emit(&e);
+        assert!(lines.iter().filter(|l| l.contains("tl.memset")).count() == 2);
+        assert!(lines.last().unwrap().contains("tl.vselect_ge(y_ub"));
+    }
+
+    #[test]
+    fn scalar_minus_tensor() {
+        // 1 - x
+        let e = E::sub(E::c(1.0), E::input(0));
+        let (lines, _) = emit(&e);
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains("tl.muls"));
+        assert!(lines[1].contains("tl.adds"));
+    }
+
+    #[test]
+    fn emitted_lines_match_reference_numerics() {
+        // end-to-end check through a tiny interpreter of the emitted lines
+        use crate::util::rng::XorShiftRng;
+        let exprs = vec![
+            E::un(UnFn::Relu, E::input(0)),
+            E::mul(E::input(0), E::input(0)),
+            E::div(E::c(1.0), E::add(E::c(1.0), E::un(UnFn::Exp, E::un(UnFn::Neg, E::input(0))))),
+            E::SelectGe(Box::new(E::input(0)), Box::new(E::input(0)), Box::new(E::c(0.0))),
+            E::bin(BinFn::Min, E::bin(BinFn::Max, E::input(0), E::c(-1.0)), E::c(1.0)),
+        ];
+        let mut rng = XorShiftRng::new(9);
+        for e in &exprs {
+            let inputs = vec!["x_ub".to_string()];
+            let mut em = ExprEmitter::new(&inputs, "8");
+            em.emit_into(e, "y_ub");
+            // interpret the emitted DSL lines over 8-element vectors
+            let x: Vec<f32> = rng.uniform_vec(8, -2.0, 2.0);
+            let mut bufs: std::collections::HashMap<String, Vec<f32>> =
+                std::collections::HashMap::new();
+            bufs.insert("x_ub".into(), x.clone());
+            bufs.insert("y_ub".into(), vec![0.0; 8]);
+            for t in &em.temps_created {
+                bufs.insert(t.clone(), vec![0.0; 8]);
+            }
+            for line in &em.lines {
+                interp_line(line, &mut bufs);
+            }
+            for i in 0..8 {
+                let want = e.eval(&[x[i]]);
+                let got = bufs["y_ub"][i];
+                assert!(
+                    (got - want).abs() < 1e-5,
+                    "expr {e:?} line set {:?}: got {got} want {want}",
+                    em.lines
+                );
+            }
+        }
+    }
+
+    /// Micro-interpreter for emitted DSL lines (tests only).
+    fn interp_line(line: &str, bufs: &mut std::collections::HashMap<String, Vec<f32>>) {
+        let (func, rest) = line.split_once('(').unwrap();
+        let args: Vec<&str> =
+            rest.trim_end_matches(')').split(',').map(|s| s.trim()).collect();
+        let get = |bufs: &std::collections::HashMap<String, Vec<f32>>, n: &str| -> Vec<f32> {
+            bufs[n].clone()
+        };
+        match func {
+            "tl.vrelu" | "tl.vexp" | "tl.vlog" | "tl.vabs" | "tl.vsqrt" | "tl.vtanh"
+            | "tl.vrec" | "tl.vsign" | "tl.vfloor" | "tl.vcopy" => {
+                let src = get(bufs, args[1]);
+                let out: Vec<f32> = src
+                    .iter()
+                    .map(|&v| match func {
+                        "tl.vrelu" => v.max(0.0),
+                        "tl.vexp" => v.exp(),
+                        "tl.vlog" => v.ln(),
+                        "tl.vabs" => v.abs(),
+                        "tl.vsqrt" => v.sqrt(),
+                        "tl.vtanh" => v.tanh(),
+                        "tl.vrec" => 1.0 / v,
+                        "tl.vsign" => {
+                            if v > 0.0 {
+                                1.0
+                            } else if v < 0.0 {
+                                -1.0
+                            } else {
+                                0.0
+                            }
+                        }
+                        "tl.vfloor" => v.floor(),
+                        _ => v,
+                    })
+                    .collect();
+                bufs.insert(args[0].to_string(), out);
+            }
+            "tl.vadd" | "tl.vsub" | "tl.vmul" | "tl.vdiv" | "tl.vmax" | "tl.vmin" => {
+                let a = get(bufs, args[1]);
+                let b = get(bufs, args[2]);
+                let out: Vec<f32> = a
+                    .iter()
+                    .zip(&b)
+                    .map(|(&x, &y)| match func {
+                        "tl.vadd" => x + y,
+                        "tl.vsub" => x - y,
+                        "tl.vmul" => x * y,
+                        "tl.vdiv" => x / y,
+                        "tl.vmax" => x.max(y),
+                        _ => x.min(y),
+                    })
+                    .collect();
+                bufs.insert(args[0].to_string(), out);
+            }
+            "tl.adds" | "tl.muls" | "tl.maxs" | "tl.mins" => {
+                let src = get(bufs, args[1]);
+                let c: f32 = args[2].parse().unwrap();
+                let out: Vec<f32> = src
+                    .iter()
+                    .map(|&x| match func {
+                        "tl.adds" => x + c,
+                        "tl.muls" => x * c,
+                        "tl.maxs" => x.max(c),
+                        _ => x.min(c),
+                    })
+                    .collect();
+                bufs.insert(args[0].to_string(), out);
+            }
+            "tl.memset" => {
+                let c: f32 = args[1].parse().unwrap();
+                let n = bufs[args[0]].len();
+                bufs.insert(args[0].to_string(), vec![c; n]);
+            }
+            "tl.vselect_ge" => {
+                let c = get(bufs, args[1]);
+                let a = get(bufs, args[2]);
+                let b = get(bufs, args[3]);
+                let out: Vec<f32> = c
+                    .iter()
+                    .zip(a.iter().zip(&b))
+                    .map(|(&cv, (&av, &bv))| if cv >= 0.0 { av } else { bv })
+                    .collect();
+                bufs.insert(args[0].to_string(), out);
+            }
+            other => panic!("unknown op {other}"),
+        }
+    }
+}

@@ -1,0 +1,71 @@
+//! The DSL generation stage (paper §4.1) — AscendCraft's "LLM".
+//!
+//! The paper prompts an LLM with (a) the DSL specification and (b)
+//! category- and shape-specific expert examples, and lets it generate a DSL
+//! program for the task. This reproduction replaces the LLM with a
+//! **deterministic knowledge-base synthesizer** ([`templates`]): the same
+//! category expert knowledge the paper encodes in its example library is
+//! encoded here as parameterized templates keyed by [`ComputeSpec`], and
+//! the synthesizer instantiates the matching template for the task —
+//! including the *knowledge gaps* that produce the paper's reported
+//! failures (no bool dtype mapping; padded single-pass normalization for
+//! unaligned feature lengths; no pooling padding handling; no max-rescale
+//! in fused log-softmax). See DESIGN.md §Substitutions.
+//!
+//! [`direct`] is the motivating baseline: AscendC emitted in one shot from
+//! a generic non-category template (paper §2.3's "direct generation"),
+//! which trips the validator on most tasks.
+//!
+//! [`repair`] is the per-pass correction feedback loop (paper §4.2): it
+//! pattern-matches compiler diagnostics and edits the DSL (or the transpile
+//! options) to fix them, up to a bounded number of rounds.
+
+pub mod direct;
+pub mod examples;
+pub mod expr;
+pub mod prompt;
+pub mod repair;
+pub mod templates;
+
+use crate::bench_suite::spec::TaskSpec;
+use std::fmt;
+
+/// A generated DSL program plus any scratch GM tensors the host needs
+/// (e.g. per-core partial buffers for losses).
+#[derive(Clone, Debug)]
+pub struct GenResult {
+    pub dsl_source: String,
+    /// (tensor name, shape) of scratch buffers the harness must allocate.
+    pub scratch: Vec<(String, Vec<usize>)>,
+}
+
+#[derive(Clone, Debug)]
+pub struct GenError {
+    pub message: String,
+}
+
+impl GenError {
+    pub fn new(m: impl Into<String>) -> GenError {
+        GenError { message: m.into() }
+    }
+}
+
+impl fmt::Display for GenError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "generation error: {}", self.message)
+    }
+}
+
+impl std::error::Error for GenError {}
+
+/// Abstraction over DSL generators (the knowledge-base synthesizer, the
+/// direct baseline, and — in a networked deployment — a real LLM).
+pub trait Generator {
+    fn name(&self) -> &'static str;
+    fn generate(&self, task: &TaskSpec) -> Result<GenResult, GenError>;
+}
+
+/// The default generator.
+pub fn knowledge_base() -> templates::KnowledgeBaseSynthesizer {
+    templates::KnowledgeBaseSynthesizer::default()
+}

@@ -1,0 +1,105 @@
+//! Prompt assembly (paper §4.1's "DSL specification + category examples").
+//!
+//! The knowledge-base synthesizer is deterministic and does not literally
+//! consume prompts, but the prompt is still a first-class artifact: it is
+//! what a real-LLM deployment of this pipeline would send, the CLI shows it
+//! (`ascendcraft prompt <category>`), and the DSL spec section below is the
+//! normative one-page description of the language.
+
+use super::examples;
+use crate::bench_suite::spec::{Category, TaskSpec};
+use std::fmt::Write as _;
+
+/// The compact DSL specification (paper §3's "a compact specification is
+/// sufficient").
+pub const DSL_SPEC: &str = r#"## Ascend DSL specification
+
+A program is one `@ascend_kernel` function plus one host function.
+
+Host function (global planning):
+  - straight-line integer arithmetic over input shapes (`x.shape[i]`),
+    `min`/`max`, `//`; every tiling parameter must be explicit;
+  - ends with launches `kernel[n_cores](tensor_args..., scalar_args...)`.
+
+Kernel function (on-chip execution):
+  - pointer parameters end in `_ptr`; scalar parameters carry tiling values;
+  - on-chip buffers are allocated ONCE at kernel top level with
+    `tl.alloc_ub(length, dtype=tl.float32)` (no aliasing, no reallocation);
+  - all work happens in staged blocks:
+      with tl.copyin():   only tl.load(ptr + offset, buf, count)
+      with tl.compute():  only vector/scalar compute primitives
+      with tl.copyout():  only tl.store(ptr + offset, buf, count)
+    stages never nest; a buffer is loaded OR stored, never both;
+  - vector primitives (dst first): tl.vadd/vsub/vmul/vdiv/vmax/vmin,
+    tl.adds/muls/maxs/mins (tensor-scalar), tl.vexp/vlog/vabs/vsqrt/vrsqrt/
+    vrec/vrelu/vtanh/vsign/vfloor/vcopy, tl.vselect_ge(dst, cond, a, b, n),
+    tl.reduce_sum/reduce_max/reduce_min(dst, src, n) (result at dst[0]),
+    tl.memset(dst, value, n), tl.cast(dst, src, dtype, n);
+  - scalar bridge: v = tl.extract_scalar(buf, i); tl.insert_scalar(buf, i, v);
+    scalar math tl.max/tl.min/tl.exp/tl.log/tl.sqrt/tl.abs;
+  - `tl.program_id(0)` is this core's block index; buffers may be offset
+    (`buf + k`) in vector ops for shifted-window algorithms.
+"#;
+
+/// Assemble the generation prompt for a task.
+pub fn build_prompt(task: &TaskSpec) -> String {
+    let mut p = String::new();
+    let _ = writeln!(p, "# AscendCraft DSL generation\n");
+    let _ = writeln!(p, "{DSL_SPEC}");
+    let _ = writeln!(p, "## Category expert examples ({})\n", task.category.name());
+    for e in examples::for_category(task.category) {
+        let _ = writeln!(p, "### {} — {}\n", e.name, e.lesson);
+        let _ = writeln!(p, "```python\n{}\n```\n", e.dsl.trim());
+    }
+    let _ = writeln!(p, "## Task\n");
+    let _ = writeln!(p, "Operator: {} (category {})", task.name, task.category.name());
+    let _ = writeln!(p, "Inputs:");
+    for (n, shape, dtype) in &task.inputs {
+        let _ = writeln!(p, "  - {n}: shape {shape:?}, dtype {dtype}");
+    }
+    let _ = writeln!(p, "Outputs:");
+    for (n, shape) in &task.outputs {
+        let _ = writeln!(p, "  - {n}: shape {shape:?}");
+    }
+    let _ = writeln!(
+        p,
+        "\nWrite a DSL program implementing this operator with the category's \
+         tiling and dataflow strategy."
+    );
+    p
+}
+
+/// Prompt shown for a whole category (CLI convenience).
+pub fn category_prompt(c: Category) -> String {
+    let mut p = String::new();
+    let _ = writeln!(p, "{DSL_SPEC}");
+    for e in examples::for_category(c) {
+        let _ = writeln!(p, "### {} — {}\n", e.name, e.lesson);
+        let _ = writeln!(p, "```python\n{}\n```", e.dsl.trim());
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite::tasks::task_by_name;
+
+    #[test]
+    fn prompt_contains_spec_examples_and_task() {
+        let t = task_by_name("softmax").unwrap();
+        let p = build_prompt(&t);
+        assert!(p.contains("## Ascend DSL specification"));
+        assert!(p.contains("softmax_3pass"));
+        assert!(p.contains("Operator: softmax"));
+        assert!(p.contains("[512, 2048]"));
+    }
+
+    #[test]
+    fn category_prompt_for_each_category() {
+        for c in Category::all() {
+            let p = category_prompt(c);
+            assert!(p.contains("@ascend_kernel"), "{}", c.name());
+        }
+    }
+}

@@ -1,0 +1,165 @@
+//! Per-pass correction feedback (paper §4.2): compile diagnostics are fed
+//! back and the program is revised before proceeding.
+//!
+//! The repair engine pattern-matches validator diagnostics the way the
+//! paper's LLM consumes compiler error text, and applies the corresponding
+//! fix to the DSL source and/or transpile options:
+//!
+//! * `A301` (Unified Buffer over-subscription): first drop queue depth
+//!   2 → 1 (give up double buffering), then repeatedly halve the tile
+//!   length constant in the host's tiling code;
+//! * `A101`/`A102`/`A103` (alignment): force padded copies (the blunt
+//!   reactive version of Pass 4 — used when Pass 4 is ablated off);
+//! * `A401`/`A402` (unsupported dtype): **no rule** — the knowledge base
+//!   has no bool workaround, so these remain compile failures, exactly the
+//!   paper's `mask_cumsum` outcome.
+
+use crate::ascendc::validate::AscDiagnostic;
+use crate::transpile::TranspileOptions;
+
+/// A proposed revision.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Repair {
+    /// Re-transpile with queue depth 1.
+    DropDoubleBuffering,
+    /// Halve the `min(N, ...)` tile constant in the host code.
+    HalveTile { old: usize, new: usize },
+    /// Re-transpile with all DataCopy padded.
+    ForcePaddedCopies,
+}
+
+/// Outcome of one repair round.
+#[derive(Clone, Debug)]
+pub struct RepairOutcome {
+    pub dsl_source: String,
+    pub options: TranspileOptions,
+    pub applied: Repair,
+}
+
+/// Propose a repair for the first repairable diagnostic, or None when the
+/// engine has no rule (unrepairable → Comp@1 failure).
+pub fn propose(
+    diags: &[AscDiagnostic],
+    dsl_source: &str,
+    options: &TranspileOptions,
+) -> Option<RepairOutcome> {
+    for d in diags.iter().filter(|d| d.is_error()) {
+        match d.code.as_str() {
+            "A301" => {
+                if options.queue_depth > 1 {
+                    return Some(RepairOutcome {
+                        dsl_source: dsl_source.to_string(),
+                        options: TranspileOptions { queue_depth: 1, ..options.clone() },
+                        applied: Repair::DropDoubleBuffering,
+                    });
+                }
+                if let Some((src, old, new)) = halve_tile_constant(dsl_source) {
+                    return Some(RepairOutcome {
+                        dsl_source: src,
+                        options: options.clone(),
+                        applied: Repair::HalveTile { old, new },
+                    });
+                }
+                return None;
+            }
+            "A101" | "A103" => {
+                if !options.force_pad {
+                    return Some(RepairOutcome {
+                        dsl_source: dsl_source.to_string(),
+                        options: TranspileOptions { force_pad: true, ..options.clone() },
+                        applied: Repair::ForcePaddedCopies,
+                    });
+                }
+                return None;
+            }
+            // no rule for unsupported dtypes (A401/A402) or structural
+            // errors (A2xx/A5xx — the transpiler doesn't produce them)
+            _ => continue,
+        }
+    }
+    None
+}
+
+/// Find `tile_len = min(N, ...)` (or `tile_length`) in host code and halve
+/// N. Returns (new source, old N, new N); gives up below 64 elements.
+fn halve_tile_constant(src: &str) -> Option<(String, usize, usize)> {
+    for pat in ["tile_len = min(", "tile_length = min("] {
+        if let Some(pos) = src.find(pat) {
+            let rest = &src[pos + pat.len()..];
+            let num_end = rest.find(|c: char| !c.is_ascii_digit())?;
+            let n: usize = rest[..num_end].parse().ok()?;
+            if n < 64 {
+                return None;
+            }
+            let new = n / 2;
+            let mut out = String::with_capacity(src.len());
+            out.push_str(&src[..pos + pat.len()]);
+            out.push_str(&new.to_string());
+            out.push_str(&rest[num_end..]);
+            return Some((out, n, new));
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ascendc::validate::Severity;
+
+    fn diag(code: &str) -> AscDiagnostic {
+        AscDiagnostic {
+            code: code.into(),
+            severity: Severity::Error,
+            message: String::new(),
+            kernel: "k".into(),
+            stage: String::new(),
+        }
+    }
+
+    #[test]
+    fn a301_first_drops_double_buffering() {
+        let opts = TranspileOptions::default();
+        let out = propose(&[diag("A301")], "tile_len = min(8192, per_core)", &opts).unwrap();
+        assert_eq!(out.applied, Repair::DropDoubleBuffering);
+        assert_eq!(out.options.queue_depth, 1);
+    }
+
+    #[test]
+    fn a301_then_halves_tiles() {
+        let opts = TranspileOptions { queue_depth: 1, ..Default::default() };
+        let src = "    tile_len = min(8192, per_core)\n";
+        let out = propose(&[diag("A301")], src, &opts).unwrap();
+        assert_eq!(out.applied, Repair::HalveTile { old: 8192, new: 4096 });
+        assert!(out.dsl_source.contains("min(4096, per_core)"));
+    }
+
+    #[test]
+    fn tile_halving_bottoms_out() {
+        let opts = TranspileOptions { queue_depth: 1, ..Default::default() };
+        let src = "tile_len = min(32, per_core)";
+        assert!(propose(&[diag("A301")], src, &opts).is_none());
+    }
+
+    #[test]
+    fn alignment_errors_force_padding() {
+        let opts = TranspileOptions { pass4: false, ..Default::default() };
+        let out = propose(&[diag("A101")], "src", &opts).unwrap();
+        assert_eq!(out.applied, Repair::ForcePaddedCopies);
+        assert!(out.options.force_pad);
+    }
+
+    #[test]
+    fn bool_dtype_is_unrepairable() {
+        let opts = TranspileOptions::default();
+        assert!(propose(&[diag("A401")], "src", &opts).is_none());
+        assert!(propose(&[diag("A402")], "src", &opts).is_none());
+    }
+
+    #[test]
+    fn warnings_are_ignored() {
+        let mut d = diag("A301");
+        d.severity = Severity::Warning;
+        assert!(propose(&[d], "tile_len = min(8192, x)", &TranspileOptions::default()).is_none());
+    }
+}

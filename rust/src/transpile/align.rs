@@ -1,0 +1,202 @@
+//! Static alignment analysis for Pass 4.
+//!
+//! Given a scalar expression over tiling values (known) and loop variables
+//! (unknown), compute a conservative *guaranteed divisor*: a value `d` such
+//! that the expression is provably a multiple of `d` for every possible
+//! assignment of the unknowns. A `DataCopy` of `count` f32 elements at
+//! `offset` is 32-byte safe iff both `count*4` and `offset*4` are provably
+//! multiples of 32, i.e. the element divisors are multiples of 8.
+
+use crate::ascendc::ir::{CBinOp, CExpr};
+use std::collections::HashMap;
+
+fn gcd(a: u64, b: u64) -> u64 {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+/// Largest divisor we care to track (avoid overflow; 8 elements = 32 bytes
+/// for f32, so anything >= 8 with 8 | d is equivalent for our purposes).
+const CAP: u64 = 1 << 20;
+
+/// Guaranteed divisor of `e` in elements. Unknown variables contribute
+/// divisor 1 (they can take any integer value).
+pub fn guaranteed_divisor(e: &CExpr, known: &HashMap<String, i64>) -> u64 {
+    divisor_rec(e, known, &HashMap::new(), 0)
+}
+
+/// Like [`guaranteed_divisor`] but resolves scalar variables through a
+/// definition map (single-assignment kernel locals like `off = base +
+/// t * tileLen`), so Pass 4 can prove alignment through index variables.
+pub fn guaranteed_divisor_with(
+    e: &CExpr,
+    known: &HashMap<String, i64>,
+    defs: &HashMap<String, CExpr>,
+) -> u64 {
+    divisor_rec(e, known, defs, 0)
+}
+
+fn divisor_rec(
+    e: &CExpr,
+    known: &HashMap<String, i64>,
+    defs: &HashMap<String, CExpr>,
+    depth: usize,
+) -> u64 {
+    if depth > 16 {
+        return 1;
+    }
+    match e {
+        CExpr::Int(v) => {
+            if *v == 0 {
+                CAP // zero is a multiple of everything
+            } else {
+                (v.unsigned_abs()).min(CAP)
+            }
+        }
+        CExpr::Float(_) => 1,
+        CExpr::Var(n) => match known.get(n) {
+            Some(0) => CAP,
+            Some(v) => (v.unsigned_abs()).min(CAP),
+            None => match defs.get(n) {
+                Some(def) => divisor_rec(def, known, defs, depth + 1),
+                None => 1,
+            },
+        },
+        CExpr::GetBlockIdx => 1,
+        CExpr::ShapeOf(..) => 1,
+        CExpr::Bin(op, a, b) => {
+            let (da, db) = (divisor_rec(a, known, defs, depth + 1), divisor_rec(b, known, defs, depth + 1));
+            match op {
+                CBinOp::Add | CBinOp::Sub => gcd(da, db),
+                CBinOp::Mul => da.saturating_mul(db).min(CAP),
+                // division/modulo destroy divisibility guarantees
+                _ => 1,
+            }
+        }
+        CExpr::Un(_, a) => divisor_rec(a, known, defs, depth + 1),
+        CExpr::Min(a, b) | CExpr::Max(a, b) => {
+            gcd(divisor_rec(a, known, defs, depth + 1), divisor_rec(b, known, defs, depth + 1))
+        }
+    }
+}
+
+/// Is a DataCopy with this element count/offset provably 32-byte aligned
+/// for an element size of `esize` bytes?
+pub fn is_aligned(count: &CExpr, offset: &CExpr, esize: u64, known: &HashMap<String, i64>) -> bool {
+    is_aligned_with(count, offset, esize, known, &HashMap::new())
+}
+
+/// [`is_aligned`] with a scalar-definition map (see
+/// [`guaranteed_divisor_with`]).
+pub fn is_aligned_with(
+    count: &CExpr,
+    offset: &CExpr,
+    esize: u64,
+    known: &HashMap<String, i64>,
+    defs: &HashMap<String, CExpr>,
+) -> bool {
+    let need = match 32 / esize.max(1) {
+        0 => 32,
+        k => k,
+    };
+    guaranteed_divisor_with(count, known, defs) % need == 0
+        && guaranteed_divisor_with(offset, known, defs) % need == 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ascendc::ir::CExpr;
+
+    fn known(pairs: &[(&str, i64)]) -> HashMap<String, i64> {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    #[test]
+    fn constants() {
+        let k = known(&[]);
+        assert_eq!(guaranteed_divisor(&CExpr::Int(8192), &k), 8192);
+        assert_eq!(guaranteed_divisor(&CExpr::Int(1), &k), 1);
+        assert_eq!(guaranteed_divisor(&CExpr::Int(0), &k), CAP);
+    }
+
+    #[test]
+    fn known_variables_use_their_value() {
+        let k = known(&[("tileLen", 8192)]);
+        assert_eq!(guaranteed_divisor(&CExpr::var("tileLen"), &k), 8192);
+    }
+
+    #[test]
+    fn unknown_times_aligned_is_aligned() {
+        // off = t * tileLen with t unknown: divisor = tileLen
+        let k = known(&[("tileLen", 8192)]);
+        let e = CExpr::mul(CExpr::var("t"), CExpr::var("tileLen"));
+        assert_eq!(guaranteed_divisor(&e, &k), 8192);
+    }
+
+    #[test]
+    fn sum_takes_gcd() {
+        let k = known(&[("a", 64), ("b", 48)]);
+        let e = CExpr::add(CExpr::var("a"), CExpr::var("b"));
+        assert_eq!(guaranteed_divisor(&e, &k), 16);
+    }
+
+    #[test]
+    fn division_destroys_guarantee() {
+        let k = known(&[("a", 64)]);
+        let e = CExpr::floordiv(CExpr::var("a"), CExpr::Int(3));
+        assert_eq!(guaranteed_divisor(&e, &k), 1);
+    }
+
+    #[test]
+    fn aligned_copy_detection() {
+        let k = known(&[("tileLen", 8192), ("cols", 2048)]);
+        // count=tileLen, offset=r*cols: both multiples of 8 elements
+        let off = CExpr::mul(CExpr::var("r"), CExpr::var("cols"));
+        assert!(is_aligned(&CExpr::var("tileLen"), &off, 4, &k));
+        // count=1 (scalar store): not aligned
+        assert!(!is_aligned(&CExpr::Int(1), &CExpr::var("r"), 4, &k));
+    }
+
+    #[test]
+    fn odd_tile_is_unaligned() {
+        let k = known(&[("tileLen", 2047)]);
+        assert!(!is_aligned(&CExpr::var("tileLen"), &CExpr::Int(0), 4, &k));
+    }
+
+    #[test]
+    fn definitions_resolve_through_variables() {
+        let k = known(&[("tileLen", 8192), ("perCore", 131072)]);
+        let mut defs = HashMap::new();
+        defs.insert(
+            "base".to_string(),
+            CExpr::mul(CExpr::GetBlockIdx, CExpr::var("perCore")),
+        );
+        defs.insert(
+            "off".to_string(),
+            CExpr::add(CExpr::var("base"), CExpr::mul(CExpr::var("t"), CExpr::var("tileLen"))),
+        );
+        assert_eq!(guaranteed_divisor_with(&CExpr::var("off"), &k, &defs), 8192);
+        assert!(is_aligned_with(&CExpr::var("tileLen"), &CExpr::var("off"), 4, &k, &defs));
+    }
+
+    #[test]
+    fn definition_cycles_terminate() {
+        let k = known(&[]);
+        let mut defs = HashMap::new();
+        defs.insert("a".to_string(), CExpr::var("b"));
+        defs.insert("b".to_string(), CExpr::var("a"));
+        assert_eq!(guaranteed_divisor_with(&CExpr::var("a"), &k, &defs), 1);
+    }
+
+    #[test]
+    fn f16_needs_16_elements() {
+        let k = known(&[]);
+        // 8 f16 elements = 16 bytes: NOT 32-byte aligned
+        assert!(!is_aligned(&CExpr::Int(8), &CExpr::Int(0), 2, &k));
+        assert!(is_aligned(&CExpr::Int(16), &CExpr::Int(0), 2, &k));
+    }
+}

@@ -1,0 +1,133 @@
+//! DSL → AscendC transcompilation (paper §4.2).
+//!
+//! The lowering is decomposed into the paper's four structured passes, each
+//! a deterministic, constraint-driven translation of one aspect of the DSL
+//! (the paper drives each pass with a constrained LLM prompt; the mapping
+//! rules those prompts encode are implemented here directly — see
+//! DESIGN.md §Substitutions):
+//!
+//! 1. **Host-side translation** ([`pass1_host`]) — tiling data structure +
+//!    parameter computation + launch configuration.
+//! 2. **Kernel initialization** ([`pass2_init`]) — TQue/TBuf planning from
+//!    DSL buffer usage, GlobalTensor bindings, tiling member copy.
+//! 3. **Kernel computation** ([`pass3_compute`]) — every DSL stage block
+//!    becomes one `__aicore__` stage function with explicit queue traffic;
+//!    the Process loop calls stages in order.
+//! 4. **Alignment & padding refinement** ([`pass4_align`]) — optional;
+//!    rewrites `DataCopy` whose count/offset cannot be proven 32-byte
+//!    aligned into `DataCopyPad`.
+//!
+//! After each pass the partial program is validated ("compiled"); errors
+//! feed the repair loop in `synth::repair` (paper's per-pass correction
+//! feedback). [`transpile`] wires the passes together.
+
+pub mod align;
+pub mod pass1_host;
+pub mod pass2_init;
+pub mod pass3_compute;
+pub mod pass4_align;
+
+use crate::ascendc::ir::AscProgram;
+use crate::ascendc::validate::{validate, AscDiagnostic, ValidateEnv};
+use crate::dsl::ast::DslProgram;
+use crate::util::tensor::Tensor;
+use std::collections::HashMap;
+use std::fmt;
+
+/// Transcompilation options (pass toggles are used by the ablation bench).
+#[derive(Clone, Debug)]
+pub struct TranspileOptions {
+    /// Run Pass 4 (alignment/padding refinement).
+    pub pass4: bool,
+    /// Default queue depth (2 = double buffering).
+    pub queue_depth: usize,
+    /// Repair-engine fallback: convert *every* DataCopy to DataCopyPad
+    /// (blunter than Pass 4's selective analysis; used when Pass 4 is
+    /// ablated and alignment errors are repaired reactively).
+    pub force_pad: bool,
+}
+
+impl Default for TranspileOptions {
+    fn default() -> TranspileOptions {
+        TranspileOptions { pass4: true, queue_depth: 2, force_pad: false }
+    }
+}
+
+/// A structured transpile error: which pass failed and why.
+#[derive(Clone, Debug)]
+pub struct TranspileError {
+    pub pass: &'static str,
+    pub code: String,
+    pub message: String,
+}
+
+impl TranspileError {
+    pub fn new(pass: &'static str, code: &str, message: String) -> TranspileError {
+        TranspileError { pass, code: code.to_string(), message }
+    }
+}
+
+impl fmt::Display for TranspileError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{} {}] {}", self.pass, self.code, self.message)
+    }
+}
+
+impl std::error::Error for TranspileError {}
+
+/// Result of a full transcompilation: the program plus the validator
+/// diagnostics produced after the final pass (errors mean "did not
+/// compile" and are handed to the repair loop).
+#[derive(Clone, Debug)]
+pub struct TranspileOutput {
+    pub program: AscProgram,
+    pub diagnostics: Vec<AscDiagnostic>,
+    pub tiling: HashMap<String, i64>,
+}
+
+/// Run all passes over a validated DSL program. `inputs` provide the
+/// representative shapes the host tiling is evaluated against (the same
+/// values the real toolchain would see at tiling time).
+pub fn transpile(
+    dsl: &DslProgram,
+    inputs: &HashMap<String, Tensor>,
+    options: &TranspileOptions,
+) -> Result<TranspileOutput, TranspileError> {
+    // Pass 1: host
+    let host = pass1_host::lower_host(dsl)?;
+    let tiling_env = pass1_host::eval_tiling(&host, inputs)
+        .map_err(|e| TranspileError::new("pass1", "H201", e))?;
+
+    // Passes 2+3 per kernel
+    let mut kernels = Vec::new();
+    for kernel_fn in dsl.kernels() {
+        let launch = host
+            .launches
+            .iter()
+            .find(|l| l.kernel == kernel_fn.name)
+            .ok_or_else(|| {
+                TranspileError::new(
+                    "pass1",
+                    "H103",
+                    format!("kernel '{}' has no launch in the host", kernel_fn.name),
+                )
+            })?;
+        let plan = pass2_init::plan_kernel(kernel_fn, launch, &tiling_env, options)?;
+        let kernel = pass3_compute::lower_kernel(kernel_fn, &plan)?;
+        kernels.push(kernel);
+    }
+
+    let mut program = AscProgram { host, kernels };
+
+    // Pass 4: alignment refinement
+    if options.force_pad {
+        pass4_align::pad_all(&mut program);
+    } else if options.pass4 {
+        pass4_align::refine(&mut program, &tiling_env);
+    }
+
+    // Final "compile": structural validation with concrete tiling.
+    let env = ValidateEnv::new(tiling_env.clone());
+    let diagnostics = validate(&program, &env);
+    Ok(TranspileOutput { program, diagnostics, tiling: tiling_env })
+}

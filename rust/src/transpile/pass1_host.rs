@@ -1,0 +1,299 @@
+//! Pass 1 — host-side translation.
+//!
+//! Lowers the DSL host function into `AscHost`: every assignment becomes a
+//! TilingData field computed from launch-argument shapes; every
+//! `kernel[grid](args...)` becomes a launch whose scalar arguments are
+//! materialized as additional tiling fields named after the kernel's
+//! parameters (that is how the values reach the kernel via `Init`).
+
+use super::TranspileError;
+use crate::ascendc::ir::{AscHost, CBinOp, CExpr, CUnFn, Launch};
+use crate::dsl::ast::{self, BinOp, DslProgram, Expr, Stmt, UnOp};
+use crate::sim::host::eval_host;
+use crate::util::tensor::Tensor;
+use std::collections::HashMap;
+
+/// Convert a host-side DSL expression into a host CExpr.
+pub fn host_expr(e: &Expr) -> Result<CExpr, TranspileError> {
+    let err = |code: &str, msg: String| TranspileError::new("pass1", code, msg);
+    Ok(match e {
+        Expr::Int(v) => CExpr::Int(*v),
+        Expr::Float(v) => CExpr::Float(*v),
+        Expr::Bool(b) => CExpr::Int(*b as i64),
+        Expr::Name(n) => CExpr::Var(n.clone()),
+        Expr::Str(_) => return Err(err("H101", "string in host arithmetic".into())),
+        Expr::Index { base, index } => {
+            // x.shape[d]
+            if let (Expr::Name(n), Expr::Int(d)) = (base.as_ref(), index.as_ref()) {
+                if let Some(tensor) = n.strip_suffix(".shape") {
+                    return Ok(CExpr::ShapeOf(tensor.to_string(), *d as usize));
+                }
+            }
+            return Err(err("H102", format!("unsupported host subscript {e:?}")));
+        }
+        Expr::Un(UnOp::Neg, a) => CExpr::Un(CUnFn::Neg, Box::new(host_expr(a)?)),
+        Expr::Un(UnOp::Not, a) => CExpr::Un(CUnFn::Not, Box::new(host_expr(a)?)),
+        Expr::Bin(op, a, b) => {
+            let op = match op {
+                BinOp::Add => CBinOp::Add,
+                BinOp::Sub => CBinOp::Sub,
+                BinOp::Mul => CBinOp::Mul,
+                BinOp::Div => CBinOp::Div,
+                BinOp::FloorDiv => CBinOp::FloorDiv,
+                BinOp::Mod => CBinOp::Mod,
+                BinOp::Lt => CBinOp::Lt,
+                BinOp::Le => CBinOp::Le,
+                BinOp::Gt => CBinOp::Gt,
+                BinOp::Ge => CBinOp::Ge,
+                BinOp::Eq => CBinOp::Eq,
+                BinOp::Ne => CBinOp::Ne,
+                BinOp::And => CBinOp::And,
+                BinOp::Or => CBinOp::Or,
+                BinOp::Pow => {
+                    return Err(err("H104", "'**' unsupported in host tiling arithmetic".into()))
+                }
+            };
+            CExpr::Bin(op, Box::new(host_expr(a)?), Box::new(host_expr(b)?))
+        }
+        Expr::Call { func, args, .. } => match (func.as_str(), args.len()) {
+            ("min", 2) | ("tl.min", 2) => {
+                CExpr::Min(Box::new(host_expr(&args[0])?), Box::new(host_expr(&args[1])?))
+            }
+            ("max", 2) | ("tl.max", 2) => {
+                CExpr::Max(Box::new(host_expr(&args[0])?), Box::new(host_expr(&args[1])?))
+            }
+            _ => return Err(err("H105", format!("unsupported host call '{func}'"))),
+        },
+    })
+}
+
+/// Lower the DSL host function.
+pub fn lower_host(dsl: &DslProgram) -> Result<AscHost, TranspileError> {
+    let host_fn = &dsl.host;
+    let mut tiling_assigns: Vec<(String, CExpr)> = Vec::new();
+    let mut launches = Vec::new();
+
+    for stmt in &host_fn.body {
+        match stmt {
+            Stmt::Assign { target, value, line } => {
+                let e = host_expr(value).map_err(|mut err| {
+                    err.message = format!("line {line}: {}", err.message);
+                    err
+                })?;
+                tiling_assigns.push((target.clone(), e));
+            }
+            Stmt::Launch { kernel, grid, args, line } => {
+                let kfn = dsl.kernel_by_name(kernel).ok_or_else(|| {
+                    TranspileError::new("pass1", "H103", format!("line {line}: launch of unknown kernel '{kernel}'"))
+                })?;
+                if kfn.params.len() != args.len() {
+                    return Err(TranspileError::new(
+                        "pass1",
+                        "H106",
+                        format!("line {line}: kernel '{kernel}' arity mismatch"),
+                    ));
+                }
+                let mut tensor_args = Vec::new();
+                for (param, arg) in kfn.params.iter().zip(args) {
+                    if param.name.ends_with("_ptr") {
+                        // tensor argument: must be a plain host tensor name
+                        match arg {
+                            Expr::Name(n) => tensor_args.push(n.clone()),
+                            other => {
+                                return Err(TranspileError::new(
+                                    "pass1",
+                                    "H107",
+                                    format!("line {line}: pointer parameter '{}' must be passed a tensor name, got {other:?}", param.name),
+                                ))
+                            }
+                        }
+                    } else {
+                        // scalar argument: becomes a tiling field named after
+                        // the kernel parameter
+                        let e = host_expr(arg)?;
+                        if let Some((_, prev)) =
+                            tiling_assigns.iter().find(|(n, _)| n == &param.name)
+                        {
+                            // same name may be passed to several kernels; the
+                            // expression must agree
+                            if *prev != e && CExpr::Var(param.name.clone()) != e {
+                                return Err(TranspileError::new(
+                                    "pass1",
+                                    "H108",
+                                    format!(
+                                        "line {line}: tiling field '{}' bound to two different expressions",
+                                        param.name
+                                    ),
+                                ));
+                            }
+                        } else if e != CExpr::Var(param.name.clone()) {
+                            tiling_assigns.push((param.name.clone(), e));
+                        }
+                    }
+                }
+                launches.push(Launch {
+                    kernel: kernel.clone(),
+                    block_dim: host_expr(grid)?,
+                    args: tensor_args,
+                });
+            }
+            Stmt::Pass { .. } | Stmt::Return { .. } => {}
+            other => {
+                return Err(TranspileError::new(
+                    "pass1",
+                    "H109",
+                    format!(
+                        "line {}: host statement {:?} unsupported (host code is straight-line tiling arithmetic + launches)",
+                        other.line(),
+                        std::mem::discriminant(other)
+                    ),
+                ))
+            }
+        }
+    }
+
+    if launches.is_empty() {
+        return Err(TranspileError::new("pass1", "H110", "host never launches a kernel".into()));
+    }
+
+    Ok(AscHost {
+        name: host_fn.name.clone(),
+        params: host_fn.params.iter().map(|p| p.name.clone()).collect(),
+        tiling_assigns,
+        launches,
+    })
+}
+
+/// Evaluate the lowered host's tiling fields against representative inputs.
+pub fn eval_tiling(
+    host: &AscHost,
+    inputs: &HashMap<String, Tensor>,
+) -> Result<HashMap<String, i64>, String> {
+    eval_host(host, inputs).map(|he| he.tiling).map_err(|e| e.to_string())
+}
+
+/// Helper shared with pass 2/3: kernel parameters that are pointers.
+pub fn pointer_params(kernel: &ast::KernelFn) -> Vec<String> {
+    kernel.params.iter().filter(|p| p.name.ends_with("_ptr")).map(|p| p.name.clone()).collect()
+}
+
+/// Kernel parameters that are scalars (tiling fields).
+pub fn scalar_params(kernel: &ast::KernelFn) -> Vec<String> {
+    kernel.params.iter().filter(|p| !p.name.ends_with("_ptr")).map(|p| p.name.clone()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::parser::parse_program;
+
+    const SRC: &str = "
+@ascend_kernel
+def k(x_ptr, y_ptr, per_core, tile_len, n_tiles):
+    pid = tl.program_id(0)
+
+def h(x, y):
+    total = x.shape[0] * x.shape[1]
+    n_cores = 32
+    per_core = total // n_cores
+    tile_len = min(8192, per_core)
+    n_tiles = per_core // tile_len
+    k[n_cores](x, y, per_core, tile_len, n_tiles)
+";
+
+    #[test]
+    fn lowers_tiling_and_launch() {
+        let dsl = parse_program(SRC).unwrap();
+        let host = lower_host(&dsl).unwrap();
+        assert_eq!(host.launches.len(), 1);
+        assert_eq!(host.launches[0].kernel, "k");
+        assert_eq!(host.launches[0].args, vec!["x".to_string(), "y".to_string()]);
+        let names: Vec<&str> = host.tiling_assigns.iter().map(|(n, _)| n.as_str()).collect();
+        assert!(names.contains(&"total"));
+        assert!(names.contains(&"tile_len"));
+    }
+
+    #[test]
+    fn shape_subscript_becomes_shapeof() {
+        let dsl = parse_program(SRC).unwrap();
+        let host = lower_host(&dsl).unwrap();
+        let total = &host.tiling_assigns.iter().find(|(n, _)| n == "total").unwrap().1;
+        assert_eq!(
+            *total,
+            CExpr::mul(CExpr::ShapeOf("x".into(), 0), CExpr::ShapeOf("x".into(), 1))
+        );
+    }
+
+    #[test]
+    fn tiling_evaluates_against_shapes() {
+        let dsl = parse_program(SRC).unwrap();
+        let host = lower_host(&dsl).unwrap();
+        let mut inputs = HashMap::new();
+        inputs.insert("x".to_string(), Tensor::zeros(&[1024, 4096]));
+        inputs.insert("y".to_string(), Tensor::zeros(&[1024, 4096]));
+        let tiling = eval_tiling(&host, &inputs).unwrap();
+        assert_eq!(tiling["total"], 1024 * 4096);
+        assert_eq!(tiling["per_core"], 1024 * 4096 / 32);
+        assert_eq!(tiling["tile_len"], 8192);
+        assert_eq!(tiling["n_tiles"], 16);
+    }
+
+    #[test]
+    fn min_call_lowered() {
+        let e = host_expr(&Expr::Call {
+            func: "min".into(),
+            args: vec![Expr::Int(3), Expr::Int(5)],
+            kwargs: vec![],
+        })
+        .unwrap();
+        assert_eq!(e, CExpr::Min(Box::new(CExpr::Int(3)), Box::new(CExpr::Int(5))));
+    }
+
+    #[test]
+    fn pointer_param_needs_tensor_name() {
+        let src = SRC.replace("k[n_cores](x, y,", "k[n_cores](x + 1, y,");
+        let dsl = parse_program(&src).unwrap();
+        let err = lower_host(&dsl).unwrap_err();
+        assert_eq!(err.code, "H107");
+    }
+
+    #[test]
+    fn launch_scalar_expr_becomes_tiling_field() {
+        let src = "
+@ascend_kernel
+def k(x_ptr, n_over_2):
+    pid = tl.program_id(0)
+
+def h(x):
+    n = x.shape[0]
+    k[4](x, n // 2)
+";
+        let dsl = parse_program(src).unwrap();
+        let host = lower_host(&dsl).unwrap();
+        let f = host.tiling_assigns.iter().find(|(n, _)| n == "n_over_2").unwrap();
+        assert_eq!(f.1, CExpr::floordiv(CExpr::var("n"), CExpr::Int(2)));
+    }
+
+    #[test]
+    fn host_loops_rejected() {
+        let src = "
+@ascend_kernel
+def k(x_ptr):
+    pid = tl.program_id(0)
+
+def h(x):
+    for i in range(4):
+        n = i
+    k[1](x)
+";
+        let dsl = parse_program(src).unwrap();
+        assert_eq!(lower_host(&dsl).unwrap_err().code, "H109");
+    }
+
+    #[test]
+    fn param_classification() {
+        let dsl = parse_program(SRC).unwrap();
+        assert_eq!(pointer_params(&dsl.kernel), vec!["x_ptr", "y_ptr"]);
+        assert_eq!(scalar_params(&dsl.kernel), vec!["per_core", "tile_len", "n_tiles"]);
+    }
+}

@@ -1,0 +1,401 @@
+//! Pass 2 — kernel initialization translation.
+//!
+//! Analyzes the DSL kernel's buffer usage and produces the resource plan:
+//!
+//! * buffers that are the destination of `tl.load` become **VECIN TQue**s;
+//! * buffers that are the source of `tl.store` become **VECOUT TQue**s;
+//! * all other `tl.alloc_ub` buffers become **TBuf** scratch;
+//! * pointer parameters become `GlobalTensor` bindings in parameter order;
+//! * scalar parameters become TilingData fields copied in `Init`.
+//!
+//! Queue capacities are resolved against the concrete tiling environment
+//! (the alloc length must be computable at tiling time, as on real
+//! hardware). A buffer that is both loaded and stored is rejected — the
+//! paper's Pass 3 forbids that aliasing, kernels must route data
+//! in-queue → compute → out-queue.
+
+use super::pass1_host::{host_expr, scalar_params};
+use super::TranspileError;
+use crate::ascendc::ir::*;
+use crate::dsl::ast::{self, as_alloc, Expr, KernelFn, Stmt};
+use crate::util::tensor::DType;
+use std::collections::HashMap;
+
+/// Resource plan for one kernel, consumed by Pass 3.
+#[derive(Clone, Debug)]
+pub struct KernelPlan {
+    pub queues: Vec<QueueDecl>,
+    pub tbufs: Vec<TBufDecl>,
+    pub globals: Vec<GlobalDecl>,
+    pub tiling_fields: Vec<String>,
+    /// buffer name -> queue position (for pass 3's queue plumbing)
+    pub buffer_pos: HashMap<String, QueuePos>,
+    /// pointer param -> GlobalTensor member name (e.g. x_ptr -> xGm)
+    pub global_names: HashMap<String, String>,
+}
+
+/// Buffer usage discovered by scanning the kernel body.
+#[derive(Default, Clone, Debug)]
+struct Usage {
+    loaded: bool,
+    stored: bool,
+}
+
+pub fn plan_kernel(
+    kernel: &KernelFn,
+    launch: &Launch,
+    tiling: &HashMap<String, i64>,
+    options: &super::TranspileOptions,
+) -> Result<KernelPlan, TranspileError> {
+    let err = |code: &str, msg: String| TranspileError::new("pass2", code, msg);
+
+    // 1. collect allocations
+    let mut allocs: Vec<(String, ast::AllocKind, Expr, DType)> = Vec::new();
+    for stmt in &kernel.body {
+        stmt.walk(&mut |s| {
+            if let Stmt::Assign { target, value, .. } = s {
+                if let Some((kind, len, dtype)) = as_alloc(value) {
+                    allocs.push((target.clone(), kind, len.clone(), dtype));
+                }
+            }
+        });
+    }
+
+    // 2. scan load/store usage + which global each buffer touches
+    let mut usage: HashMap<String, Usage> = HashMap::new();
+    let mut buffer_global: HashMap<String, String> = HashMap::new();
+    for stmt in &kernel.body {
+        stmt.walk(&mut |s| {
+            if let Stmt::ExprStmt { expr, .. } = s {
+                if let Expr::Call { func, args, .. } = expr {
+                    match func.as_str() {
+                        "tl.load" => {
+                            if let (Some(addr), Some(Expr::Name(buf))) = (args.first(), args.get(1)) {
+                                usage.entry(buf.clone()).or_default().loaded = true;
+                                if let Some((ptr, _)) = split_address(addr) {
+                                    buffer_global.entry(buf.clone()).or_insert(ptr);
+                                }
+                            }
+                        }
+                        "tl.store" => {
+                            if let (Some(addr), Some(Expr::Name(buf))) = (args.first(), args.get(1)) {
+                                usage.entry(buf.clone()).or_default().stored = true;
+                                if let Some((ptr, _)) = split_address(addr) {
+                                    buffer_global.entry(buf.clone()).or_insert(ptr);
+                                }
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+            }
+        });
+    }
+
+    // 3. classify buffers
+    let mut queues = Vec::new();
+    let mut tbufs = Vec::new();
+    let mut buffer_pos = HashMap::new();
+    for (name, _kind, len, dtype) in &allocs {
+        let len_expr = host_expr(len).map_err(|e| {
+            err("T201", format!("buffer '{name}' length not tiling-computable: {e}"))
+        })?;
+        let capacity = eval_const(&len_expr, tiling).ok_or_else(|| {
+            err(
+                "T201",
+                format!("buffer '{name}' length must be resolvable at tiling time"),
+            )
+        })?;
+        if capacity <= 0 {
+            return Err(err("T202", format!("buffer '{name}' has non-positive capacity {capacity}")));
+        }
+        let u = usage.get(name).cloned().unwrap_or_default();
+        match (u.loaded, u.stored) {
+            (true, true) => {
+                return Err(err(
+                    "T301",
+                    format!("buffer '{name}' is both loaded and stored; route through separate in/out buffers"),
+                ))
+            }
+            (true, false) => {
+                buffer_pos.insert(name.clone(), QueuePos::VecIn);
+                queues.push(QueueDecl {
+                    name: queue_name(name),
+                    pos: QueuePos::VecIn,
+                    depth: options.queue_depth,
+                    dtype: *dtype,
+                    capacity: capacity as usize,
+                });
+            }
+            (false, true) => {
+                buffer_pos.insert(name.clone(), QueuePos::VecOut);
+                queues.push(QueueDecl {
+                    name: queue_name(name),
+                    pos: QueuePos::VecOut,
+                    depth: options.queue_depth,
+                    dtype: *dtype,
+                    capacity: capacity as usize,
+                });
+            }
+            (false, false) => {
+                tbufs.push(TBufDecl { name: tbuf_name(name), dtype: *dtype, capacity: capacity as usize });
+            }
+        }
+    }
+
+    // 4. globals from pointer params, in parameter order; dtype inferred
+    //    from the first buffer that moves data to/from the pointer
+    let mut globals = Vec::new();
+    let mut global_names = HashMap::new();
+    let mut arg_cursor = 0usize;
+    for p in &kernel.params {
+        if !p.name.ends_with("_ptr") {
+            continue;
+        }
+        if arg_cursor >= launch.args.len() {
+            return Err(err("T203", format!("no launch argument for pointer param '{}'", p.name)));
+        }
+        let gname = format!("{}Gm", p.name.trim_end_matches("_ptr"));
+        let dtype = buffer_global
+            .iter()
+            .find(|(_, ptr)| **ptr == p.name)
+            .and_then(|(buf, _)| allocs.iter().find(|(n, ..)| n == buf))
+            .map(|(_, _, _, d)| *d)
+            .unwrap_or(DType::F32);
+        globals.push(GlobalDecl { name: gname.clone(), dtype, arg_index: arg_cursor });
+        global_names.insert(p.name.clone(), gname);
+        arg_cursor += 1;
+    }
+
+    Ok(KernelPlan {
+        queues,
+        tbufs,
+        globals,
+        tiling_fields: scalar_params(kernel),
+        buffer_pos,
+        global_names,
+    })
+}
+
+/// Queue / tbuf member names derived from DSL buffer names
+/// (`row_tile_ub` -> `rowTileQueue` / `rowTileBuf`).
+pub fn queue_name(buf: &str) -> String {
+    format!("{}Queue", lower_camel(buf.trim_end_matches("_ub").trim_end_matches("_l1")))
+}
+
+pub fn tbuf_name(buf: &str) -> String {
+    format!("{}Buf", lower_camel(buf.trim_end_matches("_ub").trim_end_matches("_l1")))
+}
+
+/// Local-tensor variable name for a DSL buffer inside stage functions.
+pub fn local_name(buf: &str) -> String {
+    format!("{}Local", lower_camel(buf.trim_end_matches("_ub").trim_end_matches("_l1")))
+}
+
+fn lower_camel(s: &str) -> String {
+    let mut out = String::new();
+    for (i, w) in s.split('_').enumerate() {
+        if w.is_empty() {
+            continue;
+        }
+        if i == 0 {
+            out.push_str(w);
+        } else {
+            let mut c = w.chars();
+            if let Some(f) = c.next() {
+                out.extend(f.to_uppercase());
+                out.push_str(c.as_str());
+            }
+        }
+    }
+    out
+}
+
+/// Split an address expression into (pointer name, offset expression).
+/// Handles arbitrary sums: `ptr + a + b` flattens to offset `a + b`.
+pub fn split_address(e: &Expr) -> Option<(String, Expr)> {
+    let mut terms: Vec<Expr> = Vec::new();
+    flatten_add(e, &mut terms);
+    let ptr_idx = terms.iter().position(|t| matches!(t, Expr::Name(n) if n.ends_with("_ptr")))?;
+    let Expr::Name(ptr) = terms.remove(ptr_idx) else { unreachable!() };
+    // reject addresses with more than one pointer
+    if terms.iter().any(|t| matches!(t, Expr::Name(n) if n.ends_with("_ptr"))) {
+        return None;
+    }
+    let offset = match terms.len() {
+        0 => Expr::Int(0),
+        _ => {
+            let mut acc = terms.remove(0);
+            for t in terms {
+                acc = Expr::Bin(ast::BinOp::Add, Box::new(acc), Box::new(t));
+            }
+            acc
+        }
+    };
+    Some((ptr, offset))
+}
+
+fn flatten_add(e: &Expr, out: &mut Vec<Expr>) {
+    match e {
+        Expr::Bin(ast::BinOp::Add, a, b) => {
+            flatten_add(a, out);
+            flatten_add(b, out);
+        }
+        other => out.push(other.clone()),
+    }
+}
+
+fn eval_const(e: &CExpr, tiling: &HashMap<String, i64>) -> Option<i64> {
+    match e {
+        CExpr::Int(v) => Some(*v),
+        CExpr::Var(n) => tiling.get(n).copied(),
+        CExpr::Bin(op, a, b) => {
+            let (a, b) = (eval_const(a, tiling)?, eval_const(b, tiling)?);
+            Some(match op {
+                CBinOp::Add => a + b,
+                CBinOp::Sub => a - b,
+                CBinOp::Mul => a * b,
+                CBinOp::FloorDiv | CBinOp::Div => {
+                    if b == 0 {
+                        return None;
+                    }
+                    a.div_euclid(b)
+                }
+                CBinOp::Mod => {
+                    if b == 0 {
+                        return None;
+                    }
+                    a.rem_euclid(b)
+                }
+                _ => return None,
+            })
+        }
+        CExpr::Min(a, b) => Some(eval_const(a, tiling)?.min(eval_const(b, tiling)?)),
+        CExpr::Max(a, b) => Some(eval_const(a, tiling)?.max(eval_const(b, tiling)?)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::parser::parse_program;
+    use crate::transpile::pass1_host::lower_host;
+    use crate::util::tensor::Tensor;
+
+    const SRC: &str = "
+@ascend_kernel
+def k(x_ptr, y_ptr, per_core, tile_len, n_tiles):
+    pid = tl.program_id(0)
+    base = pid * per_core
+    x_ub = tl.alloc_ub(tile_len, dtype=tl.float32)
+    tmp_ub = tl.alloc_ub(tile_len, dtype=tl.float32)
+    y_ub = tl.alloc_ub(tile_len, dtype=tl.float32)
+    for t in range(n_tiles):
+        off = base + t * tile_len
+        with tl.copyin():
+            tl.load(x_ptr + off, x_ub, tile_len)
+        with tl.compute():
+            tl.vexp(tmp_ub, x_ub, tile_len)
+            tl.vadd(y_ub, tmp_ub, x_ub, tile_len)
+        with tl.copyout():
+            tl.store(y_ptr + off, y_ub, tile_len)
+
+def h(x, y):
+    total = x.shape[0]
+    n_cores = 4
+    per_core = total // n_cores
+    tile_len = 1024
+    n_tiles = per_core // tile_len
+    k[n_cores](x, y, per_core, tile_len, n_tiles)
+";
+
+    fn plan_for(src: &str) -> Result<KernelPlan, TranspileError> {
+        let dsl = parse_program(src).unwrap();
+        let host = lower_host(&dsl).unwrap();
+        let mut inputs = HashMap::new();
+        inputs.insert("x".to_string(), Tensor::zeros(&[65536]));
+        inputs.insert("y".to_string(), Tensor::zeros(&[65536]));
+        let tiling = crate::transpile::pass1_host::eval_tiling(&host, &inputs).unwrap();
+        plan_kernel(&dsl.kernel, &host.launches[0], &tiling, &Default::default())
+    }
+
+    #[test]
+    fn classifies_buffers() {
+        let plan = plan_for(SRC).unwrap();
+        assert_eq!(plan.queues.len(), 2);
+        let inq = plan.queues.iter().find(|q| q.name == "xQueue").unwrap();
+        assert_eq!(inq.pos, QueuePos::VecIn);
+        assert_eq!(inq.capacity, 1024);
+        assert_eq!(inq.depth, 2);
+        let outq = plan.queues.iter().find(|q| q.name == "yQueue").unwrap();
+        assert_eq!(outq.pos, QueuePos::VecOut);
+        assert_eq!(plan.tbufs.len(), 1);
+        assert_eq!(plan.tbufs[0].name, "tmpBuf");
+    }
+
+    #[test]
+    fn globals_in_param_order() {
+        let plan = plan_for(SRC).unwrap();
+        assert_eq!(plan.globals.len(), 2);
+        assert_eq!(plan.globals[0].name, "xGm");
+        assert_eq!(plan.globals[0].arg_index, 0);
+        assert_eq!(plan.globals[1].name, "yGm");
+        assert_eq!(plan.global_names["x_ptr"], "xGm");
+    }
+
+    #[test]
+    fn tiling_fields_are_scalar_params() {
+        let plan = plan_for(SRC).unwrap();
+        assert_eq!(plan.tiling_fields, vec!["per_core", "tile_len", "n_tiles"]);
+    }
+
+    #[test]
+    fn load_and_store_same_buffer_rejected() {
+        let src = SRC.replace("tl.store(y_ptr + off, y_ub, tile_len)", "tl.store(y_ptr + off, x_ub, tile_len)");
+        let err = plan_for(&src).unwrap_err();
+        assert_eq!(err.code, "T301");
+    }
+
+    #[test]
+    fn bool_buffer_keeps_dtype_for_validator() {
+        let src = SRC.replace(
+            "x_ub = tl.alloc_ub(tile_len, dtype=tl.float32)",
+            "x_ub = tl.alloc_ub(tile_len, dtype=tl.bool)",
+        );
+        let plan = plan_for(&src).unwrap();
+        let inq = plan.queues.iter().find(|q| q.name == "xQueue").unwrap();
+        assert_eq!(inq.dtype, DType::Bool);
+        // and the global bound to it inherits bool
+        assert_eq!(plan.globals[0].dtype, DType::Bool);
+    }
+
+    #[test]
+    fn symbolic_capacity_rejected() {
+        // length depends on a loop variable -> not tiling-resolvable
+        let src = SRC.replace("x_ub = tl.alloc_ub(tile_len,", "x_ub = tl.alloc_ub(tile_len + zz,");
+        let err = plan_for(&src).unwrap_err();
+        assert_eq!(err.code, "T201");
+    }
+
+    #[test]
+    fn split_address_forms() {
+        let e = Expr::Bin(
+            ast::BinOp::Add,
+            Box::new(Expr::Name("x_ptr".into())),
+            Box::new(Expr::Name("off".into())),
+        );
+        let (p, off) = split_address(&e).unwrap();
+        assert_eq!(p, "x_ptr");
+        assert_eq!(off, Expr::Name("off".into()));
+        assert!(split_address(&Expr::Name("x_ptr".into())).is_some());
+        assert!(split_address(&Expr::Int(3)).is_none());
+    }
+
+    #[test]
+    fn name_mangling() {
+        assert_eq!(queue_name("row_tile_ub"), "rowTileQueue");
+        assert_eq!(tbuf_name("shared_ub"), "sharedBuf");
+        assert_eq!(local_name("x_ub"), "xLocal");
+    }
+}

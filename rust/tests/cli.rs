@@ -1,0 +1,57 @@
+//! CLI smoke tests: the `ascendcraft` binary's commands run and produce
+//! the expected artifacts/exit codes.
+
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_ascendcraft"))
+}
+
+#[test]
+fn list_shows_all_categories_and_52_tasks() {
+    let out = bin().arg("list").output().expect("run list");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for cat in ["Activation:", "Loss:", "Math:", "Normalization:", "Optimizer:", "Reduce:", "Pooling:"] {
+        assert!(text.contains(cat), "{cat} missing");
+    }
+    let task_lines = text.lines().filter(|l| l.starts_with("  ")).count();
+    assert_eq!(task_lines, 52);
+}
+
+#[test]
+fn gen_emits_dsl_and_ascendc_for_relu() {
+    let out = bin()
+        .args(["gen", "--task", "relu", "--emit-dsl", "--emit-ascendc"])
+        .output()
+        .expect("run gen");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("@ascend_kernel"));
+    assert!(text.contains("tl.vrelu"));
+    assert!(text.contains("class KernelReluKernel"));
+    assert!(text.contains("correct=true"));
+}
+
+#[test]
+fn gen_reports_failure_for_mask_cumsum() {
+    let out = bin().args(["gen", "--task", "mask_cumsum"]).output().expect("run gen");
+    assert_eq!(out.status.code(), Some(1));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("compiled=false"));
+}
+
+#[test]
+fn prompt_prints_category_examples() {
+    let out = bin().args(["prompt", "Normalization"]).output().expect("run prompt");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("softmax_3pass"));
+    assert!(text.contains("## Ascend DSL specification"));
+}
+
+#[test]
+fn unknown_command_exits_2() {
+    let out = bin().arg("bogus").output().expect("run");
+    assert_eq!(out.status.code(), Some(2));
+}

@@ -1,0 +1,222 @@
+//! Property-based tests (util::prop mini-framework, the offline proptest
+//! substitute): random expression trees through the whole stack, alignment
+//! analysis soundness, scheduler and simulator invariants.
+
+use ascendcraft::ascendc::ir::CExpr;
+use ascendcraft::bench_suite::spec::{BinFn, Category, ComputeSpec, EagerOp, OpExpr, TaskSpec, UnFn};
+use ascendcraft::coordinator::pipeline::{run_task, PipelineConfig};
+use ascendcraft::sim::timing::wave_makespan;
+use ascendcraft::transpile::align::guaranteed_divisor;
+use ascendcraft::util::prop::{prop_check, Gen};
+use ascendcraft::util::tensor::DType;
+
+/// Random elementwise expression tree (bounded depth, numerically tame).
+fn random_expr(g: &mut Gen, depth: usize) -> OpExpr {
+    if depth == 0 || g.usize_range(0, 4) == 0 {
+        return if g.bool() {
+            OpExpr::input(0)
+        } else {
+            OpExpr::c(g.f32_range(-2.0, 2.0) as f64)
+        };
+    }
+    match g.usize_range(0, 8) {
+        0 => OpExpr::un(UnFn::Abs, random_expr(g, depth - 1)),
+        1 => OpExpr::un(UnFn::Tanh, random_expr(g, depth - 1)),
+        2 => OpExpr::un(UnFn::Relu, random_expr(g, depth - 1)),
+        3 => OpExpr::bin(BinFn::Add, random_expr(g, depth - 1), random_expr(g, depth - 1)),
+        4 => OpExpr::bin(BinFn::Sub, random_expr(g, depth - 1), random_expr(g, depth - 1)),
+        5 => OpExpr::bin(BinFn::Mul, random_expr(g, depth - 1), random_expr(g, depth - 1)),
+        6 => OpExpr::bin(BinFn::Max, random_expr(g, depth - 1), random_expr(g, depth - 1)),
+        _ => OpExpr::SelectGe(
+            Box::new(random_expr(g, depth - 1)),
+            Box::new(random_expr(g, depth - 1)),
+            Box::new(random_expr(g, depth - 1)),
+        ),
+    }
+}
+
+/// Random elementwise kernels generated from random expression trees run
+/// the ENTIRE pipeline (template -> DSL -> AscendC -> simulator) and must
+/// match the direct reference evaluation. This is the single strongest
+/// invariant in the repository.
+#[test]
+fn prop_random_elementwise_kernels_verify_end_to_end() {
+    prop_check("random elementwise kernel", 24, |g| {
+        let expr = random_expr(g, 3);
+        let n = 64 * 1024; // small but multi-tile
+        let task = TaskSpec {
+            name: "prop_ew",
+            category: Category::Activation,
+            inputs: vec![("x", vec![n], DType::F32)],
+            outputs: vec![("y", vec![n])],
+            compute: ComputeSpec::Elementwise { expr: expr.clone() },
+            eager: vec![EagerOp::map("Prop", n, n)],
+            rtol: 1e-3,
+            atol: 1e-4,
+        };
+        let art = run_task(&task, &PipelineConfig { seed: g.u64(), ..Default::default() });
+        assert!(
+            art.result.correct,
+            "expr {expr:?} failed: {:?}\nDSL:\n{}",
+            art.result.failure,
+            art.dsl_source.unwrap_or_default()
+        );
+    });
+}
+
+/// The divisor analysis must be sound: whatever divisor it guarantees for
+/// an expression over unknowns must actually divide the value for random
+/// assignments of those unknowns.
+#[test]
+fn prop_alignment_divisor_is_sound() {
+    fn random_cexpr(g: &mut Gen, depth: usize) -> CExpr {
+        if depth == 0 || g.usize_range(0, 3) == 0 {
+            return match g.usize_range(0, 3) {
+                0 => CExpr::Int(*g.choose(&[0i64, 1, 7, 8, 64, 256, 1024, 8192])),
+                1 => CExpr::var("known"),
+                _ => CExpr::var("unknown"),
+            };
+        }
+        let a = random_cexpr(g, depth - 1);
+        let b = random_cexpr(g, depth - 1);
+        match g.usize_range(0, 4) {
+            0 => CExpr::add(a, b),
+            1 => CExpr::sub(a, b),
+            2 => CExpr::mul(a, b),
+            _ => CExpr::Min(Box::new(a), Box::new(b)),
+        }
+    }
+    prop_check("divisor soundness", 128, |g| {
+        let e = random_cexpr(g, 3);
+        let known_val = *g.choose(&[8i64, 64, 1024, 2048]);
+        let known: std::collections::HashMap<String, i64> =
+            [("known".to_string(), known_val)].into_iter().collect();
+        let d = guaranteed_divisor(&e, &known);
+        assert!(d >= 1);
+        // evaluate with random unknowns; the claimed divisor must divide
+        for _ in 0..8 {
+            let unknown_val = g.usize_range(0, 1000) as i64;
+            let v = eval_cexpr(&e, known_val, unknown_val);
+            if let Some(v) = v {
+                assert!(
+                    v % (d as i64) == 0,
+                    "expr {e:?}: divisor {d} does not divide {v} (unknown={unknown_val})"
+                );
+            }
+        }
+    });
+}
+
+fn eval_cexpr(e: &CExpr, known: i64, unknown: i64) -> Option<i64> {
+    use ascendcraft::ascendc::ir::CBinOp;
+    Some(match e {
+        CExpr::Int(v) => *v,
+        CExpr::Var(n) if n == "known" => known,
+        CExpr::Var(_) => unknown,
+        CExpr::Bin(op, a, b) => {
+            let (a, b) = (eval_cexpr(a, known, unknown)?, eval_cexpr(b, known, unknown)?);
+            match op {
+                CBinOp::Add => a + b,
+                CBinOp::Sub => a - b,
+                CBinOp::Mul => a.checked_mul(b)?,
+                _ => return None,
+            }
+        }
+        CExpr::Min(a, b) => eval_cexpr(a, known, unknown)?.min(eval_cexpr(b, known, unknown)?),
+        CExpr::Max(a, b) => eval_cexpr(a, known, unknown)?.max(eval_cexpr(b, known, unknown)?),
+        _ => return None,
+    })
+}
+
+/// Wave scheduling invariants: bounded below by the critical path and
+/// above by serial execution; one core is exactly serial; enough cores is
+/// exactly the max. (Strict monotonicity in core count does NOT hold for
+/// in-order wave dispatch — Graham-style scheduling anomalies, e.g. spans
+/// [1,1,10,10] take 11 on 2 cores but 20 on 3 — and that anomaly is a
+/// faithful property of block-wave dispatch, so we assert the bounds, not
+/// monotonicity.)
+#[test]
+fn prop_wave_makespan_invariants() {
+    prop_check("wave makespan", 128, |g| {
+        let n = g.usize_range(1, 64);
+        let spans: Vec<f64> = (0..n).map(|_| g.f32_range(1.0, 1000.0) as f64).collect();
+        let serial: f64 = spans.iter().sum();
+        let max = spans.iter().cloned().fold(0.0f64, f64::max);
+        let c = g.usize_range(1, 40);
+        let m = wave_makespan(&spans, c);
+        assert!(m <= serial + 1e-9, "makespan exceeds serial time");
+        assert!(m >= max - 1e-9, "makespan below critical path");
+        // one core = fully serial; >= n cores = critical path
+        assert!((wave_makespan(&spans, 1) - serial).abs() < 1e-6);
+        assert!((wave_makespan(&spans, n) - max).abs() < 1e-9);
+    });
+}
+
+/// The documented Graham anomaly really happens (regression-pinned).
+#[test]
+fn wave_makespan_graham_anomaly_example() {
+    let spans = [1.0, 1.0, 10.0, 10.0];
+    assert_eq!(wave_makespan(&spans, 2), 11.0);
+    assert_eq!(wave_makespan(&spans, 3), 20.0);
+}
+
+/// DSL printer/parser round-trip on every expert example and every
+/// generated benchmark program.
+#[test]
+fn prop_dsl_roundtrip_on_generated_programs() {
+    use ascendcraft::dsl;
+    use ascendcraft::synth::{templates::KnowledgeBaseSynthesizer, Generator};
+    let synth = KnowledgeBaseSynthesizer::default();
+    for task in ascendcraft::bench_suite::tasks::all_tasks() {
+        let gen = synth.generate(&task).unwrap();
+        let p1 = match dsl::parse_program(&gen.dsl_source) {
+            Ok(p) => p,
+            Err(e) => panic!("{}: {e}", task.name),
+        };
+        let printed = dsl::printer::print_program(&p1);
+        let p2 = dsl::parse_program(&printed).unwrap_or_else(|e| panic!("{}: {e}", task.name));
+        assert_eq!(
+            printed,
+            dsl::printer::print_program(&p2),
+            "{}: print/parse not idempotent",
+            task.name
+        );
+    }
+}
+
+/// Simulator conservation: an identity kernel must not corrupt data, and
+/// must leave unrelated GM regions untouched.
+#[test]
+fn prop_identity_kernel_preserves_data() {
+    prop_check("identity kernel", 12, |g| {
+        let n = 8192 * g.usize_range(1, 5);
+        let task = TaskSpec {
+            name: "prop_id",
+            category: Category::Activation,
+            inputs: vec![("x", vec![n], DType::F32)],
+            outputs: vec![("y", vec![n])],
+            compute: ComputeSpec::Elementwise { expr: OpExpr::input(0) },
+            eager: vec![EagerOp::map("Copy", n, n)],
+            rtol: 0.0,
+            atol: 0.0,
+        };
+        let art = run_task(&task, &PipelineConfig { seed: g.u64(), ..Default::default() });
+        assert!(art.result.correct, "{n}: {:?}", art.result.failure);
+    });
+}
+
+/// Eager cost model sanity: cost is monotone in data size and op count.
+#[test]
+fn prop_eager_cost_monotone() {
+    use ascendcraft::baselines::eager::eager_op_cycles;
+    prop_check("eager monotonicity", 64, |g| {
+        let n = g.usize_range(1, 1 << 20);
+        let k = g.usize_range(1, 8);
+        let small = EagerOp::map("a", n, n);
+        let big = EagerOp::map("b", n * 2, n * 2);
+        assert!(eager_op_cycles(&big, 32) >= eager_op_cycles(&small, 32));
+        let few: f64 = (0..k).map(|_| eager_op_cycles(&small, 32)).sum();
+        let more: f64 = (0..k + 1).map(|_| eager_op_cycles(&small, 32)).sum();
+        assert!(more > few);
+    });
+}
