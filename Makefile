@@ -1,0 +1,37 @@
+# AscendCraft reproduction — build / test / bench entry points.
+#
+# The Rust crate is hermetic (zero external crates); `make artifacts`
+# additionally regenerates the golden-oracle HLO fixtures from JAX when a
+# Python+JAX toolchain is available, and is a no-op otherwise (the
+# fixtures under artifacts/ are checked in, so tests never depend on it).
+
+CARGO ?= cargo
+PYTHON ?= python3
+
+.PHONY: all build test bench artifacts fmt clean
+
+all: build
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+bench: build
+	$(CARGO) bench
+
+# Regenerate artifacts/*.hlo.txt from python/compile/aot.py. Skipped (with
+# a note) when JAX is not importable — the checked-in fixtures remain.
+artifacts:
+	@if $(PYTHON) -c "import jax" 2>/dev/null; then \
+		cd python && $(PYTHON) -m compile.aot; \
+	else \
+		echo "JAX not available; keeping checked-in artifacts/*.hlo.txt"; \
+	fi
+
+fmt:
+	$(CARGO) fmt --all
+
+clean:
+	$(CARGO) clean

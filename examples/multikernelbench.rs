@@ -3,16 +3,15 @@
 //!
 //! Runs all 52 Level-1 tasks through the full AscendCraft pipeline on the
 //! worker pool, verifies every kernel against host references (and the
-//! PJRT golden oracles where `make artifacts` has produced them), and
-//! regenerates the paper's Table 1 and Table 2. Writes a JSON report next
-//! to the binary output for EXPERIMENTS.md.
+//! checked-in HLO golden oracles, executed by the `runtime::hlo`
+//! interpreter), and regenerates the paper's Table 1 and Table 2. Writes
+//! a JSON report next to the binary output for EXPERIMENTS.md.
 //!
 //! Run: `cargo run --release --example multikernelbench`
 
 use ascendcraft::bench_suite::tasks::all_tasks;
-use ascendcraft::coordinator::service::{run_suite, SuiteConfig};
+use ascendcraft::coordinator::service::{cross_check_suite, run_suite, SuiteConfig};
 use ascendcraft::runtime::OracleRegistry;
-use ascendcraft::util::compare::allclose_report;
 
 fn main() {
     let tasks = all_tasks();
@@ -25,36 +24,25 @@ fn main() {
     println!("\n{}", suite.render_table1());
     println!("{}", suite.render_table2());
 
-    // cross-check the rust references against the JAX/PJRT golden oracles
+    // cross-check the rust references against the JAX golden oracles
     // for every artifact that exists (L2 <-> L3 agreement)
     let reg = OracleRegistry::default_dir();
     let artifact_names = reg.list();
     if artifact_names.is_empty() {
-        println!("(no artifacts/ — run `make artifacts` for the PJRT golden cross-check)");
+        println!("(no artifacts/ — restore the checked-in fixtures or run `make artifacts`)");
     } else {
-        println!("PJRT golden cross-check ({} artifacts):", artifact_names.len());
-        let mut checked = 0;
-        for name in &artifact_names {
-            let Some(task) = tasks.iter().find(|t| t.name == name.as_str()) else {
-                continue;
-            };
-            let oracle = match reg.get(name) {
-                Ok(o) => o,
-                Err(e) => {
-                    println!("  {name:<14} load failed: {e}");
-                    continue;
-                }
-            };
-            let inputs = task.make_inputs(77);
-            let ins: Vec<_> = task.inputs.iter().map(|(n, _, _)| &inputs[*n]).collect();
-            let want = task.reference(&inputs);
-            let got = oracle.run(&ins).expect("oracle run");
-            let rep = allclose_report(&got[0], &want[task.outputs[0].0], 1e-3, 1e-4);
-            println!("  {name:<14} {}", if rep.ok { "ok" } else { "MISMATCH" });
-            assert!(rep.ok, "{name}: {}", rep.summary());
-            checked += 1;
+        println!("golden cross-check ({} artifacts):", artifact_names.len());
+        let oracle_tasks: Vec<_> = tasks
+            .iter()
+            .filter(|t| artifact_names.iter().any(|n| n == t.name))
+            .cloned()
+            .collect();
+        let checks = cross_check_suite(&oracle_tasks, &reg, cfg.workers, 77);
+        for c in &checks {
+            println!("  {:<14} {}", c.name, if c.ok { "ok" } else { "MISMATCH" });
+            assert!(c.ok, "{}: {}", c.name, c.detail);
         }
-        println!("  ({checked} oracles agree with the rust references)");
+        println!("  ({} oracles agree with the rust references)", checks.len());
     }
 
     // persist the per-task report

@@ -3,16 +3,21 @@ benchmark operators, AOT-lowered by aot.py into `artifacts/*.hlo.txt` for
 the Rust runtime.
 
 Each entry is (function, example-argument shapes matching the Rust task
-specs). The showcase entries (softmax, adam, mhc_*) route through the L1
-Pallas kernels so the lowered artifact exercises the full three-layer
-stack; the rest are pure jnp. Python runs only at build time — the Rust
-binary never imports any of this.
+specs). Every entry is pure jnp: the Rust side executes the lowered HLO
+text with its own self-contained interpreter (`rust/src/runtime/hlo`),
+which covers the dense-arithmetic op set (add/subtract/multiply/divide/
+maximum/minimum/exponential/log/tanh/sqrt/rsqrt/power/negate/abs/constant/
+broadcast/reshape/transpose/reduce/dot/select/compare/convert/tuple) but
+not control flow — so nothing here may route through `pallas_call`
+(`interpret=True` lowers to while-loops and dynamic slices). The Pallas
+kernels in `kernels/pallas_kernels.py` are still checked against these
+references by pytest; aot.py lowers the references themselves. Python
+runs only at build time — the Rust binary never imports any of this.
 """
 
 import jax
 import jax.numpy as jnp
 
-from .kernels import pallas_kernels as pk
 from .kernels import ref as kref
 
 
@@ -21,7 +26,10 @@ from .kernels import ref as kref
 
 EW = (1024, 4096)
 ROWS = (512, 2048)
-MHC = (4, 1792, 1024)
+# Oracle-fixture shape for the mHC kernels: same structure as the Rust case
+# study (MhcDims) but sized so the HLO interpreter cross-check stays fast in
+# debug test builds. rust/tests/golden_oracle.rs uses these dims verbatim.
+MHC = (4, 256, 512)
 
 
 def relu(x):
@@ -41,9 +49,16 @@ def silu(x):
     return (x * (1.0 / (1.0 + jnp.exp(-x))),)
 
 
+def tanh_act(x):
+    return (jnp.tanh(x),)
+
+
+def leaky_relu(x):
+    return (jnp.where(x >= 0.0, x, 0.01 * x),)
+
+
 def softmax(x):
-    # L1 Pallas kernel (tiled 3-pass, Figure 2 structure)
-    return (pk.softmax(x),)
+    return (kref.softmax_ref(x),)
 
 
 def log_softmax(x):
@@ -64,8 +79,7 @@ def rmsnorm(x, gamma):
 
 
 def adam(param, grad, m, v):
-    # L1 Pallas fused optimizer step
-    return pk.adam_step(param, grad, m, v)
+    return kref.adam_ref(param, grad, m, v)
 
 
 def mse_loss(pred, target):
@@ -86,11 +100,11 @@ def sum_dim(x):
 
 
 def mhc_post(h, w, g):
-    return (pk.mhc_post(h, w, g),)
+    return (kref.mhc_post_ref(h, w, g),)
 
 
 def mhc_post_grad(h, w, g, dy):
-    return (pk.mhc_post_grad(h, w, g, dy),)
+    return (kref.mhc_post_grad_ref(h, w, g, dy),)
 
 
 def _f32(*shape):
@@ -103,6 +117,8 @@ OPS = {
     "gelu": (gelu, [_f32(*EW)]),
     "sigmoid": (sigmoid, [_f32(*EW)]),
     "silu": (silu, [_f32(*EW)]),
+    "tanh_act": (tanh_act, [_f32(*EW)]),
+    "leaky_relu": (leaky_relu, [_f32(*EW)]),
     "softmax": (softmax, [_f32(*ROWS)]),
     "log_softmax": (log_softmax, [_f32(*ROWS)]),
     "layernorm": (layernorm, [_f32(*ROWS), _f32(ROWS[1]), _f32(ROWS[1])]),

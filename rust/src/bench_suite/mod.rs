@@ -6,8 +6,8 @@
 //!
 //! * a declarative [`spec::ComputeSpec`] per task (what to compute),
 //! * reference numerics evaluated directly on host tensors (the Pass@1
-//!   oracle, cross-checked against the JAX/PJRT goldens where artifacts
-//!   exist),
+//!   oracle, cross-checked against the checked-in JAX goldens through the
+//!   `runtime::hlo` interpreter),
 //! * a PyTorch-eager-style baseline decomposition (one tuned CANN kernel
 //!   per framework primitive — see `baselines::eager`),
 //! * metric computation (Comp@1 / Pass@1 / Fast₀.₂ / Fast₀.₈ / Fast₁.₀).

@@ -8,8 +8,9 @@
 //!   requests and emitting verified AscendC), plus suite runners for the
 //!   benchmark tables.
 //!
-//! Python never appears on this path; the JAX/PJRT golden oracle in
-//! `runtime` is an optional cross-check loaded from pre-built artifacts.
+//! Python never appears on this path; the JAX golden oracle in `runtime`
+//! (HLO text executed by the built-in interpreter) is a cross-check
+//! loaded from the checked-in artifacts — see [`service::cross_check_suite`].
 
 pub mod pipeline;
 pub mod service;

@@ -7,6 +7,8 @@
 use super::pipeline::{run_task, PipelineArtifacts, PipelineConfig};
 use crate::bench_suite::metrics::SuiteResult;
 use crate::bench_suite::spec::TaskSpec;
+use crate::runtime::OracleRegistry;
+use crate::util::compare::allclose_report;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
@@ -87,10 +89,172 @@ pub fn run_suite_artifacts(tasks: &[TaskSpec], cfg: &SuiteConfig) -> Vec<Pipelin
     })
 }
 
+/// Outcome of cross-checking one task's Rust reference (L3) against the
+/// JAX golden oracle (L2) executed by the HLO interpreter.
+#[derive(Clone, Debug)]
+pub struct GoldenCheck {
+    pub name: String,
+    /// An artifact existed and was executed.
+    pub checked: bool,
+    /// Oracle and Rust reference agreed within tolerance (vacuously true
+    /// when no artifact exists).
+    pub ok: bool,
+    pub detail: String,
+}
+
+/// Cross-check every task that has a golden artifact against the Rust
+/// reference, in parallel on the worker pool. The registry is shared by
+/// all workers — the `Send + Sync` oracle (interpreter-backed, no
+/// thread-local PJRT client) is what makes this possible. Results come
+/// back in task order.
+pub fn cross_check_suite(
+    tasks: &[TaskSpec],
+    reg: &OracleRegistry,
+    workers: usize,
+    seed: u64,
+) -> Vec<GoldenCheck> {
+    let n = tasks.len();
+    let next = Arc::new(Mutex::new(0usize));
+    let (tx, rx) = mpsc::channel::<(usize, GoldenCheck)>();
+    std::thread::scope(|scope| {
+        for _ in 0..workers.max(1).min(n.max(1)) {
+            let next = Arc::clone(&next);
+            let tx = tx.clone();
+            scope.spawn(move || loop {
+                let idx = {
+                    let mut guard = next.lock().unwrap();
+                    if *guard >= n {
+                        return;
+                    }
+                    let i = *guard;
+                    *guard += 1;
+                    i
+                };
+                let _ = tx.send((idx, cross_check_task(&tasks[idx], reg, seed)));
+            });
+        }
+        drop(tx);
+        let mut out: Vec<Option<GoldenCheck>> = (0..n).map(|_| None).collect();
+        for (idx, check) in rx {
+            out[idx] = Some(check);
+        }
+        out.into_iter().map(|c| c.expect("worker dropped a cross-check")).collect()
+    })
+}
+
+/// Cross-check a single task against its golden artifact (if present).
+pub fn cross_check_task(task: &TaskSpec, reg: &OracleRegistry, seed: u64) -> GoldenCheck {
+    if !reg.available(task.name) {
+        return GoldenCheck {
+            name: task.name.to_string(),
+            checked: false,
+            ok: true,
+            detail: "no artifact".to_string(),
+        };
+    }
+    let oracle = match reg.get(task.name) {
+        Ok(o) => o,
+        Err(e) => {
+            return GoldenCheck {
+                name: task.name.to_string(),
+                checked: true,
+                ok: false,
+                detail: format!("load failed: {e}"),
+            }
+        }
+    };
+    let inputs = task.make_inputs(seed);
+    let ins: Vec<&crate::util::tensor::Tensor> =
+        task.inputs.iter().map(|(n, _, _)| &inputs[*n]).collect();
+    let want = task.reference(&inputs);
+    let got = match oracle.run(&ins) {
+        Ok(g) => g,
+        Err(e) => {
+            return GoldenCheck {
+                name: task.name.to_string(),
+                checked: true,
+                ok: false,
+                detail: format!("exec failed: {e}"),
+            }
+        }
+    };
+    if got.len() < task.outputs.len() {
+        return GoldenCheck {
+            name: task.name.to_string(),
+            checked: true,
+            ok: false,
+            detail: format!("oracle returned {} outputs, task has {}", got.len(), task.outputs.len()),
+        };
+    }
+    // multi-output ops (adam) return tuples in task-output order
+    for (i, (out_name, _)) in task.outputs.iter().enumerate() {
+        let rep = allclose_report(&got[i], &want[*out_name], 2e-3, 2e-4);
+        if !rep.ok {
+            return GoldenCheck {
+                name: task.name.to_string(),
+                checked: true,
+                ok: false,
+                detail: format!("{out_name}: {}", rep.summary()),
+            };
+        }
+    }
+    GoldenCheck {
+        name: task.name.to_string(),
+        checked: true,
+        ok: true,
+        detail: "golden == rust reference".to_string(),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::bench_suite::tasks::task_by_name;
+
+    #[test]
+    fn run_suite_handles_empty_task_list() {
+        let suite = run_suite(&[], &SuiteConfig::default());
+        assert!(suite.results.is_empty());
+    }
+
+    #[test]
+    fn run_suite_with_more_workers_than_tasks_does_not_hang() {
+        let tasks: Vec<_> = [task_by_name("relu").unwrap()].to_vec();
+        let cfg = SuiteConfig { workers: 32, ..Default::default() };
+        let suite = run_suite(&tasks, &cfg);
+        assert_eq!(suite.results.len(), 1);
+        assert!(suite.results[0].correct);
+    }
+
+    #[test]
+    fn cross_check_runs_in_parallel_against_fixtures() {
+        let reg = OracleRegistry::default_dir();
+        let tasks: Vec<_> = ["relu", "sigmoid", "tanh_act", "softmax"]
+            .iter()
+            .map(|n| task_by_name(n).unwrap())
+            .collect();
+        let checks = cross_check_suite(&tasks, &reg, 4, 4242);
+        assert_eq!(checks.len(), 4);
+        for c in &checks {
+            assert!(c.checked, "{}: artifact missing", c.name);
+            assert!(c.ok, "{}: {}", c.name, c.detail);
+        }
+    }
+
+    #[test]
+    fn cross_check_is_vacuous_without_artifact() {
+        let reg = OracleRegistry::new("/nonexistent/dir");
+        let task = task_by_name("relu").unwrap();
+        let c = cross_check_task(&task, &reg, 1);
+        assert!(!c.checked);
+        assert!(c.ok);
+    }
+
+    #[test]
+    fn cross_check_empty_task_list() {
+        let reg = OracleRegistry::default_dir();
+        assert!(cross_check_suite(&[], &reg, 8, 1).is_empty());
+    }
 
     #[test]
     fn suite_runs_in_parallel_and_preserves_order() {

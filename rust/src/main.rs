@@ -2,24 +2,25 @@
 //!
 //! ```text
 //! ascendcraft suite [--mode ascendcraft|direct|generic] [--workers N]
-//!                   [--json PATH] [--quiet]          reproduce Tables 1+2
+//!                   [--json PATH] [--quiet] [--golden]  reproduce Tables 1+2
 //! ascendcraft gen --task NAME [--emit-dsl] [--emit-ascendc] [--emit-prompt]
 //! ascendcraft mhc [--rows N]                         RQ3 case study
-//! ascendcraft oracle [--op NAME]                     PJRT golden cross-check
+//! ascendcraft oracle [--op NAME] [--workers N]       golden cross-check
+//!                                                    (HLO interpreter)
 //! ascendcraft list                                   list benchmark tasks
 //! ascendcraft prompt CATEGORY                        show a category prompt
 //! ```
 //!
-//! (clap is not in the offline crate set; arguments are parsed by hand.)
+//! (clap is not in the crate set — the crate has zero external
+//! dependencies by policy; arguments are parsed by hand.)
 
-use ascendcraft::bench_suite::spec::Category;
+use ascendcraft::bench_suite::spec::{Category, TaskSpec};
 use ascendcraft::bench_suite::tasks::{all_tasks, task_by_name};
 use ascendcraft::coordinator::pipeline::{run_task, PipelineConfig, PipelineMode};
-use ascendcraft::coordinator::service::{run_suite, SuiteConfig};
-use ascendcraft::mhc::{run_case_study, MhcDims};
+use ascendcraft::coordinator::service::{cross_check_suite, run_suite, SuiteConfig};
+use ascendcraft::mhc::{self, run_case_study, MhcDims};
 use ascendcraft::runtime::OracleRegistry;
 use ascendcraft::synth::prompt;
-use ascendcraft::util::compare::allclose_report;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -49,10 +50,10 @@ fn print_usage() {
         "AscendCraft: DSL-guided AscendC kernel generation (reproduction)\n\
          \n\
          USAGE:\n\
-         \x20 ascendcraft suite [--mode ascendcraft|direct|generic] [--workers N] [--json PATH] [--quiet]\n\
+         \x20 ascendcraft suite [--mode ascendcraft|direct|generic] [--workers N] [--json PATH] [--quiet] [--golden]\n\
          \x20 ascendcraft gen --task NAME [--emit-dsl] [--emit-ascendc] [--emit-prompt]\n\
          \x20 ascendcraft mhc [--rows N]\n\
-         \x20 ascendcraft oracle [--op NAME]\n\
+         \x20 ascendcraft oracle [--op NAME] [--workers N]\n\
          \x20 ascendcraft list\n\
          \x20 ascendcraft export [--out DIR]   write DSL+AscendC for all tasks\n\
          \x20 ascendcraft prompt CATEGORY"
@@ -95,6 +96,19 @@ fn cmd_suite(args: &[String]) -> i32 {
             return 1;
         }
         println!("wrote {path}");
+    }
+    if has_flag(args, "--golden") {
+        let reg = OracleRegistry::default_dir();
+        let checks = cross_check_suite(&tasks, &reg, cfg.workers, 1234);
+        let checked = checks.iter().filter(|c| c.checked).count();
+        let failed: Vec<_> = checks.iter().filter(|c| c.checked && !c.ok).collect();
+        println!("golden cross-check: {checked} artifacts checked, {} failed", failed.len());
+        for c in &failed {
+            println!("  {:<18} {}", c.name, c.detail);
+        }
+        if !failed.is_empty() {
+            return 1;
+        }
     }
     0
 }
@@ -180,43 +194,45 @@ fn cmd_oracle(args: &[String]) -> i32 {
         None => reg.list(),
     };
     if names.is_empty() {
-        eprintln!("no artifacts found; run `make artifacts` first");
+        eprintln!("no artifacts found; restore the checked-in fixtures or run `make artifacts`");
         return 1;
     }
+    let workers = flag_value(args, "--workers")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4));
     let mut failures = 0;
-    for name in names {
-        let Some(task) = task_by_name(&name) else {
-            println!("  {name:<18} (no matching benchmark task; skipping numeric check)");
-            continue;
-        };
-        let oracle = match reg.get(&name) {
-            Ok(o) => o,
-            Err(e) => {
-                println!("  {name:<18} LOAD FAILED: {e}");
-                failures += 1;
-                continue;
-            }
-        };
-        let inputs = task.make_inputs(1234);
-        let ins: Vec<&ascendcraft::util::tensor::Tensor> =
-            task.inputs.iter().map(|(n, _, _)| &inputs[*n]).collect();
-        let want = task.reference(&inputs);
-        match oracle.run(&ins) {
-            Ok(outs) => {
-                let first_out = task.outputs[0].0;
-                let rep = allclose_report(&outs[0], &want[first_out], 1e-3, 1e-4);
-                println!(
-                    "  {name:<18} {}",
-                    if rep.ok { "golden == rust reference" } else { "MISMATCH" }
-                );
-                if !rep.ok {
-                    println!("    {}", rep.summary());
-                    failures += 1;
+    let (present, missing): (Vec<&String>, Vec<&String>) =
+        names.iter().partition(|n| reg.available(n));
+    for name in missing {
+        println!("  {name:<18} NO ARTIFACT (artifacts/{name}.hlo.txt not found)");
+        failures += 1;
+    }
+
+    // benchmark-task artifacts cross-check in parallel on the worker pool
+    let tasks: Vec<TaskSpec> = present.iter().filter_map(|n| task_by_name(n)).collect();
+    for c in cross_check_suite(&tasks, &reg, workers, 1234) {
+        if c.ok {
+            println!("  {:<18} {}", c.name, c.detail);
+        } else {
+            println!("  {:<18} MISMATCH\n    {}", c.name, c.detail);
+            failures += 1;
+        }
+    }
+
+    // mHC artifacts have dedicated references outside the benchmark suite
+    for name in present.iter().filter(|n| task_by_name(n).is_none()) {
+        match name.as_str() {
+            "mhc_post" | "mhc_post_grad" => {
+                match mhc::golden_cross_check(&reg, name, 1234, 2e-3, 2e-4) {
+                    Ok(()) => println!("  {name:<18} golden == rust reference"),
+                    Err(e) => {
+                        println!("  {name:<18} MISMATCH\n    {e}");
+                        failures += 1;
+                    }
                 }
             }
-            Err(e) => {
-                println!("  {name:<18} EXEC FAILED: {e}");
-                failures += 1;
+            other => {
+                println!("  {other:<18} (no matching benchmark task; skipping numeric check)")
             }
         }
     }

@@ -103,6 +103,46 @@ pub fn make_inputs(dims: &MhcDims, seed: u64, with_grad: bool) -> HashMap<String
     m
 }
 
+/// Cross-check an mHC golden artifact against the host references,
+/// deriving the problem dims from the artifact's own first input shape
+/// (`[n, rows, d]` — fixtures are lowered at an oracle shape smaller than
+/// the case-study shape so interpreter runs stay fast). The one shared
+/// implementation behind `ascendcraft oracle`, the golden integration
+/// tests, and the case-study example.
+pub fn golden_cross_check(
+    reg: &crate::runtime::OracleRegistry,
+    name: &str,
+    seed: u64,
+    rtol: f32,
+    atol: f32,
+) -> Result<(), String> {
+    let oracle = reg.get(name).map_err(|e| e.to_string())?;
+    let shape = oracle.input_shape(0).ok_or("artifact has no inputs")?.to_vec();
+    if shape.len() != 3 {
+        return Err(format!("expected [n,rows,d] first input, got {shape:?}"));
+    }
+    let dims = MhcDims { n: shape[0], rows: shape[1], d: shape[2], sinkhorn_iters: 5 };
+    let grad = name == "mhc_post_grad";
+    let inputs = make_inputs(&dims, seed, grad);
+    let want = if grad {
+        reference::post_grad_reference(&dims, &inputs)
+    } else {
+        reference::post_reference(&dims, &inputs)
+    };
+    let ins: Vec<&Tensor> = if grad {
+        vec![&inputs["h"], &inputs["w"], &inputs["g"], &inputs["dy"]]
+    } else {
+        vec![&inputs["h"], &inputs["w"], &inputs["g"]]
+    };
+    let got = oracle.run(&ins).map_err(|e| e.to_string())?;
+    let rep = allclose_report(&got[0], &want, rtol, atol);
+    if rep.ok {
+        Ok(())
+    } else {
+        Err(rep.summary())
+    }
+}
+
 /// Eager decomposition of mHC_post: exp, 2k sinkhorn normalizations (tiny,
 /// launch-bound), n² mul + n(n-1) add mixing passes, rms (mul, mean, rsqrt,
 /// mul-row), gate (muls, add) per stream.

@@ -1,0 +1,895 @@
+//! Evaluator for parsed HLO modules over [`Tensor`] values.
+//!
+//! The op set is the dense-arithmetic subset the `python/compile/model.py`
+//! manifest lowers to: elementwise arithmetic, `broadcast`/`reshape`/
+//! `transpose`, `reduce` and `reduce-window` (with a prefix-scan fast path
+//! so `cumsum` stays O(n)), `dot` (general batched contraction), `select`/
+//! `compare`, `call`, and `tuple`. Control flow (`while`, `conditional`)
+//! is deliberately out of scope — the manifest guarantees none is emitted.
+//!
+//! All host data is `f32` (pred values are 0.0 / 1.0), matching the rest
+//! of the pipeline. Sum/product reductions accumulate in `f64` (oracle
+//! grade — a reduce can span millions of elements); the prefix-scan fast
+//! path stays `f32` so cumulative sums reproduce the references' running
+//! f32 accumulation exactly. Agreement with the Rust references is judged
+//! by the tasks' rtol/atol, not bit equality.
+
+use super::parser::{CmpDir, Computation, Instr, Module, Opcode, Shape};
+use crate::util::tensor::{DType, Tensor};
+
+/// An evaluated instruction result. Only the root of the entry computation
+/// is tuple-shaped in the supported corpus.
+#[derive(Clone, Debug)]
+pub enum Value {
+    Tensor(Tensor),
+    Tuple(Vec<Tensor>),
+}
+
+/// Execute the module's ENTRY computation on the given inputs.
+/// Outputs are the flattened root tuple (or the single root tensor).
+pub fn evaluate(m: &Module, inputs: &[&Tensor]) -> Result<Vec<Tensor>, String> {
+    let comp = m.entry_computation();
+    if inputs.len() != comp.params.len() {
+        return Err(format!(
+            "entry computation '{}' takes {} parameters, got {} inputs",
+            comp.name,
+            comp.params.len(),
+            inputs.len()
+        ));
+    }
+    for (pi, &idx) in comp.params.iter().enumerate() {
+        let ins = &comp.instrs[idx];
+        let want = ins.shape.array().map_err(|e| format!("{}: {e}", ins.name))?;
+        if want.dims != inputs[pi].shape {
+            return Err(format!(
+                "parameter {pi} expects shape {want}, got input shape {:?}",
+                inputs[pi].shape
+            ));
+        }
+    }
+    let args: Vec<Value> = inputs.iter().map(|t| Value::Tensor((*t).clone())).collect();
+    match eval_computation(m, m.entry, args)? {
+        Value::Tuple(ts) => Ok(ts),
+        Value::Tensor(t) => Ok(vec![t]),
+    }
+}
+
+fn eval_computation(m: &Module, ci: usize, args: Vec<Value>) -> Result<Value, String> {
+    let comp = &m.computations[ci];
+    if args.len() != comp.params.len() {
+        return Err(format!(
+            "computation '{}' takes {} arguments, got {}",
+            comp.name,
+            comp.params.len(),
+            args.len()
+        ));
+    }
+    // free each value after its last use: entry computations hold
+    // multi-megabyte tensors per instruction, and without this the peak
+    // footprint is O(instructions × tensor size)
+    let mut last_use = vec![usize::MAX; comp.instrs.len()];
+    for (i, ins) in comp.instrs.iter().enumerate() {
+        for &o in &ins.operands {
+            last_use[o] = i;
+        }
+    }
+    last_use[comp.root] = usize::MAX;
+    let mut env: Vec<Option<Value>> = (0..comp.instrs.len()).map(|_| None).collect();
+    for (arg, &idx) in args.into_iter().zip(&comp.params) {
+        env[idx] = Some(arg);
+    }
+    for i in 0..comp.instrs.len() {
+        if env[i].is_none() {
+            let v = eval_instr(m, comp, i, &env)?;
+            env[i] = Some(v);
+        }
+        for &o in &comp.instrs[i].operands {
+            if last_use[o] == i && o != comp.root {
+                env[o] = None;
+            }
+        }
+    }
+    env[comp.root]
+        .take()
+        .ok_or_else(|| format!("computation '{}': root was never evaluated", comp.name))
+}
+
+fn operand<'a>(env: &'a [Option<Value>], ins: &Instr, k: usize) -> Result<&'a Tensor, String> {
+    let idx = match ins.operands.get(k) {
+        Some(&i) => i,
+        None => return Err(format!("{}: missing operand {k}", ins.name)),
+    };
+    match env.get(idx).and_then(|v| v.as_ref()) {
+        Some(Value::Tensor(t)) => Ok(t),
+        Some(Value::Tuple(_)) => {
+            Err(format!("{}: tuple-valued operands are not supported", ins.name))
+        }
+        None => Err(format!("{}: operand evaluated out of order", ins.name)),
+    }
+}
+
+fn out_shape<'a>(ins: &'a Instr) -> Result<&'a Shape, String> {
+    ins.shape.array().map_err(|e| format!("{}: {e}", ins.name))
+}
+
+fn row_major_strides(dims: &[usize]) -> Vec<usize> {
+    let mut s = vec![1usize; dims.len()];
+    for i in (0..dims.len().saturating_sub(1)).rev() {
+        s[i] = s[i + 1] * dims[i + 1];
+    }
+    s
+}
+
+fn unary(ins: &Instr, x: &Tensor, f: impl Fn(f32) -> f32) -> Result<Tensor, String> {
+    let shape = out_shape(ins)?;
+    if shape.numel() != x.numel() {
+        return Err(format!("{}: result shape {shape} vs operand numel {}", ins.name, x.numel()));
+    }
+    Ok(Tensor::new(shape.dims.clone(), DType::F32, x.data.iter().map(|&v| f(v)).collect()))
+}
+
+fn binary(
+    ins: &Instr,
+    a: &Tensor,
+    b: &Tensor,
+    f: impl Fn(f32, f32) -> f32,
+) -> Result<Tensor, String> {
+    let shape = out_shape(ins)?;
+    if a.numel() != b.numel() || shape.numel() != a.numel() {
+        return Err(format!(
+            "{}: operand shapes {:?} / {:?} do not match result {shape}",
+            ins.name, a.shape, b.shape
+        ));
+    }
+    let data = a.data.iter().zip(&b.data).map(|(&x, &y)| f(x, y)).collect();
+    Ok(Tensor::new(shape.dims.clone(), DType::F32, data))
+}
+
+/// Permute `t`'s axes: output dim `d` takes input dim `perm[d]`.
+fn permute(t: &Tensor, perm: &[usize]) -> Result<Tensor, String> {
+    let rank = t.rank();
+    if perm.len() != rank {
+        return Err(format!("permutation {perm:?} does not match rank {rank}"));
+    }
+    let mut seen = vec![false; rank];
+    for &p in perm {
+        if p >= rank || seen[p] {
+            return Err(format!("invalid permutation {perm:?} for rank {rank}"));
+        }
+        seen[p] = true;
+    }
+    let out_dims: Vec<usize> = perm.iter().map(|&p| t.shape[p]).collect();
+    let in_strides = t.strides();
+    let ostr = row_major_strides(&out_dims);
+    let n = t.numel();
+    let mut out = vec![0f32; n];
+    for (li, slot) in out.iter_mut().enumerate() {
+        let mut src = 0usize;
+        for d in 0..rank {
+            let idx = (li / ostr[d]) % out_dims[d];
+            src += idx * in_strides[perm[d]];
+        }
+        *slot = t.data[src];
+    }
+    Ok(Tensor::new(out_dims, DType::F32, out))
+}
+
+/// Reduce / reduce-window combining function. `Generic` falls back to
+/// interpreting the combiner computation per element pair (correct but
+/// slow — only exotic combiners take it).
+enum Combiner {
+    Add,
+    Mul,
+    Max,
+    Min,
+    Generic(usize),
+}
+
+fn combiner_of(m: &Module, ins: &Instr) -> Result<Combiner, String> {
+    let name = match ins.to_apply.as_deref() {
+        Some(n) => n,
+        None => return Err(format!("{}: reduce without to_apply", ins.name)),
+    };
+    let ci = match m.computation_index(name) {
+        Some(i) => i,
+        None => return Err(format!("{}: unknown combiner computation '{name}'", ins.name)),
+    };
+    let comp = &m.computations[ci];
+    let root = &comp.instrs[comp.root];
+    if comp.params.len() == 2 && root.operands.len() == 2 {
+        let (p0, p1) = (comp.params[0], comp.params[1]);
+        let (a, b) = (root.operands[0], root.operands[1]);
+        if (a == p0 && b == p1) || (a == p1 && b == p0) {
+            match root.opcode {
+                Opcode::Add => return Ok(Combiner::Add),
+                Opcode::Multiply => return Ok(Combiner::Mul),
+                Opcode::Maximum => return Ok(Combiner::Max),
+                Opcode::Minimum => return Ok(Combiner::Min),
+                _ => {}
+            }
+        }
+    }
+    Ok(Combiner::Generic(ci))
+}
+
+fn apply_combiner(m: &Module, c: &Combiner, acc: f32, v: f32) -> Result<f32, String> {
+    Ok(match c {
+        Combiner::Add => acc + v,
+        Combiner::Mul => acc * v,
+        Combiner::Max => acc.max(v),
+        Combiner::Min => acc.min(v),
+        Combiner::Generic(ci) => {
+            let args = vec![
+                Value::Tensor(Tensor::new(vec![], DType::F32, vec![acc])),
+                Value::Tensor(Tensor::new(vec![], DType::F32, vec![v])),
+            ];
+            match eval_computation(m, *ci, args)? {
+                Value::Tensor(t) => t.data[0],
+                Value::Tuple(_) => return Err("combiner returned a tuple".to_string()),
+            }
+        }
+    })
+}
+
+fn scalar_init(ins: &Instr, t: &Tensor) -> Result<f32, String> {
+    if t.numel() != 1 {
+        return Err(format!("{}: init value must be scalar, got shape {:?}", ins.name, t.shape));
+    }
+    Ok(t.data[0])
+}
+
+fn eval_broadcast(ins: &Instr, x: &Tensor) -> Result<Tensor, String> {
+    let shape = out_shape(ins)?;
+    let out_dims = shape.dims.clone();
+    let n = shape.numel();
+    // scalar fill fast path (the dominant case: constants broadcast over
+    // multi-megabyte elementwise tensors)
+    if x.numel() == 1 {
+        return Ok(Tensor::new(out_dims, DType::F32, vec![x.data[0]; n]));
+    }
+    let dims = ins.dimensions.clone().unwrap_or_default();
+    if dims.len() != x.rank() {
+        return Err(format!(
+            "{}: dimensions {dims:?} do not match operand rank {}",
+            ins.name,
+            x.rank()
+        ));
+    }
+    let in_strides = x.strides();
+    let mut stride_for_out = vec![0usize; out_dims.len()];
+    for (i, &od) in dims.iter().enumerate() {
+        if od >= out_dims.len() {
+            return Err(format!("{}: broadcast dimension {od} out of range", ins.name));
+        }
+        if x.shape[i] != 1 {
+            if x.shape[i] != out_dims[od] {
+                return Err(format!(
+                    "{}: operand dim {i} ({}) does not match output dim {od} ({})",
+                    ins.name, x.shape[i], out_dims[od]
+                ));
+            }
+            stride_for_out[od] = in_strides[i];
+        }
+    }
+    let ostr = row_major_strides(&out_dims);
+    let mut out = vec![0f32; n];
+    for (li, slot) in out.iter_mut().enumerate() {
+        let mut src = 0usize;
+        for d in 0..out_dims.len() {
+            let idx = (li / ostr[d]) % out_dims[d];
+            src += idx * stride_for_out[d];
+        }
+        *slot = x.data[src];
+    }
+    Ok(Tensor::new(out_dims, DType::F32, out))
+}
+
+fn eval_reduce(m: &Module, ins: &Instr, x: &Tensor, init: f32) -> Result<Tensor, String> {
+    let shape = out_shape(ins)?;
+    let comb = combiner_of(m, ins)?;
+    let red = match &ins.dimensions {
+        Some(d) => d.clone(),
+        None => return Err(format!("{}: reduce without dimensions", ins.name)),
+    };
+    let in_dims = &x.shape;
+    let kept: Vec<usize> = (0..in_dims.len()).filter(|d| !red.contains(d)).collect();
+    let kept_dims: Vec<usize> = kept.iter().map(|&d| in_dims[d]).collect();
+    if kept_dims != shape.dims {
+        return Err(format!(
+            "{}: reduce output shape {shape} does not match kept dims {kept_dims:?}",
+            ins.name
+        ));
+    }
+    let istr = row_major_strides(in_dims);
+    let ostr = row_major_strides(&shape.dims);
+    let oi_of = |li: usize| {
+        let mut oi = 0usize;
+        for (j, &d) in kept.iter().enumerate() {
+            let idx = (li / istr[d]) % in_dims[d];
+            oi += idx * ostr[j];
+        }
+        oi
+    };
+    // Sum/product reductions accumulate in f64: a reduce can span millions
+    // of elements (mse_loss reduces 4.2M), and a naive f32 chain drifts
+    // past the tasks' tolerances — the Rust references accumulate wide for
+    // exactly the same reason (tensor::mean_all). max/min are exact in f32.
+    let out = match comb {
+        Combiner::Add | Combiner::Mul => {
+            let mul = matches!(comb, Combiner::Mul);
+            let mut acc = vec![init as f64; shape.numel()];
+            for (li, &v) in x.data.iter().enumerate() {
+                let oi = oi_of(li);
+                if mul {
+                    acc[oi] *= v as f64;
+                } else {
+                    acc[oi] += v as f64;
+                }
+            }
+            acc.into_iter().map(|v| v as f32).collect()
+        }
+        _ => {
+            let mut out = vec![init; shape.numel()];
+            for (li, &v) in x.data.iter().enumerate() {
+                let oi = oi_of(li);
+                out[oi] = apply_combiner(m, &comb, out[oi], v)?;
+            }
+            out
+        }
+    };
+    Ok(Tensor::new(shape.dims.clone(), DType::F32, out))
+}
+
+fn eval_reduce_window(m: &Module, ins: &Instr, x: &Tensor, init: f32) -> Result<Tensor, String> {
+    let shape = out_shape(ins)?;
+    let comb = combiner_of(m, ins)?;
+    let w = match &ins.window {
+        Some(w) => w,
+        None => return Err(format!("{}: reduce-window without window attribute", ins.name)),
+    };
+    let in_dims = &x.shape;
+    let rank = in_dims.len();
+    if w.size.len() != rank || w.stride.len() != rank || w.pad.len() != rank {
+        return Err(format!("{}: window rank does not match operand rank {rank}", ins.name));
+    }
+
+    // Prefix-scan fast path: every dim is either pointwise (size 1) or the
+    // single scan dim (window covers the whole dim, padded so output i sees
+    // elements 0..=i — or i.. for the reverse scan). This is how XLA
+    // lowers cumsum/cumprod; the generic path below is O(n·window).
+    let mut scan_dim: Option<(usize, bool)> = None;
+    let mut scan_ok = shape.dims == *in_dims;
+    if scan_ok {
+        for d in 0..rank {
+            let full = in_dims[d];
+            if w.size[d] == 1 && w.stride[d] == 1 && w.pad[d] == (0, 0) {
+                continue;
+            }
+            if w.stride[d] == 1 && full > 0 && w.size[d] == full && scan_dim.is_none() {
+                if w.pad[d] == (full - 1, 0) {
+                    scan_dim = Some((d, false));
+                    continue;
+                }
+                if w.pad[d] == (0, full - 1) {
+                    scan_dim = Some((d, true));
+                    continue;
+                }
+            }
+            scan_ok = false;
+            break;
+        }
+    }
+    if scan_ok {
+        if let Some((sd, rev)) = scan_dim {
+            let istr = row_major_strides(in_dims);
+            let len = in_dims[sd];
+            let sstride = istr[sd];
+            let n = x.numel();
+            let mut out = vec![0f32; n];
+            for base in 0..n {
+                if (base / sstride) % len != 0 {
+                    continue;
+                }
+                let mut acc = init;
+                if rev {
+                    for j in (0..len).rev() {
+                        let p = base + j * sstride;
+                        acc = apply_combiner(m, &comb, acc, x.data[p])?;
+                        out[p] = acc;
+                    }
+                } else {
+                    for j in 0..len {
+                        let p = base + j * sstride;
+                        acc = apply_combiner(m, &comb, acc, x.data[p])?;
+                        out[p] = acc;
+                    }
+                }
+            }
+            return Ok(Tensor::new(shape.dims.clone(), DType::F32, out));
+        }
+    }
+
+    // generic windowed reduction
+    let istr = row_major_strides(in_dims);
+    let ostr = row_major_strides(&shape.dims);
+    let wstr = row_major_strides(&w.size);
+    let win_n: usize = w.size.iter().product();
+    let out_n = shape.numel();
+    let mut out = vec![0f32; out_n];
+    let mut starts = vec![0isize; rank];
+    for (oi, slot) in out.iter_mut().enumerate() {
+        for d in 0..rank {
+            let idx = (oi / ostr[d]) % shape.dims[d];
+            starts[d] = (idx * w.stride[d]) as isize - w.pad[d].0 as isize;
+        }
+        let mut acc = init;
+        'window: for wi in 0..win_n {
+            let mut li = 0usize;
+            for d in 0..rank {
+                let pos = starts[d] + ((wi / wstr[d]) % w.size[d]) as isize;
+                if pos < 0 || pos >= in_dims[d] as isize {
+                    continue 'window; // padding element: identity
+                }
+                li += pos as usize * istr[d];
+            }
+            acc = apply_combiner(m, &comb, acc, x.data[li])?;
+        }
+        *slot = acc;
+    }
+    Ok(Tensor::new(shape.dims.clone(), DType::F32, out))
+}
+
+fn eval_dot(ins: &Instr, lhs: &Tensor, rhs: &Tensor) -> Result<Tensor, String> {
+    let shape = out_shape(ins)?;
+    let lb = &ins.lhs_batch;
+    let rb = &ins.rhs_batch;
+    let lc = &ins.lhs_contract;
+    let rc = &ins.rhs_contract;
+    if lb.len() != rb.len() || lc.len() != rc.len() {
+        return Err(format!("{}: mismatched batch/contracting dimension counts", ins.name));
+    }
+    for (&ld, &rd) in lb.iter().zip(rb) {
+        if lhs.shape[ld] != rhs.shape[rd] {
+            return Err(format!(
+                "{}: batch dims disagree (lhs dim {ld} = {}, rhs dim {rd} = {})",
+                ins.name, lhs.shape[ld], rhs.shape[rd]
+            ));
+        }
+    }
+    for (&ld, &rd) in lc.iter().zip(rc) {
+        if lhs.shape[ld] != rhs.shape[rd] {
+            return Err(format!(
+                "{}: contracting dims disagree (lhs dim {ld} = {}, rhs dim {rd} = {})",
+                ins.name, lhs.shape[ld], rhs.shape[rd]
+            ));
+        }
+    }
+    let lfree: Vec<usize> =
+        (0..lhs.rank()).filter(|d| !lb.contains(d) && !lc.contains(d)).collect();
+    let rfree: Vec<usize> =
+        (0..rhs.rank()).filter(|d| !rb.contains(d) && !rc.contains(d)).collect();
+    let mut lperm = lb.clone();
+    lperm.extend_from_slice(&lfree);
+    lperm.extend_from_slice(lc);
+    let mut rperm = rb.clone();
+    rperm.extend_from_slice(rc);
+    rperm.extend_from_slice(&rfree);
+    let lt = permute(lhs, &lperm).map_err(|e| format!("{}: {e}", ins.name))?;
+    let rt = permute(rhs, &rperm).map_err(|e| format!("{}: {e}", ins.name))?;
+    let b: usize = lb.iter().map(|&d| lhs.shape[d]).product();
+    let k: usize = lc.iter().map(|&d| lhs.shape[d]).product();
+    let m_: usize = lfree.iter().map(|&d| lhs.shape[d]).product();
+    let n_: usize = rfree.iter().map(|&d| rhs.shape[d]).product();
+    if shape.numel() != b * m_ * n_ {
+        return Err(format!(
+            "{}: result shape {shape} does not match dot extents {b}x{m_}x{n_}",
+            ins.name
+        ));
+    }
+    let mut out = vec![0f32; b * m_ * n_];
+    for bi in 0..b {
+        for mi in 0..m_ {
+            let lrow = (bi * m_ + mi) * k;
+            let orow = (bi * m_ + mi) * n_;
+            for ki in 0..k {
+                let l = lt.data[lrow + ki];
+                let rrow = (bi * k + ki) * n_;
+                for ni in 0..n_ {
+                    out[orow + ni] += l * rt.data[rrow + ni];
+                }
+            }
+        }
+    }
+    Ok(Tensor::new(shape.dims.clone(), DType::F32, out))
+}
+
+fn eval_instr(
+    m: &Module,
+    comp: &Computation,
+    i: usize,
+    env: &[Option<Value>],
+) -> Result<Value, String> {
+    let ins = &comp.instrs[i];
+    let t = |k: usize| operand(env, ins, k);
+    let v = match &ins.opcode {
+        Opcode::Parameter => {
+            return Err(format!("{}: parameter was not bound to an argument", ins.name))
+        }
+        Opcode::Constant => {
+            let shape = out_shape(ins)?;
+            let lit = ins
+                .literal
+                .clone()
+                .ok_or_else(|| format!("{}: constant without literal", ins.name))?;
+            Value::Tensor(Tensor::new(shape.dims.clone(), DType::F32, lit))
+        }
+        Opcode::Add => Value::Tensor(binary(ins, t(0)?, t(1)?, |a, b| a + b)?),
+        Opcode::Subtract => Value::Tensor(binary(ins, t(0)?, t(1)?, |a, b| a - b)?),
+        Opcode::Multiply => Value::Tensor(binary(ins, t(0)?, t(1)?, |a, b| a * b)?),
+        Opcode::Divide => Value::Tensor(binary(ins, t(0)?, t(1)?, |a, b| a / b)?),
+        Opcode::Maximum => Value::Tensor(binary(ins, t(0)?, t(1)?, f32::max)?),
+        Opcode::Minimum => Value::Tensor(binary(ins, t(0)?, t(1)?, f32::min)?),
+        Opcode::Power => Value::Tensor(binary(ins, t(0)?, t(1)?, f32::powf)?),
+        Opcode::Exponential => Value::Tensor(unary(ins, t(0)?, f32::exp)?),
+        Opcode::Log => Value::Tensor(unary(ins, t(0)?, f32::ln)?),
+        Opcode::Tanh => Value::Tensor(unary(ins, t(0)?, f32::tanh)?),
+        Opcode::Sqrt => Value::Tensor(unary(ins, t(0)?, f32::sqrt)?),
+        Opcode::Rsqrt => Value::Tensor(unary(ins, t(0)?, |x| 1.0 / x.sqrt())?),
+        Opcode::Negate => Value::Tensor(unary(ins, t(0)?, |x| -x)?),
+        Opcode::Abs => Value::Tensor(unary(ins, t(0)?, f32::abs)?),
+        Opcode::Floor => Value::Tensor(unary(ins, t(0)?, f32::floor)?),
+        Opcode::Ceil => Value::Tensor(unary(ins, t(0)?, f32::ceil)?),
+        Opcode::Sign => Value::Tensor(unary(ins, t(0)?, |x| {
+            if x > 0.0 {
+                1.0
+            } else if x < 0.0 {
+                -1.0
+            } else {
+                x // preserves ±0 and NaN like HLO sign
+            }
+        })?),
+        Opcode::Logistic => Value::Tensor(unary(ins, t(0)?, |x| 1.0 / (1.0 + (-x).exp()))?),
+        Opcode::Copy | Opcode::Convert | Opcode::Reshape => {
+            let x = t(0)?;
+            let shape = out_shape(ins)?;
+            if shape.numel() != x.numel() {
+                return Err(format!(
+                    "{}: cannot reshape {} elements into {shape}",
+                    ins.name,
+                    x.numel()
+                ));
+            }
+            Value::Tensor(Tensor::new(shape.dims.clone(), DType::F32, x.data.clone()))
+        }
+        Opcode::Compare => {
+            let dir = ins
+                .direction
+                .ok_or_else(|| format!("{}: compare without direction", ins.name))?;
+            let f: fn(f32, f32) -> bool = match dir {
+                CmpDir::Eq => |a, b| a == b,
+                CmpDir::Ne => |a, b| a != b,
+                CmpDir::Ge => |a, b| a >= b,
+                CmpDir::Gt => |a, b| a > b,
+                CmpDir::Le => |a, b| a <= b,
+                CmpDir::Lt => |a, b| a < b,
+            };
+            Value::Tensor(binary(ins, t(0)?, t(1)?, move |a, b| if f(a, b) { 1.0 } else { 0.0 })?)
+        }
+        Opcode::Select => {
+            let pred = t(0)?;
+            let on_true = t(1)?;
+            let on_false = t(2)?;
+            let shape = out_shape(ins)?;
+            if pred.numel() != shape.numel()
+                || on_true.numel() != shape.numel()
+                || on_false.numel() != shape.numel()
+            {
+                return Err(format!("{}: select operand shapes disagree", ins.name));
+            }
+            let data = pred
+                .data
+                .iter()
+                .zip(&on_true.data)
+                .zip(&on_false.data)
+                .map(|((&p, &a), &b)| if p != 0.0 { a } else { b })
+                .collect();
+            Value::Tensor(Tensor::new(shape.dims.clone(), DType::F32, data))
+        }
+        Opcode::Transpose => {
+            let x = t(0)?;
+            let perm = ins
+                .dimensions
+                .clone()
+                .ok_or_else(|| format!("{}: transpose without dimensions", ins.name))?;
+            let out = permute(x, &perm).map_err(|e| format!("{}: {e}", ins.name))?;
+            let shape = out_shape(ins)?;
+            if out.shape != shape.dims {
+                return Err(format!(
+                    "{}: transpose produced {:?}, declared {shape}",
+                    ins.name, out.shape
+                ));
+            }
+            Value::Tensor(out)
+        }
+        Opcode::Broadcast => Value::Tensor(eval_broadcast(ins, t(0)?)?),
+        Opcode::Reduce => {
+            let init = scalar_init(ins, t(1)?)?;
+            Value::Tensor(eval_reduce(m, ins, t(0)?, init)?)
+        }
+        Opcode::ReduceWindow => {
+            let init = scalar_init(ins, t(1)?)?;
+            Value::Tensor(eval_reduce_window(m, ins, t(0)?, init)?)
+        }
+        Opcode::Dot => Value::Tensor(eval_dot(ins, t(0)?, t(1)?)?),
+        Opcode::Call => {
+            let target = ins
+                .to_apply
+                .as_deref()
+                .ok_or_else(|| format!("{}: call without to_apply", ins.name))?;
+            let ci = m
+                .computation_index(target)
+                .ok_or_else(|| format!("{}: unknown computation '{target}'", ins.name))?;
+            let mut args = Vec::with_capacity(ins.operands.len());
+            for k in 0..ins.operands.len() {
+                args.push(Value::Tensor(t(k)?.clone()));
+            }
+            eval_computation(m, ci, args)?
+        }
+        Opcode::Tuple => {
+            let mut ts = Vec::with_capacity(ins.operands.len());
+            for k in 0..ins.operands.len() {
+                ts.push(t(k)?.clone());
+            }
+            Value::Tuple(ts)
+        }
+        Opcode::Other(op) => {
+            return Err(format!(
+                "{}: opcode '{op}' is outside the interpreter's op set (see runtime/hlo/eval.rs)",
+                ins.name
+            ))
+        }
+    };
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::hlo::parser::parse_module;
+    use crate::util::compare::allclose;
+
+    fn run1(text: &str, inputs: &[&Tensor]) -> Tensor {
+        let m = parse_module(text).unwrap();
+        let mut out = evaluate(&m, inputs).unwrap();
+        assert_eq!(out.len(), 1);
+        out.remove(0)
+    }
+
+    fn t(data: &[f32]) -> Tensor {
+        Tensor::from_vec(data.to_vec())
+    }
+
+    #[test]
+    fn elementwise_binaries() {
+        let cases = [
+            ("add", vec![4.0, 6.0]),
+            ("subtract", vec![-2.0, -2.0]),
+            ("multiply", vec![3.0, 8.0]),
+            ("divide", vec![1.0 / 3.0, 0.5]),
+            ("maximum", vec![3.0, 4.0]),
+            ("minimum", vec![1.0, 2.0]),
+            ("power", vec![1.0, 16.0]),
+        ];
+        for (op, want) in cases {
+            let text = format!(
+                "HloModule t\n\nENTRY e {{\n  a = f32[2]{{0}} parameter(0)\n  b = f32[2]{{0}} parameter(1)\n  ROOT r = f32[2]{{0}} {op}(a, b)\n}}\n"
+            );
+            let got = run1(&text, &[&t(&[1.0, 2.0]), &t(&[3.0, 4.0])]);
+            assert!(allclose(&got, &t(&want), 1e-6, 1e-7), "{op}: {:?} vs {want:?}", got.data);
+        }
+    }
+
+    #[test]
+    fn elementwise_unaries() {
+        let x = [0.5f32, -1.25];
+        let cases: Vec<(&str, Vec<f32>)> = vec![
+            ("exponential", x.iter().map(|v| v.exp()).collect()),
+            ("tanh", x.iter().map(|v| v.tanh()).collect()),
+            ("negate", x.iter().map(|v| -v).collect()),
+            ("abs", x.iter().map(|v| v.abs()).collect()),
+            ("floor", x.iter().map(|v| v.floor()).collect()),
+            ("sign", vec![1.0, -1.0]),
+            ("logistic", x.iter().map(|v| 1.0 / (1.0 + (-v).exp())).collect()),
+        ];
+        for (op, want) in cases {
+            let text = format!(
+                "HloModule t\n\nENTRY e {{\n  a = f32[2]{{0}} parameter(0)\n  ROOT r = f32[2]{{0}} {op}(a)\n}}\n"
+            );
+            let got = run1(&text, &[&t(&x)]);
+            assert!(allclose(&got, &t(&want), 1e-6, 1e-7), "{op}: {:?} vs {want:?}", got.data);
+        }
+    }
+
+    #[test]
+    fn sqrt_rsqrt_log() {
+        let x = t(&[4.0, 0.25]);
+        let text = "HloModule t\n\nENTRY e {\n  a = f32[2]{0} parameter(0)\n  s = f32[2]{0} sqrt(a)\n  r = f32[2]{0} rsqrt(a)\n  l = f32[2]{0} log(a)\n  ROOT o = (f32[2], f32[2], f32[2]) tuple(s, r, l)\n}\n";
+        let m = parse_module(text).unwrap();
+        let out = evaluate(&m, &[&x]).unwrap();
+        assert!(allclose(&out[0], &t(&[2.0, 0.5]), 1e-6, 1e-7));
+        assert!(allclose(&out[1], &t(&[0.5, 2.0]), 1e-6, 1e-7));
+        assert!(allclose(&out[2], &t(&[4.0f32.ln(), 0.25f32.ln()]), 1e-6, 1e-7));
+    }
+
+    #[test]
+    fn broadcast_scalar_and_row() {
+        let text = "HloModule t\n\nENTRY e {\n  c = f32[] constant(2.5)\n  ROOT b = f32[2,3]{1,0} broadcast(c), dimensions={}\n}\n";
+        let got = run1(text, &[]);
+        assert_eq!(got.shape, vec![2, 3]);
+        assert!(got.data.iter().all(|&v| v == 2.5));
+
+        // row vector broadcast along dim 0 (jax keepdims pattern)
+        let text = "HloModule t\n\nENTRY e {\n  r = f32[2]{0} parameter(0)\n  ROOT b = f32[2,3]{1,0} broadcast(r), dimensions={0}\n}\n";
+        let got = run1(text, &[&t(&[1.0, 2.0])]);
+        assert_eq!(got.data, vec![1.0, 1.0, 1.0, 2.0, 2.0, 2.0]);
+
+        // column broadcast along dim 1
+        let text = "HloModule t\n\nENTRY e {\n  r = f32[3]{0} parameter(0)\n  ROOT b = f32[2,3]{1,0} broadcast(r), dimensions={1}\n}\n";
+        let got = run1(text, &[&t(&[1.0, 2.0, 3.0])]);
+        assert_eq!(got.data, vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn reshape_and_transpose() {
+        let x = Tensor::new(vec![2, 3], DType::F32, vec![1., 2., 3., 4., 5., 6.]);
+        let text = "HloModule t\n\nENTRY e {\n  a = f32[2,3]{1,0} parameter(0)\n  ROOT r = f32[3,2]{1,0} transpose(a), dimensions={1,0}\n}\n";
+        let got = run1(text, &[&x]);
+        assert_eq!(got.shape, vec![3, 2]);
+        assert_eq!(got.data, vec![1., 4., 2., 5., 3., 6.]);
+
+        let text = "HloModule t\n\nENTRY e {\n  a = f32[2,3]{1,0} parameter(0)\n  ROOT r = f32[6]{0} reshape(a)\n}\n";
+        let got = run1(text, &[&x]);
+        assert_eq!(got.shape, vec![6]);
+        assert_eq!(got.data, vec![1., 2., 3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn reduce_add_and_max() {
+        let x = Tensor::new(vec![2, 3], DType::F32, vec![1., 5., 2., -1., 0., 4.]);
+        let text = "HloModule t\n\nr {\n  a = f32[] parameter(0)\n  b = f32[] parameter(1)\n  ROOT s = f32[] add(a, b)\n}\n\nENTRY e {\n  x = f32[2,3]{1,0} parameter(0)\n  z = f32[] constant(0)\n  ROOT red = f32[2]{0} reduce(x, z), dimensions={1}, to_apply=r\n}\n";
+        let got = run1(text, &[&x]);
+        assert!(allclose(&got, &t(&[8.0, 3.0]), 1e-6, 1e-7));
+
+        let text = "HloModule t\n\nr {\n  a = f32[] parameter(0)\n  b = f32[] parameter(1)\n  ROOT s = f32[] maximum(a, b)\n}\n\nENTRY e {\n  x = f32[2,3]{1,0} parameter(0)\n  z = f32[] constant(-inf)\n  ROOT red = f32[3]{0} reduce(x, z), dimensions={0}, to_apply=r\n}\n";
+        let got = run1(text, &[&x]);
+        assert!(allclose(&got, &t(&[1.0, 5.0, 4.0]), 1e-6, 1e-7));
+    }
+
+    #[test]
+    fn reduce_with_exotic_combiner_falls_back_to_interpreter() {
+        // combiner computes a + 2*b: not a recognized monoid, exercises the
+        // generic per-pair path
+        let text = "HloModule t\n\nr {\n  a = f32[] parameter(0)\n  b = f32[] parameter(1)\n  c = f32[] constant(2)\n  s = f32[] multiply(b, c)\n  ROOT o = f32[] add(a, s)\n}\n\nENTRY e {\n  x = f32[3]{0} parameter(0)\n  z = f32[] constant(0)\n  ROOT red = f32[]{} reduce(x, z), dimensions={0}, to_apply=r\n}\n";
+        let got = run1(text, &[&t(&[1.0, 2.0, 3.0])]);
+        assert_eq!(got.data, vec![12.0]);
+    }
+
+    #[test]
+    fn dot_matmul_2d() {
+        let a = Tensor::new(vec![2, 3], DType::F32, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Tensor::new(vec![3, 2], DType::F32, vec![7., 8., 9., 10., 11., 12.]);
+        let text = "HloModule t\n\nENTRY e {\n  a = f32[2,3]{1,0} parameter(0)\n  b = f32[3,2]{1,0} parameter(1)\n  ROOT d = f32[2,2]{1,0} dot(a, b), lhs_contracting_dims={1}, rhs_contracting_dims={0}\n}\n";
+        let got = run1(text, &[&a, &b]);
+        assert!(allclose(
+            &got,
+            &Tensor::new(vec![2, 2], DType::F32, vec![58., 64., 139., 154.]),
+            1e-5,
+            1e-6
+        ));
+    }
+
+    #[test]
+    fn dot_contract_first_dims_like_mhc_mixing() {
+        // einsum('ji,jrd->ird') as lowered: contract dim 0 with dim 0
+        let p = Tensor::new(vec![2, 2], DType::F32, vec![0.25, 0.75, 0.5, 0.5]);
+        let h = Tensor::new(vec![2, 1, 2], DType::F32, vec![1., 2., 3., 4.]);
+        let text = "HloModule t\n\nENTRY e {\n  p = f32[2,2]{1,0} parameter(0)\n  h = f32[2,1,2]{2,1,0} parameter(1)\n  ROOT d = f32[2,1,2]{2,1,0} dot(p, h), lhs_contracting_dims={0}, rhs_contracting_dims={0}\n}\n";
+        let got = run1(text, &[&p, &h]);
+        // out[i,r,d] = sum_j p[j,i] h[j,r,d]
+        let want = Tensor::new(
+            vec![2, 1, 2],
+            DType::F32,
+            vec![
+                0.25 * 1. + 0.5 * 3.,
+                0.25 * 2. + 0.5 * 4.,
+                0.75 * 1. + 0.5 * 3.,
+                0.75 * 2. + 0.5 * 4.,
+            ],
+        );
+        assert!(allclose(&got, &want, 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn dot_rejects_equal_product_mismatched_dims() {
+        // contracting dims [2,3] vs [3,2]: equal products, pairwise
+        // mismatch — must error, not silently mis-contract
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[3, 2]);
+        let text = "HloModule t\n\nENTRY e {\n  a = f32[2,3]{1,0} parameter(0)\n  b = f32[3,2]{1,0} parameter(1)\n  ROOT d = f32[]{} dot(a, b), lhs_contracting_dims={0,1}, rhs_contracting_dims={0,1}\n}\n";
+        let m = parse_module(text).unwrap();
+        let e = evaluate(&m, &[&a, &b]).unwrap_err();
+        assert!(e.contains("contracting dims disagree"), "{e}");
+    }
+
+    #[test]
+    fn compare_select_and_call() {
+        // leaky-relu shaped module: where(x >= 0, x, 0.1*x) via call
+        let text = "HloModule t\n\n_where.1 {\n  p = pred[4]{0} parameter(0)\n  a = f32[4]{0} parameter(1)\n  b = f32[4]{0} parameter(2)\n  ROOT s = f32[4]{0} select(p, a, b)\n}\n\nENTRY e {\n  x = f32[4]{0} parameter(0)\n  zero = f32[] constant(0)\n  zb = f32[4]{0} broadcast(zero), dimensions={}\n  c = pred[4]{0} compare(x, zb), direction=GE\n  tenth = f32[] constant(0.1)\n  tb = f32[4]{0} broadcast(tenth), dimensions={}\n  lo = f32[4]{0} multiply(x, tb)\n  ROOT w = f32[4]{0} call(c, x, lo), to_apply=_where.1\n}\n";
+        let got = run1(text, &[&t(&[-2.0, -0.5, 0.0, 3.0])]);
+        assert!(allclose(&got, &t(&[-0.2, -0.05, 0.0, 3.0]), 1e-6, 1e-7));
+    }
+
+    #[test]
+    fn cumsum_scan_fast_path() {
+        let text = "HloModule t\n\nr {\n  a = f32[] parameter(0)\n  b = f32[] parameter(1)\n  ROOT s = f32[] add(a, b)\n}\n\nENTRY e {\n  x = f32[2,4]{1,0} parameter(0)\n  z = f32[] constant(0)\n  ROOT w = f32[2,4]{1,0} reduce-window(x, z), window={size=1x4 pad=0_0x3_0}, to_apply=r\n}\n";
+        let x = Tensor::new(vec![2, 4], DType::F32, vec![1., 2., 3., 4., 10., 20., 30., 40.]);
+        let got = run1(text, &[&x]);
+        assert!(allclose(
+            &got,
+            &Tensor::new(vec![2, 4], DType::F32, vec![1., 3., 6., 10., 10., 30., 60., 100.]),
+            1e-5,
+            1e-6
+        ));
+    }
+
+    #[test]
+    fn reverse_cumsum_scan() {
+        let text = "HloModule t\n\nr {\n  a = f32[] parameter(0)\n  b = f32[] parameter(1)\n  ROOT s = f32[] add(a, b)\n}\n\nENTRY e {\n  x = f32[4]{0} parameter(0)\n  z = f32[] constant(0)\n  ROOT w = f32[4]{0} reduce-window(x, z), window={size=4 pad=0_3}, to_apply=r\n}\n";
+        let got = run1(text, &[&t(&[1., 2., 3., 4.])]);
+        assert!(allclose(&got, &t(&[10., 9., 7., 4.]), 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn generic_reduce_window_small_window() {
+        // sliding-window max, window 2 stride 1, no padding -> out len 3
+        let text = "HloModule t\n\nr {\n  a = f32[] parameter(0)\n  b = f32[] parameter(1)\n  ROOT s = f32[] maximum(a, b)\n}\n\nENTRY e {\n  x = f32[4]{0} parameter(0)\n  z = f32[] constant(-inf)\n  ROOT w = f32[3]{0} reduce-window(x, z), window={size=2}, to_apply=r\n}\n";
+        let got = run1(text, &[&t(&[1., 5., 2., 4.])]);
+        assert!(allclose(&got, &t(&[5., 5., 4.]), 1e-6, 1e-7));
+    }
+
+    #[test]
+    fn tuple_root_returns_all_outputs() {
+        let text = "HloModule t\n\nENTRY e {\n  x = f32[2]{0} parameter(0)\n  n = f32[2]{0} negate(x)\n  d = f32[2]{0} add(x, x)\n  ROOT o = (f32[2], f32[2]) tuple(n, d)\n}\n";
+        let m = parse_module(text).unwrap();
+        let out = evaluate(&m, &[&t(&[1.0, -2.0])]).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].data, vec![-1.0, 2.0]);
+        assert_eq!(out[1].data, vec![2.0, -4.0]);
+    }
+
+    #[test]
+    fn wrong_input_arity_and_shape_are_errors() {
+        let text = "HloModule t\n\nENTRY e {\n  x = f32[2]{0} parameter(0)\n  ROOT n = f32[2]{0} negate(x)\n}\n";
+        let m = parse_module(text).unwrap();
+        assert!(evaluate(&m, &[]).is_err());
+        let wrong = Tensor::from_vec(vec![1.0, 2.0, 3.0]);
+        let e = evaluate(&m, &[&wrong]).unwrap_err();
+        assert!(e.contains("expects shape"), "{e}");
+    }
+
+    #[test]
+    fn unsupported_opcode_errors_at_eval() {
+        let text = "HloModule t\n\nENTRY e {\n  x = f32[2]{0} parameter(0)\n  ROOT y = f32[2]{0} frobnicate(x)\n}\n";
+        let m = parse_module(text).unwrap();
+        let e = evaluate(&m, &[&t(&[1.0, 2.0])]).unwrap_err();
+        assert!(e.contains("frobnicate"), "{e}");
+    }
+
+    #[test]
+    fn constant_array_literal() {
+        let text = "HloModule t\n\nENTRY e {\n  ROOT c = f32[2,2]{1,0} constant({ {1, 2}, {3, 4} })\n}\n";
+        let got = run1(text, &[]);
+        assert_eq!(got.shape, vec![2, 2]);
+        assert_eq!(got.data, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+}

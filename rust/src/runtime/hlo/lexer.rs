@@ -1,0 +1,146 @@
+//! Line tokenizer for the HLO text format. The printer emits one
+//! instruction per line, so lexing is per-line: words (identifiers,
+//! numbers, shape element types — anything that is not punctuation),
+//! quoted strings (metadata op names), and the punctuation that carries
+//! structure (`= , ( ) { } [ ]`). `/* ... */` comments are skipped.
+
+/// One token of an instruction line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Token {
+    /// Identifier / number / keyword — e.g. `reduce-window.9`, `f32`,
+    /// `-inf`, `0_0x2047_0`. Leading `%` (newer HLO printers prefix
+    /// instruction names) is stripped.
+    Word(String),
+    /// Double-quoted string (escapes preserved verbatim).
+    Str(String),
+    /// One of `= , ( ) { } [ ]`.
+    Punct(char),
+}
+
+impl Token {
+    pub fn describe(&self) -> String {
+        match self {
+            Token::Word(w) => format!("'{w}'"),
+            Token::Str(s) => format!("\"{s}\""),
+            Token::Punct(c) => format!("'{c}'"),
+        }
+    }
+}
+
+fn is_punct(c: char) -> bool {
+    matches!(c, '=' | ',' | '(' | ')' | '{' | '}' | '[' | ']')
+}
+
+/// Tokenize one line. Returns an error message (no position — the parser
+/// attaches the line number) on unterminated strings or comments.
+pub fn lex_line(line: &str) -> Result<Vec<Token>, String> {
+    let chars: Vec<char> = line.chars().collect();
+    let n = chars.len();
+    let mut toks = Vec::new();
+    let mut i = 0;
+    while i < n {
+        let c = chars[i];
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        if c == '"' {
+            let mut s = String::new();
+            let mut j = i + 1;
+            loop {
+                if j >= n {
+                    return Err("unterminated string literal".to_string());
+                }
+                if chars[j] == '\\' && j + 1 < n {
+                    s.push(chars[j]);
+                    s.push(chars[j + 1]);
+                    j += 2;
+                    continue;
+                }
+                if chars[j] == '"' {
+                    break;
+                }
+                s.push(chars[j]);
+                j += 1;
+            }
+            toks.push(Token::Str(s));
+            i = j + 1;
+            continue;
+        }
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let mut j = i + 2;
+            loop {
+                if j + 1 >= n {
+                    return Err("unterminated /* comment".to_string());
+                }
+                if chars[j] == '*' && chars[j + 1] == '/' {
+                    break;
+                }
+                j += 1;
+            }
+            i = j + 2;
+            continue;
+        }
+        if is_punct(c) {
+            toks.push(Token::Punct(c));
+            i += 1;
+            continue;
+        }
+        let mut j = i;
+        while j < n && !chars[j].is_whitespace() && !is_punct(chars[j]) && chars[j] != '"' {
+            j += 1;
+        }
+        let word: String = chars[i..j].iter().collect();
+        let word = word.strip_prefix('%').unwrap_or(&word).to_string();
+        toks.push(Token::Word(word));
+        i = j;
+    }
+    Ok(toks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn words(line: &str) -> Vec<Token> {
+        lex_line(line).unwrap()
+    }
+
+    #[test]
+    fn instruction_line_tokenizes() {
+        let t = words("  reduce.8 = f32[8]{0} reduce(Arg_0.1, constant.3), dimensions={1}, to_apply=region_0.4");
+        assert_eq!(t[0], Token::Word("reduce.8".into()));
+        assert_eq!(t[1], Token::Punct('='));
+        assert_eq!(t[2], Token::Word("f32".into()));
+        assert_eq!(t[3], Token::Punct('['));
+        assert!(t.contains(&Token::Word("to_apply".into())));
+        assert!(t.contains(&Token::Word("region_0.4".into())));
+    }
+
+    #[test]
+    fn negative_and_special_numbers_are_single_words() {
+        let t = words("constant.3 = f32[] constant(-inf)");
+        assert!(t.contains(&Token::Word("-inf".into())));
+        let t = words("constant.9 = f32[] constant(1e-05)");
+        assert!(t.contains(&Token::Word("1e-05".into())));
+    }
+
+    #[test]
+    fn percent_prefix_is_stripped() {
+        let t = words("%add.1 = f32[] add(%a, %b)");
+        assert_eq!(t[0], Token::Word("add.1".into()));
+        assert!(t.contains(&Token::Word("a".into())));
+    }
+
+    #[test]
+    fn quoted_strings_and_comments() {
+        let t = words("call.1 = f32[] call(x), /* skipped */ custom=\"a, b\"");
+        assert!(t.contains(&Token::Str("a, b".into())));
+        assert!(!t.iter().any(|tk| matches!(tk, Token::Word(w) if w.contains("skipped"))));
+    }
+
+    #[test]
+    fn unterminated_string_errors() {
+        assert!(lex_line("x = \"oops").is_err());
+    }
+}

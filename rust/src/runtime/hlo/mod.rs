@@ -1,0 +1,22 @@
+//! Self-contained HLO-text interpreter: lexer, parser, and evaluator for
+//! the text format `python/compile/aot.py` emits. This replaces the
+//! PJRT/XLA native runtime the crate previously linked against — the
+//! golden-oracle path now builds and runs hermetically (no external
+//! crates, no native libraries, no network), which is what lets plain
+//! `cargo test` execute the checked-in `artifacts/*.hlo.txt` fixtures on
+//! every platform.
+//!
+//! Layering:
+//! * [`lexer`] — per-line tokenization (the printer emits one instruction
+//!   per line);
+//! * [`parser`] — [`parser::Module`] / [`parser::Computation`] /
+//!   [`parser::Instr`] with operands resolved to indices at parse time;
+//! * [`eval`] — executes a module's ENTRY computation over
+//!   [`crate::util::tensor::Tensor`] inputs.
+
+pub mod eval;
+pub mod lexer;
+pub mod parser;
+
+pub use eval::evaluate;
+pub use parser::{parse_module, Module, ParseError};

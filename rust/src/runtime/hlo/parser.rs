@@ -1,0 +1,951 @@
+//! Parser for the HLO text format emitted by `python/compile/aot.py`
+//! (`XlaComputation::as_hlo_text`). The grammar is line-oriented:
+//!
+//! ```text
+//! HloModule jit_softmax, entry_computation_layout={...}
+//!
+//! region_0.4 {                       // subcomputation (reduce combiner)
+//!   Arg_0.5 = f32[] parameter(0)
+//!   ROOT maximum.7 = f32[] maximum(Arg_0.5, Arg_1.6)
+//! }
+//!
+//! ENTRY main.26 {
+//!   Arg_0.1 = f32[8,16]{1,0} parameter(0)
+//!   reduce.8 = f32[8]{0} reduce(Arg_0.1, constant.3), dimensions={1}, to_apply=region_0.4
+//!   ROOT tuple.25 = (f32[8,16]{1,0}) tuple(divide.24)
+//! }
+//! ```
+//!
+//! Operands are resolved to instruction indices during the parse (HLO text
+//! is printed in topological order, so a forward reference is malformed
+//! input), which both validates the module and makes evaluation cheap.
+//! Unknown attributes (`metadata=`, `sharding=`, ...) are skipped; unknown
+//! opcodes parse into [`Opcode::Other`] and only fail at evaluation time.
+
+use super::lexer::{lex_line, Token};
+use std::collections::HashMap;
+use std::fmt;
+
+/// Element type of an HLO array shape. All host data is stored as `f32`;
+/// the element type is kept for shape reporting and validation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElemType {
+    F32,
+    F64,
+    F16,
+    Bf16,
+    Pred,
+    S8,
+    S32,
+    S64,
+    U8,
+    U32,
+    U64,
+}
+
+impl ElemType {
+    fn parse(s: &str) -> Option<ElemType> {
+        match s {
+            "f32" => Some(ElemType::F32),
+            "f64" => Some(ElemType::F64),
+            "f16" => Some(ElemType::F16),
+            "bf16" => Some(ElemType::Bf16),
+            "pred" => Some(ElemType::Pred),
+            "s8" => Some(ElemType::S8),
+            "s32" => Some(ElemType::S32),
+            "s64" => Some(ElemType::S64),
+            "u8" => Some(ElemType::U8),
+            "u32" => Some(ElemType::U32),
+            "u64" => Some(ElemType::U64),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ElemType::F32 => "f32",
+            ElemType::F64 => "f64",
+            ElemType::F16 => "f16",
+            ElemType::Bf16 => "bf16",
+            ElemType::Pred => "pred",
+            ElemType::S8 => "s8",
+            ElemType::S32 => "s32",
+            ElemType::S64 => "s64",
+            ElemType::U8 => "u8",
+            ElemType::U32 => "u32",
+            ElemType::U64 => "u64",
+        }
+    }
+}
+
+/// A dense array shape (`f32[512,2048]`). Layout annotations are ignored.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Shape {
+    pub elem: ElemType,
+    pub dims: Vec<usize>,
+}
+
+impl Shape {
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+impl fmt::Display for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let dims: Vec<String> = self.dims.iter().map(|d| d.to_string()).collect();
+        write!(f, "{}[{}]", self.elem.name(), dims.join(","))
+    }
+}
+
+/// Result shape of an instruction: a plain array or (for `tuple`) a tuple.
+#[derive(Clone, Debug, PartialEq)]
+pub enum InstrShape {
+    Array(Shape),
+    Tuple(Vec<Shape>),
+}
+
+impl InstrShape {
+    /// The array shape, or an error message for tuple-shaped results.
+    pub fn array(&self) -> Result<&Shape, String> {
+        match self {
+            InstrShape::Array(s) => Ok(s),
+            InstrShape::Tuple(_) => Err("expected array shape, found tuple".to_string()),
+        }
+    }
+}
+
+/// Comparison direction of a `compare` instruction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CmpDir {
+    Eq,
+    Ne,
+    Ge,
+    Gt,
+    Le,
+    Lt,
+}
+
+impl CmpDir {
+    fn parse(s: &str) -> Option<CmpDir> {
+        match s {
+            "EQ" => Some(CmpDir::Eq),
+            "NE" => Some(CmpDir::Ne),
+            "GE" => Some(CmpDir::Ge),
+            "GT" => Some(CmpDir::Gt),
+            "LE" => Some(CmpDir::Le),
+            "LT" => Some(CmpDir::Lt),
+            _ => None,
+        }
+    }
+}
+
+/// `window={size=.. stride=.. pad=..}` of a `reduce-window` instruction.
+/// Missing fields default to stride 1 / pad 0 per dimension.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Window {
+    pub size: Vec<usize>,
+    pub stride: Vec<usize>,
+    /// (low, high) padding per dimension.
+    pub pad: Vec<(usize, usize)>,
+}
+
+/// Instruction opcodes the interpreter knows about. Anything else parses
+/// into `Other` and produces an evaluation error only if reached.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Opcode {
+    Parameter,
+    Constant,
+    Add,
+    Subtract,
+    Multiply,
+    Divide,
+    Maximum,
+    Minimum,
+    Power,
+    Exponential,
+    Log,
+    Tanh,
+    Sqrt,
+    Rsqrt,
+    Negate,
+    Abs,
+    Floor,
+    Ceil,
+    Sign,
+    Logistic,
+    Copy,
+    Convert,
+    Compare,
+    Select,
+    Reshape,
+    Transpose,
+    Broadcast,
+    Reduce,
+    ReduceWindow,
+    Dot,
+    Call,
+    Tuple,
+    Other(String),
+}
+
+impl Opcode {
+    fn parse(s: &str) -> Opcode {
+        match s {
+            "parameter" => Opcode::Parameter,
+            "constant" => Opcode::Constant,
+            "add" => Opcode::Add,
+            "subtract" => Opcode::Subtract,
+            "multiply" => Opcode::Multiply,
+            "divide" => Opcode::Divide,
+            "maximum" => Opcode::Maximum,
+            "minimum" => Opcode::Minimum,
+            "power" => Opcode::Power,
+            "exponential" => Opcode::Exponential,
+            "log" => Opcode::Log,
+            "tanh" => Opcode::Tanh,
+            "sqrt" => Opcode::Sqrt,
+            "rsqrt" => Opcode::Rsqrt,
+            "negate" => Opcode::Negate,
+            "abs" => Opcode::Abs,
+            "floor" => Opcode::Floor,
+            "ceil" => Opcode::Ceil,
+            "sign" => Opcode::Sign,
+            "logistic" => Opcode::Logistic,
+            "copy" => Opcode::Copy,
+            "convert" => Opcode::Convert,
+            "compare" => Opcode::Compare,
+            "select" => Opcode::Select,
+            "reshape" => Opcode::Reshape,
+            "transpose" => Opcode::Transpose,
+            "broadcast" => Opcode::Broadcast,
+            "reduce" => Opcode::Reduce,
+            "reduce-window" => Opcode::ReduceWindow,
+            "dot" => Opcode::Dot,
+            "call" => Opcode::Call,
+            "tuple" => Opcode::Tuple,
+            other => Opcode::Other(other.to_string()),
+        }
+    }
+}
+
+/// One parsed instruction.
+#[derive(Clone, Debug)]
+pub struct Instr {
+    pub name: String,
+    pub shape: InstrShape,
+    pub opcode: Opcode,
+    /// Operand indices into the owning computation's `instrs`.
+    pub operands: Vec<usize>,
+    pub is_root: bool,
+    /// `parameter(N)` index.
+    pub param_index: Option<usize>,
+    /// Flattened `constant(...)` payload (row-major).
+    pub literal: Option<Vec<f32>>,
+    /// `dimensions={...}` (broadcast / reduce / transpose).
+    pub dimensions: Option<Vec<usize>>,
+    /// `to_apply=name` (reduce / reduce-window / call).
+    pub to_apply: Option<String>,
+    /// `direction=GE` (compare).
+    pub direction: Option<CmpDir>,
+    pub lhs_contract: Vec<usize>,
+    pub rhs_contract: Vec<usize>,
+    pub lhs_batch: Vec<usize>,
+    pub rhs_batch: Vec<usize>,
+    pub window: Option<Window>,
+}
+
+/// A named computation: entry or subcomputation (combiner, called fn).
+#[derive(Clone, Debug)]
+pub struct Computation {
+    pub name: String,
+    pub instrs: Vec<Instr>,
+    /// Instruction indices in parameter order (0, 1, 2, ...).
+    pub params: Vec<usize>,
+    /// Index of the ROOT instruction.
+    pub root: usize,
+}
+
+/// A parsed HLO module.
+#[derive(Clone, Debug)]
+pub struct Module {
+    pub name: String,
+    pub computations: Vec<Computation>,
+    /// Index of the ENTRY computation.
+    pub entry: usize,
+    by_name: HashMap<String, usize>,
+}
+
+impl Module {
+    pub fn entry_computation(&self) -> &Computation {
+        &self.computations[self.entry]
+    }
+
+    pub fn computation_index(&self, name: &str) -> Option<usize> {
+        self.by_name.get(name).copied()
+    }
+}
+
+/// A parse failure with its 1-based source line.
+#[derive(Clone, Debug)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "line {}: {}", self.line, self.msg)
+    }
+}
+
+fn err<T>(line: usize, msg: impl Into<String>) -> Result<T, ParseError> {
+    Err(ParseError { line, msg: msg.into() })
+}
+
+// ------------------------------------------------------------------ cursor
+
+struct Cursor {
+    toks: Vec<Token>,
+    pos: usize,
+    line: usize,
+}
+
+impl Cursor {
+    fn new(toks: Vec<Token>, line: usize) -> Cursor {
+        Cursor { toks, pos: 0, line }
+    }
+
+    fn peek(&self) -> Option<&Token> {
+        self.toks.get(self.pos)
+    }
+
+    fn peek_punct(&self, c: char) -> bool {
+        matches!(self.peek(), Some(Token::Punct(p)) if *p == c)
+    }
+
+    fn next(&mut self) -> Option<Token> {
+        let t = self.toks.get(self.pos).cloned();
+        self.pos += 1;
+        t
+    }
+
+    fn done(&self) -> bool {
+        self.pos >= self.toks.len()
+    }
+
+    fn expect_punct(&mut self, c: char) -> Result<(), ParseError> {
+        match self.next() {
+            Some(Token::Punct(p)) if p == c => Ok(()),
+            Some(t) => err(self.line, format!("expected '{c}', found {}", t.describe())),
+            None => err(self.line, format!("expected '{c}', found end of line")),
+        }
+    }
+
+    fn word(&mut self) -> Result<String, ParseError> {
+        match self.next() {
+            Some(Token::Word(w)) => Ok(w),
+            Some(t) => err(self.line, format!("expected identifier, found {}", t.describe())),
+            None => err(self.line, "expected identifier, found end of line"),
+        }
+    }
+
+    fn usize_word(&mut self) -> Result<usize, ParseError> {
+        let line = self.line;
+        let w = self.word()?;
+        w.parse::<usize>()
+            .map_err(|_| ParseError { line, msg: format!("expected integer, found '{w}'") })
+    }
+
+    /// `{1,2,3}` (possibly empty).
+    fn usize_list(&mut self) -> Result<Vec<usize>, ParseError> {
+        self.expect_punct('{')?;
+        let mut out = Vec::new();
+        while !self.peek_punct('}') {
+            out.push(self.usize_word()?);
+            if self.peek_punct(',') {
+                self.next();
+            }
+        }
+        self.expect_punct('}')?;
+        Ok(out)
+    }
+
+    /// Skip a balanced `{...}` group (layouts, metadata, sharding, ...).
+    fn skip_braced(&mut self) -> Result<(), ParseError> {
+        self.expect_punct('{')?;
+        let mut depth = 1usize;
+        while depth > 0 {
+            match self.next() {
+                Some(Token::Punct('{')) => depth += 1,
+                Some(Token::Punct('}')) => depth -= 1,
+                Some(_) => {}
+                None => return err(self.line, "unterminated '{' group"),
+            }
+        }
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------------- sub-parsers
+
+fn parse_shape(c: &mut Cursor) -> Result<Shape, ParseError> {
+    let line = c.line;
+    let ty = c.word()?;
+    let elem = match ElemType::parse(&ty) {
+        Some(e) => e,
+        None => return err(line, format!("unsupported element type '{ty}'")),
+    };
+    let mut dims = Vec::new();
+    if c.peek_punct('[') {
+        c.next();
+        while !c.peek_punct(']') {
+            dims.push(c.usize_word()?);
+            if c.peek_punct(',') {
+                c.next();
+            }
+        }
+        c.expect_punct(']')?;
+    }
+    // optional layout annotation, e.g. {1,0} — skipped
+    if c.peek_punct('{') {
+        c.skip_braced()?;
+    }
+    Ok(Shape { elem, dims })
+}
+
+fn parse_scalar(line: usize, w: &str) -> Result<f32, ParseError> {
+    match w {
+        "inf" | "+inf" => Ok(f32::INFINITY),
+        "-inf" => Ok(f32::NEG_INFINITY),
+        "nan" | "-nan" => Ok(f32::NAN),
+        "true" => Ok(1.0),
+        "false" => Ok(0.0),
+        _ => w
+            .parse::<f32>()
+            .map_err(|_| ParseError { line, msg: format!("invalid literal value '{w}'") }),
+    }
+}
+
+/// `constant(...)` payload: a scalar or nested `{...}` rows; flattened
+/// row-major, which matches the printer's element order.
+fn parse_literal(c: &mut Cursor, shape: &Shape) -> Result<Vec<f32>, ParseError> {
+    let mut vals = Vec::new();
+    let mut depth = 0usize;
+    loop {
+        match c.peek() {
+            None => return err(c.line, "unterminated constant literal"),
+            Some(Token::Punct(')')) if depth == 0 => break,
+            Some(Token::Punct('{')) => {
+                depth += 1;
+                c.next();
+            }
+            Some(Token::Punct('}')) => {
+                if depth == 0 {
+                    return err(c.line, "unbalanced '}' in constant literal");
+                }
+                depth -= 1;
+                c.next();
+            }
+            Some(Token::Punct(',')) => {
+                c.next();
+            }
+            Some(Token::Word(_)) => {
+                let line = c.line;
+                let w = c.word()?;
+                vals.push(parse_scalar(line, &w)?);
+            }
+            Some(t) => {
+                return err(c.line, format!("unexpected {} in constant literal", t.describe()))
+            }
+        }
+    }
+    if vals.len() != shape.numel() {
+        return err(
+            c.line,
+            format!("constant has {} elements but shape {shape} wants {}", vals.len(), shape.numel()),
+        );
+    }
+    Ok(vals)
+}
+
+fn parse_dim_spec(line: usize, w: &str) -> Result<Vec<usize>, ParseError> {
+    w.split('x')
+        .map(|p| {
+            p.parse::<usize>()
+                .map_err(|_| ParseError { line, msg: format!("invalid window dimension '{p}'") })
+        })
+        .collect()
+}
+
+/// `window={size=1x2048 stride=1x1 pad=0_0x2047_0}`.
+fn parse_window(c: &mut Cursor) -> Result<Window, ParseError> {
+    c.expect_punct('{')?;
+    let mut size: Option<Vec<usize>> = None;
+    let mut stride: Option<Vec<usize>> = None;
+    let mut pad: Option<Vec<(usize, usize)>> = None;
+    while !c.peek_punct('}') {
+        let line = c.line;
+        let key = c.word()?;
+        c.expect_punct('=')?;
+        let val = c.word()?;
+        match key.as_str() {
+            "size" => size = Some(parse_dim_spec(line, &val)?),
+            "stride" => stride = Some(parse_dim_spec(line, &val)?),
+            "pad" => {
+                let mut pairs = Vec::new();
+                for part in val.split('x') {
+                    let mut it = part.split('_');
+                    let lo = it.next().unwrap_or("");
+                    let hi = it.next().unwrap_or("0");
+                    let parse = |s: &str| {
+                        s.parse::<usize>().map_err(|_| ParseError {
+                            line,
+                            msg: format!("invalid window pad '{part}'"),
+                        })
+                    };
+                    pairs.push((parse(lo)?, parse(hi)?));
+                }
+                pad = Some(pairs);
+            }
+            _ => {} // lhs_dilate etc.: not produced by our build path
+        }
+    }
+    c.expect_punct('}')?;
+    let size = match size {
+        Some(s) => s,
+        None => return err(c.line, "window attribute has no size"),
+    };
+    let rank = size.len();
+    Ok(Window {
+        stride: stride.unwrap_or_else(|| vec![1; rank]),
+        pad: pad.unwrap_or_else(|| vec![(0, 0); rank]),
+        size,
+    })
+}
+
+fn parse_instr(
+    mut c: Cursor,
+    by_name: &HashMap<String, usize>,
+) -> Result<Instr, ParseError> {
+    let mut name = c.word()?;
+    let mut is_root = false;
+    if name == "ROOT" {
+        is_root = true;
+        name = c.word()?;
+    }
+    c.expect_punct('=')?;
+    let shape = if c.peek_punct('(') {
+        c.next();
+        let mut shapes = Vec::new();
+        while !c.peek_punct(')') {
+            shapes.push(parse_shape(&mut c)?);
+            if c.peek_punct(',') {
+                c.next();
+            }
+        }
+        c.expect_punct(')')?;
+        InstrShape::Tuple(shapes)
+    } else {
+        InstrShape::Array(parse_shape(&mut c)?)
+    };
+    let op_word = c.word()?;
+    let opcode = Opcode::parse(&op_word);
+    let mut ins = Instr {
+        name,
+        shape,
+        opcode,
+        operands: Vec::new(),
+        is_root,
+        param_index: None,
+        literal: None,
+        dimensions: None,
+        to_apply: None,
+        direction: None,
+        lhs_contract: Vec::new(),
+        rhs_contract: Vec::new(),
+        lhs_batch: Vec::new(),
+        rhs_batch: Vec::new(),
+        window: None,
+    };
+    c.expect_punct('(')?;
+    match ins.opcode {
+        Opcode::Constant => {
+            let shape = match &ins.shape {
+                InstrShape::Array(s) => s.clone(),
+                InstrShape::Tuple(_) => return err(c.line, "tuple-shaped constant"),
+            };
+            ins.literal = Some(parse_literal(&mut c, &shape)?);
+            c.expect_punct(')')?;
+        }
+        Opcode::Parameter => {
+            ins.param_index = Some(c.usize_word()?);
+            c.expect_punct(')')?;
+        }
+        _ => {
+            while !c.peek_punct(')') {
+                let line = c.line;
+                let op_name = c.word()?;
+                match by_name.get(&op_name) {
+                    Some(&idx) => ins.operands.push(idx),
+                    None => {
+                        return err(
+                            line,
+                            format!("operand '{op_name}' of '{}' is not defined above", ins.name),
+                        )
+                    }
+                }
+                if c.peek_punct(',') {
+                    c.next();
+                }
+            }
+            c.expect_punct(')')?;
+        }
+    }
+    // trailing attributes: `, key=value` pairs
+    while !c.done() {
+        match c.next() {
+            Some(Token::Punct(',')) => continue,
+            Some(Token::Word(key)) => {
+                c.expect_punct('=')?;
+                match key.as_str() {
+                    "dimensions" => ins.dimensions = Some(c.usize_list()?),
+                    "to_apply" => ins.to_apply = Some(c.word()?),
+                    "direction" => {
+                        let line = c.line;
+                        let w = c.word()?;
+                        ins.direction = match CmpDir::parse(&w) {
+                            Some(d) => Some(d),
+                            None => return err(line, format!("unknown compare direction '{w}'")),
+                        };
+                    }
+                    "lhs_contracting_dims" => ins.lhs_contract = c.usize_list()?,
+                    "rhs_contracting_dims" => ins.rhs_contract = c.usize_list()?,
+                    "lhs_batch_dims" => ins.lhs_batch = c.usize_list()?,
+                    "rhs_batch_dims" => ins.rhs_batch = c.usize_list()?,
+                    "window" => ins.window = Some(parse_window(&mut c)?),
+                    _ => {
+                        // metadata=, sharding=, frontend_attributes=, ...
+                        if c.peek_punct('{') {
+                            c.skip_braced()?;
+                        } else {
+                            c.next();
+                        }
+                    }
+                }
+            }
+            Some(t) => return err(c.line, format!("unexpected {} after operand list", t.describe())),
+            None => break,
+        }
+    }
+    Ok(ins)
+}
+
+// ------------------------------------------------------------ module parse
+
+struct CompBuilder {
+    name: String,
+    is_entry: bool,
+    instrs: Vec<Instr>,
+    by_name: HashMap<String, usize>,
+    start_line: usize,
+}
+
+impl CompBuilder {
+    fn finish(self, end_line: usize) -> Result<(Computation, bool), ParseError> {
+        let mut params: Vec<(usize, usize)> = Vec::new();
+        let mut root = None;
+        for (idx, ins) in self.instrs.iter().enumerate() {
+            if let Some(pi) = ins.param_index {
+                params.push((pi, idx));
+            }
+            if ins.is_root {
+                if root.is_some() {
+                    return err(end_line, format!("computation '{}' has two ROOTs", self.name));
+                }
+                root = Some(idx);
+            }
+        }
+        let root = match root {
+            Some(r) => r,
+            None => {
+                return err(end_line, format!("computation '{}' has no ROOT instruction", self.name))
+            }
+        };
+        params.sort();
+        for (want, (got, _)) in params.iter().enumerate() {
+            if *got != want {
+                return err(
+                    self.start_line,
+                    format!("computation '{}' has non-contiguous parameter indices", self.name),
+                );
+            }
+        }
+        Ok((
+            Computation {
+                name: self.name,
+                instrs: self.instrs,
+                params: params.into_iter().map(|(_, idx)| idx).collect(),
+                root,
+            },
+            self.is_entry,
+        ))
+    }
+}
+
+/// Parse a full HLO text module.
+pub fn parse_module(text: &str) -> Result<Module, ParseError> {
+    let mut module_name: Option<String> = None;
+    let mut computations: Vec<Computation> = Vec::new();
+    let mut by_name: HashMap<String, usize> = HashMap::new();
+    let mut entry: Option<usize> = None;
+    let mut current: Option<CompBuilder> = None;
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let lineno = lineno + 1;
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("HloModule") {
+            if module_name.is_some() {
+                return err(lineno, "duplicate HloModule header");
+            }
+            let name = rest.split_whitespace().next().unwrap_or("").trim_end_matches(',');
+            if name.is_empty() {
+                return err(lineno, "HloModule header has no name");
+            }
+            module_name = Some(name.to_string());
+            continue;
+        }
+        if module_name.is_none() {
+            return err(lineno, "content before HloModule header");
+        }
+        if line == "}" {
+            match current.take() {
+                Some(builder) => {
+                    let (comp, is_entry) = builder.finish(lineno)?;
+                    if by_name.contains_key(&comp.name) {
+                        return err(lineno, format!("duplicate computation '{}'", comp.name));
+                    }
+                    by_name.insert(comp.name.clone(), computations.len());
+                    if is_entry {
+                        entry = Some(computations.len());
+                    }
+                    computations.push(comp);
+                }
+                None => return err(lineno, "'}' outside a computation"),
+            }
+            continue;
+        }
+        if line.ends_with('{') && !line.contains('=') {
+            if current.is_some() {
+                return err(lineno, "computation header inside a computation");
+            }
+            let header = line[..line.len() - 1].trim();
+            let (is_entry, header) = match header.strip_prefix("ENTRY") {
+                Some(rest) => (true, rest.trim()),
+                None => (false, header),
+            };
+            // header may carry a `(params) -> result` signature; the name
+            // is the first word either way
+            let name = header.split(|ch: char| ch.is_whitespace() || ch == '(').next().unwrap_or("");
+            let name = name.strip_prefix('%').unwrap_or(name);
+            if name.is_empty() {
+                return err(lineno, "computation header has no name");
+            }
+            current = Some(CompBuilder {
+                name: name.to_string(),
+                is_entry,
+                instrs: Vec::new(),
+                by_name: HashMap::new(),
+                start_line: lineno,
+            });
+            continue;
+        }
+        let builder = match current.as_mut() {
+            Some(b) => b,
+            None => return err(lineno, format!("instruction outside a computation: '{line}'")),
+        };
+        let toks = match lex_line(line) {
+            Ok(t) => t,
+            Err(msg) => return err(lineno, msg),
+        };
+        let ins = parse_instr(Cursor::new(toks, lineno), &builder.by_name)?;
+        if builder.by_name.contains_key(&ins.name) {
+            return err(lineno, format!("duplicate instruction name '{}'", ins.name));
+        }
+        builder.by_name.insert(ins.name.clone(), builder.instrs.len());
+        builder.instrs.push(ins);
+    }
+
+    if let Some(b) = current {
+        return err(b.start_line, format!("computation '{}' is never closed", b.name));
+    }
+    let name = match module_name {
+        Some(n) => n,
+        None => return err(1, "no HloModule header found"),
+    };
+    let entry = match entry {
+        Some(e) => e,
+        None => return err(1, "module has no ENTRY computation"),
+    };
+    // every to_apply must resolve
+    for comp in &computations {
+        for ins in &comp.instrs {
+            if let Some(target) = &ins.to_apply {
+                if !by_name.contains_key(target) {
+                    return err(
+                        1,
+                        format!("'{}' applies unknown computation '{target}'", ins.name),
+                    );
+                }
+            }
+        }
+    }
+    Ok(Module { name, computations, entry, by_name })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SOFTMAX_8X16: &str = r#"HloModule jit_softmax, entry_computation_layout={(f32[8,16]{1,0})->(f32[8,16]{1,0})}
+
+region_0.4 {
+  Arg_0.5 = f32[] parameter(0)
+  Arg_1.6 = f32[] parameter(1)
+  ROOT maximum.7 = f32[] maximum(Arg_0.5, Arg_1.6)
+}
+
+region_1.15 {
+  Arg_0.16 = f32[] parameter(0)
+  Arg_1.17 = f32[] parameter(1)
+  ROOT add.18 = f32[] add(Arg_0.16, Arg_1.17)
+}
+
+ENTRY main.26 {
+  Arg_0.1 = f32[8,16]{1,0} parameter(0)
+  constant.3 = f32[] constant(-inf)
+  reduce.8 = f32[8]{0} reduce(Arg_0.1, constant.3), dimensions={1}, to_apply=region_0.4
+  reshape.9 = f32[8,1]{1,0} reshape(reduce.8)
+  reshape.11 = f32[8]{0} reshape(reshape.9)
+  broadcast.12 = f32[8,16]{1,0} broadcast(reshape.11), dimensions={0}
+  subtract.13 = f32[8,16]{1,0} subtract(Arg_0.1, broadcast.12)
+  exponential.14 = f32[8,16]{1,0} exponential(subtract.13)
+  constant.2 = f32[] constant(0)
+  reduce.19 = f32[8]{0} reduce(exponential.14, constant.2), dimensions={1}, to_apply=region_1.15
+  reshape.22 = f32[8]{0} reshape(reduce.19)
+  broadcast.23 = f32[8,16]{1,0} broadcast(reshape.22), dimensions={0}
+  divide.24 = f32[8,16]{1,0} divide(exponential.14, broadcast.23)
+  ROOT tuple.25 = (f32[8,16]{1,0}) tuple(divide.24)
+}
+"#;
+
+    #[test]
+    fn parses_softmax_module() {
+        let m = parse_module(SOFTMAX_8X16).unwrap();
+        assert_eq!(m.name, "jit_softmax");
+        assert_eq!(m.computations.len(), 3);
+        let entry = m.entry_computation();
+        assert_eq!(entry.name, "main.26");
+        assert_eq!(entry.params.len(), 1);
+        let root = &entry.instrs[entry.root];
+        assert_eq!(root.opcode, Opcode::Tuple);
+        match &root.shape {
+            InstrShape::Tuple(shapes) => {
+                assert_eq!(shapes.len(), 1);
+                assert_eq!(shapes[0].dims, vec![8, 16]);
+            }
+            other => panic!("expected tuple root shape, got {other:?}"),
+        }
+        // reduce points at the maximum combiner
+        let reduce = entry.instrs.iter().find(|i| i.name == "reduce.8").unwrap();
+        assert_eq!(reduce.dimensions, Some(vec![1]));
+        assert_eq!(reduce.to_apply.as_deref(), Some("region_0.4"));
+        assert!(m.computation_index("region_0.4").is_some());
+    }
+
+    #[test]
+    fn constant_forms() {
+        let text = "HloModule t\n\nENTRY e {\n  c1 = f32[] constant(-inf)\n  c2 = f32[2]{0} constant({1.5, -2})\n  c3 = f32[1,1]{1,0} constant({ {4194304} })\n  ROOT t.1 = (f32[], f32[2], f32[1,1]) tuple(c1, c2, c3)\n}\n";
+        let m = parse_module(text).unwrap();
+        let e = m.entry_computation();
+        assert_eq!(e.instrs[0].literal, Some(vec![f32::NEG_INFINITY]));
+        assert_eq!(e.instrs[1].literal, Some(vec![1.5, -2.0]));
+        assert_eq!(e.instrs[2].literal, Some(vec![4194304.0]));
+    }
+
+    #[test]
+    fn window_attribute_parses() {
+        let text = "HloModule t\n\nr {\n  a = f32[] parameter(0)\n  b = f32[] parameter(1)\n  ROOT s = f32[] add(a, b)\n}\n\nENTRY e {\n  x = f32[512,2048]{1,0} parameter(0)\n  z = f32[] constant(0)\n  ROOT w.1 = f32[512,2048]{1,0} reduce-window(x, z), window={size=1x2048 pad=0_0x2047_0}, to_apply=r\n}\n";
+        let m = parse_module(text).unwrap();
+        let e = m.entry_computation();
+        let w = e.instrs[e.root].window.as_ref().unwrap();
+        assert_eq!(w.size, vec![1, 2048]);
+        assert_eq!(w.stride, vec![1, 1]);
+        assert_eq!(w.pad, vec![(0, 0), (2047, 0)]);
+    }
+
+    #[test]
+    fn forward_reference_is_rejected_with_line() {
+        let text = "HloModule t\n\nENTRY e {\n  y = f32[] negate(x)\n  ROOT x = f32[] parameter(0)\n}\n";
+        let e = parse_module(text).unwrap_err();
+        assert_eq!(e.line, 4);
+        assert!(e.msg.contains("not defined above"), "{}", e.msg);
+    }
+
+    #[test]
+    fn missing_root_is_rejected() {
+        let text = "HloModule t\n\nENTRY e {\n  x = f32[] parameter(0)\n}\n";
+        let e = parse_module(text).unwrap_err();
+        assert!(e.msg.contains("no ROOT"), "{}", e.msg);
+    }
+
+    #[test]
+    fn missing_entry_is_rejected() {
+        let text = "HloModule t\n\nr {\n  ROOT x = f32[] parameter(0)\n}\n";
+        let e = parse_module(text).unwrap_err();
+        assert!(e.msg.contains("ENTRY"), "{}", e.msg);
+    }
+
+    #[test]
+    fn garbage_line_is_rejected_with_line_number() {
+        let text = "HloModule t\n\nENTRY e {\n  x = f32[] parameter(0)\n  what even is this\n  ROOT y = f32[] negate(x)\n}\n";
+        let e = parse_module(text).unwrap_err();
+        assert_eq!(e.line, 5);
+    }
+
+    #[test]
+    fn unknown_opcode_parses_as_other() {
+        let text = "HloModule t\n\nENTRY e {\n  x = f32[4]{0} parameter(0)\n  ROOT y = f32[4]{0} frobnicate(x)\n}\n";
+        let m = parse_module(text).unwrap();
+        let e = m.entry_computation();
+        assert_eq!(e.instrs[e.root].opcode, Opcode::Other("frobnicate".to_string()));
+    }
+
+    #[test]
+    fn unknown_attributes_are_skipped() {
+        let text = "HloModule t\n\nENTRY e {\n  x = f32[4]{0} parameter(0)\n  ROOT y = f32[4]{0} negate(x), metadata={op_type=\"neg\" op_name=\"jit(f)/neg\" source_file=\"a,b.py\" source_line=3}, backend_config=\"cfg\"\n}\n";
+        let m = parse_module(text).unwrap();
+        assert_eq!(m.entry_computation().instrs.len(), 2);
+    }
+
+    #[test]
+    fn real_artifact_round_trips_through_parser() {
+        // checked-in fixture (repo-root artifacts/, relative to this crate)
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts/softmax.hlo.txt");
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(_) => return, // fixture tree not present (e.g. crate vendored alone)
+        };
+        let m = parse_module(&text).unwrap();
+        assert_eq!(m.entry_computation().params.len(), 1);
+        let shape = m.entry_computation().instrs[m.entry_computation().params[0]]
+            .shape
+            .array()
+            .unwrap()
+            .clone();
+        assert_eq!(shape.dims, vec![512, 2048]);
+    }
+}

@@ -1,109 +1,135 @@
-//! PJRT runtime: loads AOT-compiled JAX reference computations (HLO text in
-//! `artifacts/*.hlo.txt`) and executes them on the XLA CPU client. This is
-//! the L2 golden oracle — an *independent* numerical reference produced by
-//! the JAX/Pallas build path, cross-checked against the Rust references and
-//! used for Pass@1 verification of the showcase kernels.
+//! Golden-oracle runtime: loads AOT-lowered JAX reference computations
+//! (HLO text in `artifacts/*.hlo.txt`) and executes them with the
+//! self-contained [`hlo`] interpreter. This is the L2 golden oracle — an
+//! *independent* numerical reference produced by the JAX build path,
+//! cross-checked against the Rust references (L3) and used for Pass@1
+//! verification of the showcase kernels.
 //!
-//! Interchange is HLO **text**, not serialized `HloModuleProto`: jax ≥ 0.5
-//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids (see /opt/xla-example/README.md).
+//! The previous implementation compiled the HLO through a PJRT/XLA CPU
+//! client, which made the crate unbuildable without a native
+//! `xla_extension` install and confined oracle use to one thread
+//! (`Rc`-backed client handles). The interpreter removes both
+//! constraints: [`GoldenOracle`] and [`OracleRegistry`] are plain data
+//! (`Send + Sync`), so coordinator workers can cross-check suite results
+//! against L2 in parallel — see
+//! [`crate::coordinator::service::cross_check_suite`].
+
+pub mod hlo;
 
 use crate::util::tensor::Tensor;
-use anyhow::{anyhow, Context, Result};
-use std::cell::RefCell;
 use std::collections::HashMap;
+use std::fmt;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
-/// A loaded, compiled golden computation.
+/// Errors from loading or executing a golden oracle.
+#[derive(Debug)]
+pub enum RuntimeError {
+    /// The artifact file could not be read.
+    Io { path: PathBuf, err: std::io::Error },
+    /// The artifact is not valid HLO text.
+    Parse { path: PathBuf, err: hlo::ParseError },
+    /// The module loaded but could not be executed on the given inputs.
+    Eval { oracle: String, msg: String },
+}
+
+impl fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RuntimeError::Io { path, err } => write!(f, "reading {}: {err}", path.display()),
+            RuntimeError::Parse { path, err } => {
+                write!(f, "parsing HLO text {}: {err}", path.display())
+            }
+            RuntimeError::Eval { oracle, msg } => write!(f, "executing oracle '{oracle}': {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+/// A loaded golden computation, executable on host tensors.
+#[derive(Clone, Debug)]
 pub struct GoldenOracle {
-    exe: xla::PjRtLoadedExecutable,
+    module: hlo::Module,
     name: String,
 }
 
-thread_local! {
-    // PjRtClient is Rc-backed (not Send); keep one per thread. Oracle use
-    // is confined to the main thread in practice (CLI, tests, benches).
-    static CLIENT: RefCell<Option<xla::PjRtClient>> = const { RefCell::new(None) };
-}
-
-/// Run `f` with the thread's lazily-created CPU client.
-fn with_client<T>(f: impl FnOnce(&xla::PjRtClient) -> Result<T>) -> Result<T> {
-    CLIENT.with(|slot| {
-        let mut slot = slot.borrow_mut();
-        if slot.is_none() {
-            *slot = Some(xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e}"))?);
-        }
-        f(slot.as_ref().unwrap())
-    })
-}
-
 impl GoldenOracle {
-    /// Load an HLO text artifact and compile it.
-    pub fn load(path: &Path) -> Result<GoldenOracle> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = with_client(|c| {
-            c.compile(&comp).with_context(|| format!("compiling {path:?}"))
-        })?;
-        Ok(GoldenOracle {
-            exe,
-            name: path.file_stem().and_then(|s| s.to_str()).unwrap_or("oracle").to_string(),
-        })
+    /// Load and parse an HLO text artifact.
+    pub fn load(path: &Path) -> Result<GoldenOracle, RuntimeError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|err| RuntimeError::Io { path: path.to_path_buf(), err })?;
+        let name =
+            path.file_stem().and_then(|s| s.to_str()).unwrap_or("oracle").trim_end_matches(".hlo");
+        GoldenOracle::from_text(name, &text)
+            .map_err(|e| match e {
+                RuntimeError::Parse { err, .. } => {
+                    RuntimeError::Parse { path: path.to_path_buf(), err }
+                }
+                other => other,
+            })
+    }
+
+    /// Parse HLO text directly (used by tests and embedders).
+    pub fn from_text(name: &str, text: &str) -> Result<GoldenOracle, RuntimeError> {
+        let module = hlo::parse_module(text)
+            .map_err(|err| RuntimeError::Parse { path: PathBuf::from(format!("<{name}>")), err })?;
+        Ok(GoldenOracle { module, name: name.to_string() })
     }
 
     pub fn name(&self) -> &str {
         &self.name
     }
 
+    /// Number of input tensors the oracle expects.
+    pub fn arity(&self) -> usize {
+        self.module.entry_computation().params.len()
+    }
+
+    /// Dimensions of input parameter `i`, if it exists.
+    pub fn input_shape(&self, i: usize) -> Option<&[usize]> {
+        let comp = self.module.entry_computation();
+        let &idx = comp.params.get(i)?;
+        comp.instrs[idx].shape.array().ok().map(|s| s.dims.as_slice())
+    }
+
     /// Execute with f32 tensor inputs; returns the tuple of outputs.
-    /// (aot.py lowers with `return_tuple=True`.)
-    pub fn run(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| {
-                let shape: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
-                xla::Literal::vec1(&t.data)
-                    .reshape(&shape)
-                    .map_err(|e| anyhow!("reshape literal: {e}"))
-            })
-            .collect::<Result<_>>()?;
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute {}: {e}", self.name))?;
-        let out = result[0][0].to_literal_sync().map_err(|e| anyhow!("sync: {e}"))?;
-        let tuple = out.to_tuple().map_err(|e| anyhow!("untuple: {e}"))?;
-        tuple
+    /// (aot.py lowers with `return_tuple=True`.) Scalar (rank-0) outputs
+    /// are reported with shape `[1]`, matching the task-spec convention.
+    pub fn run(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>, RuntimeError> {
+        let outs = hlo::evaluate(&self.module, inputs)
+            .map_err(|msg| RuntimeError::Eval { oracle: self.name.clone(), msg })?;
+        Ok(outs
             .into_iter()
-            .map(|lit| {
-                let shape = lit.array_shape().map_err(|e| anyhow!("shape: {e}"))?;
-                let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-                let data = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))?;
-                Ok(Tensor::new(if dims.is_empty() { vec![1] } else { dims }, crate::util::tensor::DType::F32, data))
-            })
-            .collect()
+            .map(|t| if t.shape.is_empty() { t.reshape(&[1]) } else { t })
+            .collect())
     }
 }
 
-/// Registry of golden oracles found under an artifacts directory
-/// (single-threaded: PJRT objects are Rc-backed).
+/// Registry of golden oracles found under an artifacts directory. Loaded
+/// modules are cached behind a mutex; `Arc` handles let many worker
+/// threads execute the same oracle concurrently (evaluation is pure).
 pub struct OracleRegistry {
     dir: PathBuf,
-    cache: RefCell<HashMap<String, Rc<GoldenOracle>>>,
+    cache: Mutex<HashMap<String, Arc<GoldenOracle>>>,
 }
 
 impl OracleRegistry {
     pub fn new(dir: impl Into<PathBuf>) -> OracleRegistry {
-        OracleRegistry { dir: dir.into(), cache: RefCell::new(HashMap::new()) }
+        OracleRegistry { dir: dir.into(), cache: Mutex::new(HashMap::new()) }
     }
 
-    /// Default artifacts directory (repo-local `artifacts/`).
+    /// Default artifacts directory: the repo-root `artifacts/` (resolved
+    /// relative to this crate at compile time so `cargo test` finds the
+    /// checked-in fixtures from any working directory), falling back to a
+    /// cwd-relative `artifacts/`.
     pub fn default_dir() -> OracleRegistry {
-        OracleRegistry::new("artifacts")
+        let repo = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("artifacts");
+        if repo.is_dir() {
+            OracleRegistry::new(repo)
+        } else {
+            OracleRegistry::new("artifacts")
+        }
     }
 
     /// Is the artifact for `name` present on disk?
@@ -116,16 +142,19 @@ impl OracleRegistry {
     }
 
     /// Load (and cache) the oracle for `name`.
-    pub fn get(&self, name: &str) -> Result<Rc<GoldenOracle>> {
-        if let Some(o) = self.cache.borrow().get(name) {
-            return Ok(Rc::clone(o));
+    pub fn get(&self, name: &str) -> Result<Arc<GoldenOracle>, RuntimeError> {
+        if let Some(o) = self.cache.lock().unwrap().get(name) {
+            return Ok(Arc::clone(o));
         }
-        let oracle = Rc::new(GoldenOracle::load(&self.path(name))?);
-        self.cache.borrow_mut().insert(name.to_string(), Rc::clone(&oracle));
-        Ok(oracle)
+        // parse outside the lock: artifacts parse in microseconds but
+        // there is no reason to serialize workers on it
+        let oracle = Arc::new(GoldenOracle::load(&self.path(name))?);
+        let mut cache = self.cache.lock().unwrap();
+        let entry = cache.entry(name.to_string()).or_insert_with(|| Arc::clone(&oracle));
+        Ok(Arc::clone(entry))
     }
 
-    /// All artifact names present.
+    /// All artifact names present, sorted.
     pub fn list(&self) -> Vec<String> {
         let mut names = Vec::new();
         if let Ok(entries) = std::fs::read_dir(&self.dir) {
@@ -146,24 +175,36 @@ impl OracleRegistry {
 mod tests {
     use super::*;
 
-    // These tests only run when artifacts exist (make artifacts);
-    // cargo test stays self-contained without them.
+    #[test]
+    fn oracle_types_are_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<GoldenOracle>();
+        assert_send_sync::<OracleRegistry>();
+        assert_send_sync::<RuntimeError>();
+    }
 
     #[test]
     fn registry_lists_missing_dir_gracefully() {
         let r = OracleRegistry::new("/nonexistent/dir");
         assert!(r.list().is_empty());
         assert!(!r.available("softmax"));
+        assert!(r.get("softmax").is_err());
+    }
+
+    #[test]
+    fn default_dir_finds_checked_in_fixtures() {
+        let reg = OracleRegistry::default_dir();
+        let names = reg.list();
+        assert!(
+            names.iter().any(|n| n == "softmax") && names.iter().any(|n| n == "gelu"),
+            "checked-in artifacts/ fixtures missing: {names:?}"
+        );
     }
 
     #[test]
     fn golden_softmax_matches_rust_reference() {
         let reg = OracleRegistry::default_dir();
-        if !reg.available("softmax") {
-            eprintln!("skipping: artifacts/softmax.hlo.txt not built");
-            return;
-        }
-        let oracle = reg.get("softmax").unwrap();
+        let oracle = reg.get("softmax").expect("softmax.hlo.txt is checked in");
         let task = crate::bench_suite::tasks::task_by_name("softmax").unwrap();
         let inputs = task.make_inputs(11);
         let want = task.reference(&inputs);
@@ -175,15 +216,41 @@ mod tests {
     #[test]
     fn golden_gelu_matches_rust_reference() {
         let reg = OracleRegistry::default_dir();
-        if !reg.available("gelu") {
-            eprintln!("skipping: artifacts/gelu.hlo.txt not built");
-            return;
-        }
-        let oracle = reg.get("gelu").unwrap();
+        let oracle = reg.get("gelu").expect("gelu.hlo.txt is checked in");
         let task = crate::bench_suite::tasks::task_by_name("gelu").unwrap();
         let inputs = task.make_inputs(13);
         let want = task.reference(&inputs);
         let got = oracle.run(&[&inputs["x"]]).unwrap();
         assert!(crate::util::compare::allclose(&got[0], &want["y"], 1e-3, 1e-4));
+    }
+
+    #[test]
+    fn oracle_reports_shape_mismatch() {
+        let reg = OracleRegistry::default_dir();
+        let oracle = reg.get("softmax").expect("softmax.hlo.txt is checked in");
+        let wrong = Tensor::zeros(&[2, 2]);
+        let err = oracle.run(&[&wrong]).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("shape"), "{msg}");
+    }
+
+    #[test]
+    fn registry_is_shareable_across_threads() {
+        let reg = std::sync::Arc::new(OracleRegistry::default_dir());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let reg = std::sync::Arc::clone(&reg);
+            handles.push(std::thread::spawn(move || {
+                let oracle = reg.get("relu").expect("relu.hlo.txt is checked in");
+                let x = Tensor::from_vec(vec![-1.0; 1024 * 4096]);
+                // full-shape run in every thread: exercises concurrent use
+                let x = x.reshape(&[1024, 4096]);
+                let out = oracle.run(&[&x]).unwrap();
+                assert!(out[0].data.iter().all(|&v| v == 0.0));
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
     }
 }

@@ -1,6 +1,6 @@
 //! Dense host tensors used throughout the pipeline: benchmark inputs,
-//! simulator global memory, reference outputs, and PJRT literals all share
-//! this representation.
+//! simulator global memory, reference outputs, and the HLO interpreter's
+//! values all share this representation.
 //!
 //! Data is always stored as `f32` regardless of the logical `DType`; the
 //! logical dtype is what the AscendC validator and the DSL type checker

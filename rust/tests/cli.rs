@@ -55,3 +55,31 @@ fn unknown_command_exits_2() {
     let out = bin().arg("bogus").output().expect("run");
     assert_eq!(out.status.code(), Some(2));
 }
+
+#[test]
+fn oracle_softmax_runs_the_checked_in_fixture() {
+    // acceptance criterion: the checked-in HLO fixture executes through
+    // the interpreter and agrees with the Rust reference
+    let out = bin().args(["oracle", "--op", "softmax"]).output().expect("run oracle");
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        out.status.success(),
+        "oracle --op softmax failed:\n{text}\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(text.contains("golden == rust reference"), "{text}");
+}
+
+#[test]
+fn oracle_gelu_runs_the_checked_in_fixture() {
+    let out = bin().args(["oracle", "--op", "gelu"]).output().expect("run oracle");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stdout));
+}
+
+#[test]
+fn oracle_unknown_op_fails_loudly() {
+    let out = bin().args(["oracle", "--op", "no_such_op"]).output().expect("run oracle");
+    assert_eq!(out.status.code(), Some(1));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("NO ARTIFACT"), "{text}");
+}

@@ -1,86 +1,86 @@
-//! Cross-layer integration: the JAX/Pallas golden oracles (L2/L1, loaded
-//! through the PJRT runtime) must agree with the Rust references (L3) on
-//! every artifact built by `make artifacts`.
+//! Cross-layer integration: the JAX golden oracles (L2, HLO text executed
+//! by the self-contained `runtime::hlo` interpreter) must agree with the
+//! Rust references (L3) on every checked-in artifact.
 //!
-//! These tests skip gracefully when artifacts/ has not been built, so
-//! `cargo test` stays self-contained; CI runs `make test` which builds
-//! artifacts first.
+//! The fixtures under `artifacts/` are committed to the repository, so
+//! these tests run on every plain `cargo test` — there is no skip path.
+//! `make artifacts` regenerates them from `python/compile/aot.py` when a
+//! JAX toolchain is available.
 
 use ascendcraft::bench_suite::tasks::task_by_name;
-use ascendcraft::mhc::{self, MhcDims};
+use ascendcraft::coordinator::service::cross_check_suite;
+use ascendcraft::mhc;
 use ascendcraft::runtime::OracleRegistry;
 use ascendcraft::util::compare::allclose_report;
 
-fn registry() -> Option<OracleRegistry> {
+fn registry() -> OracleRegistry {
     let reg = OracleRegistry::default_dir();
-    if reg.list().is_empty() {
-        eprintln!("skipping golden-oracle tests: run `make artifacts`");
-        None
-    } else {
-        Some(reg)
-    }
+    assert!(
+        !reg.list().is_empty(),
+        "artifacts/ is empty — the HLO fixtures are checked in; restore them or run `make artifacts`"
+    );
+    reg
 }
 
 #[test]
 fn all_benchmark_artifacts_match_rust_references() {
-    let Some(reg) = registry() else { return };
-    let mut checked = 0;
-    for name in reg.list() {
-        let Some(task) = task_by_name(&name) else { continue };
-        let oracle = reg.get(&name).unwrap_or_else(|e| panic!("{name}: {e}"));
-        let inputs = task.make_inputs(20260710);
+    let reg = registry();
+    let tasks: Vec<_> = reg.list().iter().filter_map(|n| task_by_name(n)).collect();
+    assert!(
+        tasks.len() >= 10,
+        "expected at least 10 benchmark-task artifacts, found {} ({:?})",
+        tasks.len(),
+        reg.list()
+    );
+    // parallel cross-check through the worker pool: the Send + Sync
+    // interpreter-backed oracle is shared by all workers
+    let checks = cross_check_suite(&tasks, &reg, 8, 20260710);
+    for c in &checks {
+        assert!(c.checked, "{}: artifact disappeared mid-test", c.name);
+        assert!(c.ok, "{}: {}", c.name, c.detail);
+    }
+}
+
+#[test]
+fn softmax_and_gelu_fixtures_are_always_present() {
+    // the two fixtures the acceptance criteria name explicitly: their
+    // absence must fail the build rather than skip
+    let reg = registry();
+    for name in ["softmax", "gelu"] {
+        assert!(reg.available(name), "checked-in fixture artifacts/{name}.hlo.txt is missing");
+        let task = task_by_name(name).unwrap();
+        let inputs = task.make_inputs(7);
         let ins: Vec<_> = task.inputs.iter().map(|(n, _, _)| &inputs[*n]).collect();
         let want = task.reference(&inputs);
-        let got = oracle.run(&ins).unwrap_or_else(|e| panic!("{name}: {e}"));
-        // multi-output ops (adam) return tuples in task-output order
-        for (i, (out_name, _)) in task.outputs.iter().enumerate() {
-            let rep = allclose_report(&got[i], &want[*out_name], 2e-3, 2e-4);
-            assert!(rep.ok, "{name}/{out_name}: {}", rep.summary());
-        }
-        checked += 1;
+        let got = reg.get(name).unwrap().run(&ins).unwrap();
+        let rep = allclose_report(&got[0], &want[task.outputs[0].0], 2e-3, 2e-4);
+        assert!(rep.ok, "{name}: {}", rep.summary());
     }
-    assert!(checked >= 10, "expected at least 10 benchmark artifacts, saw {checked}");
 }
 
 #[test]
-fn pallas_mhc_post_oracle_matches_rust_reference() {
-    let Some(reg) = registry() else { return };
-    if !reg.available("mhc_post") {
-        return;
-    }
-    let dims = MhcDims::default();
-    let inputs = mhc::make_inputs(&dims, 9, false);
-    let want = mhc::reference::post_reference(&dims, &inputs);
-    let oracle = reg.get("mhc_post").unwrap();
-    let got = oracle.run(&[&inputs["h"], &inputs["w"], &inputs["g"]]).unwrap();
-    let rep = allclose_report(&got[0], &want, 1e-3, 1e-4);
-    assert!(rep.ok, "{}", rep.summary());
+fn mhc_post_oracle_matches_rust_reference() {
+    let reg = registry();
+    assert!(reg.available("mhc_post"), "checked-in fixture artifacts/mhc_post.hlo.txt is missing");
+    mhc::golden_cross_check(&reg, "mhc_post", 9, 1e-3, 1e-4).unwrap();
 }
 
 #[test]
-fn pallas_mhc_grad_oracle_matches_rust_reference() {
-    let Some(reg) = registry() else { return };
-    if !reg.available("mhc_post_grad") {
-        return;
-    }
-    let dims = MhcDims::default();
-    let inputs = mhc::make_inputs(&dims, 9, true);
-    let want = mhc::reference::post_grad_reference(&dims, &inputs);
-    let oracle = reg.get("mhc_post_grad").unwrap();
-    let got = oracle
-        .run(&[&inputs["h"], &inputs["w"], &inputs["g"], &inputs["dy"]])
-        .unwrap();
-    let rep = allclose_report(&got[0], &want, 1e-3, 1e-4);
-    assert!(rep.ok, "{}", rep.summary());
+fn mhc_grad_oracle_matches_rust_reference() {
+    let reg = registry();
+    assert!(
+        reg.available("mhc_post_grad"),
+        "checked-in fixture artifacts/mhc_post_grad.hlo.txt is missing"
+    );
+    mhc::golden_cross_check(&reg, "mhc_post_grad", 9, 1e-3, 1e-4).unwrap();
 }
 
 #[test]
-fn simulated_kernel_matches_pjrt_golden_not_just_rust_reference() {
-    // close the triangle: generated-kernel-on-simulator == PJRT golden
-    let Some(reg) = registry() else { return };
-    if !reg.available("softmax") {
-        return;
-    }
+fn simulated_kernel_matches_golden_not_just_rust_reference() {
+    // close the triangle: generated-kernel-on-simulator == interpreted
+    // JAX golden, not merely == the Rust reference both were checked
+    // against separately
+    let reg = registry();
     let task = task_by_name("softmax").unwrap();
     let art = ascendcraft::coordinator::pipeline::run_task(
         &task,
@@ -88,10 +88,11 @@ fn simulated_kernel_matches_pjrt_golden_not_just_rust_reference() {
     );
     assert!(art.result.correct);
     // re-simulate to get the outputs
-    let inputs = task.make_inputs(ascendcraft::coordinator::pipeline::PipelineConfig::default().seed);
+    let inputs =
+        task.make_inputs(ascendcraft::coordinator::pipeline::PipelineConfig::default().seed);
     let sim = ascendcraft::sim::simulate(&art.program.unwrap(), &inputs).unwrap();
     let oracle = reg.get("softmax").unwrap();
     let golden = oracle.run(&[&inputs["x"]]).unwrap();
     let rep = allclose_report(&sim.tensors["y"], &golden[0], 1e-3, 1e-4);
-    assert!(rep.ok, "simulator vs PJRT golden: {}", rep.summary());
+    assert!(rep.ok, "simulator vs interpreted golden: {}", rep.summary());
 }
