@@ -10,13 +10,21 @@
 //! Run: `cargo run --release --example multikernelbench`
 
 use ascendcraft::bench_suite::tasks::all_tasks;
-use ascendcraft::coordinator::service::{cross_check_suite, run_suite, SuiteConfig};
+use ascendcraft::coordinator::service::{run_suite, SuiteConfig};
 use ascendcraft::runtime::OracleRegistry;
+use std::sync::Arc;
 
 fn main() {
     let tasks = all_tasks();
     println!("running {} tasks on {} workers ...", tasks.len(), SuiteConfig::default().workers);
-    let cfg = SuiteConfig { verbose: true, ..Default::default() };
+    // the golden L2<->L3 cross-check runs inside the suite itself: each
+    // worker checks its task against the compiled HLO oracle right after
+    // the pipeline run (SuiteConfig::golden / `ascendcraft suite --golden`)
+    let cfg = SuiteConfig {
+        verbose: true,
+        golden: Some(Arc::new(OracleRegistry::default_dir())),
+        ..Default::default()
+    };
     let started = std::time::Instant::now();
     let suite = run_suite(&tasks, &cfg);
     println!("\nsuite wall-clock: {:.1}s", started.elapsed().as_secs_f64());
@@ -24,26 +32,16 @@ fn main() {
     println!("\n{}", suite.render_table1());
     println!("{}", suite.render_table2());
 
-    // cross-check the rust references against the JAX golden oracles
-    // for every artifact that exists (L2 <-> L3 agreement)
-    let reg = OracleRegistry::default_dir();
-    let artifact_names = reg.list();
-    if artifact_names.is_empty() {
-        println!("(no artifacts/ — restore the checked-in fixtures or run `make artifacts`)");
-    } else {
-        println!("golden cross-check ({} artifacts):", artifact_names.len());
-        let oracle_tasks: Vec<_> = tasks
-            .iter()
-            .filter(|t| artifact_names.iter().any(|n| n == t.name))
-            .cloned()
-            .collect();
-        let checks = cross_check_suite(&oracle_tasks, &reg, cfg.workers, 77);
-        for c in &checks {
-            println!("  {:<14} {}", c.name, if c.ok { "ok" } else { "MISMATCH" });
-            assert!(c.ok, "{}: {}", c.name, c.detail);
-        }
-        println!("  ({} oracles agree with the rust references)", checks.len());
+    println!(
+        "golden cross-check: {} artifacts checked in-suite, {} failed",
+        suite.golden_checked(),
+        suite.golden_failures().len()
+    );
+    for r in suite.golden_failures() {
+        let g = r.golden.as_ref().unwrap();
+        println!("  {:<14} MISMATCH: {}", r.name, g.detail);
     }
+    assert!(suite.golden_failures().is_empty(), "L2<->L3 golden cross-check failed");
 
     // persist the per-task report
     let json = suite.to_json().to_pretty();

@@ -99,6 +99,19 @@ def sum_dim(x):
     return (jnp.sum(x, axis=-1),)
 
 
+def huber_loss(pred, target):
+    # matches the Rust reference: d < 1.0 -> 0.5*d*d, else d - 0.5
+    d = jnp.abs(pred - target)
+    ew = jnp.where(d < 1.0, 0.5 * d * d, d - 0.5)
+    return (jnp.mean(ew).reshape(1),)
+
+
+def maxpool2d(x):
+    # [batch, h, w], window 3, stride 3, VALID — lowers to reduce-window,
+    # exercising the interpreter's generic windowed-reduction path
+    return (jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 3, 3), (1, 3, 3), "VALID"),)
+
+
 def mhc_post(h, w, g):
     return (kref.mhc_post_ref(h, w, g),)
 
@@ -125,6 +138,8 @@ OPS = {
     "rmsnorm": (rmsnorm, [_f32(*ROWS), _f32(ROWS[1])]),
     "adam": (adam, [_f32(4 * 1024 * 1024)] * 4),
     "mse_loss": (mse_loss, [_f32(*EW), _f32(*EW)]),
+    "huber_loss": (huber_loss, [_f32(*EW), _f32(*EW)]),
+    "maxpool2d": (maxpool2d, [_f32(64, 96, 96)]),
     "cumsum": (cumsum, [_f32(512, 2048)]),
     "logsumexp": (logsumexp, [_f32(512, 2048)]),
     "sum_dim": (sum_dim, [_f32(1024, 4096)]),

@@ -11,8 +11,10 @@ use ascendcraft::bench_suite::tasks::task_by_name;
 use ascendcraft::coordinator::pipeline::{run_task, PipelineConfig};
 use ascendcraft::coordinator::service::{run_suite, SuiteConfig};
 use ascendcraft::dsl;
+use ascendcraft::runtime::hlo::{evaluate, parse_module, ExecutablePlan, PlanOptions, PlanScratch};
 use ascendcraft::synth::{templates::KnowledgeBaseSynthesizer, Generator};
 use ascendcraft::transpile::{transpile, TranspileOptions};
+use ascendcraft::util::tensor::Tensor;
 use std::time::Instant;
 
 fn time<T>(label: &str, iters: usize, mut f: impl FnMut() -> T) -> f64 {
@@ -29,6 +31,54 @@ fn time<T>(label: &str, iters: usize, mut f: impl FnMut() -> T) -> f64 {
 
 fn main() {
     println!("hot-path microbenchmarks (release, single thread unless noted):\n");
+
+    // 0. oracle group: the compile-once/execute-many HLO plan vs the
+    // retired tree-walking evaluator, on checked-in fixtures. The
+    // acceptance bar for the plan refactor is >= 2x end-to-end.
+    println!("oracle (golden HLO execution, checked-in fixtures):");
+    for name in ["relu", "softmax", "mse_loss"] {
+        let path = format!("{}/../artifacts/{name}.hlo.txt", env!("CARGO_MANIFEST_DIR"));
+        let text = std::fs::read_to_string(&path).expect("checked-in fixture");
+        let module = parse_module(&text).unwrap();
+        let task = task_by_name(name).unwrap();
+        let inputs = task.make_inputs(7);
+        let ins: Vec<&Tensor> = task.inputs.iter().map(|(n, _, _)| &inputs[*n]).collect();
+
+        time(&format!("oracle[{name}]: plan compile"), 50, || {
+            ExecutablePlan::compile(&module).unwrap()
+        });
+        let plan = ExecutablePlan::compile(&module).unwrap();
+        let plan_noarena =
+            ExecutablePlan::compile_with(&module, PlanOptions { reuse_buffers: false }).unwrap();
+
+        // sanity: identical numerics before timing anything
+        let want = evaluate(&module, &ins).unwrap();
+        let got = plan.execute(&ins).unwrap();
+        assert_eq!(want.len(), got.len());
+        for (w, g) in want.iter().zip(&got) {
+            assert!(
+                ascendcraft::util::compare::allclose(g, w, 0.0, 0.0),
+                "{name}: plan diverged from evaluator"
+            );
+        }
+
+        let t_eval = time(&format!("oracle[{name}]: tree-walk evaluate"), 5, || {
+            evaluate(&module, &ins).unwrap()
+        });
+        let t_noarena = time(&format!("oracle[{name}]: plan execute (arena off)"), 5, || {
+            plan_noarena.execute(&ins).unwrap()
+        });
+        let mut scratch = PlanScratch::default();
+        let t_plan = time(&format!("oracle[{name}]: plan execute (arena on)"), 5, || {
+            plan.execute_with_scratch(&ins, &mut scratch).unwrap()
+        });
+        println!(
+            "{:<46} {:>9.2}x (arena) / {:.2}x (no arena)\n",
+            "  -> plan speedup vs tree-walker",
+            t_eval / t_plan,
+            t_eval / t_noarena
+        );
+    }
 
     // 1. simulator throughput on a bandwidth-bound elementwise kernel
     let relu = task_by_name("relu").unwrap();

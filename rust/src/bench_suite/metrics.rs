@@ -11,6 +11,18 @@ use super::spec::Category;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 
+/// Outcome of the L2↔L3 golden cross-check that `run_suite` performs per
+/// task when `SuiteConfig::golden` is set: the JAX golden oracle (HLO
+/// executed by the compiled plan) compared against the Rust reference.
+#[derive(Clone, Debug)]
+pub struct GoldenStatus {
+    /// An artifact existed and was executed (false = vacuous pass).
+    pub checked: bool,
+    /// Oracle and Rust reference agreed within tolerance.
+    pub ok: bool,
+    pub detail: String,
+}
+
 /// Outcome of one task through the full pipeline.
 #[derive(Clone, Debug)]
 pub struct TaskResult {
@@ -28,6 +40,8 @@ pub struct TaskResult {
     pub repair_rounds: usize,
     /// Wall-clock seconds the pipeline spent on this task.
     pub pipeline_secs: f64,
+    /// Golden cross-check outcome (None when the suite ran without it).
+    pub golden: Option<GoldenStatus>,
 }
 
 impl TaskResult {
@@ -62,6 +76,11 @@ impl TaskResult {
         };
         if let Some(f) = &self.failure {
             j.set("failure", f.as_str());
+        }
+        if let Some(g) = &self.golden {
+            let mut gj = Json::obj();
+            gj.set("checked", g.checked).set("ok", g.ok).set("detail", g.detail.as_str());
+            j.set("golden", gj);
         }
         j
     }
@@ -149,6 +168,22 @@ impl SuiteResult {
         Metrics::from_results(self.results.iter())
     }
 
+    /// Number of tasks whose golden cross-check executed an artifact.
+    pub fn golden_checked(&self) -> usize {
+        self.results
+            .iter()
+            .filter(|r| r.golden.as_ref().map_or(false, |g| g.checked))
+            .count()
+    }
+
+    /// Tasks whose golden cross-check ran and failed.
+    pub fn golden_failures(&self) -> Vec<&TaskResult> {
+        self.results
+            .iter()
+            .filter(|r| r.golden.as_ref().map_or(false, |g| g.checked && !g.ok))
+            .collect()
+    }
+
     /// Render Table 1 (correctness by category) as aligned text.
     pub fn render_table1(&self) -> String {
         let mut s = String::new();
@@ -234,7 +269,23 @@ mod tests {
             failure: None,
             repair_rounds: 0,
             pipeline_secs: 0.0,
+            golden: None,
         }
+    }
+
+    #[test]
+    fn golden_summary_counts_checked_and_failed() {
+        let mut a = result(Category::Loss, true, true, Some(1.0), 1.0);
+        a.golden = Some(GoldenStatus { checked: true, ok: true, detail: "ok".into() });
+        let mut b = result(Category::Loss, true, true, Some(1.0), 1.0);
+        b.golden = Some(GoldenStatus { checked: true, ok: false, detail: "drift".into() });
+        let mut c = result(Category::Loss, true, true, Some(1.0), 1.0);
+        c.golden = Some(GoldenStatus { checked: false, ok: true, detail: "no artifact".into() });
+        let d = result(Category::Loss, true, true, Some(1.0), 1.0);
+        let s = SuiteResult { results: vec![a, b, c, d] };
+        assert_eq!(s.golden_checked(), 2);
+        assert_eq!(s.golden_failures().len(), 1);
+        assert!(s.to_json().to_string().contains("\"golden\""));
     }
 
     #[test]

@@ -78,6 +78,7 @@ pub fn run_task(task: &TaskSpec, cfg: &PipelineConfig) -> PipelineArtifacts {
             failure: Some(msg),
             repair_rounds: rounds,
             pipeline_secs: started.elapsed().as_secs_f64(),
+            golden: None,
         },
         dsl_source: dsl,
         program: None,
@@ -223,6 +224,10 @@ pub fn run_task(task: &TaskSpec, cfg: &PipelineConfig) -> PipelineArtifacts {
             failure,
             repair_rounds: rounds,
             pipeline_secs: started.elapsed().as_secs_f64(),
+            // the golden (L2) cross-check is a suite-level concern: the
+            // worker in `coordinator::service::run_suite` fills this in
+            // when `SuiteConfig::golden` is set
+            golden: None,
         },
         dsl_source,
         program: Some(program),

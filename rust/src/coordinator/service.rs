@@ -5,7 +5,7 @@
 //! the offline crate set; generation jobs are CPU-bound anyway).
 
 use super::pipeline::{run_task, PipelineArtifacts, PipelineConfig};
-use crate::bench_suite::metrics::SuiteResult;
+use crate::bench_suite::metrics::{GoldenStatus, SuiteResult};
 use crate::bench_suite::spec::TaskSpec;
 use crate::runtime::OracleRegistry;
 use crate::util::compare::allclose_report;
@@ -13,12 +13,17 @@ use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
 /// Suite-run configuration.
-#[derive(Clone, Debug)]
+#[derive(Clone)]
 pub struct SuiteConfig {
     pub pipeline: PipelineConfig,
     pub workers: usize,
     /// Print one line per finished task.
     pub verbose: bool,
+    /// When set, each worker cross-checks the task's Rust reference (L3)
+    /// against the golden oracle (L2) from this registry right after the
+    /// pipeline run, filling `TaskResult::golden`. The registry is shared:
+    /// oracles load and compile once, then execute on every worker.
+    pub golden: Option<Arc<OracleRegistry>>,
 }
 
 impl Default for SuiteConfig {
@@ -27,6 +32,7 @@ impl Default for SuiteConfig {
             pipeline: PipelineConfig::default(),
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
             verbose: false,
+            golden: None,
         }
     }
 }
@@ -49,6 +55,7 @@ pub fn run_suite_artifacts(tasks: &[TaskSpec], cfg: &SuiteConfig) -> Vec<Pipelin
             let tx = tx.clone();
             let pipeline = cfg.pipeline.clone();
             let verbose = cfg.verbose;
+            let golden = cfg.golden.clone();
             scope.spawn(move || loop {
                 let idx = {
                     let mut guard = next.lock().unwrap();
@@ -59,7 +66,13 @@ pub fn run_suite_artifacts(tasks: &[TaskSpec], cfg: &SuiteConfig) -> Vec<Pipelin
                     *guard += 1;
                     i
                 };
-                let art = run_task(&tasks[idx], &pipeline);
+                let mut art = run_task(&tasks[idx], &pipeline);
+                if let Some(reg) = &golden {
+                    // the L2↔L3 cross-check shards across the same worker
+                    // pool as the pipeline runs (the compiled, Send + Sync
+                    // oracle is shared by all workers)
+                    art.result.golden = Some(cross_check_task(&tasks[idx], reg, pipeline.seed));
+                }
                 if verbose {
                     let r = &art.result;
                     let status = if r.correct {
@@ -69,8 +82,13 @@ pub fn run_suite_artifacts(tasks: &[TaskSpec], cfg: &SuiteConfig) -> Vec<Pipelin
                     } else {
                         "NOCOMPILE ".to_string()
                     };
+                    let golden_note = match &r.golden {
+                        Some(g) if g.checked && !g.ok => "  golden:FAIL",
+                        Some(g) if g.checked => "  golden:ok",
+                        _ => "",
+                    };
                     eprintln!(
-                        "[{:>2}/{n}] {:<18} {status}  ({} repairs, {:.2}s)",
+                        "[{:>2}/{n}] {:<18} {status}  ({} repairs, {:.2}s){golden_note}",
                         idx + 1,
                         r.name,
                         r.repair_rounds,
@@ -89,33 +107,22 @@ pub fn run_suite_artifacts(tasks: &[TaskSpec], cfg: &SuiteConfig) -> Vec<Pipelin
     })
 }
 
-/// Outcome of cross-checking one task's Rust reference (L3) against the
-/// JAX golden oracle (L2) executed by the HLO interpreter.
-#[derive(Clone, Debug)]
-pub struct GoldenCheck {
-    pub name: String,
-    /// An artifact existed and was executed.
-    pub checked: bool,
-    /// Oracle and Rust reference agreed within tolerance (vacuously true
-    /// when no artifact exists).
-    pub ok: bool,
-    pub detail: String,
-}
-
 /// Cross-check every task that has a golden artifact against the Rust
-/// reference, in parallel on the worker pool. The registry is shared by
-/// all workers — the `Send + Sync` oracle (interpreter-backed, no
-/// thread-local PJRT client) is what makes this possible. Results come
-/// back in task order.
+/// reference, in parallel on the worker pool, WITHOUT running the
+/// generation pipeline. This is the standalone path behind
+/// `ascendcraft oracle`; suite runs get the same check per task via
+/// `SuiteConfig::golden` inside [`run_suite`]. The registry is shared by
+/// all workers — the `Send + Sync` plan-backed oracle is what makes this
+/// possible. Results come back in task order (zip with `tasks` for names).
 pub fn cross_check_suite(
     tasks: &[TaskSpec],
     reg: &OracleRegistry,
     workers: usize,
     seed: u64,
-) -> Vec<GoldenCheck> {
+) -> Vec<GoldenStatus> {
     let n = tasks.len();
     let next = Arc::new(Mutex::new(0usize));
-    let (tx, rx) = mpsc::channel::<(usize, GoldenCheck)>();
+    let (tx, rx) = mpsc::channel::<(usize, GoldenStatus)>();
     std::thread::scope(|scope| {
         for _ in 0..workers.max(1).min(n.max(1)) {
             let next = Arc::clone(&next);
@@ -134,7 +141,7 @@ pub fn cross_check_suite(
             });
         }
         drop(tx);
-        let mut out: Vec<Option<GoldenCheck>> = (0..n).map(|_| None).collect();
+        let mut out: Vec<Option<GoldenStatus>> = (0..n).map(|_| None).collect();
         for (idx, check) in rx {
             out[idx] = Some(check);
         }
@@ -143,25 +150,16 @@ pub fn cross_check_suite(
 }
 
 /// Cross-check a single task against its golden artifact (if present).
-pub fn cross_check_task(task: &TaskSpec, reg: &OracleRegistry, seed: u64) -> GoldenCheck {
+/// The one shared implementation behind both the in-suite golden field
+/// and the standalone `ascendcraft oracle` path.
+pub fn cross_check_task(task: &TaskSpec, reg: &OracleRegistry, seed: u64) -> GoldenStatus {
+    let fail = |detail: String| GoldenStatus { checked: true, ok: false, detail };
     if !reg.available(task.name) {
-        return GoldenCheck {
-            name: task.name.to_string(),
-            checked: false,
-            ok: true,
-            detail: "no artifact".to_string(),
-        };
+        return GoldenStatus { checked: false, ok: true, detail: "no artifact".to_string() };
     }
     let oracle = match reg.get(task.name) {
         Ok(o) => o,
-        Err(e) => {
-            return GoldenCheck {
-                name: task.name.to_string(),
-                checked: true,
-                ok: false,
-                detail: format!("load failed: {e}"),
-            }
-        }
+        Err(e) => return fail(format!("load failed: {e}")),
     };
     let inputs = task.make_inputs(seed);
     let ins: Vec<&crate::util::tensor::Tensor> =
@@ -169,41 +167,23 @@ pub fn cross_check_task(task: &TaskSpec, reg: &OracleRegistry, seed: u64) -> Gol
     let want = task.reference(&inputs);
     let got = match oracle.run(&ins) {
         Ok(g) => g,
-        Err(e) => {
-            return GoldenCheck {
-                name: task.name.to_string(),
-                checked: true,
-                ok: false,
-                detail: format!("exec failed: {e}"),
-            }
-        }
+        Err(e) => return fail(format!("exec failed: {e}")),
     };
     if got.len() < task.outputs.len() {
-        return GoldenCheck {
-            name: task.name.to_string(),
-            checked: true,
-            ok: false,
-            detail: format!("oracle returned {} outputs, task has {}", got.len(), task.outputs.len()),
-        };
+        return fail(format!(
+            "oracle returned {} outputs, task has {}",
+            got.len(),
+            task.outputs.len()
+        ));
     }
     // multi-output ops (adam) return tuples in task-output order
     for (i, (out_name, _)) in task.outputs.iter().enumerate() {
         let rep = allclose_report(&got[i], &want[*out_name], 2e-3, 2e-4);
         if !rep.ok {
-            return GoldenCheck {
-                name: task.name.to_string(),
-                checked: true,
-                ok: false,
-                detail: format!("{out_name}: {}", rep.summary()),
-            };
+            return fail(format!("{out_name}: {}", rep.summary()));
         }
     }
-    GoldenCheck {
-        name: task.name.to_string(),
-        checked: true,
-        ok: true,
-        detail: "golden == rust reference".to_string(),
-    }
+    GoldenStatus { checked: true, ok: true, detail: "golden == rust reference".to_string() }
 }
 
 #[cfg(test)]
@@ -227,6 +207,34 @@ mod tests {
     }
 
     #[test]
+    fn run_suite_with_golden_fills_task_results() {
+        let tasks: Vec<_> =
+            ["relu", "softsign"].iter().map(|n| task_by_name(n).unwrap()).collect();
+        let cfg = SuiteConfig {
+            workers: 2,
+            golden: Some(Arc::new(OracleRegistry::default_dir())),
+            ..Default::default()
+        };
+        let suite = run_suite(&tasks, &cfg);
+        // relu has a checked-in artifact; softsign does not (vacuous pass)
+        let relu = &suite.results[0];
+        let g = relu.golden.as_ref().expect("golden ran in-suite");
+        assert!(g.checked && g.ok, "relu golden: {}", g.detail);
+        let softsign = &suite.results[1];
+        let g = softsign.golden.as_ref().expect("golden ran in-suite");
+        assert!(!g.checked && g.ok, "softsign golden: {}", g.detail);
+        assert_eq!(suite.golden_checked(), 1);
+        assert!(suite.golden_failures().is_empty());
+    }
+
+    #[test]
+    fn run_suite_without_golden_leaves_results_unset() {
+        let tasks = [task_by_name("relu").unwrap()];
+        let suite = run_suite(&tasks, &SuiteConfig::default());
+        assert!(suite.results[0].golden.is_none());
+    }
+
+    #[test]
     fn cross_check_runs_in_parallel_against_fixtures() {
         let reg = OracleRegistry::default_dir();
         let tasks: Vec<_> = ["relu", "sigmoid", "tanh_act", "softmax"]
@@ -235,9 +243,9 @@ mod tests {
             .collect();
         let checks = cross_check_suite(&tasks, &reg, 4, 4242);
         assert_eq!(checks.len(), 4);
-        for c in &checks {
-            assert!(c.checked, "{}: artifact missing", c.name);
-            assert!(c.ok, "{}: {}", c.name, c.detail);
+        for (t, c) in tasks.iter().zip(&checks) {
+            assert!(c.checked, "{}: artifact missing", t.name);
+            assert!(c.ok, "{}: {}", t.name, c.detail);
         }
     }
 

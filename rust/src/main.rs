@@ -78,9 +78,18 @@ fn cmd_suite(args: &[String]) -> i32 {
             return 2;
         }
     };
+    let golden = has_flag(args, "--golden");
     let mut cfg = SuiteConfig {
         pipeline: PipelineConfig { mode, ..Default::default() },
         verbose: !has_flag(args, "--quiet"),
+        // --golden folds the L2↔L3 cross-check into the suite run itself:
+        // each worker checks its task right after the pipeline, sharing
+        // one compiled-oracle registry across the pool
+        golden: if golden {
+            Some(std::sync::Arc::new(OracleRegistry::default_dir()))
+        } else {
+            None
+        },
         ..Default::default()
     };
     if let Some(w) = flag_value(args, "--workers").and_then(|v| v.parse().ok()) {
@@ -97,14 +106,17 @@ fn cmd_suite(args: &[String]) -> i32 {
         }
         println!("wrote {path}");
     }
-    if has_flag(args, "--golden") {
-        let reg = OracleRegistry::default_dir();
-        let checks = cross_check_suite(&tasks, &reg, cfg.workers, 1234);
-        let checked = checks.iter().filter(|c| c.checked).count();
-        let failed: Vec<_> = checks.iter().filter(|c| c.checked && !c.ok).collect();
-        println!("golden cross-check: {checked} artifacts checked, {} failed", failed.len());
-        for c in &failed {
-            println!("  {:<18} {}", c.name, c.detail);
+    if golden {
+        let failed = suite.golden_failures();
+        println!(
+            "golden cross-check: {} artifacts checked, {} failed",
+            suite.golden_checked(),
+            failed.len()
+        );
+        for r in &failed {
+            if let Some(g) = &r.golden {
+                println!("  {:<18} {}", r.name, g.detail);
+            }
         }
         if !failed.is_empty() {
             return 1;
@@ -210,11 +222,11 @@ fn cmd_oracle(args: &[String]) -> i32 {
 
     // benchmark-task artifacts cross-check in parallel on the worker pool
     let tasks: Vec<TaskSpec> = present.iter().filter_map(|n| task_by_name(n)).collect();
-    for c in cross_check_suite(&tasks, &reg, workers, 1234) {
+    for (t, c) in tasks.iter().zip(cross_check_suite(&tasks, &reg, workers, 1234)) {
         if c.ok {
-            println!("  {:<18} {}", c.name, c.detail);
+            println!("  {:<18} {}", t.name, c.detail);
         } else {
-            println!("  {:<18} MISMATCH\n    {}", c.name, c.detail);
+            println!("  {:<18} MISMATCH\n    {}", t.name, c.detail);
             failures += 1;
         }
     }

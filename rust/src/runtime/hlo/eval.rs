@@ -1,4 +1,9 @@
-//! Evaluator for parsed HLO modules over [`Tensor`] values.
+//! Reference tree-walking evaluator for parsed HLO modules over [`Tensor`]
+//! values. The production oracle path compiles modules once into
+//! [`super::plan::ExecutablePlan`]; this evaluator defines the reference
+//! semantics the plan must reproduce bit-for-bit (see
+//! `rust/tests/plan_differential.rs`) and serves as the fallback for
+//! modules outside the plan compiler's op set.
 //!
 //! The op set is the dense-arithmetic subset the `python/compile/model.py`
 //! manifest lowers to: elementwise arithmetic, `broadcast`/`reshape`/

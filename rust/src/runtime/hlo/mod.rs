@@ -11,12 +11,18 @@
 //!   per line);
 //! * [`parser`] — [`parser::Module`] / [`parser::Computation`] /
 //!   [`parser::Instr`] with operands resolved to indices at parse time;
-//! * [`eval`] — executes a module's ENTRY computation over
-//!   [`crate::util::tensor::Tensor`] inputs.
+//! * [`plan`] — compiles a module once into an [`plan::ExecutablePlan`]
+//!   (call inlining, elementwise fusion, combiner resolution, buffer
+//!   arena) that executes many times; this is the production oracle path;
+//! * [`eval`] — the reference tree-walking evaluator, kept as the
+//!   differential-testing baseline and as a fallback for modules outside
+//!   the plan compiler's op set.
 
 pub mod eval;
 pub mod lexer;
 pub mod parser;
+pub mod plan;
 
 pub use eval::evaluate;
 pub use parser::{parse_module, Module, ParseError};
+pub use plan::{ExecutablePlan, PlanOptions, PlanScratch};

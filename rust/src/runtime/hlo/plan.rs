@@ -1,0 +1,1770 @@
+//! Compile-once / execute-many plans for HLO modules.
+//!
+//! [`ExecutablePlan::compile`] turns a parsed [`Module`] into a flat step
+//! program, doing all per-module work up front so repeated executions (the
+//! oracle runs once per suite task per seed) pay none of it:
+//!
+//! * **call inlining** — `call` instructions are flattened into the caller,
+//!   so execution is a single linear sweep (the parser's topological order
+//!   is preserved);
+//! * **elementwise fusion** — chains of single-use elementwise instructions
+//!   (arithmetic, compare/select, reshape/copy/convert, scalar broadcasts)
+//!   collapse into one [`Step::Fused`] expression evaluated in cache-sized
+//!   chunks: intermediates live in L1-resident scratch instead of
+//!   full-tensor allocations;
+//! * **combiner resolution** — `reduce`/`reduce-window` combiner
+//!   computations resolve to a static [`Combiner`] at compile time (exotic
+//!   combiners compile to a scalar expression; nothing is re-interpreted
+//!   per element);
+//! * **buffer arena** — last-use liveness analysis assigns instruction
+//!   outputs to recycled arena slots, so executing a module allocates a
+//!   handful of buffers instead of one per instruction. A step's output
+//!   slot is acquired *before* its operands' slots are released, so an
+//!   output can never alias a live operand.
+//!
+//! Numerics are bit-identical to the [`super::eval`] tree-walker: the same
+//! scalar operations in the same accumulation widths and orders. The
+//! tree-walker intentionally keeps its own hand-rolled loops (an
+//! *independent* baseline rather than a consumer of
+//! [`crate::util::kernels`]), so the invariant is enforced by
+//! `rust/tests/plan_differential.rs` — randomized programs plus every
+//! checked-in fixture, compared bit-for-bit — not by code sharing. The
+//! tree-walker also serves as the fallback for modules outside the plan
+//! compiler's scope.
+
+use super::parser::{CmpDir, Instr, Module, Opcode};
+use crate::util::kernels::{self, BinOp, CmpOp, UnaryOp};
+use crate::util::tensor::{DType, Tensor};
+
+/// Plan compilation knobs (the hotpath bench flips the arena off to
+/// measure what buffer recycling is worth).
+#[derive(Clone, Copy, Debug)]
+pub struct PlanOptions {
+    /// Recycle dead output buffers through a free list (the arena). When
+    /// false every step gets a private slot.
+    pub reuse_buffers: bool,
+}
+
+impl Default for PlanOptions {
+    fn default() -> PlanOptions {
+        PlanOptions { reuse_buffers: true }
+    }
+}
+
+/// Where a step input comes from. During compilation `Buf` holds a flat
+/// node id; [`ExecutablePlan::compile_with`] rewrites it to an arena slot
+/// id before the plan is returned.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Src {
+    /// Entry parameter `i` (borrowed from the caller).
+    Input(usize),
+    /// Compile-time constant tensor.
+    Const(usize),
+    /// Arena slot (node id pre-lowering).
+    Buf(usize),
+}
+
+/// A fused elementwise expression. Leaves are materialized sources; every
+/// interior op maps flat element `i` of its children to element `i` of the
+/// result, so the whole tree evaluates in one chunked pass.
+#[derive(Clone, Debug)]
+enum FExpr {
+    Leaf(Src),
+    /// Broadcast of a compile-time scalar.
+    Splat(f32),
+    /// Broadcast of a runtime scalar (element 0 of a materialized source).
+    SplatLeaf(Src),
+    Un(UnaryOp, Box<FExpr>),
+    Bin(BinOp, Box<FExpr>, Box<FExpr>),
+    Cmp(CmpOp, Box<FExpr>, Box<FExpr>),
+    /// select(cond, on_true, on_false).
+    Sel(Box<FExpr>, Box<FExpr>, Box<FExpr>),
+}
+
+/// A compiled scalar combiner expression over (accumulator, value).
+#[derive(Clone, Debug)]
+enum SExpr {
+    Acc,
+    Val,
+    Const(f32),
+    Un(UnaryOp, Box<SExpr>),
+    Bin(BinOp, Box<SExpr>, Box<SExpr>),
+    Cmp(CmpOp, Box<SExpr>, Box<SExpr>),
+    Sel(Box<SExpr>, Box<SExpr>, Box<SExpr>),
+}
+
+fn eval_sexpr(e: &SExpr, acc: f32, v: f32) -> f32 {
+    match e {
+        SExpr::Acc => acc,
+        SExpr::Val => v,
+        SExpr::Const(c) => *c,
+        SExpr::Un(op, a) => op.apply(eval_sexpr(a, acc, v)),
+        SExpr::Bin(op, a, b) => op.apply(eval_sexpr(a, acc, v), eval_sexpr(b, acc, v)),
+        SExpr::Cmp(op, a, b) => {
+            if op.apply(eval_sexpr(a, acc, v), eval_sexpr(b, acc, v)) {
+                1.0
+            } else {
+                0.0
+            }
+        }
+        SExpr::Sel(c, a, b) => {
+            if eval_sexpr(c, acc, v) != 0.0 {
+                eval_sexpr(a, acc, v)
+            } else {
+                eval_sexpr(b, acc, v)
+            }
+        }
+    }
+}
+
+/// Reduce / reduce-window combining function, resolved at compile time.
+#[derive(Clone, Debug)]
+enum Combiner {
+    Add,
+    Mul,
+    Max,
+    Min,
+    Generic(SExpr),
+}
+
+fn comb_apply(c: &Combiner, acc: f32, v: f32) -> f32 {
+    match c {
+        Combiner::Add => acc + v,
+        Combiner::Mul => acc * v,
+        Combiner::Max => acc.max(v),
+        Combiner::Min => acc.min(v),
+        Combiner::Generic(se) => eval_sexpr(se, acc, v),
+    }
+}
+
+/// A strided gather (one loop serves broadcast and transpose):
+/// `out[li] = src[Σ_d ((li / ostr[d]) % out_dims[d]) * sstr[d]]`.
+#[derive(Clone, Debug)]
+struct GatherSpec {
+    out_dims: Vec<usize>,
+    ostr: Vec<usize>,
+    sstr: Vec<usize>,
+    n: usize,
+}
+
+/// Shape plan for a `reduce` step.
+#[derive(Clone, Debug)]
+enum ReduceShape {
+    /// Reduced dims are exactly the trailing dims: contiguous rows.
+    Rows { rows: usize, cols: usize },
+    /// General scatter-accumulate; `kept` maps an input dim to its output
+    /// stride.
+    Scatter { in_dims: Vec<usize>, istr: Vec<usize>, kept: Vec<(usize, usize)>, out_n: usize },
+}
+
+/// One executable step. `out` is a flat node id during compilation and an
+/// arena slot id in the finished plan.
+#[derive(Clone, Debug)]
+enum Step {
+    Fused {
+        expr: FExpr,
+        out: usize,
+        n: usize,
+    },
+    Gather {
+        src: Src,
+        out: usize,
+        spec: GatherSpec,
+    },
+    Reduce {
+        src: Src,
+        init: Src,
+        out: usize,
+        comb: Combiner,
+        shape: ReduceShape,
+    },
+    /// Prefix-scan fast path of `reduce-window` (how XLA lowers cumsum).
+    Scan {
+        src: Src,
+        init: Src,
+        out: usize,
+        comb: Combiner,
+        n: usize,
+        len: usize,
+        sstride: usize,
+        reverse: bool,
+    },
+    ReduceWindow {
+        src: Src,
+        init: Src,
+        out: usize,
+        comb: Combiner,
+        in_dims: Vec<usize>,
+        istr: Vec<usize>,
+        out_dims: Vec<usize>,
+        ostr: Vec<usize>,
+        wsize: Vec<usize>,
+        wstr: Vec<usize>,
+        wstride: Vec<usize>,
+        pad: Vec<(usize, usize)>,
+    },
+    Dot {
+        lhs: Src,
+        lspec: GatherSpec,
+        rhs: Src,
+        rspec: GatherSpec,
+        out: usize,
+        b: usize,
+        m: usize,
+        k: usize,
+        n: usize,
+    },
+}
+
+/// Reusable execution scratch: the arena slots plus pooled temporaries.
+/// Callers that execute a plan many times (benches, suite workers) can
+/// reuse one scratch to skip even the per-call arena allocation.
+#[derive(Default)]
+pub struct PlanScratch {
+    slots: Vec<Vec<f32>>,
+    /// Chunk-sized temporaries for fused expression evaluation.
+    pool: Vec<Vec<f32>>,
+    /// Full-tensor temporaries (dot operand gathers).
+    big: Vec<Vec<f32>>,
+}
+
+/// A compiled, executable HLO module. Plain data (`Send + Sync`): many
+/// worker threads can execute the same plan concurrently.
+#[derive(Clone, Debug)]
+pub struct ExecutablePlan {
+    steps: Vec<Step>,
+    consts: Vec<Tensor>,
+    slot_caps: Vec<usize>,
+    roots: Vec<(Src, Vec<usize>)>,
+    param_dims: Vec<Vec<usize>>,
+}
+
+// ------------------------------------------------------------- flattening
+
+/// One instruction after call inlining: the parsed instruction (for its
+/// attributes) plus operand links as flat node ids.
+struct FlatInstr {
+    instr: Instr,
+    ops: Vec<usize>,
+    dims: Vec<usize>,
+    /// Entry parameter index, when this node is an entry parameter.
+    param: Option<usize>,
+}
+
+fn numel(dims: &[usize]) -> usize {
+    dims.iter().product()
+}
+
+fn array_dims(ins: &Instr) -> Result<Vec<usize>, String> {
+    Ok(ins.shape.array().map_err(|e| format!("{}: {e}", ins.name))?.dims.clone())
+}
+
+const MAX_INLINE_DEPTH: usize = 64;
+
+/// Inline computation `ci` (with `args` as its parameter nodes) into
+/// `nodes`, returning the local-index -> node-id map. Tuples get a
+/// sentinel (only legal as the entry root).
+fn flatten(
+    m: &Module,
+    ci: usize,
+    args: &[usize],
+    nodes: &mut Vec<FlatInstr>,
+    depth: usize,
+) -> Result<Vec<usize>, String> {
+    if depth > MAX_INLINE_DEPTH {
+        return Err("call nesting exceeds the inlining depth limit".to_string());
+    }
+    let comp = &m.computations[ci];
+    if args.len() != comp.params.len() {
+        return Err(format!(
+            "computation '{}' takes {} arguments, got {}",
+            comp.name,
+            comp.params.len(),
+            args.len()
+        ));
+    }
+    let mut local: Vec<usize> = vec![usize::MAX; comp.instrs.len()];
+    for (li, ins) in comp.instrs.iter().enumerate() {
+        let mapped = |o: &usize| -> Result<usize, String> {
+            let id = local[*o];
+            if id == usize::MAX {
+                return Err(format!(
+                    "{}: tuple-valued operands are not supported",
+                    ins.name
+                ));
+            }
+            Ok(id)
+        };
+        match &ins.opcode {
+            Opcode::Parameter => {
+                let pi = ins
+                    .param_index
+                    .ok_or_else(|| format!("{}: parameter without index", ins.name))?;
+                local[li] = *args
+                    .get(pi)
+                    .ok_or_else(|| format!("{}: parameter index {pi} out of range", ins.name))?;
+            }
+            Opcode::Call => {
+                let target = ins
+                    .to_apply
+                    .as_deref()
+                    .ok_or_else(|| format!("{}: call without to_apply", ins.name))?;
+                let tci = m
+                    .computation_index(target)
+                    .ok_or_else(|| format!("{}: unknown computation '{target}'", ins.name))?;
+                let mut call_args = Vec::with_capacity(ins.operands.len());
+                for o in &ins.operands {
+                    call_args.push(mapped(o)?);
+                }
+                let sub = flatten(m, tci, &call_args, nodes, depth + 1)?;
+                let root = m.computations[tci].root;
+                let root_id = sub[root];
+                if root_id == usize::MAX {
+                    return Err(format!(
+                        "{}: called computation '{target}' returns a tuple",
+                        ins.name
+                    ));
+                }
+                local[li] = root_id;
+            }
+            Opcode::Tuple => {
+                // legal only as the entry root; the caller checks.
+            }
+            _ => {
+                let mut ops = Vec::with_capacity(ins.operands.len());
+                for o in &ins.operands {
+                    ops.push(mapped(o)?);
+                }
+                let dims = array_dims(ins)?;
+                nodes.push(FlatInstr { instr: ins.clone(), ops, dims, param: None });
+                local[li] = nodes.len() - 1;
+            }
+        }
+    }
+    Ok(local)
+}
+
+// ---------------------------------------------------------- classification
+
+/// Build-time representation of a node's value.
+enum Repr {
+    Pending,
+    /// Inline-able elementwise expression (single consumer, not yet emitted).
+    Expr(FExpr),
+    /// Materialized: a step output, input, or constant.
+    Mat(Src),
+    /// Expression moved into its consumer (or dead code).
+    Taken,
+}
+
+struct BuildState {
+    repr: Vec<Repr>,
+    consts: Vec<Tensor>,
+    steps: Vec<Step>,
+}
+
+impl BuildState {
+    /// The node's value as a materialized source, emitting its pending
+    /// fused step if needed.
+    fn mat_src(&mut self, nodes: &[FlatInstr], a: usize) -> Result<Src, String> {
+        match &self.repr[a] {
+            Repr::Mat(s) => Ok(*s),
+            Repr::Expr(_) => {
+                let taken = std::mem::replace(&mut self.repr[a], Repr::Mat(Src::Buf(a)));
+                let expr = match taken {
+                    Repr::Expr(e) => e,
+                    _ => unreachable!(),
+                };
+                self.steps.push(Step::Fused { expr, out: a, n: numel(&nodes[a].dims) });
+                Ok(Src::Buf(a))
+            }
+            _ => Err(format!("internal: node {a} read before it was computed")),
+        }
+    }
+
+    /// The node's value as an expression operand. Single-use expressions
+    /// move; materialized values become leaves.
+    fn operand_expr(&mut self, a: usize) -> Result<FExpr, String> {
+        match &self.repr[a] {
+            Repr::Mat(s) => Ok(FExpr::Leaf(*s)),
+            Repr::Expr(_) => match std::mem::replace(&mut self.repr[a], Repr::Taken) {
+                Repr::Expr(e) => Ok(e),
+                _ => unreachable!(),
+            },
+            _ => Err(format!("internal: node {a} read before it was computed")),
+        }
+    }
+
+    /// Record an elementwise node: keep it inline while it has a single
+    /// consumer, otherwise emit its fused step now.
+    fn finish_elementwise(&mut self, i: usize, e: FExpr, uses: usize, n: usize) {
+        if uses > 1 {
+            self.steps.push(Step::Fused { expr: e, out: i, n });
+            self.repr[i] = Repr::Mat(Src::Buf(i));
+        } else {
+            self.repr[i] = Repr::Expr(e);
+        }
+    }
+}
+
+fn unary_of(op: &Opcode) -> Option<UnaryOp> {
+    Some(match op {
+        Opcode::Exponential => UnaryOp::Exp,
+        Opcode::Log => UnaryOp::Ln,
+        Opcode::Tanh => UnaryOp::Tanh,
+        Opcode::Sqrt => UnaryOp::Sqrt,
+        Opcode::Rsqrt => UnaryOp::Rsqrt,
+        Opcode::Negate => UnaryOp::Neg,
+        Opcode::Abs => UnaryOp::Abs,
+        Opcode::Floor => UnaryOp::Floor,
+        Opcode::Ceil => UnaryOp::Ceil,
+        Opcode::Sign => UnaryOp::Sign,
+        Opcode::Logistic => UnaryOp::Logistic,
+        _ => return None,
+    })
+}
+
+fn binary_of(op: &Opcode) -> Option<BinOp> {
+    Some(match op {
+        Opcode::Add => BinOp::Add,
+        Opcode::Subtract => BinOp::Sub,
+        Opcode::Multiply => BinOp::Mul,
+        Opcode::Divide => BinOp::Div,
+        Opcode::Maximum => BinOp::Max,
+        Opcode::Minimum => BinOp::Min,
+        Opcode::Power => BinOp::Pow,
+        _ => return None,
+    })
+}
+
+fn cmp_of(dir: CmpDir) -> CmpOp {
+    match dir {
+        CmpDir::Eq => CmpOp::Eq,
+        CmpDir::Ne => CmpOp::Ne,
+        CmpDir::Ge => CmpOp::Ge,
+        CmpDir::Gt => CmpOp::Gt,
+        CmpDir::Le => CmpOp::Le,
+        CmpDir::Lt => CmpOp::Lt,
+    }
+}
+
+/// Validate `perm` and build the gather that permutes `in_dims` by it.
+fn perm_spec(in_dims: &[usize], perm: &[usize]) -> Result<GatherSpec, String> {
+    let rank = in_dims.len();
+    if perm.len() != rank {
+        return Err(format!("permutation {perm:?} does not match rank {rank}"));
+    }
+    let mut seen = vec![false; rank];
+    for &p in perm {
+        if p >= rank || seen[p] {
+            return Err(format!("invalid permutation {perm:?} for rank {rank}"));
+        }
+        seen[p] = true;
+    }
+    let out_dims: Vec<usize> = perm.iter().map(|&p| in_dims[p]).collect();
+    let in_strides = kernels::row_major_strides(in_dims);
+    let sstr: Vec<usize> = perm.iter().map(|&p| in_strides[p]).collect();
+    let ostr = kernels::row_major_strides(&out_dims);
+    let n = numel(&out_dims);
+    Ok(GatherSpec { out_dims, ostr, sstr, n })
+}
+
+/// Resolve a reduce/reduce-window combiner computation.
+fn compile_combiner(m: &Module, ins: &Instr) -> Result<Combiner, String> {
+    let name = ins
+        .to_apply
+        .as_deref()
+        .ok_or_else(|| format!("{}: reduce without to_apply", ins.name))?;
+    let ci = m
+        .computation_index(name)
+        .ok_or_else(|| format!("{}: unknown combiner computation '{name}'", ins.name))?;
+    let comp = &m.computations[ci];
+    let root = &comp.instrs[comp.root];
+    if comp.params.len() == 2 && root.operands.len() == 2 {
+        let (p0, p1) = (comp.params[0], comp.params[1]);
+        let (a, b) = (root.operands[0], root.operands[1]);
+        if (a == p0 && b == p1) || (a == p1 && b == p0) {
+            match root.opcode {
+                Opcode::Add => return Ok(Combiner::Add),
+                Opcode::Multiply => return Ok(Combiner::Mul),
+                Opcode::Maximum => return Ok(Combiner::Max),
+                Opcode::Minimum => return Ok(Combiner::Min),
+                _ => {}
+            }
+        }
+    }
+    if comp.params.len() != 2 {
+        return Err(format!(
+            "{}: combiner '{name}' takes {} parameters, expected 2",
+            ins.name,
+            comp.params.len()
+        ));
+    }
+    let se = compile_scalar_comp(m, ci, vec![SExpr::Acc, SExpr::Val], 0)
+        .map_err(|e| format!("{}: combiner '{name}': {e}", ins.name))?;
+    Ok(Combiner::Generic(se))
+}
+
+/// Compile a scalar computation (every value numel 1) into an [`SExpr`]
+/// over the provided parameter expressions.
+fn compile_scalar_comp(
+    m: &Module,
+    ci: usize,
+    args: Vec<SExpr>,
+    depth: usize,
+) -> Result<SExpr, String> {
+    if depth > MAX_INLINE_DEPTH {
+        return Err("call nesting exceeds the inlining depth limit".to_string());
+    }
+    let comp = &m.computations[ci];
+    if args.len() != comp.params.len() {
+        return Err(format!(
+            "computation '{}' takes {} arguments, got {}",
+            comp.name,
+            comp.params.len(),
+            args.len()
+        ));
+    }
+    let mut local: Vec<Option<SExpr>> = (0..comp.instrs.len()).map(|_| None).collect();
+    for (li, ins) in comp.instrs.iter().enumerate() {
+        let get = |o: usize| -> Result<SExpr, String> {
+            let idx = *ins
+                .operands
+                .get(o)
+                .ok_or_else(|| format!("{}: missing operand {o}", ins.name))?;
+            local[idx].clone().ok_or_else(|| format!("{}: operand out of order", ins.name))
+        };
+        let dims = array_dims(ins)?;
+        if numel(&dims) != 1 {
+            return Err(format!("{}: non-scalar value in scalar combiner", ins.name));
+        }
+        let e = match &ins.opcode {
+            Opcode::Parameter => {
+                let pi = ins
+                    .param_index
+                    .ok_or_else(|| format!("{}: parameter without index", ins.name))?;
+                args.get(pi)
+                    .cloned()
+                    .ok_or_else(|| format!("{}: parameter index {pi} out of range", ins.name))?
+            }
+            Opcode::Constant => {
+                let lit = ins
+                    .literal
+                    .as_ref()
+                    .ok_or_else(|| format!("{}: constant without literal", ins.name))?;
+                SExpr::Const(lit[0])
+            }
+            Opcode::Copy | Opcode::Convert | Opcode::Reshape | Opcode::Broadcast => get(0)?,
+            Opcode::Compare => {
+                let dir = ins
+                    .direction
+                    .ok_or_else(|| format!("{}: compare without direction", ins.name))?;
+                SExpr::Cmp(cmp_of(dir), Box::new(get(0)?), Box::new(get(1)?))
+            }
+            Opcode::Select => {
+                SExpr::Sel(Box::new(get(0)?), Box::new(get(1)?), Box::new(get(2)?))
+            }
+            Opcode::Call => {
+                let target = ins
+                    .to_apply
+                    .as_deref()
+                    .ok_or_else(|| format!("{}: call without to_apply", ins.name))?;
+                let tci = m
+                    .computation_index(target)
+                    .ok_or_else(|| format!("{}: unknown computation '{target}'", ins.name))?;
+                let mut call_args = Vec::with_capacity(ins.operands.len());
+                for o in 0..ins.operands.len() {
+                    call_args.push(get(o)?);
+                }
+                compile_scalar_comp(m, tci, call_args, depth + 1)?
+            }
+            op => {
+                if let Some(u) = unary_of(op) {
+                    SExpr::Un(u, Box::new(get(0)?))
+                } else if let Some(b) = binary_of(op) {
+                    SExpr::Bin(b, Box::new(get(0)?), Box::new(get(1)?))
+                } else {
+                    return Err(format!(
+                        "{}: opcode outside the scalar-combiner op set",
+                        ins.name
+                    ));
+                }
+            }
+        };
+        local[li] = Some(e);
+    }
+    local[comp.root]
+        .clone()
+        .ok_or_else(|| format!("computation '{}': root was never built", comp.name))
+}
+
+// ------------------------------------------------------------ compilation
+
+impl ExecutablePlan {
+    /// Compile with default options (arena on).
+    pub fn compile(m: &Module) -> Result<ExecutablePlan, String> {
+        ExecutablePlan::compile_with(m, PlanOptions::default())
+    }
+
+    pub fn compile_with(m: &Module, opts: PlanOptions) -> Result<ExecutablePlan, String> {
+        let comp = m.entry_computation();
+        let mut nodes: Vec<FlatInstr> = Vec::new();
+        let mut param_ids = Vec::new();
+        let mut param_dims = Vec::new();
+        for (pi, &idx) in comp.params.iter().enumerate() {
+            let ins = &comp.instrs[idx];
+            let dims = array_dims(ins)?;
+            nodes.push(FlatInstr {
+                instr: ins.clone(),
+                ops: Vec::new(),
+                dims: dims.clone(),
+                param: Some(pi),
+            });
+            param_ids.push(nodes.len() - 1);
+            param_dims.push(dims);
+        }
+        let local = flatten(m, m.entry, &param_ids, &mut nodes, 0)?;
+
+        let root_ins = &comp.instrs[comp.root];
+        let root_ids: Vec<usize> = if root_ins.opcode == Opcode::Tuple {
+            let mut ids = Vec::with_capacity(root_ins.operands.len());
+            for &o in &root_ins.operands {
+                let id = local[o];
+                if id == usize::MAX {
+                    return Err(format!("{}: nested tuples are not supported", root_ins.name));
+                }
+                ids.push(id);
+            }
+            ids
+        } else {
+            let id = local[comp.root];
+            if id == usize::MAX {
+                return Err(format!("{}: root tuple was not flattened", root_ins.name));
+            }
+            vec![id]
+        };
+
+        let mut use_count = vec![0usize; nodes.len()];
+        for fi in &nodes {
+            for &o in &fi.ops {
+                use_count[o] += 1;
+            }
+        }
+        for &r in &root_ids {
+            use_count[r] += 1;
+        }
+        // transitive dead-code elimination: walk backwards (operands always
+        // precede consumers) removing the edges of dead nodes, so a chain
+        // feeding only dead consumers is dropped all the way down — not
+        // just its last link
+        for i in (0..nodes.len()).rev() {
+            if use_count[i] == 0 {
+                for &o in &nodes[i].ops {
+                    use_count[o] -= 1;
+                }
+            }
+        }
+
+        let mut st = BuildState {
+            repr: (0..nodes.len()).map(|_| Repr::Pending).collect(),
+            consts: Vec::new(),
+            steps: Vec::new(),
+        };
+        for i in 0..nodes.len() {
+            compile_node(m, &nodes, i, use_count[i], &mut st)?;
+        }
+
+        let mut roots = Vec::with_capacity(root_ids.len());
+        for &r in &root_ids {
+            let src = st.mat_src(&nodes, r)?;
+            roots.push((src, nodes[r].dims.clone()));
+        }
+
+        let (steps, slot_caps, root_srcs) =
+            assign_slots(st.steps, roots, &nodes, opts.reuse_buffers)?;
+
+        Ok(ExecutablePlan { steps, consts: st.consts, slot_caps, roots: root_srcs, param_dims })
+    }
+
+    /// Number of executable steps (post fusion).
+    pub fn step_count(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Number of arena buffers the plan executes with.
+    pub fn slot_count(&self) -> usize {
+        self.slot_caps.len()
+    }
+}
+
+/// Compile one flat node into the build state.
+fn compile_node(
+    m: &Module,
+    nodes: &[FlatInstr],
+    i: usize,
+    uses: usize,
+    st: &mut BuildState,
+) -> Result<(), String> {
+    if let Some(pi) = nodes[i].param {
+        st.repr[i] = Repr::Mat(Src::Input(pi));
+        return Ok(());
+    }
+    if uses == 0 {
+        // dead code: all ops are pure, skip the node entirely
+        st.repr[i] = Repr::Taken;
+        return Ok(());
+    }
+    let name = nodes[i].instr.name.clone();
+    let out_dims = nodes[i].dims.clone();
+    let n_out = numel(&out_dims);
+    let ops = nodes[i].ops.clone();
+    let opd = |k: usize| -> Result<usize, String> {
+        ops.get(k).copied().ok_or_else(|| format!("{name}: missing operand {k}"))
+    };
+    let opcode = nodes[i].instr.opcode.clone();
+    match &opcode {
+        Opcode::Parameter => {
+            return Err(format!("{name}: parameter was not bound to an argument"))
+        }
+        Opcode::Constant => {
+            let lit = nodes[i]
+                .instr
+                .literal
+                .clone()
+                .ok_or_else(|| format!("{name}: constant without literal"))?;
+            st.consts.push(Tensor::new(out_dims, DType::F32, lit));
+            st.repr[i] = Repr::Mat(Src::Const(st.consts.len() - 1));
+        }
+        Opcode::Copy | Opcode::Convert | Opcode::Reshape => {
+            let a = opd(0)?;
+            if numel(&nodes[a].dims) != n_out {
+                return Err(format!(
+                    "{name}: cannot reshape {} elements into {n_out}",
+                    numel(&nodes[a].dims)
+                ));
+            }
+            let e = st.operand_expr(a)?;
+            st.finish_elementwise(i, e, uses, n_out);
+        }
+        Opcode::Compare => {
+            let (a, b) = (opd(0)?, opd(1)?);
+            if numel(&nodes[a].dims) != n_out || numel(&nodes[b].dims) != n_out {
+                return Err(format!("{name}: operand shapes do not match result"));
+            }
+            let dir = nodes[i]
+                .instr
+                .direction
+                .ok_or_else(|| format!("{name}: compare without direction"))?;
+            let ea = st.operand_expr(a)?;
+            let eb = st.operand_expr(b)?;
+            let e = FExpr::Cmp(cmp_of(dir), Box::new(ea), Box::new(eb));
+            st.finish_elementwise(i, e, uses, n_out);
+        }
+        Opcode::Select => {
+            let (c, a, b) = (opd(0)?, opd(1)?, opd(2)?);
+            for &o in &[c, a, b] {
+                if numel(&nodes[o].dims) != n_out {
+                    return Err(format!("{name}: select operand shapes disagree"));
+                }
+            }
+            let ec = st.operand_expr(c)?;
+            let ea = st.operand_expr(a)?;
+            let eb = st.operand_expr(b)?;
+            let e = FExpr::Sel(Box::new(ec), Box::new(ea), Box::new(eb));
+            st.finish_elementwise(i, e, uses, n_out);
+        }
+        Opcode::Broadcast => {
+            let a = opd(0)?;
+            let in_dims = nodes[a].dims.clone();
+            if numel(&in_dims) == 1 {
+                // scalar fill: fold into the consumer as a splat
+                let const_scalar = match &st.repr[a] {
+                    Repr::Mat(Src::Const(k)) => Some(*k),
+                    _ => None,
+                };
+                let e = match const_scalar {
+                    Some(k) => FExpr::Splat(st.consts[k].data[0]),
+                    None => FExpr::SplatLeaf(st.mat_src(nodes, a)?),
+                };
+                st.finish_elementwise(i, e, uses, n_out);
+            } else {
+                let dims_attr = nodes[i].instr.dimensions.clone().unwrap_or_default();
+                if dims_attr.len() != in_dims.len() {
+                    return Err(format!(
+                        "{name}: dimensions {dims_attr:?} do not match operand rank {}",
+                        in_dims.len()
+                    ));
+                }
+                let in_strides = kernels::row_major_strides(&in_dims);
+                let mut sstr = vec![0usize; out_dims.len()];
+                for (bi, &od) in dims_attr.iter().enumerate() {
+                    if od >= out_dims.len() {
+                        return Err(format!("{name}: broadcast dimension {od} out of range"));
+                    }
+                    if in_dims[bi] != 1 {
+                        if in_dims[bi] != out_dims[od] {
+                            return Err(format!(
+                                "{name}: operand dim {bi} ({}) does not match output dim {od} ({})",
+                                in_dims[bi], out_dims[od]
+                            ));
+                        }
+                        sstr[od] = in_strides[bi];
+                    }
+                }
+                let ostr = kernels::row_major_strides(&out_dims);
+                let src = st.mat_src(nodes, a)?;
+                let spec = GatherSpec { out_dims, ostr, sstr, n: n_out };
+                st.steps.push(Step::Gather { src, out: i, spec });
+                st.repr[i] = Repr::Mat(Src::Buf(i));
+            }
+        }
+        Opcode::Transpose => {
+            let a = opd(0)?;
+            let perm = nodes[i]
+                .instr
+                .dimensions
+                .clone()
+                .ok_or_else(|| format!("{name}: transpose without dimensions"))?;
+            let spec =
+                perm_spec(&nodes[a].dims, &perm).map_err(|e| format!("{name}: {e}"))?;
+            if spec.out_dims != out_dims {
+                return Err(format!(
+                    "{name}: transpose produced {:?}, declared {:?}",
+                    spec.out_dims, out_dims
+                ));
+            }
+            let src = st.mat_src(nodes, a)?;
+            st.steps.push(Step::Gather { src, out: i, spec });
+            st.repr[i] = Repr::Mat(Src::Buf(i));
+        }
+        Opcode::Reduce => {
+            let (a, iv) = (opd(0)?, opd(1)?);
+            if numel(&nodes[iv].dims) != 1 {
+                return Err(format!(
+                    "{name}: init value must be scalar, got shape {:?}",
+                    nodes[iv].dims
+                ));
+            }
+            let comb = compile_combiner(m, &nodes[i].instr)?;
+            let red = nodes[i]
+                .instr
+                .dimensions
+                .clone()
+                .ok_or_else(|| format!("{name}: reduce without dimensions"))?;
+            let in_dims = nodes[a].dims.clone();
+            let kept: Vec<usize> =
+                (0..in_dims.len()).filter(|d| !red.contains(d)).collect();
+            let kept_dims: Vec<usize> = kept.iter().map(|&d| in_dims[d]).collect();
+            if kept_dims != out_dims {
+                return Err(format!(
+                    "{name}: reduce output shape {out_dims:?} does not match kept dims {kept_dims:?}"
+                ));
+            }
+            let suffix = kept.iter().enumerate().all(|(j, &d)| j == d);
+            let shape = if suffix {
+                let rows = numel(&kept_dims);
+                let cols = if rows == 0 { 0 } else { numel(&in_dims) / rows };
+                ReduceShape::Rows { rows, cols }
+            } else {
+                let istr = kernels::row_major_strides(&in_dims);
+                let ostr = kernels::row_major_strides(&out_dims);
+                let kept_strides: Vec<(usize, usize)> =
+                    kept.iter().enumerate().map(|(j, &d)| (d, ostr[j])).collect();
+                ReduceShape::Scatter { in_dims, istr, kept: kept_strides, out_n: n_out }
+            };
+            let src = st.mat_src(nodes, a)?;
+            let init = st.mat_src(nodes, iv)?;
+            st.steps.push(Step::Reduce { src, init, out: i, comb, shape });
+            st.repr[i] = Repr::Mat(Src::Buf(i));
+        }
+        Opcode::ReduceWindow => {
+            let (a, iv) = (opd(0)?, opd(1)?);
+            if numel(&nodes[iv].dims) != 1 {
+                return Err(format!(
+                    "{name}: init value must be scalar, got shape {:?}",
+                    nodes[iv].dims
+                ));
+            }
+            let comb = compile_combiner(m, &nodes[i].instr)?;
+            let w = nodes[i]
+                .instr
+                .window
+                .clone()
+                .ok_or_else(|| format!("{name}: reduce-window without window attribute"))?;
+            let in_dims = nodes[a].dims.clone();
+            let rank = in_dims.len();
+            if w.size.len() != rank || w.stride.len() != rank || w.pad.len() != rank {
+                return Err(format!(
+                    "{name}: window rank does not match operand rank {rank}"
+                ));
+            }
+            let istr = kernels::row_major_strides(&in_dims);
+            // prefix-scan detection (how XLA lowers cumsum/cumprod): every
+            // dim pointwise except one whose window covers the whole dim,
+            // padded so output i sees 0..=i (or i.. when reversed)
+            let mut scan_dim: Option<(usize, bool)> = None;
+            let mut scan_ok = out_dims == in_dims;
+            if scan_ok {
+                for d in 0..rank {
+                    let full = in_dims[d];
+                    if w.size[d] == 1 && w.stride[d] == 1 && w.pad[d] == (0, 0) {
+                        continue;
+                    }
+                    if w.stride[d] == 1 && full > 0 && w.size[d] == full && scan_dim.is_none() {
+                        if w.pad[d] == (full - 1, 0) {
+                            scan_dim = Some((d, false));
+                            continue;
+                        }
+                        if w.pad[d] == (0, full - 1) {
+                            scan_dim = Some((d, true));
+                            continue;
+                        }
+                    }
+                    scan_ok = false;
+                    break;
+                }
+            }
+            let src = st.mat_src(nodes, a)?;
+            let init = st.mat_src(nodes, iv)?;
+            if scan_ok {
+                if let Some((sd, reverse)) = scan_dim {
+                    st.steps.push(Step::Scan {
+                        src,
+                        init,
+                        out: i,
+                        comb,
+                        n: n_out,
+                        len: in_dims[sd],
+                        sstride: istr[sd],
+                        reverse,
+                    });
+                    st.repr[i] = Repr::Mat(Src::Buf(i));
+                    return Ok(());
+                }
+            }
+            let ostr = kernels::row_major_strides(&out_dims);
+            let wstr = kernels::row_major_strides(&w.size);
+            st.steps.push(Step::ReduceWindow {
+                src,
+                init,
+                out: i,
+                comb,
+                in_dims,
+                istr,
+                out_dims,
+                ostr,
+                wsize: w.size,
+                wstr,
+                wstride: w.stride,
+                pad: w.pad,
+            });
+            st.repr[i] = Repr::Mat(Src::Buf(i));
+        }
+        Opcode::Dot => {
+            let (a, b) = (opd(0)?, opd(1)?);
+            let (ld, rd) = (nodes[a].dims.clone(), nodes[b].dims.clone());
+            let ins = &nodes[i].instr;
+            let (lb, rb) = (&ins.lhs_batch, &ins.rhs_batch);
+            let (lc, rc) = (&ins.lhs_contract, &ins.rhs_contract);
+            if lb.len() != rb.len() || lc.len() != rc.len() {
+                return Err(format!(
+                    "{name}: mismatched batch/contracting dimension counts"
+                ));
+            }
+            for (&l, &r) in lb.iter().zip(rb) {
+                if l >= ld.len() || r >= rd.len() || ld[l] != rd[r] {
+                    return Err(format!("{name}: batch dims disagree"));
+                }
+            }
+            for (&l, &r) in lc.iter().zip(rc) {
+                if l >= ld.len() || r >= rd.len() || ld[l] != rd[r] {
+                    return Err(format!("{name}: contracting dims disagree"));
+                }
+            }
+            let lfree: Vec<usize> =
+                (0..ld.len()).filter(|d| !lb.contains(d) && !lc.contains(d)).collect();
+            let rfree: Vec<usize> =
+                (0..rd.len()).filter(|d| !rb.contains(d) && !rc.contains(d)).collect();
+            let mut lperm = lb.clone();
+            lperm.extend_from_slice(&lfree);
+            lperm.extend_from_slice(lc);
+            let mut rperm = rb.clone();
+            rperm.extend_from_slice(rc);
+            rperm.extend_from_slice(&rfree);
+            let lspec = perm_spec(&ld, &lperm).map_err(|e| format!("{name}: {e}"))?;
+            let rspec = perm_spec(&rd, &rperm).map_err(|e| format!("{name}: {e}"))?;
+            let bsz: usize = lb.iter().map(|&d| ld[d]).product();
+            let ksz: usize = lc.iter().map(|&d| ld[d]).product();
+            let msz: usize = lfree.iter().map(|&d| ld[d]).product();
+            let nsz: usize = rfree.iter().map(|&d| rd[d]).product();
+            if n_out != bsz * msz * nsz {
+                return Err(format!(
+                    "{name}: result shape does not match dot extents {bsz}x{msz}x{nsz}"
+                ));
+            }
+            let lsrc = st.mat_src(nodes, a)?;
+            let rsrc = st.mat_src(nodes, b)?;
+            st.steps.push(Step::Dot {
+                lhs: lsrc,
+                lspec,
+                rhs: rsrc,
+                rspec,
+                out: i,
+                b: bsz,
+                m: msz,
+                k: ksz,
+                n: nsz,
+            });
+            st.repr[i] = Repr::Mat(Src::Buf(i));
+        }
+        Opcode::Tuple => {
+            return Err(format!("{name}: tuple outside the entry root is not supported"))
+        }
+        Opcode::Call => unreachable!("calls are inlined during flattening"),
+        Opcode::Other(op) => {
+            return Err(format!(
+                "{name}: opcode '{op}' is outside the plan compiler's op set"
+            ))
+        }
+        op => {
+            // remaining opcodes are elementwise unary/binary
+            if let Some(u) = unary_of(op) {
+                let a = opd(0)?;
+                if numel(&nodes[a].dims) != n_out {
+                    return Err(format!(
+                        "{name}: result numel {n_out} vs operand numel {}",
+                        numel(&nodes[a].dims)
+                    ));
+                }
+                let e = FExpr::Un(u, Box::new(st.operand_expr(a)?));
+                st.finish_elementwise(i, e, uses, n_out);
+            } else if let Some(bo) = binary_of(op) {
+                let (a, b) = (opd(0)?, opd(1)?);
+                if numel(&nodes[a].dims) != n_out || numel(&nodes[b].dims) != n_out {
+                    return Err(format!("{name}: operand shapes do not match result"));
+                }
+                let ea = st.operand_expr(a)?;
+                let eb = st.operand_expr(b)?;
+                let e = FExpr::Bin(bo, Box::new(ea), Box::new(eb));
+                st.finish_elementwise(i, e, uses, n_out);
+            } else {
+                return Err(format!("{name}: opcode {op:?} is not handled"));
+            }
+        }
+    }
+    Ok(())
+}
+
+// --------------------------------------------------- liveness + slot arena
+
+fn expr_bufs(e: &FExpr, out: &mut Vec<usize>) {
+    match e {
+        FExpr::Leaf(Src::Buf(b)) | FExpr::SplatLeaf(Src::Buf(b)) => out.push(*b),
+        FExpr::Leaf(_) | FExpr::SplatLeaf(_) | FExpr::Splat(_) => {}
+        FExpr::Un(_, a) => expr_bufs(a, out),
+        FExpr::Bin(_, a, b) | FExpr::Cmp(_, a, b) => {
+            expr_bufs(a, out);
+            expr_bufs(b, out);
+        }
+        FExpr::Sel(c, a, b) => {
+            expr_bufs(c, out);
+            expr_bufs(a, out);
+            expr_bufs(b, out);
+        }
+    }
+}
+
+fn push_buf(src: &Src, out: &mut Vec<usize>) {
+    if let Src::Buf(b) = src {
+        out.push(*b);
+    }
+}
+
+/// Node ids read by a step (as `Buf` sources).
+fn step_inputs(step: &Step, out: &mut Vec<usize>) {
+    out.clear();
+    match step {
+        Step::Fused { expr, .. } => expr_bufs(expr, out),
+        Step::Gather { src, .. } => push_buf(src, out),
+        Step::Reduce { src, init, .. }
+        | Step::Scan { src, init, .. }
+        | Step::ReduceWindow { src, init, .. } => {
+            push_buf(src, out);
+            push_buf(init, out);
+        }
+        Step::Dot { lhs, rhs, .. } => {
+            push_buf(lhs, out);
+            push_buf(rhs, out);
+        }
+    }
+}
+
+fn step_out(step: &Step) -> usize {
+    match step {
+        Step::Fused { out, .. }
+        | Step::Gather { out, .. }
+        | Step::Reduce { out, .. }
+        | Step::Scan { out, .. }
+        | Step::ReduceWindow { out, .. }
+        | Step::Dot { out, .. } => *out,
+    }
+}
+
+fn rewrite_src(src: &mut Src, map: &[usize]) -> Result<(), String> {
+    if let Src::Buf(b) = src {
+        let slot = map[*b];
+        if slot == usize::MAX {
+            return Err(format!("internal: node {b} was never assigned a slot"));
+        }
+        *src = Src::Buf(slot);
+    }
+    Ok(())
+}
+
+fn rewrite_expr(e: &mut FExpr, map: &[usize]) -> Result<(), String> {
+    match e {
+        FExpr::Leaf(s) | FExpr::SplatLeaf(s) => rewrite_src(s, map),
+        FExpr::Splat(_) => Ok(()),
+        FExpr::Un(_, a) => rewrite_expr(a, map),
+        FExpr::Bin(_, a, b) | FExpr::Cmp(_, a, b) => {
+            rewrite_expr(a, map)?;
+            rewrite_expr(b, map)
+        }
+        FExpr::Sel(c, a, b) => {
+            rewrite_expr(c, map)?;
+            rewrite_expr(a, map)?;
+            rewrite_expr(b, map)
+        }
+    }
+}
+
+/// Last-use liveness scan: assign every step output an arena slot,
+/// recycling slots of operands past their last use (when `reuse` is on),
+/// then rewrite all node ids to slot ids.
+#[allow(clippy::type_complexity)]
+fn assign_slots(
+    mut steps: Vec<Step>,
+    roots: Vec<(Src, Vec<usize>)>,
+    nodes: &[FlatInstr],
+    reuse: bool,
+) -> Result<(Vec<Step>, Vec<usize>, Vec<(Src, Vec<usize>)>), String> {
+    let mut last_use: Vec<Option<usize>> = vec![None; nodes.len()];
+    let mut scratch = Vec::new();
+    for (s, step) in steps.iter().enumerate() {
+        step_inputs(step, &mut scratch);
+        for &id in &scratch {
+            last_use[id] = Some(s);
+        }
+    }
+    let mut persistent = vec![false; nodes.len()];
+    for (src, _) in &roots {
+        if let Src::Buf(id) = src {
+            persistent[*id] = true;
+        }
+    }
+
+    let mut slot_of = vec![usize::MAX; nodes.len()];
+    let mut slot_caps: Vec<usize> = Vec::new();
+    let mut free: Vec<usize> = Vec::new();
+    for s in 0..steps.len() {
+        let out_id = step_out(&steps[s]);
+        let need = numel(&nodes[out_id].dims);
+        // acquire the output slot BEFORE releasing this step's operands:
+        // an output can therefore never alias a live (or same-step) operand
+        let slot = match free.iter().position(|&f| slot_caps[f] == need) {
+            Some(p) if reuse => free.swap_remove(p),
+            _ => {
+                slot_caps.push(need);
+                slot_caps.len() - 1
+            }
+        };
+        slot_of[out_id] = slot;
+        if reuse {
+            step_inputs(&steps[s], &mut scratch);
+            for &id in &scratch {
+                if last_use[id] == Some(s) && !persistent[id] {
+                    let sl = slot_of[id];
+                    if sl != usize::MAX && !free.contains(&sl) {
+                        free.push(sl);
+                    }
+                }
+            }
+        }
+    }
+
+    // rewrite node ids -> slot ids
+    for step in steps.iter_mut() {
+        match step {
+            Step::Fused { expr, out, .. } => {
+                rewrite_expr(expr, &slot_of)?;
+                *out = slot_of[*out];
+            }
+            Step::Gather { src, out, .. } => {
+                rewrite_src(src, &slot_of)?;
+                *out = slot_of[*out];
+            }
+            Step::Reduce { src, init, out, .. }
+            | Step::Scan { src, init, out, .. }
+            | Step::ReduceWindow { src, init, out, .. } => {
+                rewrite_src(src, &slot_of)?;
+                rewrite_src(init, &slot_of)?;
+                *out = slot_of[*out];
+            }
+            Step::Dot { lhs, rhs, out, .. } => {
+                rewrite_src(lhs, &slot_of)?;
+                rewrite_src(rhs, &slot_of)?;
+                *out = slot_of[*out];
+            }
+        }
+    }
+    let mut root_srcs = Vec::with_capacity(roots.len());
+    for (mut src, dims) in roots {
+        rewrite_src(&mut src, &slot_of)?;
+        root_srcs.push((src, dims));
+    }
+    Ok((steps, slot_caps, root_srcs))
+}
+
+// -------------------------------------------------------------- execution
+
+/// Fused chunks stay L1-resident: each op in a fused expression streams
+/// over at most this many elements before the next op reuses them.
+const CHUNK: usize = 4096;
+
+#[derive(Clone, Copy)]
+struct Ctx<'a> {
+    inputs: &'a [&'a Tensor],
+    consts: &'a [Tensor],
+    slots: &'a [Vec<f32>],
+}
+
+impl<'a> Ctx<'a> {
+    fn slice(&self, s: &Src) -> &'a [f32] {
+        match *s {
+            Src::Input(i) => self.inputs[i].data.as_slice(),
+            Src::Const(k) => self.consts[k].data.as_slice(),
+            Src::Buf(b) => self.slots[b].as_slice(),
+        }
+    }
+}
+
+fn take_pooled(pool: &mut Vec<Vec<f32>>, len: usize) -> Vec<f32> {
+    let mut v = pool.pop().unwrap_or_default();
+    v.clear();
+    v.resize(len, 0.0);
+    v
+}
+
+/// Evaluate a fused expression over `out.len()` elements starting at flat
+/// offset `start`, writing into `out`.
+fn eval_fused(e: &FExpr, ctx: &Ctx, start: usize, out: &mut [f32], pool: &mut Vec<Vec<f32>>) {
+    let len = out.len();
+    match e {
+        FExpr::Leaf(s) => out.copy_from_slice(&ctx.slice(s)[start..start + len]),
+        FExpr::Splat(v) => kernels::fill(out, *v),
+        FExpr::SplatLeaf(s) => kernels::fill(out, ctx.slice(s)[0]),
+        FExpr::Un(op, a) => {
+            eval_fused(a, ctx, start, out, pool);
+            kernels::unary_inplace(out, *op);
+        }
+        FExpr::Bin(op, a, b) => match (a.as_ref(), b.as_ref()) {
+            (_, FExpr::Splat(v)) => {
+                eval_fused(a, ctx, start, out, pool);
+                kernels::scalar_rhs_inplace(out, *v, *op);
+            }
+            (FExpr::Splat(v), _) => {
+                eval_fused(b, ctx, start, out, pool);
+                kernels::scalar_lhs_inplace(*v, out, *op);
+            }
+            _ => {
+                eval_fused(a, ctx, start, out, pool);
+                let mut t = take_pooled(pool, len);
+                eval_fused(b, ctx, start, &mut t, pool);
+                kernels::binary_inplace(out, &t, *op);
+                pool.push(t);
+            }
+        },
+        FExpr::Cmp(op, a, b) => {
+            eval_fused(a, ctx, start, out, pool);
+            let mut t = take_pooled(pool, len);
+            eval_fused(b, ctx, start, &mut t, pool);
+            kernels::compare_inplace(out, &t, *op);
+            pool.push(t);
+        }
+        FExpr::Sel(c, a, b) => {
+            eval_fused(a, ctx, start, out, pool);
+            let mut tc = take_pooled(pool, len);
+            eval_fused(c, ctx, start, &mut tc, pool);
+            let mut tb = take_pooled(pool, len);
+            eval_fused(b, ctx, start, &mut tb, pool);
+            kernels::select_if_zero(out, &tc, &tb);
+            pool.push(tb);
+            pool.push(tc);
+        }
+    }
+}
+
+impl ExecutablePlan {
+    /// Execute on the given inputs with a fresh scratch arena.
+    pub fn execute(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>, String> {
+        let mut scratch = PlanScratch::default();
+        self.execute_with_scratch(inputs, &mut scratch)
+    }
+
+    /// Execute, reusing `scratch` buffers across calls: the arena slots and
+    /// the fused-chunk / dot-gather pools persist, so repeat runs of the
+    /// same plan skip all per-step buffer allocation. (Small transient
+    /// allocations remain on cold paths — the `f64` accumulator of a
+    /// non-suffix sum/product reduce and reduce-window's per-rank cursor.)
+    pub fn execute_with_scratch(
+        &self,
+        inputs: &[&Tensor],
+        scratch: &mut PlanScratch,
+    ) -> Result<Vec<Tensor>, String> {
+        if inputs.len() != self.param_dims.len() {
+            return Err(format!(
+                "plan takes {} parameters, got {} inputs",
+                self.param_dims.len(),
+                inputs.len()
+            ));
+        }
+        for (pi, t) in inputs.iter().enumerate() {
+            if t.shape != self.param_dims[pi] {
+                return Err(format!(
+                    "parameter {pi} expects shape {:?}, got input shape {:?}",
+                    self.param_dims[pi], t.shape
+                ));
+            }
+        }
+        if scratch.slots.len() != self.slot_caps.len()
+            || scratch.slots.iter().zip(&self.slot_caps).any(|(s, &c)| s.len() != c)
+        {
+            scratch.slots = self.slot_caps.iter().map(|&c| vec![0.0f32; c]).collect();
+        }
+        let PlanScratch { slots, pool, big } = scratch;
+        for step in &self.steps {
+            self.run_step(step, inputs, slots, pool, big)?;
+        }
+        let ctx = Ctx { inputs, consts: &self.consts, slots: slots.as_slice() };
+        let mut outs = Vec::with_capacity(self.roots.len());
+        for (src, dims) in &self.roots {
+            let n = numel(dims);
+            let data = ctx.slice(src)[..n].to_vec();
+            outs.push(Tensor::new(dims.clone(), DType::F32, data));
+        }
+        Ok(outs)
+    }
+
+    fn run_step(
+        &self,
+        step: &Step,
+        inputs: &[&Tensor],
+        slots: &mut Vec<Vec<f32>>,
+        pool: &mut Vec<Vec<f32>>,
+        big: &mut Vec<Vec<f32>>,
+    ) -> Result<(), String> {
+        let out_idx = step_out(step);
+        let mut out = std::mem::take(&mut slots[out_idx]);
+        {
+            let ctx = Ctx { inputs, consts: &self.consts, slots: slots.as_slice() };
+            match step {
+                Step::Fused { expr, n, .. } => {
+                    let mut start = 0usize;
+                    while start < *n {
+                        let len = CHUNK.min(*n - start);
+                        eval_fused(expr, &ctx, start, &mut out[start..start + len], pool);
+                        start += len;
+                    }
+                }
+                Step::Gather { src, spec, .. } => {
+                    let s = ctx.slice(src);
+                    kernels::gather_strided(
+                        s,
+                        &mut out[..spec.n],
+                        &spec.out_dims,
+                        &spec.ostr,
+                        &spec.sstr,
+                    );
+                }
+                Step::Reduce { src, init, comb, shape, .. } => {
+                    let s = ctx.slice(src);
+                    let iv = ctx.slice(init)[0];
+                    run_reduce(s, iv, comb, shape, &mut out);
+                }
+                Step::Scan { src, init, comb, n, len, sstride, reverse, .. } => {
+                    let s = ctx.slice(src);
+                    let iv = ctx.slice(init)[0];
+                    let o = &mut out[..*n];
+                    for base in 0..*n {
+                        if (base / sstride) % len != 0 {
+                            continue;
+                        }
+                        let mut acc = iv;
+                        if *reverse {
+                            for j in (0..*len).rev() {
+                                let p = base + j * sstride;
+                                acc = comb_apply(comb, acc, s[p]);
+                                o[p] = acc;
+                            }
+                        } else {
+                            for j in 0..*len {
+                                let p = base + j * sstride;
+                                acc = comb_apply(comb, acc, s[p]);
+                                o[p] = acc;
+                            }
+                        }
+                    }
+                }
+                Step::ReduceWindow {
+                    src,
+                    init,
+                    comb,
+                    in_dims,
+                    istr,
+                    out_dims,
+                    ostr,
+                    wsize,
+                    wstr,
+                    wstride,
+                    pad,
+                    ..
+                } => {
+                    let s = ctx.slice(src);
+                    let iv = ctx.slice(init)[0];
+                    let rank = in_dims.len();
+                    let win_n: usize = wsize.iter().product();
+                    let out_n = numel(out_dims);
+                    let mut starts = vec![0isize; rank];
+                    for (oi, slot) in out[..out_n].iter_mut().enumerate() {
+                        for d in 0..rank {
+                            let idx = (oi / ostr[d]) % out_dims[d];
+                            starts[d] = (idx * wstride[d]) as isize - pad[d].0 as isize;
+                        }
+                        let mut acc = iv;
+                        'window: for wi in 0..win_n {
+                            let mut li = 0usize;
+                            for d in 0..rank {
+                                let pos = starts[d] + ((wi / wstr[d]) % wsize[d]) as isize;
+                                if pos < 0 || pos >= in_dims[d] as isize {
+                                    continue 'window; // padding element: identity
+                                }
+                                li += pos as usize * istr[d];
+                            }
+                            acc = comb_apply(comb, acc, s[li]);
+                        }
+                        *slot = acc;
+                    }
+                }
+                Step::Dot { lhs, lspec, rhs, rspec, b, m, k, n, .. } => {
+                    let ls = ctx.slice(lhs);
+                    let rs = ctx.slice(rhs);
+                    let mut lt = take_pooled(big, lspec.n);
+                    kernels::gather_strided(
+                        ls,
+                        &mut lt,
+                        &lspec.out_dims,
+                        &lspec.ostr,
+                        &lspec.sstr,
+                    );
+                    let mut rt = take_pooled(big, rspec.n);
+                    kernels::gather_strided(
+                        rs,
+                        &mut rt,
+                        &rspec.out_dims,
+                        &rspec.ostr,
+                        &rspec.sstr,
+                    );
+                    let o = &mut out[..b * m * n];
+                    kernels::fill(o, 0.0);
+                    for bi in 0..*b {
+                        kernels::matmul_acc(
+                            &mut o[bi * m * n..(bi + 1) * m * n],
+                            &lt[bi * m * k..(bi + 1) * m * k],
+                            &rt[bi * k * n..(bi + 1) * k * n],
+                            *m,
+                            *k,
+                            *n,
+                        );
+                    }
+                    big.push(lt);
+                    big.push(rt);
+                }
+            }
+        }
+        slots[out_idx] = out;
+        Ok(())
+    }
+}
+
+fn run_reduce(s: &[f32], iv: f32, comb: &Combiner, shape: &ReduceShape, out: &mut [f32]) {
+    match shape {
+        ReduceShape::Rows { rows, cols } => {
+            let o = &mut out[..*rows];
+            match comb {
+                Combiner::Add => kernels::reduce_rows_wide(s, *cols, iv, false, o),
+                Combiner::Mul => kernels::reduce_rows_wide(s, *cols, iv, true, o),
+                Combiner::Max => kernels::reduce_rows_fold(s, *cols, iv, BinOp::Max, o),
+                Combiner::Min => kernels::reduce_rows_fold(s, *cols, iv, BinOp::Min, o),
+                Combiner::Generic(se) => {
+                    for (r, slot) in o.iter_mut().enumerate() {
+                        let mut acc = iv;
+                        for &v in &s[r * cols..(r + 1) * cols] {
+                            acc = eval_sexpr(se, acc, v);
+                        }
+                        *slot = acc;
+                    }
+                }
+            }
+        }
+        ReduceShape::Scatter { in_dims, istr, kept, out_n } => {
+            let oi_of = |li: usize| {
+                let mut oi = 0usize;
+                for &(d, os) in kept {
+                    oi += ((li / istr[d]) % in_dims[d]) * os;
+                }
+                oi
+            };
+            match comb {
+                // sum/product accumulate in f64 (oracle grade, same as the
+                // tree-walker: a reduce can span millions of elements)
+                Combiner::Add | Combiner::Mul => {
+                    let mul = matches!(comb, Combiner::Mul);
+                    let mut acc = vec![iv as f64; *out_n];
+                    for (li, &v) in s.iter().enumerate() {
+                        let oi = oi_of(li);
+                        if mul {
+                            acc[oi] *= v as f64;
+                        } else {
+                            acc[oi] += v as f64;
+                        }
+                    }
+                    for (o, a) in out[..*out_n].iter_mut().zip(&acc) {
+                        *o = *a as f32;
+                    }
+                }
+                _ => {
+                    kernels::fill(&mut out[..*out_n], iv);
+                    for (li, &v) in s.iter().enumerate() {
+                        let oi = oi_of(li);
+                        out[oi] = comb_apply(comb, out[oi], v);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::hlo::eval::evaluate;
+    use crate::runtime::hlo::parser::parse_module;
+    use crate::util::compare::allclose;
+
+    fn t(data: &[f32]) -> Tensor {
+        Tensor::from_vec(data.to_vec())
+    }
+
+    /// Run through both the tree-walker and the plan; assert agreement and
+    /// return the plan outputs.
+    fn run_both(text: &str, inputs: &[&Tensor]) -> Vec<Tensor> {
+        let m = parse_module(text).unwrap();
+        let want = evaluate(&m, inputs).unwrap();
+        for opts in [
+            PlanOptions { reuse_buffers: true },
+            PlanOptions { reuse_buffers: false },
+        ] {
+            let plan = ExecutablePlan::compile_with(&m, opts).unwrap();
+            let got = plan.execute(inputs).unwrap();
+            assert_eq!(got.len(), want.len());
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.shape, w.shape);
+                assert!(allclose(g, w, 0.0, 0.0), "arena={}: {:?} vs {:?}", opts.reuse_buffers, g.data, w.data);
+            }
+        }
+        let plan = ExecutablePlan::compile(&m).unwrap();
+        plan.execute(inputs).unwrap()
+    }
+
+    #[test]
+    fn relu_like_chain_fuses_to_one_step() {
+        let text = "HloModule t\n\nENTRY e {\n  x = f32[8]{0} parameter(0)\n  z = f32[] constant(0)\n  zb = f32[8]{0} broadcast(z), dimensions={}\n  ROOT r = f32[8]{0} maximum(x, zb)\n}\n";
+        let m = parse_module(text).unwrap();
+        let plan = ExecutablePlan::compile(&m).unwrap();
+        assert_eq!(plan.step_count(), 1, "broadcast + maximum should fuse");
+        assert_eq!(plan.slot_count(), 1);
+        let x = t(&[-2.0, -1.0, 0.0, 1.0, 2.0, -0.5, 0.5, 3.0]);
+        let out = plan.execute(&[&x]).unwrap();
+        assert_eq!(out[0].data, vec![0.0, 0.0, 0.0, 1.0, 2.0, 0.0, 0.5, 3.0]);
+        run_both(text, &[&x]);
+    }
+
+    #[test]
+    fn softmax_module_matches_tree_walker() {
+        let text = "HloModule t\n\nrmax {\n  a = f32[] parameter(0)\n  b = f32[] parameter(1)\n  ROOT m = f32[] maximum(a, b)\n}\n\nradd {\n  a = f32[] parameter(0)\n  b = f32[] parameter(1)\n  ROOT s = f32[] add(a, b)\n}\n\nENTRY e {\n  x = f32[4,8]{1,0} parameter(0)\n  ninf = f32[] constant(-inf)\n  mx = f32[4]{0} reduce(x, ninf), dimensions={1}, to_apply=rmax\n  mb = f32[4,8]{1,0} broadcast(mx), dimensions={0}\n  sh = f32[4,8]{1,0} subtract(x, mb)\n  ex = f32[4,8]{1,0} exponential(sh)\n  z = f32[] constant(0)\n  sm = f32[4]{0} reduce(ex, z), dimensions={1}, to_apply=radd\n  sb = f32[4,8]{1,0} broadcast(sm), dimensions={0}\n  ROOT y = f32[4,8]{1,0} divide(ex, sb)\n}\n";
+        let x = Tensor::new(
+            vec![4, 8],
+            DType::F32,
+            (0..32).map(|i| ((i * 7 % 13) as f32) - 6.0).collect(),
+        );
+        let out = run_both(text, &[&x]);
+        // rows sum to 1
+        for r in 0..4 {
+            let s: f32 = out[0].data[r * 8..(r + 1) * 8].iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn call_select_compare_chain_is_inlined() {
+        // leaky-relu via call, as jnp.where lowers
+        let text = "HloModule t\n\n_where.1 {\n  p = pred[4]{0} parameter(0)\n  a = f32[4]{0} parameter(1)\n  b = f32[4]{0} parameter(2)\n  ROOT s = f32[4]{0} select(p, a, b)\n}\n\nENTRY e {\n  x = f32[4]{0} parameter(0)\n  zero = f32[] constant(0)\n  zb = f32[4]{0} broadcast(zero), dimensions={}\n  c = pred[4]{0} compare(x, zb), direction=GE\n  tenth = f32[] constant(0.1)\n  tb = f32[4]{0} broadcast(tenth), dimensions={}\n  lo = f32[4]{0} multiply(x, tb)\n  ROOT w = f32[4]{0} call(c, x, lo), to_apply=_where.1\n}\n";
+        let m = parse_module(text).unwrap();
+        let plan = ExecutablePlan::compile(&m).unwrap();
+        // x has three consumers, so it stays an input; everything else
+        // fuses into the one select expression
+        assert_eq!(plan.step_count(), 1, "call body should inline and fuse");
+        let x = t(&[-2.0, -0.5, 0.0, 3.0]);
+        let out = run_both(text, &[&x]);
+        assert!(allclose(&out[0], &t(&[-0.2, -0.05, 0.0, 3.0]), 1e-6, 1e-7));
+    }
+
+    #[test]
+    fn transpose_and_dot_match_tree_walker() {
+        let text = "HloModule t\n\nENTRY e {\n  a = f32[2,3]{1,0} parameter(0)\n  b = f32[3,2]{1,0} parameter(1)\n  at = f32[3,2]{1,0} transpose(a), dimensions={1,0}\n  s = f32[3,2]{1,0} add(at, b)\n  d = f32[2,2]{1,0} dot(a, s), lhs_contracting_dims={1}, rhs_contracting_dims={0}\n  ROOT o = (f32[3,2], f32[2,2]) tuple(s, d)\n}\n";
+        let a = Tensor::new(vec![2, 3], DType::F32, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Tensor::new(vec![3, 2], DType::F32, vec![7., 8., 9., 10., 11., 12.]);
+        run_both(text, &[&a, &b]);
+    }
+
+    #[test]
+    fn cumsum_scan_and_generic_window_match() {
+        let scan = "HloModule t\n\nr {\n  a = f32[] parameter(0)\n  b = f32[] parameter(1)\n  ROOT s = f32[] add(a, b)\n}\n\nENTRY e {\n  x = f32[2,4]{1,0} parameter(0)\n  z = f32[] constant(0)\n  ROOT w = f32[2,4]{1,0} reduce-window(x, z), window={size=1x4 pad=0_0x3_0}, to_apply=r\n}\n";
+        let x = Tensor::new(vec![2, 4], DType::F32, vec![1., 2., 3., 4., 10., 20., 30., 40.]);
+        let out = run_both(scan, &[&x]);
+        assert_eq!(out[0].data, vec![1., 3., 6., 10., 10., 30., 60., 100.]);
+
+        // reverse scan (pad on the high side): output i sees elements i..
+        let rev = "HloModule t\n\nr {\n  a = f32[] parameter(0)\n  b = f32[] parameter(1)\n  ROOT s = f32[] add(a, b)\n}\n\nENTRY e {\n  x = f32[2,4]{1,0} parameter(0)\n  z = f32[] constant(0)\n  ROOT w = f32[2,4]{1,0} reduce-window(x, z), window={size=1x4 pad=0_0x0_3}, to_apply=r\n}\n";
+        let out = run_both(rev, &[&x]);
+        assert_eq!(out[0].data, vec![10., 9., 7., 4., 100., 90., 70., 40.]);
+
+        let win = "HloModule t\n\nr {\n  a = f32[] parameter(0)\n  b = f32[] parameter(1)\n  ROOT s = f32[] maximum(a, b)\n}\n\nENTRY e {\n  x = f32[4]{0} parameter(0)\n  z = f32[] constant(-inf)\n  ROOT w = f32[3]{0} reduce-window(x, z), window={size=2}, to_apply=r\n}\n";
+        let x = t(&[1., 5., 2., 4.]);
+        let out = run_both(win, &[&x]);
+        assert_eq!(out[0].data, vec![5., 5., 4.]);
+    }
+
+    #[test]
+    fn generic_combiner_compiles_to_scalar_expr() {
+        // combiner a + 2*b: not a recognized monoid
+        let text = "HloModule t\n\nr {\n  a = f32[] parameter(0)\n  b = f32[] parameter(1)\n  c = f32[] constant(2)\n  s = f32[] multiply(b, c)\n  ROOT o = f32[] add(a, s)\n}\n\nENTRY e {\n  x = f32[3]{0} parameter(0)\n  z = f32[] constant(0)\n  ROOT red = f32[]{} reduce(x, z), dimensions={0}, to_apply=r\n}\n";
+        let out = run_both(text, &[&t(&[1.0, 2.0, 3.0])]);
+        assert_eq!(out[0].data, vec![12.0]);
+    }
+
+    #[test]
+    fn non_suffix_reduce_takes_scatter_path() {
+        let text = "HloModule t\n\nr {\n  a = f32[] parameter(0)\n  b = f32[] parameter(1)\n  ROOT s = f32[] add(a, b)\n}\n\nENTRY e {\n  x = f32[2,3]{1,0} parameter(0)\n  z = f32[] constant(0)\n  ROOT red = f32[3]{0} reduce(x, z), dimensions={0}, to_apply=r\n}\n";
+        let x = Tensor::new(vec![2, 3], DType::F32, vec![1., 5., 2., -1., 0., 4.]);
+        let out = run_both(text, &[&x]);
+        assert_eq!(out[0].data, vec![0.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn multi_output_tuple_with_shared_intermediates() {
+        // adam-shaped: intermediates are both outputs and operands
+        let text = "HloModule t\n\nENTRY e {\n  x = f32[4]{0} parameter(0)\n  a = f32[4]{0} add(x, x)\n  b = f32[4]{0} multiply(a, x)\n  ROOT o = (f32[4], f32[4]) tuple(a, b)\n}\n";
+        let x = t(&[1., 2., 3., 4.]);
+        let out = run_both(text, &[&x]);
+        assert_eq!(out[0].data, vec![2., 4., 6., 8.]);
+        assert_eq!(out[1].data, vec![2., 8., 18., 32.]);
+    }
+
+    #[test]
+    fn arena_never_aliases_a_live_operand() {
+        // `a` is materialized early (two consumers) and stays live across
+        // many short-lived buffers that churn the free list; its slot must
+        // never be recycled while live, or z1/z2 read garbage
+        let text = "HloModule t\n\nENTRY e {\n  x = f32[64]{0} parameter(0)\n  a = f32[64]{0} negate(x)\n  b = f32[64]{0} exponential(x)\n  c = f32[64]{0} add(b, b)\n  d = f32[64]{0} multiply(c, c)\n  g = f32[64]{0} maximum(d, d)\n  h = f32[64]{0} minimum(g, g)\n  z1 = f32[64]{0} add(a, h)\n  z2 = f32[64]{0} multiply(a, h)\n  ROOT o = (f32[64], f32[64]) tuple(z1, z2)\n}\n";
+        let m = parse_module(text).unwrap();
+        let plan = ExecutablePlan::compile(&m).unwrap();
+        // recycling must actually happen for the test to mean anything
+        assert!(
+            plan.slot_count() < plan.step_count(),
+            "expected the arena to recycle buffers ({} slots / {} steps)",
+            plan.slot_count(),
+            plan.step_count()
+        );
+        let x = Tensor::from_vec((0..64).map(|i| (i as f32) * 0.1 - 3.2).collect());
+        run_both(text, &[&x]);
+    }
+
+    #[test]
+    fn scalar_output_and_dead_code() {
+        let text = "HloModule t\n\nr {\n  a = f32[] parameter(0)\n  b = f32[] parameter(1)\n  ROOT s = f32[] add(a, b)\n}\n\nENTRY e {\n  x = f32[6]{0} parameter(0)\n  dead = f32[6]{0} exponential(x)\n  z = f32[] constant(0)\n  s = f32[] reduce(x, z), dimensions={0}, to_apply=r\n  c = f32[] constant(6)\n  mean = f32[] divide(s, c)\n  ROOT r1 = f32[1]{0} reshape(mean)\n}\n";
+        let x = t(&[1., 2., 3., 4., 5., 6.]);
+        let out = run_both(text, &[&x]);
+        assert_eq!(out[0].shape, vec![1]);
+        assert!((out[0].data[0] - 3.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dead_code_elimination_is_transitive() {
+        // dead1 is consumed only by the dead reduce: BOTH must be dropped,
+        // including the materializing reduce step, leaving only the live
+        // negate — one fused step
+        let text = "HloModule t\n\nr {\n  a = f32[] parameter(0)\n  b = f32[] parameter(1)\n  ROOT s = f32[] add(a, b)\n}\n\nENTRY e {\n  x = f32[6]{0} parameter(0)\n  dead1 = f32[6]{0} exponential(x)\n  z = f32[] constant(0)\n  dead2 = f32[] reduce(dead1, z), dimensions={0}, to_apply=r\n  ROOT y = f32[6]{0} negate(x)\n}\n";
+        let m = parse_module(text).unwrap();
+        let plan = ExecutablePlan::compile(&m).unwrap();
+        assert_eq!(plan.step_count(), 1, "dead reduce chain must not be compiled");
+        let x = t(&[1., 2., 3., 4., 5., 6.]);
+        run_both(text, &[&x]);
+    }
+
+    #[test]
+    fn input_validation_matches_oracle_contract() {
+        let text = "HloModule t\n\nENTRY e {\n  x = f32[2]{0} parameter(0)\n  ROOT n = f32[2]{0} negate(x)\n}\n";
+        let m = parse_module(text).unwrap();
+        let plan = ExecutablePlan::compile(&m).unwrap();
+        assert!(plan.execute(&[]).is_err());
+        let wrong = t(&[1.0, 2.0, 3.0]);
+        let e = plan.execute(&[&wrong]).unwrap_err();
+        assert!(e.contains("expects shape"), "{e}");
+    }
+
+    #[test]
+    fn unsupported_opcode_fails_at_compile_time() {
+        let text = "HloModule t\n\nENTRY e {\n  x = f32[2]{0} parameter(0)\n  ROOT y = f32[2]{0} frobnicate(x)\n}\n";
+        let m = parse_module(text).unwrap();
+        let e = ExecutablePlan::compile(&m).unwrap_err();
+        assert!(e.contains("frobnicate"), "{e}");
+    }
+
+    #[test]
+    fn root_can_be_a_parameter_or_constant() {
+        let text = "HloModule t\n\nENTRY e {\n  x = f32[3]{0} parameter(0)\n  ROOT o = (f32[3], f32[3]) tuple(x, x)\n}\n";
+        let x = t(&[1., 2., 3.]);
+        let out = run_both(text, &[&x]);
+        assert_eq!(out[0].data, out[1].data);
+
+        let text = "HloModule t\n\nENTRY e {\n  ROOT c = f32[2,2]{1,0} constant({ {1, 2}, {3, 4} })\n}\n";
+        let out = run_both(text, &[]);
+        assert_eq!(out[0].data, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn scratch_reuse_is_stable_across_runs() {
+        let text = "HloModule t\n\nENTRY e {\n  x = f32[512]{0} parameter(0)\n  e1 = f32[512]{0} exponential(x)\n  ROOT s = f32[512]{0} multiply(e1, x)\n}\n";
+        let m = parse_module(text).unwrap();
+        let plan = ExecutablePlan::compile(&m).unwrap();
+        let mut scratch = PlanScratch::default();
+        let x1 = Tensor::from_vec((0..512).map(|i| (i as f32) / 512.0).collect());
+        let x2 = Tensor::from_vec((0..512).map(|i| -(i as f32) / 256.0).collect());
+        let a1 = plan.execute_with_scratch(&[&x1], &mut scratch).unwrap();
+        let b = plan.execute_with_scratch(&[&x2], &mut scratch).unwrap();
+        let a2 = plan.execute_with_scratch(&[&x1], &mut scratch).unwrap();
+        assert_eq!(a1[0].data, a2[0].data);
+        assert!(allclose(&b[0], &evaluate(&m, &[&x2]).unwrap()[0], 0.0, 0.0));
+    }
+}

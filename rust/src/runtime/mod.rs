@@ -11,8 +11,14 @@
 //! (`Rc`-backed client handles). The interpreter removes both
 //! constraints: [`GoldenOracle`] and [`OracleRegistry`] are plain data
 //! (`Send + Sync`), so coordinator workers can cross-check suite results
-//! against L2 in parallel — see
-//! [`crate::coordinator::service::cross_check_suite`].
+//! against L2 in parallel — the check is folded into
+//! [`crate::coordinator::service::run_suite`] via `SuiteConfig::golden`.
+//!
+//! Execution is compile-once/execute-many: loading an artifact compiles it
+//! to an [`hlo::ExecutablePlan`] (call inlining, fused elementwise loop
+//! nests, resolved reduce combiners, a liveness-driven buffer arena), and
+//! every `run` executes that plan. See `rust/benches/hotpath.rs` for the
+//! measured speedup over the retired tree-walking path.
 
 pub mod hlo;
 
@@ -47,10 +53,14 @@ impl fmt::Display for RuntimeError {
 
 impl std::error::Error for RuntimeError {}
 
-/// A loaded golden computation, executable on host tensors.
+/// A loaded golden computation, executable on host tensors. Parsing and
+/// plan compilation happen once at load; every [`GoldenOracle::run`]
+/// executes the compiled plan (the tree-walking evaluator remains as a
+/// fallback for modules outside the plan compiler's op set).
 #[derive(Clone, Debug)]
 pub struct GoldenOracle {
     module: hlo::Module,
+    plan: Option<hlo::ExecutablePlan>,
     name: String,
 }
 
@@ -59,26 +69,37 @@ impl GoldenOracle {
     pub fn load(path: &Path) -> Result<GoldenOracle, RuntimeError> {
         let text = std::fs::read_to_string(path)
             .map_err(|err| RuntimeError::Io { path: path.to_path_buf(), err })?;
-        let name =
-            path.file_stem().and_then(|s| s.to_str()).unwrap_or("oracle").trim_end_matches(".hlo");
-        GoldenOracle::from_text(name, &text)
-            .map_err(|e| match e {
-                RuntimeError::Parse { err, .. } => {
-                    RuntimeError::Parse { path: path.to_path_buf(), err }
-                }
-                other => other,
-            })
+        let file = path.file_name().and_then(|s| s.to_str());
+        let name = file
+            .and_then(|f| f.strip_suffix(".hlo.txt"))
+            .or_else(|| path.file_stem().and_then(|s| s.to_str()))
+            .unwrap_or("oracle");
+        GoldenOracle::parse(name, &text)
+            .map_err(|err| RuntimeError::Parse { path: path.to_path_buf(), err })
     }
 
     /// Parse HLO text directly (used by tests and embedders).
     pub fn from_text(name: &str, text: &str) -> Result<GoldenOracle, RuntimeError> {
-        let module = hlo::parse_module(text)
-            .map_err(|err| RuntimeError::Parse { path: PathBuf::from(format!("<{name}>")), err })?;
-        Ok(GoldenOracle { module, name: name.to_string() })
+        GoldenOracle::parse(name, text)
+            .map_err(|err| RuntimeError::Parse { path: PathBuf::from(format!("<{name}>")), err })
+    }
+
+    /// Shared parse + plan-compile path behind [`load`] / [`from_text`]
+    /// (each caller wraps the parse error with its own path context once).
+    fn parse(name: &str, text: &str) -> Result<GoldenOracle, hlo::ParseError> {
+        let module = hlo::parse_module(text)?;
+        let plan = hlo::ExecutablePlan::compile(&module).ok();
+        Ok(GoldenOracle { module, plan, name: name.to_string() })
     }
 
     pub fn name(&self) -> &str {
         &self.name
+    }
+
+    /// Did the module compile to an [`hlo::ExecutablePlan`]? When false,
+    /// [`run`](GoldenOracle::run) falls back to the tree-walking evaluator.
+    pub fn has_plan(&self) -> bool {
+        self.plan.is_some()
     }
 
     /// Number of input tensors the oracle expects.
@@ -97,8 +118,11 @@ impl GoldenOracle {
     /// (aot.py lowers with `return_tuple=True`.) Scalar (rank-0) outputs
     /// are reported with shape `[1]`, matching the task-spec convention.
     pub fn run(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>, RuntimeError> {
-        let outs = hlo::evaluate(&self.module, inputs)
-            .map_err(|msg| RuntimeError::Eval { oracle: self.name.clone(), msg })?;
+        let outs = match &self.plan {
+            Some(plan) => plan.execute(inputs),
+            None => hlo::evaluate(&self.module, inputs),
+        }
+        .map_err(|msg| RuntimeError::Eval { oracle: self.name.clone(), msg })?;
         Ok(outs
             .into_iter()
             .map(|t| if t.shape.is_empty() { t.reshape(&[1]) } else { t })
@@ -199,6 +223,26 @@ mod tests {
             names.iter().any(|n| n == "softmax") && names.iter().any(|n| n == "gelu"),
             "checked-in artifacts/ fixtures missing: {names:?}"
         );
+    }
+
+    #[test]
+    fn load_strips_the_full_artifact_suffix() {
+        let reg = OracleRegistry::default_dir();
+        let oracle = reg.get("softmax").expect("softmax.hlo.txt is checked in");
+        assert_eq!(oracle.name(), "softmax");
+    }
+
+    #[test]
+    fn oracle_falls_back_to_evaluator_without_a_plan() {
+        // `frobnicate` parses (Opcode::Other) but is outside the plan
+        // compiler's op set; the oracle must still load, report no plan,
+        // and surface the evaluator's error at run time
+        let text = "HloModule t\n\nENTRY e {\n  x = f32[2]{0} parameter(0)\n  ROOT y = f32[2]{0} frobnicate(x)\n}\n";
+        let oracle = GoldenOracle::from_text("frob", text).unwrap();
+        assert!(!oracle.has_plan());
+        let x = Tensor::from_vec(vec![1.0, 2.0]);
+        let err = oracle.run(&[&x]).unwrap_err();
+        assert!(err.to_string().contains("frobnicate"), "{err}");
     }
 
     #[test]

@@ -4,14 +4,58 @@
 //! concrete host tensors, producing both the numeric outputs (for Pass@1
 //! checks against references) and a [`TimingReport`] (for Fastₓ performance
 //! metrics). See module docs in [`super`] for the modeling choices.
+//!
+//! The elementwise / reduce / matmul data loops are the shared op-kernel
+//! layer in [`crate::util::kernels`] — the same loops the HLO oracle's
+//! execution plans run on — so the simulator and the oracle cannot drift
+//! apart numerically.
 
 use super::cost;
 use super::host::{eval_host, HostEval};
 use super::timing::{wave_makespan, CoreTimeline, SlotPool, TimingReport, Unit};
 use crate::ascendc::ir::*;
+use crate::util::kernels::{self, BinOp, UnaryOp};
 use crate::util::tensor::{f16_round_trip, DType, Tensor};
 use std::collections::{HashMap, VecDeque};
 use std::fmt;
+
+fn vec_bin_op(op: &VecBinOp) -> BinOp {
+    match op {
+        VecBinOp::Add => BinOp::Add,
+        VecBinOp::Sub => BinOp::Sub,
+        VecBinOp::Mul => BinOp::Mul,
+        VecBinOp::Div => BinOp::Div,
+        VecBinOp::Max => BinOp::Max,
+        VecBinOp::Min => BinOp::Min,
+    }
+}
+
+fn vec_scalar_op(op: &VecScalarOp) -> BinOp {
+    match op {
+        VecScalarOp::Adds => BinOp::Add,
+        VecScalarOp::Muls => BinOp::Mul,
+        VecScalarOp::Maxs => BinOp::Max,
+        VecScalarOp::Mins => BinOp::Min,
+    }
+}
+
+/// AscendC vector unary -> shared kernel op. `Copy` has no kernel (the
+/// staging copy is a no-op on the data).
+fn vec_un_op(op: &VecUnOp) -> Option<UnaryOp> {
+    Some(match op {
+        VecUnOp::Exp => UnaryOp::Exp,
+        VecUnOp::Ln => UnaryOp::Ln,
+        VecUnOp::Abs => UnaryOp::Abs,
+        VecUnOp::Sqrt => UnaryOp::Sqrt,
+        VecUnOp::Rsqrt => UnaryOp::Rsqrt,
+        VecUnOp::Reciprocal => UnaryOp::Recip,
+        VecUnOp::Relu => UnaryOp::Relu,
+        VecUnOp::Tanh => UnaryOp::Tanh,
+        VecUnOp::Sign => UnaryOp::SignZero,
+        VecUnOp::Floor => UnaryOp::Floor,
+        VecUnOp::Copy => return None,
+    })
+}
 
 /// Simulation failure. Functional failures (OOB access, queue deadlock)
 /// map to "kernel produced wrong results / hung" in the benchmark metrics.
@@ -524,17 +568,7 @@ impl<'a> Interp<'a> {
                 let (_, rb, _) = self.read_into(b, n, ScratchSel::B)?;
                 let deps = ra.max(rb).max(self.local_ready(&dst.name));
                 let mut out = std::mem::take(&mut self.scratch_a);
-                {
-                    let bs = &self.scratch_b;
-                    match op {
-                        VecBinOp::Add => out.iter_mut().zip(bs).for_each(|(x, &y)| *x += y),
-                        VecBinOp::Sub => out.iter_mut().zip(bs).for_each(|(x, &y)| *x -= y),
-                        VecBinOp::Mul => out.iter_mut().zip(bs).for_each(|(x, &y)| *x *= y),
-                        VecBinOp::Div => out.iter_mut().zip(bs).for_each(|(x, &y)| *x /= y),
-                        VecBinOp::Max => out.iter_mut().zip(bs).for_each(|(x, &y)| *x = x.max(y)),
-                        VecBinOp::Min => out.iter_mut().zip(bs).for_each(|(x, &y)| *x = x.min(y)),
-                    }
-                }
+                kernels::binary_inplace(&mut out, &self.scratch_b, vec_bin_op(op));
                 let end = self.tl.issue(Unit::Vector, cost::vec_cycles(n as f64, 4.0), deps);
                 self.write_from(dst, &out, end)?;
                 self.scratch_a = out;
@@ -548,12 +582,7 @@ impl<'a> Interp<'a> {
                 let (_, rs, _) = self.read_into(src, n, ScratchSel::A)?;
                 let deps = rs.max(self.local_ready(&dst.name));
                 let mut out = std::mem::take(&mut self.scratch_a);
-                match op {
-                    VecScalarOp::Adds => out.iter_mut().for_each(|x| *x += s),
-                    VecScalarOp::Muls => out.iter_mut().for_each(|x| *x *= s),
-                    VecScalarOp::Maxs => out.iter_mut().for_each(|x| *x = x.max(s)),
-                    VecScalarOp::Mins => out.iter_mut().for_each(|x| *x = x.min(s)),
-                }
+                kernels::scalar_rhs_inplace(&mut out, s, vec_scalar_op(op));
                 let end = self.tl.issue(Unit::Vector, cost::vec_cycles(n as f64, 4.0), deps);
                 self.write_from(dst, &out, end)?;
                 self.scratch_a = out;
@@ -565,26 +594,8 @@ impl<'a> Interp<'a> {
                 let (_, rs, _) = self.read_into(src, n, ScratchSel::A)?;
                 let deps = rs.max(self.local_ready(&dst.name));
                 let mut out = std::mem::take(&mut self.scratch_a);
-                match op {
-                    VecUnOp::Exp => out.iter_mut().for_each(|x| *x = x.exp()),
-                    VecUnOp::Ln => out.iter_mut().for_each(|x| *x = x.ln()),
-                    VecUnOp::Abs => out.iter_mut().for_each(|x| *x = x.abs()),
-                    VecUnOp::Sqrt => out.iter_mut().for_each(|x| *x = x.sqrt()),
-                    VecUnOp::Rsqrt => out.iter_mut().for_each(|x| *x = 1.0 / x.sqrt()),
-                    VecUnOp::Reciprocal => out.iter_mut().for_each(|x| *x = 1.0 / *x),
-                    VecUnOp::Relu => out.iter_mut().for_each(|x| *x = x.max(0.0)),
-                    VecUnOp::Tanh => out.iter_mut().for_each(|x| *x = x.tanh()),
-                    VecUnOp::Sign => out.iter_mut().for_each(|x| {
-                        *x = if *x > 0.0 {
-                            1.0
-                        } else if *x < 0.0 {
-                            -1.0
-                        } else {
-                            0.0
-                        }
-                    }),
-                    VecUnOp::Floor => out.iter_mut().for_each(|x| *x = x.floor()),
-                    VecUnOp::Copy => {}
+                if let Some(k) = vec_un_op(op) {
+                    kernels::unary_inplace(&mut out, k);
                 }
                 let end = self.tl.issue(Unit::Vector, cost::vec_cycles(n as f64, 4.0), deps);
                 self.write_from(dst, &out, end)?;
@@ -611,9 +622,13 @@ impl<'a> Interp<'a> {
                     return Err(self.kerr("Reduce over zero elements".into()));
                 }
                 let result = match kind {
-                    ReduceKind::Sum => self.scratch_a.iter().sum::<f32>(),
-                    ReduceKind::Max => self.scratch_a.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b)),
-                    ReduceKind::Min => self.scratch_a.iter().fold(f32::INFINITY, |a, &b| a.min(b)),
+                    ReduceKind::Sum => kernels::fold_f32(&self.scratch_a, 0.0, BinOp::Add),
+                    ReduceKind::Max => {
+                        kernels::fold_f32(&self.scratch_a, f32::NEG_INFINITY, BinOp::Max)
+                    }
+                    ReduceKind::Min => {
+                        kernels::fold_f32(&self.scratch_a, f32::INFINITY, BinOp::Min)
+                    }
                 };
                 let deps = rs.max(self.local_ready(&dst.name));
                 let end = self.tl.issue(Unit::Vector, cost::reduce_cycles(n as f64, 4.0), deps);
@@ -662,11 +677,7 @@ impl<'a> Interp<'a> {
                 let (_, ra, _) = self.read_into(a, n, ScratchSel::A)?;
                 let (_, rb, _) = self.read_into(b, n, ScratchSel::B)?;
                 let mut out = std::mem::take(&mut self.scratch_a);
-                for i in 0..n {
-                    if cvals[i] < 0.0 {
-                        out[i] = self.scratch_b[i];
-                    }
-                }
+                kernels::select_if_negative(&mut out[..n], &cvals[..n], &self.scratch_b[..n]);
                 let deps = rc.max(ra).max(rb).max(self.local_ready(&dst.name));
                 let end = self.tl.issue(Unit::Vector, 2.0 * cost::vec_cycles(n as f64, 4.0), deps);
                 self.write_from(dst, &out, end)?;
@@ -689,15 +700,7 @@ impl<'a> Interp<'a> {
                 let (_, rb, _) = self.read_into(b, k * n, ScratchSel::B)?;
                 let (_, rc, _) = self.read_into(c, m * n, ScratchSel::A)?;
                 let mut out = std::mem::take(&mut self.scratch_a);
-                for i in 0..m {
-                    for j in 0..n {
-                        let mut acc = out[i * n + j];
-                        for p in 0..k {
-                            acc += avals[i * k + p] * self.scratch_b[p * n + j];
-                        }
-                        out[i * n + j] = acc;
-                    }
-                }
+                kernels::matmul_acc(&mut out[..m * n], &avals[..m * k], &self.scratch_b[..k * n], m, k, n);
                 let deps = ra.max(rb).max(rc);
                 let end = self
                     .tl

@@ -1,0 +1,434 @@
+//! Shared low-level op-kernel layer: the flat slice loops both interpreters
+//! are built on. The HLO oracle's [`crate::runtime::hlo::plan`] executor and
+//! the AscendC simulator (`crate::sim::exec`) used to hand-roll their own
+//! elementwise/reduce loops over the same data; keeping one copy here means
+//! the two runtimes cannot diverge numerically, and there is a single place
+//! to keep the loops autovectorizer-friendly (simple `iter_mut().zip(..)`
+//! shapes over contiguous `f32` slices, no per-element dispatch).
+//!
+//! Everything operates on raw `&[f32]` / `&mut [f32]` so callers can run
+//! the loops over whole tensors or over cache-sized chunks (the fused
+//! elementwise executor in `runtime::hlo::plan` does the latter).
+
+/// Elementwise unary operations shared by both interpreters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UnaryOp {
+    Exp,
+    Ln,
+    Tanh,
+    Sqrt,
+    Rsqrt,
+    Recip,
+    Neg,
+    Abs,
+    Floor,
+    Ceil,
+    Relu,
+    /// HLO `sign`: preserves ±0 and NaN (returns `x` when neither > nor <).
+    Sign,
+    /// AscendC-style sign: maps ±0 and NaN to 0.0.
+    SignZero,
+    Logistic,
+}
+
+impl UnaryOp {
+    #[inline]
+    pub fn apply(self, x: f32) -> f32 {
+        match self {
+            UnaryOp::Exp => x.exp(),
+            UnaryOp::Ln => x.ln(),
+            UnaryOp::Tanh => x.tanh(),
+            UnaryOp::Sqrt => x.sqrt(),
+            UnaryOp::Rsqrt => 1.0 / x.sqrt(),
+            UnaryOp::Recip => 1.0 / x,
+            UnaryOp::Neg => -x,
+            UnaryOp::Abs => x.abs(),
+            UnaryOp::Floor => x.floor(),
+            UnaryOp::Ceil => x.ceil(),
+            UnaryOp::Relu => x.max(0.0),
+            UnaryOp::Sign => {
+                if x > 0.0 {
+                    1.0
+                } else if x < 0.0 {
+                    -1.0
+                } else {
+                    x
+                }
+            }
+            UnaryOp::SignZero => {
+                if x > 0.0 {
+                    1.0
+                } else if x < 0.0 {
+                    -1.0
+                } else {
+                    0.0
+                }
+            }
+            UnaryOp::Logistic => 1.0 / (1.0 + (-x).exp()),
+        }
+    }
+}
+
+/// Elementwise binary operations shared by both interpreters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Max,
+    Min,
+    Pow,
+}
+
+impl BinOp {
+    #[inline]
+    pub fn apply(self, a: f32, b: f32) -> f32 {
+        match self {
+            BinOp::Add => a + b,
+            BinOp::Sub => a - b,
+            BinOp::Mul => a * b,
+            BinOp::Div => a / b,
+            BinOp::Max => a.max(b),
+            BinOp::Min => a.min(b),
+            BinOp::Pow => a.powf(b),
+        }
+    }
+}
+
+/// Comparison predicates (HLO `compare` directions).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CmpOp {
+    Eq,
+    Ne,
+    Ge,
+    Gt,
+    Le,
+    Lt,
+}
+
+impl CmpOp {
+    #[inline]
+    pub fn apply(self, a: f32, b: f32) -> bool {
+        match self {
+            CmpOp::Eq => a == b,
+            CmpOp::Ne => a != b,
+            CmpOp::Ge => a >= b,
+            CmpOp::Gt => a > b,
+            CmpOp::Le => a <= b,
+            CmpOp::Lt => a < b,
+        }
+    }
+}
+
+/// `xs[i] = op(xs[i])`. One tight per-op loop: the match is hoisted out of
+/// the element loop so simple ops (neg/abs/relu/max) autovectorize.
+pub fn unary_inplace(xs: &mut [f32], op: UnaryOp) {
+    match op {
+        UnaryOp::Exp => xs.iter_mut().for_each(|x| *x = x.exp()),
+        UnaryOp::Ln => xs.iter_mut().for_each(|x| *x = x.ln()),
+        UnaryOp::Tanh => xs.iter_mut().for_each(|x| *x = x.tanh()),
+        UnaryOp::Sqrt => xs.iter_mut().for_each(|x| *x = x.sqrt()),
+        UnaryOp::Rsqrt => xs.iter_mut().for_each(|x| *x = 1.0 / x.sqrt()),
+        UnaryOp::Recip => xs.iter_mut().for_each(|x| *x = 1.0 / *x),
+        UnaryOp::Neg => xs.iter_mut().for_each(|x| *x = -*x),
+        UnaryOp::Abs => xs.iter_mut().for_each(|x| *x = x.abs()),
+        UnaryOp::Floor => xs.iter_mut().for_each(|x| *x = x.floor()),
+        UnaryOp::Ceil => xs.iter_mut().for_each(|x| *x = x.ceil()),
+        UnaryOp::Relu => xs.iter_mut().for_each(|x| *x = x.max(0.0)),
+        UnaryOp::Sign => xs.iter_mut().for_each(|x| *x = UnaryOp::Sign.apply(*x)),
+        UnaryOp::SignZero => xs.iter_mut().for_each(|x| *x = UnaryOp::SignZero.apply(*x)),
+        UnaryOp::Logistic => xs.iter_mut().for_each(|x| *x = 1.0 / (1.0 + (-*x).exp())),
+    }
+}
+
+/// `xs[i] = op(xs[i], ys[i])` over `min(len)` elements.
+pub fn binary_inplace(xs: &mut [f32], ys: &[f32], op: BinOp) {
+    match op {
+        BinOp::Add => xs.iter_mut().zip(ys).for_each(|(x, &y)| *x += y),
+        BinOp::Sub => xs.iter_mut().zip(ys).for_each(|(x, &y)| *x -= y),
+        BinOp::Mul => xs.iter_mut().zip(ys).for_each(|(x, &y)| *x *= y),
+        BinOp::Div => xs.iter_mut().zip(ys).for_each(|(x, &y)| *x /= y),
+        BinOp::Max => xs.iter_mut().zip(ys).for_each(|(x, &y)| *x = x.max(y)),
+        BinOp::Min => xs.iter_mut().zip(ys).for_each(|(x, &y)| *x = x.min(y)),
+        BinOp::Pow => xs.iter_mut().zip(ys).for_each(|(x, &y)| *x = x.powf(y)),
+    }
+}
+
+/// `xs[i] = op(xs[i], s)`.
+pub fn scalar_rhs_inplace(xs: &mut [f32], s: f32, op: BinOp) {
+    match op {
+        BinOp::Add => xs.iter_mut().for_each(|x| *x += s),
+        BinOp::Sub => xs.iter_mut().for_each(|x| *x -= s),
+        BinOp::Mul => xs.iter_mut().for_each(|x| *x *= s),
+        BinOp::Div => xs.iter_mut().for_each(|x| *x /= s),
+        BinOp::Max => xs.iter_mut().for_each(|x| *x = x.max(s)),
+        BinOp::Min => xs.iter_mut().for_each(|x| *x = x.min(s)),
+        BinOp::Pow => xs.iter_mut().for_each(|x| *x = x.powf(s)),
+    }
+}
+
+/// `xs[i] = op(s, xs[i])` (the non-commutative orientation).
+pub fn scalar_lhs_inplace(s: f32, xs: &mut [f32], op: BinOp) {
+    match op {
+        BinOp::Add => xs.iter_mut().for_each(|x| *x = s + *x),
+        BinOp::Sub => xs.iter_mut().for_each(|x| *x = s - *x),
+        BinOp::Mul => xs.iter_mut().for_each(|x| *x = s * *x),
+        BinOp::Div => xs.iter_mut().for_each(|x| *x = s / *x),
+        BinOp::Max => xs.iter_mut().for_each(|x| *x = s.max(*x)),
+        BinOp::Min => xs.iter_mut().for_each(|x| *x = s.min(*x)),
+        BinOp::Pow => xs.iter_mut().for_each(|x| *x = s.powf(*x)),
+    }
+}
+
+/// `xs[i] = if cmp(xs[i], ys[i]) { 1.0 } else { 0.0 }`.
+pub fn compare_inplace(xs: &mut [f32], ys: &[f32], op: CmpOp) {
+    match op {
+        CmpOp::Eq => xs.iter_mut().zip(ys).for_each(|(x, &y)| *x = (*x == y) as u8 as f32),
+        CmpOp::Ne => xs.iter_mut().zip(ys).for_each(|(x, &y)| *x = (*x != y) as u8 as f32),
+        CmpOp::Ge => xs.iter_mut().zip(ys).for_each(|(x, &y)| *x = (*x >= y) as u8 as f32),
+        CmpOp::Gt => xs.iter_mut().zip(ys).for_each(|(x, &y)| *x = (*x > y) as u8 as f32),
+        CmpOp::Le => xs.iter_mut().zip(ys).for_each(|(x, &y)| *x = (*x <= y) as u8 as f32),
+        CmpOp::Lt => xs.iter_mut().zip(ys).for_each(|(x, &y)| *x = (*x < y) as u8 as f32),
+    }
+}
+
+/// HLO `select` with `xs` pre-loaded with the on-true values:
+/// `xs[i] = ys[i]` wherever `cond[i] == 0.0`.
+pub fn select_if_zero(xs: &mut [f32], cond: &[f32], ys: &[f32]) {
+    for ((x, &c), &y) in xs.iter_mut().zip(cond).zip(ys) {
+        if c == 0.0 {
+            *x = y;
+        }
+    }
+}
+
+/// AscendC `SelectGe` with `xs` pre-loaded with the on-true values:
+/// `xs[i] = ys[i]` wherever `cond[i] < 0.0`.
+pub fn select_if_negative(xs: &mut [f32], cond: &[f32], ys: &[f32]) {
+    for ((x, &c), &y) in xs.iter_mut().zip(cond).zip(ys) {
+        if c < 0.0 {
+            *x = y;
+        }
+    }
+}
+
+/// `xs[i] = v`.
+pub fn fill(xs: &mut [f32], v: f32) {
+    xs.iter_mut().for_each(|x| *x = v);
+}
+
+/// Sequential fold in `f32` (the AscendC vector-reduce semantics).
+pub fn fold_f32(xs: &[f32], init: f32, op: BinOp) -> f32 {
+    match op {
+        BinOp::Add => xs.iter().fold(init, |a, &b| a + b),
+        BinOp::Mul => xs.iter().fold(init, |a, &b| a * b),
+        BinOp::Max => xs.iter().fold(init, |a, &b| a.max(b)),
+        BinOp::Min => xs.iter().fold(init, |a, &b| a.min(b)),
+        _ => xs.iter().fold(init, |a, &b| op.apply(a, b)),
+    }
+}
+
+/// Row-wise sum/product reduction with `f64` accumulation (oracle grade —
+/// a row can span millions of elements). `src.len()` must be
+/// `out.len() * cols`; rows are contiguous (suffix reduction).
+pub fn reduce_rows_wide(src: &[f32], cols: usize, init: f32, mul: bool, out: &mut [f32]) {
+    for (r, slot) in out.iter_mut().enumerate() {
+        let row = &src[r * cols..(r + 1) * cols];
+        let mut acc = init as f64;
+        if mul {
+            for &v in row {
+                acc *= v as f64;
+            }
+        } else {
+            for &v in row {
+                acc += v as f64;
+            }
+        }
+        *slot = acc as f32;
+    }
+}
+
+/// Row-wise fold reduction in `f32` (max/min and exotic monoids).
+pub fn reduce_rows_fold(src: &[f32], cols: usize, init: f32, op: BinOp, out: &mut [f32]) {
+    for (r, slot) in out.iter_mut().enumerate() {
+        *slot = fold_f32(&src[r * cols..(r + 1) * cols], init, op);
+    }
+}
+
+/// Row-major strides (in elements) for a dense shape.
+pub fn row_major_strides(dims: &[usize]) -> Vec<usize> {
+    let mut s = vec![1usize; dims.len()];
+    for i in (0..dims.len().saturating_sub(1)).rev() {
+        s[i] = s[i + 1] * dims[i + 1];
+    }
+    s
+}
+
+/// Strided gather: `out[li] = src[Σ_d ((li / ostr[d]) % out_dims[d]) * sstr[d]]`.
+///
+/// One loop serves both `broadcast` (zero strides on broadcast dims) and
+/// `transpose` (permuted source strides).
+pub fn gather_strided(
+    src: &[f32],
+    out: &mut [f32],
+    out_dims: &[usize],
+    ostr: &[usize],
+    sstr: &[usize],
+) {
+    let rank = out_dims.len();
+    for (li, slot) in out.iter_mut().enumerate() {
+        let mut si = 0usize;
+        for d in 0..rank {
+            si += ((li / ostr[d]) % out_dims[d]) * sstr[d];
+        }
+        *slot = src[si];
+    }
+}
+
+/// `c[m,n] += a[m,k] · b[k,n]` (row-major, accumulating). The p-outer /
+/// n-inner loop order keeps the inner loop a contiguous FMA the
+/// autovectorizer handles, and matches the accumulation order both
+/// interpreters historically used (bitwise-stable refactor).
+pub fn matmul_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    for i in 0..m {
+        let crow = &mut c[i * n..(i + 1) * n];
+        for p in 0..k {
+            let av = a[i * k + p];
+            let brow = &b[p * n..(p + 1) * n];
+            for (cj, &bj) in crow.iter_mut().zip(brow) {
+                *cj += av * bj;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unary_ops_match_scalar_apply() {
+        let src = [0.5f32, -1.25, 0.0, 2.0];
+        for op in [
+            UnaryOp::Exp,
+            UnaryOp::Ln,
+            UnaryOp::Tanh,
+            UnaryOp::Sqrt,
+            UnaryOp::Rsqrt,
+            UnaryOp::Recip,
+            UnaryOp::Neg,
+            UnaryOp::Abs,
+            UnaryOp::Floor,
+            UnaryOp::Ceil,
+            UnaryOp::Relu,
+            UnaryOp::Sign,
+            UnaryOp::SignZero,
+            UnaryOp::Logistic,
+        ] {
+            let mut xs = src;
+            unary_inplace(&mut xs, op);
+            for (i, &x) in src.iter().enumerate() {
+                let want = op.apply(x);
+                assert!(
+                    xs[i] == want || (xs[i].is_nan() && want.is_nan()),
+                    "{op:?} at {i}: {} vs {want}",
+                    xs[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sign_variants_differ_only_at_zero_and_nan() {
+        assert_eq!(UnaryOp::Sign.apply(-0.0).to_bits(), (-0.0f32).to_bits());
+        assert!(UnaryOp::Sign.apply(f32::NAN).is_nan());
+        assert_eq!(UnaryOp::SignZero.apply(-0.0), 0.0);
+        assert_eq!(UnaryOp::SignZero.apply(f32::NAN), 0.0);
+        assert_eq!(UnaryOp::Sign.apply(3.0), 1.0);
+        assert_eq!(UnaryOp::SignZero.apply(-3.0), -1.0);
+    }
+
+    #[test]
+    fn binary_and_scalar_orientations() {
+        let mut xs = [6.0f32, 8.0];
+        binary_inplace(&mut xs, &[2.0, 4.0], BinOp::Div);
+        assert_eq!(xs, [3.0, 2.0]);
+        let mut xs = [3.0f32, 2.0];
+        scalar_rhs_inplace(&mut xs, 2.0, BinOp::Sub);
+        assert_eq!(xs, [1.0, 0.0]);
+        let mut xs = [3.0f32, 2.0];
+        scalar_lhs_inplace(2.0, &mut xs, BinOp::Sub);
+        assert_eq!(xs, [-1.0, 0.0]);
+        let mut xs = [2.0f32, 3.0];
+        scalar_lhs_inplace(2.0, &mut xs, BinOp::Pow);
+        assert_eq!(xs, [4.0, 8.0]);
+    }
+
+    #[test]
+    fn compare_and_select() {
+        let mut xs = [1.0f32, 2.0, 3.0];
+        compare_inplace(&mut xs, &[2.0, 2.0, 2.0], CmpOp::Ge);
+        assert_eq!(xs, [0.0, 1.0, 1.0]);
+        let mut a = [10.0f32, 20.0, 30.0];
+        select_if_zero(&mut a, &[1.0, 0.0, 1.0], &[-1.0, -2.0, -3.0]);
+        assert_eq!(a, [10.0, -2.0, 30.0]);
+        let mut a = [10.0f32, 20.0, 30.0];
+        select_if_negative(&mut a, &[0.5, -0.5, 0.0], &[-1.0, -2.0, -3.0]);
+        assert_eq!(a, [10.0, -2.0, 30.0]);
+    }
+
+    #[test]
+    fn folds_match_std() {
+        let xs = [1.0f32, 5.0, 2.0, -1.0];
+        assert_eq!(fold_f32(&xs, 0.0, BinOp::Add), xs.iter().sum::<f32>());
+        assert_eq!(fold_f32(&xs, f32::NEG_INFINITY, BinOp::Max), 5.0);
+        assert_eq!(fold_f32(&xs, f32::INFINITY, BinOp::Min), -1.0);
+    }
+
+    #[test]
+    fn reduce_rows_wide_sums_rows() {
+        let src = [1.0f32, 2.0, 3.0, 10.0, 20.0, 30.0];
+        let mut out = [0.0f32; 2];
+        reduce_rows_wide(&src, 3, 0.0, false, &mut out);
+        assert_eq!(out, [6.0, 60.0]);
+        let mut out = [0.0f32; 2];
+        reduce_rows_fold(&src, 3, f32::NEG_INFINITY, BinOp::Max, &mut out);
+        assert_eq!(out, [3.0, 30.0]);
+    }
+
+    #[test]
+    fn gather_strided_does_transpose_and_broadcast() {
+        // transpose [2,3] -> [3,2]
+        let src = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let out_dims = [3usize, 2];
+        let ostr = row_major_strides(&out_dims);
+        let mut out = [0.0f32; 6];
+        // source strides permuted: out dim 0 walks src dim 1 (stride 1),
+        // out dim 1 walks src dim 0 (stride 3)
+        gather_strided(&src, &mut out, &out_dims, &ostr, &[1, 3]);
+        assert_eq!(out, [1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
+        // broadcast row [3] -> [2,3]: zero stride on dim 0
+        let row = [7.0f32, 8.0, 9.0];
+        let out_dims = [2usize, 3];
+        let ostr = row_major_strides(&out_dims);
+        let mut out = [0.0f32; 6];
+        gather_strided(&row, &mut out, &out_dims, &ostr, &[0, 1]);
+        assert_eq!(out, [7.0, 8.0, 9.0, 7.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn matmul_acc_matches_naive() {
+        let a = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]; // 2x3
+        let b = [7.0f32, 8.0, 9.0, 10.0, 11.0, 12.0]; // 3x2
+        let mut c = [0.0f32; 4];
+        matmul_acc(&mut c, &a, &b, 2, 3, 2);
+        assert_eq!(c, [58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn strides_row_major() {
+        assert_eq!(row_major_strides(&[2, 3, 4]), vec![12, 4, 1]);
+        assert!(row_major_strides(&[]).is_empty());
+    }
+}

@@ -1,9 +1,11 @@
-//! Shared utilities: dense tensors, deterministic PRNG, numeric comparison,
-//! a small property-testing framework (the offline substitute for proptest),
-//! and a minimal JSON writer used by reports.
+//! Shared utilities: dense tensors, the low-level op-kernel layer both
+//! interpreters execute on, deterministic PRNG, numeric comparison, a small
+//! property-testing framework (the offline substitute for proptest), and a
+//! minimal JSON writer used by reports.
 
 pub mod compare;
 pub mod json;
+pub mod kernels;
 pub mod prop;
 pub mod rng;
 pub mod tensor;

@@ -33,11 +33,36 @@ fn all_benchmark_artifacts_match_rust_references() {
         reg.list()
     );
     // parallel cross-check through the worker pool: the Send + Sync
-    // interpreter-backed oracle is shared by all workers
+    // plan-backed oracle is shared by all workers
     let checks = cross_check_suite(&tasks, &reg, 8, 20260710);
-    for c in &checks {
-        assert!(c.checked, "{}: artifact disappeared mid-test", c.name);
-        assert!(c.ok, "{}: {}", c.name, c.detail);
+    for (t, c) in tasks.iter().zip(&checks) {
+        assert!(c.checked, "{}: artifact disappeared mid-test", t.name);
+        assert!(c.ok, "{}: {}", t.name, c.detail);
+    }
+}
+
+#[test]
+fn every_fixture_compiles_to_an_executable_plan() {
+    // the compile-once path must cover the whole checked-in corpus — a
+    // fixture silently falling back to the tree-walker is a regression
+    let reg = registry();
+    for name in reg.list() {
+        let oracle = reg.get(&name).unwrap();
+        assert!(oracle.has_plan(), "{name}: fixture fell back to the tree-walking evaluator");
+    }
+}
+
+#[test]
+fn pooling_and_huber_fixtures_cross_check() {
+    // ROADMAP open item: fixtures beyond elementwise/MSE — 2D max pooling
+    // (generic reduce-window path) and Huber loss (compare/select + mean)
+    let reg = registry();
+    for name in ["maxpool2d", "huber_loss"] {
+        assert!(reg.available(name), "checked-in fixture artifacts/{name}.hlo.txt is missing");
+        let task = task_by_name(name).unwrap();
+        let c = ascendcraft::coordinator::service::cross_check_task(&task, &reg, 20260728);
+        assert!(c.checked, "{name}: artifact not executed");
+        assert!(c.ok, "{name}: {}", c.detail);
     }
 }
 

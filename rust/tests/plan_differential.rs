@@ -1,0 +1,273 @@
+//! Differential tests for the compile-once oracle: the
+//! [`ExecutablePlan`] must reproduce the reference tree-walking
+//! evaluator's semantics *bit for bit* — same kernels, same accumulation
+//! widths, same iteration orders — on randomized small HLO programs and on
+//! every checked-in fixture, with the buffer arena both on and off.
+
+use ascendcraft::runtime::hlo::{evaluate, parse_module, ExecutablePlan, PlanOptions};
+use ascendcraft::util::compare::allclose;
+use ascendcraft::util::prop::{prop_check, Gen};
+use ascendcraft::util::rng::XorShiftRng;
+use ascendcraft::util::tensor::{DType, Tensor};
+
+/// Run a module through the evaluator and the plan (arena on and off) and
+/// require exact agreement (NaN == NaN).
+fn assert_plan_matches_evaluator(text: &str, inputs: &[&Tensor]) {
+    let m = parse_module(text).unwrap_or_else(|e| panic!("generated program rejected: {e}\n{text}"));
+    let want = evaluate(&m, inputs).unwrap_or_else(|e| panic!("evaluate: {e}\n{text}"));
+    for opts in [PlanOptions { reuse_buffers: true }, PlanOptions { reuse_buffers: false }] {
+        let plan = ExecutablePlan::compile_with(&m, opts)
+            .unwrap_or_else(|e| panic!("compile (arena={}): {e}\n{text}", opts.reuse_buffers));
+        let got = plan
+            .execute(inputs)
+            .unwrap_or_else(|e| panic!("execute (arena={}): {e}\n{text}", opts.reuse_buffers));
+        assert_eq!(got.len(), want.len(), "output arity\n{text}");
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g.shape, w.shape, "output {i} shape\n{text}");
+            assert!(
+                allclose(g, w, 0.0, 0.0),
+                "output {i} diverged (arena={})\n{text}",
+                opts.reuse_buffers
+            );
+        }
+    }
+}
+
+/// Random square-shaped HLO program builder. Values are either "full"
+/// ([n,n]) or "row" ([n]); instructions draw from the interpreter's op
+/// set: unary/binary elementwise, scalar broadcasts, compare+select,
+/// reduce (add/max), row broadcast, transpose, cumsum reduce-window, dot.
+fn random_program(g: &mut Gen) -> (String, usize) {
+    let n = g.usize_range(2, 6);
+    let mut text = String::new();
+    text.push_str("HloModule prop\n\n");
+    text.push_str("radd {\n  a = f32[] parameter(0)\n  b = f32[] parameter(1)\n  ROOT s = f32[] add(a, b)\n}\n\n");
+    text.push_str("rmax {\n  a = f32[] parameter(0)\n  b = f32[] parameter(1)\n  ROOT m = f32[] maximum(a, b)\n}\n\n");
+    text.push_str("ENTRY main {\n");
+    let full = format!("f32[{n},{n}]{{1,0}}");
+    let row = format!("f32[{n}]{{0}}");
+    text.push_str(&format!("  p0 = {full} parameter(0)\n"));
+    text.push_str(&format!("  p1 = {full} parameter(1)\n"));
+    let mut fulls: Vec<String> = vec!["p0".into(), "p1".into()];
+    let mut rows: Vec<String> = Vec::new();
+    let mut next_id = 0usize;
+    let mut fresh = |prefix: &str| {
+        next_id += 1;
+        format!("{prefix}{next_id}")
+    };
+    let steps = g.usize_range(3, 11);
+    for _ in 0..steps {
+        match g.usize_range(0, 9) {
+            0 => {
+                let op = *g.choose(&[
+                    "exponential",
+                    "tanh",
+                    "abs",
+                    "negate",
+                    "logistic",
+                    "sign",
+                    "floor",
+                ]);
+                let a = g.choose(&fulls).clone();
+                let v = fresh("u");
+                text.push_str(&format!("  {v} = {full} {op}({a})\n"));
+                fulls.push(v);
+            }
+            1 => {
+                let op = *g.choose(&["add", "subtract", "multiply", "maximum", "minimum"]);
+                let a = g.choose(&fulls).clone();
+                let b = g.choose(&fulls).clone();
+                let v = fresh("b");
+                text.push_str(&format!("  {v} = {full} {op}({a}, {b})\n"));
+                fulls.push(v);
+            }
+            2 => {
+                // scalar constant broadcast into a binary op
+                let cv = g.f32_range(-2.0, 2.0);
+                let c = fresh("c");
+                let bc = fresh("cb");
+                let a = g.choose(&fulls).clone();
+                let v = fresh("s");
+                text.push_str(&format!("  {c} = f32[] constant({cv})\n"));
+                text.push_str(&format!("  {bc} = {full} broadcast({c}), dimensions={{}}\n"));
+                text.push_str(&format!("  {v} = {full} multiply({a}, {bc})\n"));
+                fulls.push(v);
+            }
+            3 => {
+                let dir = *g.choose(&["EQ", "NE", "GE", "GT", "LE", "LT"]);
+                let a = g.choose(&fulls).clone();
+                let b = g.choose(&fulls).clone();
+                let t = g.choose(&fulls).clone();
+                let f = g.choose(&fulls).clone();
+                let c = fresh("cmp");
+                let v = fresh("sel");
+                text.push_str(&format!(
+                    "  {c} = pred[{n},{n}]{{1,0}} compare({a}, {b}), direction={dir}\n"
+                ));
+                text.push_str(&format!("  {v} = {full} select({c}, {t}, {f})\n"));
+                fulls.push(v);
+            }
+            4 => {
+                // reduce last axis to a row
+                let (comb, init) = *g.choose(&[("radd", "0"), ("rmax", "-inf")]);
+                let z = fresh("z");
+                let a = g.choose(&fulls).clone();
+                let v = fresh("r");
+                text.push_str(&format!("  {z} = f32[] constant({init})\n"));
+                text.push_str(&format!(
+                    "  {v} = {row} reduce({a}, {z}), dimensions={{1}}, to_apply={comb}\n"
+                ));
+                rows.push(v);
+            }
+            5 if !rows.is_empty() => {
+                // broadcast a row back to full (strided gather)
+                let r = g.choose(&rows).clone();
+                let v = fresh("rb");
+                let d = g.usize_range(0, 2);
+                text.push_str(&format!("  {v} = {full} broadcast({r}), dimensions={{{d}}}\n"));
+                fulls.push(v);
+            }
+            6 => {
+                let a = g.choose(&fulls).clone();
+                let v = fresh("t");
+                text.push_str(&format!("  {v} = {full} transpose({a}), dimensions={{1,0}}\n"));
+                fulls.push(v);
+            }
+            7 => {
+                // cumsum along the last axis (reduce-window scan path)
+                let z = fresh("z");
+                let a = g.choose(&fulls).clone();
+                let v = fresh("w");
+                text.push_str(&format!("  {z} = f32[] constant(0)\n"));
+                text.push_str(&format!(
+                    "  {v} = {full} reduce-window({a}, {z}), window={{size=1x{n} pad=0_0x{}_0}}, to_apply=radd\n",
+                    n - 1
+                ));
+                fulls.push(v);
+            }
+            _ => {
+                let a = g.choose(&fulls).clone();
+                let b = g.choose(&fulls).clone();
+                let v = fresh("d");
+                text.push_str(&format!(
+                    "  {v} = {full} dot({a}, {b}), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}\n"
+                ));
+                fulls.push(v);
+            }
+        }
+    }
+    let o1 = g.choose(&fulls).clone();
+    let o2 = g.choose(&fulls).clone();
+    text.push_str(&format!(
+        "  ROOT out = ({full}, {full}) tuple({o1}, {o2})\n"
+    ));
+    text.push_str("}\n");
+    (text, n)
+}
+
+#[test]
+fn prop_plan_matches_tree_walker_on_random_programs() {
+    prop_check("plan vs tree-walker", 48, |g| {
+        let (text, n) = random_program(g);
+        let a = Tensor::new(vec![n, n], DType::F32, g.normal_vec(n * n));
+        let b = Tensor::new(vec![n, n], DType::F32, g.normal_vec(n * n));
+        assert_plan_matches_evaluator(&text, &[&a, &b]);
+    });
+}
+
+#[test]
+fn every_checked_in_fixture_matches_the_tree_walker_exactly() {
+    // stronger than the rtol/atol golden cross-check: the plan and the
+    // evaluator must agree bitwise on every artifact, under both arena
+    // settings, with deterministic pseudo-random inputs
+    let dir = format!("{}/../artifacts", env!("CARGO_MANIFEST_DIR"));
+    let mut paths: Vec<_> = std::fs::read_dir(&dir)
+        .expect("checked-in artifacts/ directory")
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| p.to_string_lossy().ends_with(".hlo.txt"))
+        .collect();
+    paths.sort();
+    assert!(paths.len() >= 17, "expected the checked-in fixture set, found {}", paths.len());
+
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..8 {
+            let next = &next;
+            let paths = &paths;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                let Some(path) = paths.get(i) else { return };
+                let text = std::fs::read_to_string(path).unwrap();
+                let m = parse_module(&text).unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+                // deterministic inputs shaped from the module's own params
+                let comp = m.entry_computation();
+                let mut rng = XorShiftRng::new(0x9E37_79B9 ^ i as u64);
+                let inputs: Vec<Tensor> = comp
+                    .params
+                    .iter()
+                    .map(|&idx| {
+                        let dims = comp.instrs[idx].shape.array().unwrap().dims.clone();
+                        let numel = dims.iter().product();
+                        Tensor::new(dims, DType::F32, rng.uniform_vec(numel, 0.05, 1.0))
+                    })
+                    .collect();
+                let ins: Vec<&Tensor> = inputs.iter().collect();
+                let want = evaluate(&m, &ins).unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+                for opts in
+                    [PlanOptions { reuse_buffers: true }, PlanOptions { reuse_buffers: false }]
+                {
+                    let plan = ExecutablePlan::compile_with(&m, opts)
+                        .unwrap_or_else(|e| panic!("{}: compile: {e}", path.display()));
+                    let got = plan
+                        .execute(&ins)
+                        .unwrap_or_else(|e| panic!("{}: execute: {e}", path.display()));
+                    assert_eq!(got.len(), want.len(), "{}", path.display());
+                    for (g, w) in got.iter().zip(&want) {
+                        assert_eq!(g.shape, w.shape, "{}", path.display());
+                        assert!(
+                            allclose(g, w, 0.0, 0.0),
+                            "{}: plan diverged from evaluator (arena={})",
+                            path.display(),
+                            opts.reuse_buffers
+                        );
+                    }
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn recycled_buffers_are_never_read_as_live_operands() {
+    // regression: `keep` is materialized early and read only at the very
+    // end, while a chain of short-lived two-use values churns the arena's
+    // free list in between. If liveness ever released `keep`'s slot, the
+    // final adds would read whatever the churn wrote into it.
+    let mut text = String::from("HloModule alias\n\nENTRY main {\n");
+    text.push_str("  x = f32[128]{0} parameter(0)\n");
+    text.push_str("  keep = f32[128]{0} negate(x)\n");
+    let mut prev = "x".to_string();
+    for i in 0..12 {
+        // two uses each -> every link materializes into its own buffer
+        let v = format!("v{i}");
+        text.push_str(&format!("  {v} = f32[128]{{0}} add({prev}, {prev})\n"));
+        prev = v;
+    }
+    text.push_str(&format!("  a = f32[128]{{0}} add(keep, {prev})\n"));
+    text.push_str(&format!("  b = f32[128]{{0}} multiply(keep, {prev})\n"));
+    text.push_str("  ROOT o = (f32[128], f32[128]) tuple(a, b)\n}\n");
+
+    let x = Tensor::from_vec((0..128).map(|i| (i as f32) * 1e-3 - 0.064).collect());
+    assert_plan_matches_evaluator(&text, &[&x]);
+
+    // and the arena really is smaller than one-buffer-per-step
+    let m = parse_module(&text).unwrap();
+    let plan = ExecutablePlan::compile(&m).unwrap();
+    assert!(
+        plan.slot_count() < plan.step_count(),
+        "arena should recycle: {} slots for {} steps",
+        plan.slot_count(),
+        plan.step_count()
+    );
+}
