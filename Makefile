@@ -8,7 +8,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: all build test bench artifacts fmt clean
+.PHONY: all build test bench artifacts doc fmt clean
 
 all: build
 
@@ -20,6 +20,11 @@ test:
 
 bench: build
 	$(CARGO) bench
+
+# Build the API docs with warnings denied (same gate as CI): broken
+# intra-doc links fail instead of rotting silently.
+doc:
+	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
 
 # Regenerate artifacts/*.hlo.txt from python/compile/aot.py. Skipped (with
 # a note) when JAX is not importable — the checked-in fixtures remain.

@@ -3,16 +3,22 @@ benchmark operators, AOT-lowered by aot.py into `artifacts/*.hlo.txt` for
 the Rust runtime.
 
 Each entry is (function, example-argument shapes matching the Rust task
-specs). Every entry is pure jnp: the Rust side executes the lowered HLO
-text with its own self-contained interpreter (`rust/src/runtime/hlo`),
-which covers the dense-arithmetic op set (add/subtract/multiply/divide/
-maximum/minimum/exponential/log/tanh/sqrt/rsqrt/power/negate/abs/constant/
-broadcast/reshape/transpose/reduce/dot/select/compare/convert/tuple) but
-not control flow — so nothing here may route through `pallas_call`
-(`interpret=True` lowers to while-loops and dynamic slices). The Pallas
-kernels in `kernels/pallas_kernels.py` are still checked against these
-references by pytest; aot.py lowers the references themselves. Python
-runs only at build time — the Rust binary never imports any of this.
+specs). Every entry is pure jnp/lax: the Rust side executes the lowered
+HLO text with its own self-contained interpreter (`rust/src/runtime/hlo`).
+The supported op set is specified in `docs/HLO_SUBSET.md` — dense
+arithmetic (add/subtract/multiply/divide/maximum/minimum/exponential/log/
+tanh/sqrt/rsqrt/power/negate/abs/constant/broadcast/reshape/transpose/
+reduce/reduce-window/dot/select/compare/convert/tuple), `iota`,
+`dynamic-slice`, integer dtypes (s32/s64), and structured `while` loops
+over a tuple-shaped carried state (how `lax.fori_loop` lowers) with
+`get-tuple-element`. Still out of scope: `conditional`, variadic reduce
+(so `jnp.argmax` must be spelled via iota + where + min-reduce, see
+`argmax_rows`), `dynamic-update-slice` (so no `lax.scan` carrying
+per-step outputs), gather/scatter, and anything routed through
+`pallas_call`. The Pallas kernels in `kernels/pallas_kernels.py` are
+still checked against these references by pytest; aot.py lowers the
+references themselves. Python runs only at build time — the Rust binary
+never imports any of this.
 """
 
 import jax
@@ -112,6 +118,44 @@ def maxpool2d(x):
     return (jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 3, 3), (1, 3, 3), "VALID"),)
 
 
+def avgpool2d_pad(x):
+    # [batch, h, w], window 3, stride 2, symmetric pad 1, divide-by-count
+    # (count excludes padding, matching torch's count_include_pad=False):
+    # two reduce-windows (sum over x, sum over ones) and a divide — the
+    # lowering that keeps padded average pooling inside the interpreter's
+    # op set without variadic reduce-window
+    win, stride = (1, 3, 3), (1, 2, 2)
+    pad = ((0, 0), (1, 1), (1, 1))
+    s = jax.lax.reduce_window(x, 0.0, jax.lax.add, win, stride, pad)
+    cnt = jax.lax.reduce_window(jnp.ones_like(x), 0.0, jax.lax.add, win, stride, pad)
+    return (s / cnt,)
+
+
+def argmax_rows(x):
+    # first index of each row's max, as s32 — spelled via iota + where +
+    # min-reduce because jnp.argmax lowers to a variadic reduce (outside
+    # the interpreter's op set); exercises iota, s32 select/reduce, and
+    # integer constants end-to-end
+    m = jnp.max(x, axis=-1, keepdims=True)
+    idx = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    big = jnp.full(x.shape, x.shape[-1], dtype=jnp.int32)
+    first = jnp.min(jnp.where(x == m, idx, big), axis=-1)
+    return (first,)
+
+
+def window_sum(x):
+    # sliding-window sum of 4 shifted column slices via lax.fori_loop +
+    # lax.dynamic_slice — lowers to a `while` loop (tuple carried state,
+    # get-tuple-element, a tuple-returning call) around `dynamic-slice`,
+    # exercising the interpreter's structured-control-flow subset
+    rows, cols = x.shape
+    w = 4
+    def body(i, acc):
+        return acc + jax.lax.dynamic_slice(x, (0, i), (rows, cols - w + 1))
+    out = jax.lax.fori_loop(0, w, body, jnp.zeros((rows, cols - w + 1), jnp.float32))
+    return (out,)
+
+
 def mhc_post(h, w, g):
     return (kref.mhc_post_ref(h, w, g),)
 
@@ -140,6 +184,9 @@ OPS = {
     "mse_loss": (mse_loss, [_f32(*EW), _f32(*EW)]),
     "huber_loss": (huber_loss, [_f32(*EW), _f32(*EW)]),
     "maxpool2d": (maxpool2d, [_f32(64, 96, 96)]),
+    "avgpool2d_pad": (avgpool2d_pad, [_f32(8, 32, 32)]),
+    "argmax_rows": (argmax_rows, [_f32(64, 128)]),
+    "window_sum": (window_sum, [_f32(128, 256)]),
     "cumsum": (cumsum, [_f32(512, 2048)]),
     "logsumexp": (logsumexp, [_f32(512, 2048)]),
     "sum_dim": (sum_dim, [_f32(1024, 4096)]),

@@ -12,6 +12,7 @@ use ascendcraft::coordinator::pipeline::{run_task, PipelineConfig};
 use ascendcraft::coordinator::service::{run_suite, SuiteConfig};
 use ascendcraft::dsl;
 use ascendcraft::runtime::hlo::{evaluate, parse_module, ExecutablePlan, PlanOptions, PlanScratch};
+use ascendcraft::runtime::GoldenOracle;
 use ascendcraft::synth::{templates::KnowledgeBaseSynthesizer, Generator};
 use ascendcraft::transpile::{transpile, TranspileOptions};
 use ascendcraft::util::tensor::Tensor;
@@ -73,10 +74,42 @@ fn main() {
             plan.execute_with_scratch(&ins, &mut scratch).unwrap()
         });
         println!(
-            "{:<46} {:>9.2}x (arena) / {:.2}x (no arena)\n",
+            "{:<46} {:>9.2}x (arena) / {:.2}x (no arena)",
             "  -> plan speedup vs tree-walker",
             t_eval / t_plan,
             t_eval / t_noarena
+        );
+
+        // batched multi-seed execution (the suite --golden-seeds path):
+        // N seeds through one run_batch, sharing a single PlanScratch,
+        // vs N independent run() calls each paying fresh-arena setup
+        const SEEDS: usize = 8;
+        let oracle = GoldenOracle::from_text(name, &text).unwrap();
+        let seed_inputs: Vec<_> = (0..SEEDS as u64).map(|s| task.make_inputs(7 + s)).collect();
+        let batches: Vec<Vec<&Tensor>> = seed_inputs
+            .iter()
+            .map(|m| task.inputs.iter().map(|(n, _, _)| &m[*n]).collect())
+            .collect();
+        // sanity: batch results == per-seed results, bitwise
+        let batched = oracle.run_batch(&batches).unwrap();
+        for (b, ins) in batched.iter().zip(&batches) {
+            let single = oracle.run(ins).unwrap();
+            assert_eq!(b.len(), single.len());
+            for (x, y) in b.iter().zip(&single) {
+                assert_eq!(x.data, y.data, "{name}: run_batch diverged from run");
+            }
+        }
+        let t_single = time(&format!("oracle[{name}]: {SEEDS} seeds via run()"), 5, || {
+            batches.iter().map(|ins| oracle.run(ins).unwrap()).collect::<Vec<_>>()
+        });
+        let mut bscratch = PlanScratch::default();
+        let t_batch = time(&format!("oracle[{name}]: {SEEDS} seeds via run_batch"), 5, || {
+            oracle.run_batch_with_scratch(&batches, &mut bscratch).unwrap()
+        });
+        println!(
+            "{:<46} {:>9.2}x\n",
+            "  -> run_batch speedup vs per-seed run",
+            t_single / t_batch
         );
     }
 

@@ -41,7 +41,12 @@ pub struct TaskResult {
     /// Wall-clock seconds the pipeline spent on this task.
     pub pipeline_secs: f64,
     /// Golden cross-check outcome (None when the suite ran without it).
+    /// When the check ran over several seeds this is the aggregate;
+    /// per-seed outcomes are in [`TaskResult::golden_seeds`].
     pub golden: Option<GoldenStatus>,
+    /// Per-seed golden cross-check outcomes, in seed order (empty when
+    /// the suite ran without `--golden`).
+    pub golden_seeds: Vec<GoldenStatus>,
 }
 
 impl TaskResult {
@@ -81,6 +86,15 @@ impl TaskResult {
             let mut gj = Json::obj();
             gj.set("checked", g.checked).set("ok", g.ok).set("detail", g.detail.as_str());
             j.set("golden", gj);
+        }
+        if !self.golden_seeds.is_empty() {
+            let mut arr = Json::Arr(vec![]);
+            for g in &self.golden_seeds {
+                let mut gj = Json::obj();
+                gj.set("checked", g.checked).set("ok", g.ok).set("detail", g.detail.as_str());
+                arr.push(gj);
+            }
+            j.set("golden_seeds", arr);
         }
         j
     }
@@ -270,6 +284,7 @@ mod tests {
             repair_rounds: 0,
             pipeline_secs: 0.0,
             golden: None,
+            golden_seeds: Vec::new(),
         }
     }
 

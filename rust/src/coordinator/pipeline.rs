@@ -79,6 +79,7 @@ pub fn run_task(task: &TaskSpec, cfg: &PipelineConfig) -> PipelineArtifacts {
             repair_rounds: rounds,
             pipeline_secs: started.elapsed().as_secs_f64(),
             golden: None,
+            golden_seeds: Vec::new(),
         },
         dsl_source: dsl,
         program: None,
@@ -228,6 +229,7 @@ pub fn run_task(task: &TaskSpec, cfg: &PipelineConfig) -> PipelineArtifacts {
             // worker in `coordinator::service::run_suite` fills this in
             // when `SuiteConfig::golden` is set
             golden: None,
+            golden_seeds: Vec::new(),
         },
         dsl_source,
         program: Some(program),

@@ -24,6 +24,13 @@ pub struct SuiteConfig {
     /// pipeline run, filling `TaskResult::golden`. The registry is shared:
     /// oracles load and compile once, then execute on every worker.
     pub golden: Option<Arc<OracleRegistry>>,
+    /// Number of seeds the golden cross-check runs per task (seeds
+    /// `pipeline.seed .. pipeline.seed + golden_seeds`). All seeds of a
+    /// task execute through one [`crate::runtime::GoldenOracle::run_batch`]
+    /// call, so the compiled plan and its scratch are shared across the
+    /// whole batch. Per-seed outcomes land on `TaskResult::golden_seeds`;
+    /// the aggregate stays on `TaskResult::golden`.
+    pub golden_seeds: usize,
 }
 
 impl Default for SuiteConfig {
@@ -33,6 +40,7 @@ impl Default for SuiteConfig {
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
             verbose: false,
             golden: None,
+            golden_seeds: 1,
         }
     }
 }
@@ -56,6 +64,7 @@ pub fn run_suite_artifacts(tasks: &[TaskSpec], cfg: &SuiteConfig) -> Vec<Pipelin
             let pipeline = cfg.pipeline.clone();
             let verbose = cfg.verbose;
             let golden = cfg.golden.clone();
+            let golden_seeds = cfg.golden_seeds;
             scope.spawn(move || loop {
                 let idx = {
                     let mut guard = next.lock().unwrap();
@@ -70,8 +79,13 @@ pub fn run_suite_artifacts(tasks: &[TaskSpec], cfg: &SuiteConfig) -> Vec<Pipelin
                 if let Some(reg) = &golden {
                     // the L2↔L3 cross-check shards across the same worker
                     // pool as the pipeline runs (the compiled, Send + Sync
-                    // oracle is shared by all workers)
-                    art.result.golden = Some(cross_check_task(&tasks[idx], reg, pipeline.seed));
+                    // oracle is shared by all workers); all seeds of the
+                    // task run through one batched oracle execution
+                    let seeds: Vec<u64> =
+                        (0..golden_seeds.max(1) as u64).map(|k| pipeline.seed + k).collect();
+                    let per_seed = cross_check_task_seeds(&tasks[idx], reg, &seeds);
+                    art.result.golden = Some(summarize_golden(&per_seed));
+                    art.result.golden_seeds = per_seed;
                 }
                 if verbose {
                     let r = &art.result;
@@ -153,37 +167,99 @@ pub fn cross_check_suite(
 /// The one shared implementation behind both the in-suite golden field
 /// and the standalone `ascendcraft oracle` path.
 pub fn cross_check_task(task: &TaskSpec, reg: &OracleRegistry, seed: u64) -> GoldenStatus {
+    cross_check_task_seeds(task, reg, &[seed]).remove(0)
+}
+
+/// Multi-seed cross-check: the oracle's plan is compiled once (at registry
+/// load), and all seeds execute through one
+/// [`crate::runtime::GoldenOracle::run_batch`] call sharing a single plan
+/// scratch — per-seed inputs are the only per-seed work. Returns one
+/// [`GoldenStatus`] per seed, in seed order.
+pub fn cross_check_task_seeds(
+    task: &TaskSpec,
+    reg: &OracleRegistry,
+    seeds: &[u64],
+) -> Vec<GoldenStatus> {
     let fail = |detail: String| GoldenStatus { checked: true, ok: false, detail };
     if !reg.available(task.name) {
-        return GoldenStatus { checked: false, ok: true, detail: "no artifact".to_string() };
+        return seeds
+            .iter()
+            .map(|_| GoldenStatus { checked: false, ok: true, detail: "no artifact".to_string() })
+            .collect();
     }
     let oracle = match reg.get(task.name) {
         Ok(o) => o,
-        Err(e) => return fail(format!("load failed: {e}")),
-    };
-    let inputs = task.make_inputs(seed);
-    let ins: Vec<&crate::util::tensor::Tensor> =
-        task.inputs.iter().map(|(n, _, _)| &inputs[*n]).collect();
-    let want = task.reference(&inputs);
-    let got = match oracle.run(&ins) {
-        Ok(g) => g,
-        Err(e) => return fail(format!("exec failed: {e}")),
-    };
-    if got.len() < task.outputs.len() {
-        return fail(format!(
-            "oracle returned {} outputs, task has {}",
-            got.len(),
-            task.outputs.len()
-        ));
-    }
-    // multi-output ops (adam) return tuples in task-output order
-    for (i, (out_name, _)) in task.outputs.iter().enumerate() {
-        let rep = allclose_report(&got[i], &want[*out_name], 2e-3, 2e-4);
-        if !rep.ok {
-            return fail(format!("{out_name}: {}", rep.summary()));
+        Err(e) => {
+            let detail = format!("load failed: {e}");
+            return seeds.iter().map(|_| fail(detail.clone())).collect();
         }
-    }
-    GoldenStatus { checked: true, ok: true, detail: "golden == rust reference".to_string() }
+    };
+    let per_seed_inputs: Vec<_> = seeds.iter().map(|&s| task.make_inputs(s)).collect();
+    let batches: Vec<Vec<&crate::util::tensor::Tensor>> = per_seed_inputs
+        .iter()
+        .map(|inputs| task.inputs.iter().map(|(n, _, _)| &inputs[*n]).collect())
+        .collect();
+    // happy path: one batched execution for the whole seed set. If any
+    // seed fails (execution errors can be data-dependent), re-run seed by
+    // seed — still sharing one scratch — so a bad seed cannot mask the
+    // verdicts of the good ones.
+    let per_seed_outs: Vec<Result<Vec<crate::util::tensor::Tensor>, String>> =
+        match oracle.run_batch(&batches) {
+            Ok(outs) => outs.into_iter().map(Ok).collect(),
+            Err(_) => {
+                let mut scratch = crate::runtime::hlo::PlanScratch::default();
+                batches
+                    .iter()
+                    .map(|b| {
+                        oracle
+                            .run_batch_with_scratch(std::slice::from_ref(b), &mut scratch)
+                            .map(|mut v| v.remove(0))
+                            .map_err(|e| e.to_string())
+                    })
+                    .collect()
+            }
+        };
+    per_seed_inputs
+        .iter()
+        .zip(&per_seed_outs)
+        .map(|(inputs, out)| {
+            let got = match out {
+                Ok(g) => g,
+                Err(e) => return fail(format!("exec failed: {e}")),
+            };
+            let want = task.reference(inputs);
+            if got.len() < task.outputs.len() {
+                return fail(format!(
+                    "oracle returned {} outputs, task has {}",
+                    got.len(),
+                    task.outputs.len()
+                ));
+            }
+            // multi-output ops (adam) return tuples in task-output order
+            for (i, (out_name, _)) in task.outputs.iter().enumerate() {
+                let rep = allclose_report(&got[i], &want[*out_name], 2e-3, 2e-4);
+                if !rep.ok {
+                    return fail(format!("{out_name}: {}", rep.summary()));
+                }
+            }
+            GoldenStatus { checked: true, ok: true, detail: "golden == rust reference".to_string() }
+        })
+        .collect()
+}
+
+/// Aggregate per-seed golden outcomes into the single `TaskResult::golden`
+/// summary: checked if any seed checked, ok only if every seed passed.
+pub fn summarize_golden(per_seed: &[GoldenStatus]) -> GoldenStatus {
+    let checked = per_seed.iter().any(|g| g.checked);
+    let failed: Vec<&GoldenStatus> = per_seed.iter().filter(|g| g.checked && !g.ok).collect();
+    let detail = if let Some(f) = failed.first() {
+        format!("{} of {} seeds failed; first: {}", failed.len(), per_seed.len(), f.detail)
+    } else if checked {
+        format!("golden == rust reference ({} seeds)", per_seed.len())
+    } else {
+        "no artifact".to_string()
+    };
+    GoldenStatus { checked, ok: failed.is_empty(), detail }
 }
 
 #[cfg(test)]
@@ -247,6 +323,50 @@ mod tests {
             assert!(c.checked, "{}: artifact missing", t.name);
             assert!(c.ok, "{}: {}", t.name, c.detail);
         }
+    }
+
+    #[test]
+    fn cross_check_task_seeds_matches_per_seed_checks() {
+        let reg = OracleRegistry::default_dir();
+        let task = task_by_name("softmax").unwrap();
+        let seeds = [11u64, 12, 13];
+        let batched = cross_check_task_seeds(&task, &reg, &seeds);
+        assert_eq!(batched.len(), 3);
+        for (&s, b) in seeds.iter().zip(&batched) {
+            let single = cross_check_task(&task, &reg, s);
+            assert_eq!(single.checked, b.checked, "seed {s}");
+            assert_eq!(single.ok, b.ok, "seed {s}: {}", b.detail);
+        }
+    }
+
+    #[test]
+    fn run_suite_with_golden_seeds_records_per_seed_statuses() {
+        let tasks = [task_by_name("relu").unwrap()];
+        let cfg = SuiteConfig {
+            workers: 1,
+            golden: Some(Arc::new(OracleRegistry::default_dir())),
+            golden_seeds: 3,
+            ..Default::default()
+        };
+        let suite = run_suite(&tasks, &cfg);
+        let r = &suite.results[0];
+        assert_eq!(r.golden_seeds.len(), 3);
+        assert!(r.golden_seeds.iter().all(|g| g.checked && g.ok));
+        let agg = r.golden.as_ref().unwrap();
+        assert!(agg.checked && agg.ok, "{}", agg.detail);
+        assert!(agg.detail.contains("3 seeds"), "{}", agg.detail);
+    }
+
+    #[test]
+    fn summarize_golden_aggregates_failures() {
+        let ok = GoldenStatus { checked: true, ok: true, detail: "ok".into() };
+        let bad = GoldenStatus { checked: true, ok: false, detail: "drift".into() };
+        let vac = GoldenStatus { checked: false, ok: true, detail: "no artifact".into() };
+        let s = summarize_golden(&[ok.clone(), bad, ok]);
+        assert!(s.checked && !s.ok);
+        assert!(s.detail.contains("1 of 3"), "{}", s.detail);
+        let s = summarize_golden(&[vac.clone(), vac]);
+        assert!(!s.checked && s.ok);
     }
 
     #[test]

@@ -2,7 +2,8 @@
 //!
 //! ```text
 //! ascendcraft suite [--mode ascendcraft|direct|generic] [--workers N]
-//!                   [--json PATH] [--quiet] [--golden]  reproduce Tables 1+2
+//!                   [--json PATH] [--quiet] [--golden]
+//!                   [--golden-seeds N]                  reproduce Tables 1+2
 //! ascendcraft gen --task NAME [--emit-dsl] [--emit-ascendc] [--emit-prompt]
 //! ascendcraft mhc [--rows N]                         RQ3 case study
 //! ascendcraft oracle [--op NAME] [--workers N]       golden cross-check
@@ -19,7 +20,7 @@ use ascendcraft::bench_suite::tasks::{all_tasks, task_by_name};
 use ascendcraft::coordinator::pipeline::{run_task, PipelineConfig, PipelineMode};
 use ascendcraft::coordinator::service::{cross_check_suite, run_suite, SuiteConfig};
 use ascendcraft::mhc::{self, run_case_study, MhcDims};
-use ascendcraft::runtime::OracleRegistry;
+use ascendcraft::runtime::{fixtures, OracleRegistry};
 use ascendcraft::synth::prompt;
 
 fn main() {
@@ -50,7 +51,7 @@ fn print_usage() {
         "AscendCraft: DSL-guided AscendC kernel generation (reproduction)\n\
          \n\
          USAGE:\n\
-         \x20 ascendcraft suite [--mode ascendcraft|direct|generic] [--workers N] [--json PATH] [--quiet] [--golden]\n\
+         \x20 ascendcraft suite [--mode ascendcraft|direct|generic] [--workers N] [--json PATH] [--quiet] [--golden] [--golden-seeds N]\n\
          \x20 ascendcraft gen --task NAME [--emit-dsl] [--emit-ascendc] [--emit-prompt]\n\
          \x20 ascendcraft mhc [--rows N]\n\
          \x20 ascendcraft oracle [--op NAME] [--workers N]\n\
@@ -78,18 +79,38 @@ fn cmd_suite(args: &[String]) -> i32 {
             return 2;
         }
     };
-    let golden = has_flag(args, "--golden");
+    let golden_seeds = if has_flag(args, "--golden-seeds") {
+        // a typo'd or missing count must fail loudly, not silently verify
+        // fewer seeds than the user asked for
+        match flag_value(args, "--golden-seeds").map(str::parse::<usize>) {
+            Some(Ok(n)) if n >= 1 => n,
+            Some(Ok(_)) | Some(Err(_)) => {
+                eprintln!("--golden-seeds expects a positive integer");
+                return 2;
+            }
+            None => {
+                eprintln!("--golden-seeds requires a value");
+                return 2;
+            }
+        }
+    } else {
+        1
+    };
+    let golden = has_flag(args, "--golden") || has_flag(args, "--golden-seeds");
     let mut cfg = SuiteConfig {
         pipeline: PipelineConfig { mode, ..Default::default() },
         verbose: !has_flag(args, "--quiet"),
         // --golden folds the L2↔L3 cross-check into the suite run itself:
         // each worker checks its task right after the pipeline, sharing
-        // one compiled-oracle registry across the pool
+        // one compiled-oracle registry across the pool. --golden-seeds N
+        // cross-checks N seeds per task through one batched oracle
+        // execution (plan compiled once, scratch shared across the batch).
         golden: if golden {
             Some(std::sync::Arc::new(OracleRegistry::default_dir()))
         } else {
             None
         },
+        golden_seeds,
         ..Default::default()
     };
     if let Some(w) = flag_value(args, "--workers").and_then(|v| v.parse().ok()) {
@@ -231,11 +252,21 @@ fn cmd_oracle(args: &[String]) -> i32 {
         }
     }
 
-    // mHC artifacts have dedicated references outside the benchmark suite
+    // mHC and op-set-coverage artifacts have dedicated references outside
+    // the benchmark suite
     for name in present.iter().filter(|n| task_by_name(n).is_none()) {
         match name.as_str() {
             "mhc_post" | "mhc_post_grad" => {
                 match mhc::golden_cross_check(&reg, name, 1234, 2e-3, 2e-4) {
+                    Ok(()) => println!("  {name:<18} golden == rust reference"),
+                    Err(e) => {
+                        println!("  {name:<18} MISMATCH\n    {e}");
+                        failures += 1;
+                    }
+                }
+            }
+            n if fixtures::EXTRA_FIXTURES.contains(&n) => {
+                match fixtures::cross_check_fixture(&reg, n, 1234) {
                     Ok(()) => println!("  {name:<18} golden == rust reference"),
                     Err(e) => {
                         println!("  {name:<18} MISMATCH\n    {e}");

@@ -1,0 +1,171 @@
+//! Rust references (L3) for oracle fixtures that are not benchmark-suite
+//! tasks, plus their cross-check entry point.
+//!
+//! The op-set-coverage fixtures (`avgpool2d_pad`, `argmax_rows`,
+//! `window_sum`) exist to exercise interpreter features end-to-end —
+//! divide-by-count padded pooling, `iota` + integer dtypes, and
+//! `while` + `dynamic-slice` — rather than to benchmark kernels, so they
+//! live outside the 52-task MultiKernelBench population
+//! (`bench_suite::tasks`). This module holds their hand-rolled reference
+//! numerics and the cross-check used by `ascendcraft oracle` and
+//! `rust/tests/golden_oracle.rs`, mirroring how the mHC artifacts get
+//! dedicated references in [`crate::mhc`].
+
+use super::OracleRegistry;
+use crate::util::compare::allclose_report;
+use crate::util::rng::XorShiftRng;
+use crate::util::tensor::{DType, Tensor};
+
+/// Fixture names covered by [`cross_check_fixture`], i.e. every artifact
+/// that has a reference here instead of a benchmark task.
+pub const EXTRA_FIXTURES: &[&str] = &["avgpool2d_pad", "argmax_rows", "window_sum"];
+
+/// Average pooling over `[batch, h, w]` with window 3, stride 2,
+/// symmetric padding 1, dividing by the number of in-bounds elements
+/// (padding excluded from the count) — the reference for the
+/// `avgpool2d_pad` fixture's divide-by-count lowering.
+pub fn avgpool2d_pad_ref(x: &Tensor) -> Tensor {
+    const WIN: usize = 3;
+    const STRIDE: usize = 2;
+    const PAD: i64 = 1;
+    let (b, h, w) = (x.shape[0], x.shape[1], x.shape[2]);
+    let out_h = (h + 2 * PAD as usize - WIN) / STRIDE + 1;
+    let out_w = (w + 2 * PAD as usize - WIN) / STRIDE + 1;
+    let mut data = Vec::with_capacity(b * out_h * out_w);
+    for bi in 0..b {
+        for oh in 0..out_h {
+            for ow in 0..out_w {
+                let mut acc = 0.0f32;
+                let mut count = 0usize;
+                for ky in 0..WIN {
+                    for kx in 0..WIN {
+                        let iy = (oh * STRIDE + ky) as i64 - PAD;
+                        let ix = (ow * STRIDE + kx) as i64 - PAD;
+                        if iy < 0 || ix < 0 || iy >= h as i64 || ix >= w as i64 {
+                            continue;
+                        }
+                        acc += x.data[bi * h * w + iy as usize * w + ix as usize];
+                        count += 1;
+                    }
+                }
+                data.push(acc / count.max(1) as f32);
+            }
+        }
+    }
+    Tensor::new(vec![b, out_h, out_w], DType::F32, data)
+}
+
+/// First index of each row's maximum, as an integer-valued tensor — the
+/// reference for the `argmax_rows` fixture. The row maximum folds left to
+/// right in `f32`, matching the oracle's `reduce` order, so the selected
+/// index is bit-exact.
+pub fn argmax_rows_ref(x: &Tensor) -> Tensor {
+    let cols = *x.shape.last().expect("argmax_rows on rank-0");
+    let rows = x.numel() / cols;
+    let mut data = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let row = &x.data[r * cols..(r + 1) * cols];
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let idx = row.iter().position(|&v| v == m).unwrap_or(0);
+        data.push(idx as f32);
+    }
+    Tensor::new(vec![rows], DType::I32, data)
+}
+
+/// Sliding-window sum of width 4 along the last axis — the reference for
+/// the `window_sum` fixture's `fori_loop` + `dynamic-slice` lowering.
+/// Accumulates in the loop's order (slice 0 first) so results are
+/// bit-exact against the oracle.
+pub fn window_sum_ref(x: &Tensor) -> Tensor {
+    const W: usize = 4;
+    let (rows, cols) = (x.shape[0], x.shape[1]);
+    let out_cols = cols - W + 1;
+    let mut data = vec![0.0f32; rows * out_cols];
+    for i in 0..W {
+        for r in 0..rows {
+            for c in 0..out_cols {
+                data[r * out_cols + c] += x.data[r * cols + c + i];
+            }
+        }
+    }
+    Tensor::new(vec![rows, out_cols], DType::F32, data)
+}
+
+/// Deterministic pseudo-random input for fixture `name` (shapes mirror
+/// the `python/compile/model.py` manifest).
+pub fn fixture_input(name: &str, seed: u64) -> Option<Tensor> {
+    let dims: Vec<usize> = match name {
+        "avgpool2d_pad" => vec![8, 32, 32],
+        "argmax_rows" => vec![64, 128],
+        "window_sum" => vec![128, 256],
+        _ => return None,
+    };
+    let n = dims.iter().product();
+    let mut rng = XorShiftRng::new(0xF1C7_0000 ^ seed);
+    Some(Tensor::new(dims, DType::F32, rng.normal_vec(n)))
+}
+
+/// Cross-check one extra fixture against its Rust reference. Returns
+/// `Err` with a human-readable detail on load/exec failure or numeric
+/// mismatch; `name` must be one of [`EXTRA_FIXTURES`].
+pub fn cross_check_fixture(reg: &OracleRegistry, name: &str, seed: u64) -> Result<(), String> {
+    let x = fixture_input(name, seed).ok_or_else(|| format!("unknown extra fixture '{name}'"))?;
+    let want = match name {
+        "avgpool2d_pad" => avgpool2d_pad_ref(&x),
+        "argmax_rows" => argmax_rows_ref(&x),
+        "window_sum" => window_sum_ref(&x),
+        _ => unreachable!("fixture_input validated the name"),
+    };
+    let oracle = reg.get(name).map_err(|e| format!("load failed: {e}"))?;
+    let got = oracle.run(&[&x]).map_err(|e| format!("exec failed: {e}"))?;
+    if got.len() != 1 {
+        return Err(format!("oracle returned {} outputs, expected 1", got.len()));
+    }
+    // argmax indices must match exactly; the float fixtures accumulate in
+    // the oracle's own order, so they are bit-exact too — a tiny tolerance
+    // keeps the check robust to platform libm differences in the inputs
+    let (rtol, atol) = if name == "argmax_rows" { (0.0, 0.0) } else { (1e-6, 1e-7) };
+    let rep = allclose_report(&got[0], &want, rtol, atol);
+    if !rep.ok {
+        return Err(rep.summary());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn avgpool_reference_counts_exclude_padding() {
+        // 1x2x2 input, window 3 stride 2 pad 1: single output = mean of
+        // all 4 in-bounds elements
+        let x = Tensor::new(vec![1, 2, 2], DType::F32, vec![1.0, 2.0, 3.0, 4.0]);
+        let y = avgpool2d_pad_ref(&x);
+        assert_eq!(y.shape, vec![1, 1, 1]);
+        assert!((y.data[0] - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn argmax_reference_picks_first_max() {
+        let x = Tensor::new(vec![2, 4], DType::F32, vec![1., 5., 5., 2., -1., -1., -3., -1.]);
+        let y = argmax_rows_ref(&x);
+        assert_eq!(y.data, vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn window_sum_reference_is_a_width_4_sliding_sum() {
+        let x = Tensor::new(vec![1, 6], DType::F32, vec![1., 2., 3., 4., 5., 6.]);
+        let y = window_sum_ref(&x);
+        assert_eq!(y.shape, vec![1, 3]);
+        assert_eq!(y.data, vec![10., 14., 18.]);
+    }
+
+    #[test]
+    fn fixture_inputs_are_deterministic() {
+        let a = fixture_input("argmax_rows", 3).unwrap();
+        let b = fixture_input("argmax_rows", 3).unwrap();
+        assert_eq!(a.data, b.data);
+        assert!(fixture_input("nonesuch", 3).is_none());
+    }
+}

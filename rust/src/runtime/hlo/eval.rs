@@ -5,25 +5,31 @@
 //! `rust/tests/plan_differential.rs`) and serves as the fallback for
 //! modules outside the plan compiler's op set.
 //!
-//! The op set is the dense-arithmetic subset the `python/compile/model.py`
-//! manifest lowers to: elementwise arithmetic, `broadcast`/`reshape`/
-//! `transpose`, `reduce` and `reduce-window` (with a prefix-scan fast path
-//! so `cumsum` stays O(n)), `dot` (general batched contraction), `select`/
-//! `compare`, `call`, and `tuple`. Control flow (`while`, `conditional`)
-//! is deliberately out of scope — the manifest guarantees none is emitted.
+//! The op set is the subset the `python/compile/model.py` manifest lowers
+//! to (see `docs/HLO_SUBSET.md` for the authoritative spec): elementwise
+//! arithmetic, `broadcast`/`reshape`/`transpose`, `iota`, `dynamic-slice`,
+//! `reduce` and `reduce-window` (with a prefix-scan fast path so `cumsum`
+//! stays O(n)), `dot` (general batched contraction), `select`/`compare`,
+//! `convert`, `call`, `tuple`/`get-tuple-element`, and `while` over a
+//! tuple-shaped carried state (how `lax.fori_loop` lowers).
 //!
 //! All host data is `f32` (pred values are 0.0 / 1.0), matching the rest
-//! of the pipeline. Sum/product reductions accumulate in `f64` (oracle
+//! of the pipeline; the logical element type of each result is carried on
+//! [`Tensor::dtype`], and `convert` models the numeric effect of dtype
+//! changes (truncation to integers, `x != 0` to pred, f16/bf16
+//! quantization). Sum/product reductions accumulate in `f64` (oracle
 //! grade — a reduce can span millions of elements); the prefix-scan fast
 //! path stays `f32` so cumulative sums reproduce the references' running
 //! f32 accumulation exactly. Agreement with the Rust references is judged
 //! by the tasks' rtol/atol, not bit equality.
 
 use super::parser::{CmpDir, Computation, Instr, Module, Opcode, Shape};
+use super::MAX_WHILE_ITERS;
 use crate::util::tensor::{DType, Tensor};
 
-/// An evaluated instruction result. Only the root of the entry computation
-/// is tuple-shaped in the supported corpus.
+/// An evaluated instruction result: a dense tensor, or a flat tuple of
+/// tensors (entry roots, `while` carried state, tuple-returning calls).
+/// Nested tuples are outside the supported corpus.
 #[derive(Clone, Debug)]
 pub enum Value {
     Tensor(Tensor),
@@ -130,7 +136,7 @@ fn unary(ins: &Instr, x: &Tensor, f: impl Fn(f32) -> f32) -> Result<Tensor, Stri
     if shape.numel() != x.numel() {
         return Err(format!("{}: result shape {shape} vs operand numel {}", ins.name, x.numel()));
     }
-    Ok(Tensor::new(shape.dims.clone(), DType::F32, x.data.iter().map(|&v| f(v)).collect()))
+    Ok(Tensor::new(shape.dims.clone(), shape.elem.dtype(), x.data.iter().map(|&v| f(v)).collect()))
 }
 
 fn binary(
@@ -147,7 +153,7 @@ fn binary(
         ));
     }
     let data = a.data.iter().zip(&b.data).map(|(&x, &y)| f(x, y)).collect();
-    Ok(Tensor::new(shape.dims.clone(), DType::F32, data))
+    Ok(Tensor::new(shape.dims.clone(), shape.elem.dtype(), data))
 }
 
 /// Permute `t`'s axes: output dim `d` takes input dim `perm[d]`.
@@ -246,11 +252,12 @@ fn scalar_init(ins: &Instr, t: &Tensor) -> Result<f32, String> {
 fn eval_broadcast(ins: &Instr, x: &Tensor) -> Result<Tensor, String> {
     let shape = out_shape(ins)?;
     let out_dims = shape.dims.clone();
+    let dt = shape.elem.dtype();
     let n = shape.numel();
     // scalar fill fast path (the dominant case: constants broadcast over
     // multi-megabyte elementwise tensors)
     if x.numel() == 1 {
-        return Ok(Tensor::new(out_dims, DType::F32, vec![x.data[0]; n]));
+        return Ok(Tensor::new(out_dims, dt, vec![x.data[0]; n]));
     }
     let dims = ins.dimensions.clone().unwrap_or_default();
     if dims.len() != x.rank() {
@@ -286,7 +293,7 @@ fn eval_broadcast(ins: &Instr, x: &Tensor) -> Result<Tensor, String> {
         }
         *slot = x.data[src];
     }
-    Ok(Tensor::new(out_dims, DType::F32, out))
+    Ok(Tensor::new(out_dims, dt, out))
 }
 
 fn eval_reduce(m: &Module, ins: &Instr, x: &Tensor, init: f32) -> Result<Tensor, String> {
@@ -342,7 +349,7 @@ fn eval_reduce(m: &Module, ins: &Instr, x: &Tensor, init: f32) -> Result<Tensor,
             out
         }
     };
-    Ok(Tensor::new(shape.dims.clone(), DType::F32, out))
+    Ok(Tensor::new(shape.dims.clone(), shape.elem.dtype(), out))
 }
 
 fn eval_reduce_window(m: &Module, ins: &Instr, x: &Tensor, init: f32) -> Result<Tensor, String> {
@@ -410,7 +417,7 @@ fn eval_reduce_window(m: &Module, ins: &Instr, x: &Tensor, init: f32) -> Result<
                     }
                 }
             }
-            return Ok(Tensor::new(shape.dims.clone(), DType::F32, out));
+            return Ok(Tensor::new(shape.dims.clone(), shape.elem.dtype(), out));
         }
     }
 
@@ -441,7 +448,7 @@ fn eval_reduce_window(m: &Module, ins: &Instr, x: &Tensor, init: f32) -> Result<
         }
         *slot = acc;
     }
-    Ok(Tensor::new(shape.dims.clone(), DType::F32, out))
+    Ok(Tensor::new(shape.dims.clone(), shape.elem.dtype(), out))
 }
 
 fn eval_dot(ins: &Instr, lhs: &Tensor, rhs: &Tensor) -> Result<Tensor, String> {
@@ -505,7 +512,7 @@ fn eval_dot(ins: &Instr, lhs: &Tensor, rhs: &Tensor) -> Result<Tensor, String> {
             }
         }
     }
-    Ok(Tensor::new(shape.dims.clone(), DType::F32, out))
+    Ok(Tensor::new(shape.dims.clone(), shape.elem.dtype(), out))
 }
 
 fn eval_instr(
@@ -526,7 +533,7 @@ fn eval_instr(
                 .literal
                 .clone()
                 .ok_or_else(|| format!("{}: constant without literal", ins.name))?;
-            Value::Tensor(Tensor::new(shape.dims.clone(), DType::F32, lit))
+            Value::Tensor(Tensor::new(shape.dims.clone(), shape.elem.dtype(), lit))
         }
         Opcode::Add => Value::Tensor(binary(ins, t(0)?, t(1)?, |a, b| a + b)?),
         Opcode::Subtract => Value::Tensor(binary(ins, t(0)?, t(1)?, |a, b| a - b)?),
@@ -554,7 +561,7 @@ fn eval_instr(
             }
         })?),
         Opcode::Logistic => Value::Tensor(unary(ins, t(0)?, |x| 1.0 / (1.0 + (-x).exp()))?),
-        Opcode::Copy | Opcode::Convert | Opcode::Reshape => {
+        Opcode::Copy | Opcode::Reshape => {
             let x = t(0)?;
             let shape = out_shape(ins)?;
             if shape.numel() != x.numel() {
@@ -564,7 +571,99 @@ fn eval_instr(
                     x.numel()
                 ));
             }
-            Value::Tensor(Tensor::new(shape.dims.clone(), DType::F32, x.data.clone()))
+            Value::Tensor(Tensor::new(shape.dims.clone(), shape.elem.dtype(), x.data.clone()))
+        }
+        Opcode::Convert => {
+            let x = t(0)?;
+            let shape = out_shape(ins)?;
+            if shape.numel() != x.numel() {
+                return Err(format!(
+                    "{}: cannot convert {} elements into {shape}",
+                    ins.name,
+                    x.numel()
+                ));
+            }
+            let src_elem = comp.instrs[ins.operands[0]]
+                .shape
+                .array()
+                .map_err(|e| format!("{}: {e}", ins.name))?
+                .elem;
+            let data = match super::convert_op(src_elem, shape.elem) {
+                None => x.data.clone(),
+                Some(op) => x.data.iter().map(|&v| op.apply(v)).collect(),
+            };
+            Value::Tensor(Tensor::new(shape.dims.clone(), shape.elem.dtype(), data))
+        }
+        Opcode::Iota => {
+            let shape = out_shape(ins)?;
+            let dim = ins
+                .iota_dim
+                .ok_or_else(|| format!("{}: iota without iota_dimension", ins.name))?;
+            if dim >= shape.dims.len() {
+                return Err(format!(
+                    "{}: iota_dimension {dim} out of range for {shape}",
+                    ins.name
+                ));
+            }
+            let ostr = row_major_strides(&shape.dims);
+            let mut out = vec![0f32; shape.numel()];
+            for (li, slot) in out.iter_mut().enumerate() {
+                *slot = ((li / ostr[dim]) % shape.dims[dim]) as f32;
+            }
+            Value::Tensor(Tensor::new(shape.dims.clone(), shape.elem.dtype(), out))
+        }
+        Opcode::DynamicSlice => {
+            let x = t(0)?;
+            let shape = out_shape(ins)?;
+            let rank = x.rank();
+            if ins.slice_sizes.len() != rank {
+                return Err(format!(
+                    "{}: dynamic_slice_sizes rank does not match operand rank {rank}",
+                    ins.name
+                ));
+            }
+            if shape.dims != ins.slice_sizes {
+                return Err(format!(
+                    "{}: result shape {shape} does not match dynamic_slice_sizes {:?}",
+                    ins.name, ins.slice_sizes
+                ));
+            }
+            if ins.operands.len() != rank + 1 {
+                return Err(format!(
+                    "{}: expected {} start indices, found {}",
+                    ins.name,
+                    rank,
+                    ins.operands.len().saturating_sub(1)
+                ));
+            }
+            let istr = x.strides();
+            let mut base = 0usize;
+            for d in 0..rank {
+                let idx_t = t(1 + d)?;
+                if idx_t.numel() != 1 {
+                    return Err(format!("{}: start index {d} must be scalar", ins.name));
+                }
+                if ins.slice_sizes[d] > x.shape[d] {
+                    return Err(format!(
+                        "{}: slice size {} exceeds operand dim {} ({})",
+                        ins.name, ins.slice_sizes[d], d, x.shape[d]
+                    ));
+                }
+                // starts clamp into [0, dim - size], per HLO semantics
+                let max_start = (x.shape[d] - ins.slice_sizes[d]) as i64;
+                let start = (idx_t.data[0] as i64).clamp(0, max_start);
+                base += start as usize * istr[d];
+            }
+            let ostr = row_major_strides(&shape.dims);
+            let mut out = vec![0f32; shape.numel()];
+            for (li, slot) in out.iter_mut().enumerate() {
+                let mut si = base;
+                for d in 0..rank {
+                    si += ((li / ostr[d]) % shape.dims[d]) * istr[d];
+                }
+                *slot = x.data[si];
+            }
+            Value::Tensor(Tensor::new(shape.dims.clone(), shape.elem.dtype(), out))
         }
         Opcode::Compare => {
             let dir = ins
@@ -598,7 +697,7 @@ fn eval_instr(
                 .zip(&on_false.data)
                 .map(|((&p, &a), &b)| if p != 0.0 { a } else { b })
                 .collect();
-            Value::Tensor(Tensor::new(shape.dims.clone(), DType::F32, data))
+            Value::Tensor(Tensor::new(shape.dims.clone(), shape.elem.dtype(), data))
         }
         Opcode::Transpose => {
             let x = t(0)?;
@@ -614,7 +713,7 @@ fn eval_instr(
                     ins.name, out.shape
                 ));
             }
-            Value::Tensor(out)
+            Value::Tensor(out.with_dtype(shape.elem.dtype()))
         }
         Opcode::Broadcast => Value::Tensor(eval_broadcast(ins, t(0)?)?),
         Opcode::Reduce => {
@@ -646,6 +745,78 @@ fn eval_instr(
                 ts.push(t(k)?.clone());
             }
             Value::Tuple(ts)
+        }
+        Opcode::GetTupleElement => {
+            let k = ins
+                .tuple_index
+                .ok_or_else(|| format!("{}: get-tuple-element without index", ins.name))?;
+            let oi = *ins
+                .operands
+                .first()
+                .ok_or_else(|| format!("{}: missing operand 0", ins.name))?;
+            match env.get(oi).and_then(|v| v.as_ref()) {
+                Some(Value::Tuple(ts)) => Value::Tensor(ts.get(k).cloned().ok_or_else(|| {
+                    format!("{}: tuple index {k} out of range ({} elements)", ins.name, ts.len())
+                })?),
+                Some(Value::Tensor(_)) => {
+                    return Err(format!("{}: operand is not tuple-valued", ins.name))
+                }
+                None => return Err(format!("{}: operand evaluated out of order", ins.name)),
+            }
+        }
+        Opcode::While => {
+            let cond_name = ins
+                .condition
+                .as_deref()
+                .ok_or_else(|| format!("{}: while without condition", ins.name))?;
+            let body_name = ins
+                .body
+                .as_deref()
+                .ok_or_else(|| format!("{}: while without body", ins.name))?;
+            let cci = m
+                .computation_index(cond_name)
+                .ok_or_else(|| format!("{}: unknown computation '{cond_name}'", ins.name))?;
+            let bci = m
+                .computation_index(body_name)
+                .ok_or_else(|| format!("{}: unknown computation '{body_name}'", ins.name))?;
+            let oi = *ins
+                .operands
+                .first()
+                .ok_or_else(|| format!("{}: missing operand 0", ins.name))?;
+            let mut state = env
+                .get(oi)
+                .and_then(|v| v.as_ref())
+                .cloned()
+                .ok_or_else(|| format!("{}: operand evaluated out of order", ins.name))?;
+            let mut iters = 0usize;
+            loop {
+                // the condition call clones the carried state because
+                // eval_computation consumes its arguments (that is what
+                // drives its last-use freeing); this is the reference /
+                // fallback path, where simplicity beats the copy cost —
+                // the plan executor is the fast path
+                let keep = match eval_computation(m, cci, vec![state.clone()])? {
+                    Value::Tensor(c) if c.numel() == 1 => c.data[0] != 0.0,
+                    _ => {
+                        return Err(format!(
+                            "{}: condition '{cond_name}' must return a scalar pred",
+                            ins.name
+                        ))
+                    }
+                };
+                if !keep {
+                    break;
+                }
+                state = eval_computation(m, bci, vec![state])?;
+                iters += 1;
+                if iters >= MAX_WHILE_ITERS {
+                    return Err(format!(
+                        "{}: exceeded {MAX_WHILE_ITERS} while iterations",
+                        ins.name
+                    ));
+                }
+            }
+            state
         }
         Opcode::Other(op) => {
             return Err(format!(
@@ -896,5 +1067,61 @@ mod tests {
         let got = run1(text, &[]);
         assert_eq!(got.shape, vec![2, 2]);
         assert_eq!(got.data, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn iota_walks_the_requested_dimension() {
+        let text = "HloModule t\n\nENTRY e {\n  ROOT i = s32[2,3]{1,0} iota(), iota_dimension=1\n}\n";
+        let got = run1(text, &[]);
+        assert_eq!(got.data, vec![0.0, 1.0, 2.0, 0.0, 1.0, 2.0]);
+        assert_eq!(got.dtype, DType::I32);
+        let text = "HloModule t\n\nENTRY e {\n  ROOT i = f32[2,3]{1,0} iota(), iota_dimension=0\n}\n";
+        let got = run1(text, &[]);
+        assert_eq!(got.data, vec![0.0, 0.0, 0.0, 1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn dynamic_slice_clamps_start_indices() {
+        // start 2 with size 2 over dim of 3 clamps to 1; start -5 clamps to 0
+        let text = "HloModule t\n\nENTRY e {\n  x = f32[3,4]{1,0} parameter(0)\n  i = s32[] constant(2)\n  j = s32[] constant(-5)\n  ROOT d = f32[2,4]{1,0} dynamic-slice(x, i, j), dynamic_slice_sizes={2,4}\n}\n";
+        let x = Tensor::new(vec![3, 4], DType::F32, (0..12).map(|v| v as f32).collect());
+        let got = run1(text, &[&x]);
+        assert_eq!(got.shape, vec![2, 4]);
+        assert_eq!(got.data, (4..12).map(|v| v as f32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn while_loop_runs_body_until_condition_flips() {
+        // doubles x three times: state (i, x), cond i < 3
+        let text = "HloModule t\n\nbody {\n  p = (s32[], f32[2]{0}) parameter(0)\n  i = s32[] get-tuple-element(p), index=0\n  x = f32[2]{0} get-tuple-element(p), index=1\n  one = s32[] constant(1)\n  i2 = s32[] add(i, one)\n  x2 = f32[2]{0} add(x, x)\n  ROOT t = (s32[], f32[2]{0}) tuple(i2, x2)\n}\n\ncond {\n  p = (s32[], f32[2]{0}) parameter(0)\n  i = s32[] get-tuple-element(p), index=0\n  n = s32[] constant(3)\n  ROOT c = pred[] compare(i, n), direction=LT\n}\n\nENTRY e {\n  x = f32[2]{0} parameter(0)\n  z = s32[] constant(0)\n  st = (s32[], f32[2]{0}) tuple(z, x)\n  w = (s32[], f32[2]{0}) while(st), condition=cond, body=body\n  ROOT y = f32[2]{0} get-tuple-element(w), index=1\n}\n";
+        let got = run1(text, &[&t(&[1.0, -2.5])]);
+        assert_eq!(got.data, vec![8.0, -20.0]);
+    }
+
+    #[test]
+    fn while_that_never_terminates_errors_out() {
+        let text = "HloModule t\n\nbody {\n  p = (s32[]) parameter(0)\n  i = s32[] get-tuple-element(p), index=0\n  ROOT t = (s32[]) tuple(i)\n}\n\ncond {\n  p = (s32[]) parameter(0)\n  i = s32[] get-tuple-element(p), index=0\n  ROOT c = pred[] compare(i, i), direction=EQ\n}\n\nENTRY e {\n  z = s32[] constant(0)\n  st = (s32[]) tuple(z)\n  w = (s32[]) while(st), condition=cond, body=body\n  ROOT y = s32[] get-tuple-element(w), index=0\n}\n";
+        let m = parse_module(text).unwrap();
+        let e = evaluate(&m, &[]).unwrap_err();
+        assert!(e.contains("while iterations"), "{e}");
+    }
+
+    #[test]
+    fn convert_truncates_to_int_and_booleanizes_to_pred() {
+        let text = "HloModule t\n\nENTRY e {\n  x = f32[4]{0} parameter(0)\n  i = s32[4]{0} convert(x)\n  p = pred[4]{0} convert(x)\n  ROOT o = (s32[4], pred[4]) tuple(i, p)\n}\n";
+        let m = parse_module(text).unwrap();
+        let out = evaluate(&m, &[&t(&[2.7, -2.7, 0.0, -0.4])]).unwrap();
+        assert_eq!(out[0].data, vec![2.0, -2.0, 0.0, -0.0]);
+        assert_eq!(out[0].dtype, DType::I32);
+        assert_eq!(out[1].data, vec![1.0, 1.0, 0.0, 1.0]);
+        assert_eq!(out[1].dtype, DType::Bool);
+    }
+
+    #[test]
+    fn output_dtype_follows_the_declared_element_type() {
+        let text = "HloModule t\n\nENTRY e {\n  a = s32[2]{0} constant({1, 2})\n  ROOT s = s32[2]{0} add(a, a)\n}\n";
+        let got = run1(text, &[]);
+        assert_eq!(got.dtype, DType::I32);
+        assert_eq!(got.data, vec![2.0, 4.0]);
     }
 }

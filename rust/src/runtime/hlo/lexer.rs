@@ -18,6 +18,7 @@ pub enum Token {
 }
 
 impl Token {
+    /// Human-readable form for parser error messages.
     pub fn describe(&self) -> String {
         match self {
             Token::Word(w) => format!("'{w}'"),

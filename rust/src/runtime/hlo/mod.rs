@@ -26,3 +26,45 @@ pub mod plan;
 pub use eval::evaluate;
 pub use parser::{parse_module, Module, ParseError};
 pub use plan::{ExecutablePlan, PlanOptions, PlanScratch};
+
+use crate::util::kernels::UnaryOp;
+use parser::ElemType;
+
+/// Iteration cap for `while` loops (shared by the evaluator and the plan
+/// executor): a malformed module whose condition never flips must fail
+/// with an error, not hang the worker pool.
+pub(crate) const MAX_WHILE_ITERS: usize = 1_000_000;
+
+/// The numeric effect of an HLO `convert` from `src` to `dst`, as a shared
+/// scalar op (`None` = identity). Host data stays `f32`; what is modeled:
+///
+/// * to an integer type — truncation toward zero ([`UnaryOp::Trunc`]);
+/// * to `pred` — `x != 0` as 0.0/1.0 ([`UnaryOp::NonZero`]);
+/// * to `f16` / `bf16` — round-to-nearest-even quantization;
+/// * to `f32` / `f64`, or between integer widths — identity (integer
+///   values are stored as exact small floats, so width changes are
+///   value-preserving in this model).
+///
+/// One table serves both the plan compiler and the tree-walking evaluator,
+/// so the two stay bit-identical by construction.
+pub(crate) fn convert_op(src: ElemType, dst: ElemType) -> Option<UnaryOp> {
+    match dst {
+        ElemType::Pred => {
+            if src == ElemType::Pred {
+                None
+            } else {
+                Some(UnaryOp::NonZero)
+            }
+        }
+        _ if dst.is_int() => {
+            if src.is_int() || src == ElemType::Pred {
+                None
+            } else {
+                Some(UnaryOp::Trunc)
+            }
+        }
+        ElemType::F16 => Some(UnaryOp::F16Round),
+        ElemType::Bf16 => Some(UnaryOp::Bf16Round),
+        _ => None,
+    }
+}

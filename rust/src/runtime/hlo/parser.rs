@@ -23,8 +23,58 @@
 //! opcodes parse into [`Opcode::Other`] and only fail at evaluation time.
 
 use super::lexer::{lex_line, Token};
+use crate::util::tensor::DType;
 use std::collections::HashMap;
 use std::fmt;
+
+/// Element-type names the parser accepts, exactly as they appear in HLO
+/// text. `docs/HLO_SUBSET.md` documents this list and
+/// `rust/tests/docs_spec.rs` keeps the two in sync.
+pub const SUPPORTED_ELEM_TYPES: &[&str] =
+    &["f32", "f64", "f16", "bf16", "pred", "s8", "s32", "s64", "u8", "u32", "u64"];
+
+/// Opcode names the parser maps to a known [`Opcode`] (everything else
+/// parses as [`Opcode::Other`] and only fails if evaluated).
+/// `docs/HLO_SUBSET.md` documents this list and `rust/tests/docs_spec.rs`
+/// keeps the two in sync.
+pub const SUPPORTED_OPCODES: &[&str] = &[
+    "parameter",
+    "constant",
+    "add",
+    "subtract",
+    "multiply",
+    "divide",
+    "maximum",
+    "minimum",
+    "power",
+    "exponential",
+    "log",
+    "tanh",
+    "sqrt",
+    "rsqrt",
+    "negate",
+    "abs",
+    "floor",
+    "ceil",
+    "sign",
+    "logistic",
+    "copy",
+    "convert",
+    "compare",
+    "select",
+    "reshape",
+    "transpose",
+    "broadcast",
+    "iota",
+    "dynamic-slice",
+    "reduce",
+    "reduce-window",
+    "dot",
+    "call",
+    "while",
+    "get-tuple-element",
+    "tuple",
+];
 
 /// Element type of an HLO array shape. All host data is stored as `f32`;
 /// the element type is kept for shape reporting and validation.
@@ -61,6 +111,7 @@ impl ElemType {
         }
     }
 
+    /// The HLO text spelling of this element type.
     pub fn name(self) -> &'static str {
         match self {
             ElemType::F32 => "f32",
@@ -76,6 +127,36 @@ impl ElemType {
             ElemType::U64 => "u64",
         }
     }
+
+    /// The host [`DType`] values of this element type are tagged with.
+    /// Host storage is always `f32`; the logical dtype rides along so
+    /// oracle outputs report `s32[64]` as an `I32` tensor, not `F32`.
+    /// Widths collapse where the host has no finer tag: `f64` reports as
+    /// `F32`, `bf16` as `F16`, and unsigned types as their signed
+    /// siblings (documented in `docs/HLO_SUBSET.md`).
+    pub fn dtype(self) -> DType {
+        match self {
+            ElemType::F32 | ElemType::F64 => DType::F32,
+            ElemType::F16 | ElemType::Bf16 => DType::F16,
+            ElemType::Pred => DType::Bool,
+            ElemType::S8 | ElemType::U8 => DType::I8,
+            ElemType::S32 | ElemType::U32 => DType::I32,
+            ElemType::S64 | ElemType::U64 => DType::I64,
+        }
+    }
+
+    /// Is this one of the signed/unsigned integer element types?
+    pub fn is_int(self) -> bool {
+        matches!(
+            self,
+            ElemType::S8
+                | ElemType::S32
+                | ElemType::S64
+                | ElemType::U8
+                | ElemType::U32
+                | ElemType::U64
+        )
+    }
 }
 
 /// A dense array shape (`f32[512,2048]`). Layout annotations are ignored.
@@ -86,6 +167,7 @@ pub struct Shape {
 }
 
 impl Shape {
+    /// Total element count (product of `dims`; 1 for scalars).
     pub fn numel(&self) -> usize {
         self.dims.iter().product()
     }
@@ -181,10 +263,14 @@ pub enum Opcode {
     Reshape,
     Transpose,
     Broadcast,
+    Iota,
+    DynamicSlice,
     Reduce,
     ReduceWindow,
     Dot,
     Call,
+    While,
+    GetTupleElement,
     Tuple,
     Other(String),
 }
@@ -219,10 +305,14 @@ impl Opcode {
             "reshape" => Opcode::Reshape,
             "transpose" => Opcode::Transpose,
             "broadcast" => Opcode::Broadcast,
+            "iota" => Opcode::Iota,
+            "dynamic-slice" => Opcode::DynamicSlice,
             "reduce" => Opcode::Reduce,
             "reduce-window" => Opcode::ReduceWindow,
             "dot" => Opcode::Dot,
             "call" => Opcode::Call,
+            "while" => Opcode::While,
+            "get-tuple-element" => Opcode::GetTupleElement,
             "tuple" => Opcode::Tuple,
             other => Opcode::Other(other.to_string()),
         }
@@ -253,6 +343,16 @@ pub struct Instr {
     pub lhs_batch: Vec<usize>,
     pub rhs_batch: Vec<usize>,
     pub window: Option<Window>,
+    /// `iota_dimension=N` (iota).
+    pub iota_dim: Option<usize>,
+    /// `dynamic_slice_sizes={...}` (dynamic-slice).
+    pub slice_sizes: Vec<usize>,
+    /// `condition=name` (while).
+    pub condition: Option<String>,
+    /// `body=name` (while).
+    pub body: Option<String>,
+    /// `index=N` (get-tuple-element).
+    pub tuple_index: Option<usize>,
 }
 
 /// A named computation: entry or subcomputation (combiner, called fn).
@@ -277,10 +377,13 @@ pub struct Module {
 }
 
 impl Module {
+    /// The ENTRY computation (the one `evaluate`/plan compilation run).
     pub fn entry_computation(&self) -> &Computation {
         &self.computations[self.entry]
     }
 
+    /// Index of computation `name` (reduce combiners, call targets,
+    /// while conditions/bodies), if it exists.
     pub fn computation_index(&self, name: &str) -> Option<usize> {
         self.by_name.get(name).copied()
     }
@@ -567,6 +670,11 @@ fn parse_instr(
         lhs_batch: Vec::new(),
         rhs_batch: Vec::new(),
         window: None,
+        iota_dim: None,
+        slice_sizes: Vec::new(),
+        condition: None,
+        body: None,
+        tuple_index: None,
     };
     c.expect_punct('(')?;
     match ins.opcode {
@@ -624,6 +732,11 @@ fn parse_instr(
                     "lhs_batch_dims" => ins.lhs_batch = c.usize_list()?,
                     "rhs_batch_dims" => ins.rhs_batch = c.usize_list()?,
                     "window" => ins.window = Some(parse_window(&mut c)?),
+                    "iota_dimension" => ins.iota_dim = Some(c.usize_word()?),
+                    "dynamic_slice_sizes" => ins.slice_sizes = c.usize_list()?,
+                    "condition" => ins.condition = Some(c.word()?),
+                    "body" => ins.body = Some(c.word()?),
+                    "index" => ins.tuple_index = Some(c.usize_word()?),
                     _ => {
                         // metadata=, sharding=, frontend_attributes=, ...
                         if c.peek_punct('{') {
@@ -790,10 +903,11 @@ pub fn parse_module(text: &str) -> Result<Module, ParseError> {
         Some(e) => e,
         None => return err(1, "module has no ENTRY computation"),
     };
-    // every to_apply must resolve
+    // every referenced computation (to_apply / while condition+body) must
+    // resolve
     for comp in &computations {
         for ins in &comp.instrs {
-            if let Some(target) = &ins.to_apply {
+            for target in [&ins.to_apply, &ins.condition, &ins.body].into_iter().flatten() {
                 if !by_name.contains_key(target) {
                     return err(
                         1,
@@ -929,6 +1043,74 @@ ENTRY main.26 {
         let text = "HloModule t\n\nENTRY e {\n  x = f32[4]{0} parameter(0)\n  ROOT y = f32[4]{0} negate(x), metadata={op_type=\"neg\" op_name=\"jit(f)/neg\" source_file=\"a,b.py\" source_line=3}, backend_config=\"cfg\"\n}\n";
         let m = parse_module(text).unwrap();
         assert_eq!(m.entry_computation().instrs.len(), 2);
+    }
+
+    #[test]
+    fn iota_and_dynamic_slice_attributes_parse() {
+        let text = "HloModule t\n\nENTRY e {\n  i = s32[4,3]{1,0} iota(), iota_dimension=1\n  x = f32[4,3]{1,0} parameter(0)\n  z = s32[] constant(0)\n  ROOT d = f32[2,3]{1,0} dynamic-slice(x, z, z), dynamic_slice_sizes={2,3}\n}\n";
+        let m = parse_module(text).unwrap();
+        let e = m.entry_computation();
+        let iota = &e.instrs[0];
+        assert_eq!(iota.opcode, Opcode::Iota);
+        assert_eq!(iota.iota_dim, Some(1));
+        assert!(iota.operands.is_empty());
+        let ds = &e.instrs[e.root];
+        assert_eq!(ds.opcode, Opcode::DynamicSlice);
+        assert_eq!(ds.slice_sizes, vec![2, 3]);
+        assert_eq!(ds.operands.len(), 3);
+    }
+
+    #[test]
+    fn while_and_get_tuple_element_parse() {
+        let text = "HloModule t\n\nbody {\n  p = (s32[], f32[2]{0}) parameter(0)\n  i = s32[] get-tuple-element(p), index=0\n  x = f32[2]{0} get-tuple-element(p), index=1\n  one = s32[] constant(1)\n  i2 = s32[] add(i, one)\n  x2 = f32[2]{0} add(x, x)\n  ROOT t = (s32[], f32[2]{0}) tuple(i2, x2)\n}\n\ncond {\n  p = (s32[], f32[2]{0}) parameter(0)\n  i = s32[] get-tuple-element(p), index=0\n  n = s32[] constant(3)\n  ROOT c = pred[] compare(i, n), direction=LT\n}\n\nENTRY e {\n  x = f32[2]{0} parameter(0)\n  z = s32[] constant(0)\n  st = (s32[], f32[2]{0}) tuple(z, x)\n  w = (s32[], f32[2]{0}) while(st), condition=cond, body=body\n  ROOT y = f32[2]{0} get-tuple-element(w), index=1\n}\n";
+        let m = parse_module(text).unwrap();
+        let e = m.entry_computation();
+        let w = e.instrs.iter().find(|i| i.name == "w").unwrap();
+        assert_eq!(w.opcode, Opcode::While);
+        assert_eq!(w.condition.as_deref(), Some("cond"));
+        assert_eq!(w.body.as_deref(), Some("body"));
+        match &w.shape {
+            InstrShape::Tuple(shapes) => assert_eq!(shapes.len(), 2),
+            other => panic!("expected tuple while shape, got {other:?}"),
+        }
+        let gte = &e.instrs[e.root];
+        assert_eq!(gte.opcode, Opcode::GetTupleElement);
+        assert_eq!(gte.tuple_index, Some(1));
+        // body's tuple-shaped parameter parses with both element shapes
+        let body = &m.computations[m.computation_index("body").unwrap()];
+        match &body.instrs[body.params[0]].shape {
+            InstrShape::Tuple(shapes) => {
+                assert_eq!(shapes[0].elem, ElemType::S32);
+                assert_eq!(shapes[1].dims, vec![2]);
+            }
+            other => panic!("expected tuple parameter shape, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn while_with_unknown_body_is_rejected() {
+        let text = "HloModule t\n\nENTRY e {\n  x = (f32[2]{0}) parameter(0)\n  ROOT w = (f32[2]{0}) while(x), condition=nope, body=nada\n}\n";
+        let e = parse_module(text).unwrap_err();
+        assert!(e.msg.contains("unknown computation"), "{}", e.msg);
+    }
+
+    #[test]
+    fn supported_opcode_list_matches_the_parser() {
+        use std::collections::HashSet;
+        let mut seen = HashSet::new();
+        for name in SUPPORTED_OPCODES {
+            let op = Opcode::parse(name);
+            assert!(
+                !matches!(op, Opcode::Other(_)),
+                "'{name}' is listed as supported but parses to Other"
+            );
+            assert!(seen.insert(format!("{op:?}")), "'{name}' parses to a duplicate opcode");
+        }
+        for name in SUPPORTED_ELEM_TYPES {
+            assert!(ElemType::parse(name).is_some(), "'{name}' listed but not parsed");
+            assert_eq!(ElemType::parse(name).unwrap().name(), *name);
+        }
+        assert!(ElemType::parse("c64").is_none());
     }
 
     #[test]

@@ -9,18 +9,24 @@
 //!   is preserved);
 //! * **elementwise fusion** — chains of single-use elementwise instructions
 //!   (arithmetic, compare/select, reshape/copy/convert, scalar broadcasts)
-//!   collapse into one [`Step::Fused`] expression evaluated in cache-sized
+//!   collapse into one fused-step expression evaluated in cache-sized
 //!   chunks: intermediates live in L1-resident scratch instead of
 //!   full-tensor allocations;
 //! * **combiner resolution** — `reduce`/`reduce-window` combiner
-//!   computations resolve to a static [`Combiner`] at compile time (exotic
+//!   computations resolve to a static combiner enum at compile time (exotic
 //!   combiners compile to a scalar expression; nothing is re-interpreted
 //!   per element);
 //! * **buffer arena** — last-use liveness analysis assigns instruction
 //!   outputs to recycled arena slots, so executing a module allocates a
 //!   handful of buffers instead of one per instruction. A step's output
 //!   slot is acquired *before* its operands' slots are released, so an
-//!   output can never alias a live operand.
+//!   output can never alias a live operand;
+//! * **tuple flattening** — `tuple`, `get-tuple-element`, and
+//!   tuple-returning `call`s resolve to flat node ids at compile time
+//!   (tuples never materialize); `iota` folds into a compile-time
+//!   constant; `while` compiles its condition and body into *nested*
+//!   plans executed by a dedicated step whose scratches persist in
+//!   [`PlanScratch`] across runs.
 //!
 //! Numerics are bit-identical to the [`super::eval`] tree-walker: the same
 //! scalar operations in the same accumulation widths and orders. The
@@ -32,7 +38,8 @@
 //! tree-walker also serves as the fallback for modules outside the plan
 //! compiler's scope.
 
-use super::parser::{CmpDir, Instr, Module, Opcode};
+use super::parser::{CmpDir, Instr, InstrShape, Module, Opcode};
+use super::MAX_WHILE_ITERS;
 use crate::util::kernels::{self, BinOp, CmpOp, UnaryOp};
 use crate::util::tensor::{DType, Tensor};
 
@@ -214,6 +221,33 @@ enum Step {
         k: usize,
         n: usize,
     },
+    /// `dynamic-slice`: copy a `sizes`-shaped window out of `src`, with
+    /// runtime scalar start indices (clamped to keep the window in
+    /// bounds, per HLO semantics).
+    DynamicSlice {
+        src: Src,
+        starts: Vec<Src>,
+        out: usize,
+        in_dims: Vec<usize>,
+        istr: Vec<usize>,
+        sizes: Vec<usize>,
+        ostr: Vec<usize>,
+        n: usize,
+    },
+    /// `while`: run `body` on the carried state until `cond` returns 0.
+    /// The condition and body compile to nested plans whose inputs are the
+    /// flattened state elements; `outs` are this step's output nodes, one
+    /// per element (the only multi-output step).
+    While {
+        cond: Box<ExecutablePlan>,
+        body: Box<ExecutablePlan>,
+        state: Vec<Src>,
+        outs: Vec<usize>,
+        elem_dims: Vec<Vec<usize>>,
+        elem_dtypes: Vec<DType>,
+        /// Index into [`PlanScratch::whiles`] for the nested scratches.
+        scratch_idx: usize,
+    },
 }
 
 /// Reusable execution scratch: the arena slots plus pooled temporaries.
@@ -226,6 +260,17 @@ pub struct PlanScratch {
     pool: Vec<Vec<f32>>,
     /// Full-tensor temporaries (dot operand gathers).
     big: Vec<Vec<f32>>,
+    /// Nested condition/body scratches for `while` steps (indexed by the
+    /// step's `scratch_idx`), so repeat executions amortize the loop
+    /// arenas too.
+    whiles: Vec<WhileScratch>,
+}
+
+/// The two nested scratches a `while` step executes with.
+#[derive(Default)]
+struct WhileScratch {
+    cond: PlanScratch,
+    body: PlanScratch,
 }
 
 /// A compiled, executable HLO module. Plain data (`Send + Sync`): many
@@ -235,7 +280,8 @@ pub struct ExecutablePlan {
     steps: Vec<Step>,
     consts: Vec<Tensor>,
     slot_caps: Vec<usize>,
-    roots: Vec<(Src, Vec<usize>)>,
+    /// Output sources with their dims and logical dtype.
+    roots: Vec<(Src, Vec<usize>, DType)>,
     param_dims: Vec<Vec<usize>>,
 }
 
@@ -249,6 +295,21 @@ struct FlatInstr {
     dims: Vec<usize>,
     /// Entry parameter index, when this node is an entry parameter.
     param: Option<usize>,
+    /// Set on a `while` step's first output node (the anchor): the flat
+    /// node ids of ALL its state-element outputs, in element order. The
+    /// remaining output nodes are markers whose single operand is the
+    /// anchor (so liveness and dead-code elimination see the dependency).
+    while_outs: Option<Vec<usize>>,
+}
+
+/// A flattened value: a single array node, or a flat tuple of array
+/// nodes (`tuple`, tuple-returning `call`, `while` results). Tuples never
+/// materialize — `get-tuple-element` resolves to the element node at
+/// compile time.
+#[derive(Clone, Debug)]
+enum NodeVal {
+    One(usize),
+    Tup(Vec<usize>),
 }
 
 fn numel(dims: &[usize]) -> usize {
@@ -261,16 +322,18 @@ fn array_dims(ins: &Instr) -> Result<Vec<usize>, String> {
 
 const MAX_INLINE_DEPTH: usize = 64;
 
-/// Inline computation `ci` (with `args` as its parameter nodes) into
-/// `nodes`, returning the local-index -> node-id map. Tuples get a
-/// sentinel (only legal as the entry root).
+/// Inline computation `ci` (with `args` as its parameter values) into
+/// `nodes`, returning the local-index -> value map. `tuple`,
+/// `get-tuple-element`, and tuple-returning `call`s resolve at compile
+/// time to flat tuples of node ids; `while` pushes one output node per
+/// state element (see [`FlatInstr::while_outs`]).
 fn flatten(
     m: &Module,
     ci: usize,
-    args: &[usize],
+    args: &[NodeVal],
     nodes: &mut Vec<FlatInstr>,
     depth: usize,
-) -> Result<Vec<usize>, String> {
+) -> Result<Vec<Option<NodeVal>>, String> {
     if depth > MAX_INLINE_DEPTH {
         return Err("call nesting exceeds the inlining depth limit".to_string());
     }
@@ -283,26 +346,28 @@ fn flatten(
             args.len()
         ));
     }
-    let mut local: Vec<usize> = vec![usize::MAX; comp.instrs.len()];
+    let mut local: Vec<Option<NodeVal>> = vec![None; comp.instrs.len()];
     for (li, ins) in comp.instrs.iter().enumerate() {
-        let mapped = |o: &usize| -> Result<usize, String> {
-            let id = local[*o];
-            if id == usize::MAX {
-                return Err(format!(
-                    "{}: tuple-valued operands are not supported",
+        let one = |local: &[Option<NodeVal>], o: &usize| -> Result<usize, String> {
+            match &local[*o] {
+                Some(NodeVal::One(id)) => Ok(*id),
+                Some(NodeVal::Tup(_)) => Err(format!(
+                    "{}: tuple-valued operand (nested tuples are not supported)",
                     ins.name
-                ));
+                )),
+                None => Err(format!("{}: operand evaluated out of order", ins.name)),
             }
-            Ok(id)
         };
         match &ins.opcode {
             Opcode::Parameter => {
                 let pi = ins
                     .param_index
                     .ok_or_else(|| format!("{}: parameter without index", ins.name))?;
-                local[li] = *args
-                    .get(pi)
-                    .ok_or_else(|| format!("{}: parameter index {pi} out of range", ins.name))?;
+                local[li] = Some(
+                    args.get(pi)
+                        .cloned()
+                        .ok_or_else(|| format!("{}: parameter index {pi} out of range", ins.name))?,
+                );
             }
             Opcode::Call => {
                 let target = ins
@@ -314,30 +379,113 @@ fn flatten(
                     .ok_or_else(|| format!("{}: unknown computation '{target}'", ins.name))?;
                 let mut call_args = Vec::with_capacity(ins.operands.len());
                 for o in &ins.operands {
-                    call_args.push(mapped(o)?);
+                    call_args.push(NodeVal::One(one(&local, o)?));
                 }
                 let sub = flatten(m, tci, &call_args, nodes, depth + 1)?;
                 let root = m.computations[tci].root;
-                let root_id = sub[root];
-                if root_id == usize::MAX {
-                    return Err(format!(
-                        "{}: called computation '{target}' returns a tuple",
-                        ins.name
-                    ));
-                }
-                local[li] = root_id;
+                local[li] = Some(sub[root].clone().ok_or_else(|| {
+                    format!("{}: called computation '{target}' produced no value", ins.name)
+                })?);
             }
             Opcode::Tuple => {
-                // legal only as the entry root; the caller checks.
+                let mut elems = Vec::with_capacity(ins.operands.len());
+                for o in &ins.operands {
+                    elems.push(one(&local, o)?);
+                }
+                local[li] = Some(NodeVal::Tup(elems));
+            }
+            Opcode::GetTupleElement => {
+                let k = ins
+                    .tuple_index
+                    .ok_or_else(|| format!("{}: get-tuple-element without index", ins.name))?;
+                let o = ins
+                    .operands
+                    .first()
+                    .ok_or_else(|| format!("{}: missing operand 0", ins.name))?;
+                match &local[*o] {
+                    Some(NodeVal::Tup(elems)) => {
+                        let id = *elems.get(k).ok_or_else(|| {
+                            format!(
+                                "{}: tuple index {k} out of range ({} elements)",
+                                ins.name,
+                                elems.len()
+                            )
+                        })?;
+                        local[li] = Some(NodeVal::One(id));
+                    }
+                    Some(NodeVal::One(_)) => {
+                        return Err(format!("{}: operand is not tuple-valued", ins.name))
+                    }
+                    None => {
+                        return Err(format!("{}: operand evaluated out of order", ins.name))
+                    }
+                }
+            }
+            Opcode::While => {
+                let o = ins
+                    .operands
+                    .first()
+                    .ok_or_else(|| format!("{}: missing operand 0", ins.name))?;
+                let state: Vec<usize> = match &local[*o] {
+                    Some(NodeVal::One(id)) => vec![*id],
+                    Some(NodeVal::Tup(elems)) => elems.clone(),
+                    None => {
+                        return Err(format!("{}: operand evaluated out of order", ins.name))
+                    }
+                };
+                let elem_shapes = match &ins.shape {
+                    InstrShape::Array(s) => vec![s.clone()],
+                    InstrShape::Tuple(ss) => ss.clone(),
+                };
+                if elem_shapes.len() != state.len() {
+                    return Err(format!(
+                        "{}: while carries {} state elements but declares {}",
+                        ins.name,
+                        state.len(),
+                        elem_shapes.len()
+                    ));
+                }
+                for (k, (s, &sid)) in elem_shapes.iter().zip(&state).enumerate() {
+                    if nodes[sid].dims != s.dims {
+                        return Err(format!(
+                            "{}: state element {k} has shape {:?}, while declares {:?}",
+                            ins.name, nodes[sid].dims, s.dims
+                        ));
+                    }
+                }
+                let first = nodes.len();
+                let ids: Vec<usize> = (first..first + elem_shapes.len()).collect();
+                for (k, s) in elem_shapes.iter().enumerate() {
+                    let mut wi = ins.clone();
+                    wi.shape = InstrShape::Array(s.clone());
+                    nodes.push(FlatInstr {
+                        instr: wi,
+                        ops: if k == 0 { state.clone() } else { vec![first] },
+                        dims: s.dims.clone(),
+                        param: None,
+                        while_outs: if k == 0 { Some(ids.clone()) } else { None },
+                    });
+                }
+                local[li] = Some(if matches!(ins.shape, InstrShape::Array(_)) {
+                    NodeVal::One(ids[0])
+                } else {
+                    NodeVal::Tup(ids)
+                });
             }
             _ => {
                 let mut ops = Vec::with_capacity(ins.operands.len());
                 for o in &ins.operands {
-                    ops.push(mapped(o)?);
+                    ops.push(one(&local, o)?);
                 }
                 let dims = array_dims(ins)?;
-                nodes.push(FlatInstr { instr: ins.clone(), ops, dims, param: None });
-                local[li] = nodes.len() - 1;
+                nodes.push(FlatInstr {
+                    instr: ins.clone(),
+                    ops,
+                    dims,
+                    param: None,
+                    while_outs: None,
+                });
+                local[li] = Some(NodeVal::One(nodes.len() - 1));
             }
         }
     }
@@ -361,6 +509,8 @@ struct BuildState {
     repr: Vec<Repr>,
     consts: Vec<Tensor>,
     steps: Vec<Step>,
+    /// Number of `while` steps emitted so far (allocates scratch indices).
+    while_count: usize,
 }
 
 impl BuildState {
@@ -606,42 +756,69 @@ impl ExecutablePlan {
         ExecutablePlan::compile_with(m, PlanOptions::default())
     }
 
+    /// Compile the module's ENTRY computation with explicit options.
     pub fn compile_with(m: &Module, opts: PlanOptions) -> Result<ExecutablePlan, String> {
-        let comp = m.entry_computation();
-        let mut nodes: Vec<FlatInstr> = Vec::new();
-        let mut param_ids = Vec::new();
-        let mut param_dims = Vec::new();
-        for (pi, &idx) in comp.params.iter().enumerate() {
-            let ins = &comp.instrs[idx];
-            let dims = array_dims(ins)?;
-            nodes.push(FlatInstr {
-                instr: ins.clone(),
-                ops: Vec::new(),
-                dims: dims.clone(),
-                param: Some(pi),
-            });
-            param_ids.push(nodes.len() - 1);
-            param_dims.push(dims);
-        }
-        let local = flatten(m, m.entry, &param_ids, &mut nodes, 0)?;
+        ExecutablePlan::compile_computation(m, m.entry, opts, 0)
+    }
 
-        let root_ins = &comp.instrs[comp.root];
-        let root_ids: Vec<usize> = if root_ins.opcode == Opcode::Tuple {
-            let mut ids = Vec::with_capacity(root_ins.operands.len());
-            for &o in &root_ins.operands {
-                let id = local[o];
-                if id == usize::MAX {
-                    return Err(format!("{}: nested tuples are not supported", root_ins.name));
+    /// Compile one computation of `m` into a plan. Array-shaped parameters
+    /// bind one plan input each; a tuple-shaped parameter (the carried
+    /// state of a `while` condition/body) binds one plan input per
+    /// element, in element order.
+    fn compile_computation(
+        m: &Module,
+        ci: usize,
+        opts: PlanOptions,
+        depth: usize,
+    ) -> Result<ExecutablePlan, String> {
+        if depth > MAX_INLINE_DEPTH {
+            return Err("while nesting exceeds the inlining depth limit".to_string());
+        }
+        let comp = &m.computations[ci];
+        let mut nodes: Vec<FlatInstr> = Vec::new();
+        let mut args: Vec<NodeVal> = Vec::new();
+        let mut param_dims: Vec<Vec<usize>> = Vec::new();
+        for &idx in &comp.params {
+            let ins = &comp.instrs[idx];
+            match ins.shape.clone() {
+                InstrShape::Array(s) => {
+                    nodes.push(FlatInstr {
+                        instr: ins.clone(),
+                        ops: Vec::new(),
+                        dims: s.dims.clone(),
+                        param: Some(param_dims.len()),
+                        while_outs: None,
+                    });
+                    args.push(NodeVal::One(nodes.len() - 1));
+                    param_dims.push(s.dims);
                 }
-                ids.push(id);
+                InstrShape::Tuple(shapes) => {
+                    let mut elems = Vec::with_capacity(shapes.len());
+                    for s in shapes {
+                        let mut pi = ins.clone();
+                        pi.shape = InstrShape::Array(s.clone());
+                        nodes.push(FlatInstr {
+                            instr: pi,
+                            ops: Vec::new(),
+                            dims: s.dims.clone(),
+                            param: Some(param_dims.len()),
+                            while_outs: None,
+                        });
+                        elems.push(nodes.len() - 1);
+                        param_dims.push(s.dims);
+                    }
+                    args.push(NodeVal::Tup(elems));
+                }
             }
-            ids
-        } else {
-            let id = local[comp.root];
-            if id == usize::MAX {
-                return Err(format!("{}: root tuple was not flattened", root_ins.name));
+        }
+        let local = flatten(m, ci, &args, &mut nodes, depth)?;
+
+        let root_ids: Vec<usize> = match local[comp.root].clone() {
+            Some(NodeVal::Tup(ids)) => ids,
+            Some(NodeVal::One(id)) => vec![id],
+            None => {
+                return Err(format!("computation '{}': root was never flattened", comp.name))
             }
-            vec![id]
         };
 
         let mut use_count = vec![0usize; nodes.len()];
@@ -669,15 +846,23 @@ impl ExecutablePlan {
             repr: (0..nodes.len()).map(|_| Repr::Pending).collect(),
             consts: Vec::new(),
             steps: Vec::new(),
+            while_count: 0,
         };
         for i in 0..nodes.len() {
-            compile_node(m, &nodes, i, use_count[i], &mut st)?;
+            compile_node(m, &nodes, i, use_count[i], &mut st, opts, depth)?;
         }
 
         let mut roots = Vec::with_capacity(root_ids.len());
         for &r in &root_ids {
             let src = st.mat_src(&nodes, r)?;
-            roots.push((src, nodes[r].dims.clone()));
+            let dt = nodes[r]
+                .instr
+                .shape
+                .array()
+                .map_err(|e| format!("{}: {e}", nodes[r].instr.name))?
+                .elem
+                .dtype();
+            roots.push((src, nodes[r].dims.clone(), dt));
         }
 
         let (steps, slot_caps, root_srcs) =
@@ -704,10 +889,15 @@ fn compile_node(
     i: usize,
     uses: usize,
     st: &mut BuildState,
+    opts: PlanOptions,
+    depth: usize,
 ) -> Result<(), String> {
     if let Some(pi) = nodes[i].param {
         st.repr[i] = Repr::Mat(Src::Input(pi));
         return Ok(());
+    }
+    if matches!(nodes[i].instr.opcode, Opcode::While) {
+        return compile_while(m, nodes, i, uses, st, opts, depth);
     }
     if uses == 0 {
         // dead code: all ops are pure, skip the node entirely
@@ -735,7 +925,7 @@ fn compile_node(
             st.consts.push(Tensor::new(out_dims, DType::F32, lit));
             st.repr[i] = Repr::Mat(Src::Const(st.consts.len() - 1));
         }
-        Opcode::Copy | Opcode::Convert | Opcode::Reshape => {
+        Opcode::Copy | Opcode::Reshape => {
             let a = opd(0)?;
             if numel(&nodes[a].dims) != n_out {
                 return Err(format!(
@@ -745,6 +935,97 @@ fn compile_node(
             }
             let e = st.operand_expr(a)?;
             st.finish_elementwise(i, e, uses, n_out);
+        }
+        Opcode::Convert => {
+            let a = opd(0)?;
+            if numel(&nodes[a].dims) != n_out {
+                return Err(format!(
+                    "{name}: cannot convert {} elements into {n_out}",
+                    numel(&nodes[a].dims)
+                ));
+            }
+            let src_elem =
+                nodes[a].instr.shape.array().map_err(|e| format!("{name}: {e}"))?.elem;
+            let dst_elem =
+                nodes[i].instr.shape.array().map_err(|e| format!("{name}: {e}"))?.elem;
+            let e = st.operand_expr(a)?;
+            let e = match super::convert_op(src_elem, dst_elem) {
+                None => e,
+                Some(u) => FExpr::Un(u, Box::new(e)),
+            };
+            st.finish_elementwise(i, e, uses, n_out);
+        }
+        Opcode::Iota => {
+            let dim = nodes[i]
+                .instr
+                .iota_dim
+                .ok_or_else(|| format!("{name}: iota without iota_dimension"))?;
+            if dim >= out_dims.len() {
+                return Err(format!(
+                    "{name}: iota_dimension {dim} out of range for rank {}",
+                    out_dims.len()
+                ));
+            }
+            // iota is fully determined by its shape: fold it into a
+            // compile-time constant (the evaluator materializes the same
+            // values per call — see kernels::iota_fill)
+            let ostr = kernels::row_major_strides(&out_dims);
+            let mut data = vec![0f32; n_out];
+            kernels::iota_fill(&mut data, &out_dims, &ostr, dim);
+            let elem = nodes[i].instr.shape.array().map_err(|e| format!("{name}: {e}"))?.elem;
+            st.consts.push(Tensor::new(out_dims, elem.dtype(), data));
+            st.repr[i] = Repr::Mat(Src::Const(st.consts.len() - 1));
+        }
+        Opcode::DynamicSlice => {
+            let a = opd(0)?;
+            let in_dims = nodes[a].dims.clone();
+            let rank = in_dims.len();
+            let sizes = nodes[i].instr.slice_sizes.clone();
+            if sizes.len() != rank {
+                return Err(format!(
+                    "{name}: dynamic_slice_sizes rank does not match operand rank {rank}"
+                ));
+            }
+            if sizes != out_dims {
+                return Err(format!(
+                    "{name}: result shape {out_dims:?} does not match dynamic_slice_sizes {sizes:?}"
+                ));
+            }
+            if ops.len() != rank + 1 {
+                return Err(format!(
+                    "{name}: expected {rank} start indices, found {}",
+                    ops.len().saturating_sub(1)
+                ));
+            }
+            for d in 0..rank {
+                if sizes[d] > in_dims[d] {
+                    return Err(format!(
+                        "{name}: slice size {} exceeds operand dim {d} ({})",
+                        sizes[d], in_dims[d]
+                    ));
+                }
+                if numel(&nodes[opd(1 + d)?].dims) != 1 {
+                    return Err(format!("{name}: start index {d} must be scalar"));
+                }
+            }
+            let src = st.mat_src(nodes, a)?;
+            let mut starts = Vec::with_capacity(rank);
+            for d in 0..rank {
+                starts.push(st.mat_src(nodes, ops[1 + d])?);
+            }
+            let istr = kernels::row_major_strides(&in_dims);
+            let ostr = kernels::row_major_strides(&out_dims);
+            st.steps.push(Step::DynamicSlice {
+                src,
+                starts,
+                out: i,
+                in_dims,
+                istr,
+                sizes,
+                ostr,
+                n: n_out,
+            });
+            st.repr[i] = Repr::Mat(Src::Buf(i));
         }
         Opcode::Compare => {
             let (a, b) = (opd(0)?, opd(1)?);
@@ -1017,10 +1298,9 @@ fn compile_node(
             });
             st.repr[i] = Repr::Mat(Src::Buf(i));
         }
-        Opcode::Tuple => {
-            return Err(format!("{name}: tuple outside the entry root is not supported"))
+        Opcode::Tuple | Opcode::GetTupleElement | Opcode::Call => {
+            unreachable!("tuples, get-tuple-element and calls are resolved during flattening")
         }
-        Opcode::Call => unreachable!("calls are inlined during flattening"),
         Opcode::Other(op) => {
             return Err(format!(
                 "{name}: opcode '{op}' is outside the plan compiler's op set"
@@ -1051,6 +1331,108 @@ fn compile_node(
                 return Err(format!("{name}: opcode {op:?} is not handled"));
             }
         }
+    }
+    Ok(())
+}
+
+/// Compile a `while` node group. Called on every output-element node; the
+/// anchor (the node carrying [`FlatInstr::while_outs`]) emits the step and
+/// materializes the representation of all its output elements, marker
+/// nodes are no-ops.
+fn compile_while(
+    m: &Module,
+    nodes: &[FlatInstr],
+    i: usize,
+    uses: usize,
+    st: &mut BuildState,
+    opts: PlanOptions,
+    depth: usize,
+) -> Result<(), String> {
+    let Some(outs) = nodes[i].while_outs.clone() else {
+        // marker element: its anchor either materialized it already, or
+        // the whole while is dead
+        if matches!(st.repr[i], Repr::Pending) {
+            st.repr[i] = Repr::Taken;
+        }
+        return Ok(());
+    };
+    if uses == 0 {
+        // the anchor's use count reaches zero only once every output
+        // element is dead (markers reference the anchor), so the whole
+        // loop can be dropped
+        st.repr[i] = Repr::Taken;
+        return Ok(());
+    }
+    let name = nodes[i].instr.name.clone();
+    let cond_name = nodes[i]
+        .instr
+        .condition
+        .clone()
+        .ok_or_else(|| format!("{name}: while without condition"))?;
+    let body_name = nodes[i]
+        .instr
+        .body
+        .clone()
+        .ok_or_else(|| format!("{name}: while without body"))?;
+    let cci = m
+        .computation_index(&cond_name)
+        .ok_or_else(|| format!("{name}: unknown computation '{cond_name}'"))?;
+    let bci = m
+        .computation_index(&body_name)
+        .ok_or_else(|| format!("{name}: unknown computation '{body_name}'"))?;
+    let cond = ExecutablePlan::compile_computation(m, cci, opts, depth + 1)
+        .map_err(|e| format!("{name}: condition '{cond_name}': {e}"))?;
+    let body = ExecutablePlan::compile_computation(m, bci, opts, depth + 1)
+        .map_err(|e| format!("{name}: body '{body_name}': {e}"))?;
+    let elem_dims: Vec<Vec<usize>> = outs.iter().map(|&o| nodes[o].dims.clone()).collect();
+    let mut elem_dtypes = Vec::with_capacity(outs.len());
+    for &o in &outs {
+        let elem = nodes[o].instr.shape.array().map_err(|e| format!("{name}: {e}"))?.elem;
+        elem_dtypes.push(elem.dtype());
+    }
+    if cond.param_dims != elem_dims {
+        return Err(format!(
+            "{name}: condition '{cond_name}' takes {:?}, state is {elem_dims:?}",
+            cond.param_dims
+        ));
+    }
+    if body.param_dims != elem_dims {
+        return Err(format!(
+            "{name}: body '{body_name}' takes {:?}, state is {elem_dims:?}",
+            body.param_dims
+        ));
+    }
+    if cond.roots.len() != 1 || numel(&cond.roots[0].1) != 1 {
+        return Err(format!(
+            "{name}: condition '{cond_name}' must return a scalar pred"
+        ));
+    }
+    if body.roots.len() != elem_dims.len()
+        || body.roots.iter().zip(&elem_dims).any(|(r, d)| &r.1 != d)
+    {
+        return Err(format!(
+            "{name}: body '{body_name}' returns {:?}, state is {elem_dims:?}",
+            body.roots.iter().map(|r| r.1.clone()).collect::<Vec<_>>()
+        ));
+    }
+    let mut state = Vec::with_capacity(nodes[i].ops.len());
+    for k in 0..nodes[i].ops.len() {
+        let sid = nodes[i].ops[k];
+        state.push(st.mat_src(nodes, sid)?);
+    }
+    let scratch_idx = st.while_count;
+    st.while_count += 1;
+    st.steps.push(Step::While {
+        cond: Box::new(cond),
+        body: Box::new(body),
+        state,
+        outs: outs.clone(),
+        elem_dims,
+        elem_dtypes,
+        scratch_idx,
+    });
+    for &o in &outs {
+        st.repr[o] = Repr::Mat(Src::Buf(o));
     }
     Ok(())
 }
@@ -1096,17 +1478,41 @@ fn step_inputs(step: &Step, out: &mut Vec<usize>) {
             push_buf(lhs, out);
             push_buf(rhs, out);
         }
+        Step::DynamicSlice { src, starts, .. } => {
+            push_buf(src, out);
+            for s in starts {
+                push_buf(s, out);
+            }
+        }
+        Step::While { state, .. } => {
+            for s in state {
+                push_buf(s, out);
+            }
+        }
     }
 }
 
-fn step_out(step: &Step) -> usize {
+/// Node ids a step writes (`While` is the only multi-output step).
+fn step_outs(step: &Step, buf: &mut Vec<usize>) {
+    buf.clear();
+    match step {
+        Step::While { outs, .. } => buf.extend_from_slice(outs),
+        other => buf.push(step_single_out(other)),
+    }
+}
+
+/// The single output node of any non-`While` step (allocation-free; the
+/// hot execution path must not build a `Vec` per step).
+fn step_single_out(step: &Step) -> usize {
     match step {
         Step::Fused { out, .. }
         | Step::Gather { out, .. }
         | Step::Reduce { out, .. }
         | Step::Scan { out, .. }
         | Step::ReduceWindow { out, .. }
-        | Step::Dot { out, .. } => *out,
+        | Step::Dot { out, .. }
+        | Step::DynamicSlice { out, .. } => *out,
+        Step::While { .. } => unreachable!("while is multi-output"),
     }
 }
 
@@ -1144,10 +1550,10 @@ fn rewrite_expr(e: &mut FExpr, map: &[usize]) -> Result<(), String> {
 #[allow(clippy::type_complexity)]
 fn assign_slots(
     mut steps: Vec<Step>,
-    roots: Vec<(Src, Vec<usize>)>,
+    roots: Vec<(Src, Vec<usize>, DType)>,
     nodes: &[FlatInstr],
     reuse: bool,
-) -> Result<(Vec<Step>, Vec<usize>, Vec<(Src, Vec<usize>)>), String> {
+) -> Result<(Vec<Step>, Vec<usize>, Vec<(Src, Vec<usize>, DType)>), String> {
     let mut last_use: Vec<Option<usize>> = vec![None; nodes.len()];
     let mut scratch = Vec::new();
     for (s, step) in steps.iter().enumerate() {
@@ -1157,7 +1563,7 @@ fn assign_slots(
         }
     }
     let mut persistent = vec![false; nodes.len()];
-    for (src, _) in &roots {
+    for (src, _, _) in &roots {
         if let Src::Buf(id) = src {
             persistent[*id] = true;
         }
@@ -1166,19 +1572,22 @@ fn assign_slots(
     let mut slot_of = vec![usize::MAX; nodes.len()];
     let mut slot_caps: Vec<usize> = Vec::new();
     let mut free: Vec<usize> = Vec::new();
+    let mut outbuf = Vec::new();
     for s in 0..steps.len() {
-        let out_id = step_out(&steps[s]);
-        let need = numel(&nodes[out_id].dims);
-        // acquire the output slot BEFORE releasing this step's operands:
+        // acquire ALL output slots BEFORE releasing this step's operands:
         // an output can therefore never alias a live (or same-step) operand
-        let slot = match free.iter().position(|&f| slot_caps[f] == need) {
-            Some(p) if reuse => free.swap_remove(p),
-            _ => {
-                slot_caps.push(need);
-                slot_caps.len() - 1
-            }
-        };
-        slot_of[out_id] = slot;
+        step_outs(&steps[s], &mut outbuf);
+        for &out_id in &outbuf {
+            let need = numel(&nodes[out_id].dims);
+            let slot = match free.iter().position(|&f| slot_caps[f] == need) {
+                Some(p) if reuse => free.swap_remove(p),
+                _ => {
+                    slot_caps.push(need);
+                    slot_caps.len() - 1
+                }
+            };
+            slot_of[out_id] = slot;
+        }
         if reuse {
             step_inputs(&steps[s], &mut scratch);
             for &id in &scratch {
@@ -1215,12 +1624,30 @@ fn assign_slots(
                 rewrite_src(rhs, &slot_of)?;
                 *out = slot_of[*out];
             }
+            Step::DynamicSlice { src, starts, out, .. } => {
+                rewrite_src(src, &slot_of)?;
+                for s in starts.iter_mut() {
+                    rewrite_src(s, &slot_of)?;
+                }
+                *out = slot_of[*out];
+            }
+            Step::While { state, outs, .. } => {
+                // the nested cond/body plans are self-contained (their own
+                // slots); only this level's state sources and output ids
+                // are rewritten
+                for s in state.iter_mut() {
+                    rewrite_src(s, &slot_of)?;
+                }
+                for o in outs.iter_mut() {
+                    *o = slot_of[*o];
+                }
+            }
         }
     }
     let mut root_srcs = Vec::with_capacity(roots.len());
-    for (mut src, dims) in roots {
+    for (mut src, dims, dt) in roots {
         rewrite_src(&mut src, &slot_of)?;
-        root_srcs.push((src, dims));
+        root_srcs.push((src, dims, dt));
     }
     Ok((steps, slot_caps, root_srcs))
 }
@@ -1313,9 +1740,12 @@ impl ExecutablePlan {
 
     /// Execute, reusing `scratch` buffers across calls: the arena slots and
     /// the fused-chunk / dot-gather pools persist, so repeat runs of the
-    /// same plan skip all per-step buffer allocation. (Small transient
+    /// same plan skip all per-step buffer allocation. (Transient
     /// allocations remain on cold paths — the `f64` accumulator of a
-    /// non-suffix sum/product reduce and reduce-window's per-rank cursor.)
+    /// non-suffix sum/product reduce, reduce-window's per-rank cursor,
+    /// and `while` steps, whose per-iteration carried state is
+    /// materialized as owned tensors even though the nested condition/
+    /// body arenas are recycled.)
     pub fn execute_with_scratch(
         &self,
         inputs: &[&Tensor],
@@ -1341,16 +1771,16 @@ impl ExecutablePlan {
         {
             scratch.slots = self.slot_caps.iter().map(|&c| vec![0.0f32; c]).collect();
         }
-        let PlanScratch { slots, pool, big } = scratch;
+        let PlanScratch { slots, pool, big, whiles } = scratch;
         for step in &self.steps {
-            self.run_step(step, inputs, slots, pool, big)?;
+            self.run_step(step, inputs, slots, pool, big, whiles)?;
         }
         let ctx = Ctx { inputs, consts: &self.consts, slots: slots.as_slice() };
         let mut outs = Vec::with_capacity(self.roots.len());
-        for (src, dims) in &self.roots {
+        for (src, dims, dt) in &self.roots {
             let n = numel(dims);
             let data = ctx.slice(src)[..n].to_vec();
-            outs.push(Tensor::new(dims.clone(), DType::F32, data));
+            outs.push(Tensor::new(dims.clone(), *dt, data));
         }
         Ok(outs)
     }
@@ -1362,8 +1792,50 @@ impl ExecutablePlan {
         slots: &mut Vec<Vec<f32>>,
         pool: &mut Vec<Vec<f32>>,
         big: &mut Vec<Vec<f32>>,
+        whiles: &mut Vec<WhileScratch>,
     ) -> Result<(), String> {
-        let out_idx = step_out(step);
+        if let Step::While { cond, body, state, outs, elem_dims, elem_dtypes, scratch_idx } = step
+        {
+            while whiles.len() <= *scratch_idx {
+                whiles.push(WhileScratch::default());
+            }
+            // copy the initial state out of the arena into owned tensors
+            let mut st: Vec<Tensor> = Vec::with_capacity(state.len());
+            {
+                let ctx = Ctx { inputs, consts: &self.consts, slots: slots.as_slice() };
+                for (k, src) in state.iter().enumerate() {
+                    let n = numel(&elem_dims[k]);
+                    st.push(Tensor::new(
+                        elem_dims[k].clone(),
+                        elem_dtypes[k],
+                        ctx.slice(src)[..n].to_vec(),
+                    ));
+                }
+            }
+            let ws = &mut whiles[*scratch_idx];
+            let mut iters = 0usize;
+            loop {
+                let refs: Vec<&Tensor> = st.iter().collect();
+                let c = cond.execute_with_scratch(&refs, &mut ws.cond)?;
+                if c.len() != 1 || c[0].numel() != 1 {
+                    return Err("while condition did not produce a scalar".to_string());
+                }
+                if c[0].data[0] == 0.0 {
+                    break;
+                }
+                st = body.execute_with_scratch(&refs, &mut ws.body)?;
+                iters += 1;
+                if iters >= MAX_WHILE_ITERS {
+                    return Err(format!("exceeded {MAX_WHILE_ITERS} while iterations"));
+                }
+            }
+            for (k, &o) in outs.iter().enumerate() {
+                let n = numel(&elem_dims[k]);
+                slots[o][..n].copy_from_slice(&st[k].data[..n]);
+            }
+            return Ok(());
+        }
+        let out_idx = step_single_out(step);
         let mut out = std::mem::take(&mut slots[out_idx]);
         {
             let ctx = Ctx { inputs, consts: &self.consts, slots: slots.as_slice() };
@@ -1489,6 +1961,21 @@ impl ExecutablePlan {
                     big.push(lt);
                     big.push(rt);
                 }
+                Step::DynamicSlice { src, starts, in_dims, istr, sizes, ostr, n, .. } => {
+                    let s = ctx.slice(src);
+                    let mut base = 0usize;
+                    for d in 0..in_dims.len() {
+                        let v = ctx.slice(&starts[d])[0];
+                        // starts clamp into [0, dim - size], per HLO
+                        // semantics (sizes[d] <= in_dims[d] is validated
+                        // at compile time)
+                        let max_start = (in_dims[d] - sizes[d]) as i64;
+                        let start = (v as i64).clamp(0, max_start);
+                        base += start as usize * istr[d];
+                    }
+                    kernels::gather_strided_offset(s, &mut out[..*n], sizes, ostr, istr, base);
+                }
+                Step::While { .. } => unreachable!("handled above"),
             }
         }
         slots[out_idx] = out;
@@ -1751,6 +2238,79 @@ mod tests {
         let text = "HloModule t\n\nENTRY e {\n  ROOT c = f32[2,2]{1,0} constant({ {1, 2}, {3, 4} })\n}\n";
         let out = run_both(text, &[]);
         assert_eq!(out[0].data, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn iota_folds_into_a_compile_time_constant() {
+        let text = "HloModule t\n\nENTRY e {\n  i = s32[2,3]{1,0} iota(), iota_dimension=1\n  x = f32[2,3]{1,0} parameter(0)\n  ic = f32[2,3]{1,0} convert(i)\n  ROOT s = f32[2,3]{1,0} add(x, ic)\n}\n";
+        let m = parse_module(text).unwrap();
+        let plan = ExecutablePlan::compile(&m).unwrap();
+        // iota is a const; convert(int->float) is identity; the add fuses:
+        // a single step
+        assert_eq!(plan.step_count(), 1, "iota + convert + add should be one fused step");
+        let x = Tensor::new(vec![2, 3], DType::F32, vec![10., 20., 30., 40., 50., 60.]);
+        let out = run_both(text, &[&x]);
+        assert_eq!(out[0].data, vec![10., 21., 32., 40., 51., 62.]);
+    }
+
+    #[test]
+    fn dynamic_slice_with_runtime_starts_matches_evaluator() {
+        // start index computed from data (trunc of x[0,0]), then clamped
+        let text = "HloModule t\n\nENTRY e {\n  x = f32[3,4]{1,0} parameter(0)\n  i = s32[] parameter(1)\n  z = s32[] constant(0)\n  ROOT d = f32[2,4]{1,0} dynamic-slice(x, i, z), dynamic_slice_sizes={2,4}\n}\n";
+        let x = Tensor::new(vec![3, 4], DType::F32, (0..12).map(|v| v as f32).collect());
+        for start in [-3.0f32, 0.0, 1.0, 7.0] {
+            let i = Tensor::new(vec![], DType::I32, vec![start]);
+            let out = run_both(text, &[&x, &i]);
+            let s = (start as i64).clamp(0, 1) as usize;
+            assert_eq!(out[0].data, x.data[s * 4..s * 4 + 8].to_vec(), "start {start}");
+        }
+    }
+
+    #[test]
+    fn while_loop_matches_evaluator_and_reuses_scratch() {
+        // newton-sqrt shaped: state (i, y, x), body refines y, 8 iters
+        let text = "HloModule t\n\nbody {\n  p = (s32[], f32[8]{0}, f32[8]{0}) parameter(0)\n  i = s32[] get-tuple-element(p), index=0\n  y = f32[8]{0} get-tuple-element(p), index=1\n  x = f32[8]{0} get-tuple-element(p), index=2\n  one = s32[] constant(1)\n  i2 = s32[] add(i, one)\n  q = f32[8]{0} divide(x, y)\n  s = f32[8]{0} add(y, q)\n  h = f32[] constant(0.5)\n  hb = f32[8]{0} broadcast(h), dimensions={}\n  y2 = f32[8]{0} multiply(s, hb)\n  ROOT t = (s32[], f32[8]{0}, f32[8]{0}) tuple(i2, y2, x)\n}\n\ncond {\n  p = (s32[], f32[8]{0}, f32[8]{0}) parameter(0)\n  i = s32[] get-tuple-element(p), index=0\n  n = s32[] constant(8)\n  ROOT c = pred[] compare(i, n), direction=LT\n}\n\nENTRY e {\n  x = f32[8]{0} parameter(0)\n  one = f32[] constant(1)\n  y0 = f32[8]{0} broadcast(one), dimensions={}\n  z = s32[] constant(0)\n  st = (s32[], f32[8]{0}, f32[8]{0}) tuple(z, y0, x)\n  w = (s32[], f32[8]{0}, f32[8]{0}) while(st), condition=cond, body=body\n  ROOT y = f32[8]{0} get-tuple-element(w), index=1\n}\n";
+        let x = Tensor::from_vec(vec![4.0, 9.0, 16.0, 25.0, 2.0, 0.25, 1.0, 100.0]);
+        let out = run_both(text, &[&x]);
+        for (got, want) in out[0].data.iter().zip(x.data.iter().map(|v| v.sqrt())) {
+            assert!((got - want).abs() < 1e-3, "{got} vs {want}");
+        }
+        // scratch reuse across runs is stable (nested while scratches too)
+        let m = parse_module(text).unwrap();
+        let plan = ExecutablePlan::compile(&m).unwrap();
+        let mut scratch = PlanScratch::default();
+        let a = plan.execute_with_scratch(&[&x], &mut scratch).unwrap();
+        let b = plan.execute_with_scratch(&[&x], &mut scratch).unwrap();
+        assert_eq!(a[0].data, b[0].data);
+    }
+
+    #[test]
+    fn dead_while_is_dropped_entirely() {
+        let text = "HloModule t\n\nbody {\n  p = (s32[]) parameter(0)\n  i = s32[] get-tuple-element(p), index=0\n  one = s32[] constant(1)\n  i2 = s32[] add(i, one)\n  ROOT t = (s32[]) tuple(i2)\n}\n\ncond {\n  p = (s32[]) parameter(0)\n  i = s32[] get-tuple-element(p), index=0\n  n = s32[] constant(3)\n  ROOT c = pred[] compare(i, n), direction=LT\n}\n\nENTRY e {\n  x = f32[4]{0} parameter(0)\n  z = s32[] constant(0)\n  st = (s32[]) tuple(z)\n  w = (s32[]) while(st), condition=cond, body=body\n  dead = s32[] get-tuple-element(w), index=0\n  ROOT y = f32[4]{0} negate(x)\n}\n";
+        let m = parse_module(text).unwrap();
+        let plan = ExecutablePlan::compile(&m).unwrap();
+        assert_eq!(plan.step_count(), 1, "unused while must be dead-code eliminated");
+        run_both(text, &[&t(&[1., 2., 3., 4.])]);
+    }
+
+    #[test]
+    fn partially_used_while_keeps_all_state_elements() {
+        // only element 1 of the state is consumed; the loop still runs
+        let text = "HloModule t\n\nbody {\n  p = (s32[], f32[4]{0}) parameter(0)\n  i = s32[] get-tuple-element(p), index=0\n  x = f32[4]{0} get-tuple-element(p), index=1\n  one = s32[] constant(1)\n  i2 = s32[] add(i, one)\n  x2 = f32[4]{0} add(x, x)\n  ROOT t = (s32[], f32[4]{0}) tuple(i2, x2)\n}\n\ncond {\n  p = (s32[], f32[4]{0}) parameter(0)\n  i = s32[] get-tuple-element(p), index=0\n  n = s32[] constant(2)\n  ROOT c = pred[] compare(i, n), direction=LT\n}\n\nENTRY e {\n  x = f32[4]{0} parameter(0)\n  z = s32[] constant(0)\n  st = (s32[], f32[4]{0}) tuple(z, x)\n  w = (s32[], f32[4]{0}) while(st), condition=cond, body=body\n  ROOT y = f32[4]{0} get-tuple-element(w), index=1\n}\n";
+        let out = run_both(text, &[&t(&[1., -2., 3., 0.5])]);
+        assert_eq!(out[0].data, vec![4., -8., 12., 2.]);
+    }
+
+    #[test]
+    fn convert_chain_fuses_and_matches_evaluator() {
+        let text = "HloModule t\n\nENTRY e {\n  x = f32[6]{0} parameter(0)\n  i = s32[6]{0} convert(x)\n  b = f32[6]{0} convert(i)\n  p = pred[6]{0} convert(b)\n  ROOT o = (s32[6], f32[6], pred[6]) tuple(i, b, p)\n}\n";
+        let x = t(&[2.9, -1.1, 0.0, 0.4, -0.6, 7.0]);
+        let out = run_both(text, &[&x]);
+        assert_eq!(out[0].data, vec![2.0, -1.0, 0.0, 0.0, -0.0, 7.0]);
+        assert_eq!(out[1].data, out[0].data);
+        assert_eq!(out[2].data, vec![1.0, 1.0, 0.0, 0.0, 0.0, 1.0]);
+        assert_eq!(out[0].dtype, DType::I32);
+        assert_eq!(out[2].dtype, DType::Bool);
     }
 
     #[test]

@@ -29,9 +29,22 @@ pub enum UnaryOp {
     /// AscendC-style sign: maps ±0 and NaN to 0.0.
     SignZero,
     Logistic,
+    /// HLO `convert` to a signed/unsigned integer type: truncate toward
+    /// zero (host values stay `f32`; only the numeric effect is modeled).
+    Trunc,
+    /// HLO `convert` to `pred`: 1.0 where the value is non-zero (NaN
+    /// counts as non-zero, matching XLA's `x != 0` lowering).
+    NonZero,
+    /// HLO `convert` to `f16`: round-trip through IEEE binary16
+    /// (round-to-nearest-even), idempotent.
+    F16Round,
+    /// HLO `convert` to `bf16`: round-trip through bfloat16
+    /// (round-to-nearest-even), idempotent.
+    Bf16Round,
 }
 
 impl UnaryOp {
+    /// Apply to one scalar (the loop kernels below are the bulk form).
     #[inline]
     pub fn apply(self, x: f32) -> f32 {
         match self {
@@ -65,8 +78,29 @@ impl UnaryOp {
                 }
             }
             UnaryOp::Logistic => 1.0 / (1.0 + (-x).exp()),
+            UnaryOp::Trunc => x.trunc(),
+            UnaryOp::NonZero => {
+                if x == 0.0 {
+                    0.0
+                } else {
+                    1.0
+                }
+            }
+            UnaryOp::F16Round => crate::util::tensor::f16_round_trip(x),
+            UnaryOp::Bf16Round => bf16_round_trip(x),
         }
     }
+}
+
+/// Round-trip an `f32` through bfloat16 (truncated-mantissa binary32,
+/// round-to-nearest-even). NaN payloads are preserved.
+pub fn bf16_round_trip(x: f32) -> f32 {
+    if x.is_nan() {
+        return x;
+    }
+    let bits = x.to_bits();
+    let rounded = bits.wrapping_add(0x7fff + ((bits >> 16) & 1));
+    f32::from_bits(rounded & 0xffff_0000)
 }
 
 /// Elementwise binary operations shared by both interpreters.
@@ -82,6 +116,7 @@ pub enum BinOp {
 }
 
 impl BinOp {
+    /// Apply to one scalar pair.
     #[inline]
     pub fn apply(self, a: f32, b: f32) -> f32 {
         match self {
@@ -108,6 +143,7 @@ pub enum CmpOp {
 }
 
 impl CmpOp {
+    /// Evaluate the predicate on one scalar pair.
     #[inline]
     pub fn apply(self, a: f32, b: f32) -> bool {
         match self {
@@ -139,6 +175,12 @@ pub fn unary_inplace(xs: &mut [f32], op: UnaryOp) {
         UnaryOp::Sign => xs.iter_mut().for_each(|x| *x = UnaryOp::Sign.apply(*x)),
         UnaryOp::SignZero => xs.iter_mut().for_each(|x| *x = UnaryOp::SignZero.apply(*x)),
         UnaryOp::Logistic => xs.iter_mut().for_each(|x| *x = 1.0 / (1.0 + (-*x).exp())),
+        UnaryOp::Trunc => xs.iter_mut().for_each(|x| *x = x.trunc()),
+        UnaryOp::NonZero => xs.iter_mut().for_each(|x| *x = (*x != 0.0) as u8 as f32),
+        UnaryOp::F16Round => {
+            xs.iter_mut().for_each(|x| *x = crate::util::tensor::f16_round_trip(*x))
+        }
+        UnaryOp::Bf16Round => xs.iter_mut().for_each(|x| *x = bf16_round_trip(*x)),
     }
 }
 
@@ -286,6 +328,37 @@ pub fn gather_strided(
     }
 }
 
+/// [`gather_strided`] with a constant base offset into `src`: the
+/// dynamic-slice inner loop (`base` encodes the clamped start indices).
+pub fn gather_strided_offset(
+    src: &[f32],
+    out: &mut [f32],
+    out_dims: &[usize],
+    ostr: &[usize],
+    sstr: &[usize],
+    base: usize,
+) {
+    let rank = out_dims.len();
+    for (li, slot) in out.iter_mut().enumerate() {
+        let mut si = base;
+        for d in 0..rank {
+            si += ((li / ostr[d]) % out_dims[d]) * sstr[d];
+        }
+        *slot = src[si];
+    }
+}
+
+/// HLO `iota`: `out[li]` is the index of `li` along dimension `dim`, as
+/// `f32`. `ostr` are the row-major strides of `dims`. Used by the plan
+/// compiler to fold iota into a constant; the tree-walking evaluator
+/// keeps its own (intentionally independent) copy of the same loop, and
+/// `rust/tests/plan_differential.rs` holds the two bit-identical.
+pub fn iota_fill(out: &mut [f32], dims: &[usize], ostr: &[usize], dim: usize) {
+    for (li, slot) in out.iter_mut().enumerate() {
+        *slot = ((li / ostr[dim]) % dims[dim]) as f32;
+    }
+}
+
 /// `c[m,n] += a[m,k] · b[k,n]` (row-major, accumulating). The p-outer /
 /// n-inner loop order keeps the inner loop a contiguous FMA the
 /// autovectorizer handles, and matches the accumulation order both
@@ -325,6 +398,10 @@ mod tests {
             UnaryOp::Sign,
             UnaryOp::SignZero,
             UnaryOp::Logistic,
+            UnaryOp::Trunc,
+            UnaryOp::NonZero,
+            UnaryOp::F16Round,
+            UnaryOp::Bf16Round,
         ] {
             let mut xs = src;
             unary_inplace(&mut xs, op);
@@ -415,6 +492,46 @@ mod tests {
         let mut out = [0.0f32; 6];
         gather_strided(&row, &mut out, &out_dims, &ostr, &[0, 1]);
         assert_eq!(out, [7.0, 8.0, 9.0, 7.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn convert_ops_model_hlo_semantics() {
+        assert_eq!(UnaryOp::Trunc.apply(2.7), 2.0);
+        assert_eq!(UnaryOp::Trunc.apply(-2.7), -2.0);
+        assert_eq!(UnaryOp::NonZero.apply(0.0), 0.0);
+        assert_eq!(UnaryOp::NonZero.apply(-0.0), 0.0);
+        assert_eq!(UnaryOp::NonZero.apply(3.5), 1.0);
+        assert_eq!(UnaryOp::NonZero.apply(f32::NAN), 1.0);
+        // f16/bf16 round-trips are idempotent
+        let q = UnaryOp::F16Round.apply(1.0009765);
+        assert_eq!(UnaryOp::F16Round.apply(q), q);
+        let b = UnaryOp::Bf16Round.apply(1.00390625);
+        assert_eq!(UnaryOp::Bf16Round.apply(b), b);
+        assert_eq!(bf16_round_trip(1.0), 1.0);
+        assert!(bf16_round_trip(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn gather_strided_offset_slices_a_window() {
+        // dynamic-slice a [2,2] window out of a [3,4] matrix at (1,1)
+        let src: Vec<f32> = (0..12).map(|v| v as f32).collect();
+        let out_dims = [2usize, 2];
+        let ostr = row_major_strides(&out_dims);
+        let mut out = [0.0f32; 4];
+        // source strides [4,1], base = 1*4 + 1*1
+        gather_strided_offset(&src, &mut out, &out_dims, &ostr, &[4, 1], 5);
+        assert_eq!(out, [5.0, 6.0, 9.0, 10.0]);
+    }
+
+    #[test]
+    fn iota_fill_walks_the_requested_dimension() {
+        let dims = [2usize, 3];
+        let ostr = row_major_strides(&dims);
+        let mut out = [0.0f32; 6];
+        iota_fill(&mut out, &dims, &ostr, 1);
+        assert_eq!(out, [0.0, 1.0, 2.0, 0.0, 1.0, 2.0]);
+        iota_fill(&mut out, &dims, &ostr, 0);
+        assert_eq!(out, [0.0, 0.0, 0.0, 1.0, 1.0, 1.0]);
     }
 
     #[test]

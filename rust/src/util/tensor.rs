@@ -17,6 +17,7 @@ pub enum DType {
     F32,
     F16,
     I32,
+    I64,
     I8,
     Bool,
 }
@@ -25,6 +26,7 @@ impl DType {
     /// Size in bytes of one element as stored on the device.
     pub fn size_bytes(self) -> usize {
         match self {
+            DType::I64 => 8,
             DType::F32 | DType::I32 => 4,
             DType::F16 => 2,
             DType::I8 | DType::Bool => 1,
@@ -37,6 +39,7 @@ impl DType {
             DType::F32 => "tl.float32",
             DType::F16 => "tl.float16",
             DType::I32 => "tl.int32",
+            DType::I64 => "tl.int64",
             DType::I8 => "tl.int8",
             DType::Bool => "tl.bool",
         }
@@ -48,6 +51,7 @@ impl DType {
             DType::F32 => "float",
             DType::F16 => "half",
             DType::I32 => "int32_t",
+            DType::I64 => "int64_t",
             DType::I8 => "int8_t",
             DType::Bool => "bool",
         }
@@ -58,6 +62,7 @@ impl DType {
             "tl.float32" | "float32" => Some(DType::F32),
             "tl.float16" | "float16" => Some(DType::F16),
             "tl.int32" | "int32" => Some(DType::I32),
+            "tl.int64" | "int64" => Some(DType::I64),
             "tl.int8" | "int8" => Some(DType::I8),
             "tl.bool" | "bool" => Some(DType::Bool),
             _ => None,
@@ -71,6 +76,7 @@ impl fmt::Display for DType {
             DType::F32 => "f32",
             DType::F16 => "f16",
             DType::I32 => "i32",
+            DType::I64 => "i64",
             DType::I8 => "i8",
             DType::Bool => "bool",
         };
@@ -287,7 +293,7 @@ mod tests {
 
     #[test]
     fn dtype_dsl_roundtrip() {
-        for d in [DType::F32, DType::F16, DType::I32, DType::I8, DType::Bool] {
+        for d in [DType::F32, DType::F16, DType::I32, DType::I64, DType::I8, DType::Bool] {
             assert_eq!(DType::parse_dsl(d.dsl_name()), Some(d));
         }
         assert_eq!(DType::parse_dsl("tl.float64"), None);

@@ -1,0 +1,72 @@
+//! Keeps `docs/HLO_SUBSET.md` honest: the opcode and element-type tables
+//! in the spec (between `<!-- opcodes-begin/end -->` and
+//! `<!-- elem-types-begin/end -->` markers) must list exactly the names
+//! the parser accepts — no more, no less, in the parser's order.
+
+use ascendcraft::runtime::hlo::parser::{SUPPORTED_ELEM_TYPES, SUPPORTED_OPCODES};
+
+fn doc_text() -> String {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../docs/HLO_SUBSET.md");
+    std::fs::read_to_string(path).expect("docs/HLO_SUBSET.md is checked in")
+}
+
+/// Extract the first backticked name of each table row between the two
+/// markers: rows look like ``| `add` | elementwise |``.
+fn table_names(doc: &str, begin: &str, end: &str) -> Vec<String> {
+    let start = doc.find(begin).unwrap_or_else(|| panic!("marker '{begin}' missing from spec"));
+    let stop = doc[start..]
+        .find(end)
+        .map(|o| start + o)
+        .unwrap_or_else(|| panic!("marker '{end}' missing from spec"));
+    let mut names = Vec::new();
+    for line in doc[start..stop].lines() {
+        let line = line.trim();
+        if !line.starts_with('|') {
+            continue;
+        }
+        let cell = line.trim_start_matches('|').trim();
+        // skip the header and separator rows
+        if !cell.starts_with('`') {
+            continue;
+        }
+        if let Some(rest) = cell.strip_prefix('`') {
+            if let Some(close) = rest.find('`') {
+                names.push(rest[..close].to_string());
+            }
+        }
+    }
+    names
+}
+
+#[test]
+fn documented_opcodes_match_the_parser() {
+    let doc = doc_text();
+    let documented = table_names(&doc, "<!-- opcodes-begin -->", "<!-- opcodes-end -->");
+    let supported: Vec<String> = SUPPORTED_OPCODES.iter().map(|s| s.to_string()).collect();
+    assert_eq!(
+        documented, supported,
+        "docs/HLO_SUBSET.md opcode table does not match parser::SUPPORTED_OPCODES \
+         (update both sides in the same change)"
+    );
+}
+
+#[test]
+fn documented_elem_types_match_the_parser() {
+    let doc = doc_text();
+    let documented = table_names(&doc, "<!-- elem-types-begin -->", "<!-- elem-types-end -->");
+    let supported: Vec<String> = SUPPORTED_ELEM_TYPES.iter().map(|s| s.to_string()).collect();
+    assert_eq!(
+        documented, supported,
+        "docs/HLO_SUBSET.md element-type table does not match parser::SUPPORTED_ELEM_TYPES"
+    );
+}
+
+#[test]
+fn spec_mentions_the_bit_exactness_contract_and_while_cap() {
+    let doc = doc_text();
+    assert!(doc.contains("bitwise"), "spec must state the plan/evaluator bit-exactness contract");
+    assert!(
+        doc.contains("1,000,000 iterations"),
+        "spec must document the while-loop iteration cap"
+    );
+}

@@ -8,9 +8,9 @@
 //! JAX toolchain is available.
 
 use ascendcraft::bench_suite::tasks::task_by_name;
-use ascendcraft::coordinator::service::cross_check_suite;
+use ascendcraft::coordinator::service::{cross_check_suite, cross_check_task_seeds};
 use ascendcraft::mhc;
-use ascendcraft::runtime::OracleRegistry;
+use ascendcraft::runtime::{fixtures, OracleRegistry};
 use ascendcraft::util::compare::allclose_report;
 
 fn registry() -> OracleRegistry {
@@ -63,6 +63,49 @@ fn pooling_and_huber_fixtures_cross_check() {
         let c = ascendcraft::coordinator::service::cross_check_task(&task, &reg, 20260728);
         assert!(c.checked, "{name}: artifact not executed");
         assert!(c.ok, "{name}: {}", c.detail);
+    }
+}
+
+#[test]
+fn op_set_coverage_fixtures_cross_check() {
+    // the iota/integer (argmax_rows), padded-average (avgpool2d_pad), and
+    // while/dynamic-slice (window_sum) fixtures have dedicated Rust
+    // references in runtime::fixtures
+    let reg = registry();
+    for name in fixtures::EXTRA_FIXTURES {
+        assert!(reg.available(name), "checked-in fixture artifacts/{name}.hlo.txt is missing");
+        fixtures::cross_check_fixture(&reg, name, 20260729)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+    }
+}
+
+#[test]
+fn argmax_rows_oracle_returns_integer_dtype() {
+    let reg = registry();
+    let oracle = reg.get("argmax_rows").expect("argmax_rows.hlo.txt is checked in");
+    let x = fixtures::fixture_input("argmax_rows", 1).unwrap();
+    let out = oracle.run(&[&x]).unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].dtype, ascendcraft::util::tensor::DType::I32);
+    assert!(out[0].data.iter().all(|&v| v.fract() == 0.0 && (0.0..128.0).contains(&v)));
+}
+
+#[test]
+fn batched_oracle_execution_matches_per_seed_cross_checks() {
+    // the suite's --golden-seeds path: one run_batch per task, same
+    // verdicts as independent per-seed runs
+    let reg = registry();
+    let seeds = [20260729u64, 20260730, 20260731, 20260732];
+    for name in ["softmax", "adam", "maxpool2d", "huber_loss"] {
+        let task = task_by_name(name).unwrap();
+        let batched = cross_check_task_seeds(&task, &reg, &seeds);
+        assert_eq!(batched.len(), seeds.len());
+        for (&s, b) in seeds.iter().zip(&batched) {
+            assert!(b.checked, "{name} seed {s}: artifact missing");
+            assert!(b.ok, "{name} seed {s}: {}", b.detail);
+            let single = ascendcraft::coordinator::service::cross_check_task(&task, &reg, s);
+            assert_eq!(single.ok, b.ok, "{name} seed {s} diverged from per-seed run");
+        }
     }
 }
 

@@ -36,7 +36,8 @@ fn assert_plan_matches_evaluator(text: &str, inputs: &[&Tensor]) {
 /// Random square-shaped HLO program builder. Values are either "full"
 /// ([n,n]) or "row" ([n]); instructions draw from the interpreter's op
 /// set: unary/binary elementwise, scalar broadcasts, compare+select,
-/// reduce (add/max), row broadcast, transpose, cumsum reduce-window, dot.
+/// reduce (add/max), row broadcast, transpose, cumsum reduce-window, dot,
+/// iota (+ s32 convert), dynamic-slice with a runtime start index.
 fn random_program(g: &mut Gen) -> (String, usize) {
     let n = g.usize_range(2, 6);
     let mut text = String::new();
@@ -57,7 +58,7 @@ fn random_program(g: &mut Gen) -> (String, usize) {
     };
     let steps = g.usize_range(3, 11);
     for _ in 0..steps {
-        match g.usize_range(0, 9) {
+        match g.usize_range(0, 11) {
             0 => {
                 let op = *g.choose(&[
                     "exponential",
@@ -145,6 +146,48 @@ fn random_program(g: &mut Gen) -> (String, usize) {
                 ));
                 fulls.push(v);
             }
+            8 => {
+                // iota (s32 or f32) converted to f32 and folded into the pool
+                let d = g.usize_range(0, 2);
+                let ty = *g.choose(&["s32", "f32"]);
+                let io = fresh("io");
+                let ic = fresh("ic");
+                let a = g.choose(&fulls).clone();
+                let v = fresh("is");
+                text.push_str(&format!(
+                    "  {io} = {ty}[{n},{n}]{{1,0}} iota(), iota_dimension={d}\n"
+                ));
+                text.push_str(&format!("  {ic} = {full} convert({io})\n"));
+                text.push_str(&format!("  {v} = {full} add({a}, {ic})\n"));
+                fulls.push(v);
+            }
+            9 => {
+                // dynamic-slice of a full row block with a runtime start
+                // index derived from data (exercises clamping), broadcast
+                // back to full so the pool shape is preserved
+                let a = g.choose(&fulls).clone();
+                let src = g.choose(&fulls).clone();
+                let z = fresh("z");
+                let sc = fresh("sc");
+                let sr = fresh("sr");
+                let si = fresh("si");
+                let ds = fresh("ds");
+                let rs = fresh("rs");
+                let v = fresh("db");
+                text.push_str(&format!("  {z} = s32[] constant(0)\n"));
+                // start index: a data element converted to s32 (truncated),
+                // which may fall outside [0, n-1] and must clamp
+                // identically in plan and eval
+                text.push_str(&format!("  {sc} = f32[1,1]{{1,0}} dynamic-slice({a}, {z}, {z}), dynamic_slice_sizes={{1,1}}\n"));
+                text.push_str(&format!("  {sr} = f32[] reshape({sc})\n"));
+                text.push_str(&format!("  {si} = s32[] convert({sr})\n"));
+                text.push_str(&format!(
+                    "  {ds} = f32[1,{n}]{{1,0}} dynamic-slice({src}, {si}, {z}), dynamic_slice_sizes={{1,{n}}}\n"
+                ));
+                text.push_str(&format!("  {rs} = {row} reshape({ds})\n"));
+                text.push_str(&format!("  {v} = {full} broadcast({rs}), dimensions={{1}}\n"));
+                fulls.push(v);
+            }
             _ => {
                 let a = g.choose(&fulls).clone();
                 let b = g.choose(&fulls).clone();
@@ -188,7 +231,7 @@ fn every_checked_in_fixture_matches_the_tree_walker_exactly() {
         .filter(|p| p.to_string_lossy().ends_with(".hlo.txt"))
         .collect();
     paths.sort();
-    assert!(paths.len() >= 17, "expected the checked-in fixture set, found {}", paths.len());
+    assert!(paths.len() >= 22, "expected the checked-in fixture set, found {}", paths.len());
 
     let next = std::sync::atomic::AtomicUsize::new(0);
     std::thread::scope(|scope| {
@@ -236,6 +279,65 @@ fn every_checked_in_fixture_matches_the_tree_walker_exactly() {
             });
         }
     });
+}
+
+#[test]
+fn iota_matches_evaluator_bitwise() {
+    // every dimension of a rank-3 iota, in both s32 and f32
+    for dim in 0..3 {
+        for ty in ["s32", "f32"] {
+            let text = format!(
+                "HloModule t\n\nENTRY e {{\n  x = f32[2,3,4]{{2,1,0}} parameter(0)\n  i = {ty}[2,3,4]{{2,1,0}} iota(), iota_dimension={dim}\n  c = f32[2,3,4]{{2,1,0}} convert(i)\n  ROOT s = f32[2,3,4]{{2,1,0}} add(x, c)\n}}\n"
+            );
+            let x = Tensor::new(vec![2, 3, 4], DType::F32, (0..24).map(|v| v as f32 * 0.5).collect());
+            assert_plan_matches_evaluator(&text, &[&x]);
+        }
+    }
+}
+
+#[test]
+fn dynamic_slice_matches_evaluator_bitwise_including_clamps() {
+    let text = "HloModule t\n\nENTRY e {\n  x = f32[4,6]{1,0} parameter(0)\n  i = s32[] parameter(1)\n  j = s32[] parameter(2)\n  ROOT d = f32[2,3]{1,0} dynamic-slice(x, i, j), dynamic_slice_sizes={2,3}\n}\n";
+    let x = Tensor::new(vec![4, 6], DType::F32, (0..24).map(|v| v as f32).collect());
+    for (i, j) in [(0.0f32, 0.0f32), (2.0, 3.0), (-1.0, 2.0), (99.0, -99.0), (1.0, 3.5)] {
+        let it = Tensor::new(vec![], DType::I32, vec![i]);
+        let jt = Tensor::new(vec![], DType::I32, vec![j]);
+        assert_plan_matches_evaluator(text, &[&x, &it, &jt]);
+    }
+}
+
+#[test]
+fn while_loop_matches_evaluator_bitwise() {
+    // fori_loop-shaped: tuple state (i, acc, x), body calls a helper that
+    // returns a tuple (like jax's lowering), condition compares i < 4
+    let text = "HloModule t\n\nstep {\n  xx = f32[3,5]{1,0} parameter(0)\n  ii = s32[] parameter(1)\n  aa = f32[3,5]{1,0} parameter(2)\n  one = s32[] constant(1)\n  i2 = s32[] add(ii, one)\n  a2 = f32[3,5]{1,0} add(aa, xx)\n  ROOT r = (s32[], f32[3,5]{1,0}) tuple(i2, a2)\n}\n\nbody {\n  p = (s32[], f32[3,5]{1,0}, f32[3,5]{1,0}) parameter(0)\n  i = s32[] get-tuple-element(p), index=0\n  a = f32[3,5]{1,0} get-tuple-element(p), index=1\n  x = f32[3,5]{1,0} get-tuple-element(p), index=2\n  c = (s32[], f32[3,5]{1,0}) call(x, i, a), to_apply=step\n  i2 = s32[] get-tuple-element(c), index=0\n  a2 = f32[3,5]{1,0} get-tuple-element(c), index=1\n  ROOT t = (s32[], f32[3,5]{1,0}, f32[3,5]{1,0}) tuple(i2, a2, x)\n}\n\ncond {\n  p = (s32[], f32[3,5]{1,0}, f32[3,5]{1,0}) parameter(0)\n  i = s32[] get-tuple-element(p), index=0\n  n = s32[] constant(4)\n  ROOT c = pred[] compare(i, n), direction=LT\n}\n\nENTRY e {\n  x = f32[3,5]{1,0} parameter(0)\n  z = s32[] constant(0)\n  zf = f32[] constant(0)\n  a0 = f32[3,5]{1,0} broadcast(zf), dimensions={}\n  st = (s32[], f32[3,5]{1,0}, f32[3,5]{1,0}) tuple(z, a0, x)\n  w = (s32[], f32[3,5]{1,0}, f32[3,5]{1,0}) while(st), condition=cond, body=body\n  acc = f32[3,5]{1,0} get-tuple-element(w), index=1\n  count = s32[] get-tuple-element(w), index=0\n  cf = f32[] convert(count)\n  cb = f32[3,5]{1,0} broadcast(cf), dimensions={}\n  ROOT o = (f32[3,5]{1,0}, f32[3,5]{1,0}) tuple(acc, cb)\n}\n";
+    let mut rng = XorShiftRng::new(0xBEEF);
+    let x = Tensor::new(vec![3, 5], DType::F32, rng.normal_vec(15));
+    assert_plan_matches_evaluator(text, &[&x]);
+}
+
+#[test]
+fn convert_matches_evaluator_bitwise() {
+    let text = "HloModule t\n\nENTRY e {\n  x = f32[8]{0} parameter(0)\n  i = s32[8]{0} convert(x)\n  f = f32[8]{0} convert(i)\n  p = pred[8]{0} convert(x)\n  pf = f32[8]{0} convert(p)\n  h = f16[8]{0} convert(x)\n  hf = f32[8]{0} convert(h)\n  ROOT o = (f32[8], f32[8], f32[8]) tuple(f, pf, hf)\n}\n";
+    let x = Tensor::from_vec(vec![2.75, -2.75, 0.0, -0.25, 1.0009765, 65504.0, 1e-7, -7.5]);
+    assert_plan_matches_evaluator(text, &[&x]);
+}
+
+#[test]
+fn window_sum_fixture_while_loop_runs_through_the_plan() {
+    // the checked-in while+dynamic-slice fixture, on top of the generic
+    // every-fixture sweep: assert the plan path actually compiles it
+    // (no tree-walker fallback) and agrees with the evaluator
+    let path = format!("{}/../artifacts/window_sum.hlo.txt", env!("CARGO_MANIFEST_DIR"));
+    let text = std::fs::read_to_string(&path).expect("checked-in window_sum fixture");
+    let m = parse_module(&text).unwrap();
+    assert!(
+        ExecutablePlan::compile(&m).is_ok(),
+        "window_sum must compile to a plan (while/dynamic-slice support)"
+    );
+    let mut rng = XorShiftRng::new(42);
+    let x = Tensor::new(vec![128, 256], DType::F32, rng.normal_vec(128 * 256));
+    assert_plan_matches_evaluator(&text, &[&x]);
 }
 
 #[test]
