@@ -8,7 +8,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: all build test bench artifacts doc fmt clean
+.PHONY: all build test bench smoke artifacts doc fmt clean
 
 all: build
 
@@ -20,6 +20,15 @@ test:
 
 bench: build
 	$(CARGO) bench
+
+# Release-mode end-to-end smoke over a small task subset with the golden
+# cross-check folded in: exercises the staged pipeline, the suite runner,
+# and the L2<->L3 oracle path beyond what unit tests cover. --min-pass
+# asserts a nonzero Pass@1 floor so a silently-broken pipeline cannot
+# look green.
+smoke: build
+	./target/release/ascendcraft suite --quiet --golden \
+		--tasks relu,gelu,softmax,mse_loss,adam --min-pass 5
 
 # Build the API docs with warnings denied (same gate as CI): broken
 # intra-doc links fail instead of rotting silently.

@@ -32,14 +32,14 @@ fn main() {
     let art = run_task(&task, &PipelineConfig::default());
 
     println!("--- generated DSL (paper Fig. 2 structure) ---");
-    let dsl = art.dsl_source.as_deref().unwrap_or("(none)");
+    let dsl = art.dsl_source().unwrap_or("(none)");
     for line in dsl.lines().take(24) {
         println!("  {line}");
     }
     println!("  ... ({} more lines)\n", dsl.lines().count().saturating_sub(24));
 
     println!("--- transcompiled AscendC (passes 1-4) ---");
-    if let Some(program) = &art.program {
+    if let Some(program) = art.program() {
         let text = print_ascendc(program);
         for line in text.lines().take(28) {
             println!("  {line}");
@@ -55,5 +55,9 @@ fn main() {
     println!("  generated cycles:      {:.0}", r.generated_cycles.unwrap_or(f64::NAN));
     println!("  eager baseline cycles: {:.0}", eager_cycles(&task));
     println!("  speedup vs eager:      {:.2}x", r.speedup().unwrap_or(0.0));
+    println!("  stage timings:");
+    for st in &r.stage_timings {
+        println!("    {:<10} {:>9.3} ms  {}", st.name, st.wall_secs * 1e3, st.outcome.name());
+    }
     assert!(r.correct, "quickstart kernel must verify: {:?}", r.failure);
 }

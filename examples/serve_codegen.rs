@@ -49,8 +49,7 @@ fn main() {
                 let task = task_by_name(req.task_name).expect("known task");
                 let art = run_task(&task, &PipelineConfig::default());
                 let ascendc_lines = art
-                    .program
-                    .as_ref()
+                    .program()
                     .map(|p| ascendcraft::ascendc::print_ascendc(p).lines().count())
                     .unwrap_or(0);
                 let _ = resp_tx.send(Response {
@@ -60,7 +59,8 @@ fn main() {
                     detail: art
                         .result
                         .failure
-                        .clone()
+                        .as_ref()
+                        .map(|d| d.to_string())
                         .unwrap_or_else(|| {
                             format!(
                                 "verified, {:.2}x vs eager, {} repair rounds (worker {worker_id})",

@@ -132,6 +132,46 @@ fn main() {
     }
     println!();
 
+    // 2b. pipeline group: per-stage wall time from the session's
+    // StageReports, one representative task per category — the tracked
+    // baseline for the staged compilation-session API's timings
+    println!("pipeline stage timings (mean of {PIPELINE_ITERS} runs, ms):");
+    println!(
+        "{:<28} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9}",
+        "task", "generate", "frontend", "transpile", "compile", "simulate", "score"
+    );
+    const PIPELINE_ITERS: usize = 3;
+    for name in ["gelu", "mse_loss", "cumsum", "rmsnorm", "adam", "sum_dim", "maxpool2d"] {
+        let task = task_by_name(name).unwrap();
+        let cfg = PipelineConfig::default();
+        let _ = run_task(&task, &cfg); // warmup
+        // the stage list is deterministic per config, so reports line up
+        // run-to-run; accumulate by position
+        let mut names: Vec<&'static str> = Vec::new();
+        let mut acc: Vec<f64> = Vec::new();
+        for _ in 0..PIPELINE_ITERS {
+            let art = run_task(&task, &cfg);
+            if names.is_empty() {
+                names = art.result.stage_timings.iter().map(|r| r.name).collect();
+                acc = vec![0.0; names.len()];
+            }
+            for (slot, report) in acc.iter_mut().zip(&art.result.stage_timings) {
+                *slot += report.wall_secs;
+            }
+        }
+        let mut row = format!("{:<28}", format!("pipeline[{name}]"));
+        for stage in ["generate", "frontend", "transpile", "compile", "simulate", "score"] {
+            match names.iter().position(|n| *n == stage) {
+                Some(i) => {
+                    row.push_str(&format!(" {:>9.3}", acc[i] / PIPELINE_ITERS as f64 * 1e3))
+                }
+                None => row.push_str(&format!(" {:>9}", "-")),
+            }
+        }
+        println!("{row}");
+    }
+    println!();
+
     // 3. frontend + transcompiler throughput (no simulation)
     let synth = KnowledgeBaseSynthesizer::default();
     let task = task_by_name("adam").unwrap();

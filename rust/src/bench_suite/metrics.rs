@@ -8,6 +8,7 @@
 //! = 6/7 with one incorrect kernel).
 
 use super::spec::Category;
+use crate::coordinator::stage::{Diagnostic, StageReport};
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 
@@ -34,12 +35,16 @@ pub struct TaskResult {
     pub generated_cycles: Option<f64>,
     /// Simulated cycles of the eager baseline.
     pub eager_cycles: f64,
-    /// Failure detail for reports.
-    pub failure: Option<String>,
+    /// Structured failure: the diagnostic of the stage that stopped the
+    /// pipeline (None when the task verified end to end).
+    pub failure: Option<Diagnostic>,
     /// Number of repair-feedback rounds consumed across passes.
     pub repair_rounds: usize,
     /// Wall-clock seconds the pipeline spent on this task.
     pub pipeline_secs: f64,
+    /// Per-stage wall time + outcome, in execution order (the session's
+    /// stage reports; empty only for hand-built results).
+    pub stage_timings: Vec<StageReport>,
     /// Golden cross-check outcome (None when the suite ran without it).
     /// When the check ran over several seeds this is the aggregate;
     /// per-seed outcomes are in [`TaskResult::golden_seeds`].
@@ -80,8 +85,13 @@ impl TaskResult {
             None => j.set("speedup", Json::Null),
         };
         if let Some(f) = &self.failure {
-            j.set("failure", f.as_str());
+            j.set("failure", f.to_json());
         }
+        let mut timings = Json::Arr(vec![]);
+        for st in &self.stage_timings {
+            timings.push(st.to_json());
+        }
+        j.set("stage_timings", timings);
         if let Some(g) = &self.golden {
             let mut gj = Json::obj();
             gj.set("checked", g.checked).set("ok", g.ok).set("detail", g.detail.as_str());
@@ -221,6 +231,30 @@ impl SuiteResult {
         s
     }
 
+    /// Render the per-task failure table: one aligned row per failed task
+    /// with the structured diagnostic's stage, code, and message. Empty
+    /// string when every task verified.
+    pub fn render_failures(&self) -> String {
+        let failed: Vec<&TaskResult> =
+            self.results.iter().filter(|r| r.failure.is_some()).collect();
+        if failed.is_empty() {
+            return String::new();
+        }
+        let mut s = String::new();
+        s.push_str(&format!(
+            "Failures ({} tasks).\n{:<18} {:<10} {:<6} message\n",
+            failed.len(),
+            "Task",
+            "Stage",
+            "Code"
+        ));
+        for r in failed {
+            let d = r.failure.as_ref().unwrap();
+            s.push_str(&format!("{:<18} {:<10} {:<6} {}\n", r.name, d.stage, d.code, d.message));
+        }
+        s
+    }
+
     /// Render Table 2 (performance by category) as aligned text.
     pub fn render_table2(&self) -> String {
         let mut s = String::new();
@@ -283,9 +317,40 @@ mod tests {
             failure: None,
             repair_rounds: 0,
             pipeline_secs: 0.0,
+            stage_timings: Vec::new(),
             golden: None,
             golden_seeds: Vec::new(),
         }
+    }
+
+    #[test]
+    fn failure_table_lists_stage_and_code() {
+        let mut bad = result(Category::Math, true, false, Some(1.0), 1.0);
+        bad.failure = Some(Diagnostic::new("score", "N103", "output 'y': drift"));
+        let ok = result(Category::Math, true, true, Some(1.0), 1.0);
+        let s = SuiteResult { results: vec![ok.clone(), bad] };
+        let table = s.render_failures();
+        assert!(table.contains("score"), "{table}");
+        assert!(table.contains("N103"), "{table}");
+        assert!(table.contains("drift"), "{table}");
+        let none = SuiteResult { results: vec![ok] };
+        assert!(none.render_failures().is_empty());
+    }
+
+    #[test]
+    fn task_json_includes_structured_failure_and_stage_timings() {
+        use crate::coordinator::stage::StageOutcome;
+        let mut r = result(Category::Loss, false, false, None, 1.0);
+        r.failure = Some(Diagnostic::new("compile", "A402", "bool has no UB mapping"));
+        r.stage_timings = vec![
+            StageReport { name: "generate", wall_secs: 0.001, outcome: StageOutcome::Ok },
+            StageReport { name: "transpile", wall_secs: 0.002, outcome: StageOutcome::Failed },
+        ];
+        let text = r.to_json().to_string();
+        assert!(text.contains("\"failure\""), "{text}");
+        assert!(text.contains("\"code\":\"A402\""), "{text}");
+        assert!(text.contains("\"stage_timings\""), "{text}");
+        assert!(text.contains("\"outcome\":\"failed\""), "{text}");
     }
 
     #[test]

@@ -1,8 +1,12 @@
 //! L3 coordinator: the AscendCraft code-generation service.
 //!
-//! * [`pipeline`] — the end-to-end per-task driver: DSL generation →
-//!   frontend validation → four transcompilation passes with the per-pass
-//!   compile-feedback repair loop → NPU simulation → Pass@1/Fastₓ scoring.
+//! * [`stage`] — the staged compilation-session API: typed [`stage::Stage`]s
+//!   (generate → frontend → transpile/repair → compile → simulate → score)
+//!   accumulating artifacts on a [`stage::Session`], with per-stage
+//!   [`stage::StageReport`] timings and structured [`stage::Diagnostic`]s.
+//! * [`pipeline`] — the thin per-task driver over the stage list, plus the
+//!   [`pipeline::PipelineConfig`] whose ablation knobs select stage
+//!   configurations.
 //! * [`service`] — a std-thread worker pool that runs many tasks
 //!   concurrently (the deployment shape: a codegen service consuming kernel
 //!   requests and emitting verified AscendC), plus suite runners for the
@@ -14,6 +18,8 @@
 
 pub mod pipeline;
 pub mod service;
+pub mod stage;
 
 pub use pipeline::{run_task, PipelineConfig, PipelineMode};
 pub use service::{run_suite, SuiteConfig};
+pub use stage::{Diagnostic, Session, Stage, StageOutcome, StageReport};

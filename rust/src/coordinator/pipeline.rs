@@ -1,4 +1,5 @@
-//! End-to-end per-task pipeline: the paper's Figure 3 flow.
+//! End-to-end per-task pipeline: the paper's Figure 3 flow, as a thin
+//! driver over the staged compilation-session API in [`super::stage`].
 //!
 //! ```text
 //! task ──► DSL generation (synth) ──► DSL frontend (parse+validate)
@@ -7,17 +8,18 @@
 //!            └── repair ◄─────┘            (bounded feedback rounds)
 //!      ──► NPU simulation (functional+timing) ──► Pass@1 / Fastₓ scoring
 //! ```
+//!
+//! [`run_task`] builds the stage list the [`PipelineConfig`] selects
+//! (ablations are stage-list configurations, not inline branches), walks
+//! it on a [`Session`], and returns the full session alongside the
+//! [`TaskResult`] — per-stage wall times in `TaskResult::stage_timings`,
+//! failures as structured [`super::stage::Diagnostic`]s.
 
+use super::stage::{stage_list, Session, Stage, StageOutcome, StageReport};
 use crate::ascendc::AscProgram;
-use crate::baselines::eager::eager_cycles;
 use crate::bench_suite::metrics::TaskResult;
 use crate::bench_suite::spec::TaskSpec;
-use crate::dsl;
-use crate::sim;
-use crate::synth::{self, direct::DirectGenerator, repair, GenResult, Generator};
-use crate::transpile::{self, TranspileOptions};
-use crate::util::compare::allclose_report;
-use crate::util::tensor::Tensor;
+use crate::transpile::TranspileOptions;
 use std::time::Instant;
 
 /// Which generation path to run.
@@ -40,7 +42,8 @@ pub struct PipelineConfig {
     pub max_repair_rounds: usize,
     /// Input-data seed.
     pub seed: u64,
-    /// Simulated core count.
+    /// Simulated core count (drives both the generated kernel's timing and
+    /// the eager baseline, so Fastₓ compares like with like).
     pub cores: usize,
 }
 
@@ -56,184 +59,54 @@ impl Default for PipelineConfig {
     }
 }
 
-/// Everything the pipeline produced for one task (result + artifacts).
+/// Everything the pipeline produced for one task: the scored
+/// [`TaskResult`] plus the full [`Session`] with every intermediate
+/// artifact (`ascendcraft compile --emit=…` dumps these).
 #[derive(Clone, Debug)]
 pub struct PipelineArtifacts {
     pub result: TaskResult,
-    pub dsl_source: Option<String>,
-    pub program: Option<AscProgram>,
+    pub session: Session,
 }
 
-/// Run one task through the configured pipeline.
+impl PipelineArtifacts {
+    /// Generated DSL source, if the configured pipeline produced one.
+    pub fn dsl_source(&self) -> Option<&str> {
+        self.session.dsl_source.as_deref()
+    }
+
+    /// Final AscendC program, if one was produced.
+    pub fn program(&self) -> Option<&AscProgram> {
+        self.session.program.as_ref()
+    }
+}
+
+/// Run one task through the stage list the configuration selects.
 pub fn run_task(task: &TaskSpec, cfg: &PipelineConfig) -> PipelineArtifacts {
-    let started = Instant::now();
-    let fail = |compiled: bool, msg: String, dsl: Option<String>, rounds: usize| PipelineArtifacts {
-        result: TaskResult {
-            name: task.name.to_string(),
-            category: task.category,
-            compiled,
-            correct: false,
-            generated_cycles: None,
-            eager_cycles: eager_cycles(task),
-            failure: Some(msg),
-            repair_rounds: rounds,
-            pipeline_secs: started.elapsed().as_secs_f64(),
-            golden: None,
-            golden_seeds: Vec::new(),
-        },
-        dsl_source: dsl,
-        program: None,
-    };
+    run_stages(task, cfg, &stage_list(cfg))
+}
 
-    let mut inputs = task.make_inputs(cfg.seed);
-
-    // --- generation stage ---
-    let (program, dsl_source, rounds) = match cfg.mode {
-        PipelineMode::Direct => {
-            let program = DirectGenerator.generate(task);
-            let env = crate::ascendc::validate::ValidateEnv::new(Default::default());
-            let errors = crate::ascendc::validate::validate_errors(&program, &env);
-            if !errors.is_empty() {
-                return fail(
-                    false,
-                    format!("direct generation failed to compile: {}", errors[0].message),
-                    None,
-                    0,
-                );
-            }
-            (program, None, 0)
-        }
-        PipelineMode::AscendCraft | PipelineMode::GenericExamples => {
-            let generator = synth::templates::KnowledgeBaseSynthesizer {
-                generic_only: cfg.mode == PipelineMode::GenericExamples,
-            };
-            let GenResult { mut dsl_source, scratch } = match generator.generate(task) {
-                Ok(r) => r,
-                Err(e) => return fail(false, format!("generation: {e}"), None, 0),
-            };
-            for (name, shape) in &scratch {
-                inputs.insert(name.clone(), Tensor::zeros(shape));
-            }
-            // DSL frontend
-            let mut dsl_program = match dsl::frontend(&dsl_source) {
-                Ok(p) => p,
-                Err(diags) => {
-                    return fail(
-                        false,
-                        format!("DSL validation: {}", diags[0].message),
-                        Some(dsl_source),
-                        0,
-                    )
-                }
-            };
-            // transcompile with per-pass correction feedback
-            let mut options = cfg.options.clone();
-            let mut rounds = 0usize;
-            let program = loop {
-                let out = match transpile::transpile(&dsl_program, &inputs, &options) {
-                    Ok(o) => o,
-                    Err(e) => return fail(false, format!("transpile: {e}"), Some(dsl_source), rounds),
-                };
-                let errors: Vec<_> =
-                    out.diagnostics.iter().filter(|d| d.is_error()).cloned().collect();
-                if errors.is_empty() {
-                    break out.program;
-                }
-                if rounds >= cfg.max_repair_rounds {
-                    return fail(
-                        false,
-                        format!("compile: {} (after {rounds} repair rounds)", errors[0].message),
-                        Some(dsl_source),
-                        rounds,
-                    );
-                }
-                match repair::propose(&errors, &dsl_source, &options) {
-                    Some(outcome) => {
-                        rounds += 1;
-                        dsl_source = outcome.dsl_source;
-                        options = outcome.options;
-                        dsl_program = match dsl::frontend(&dsl_source) {
-                            Ok(p) => p,
-                            Err(diags) => {
-                                return fail(
-                                    false,
-                                    format!("repaired DSL invalid: {}", diags[0].message),
-                                    Some(dsl_source),
-                                    rounds,
-                                )
-                            }
-                        };
-                    }
-                    None => {
-                        return fail(
-                            false,
-                            format!("compile: {} (no repair rule)", errors[0].message),
-                            Some(dsl_source),
-                            rounds,
-                        )
-                    }
-                }
-            };
-            (program, Some(dsl_source), rounds)
-        }
-    };
-
-    // --- execution + scoring ---
-    // reference first (it only reads inputs), then move the tensors into
-    // the simulator without an extra GM-sized clone (§Perf P5)
-    let reference = task.reference(&inputs);
-    let sim_out = match sim::simulate_owned(&program, inputs, cfg.cores) {
-        Ok(o) => o,
-        Err(e) => {
-            let mut art = fail(true, format!("simulation: {e}"), dsl_source.clone(), rounds);
-            art.program = Some(program);
-            return art;
-        }
-    };
-    let mut correct = true;
-    let mut failure = None;
-    for (name, want) in &reference {
-        let Some(got) = sim_out.tensors.get(name) else {
-            correct = false;
-            failure = Some(format!("output '{name}' missing"));
-            break;
-        };
-        if got.shape != want.shape {
-            correct = false;
-            failure = Some(format!(
-                "output '{name}' shape {:?} != reference {:?}",
-                got.shape, want.shape
-            ));
-            break;
-        }
-        let rep = allclose_report(got, want, task.rtol, task.atol);
-        if !rep.ok {
-            correct = false;
-            failure = Some(format!("output '{name}': {}", rep.summary()));
-            break;
+/// The driver proper: walk an explicit stage list, timing each stage into
+/// a [`StageReport`], and stop at the first structured failure. Exposed so
+/// tests and tools can run hand-assembled stage lists.
+pub fn run_stages(
+    task: &TaskSpec,
+    cfg: &PipelineConfig,
+    stages: &[Box<dyn Stage>],
+) -> PipelineArtifacts {
+    let mut session = Session::new(task, cfg);
+    for stage in stages {
+        let started = Instant::now();
+        let outcome = stage.run(task, cfg, &mut session);
+        session.reports.push(StageReport {
+            name: stage.name(),
+            wall_secs: started.elapsed().as_secs_f64(),
+            outcome: if outcome.is_ok() { StageOutcome::Ok } else { StageOutcome::Failed },
+        });
+        if let Err(diagnostic) = outcome {
+            return session.finish(task, cfg, Some(diagnostic));
         }
     }
-
-    PipelineArtifacts {
-        result: TaskResult {
-            name: task.name.to_string(),
-            category: task.category,
-            compiled: true,
-            correct,
-            generated_cycles: Some(sim_out.timing.total_cycles),
-            eager_cycles: eager_cycles(task),
-            failure,
-            repair_rounds: rounds,
-            pipeline_secs: started.elapsed().as_secs_f64(),
-            // the golden (L2) cross-check is a suite-level concern: the
-            // worker in `coordinator::service::run_suite` fills this in
-            // when `SuiteConfig::golden` is set
-            golden: None,
-            golden_seeds: Vec::new(),
-        },
-        dsl_source,
-        program: Some(program),
-    }
+    session.finish(task, cfg, None)
 }
 
 #[cfg(test)]
@@ -264,7 +137,7 @@ mod tests {
         let art = run("mse_loss");
         assert!(art.result.correct, "{:?}", art.result.failure);
         // two kernels: partial + combine
-        assert_eq!(art.program.unwrap().kernels.len(), 2);
+        assert_eq!(art.session.program.unwrap().kernels.len(), 2);
     }
 
     #[test]
@@ -278,8 +151,9 @@ mod tests {
     fn mask_cumsum_fails_to_compile() {
         let art = run("mask_cumsum");
         assert!(!art.result.compiled);
-        let msg = art.result.failure.unwrap();
-        assert!(msg.contains("bool") || msg.contains("A40"), "{msg}");
+        let d = art.result.failure.unwrap();
+        assert!(d.message.contains("bool") || d.code.starts_with("A40"), "{d}");
+        assert!(!d.stage.is_empty() && !d.code.is_empty(), "{d}");
     }
 
     #[test]
@@ -297,5 +171,25 @@ mod tests {
         let art = run_task(&task_by_name("relu").unwrap(), &cfg);
         assert!(art.result.compiled);
         assert!(art.result.correct, "{:?}", art.result.failure);
+    }
+
+    #[test]
+    fn every_stage_is_timed_in_order() {
+        let art = run("relu");
+        let names: Vec<_> = art.result.stage_timings.iter().map(|r| r.name).collect();
+        assert_eq!(names, ["generate", "frontend", "transpile", "compile", "simulate", "score"]);
+        assert!(art.result.stage_timings.iter().all(|r| r.wall_secs >= 0.0));
+        assert!(art.result.stage_timings.iter().all(|r| r.outcome == StageOutcome::Ok));
+    }
+
+    #[test]
+    fn failed_stage_terminates_the_report_list() {
+        let art = run("mask_cumsum");
+        let last = art.result.stage_timings.last().unwrap();
+        assert_eq!(last.name, "transpile");
+        assert_eq!(last.outcome, StageOutcome::Failed);
+        // nothing after the failing stage ran
+        assert_eq!(art.result.stage_timings.len(), 3);
+        assert!(art.session.sim.is_none());
     }
 }

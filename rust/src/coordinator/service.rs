@@ -101,8 +101,14 @@ pub fn run_suite_artifacts(tasks: &[TaskSpec], cfg: &SuiteConfig) -> Vec<Pipelin
                         Some(g) if g.checked => "  golden:ok",
                         _ => "",
                     };
+                    // failures are structured: name the stage + code inline
+                    let fail_note = r
+                        .failure
+                        .as_ref()
+                        .map(|d| format!("  [{} {}]", d.stage, d.code))
+                        .unwrap_or_default();
                     eprintln!(
-                        "[{:>2}/{n}] {:<18} {status}  ({} repairs, {:.2}s){golden_note}",
+                        "[{:>2}/{n}] {:<18} {status}  ({} repairs, {:.2}s){golden_note}{fail_note}",
                         idx + 1,
                         r.name,
                         r.repair_rounds,

@@ -1,0 +1,673 @@
+//! The staged compilation-session API: the paper's Figure 3 flow as a
+//! first-class, inspectable pipeline instead of one monolithic function.
+//!
+//! ```text
+//! generate ──► frontend ──► transpile (repair combinator) ──► compile
+//!                                                              │
+//!                      score ◄── simulate ◄───────────────────┘
+//! ```
+//!
+//! Each box is a [`Stage`]: a named unit that reads and writes typed
+//! artifacts on a [`Session`] (DSL source, validated [`DslProgram`],
+//! [`AscProgram`], [`SimOutput`], …). The driver in
+//! [`super::pipeline::run_task`] walks a stage list selected from the
+//! [`PipelineConfig`] (ablations pick different lists, not different code
+//! paths), records a [`StageReport`] with wall time and outcome per
+//! executed stage, and stops at the first failure.
+//!
+//! Failures are structured [`Diagnostic`]s — stage name, stable code,
+//! message, optional DSL line — never ad-hoc strings. Every error type in
+//! the pipeline ([`GenError`], [`DslDiagnostic`], [`TranspileError`],
+//! [`AscDiagnostic`], [`SimError`]) converts into `Diagnostic` via `From`,
+//! so `TaskResult::failure` is machine-readable end to end (it serializes
+//! in `TaskResult::to_json` and round-trips through
+//! [`crate::util::json::Json::parse`]).
+
+use super::pipeline::{PipelineArtifacts, PipelineConfig, PipelineMode};
+use crate::ascendc::validate::{validate, AscDiagnostic, ValidateEnv};
+use crate::ascendc::AscProgram;
+use crate::baselines::eager::eager_cycles_with_cores;
+use crate::bench_suite::metrics::TaskResult;
+use crate::bench_suite::spec::TaskSpec;
+use crate::dsl::{self, DslDiagnostic, DslProgram};
+use crate::sim::{self, SimError, SimOutput};
+use crate::synth::{self, direct::DirectGenerator, repair, GenError, GenResult, Generator};
+use crate::transpile::{self, TranspileError, TranspileOptions};
+use crate::util::compare::allclose_report;
+use crate::util::json::Json;
+use crate::util::tensor::Tensor;
+use std::collections::HashMap;
+use std::fmt;
+use std::time::Instant;
+
+/// Canonical stage names, in paper-Figure-3 order. `StageReport::name` and
+/// `Diagnostic::stage` always hold one of these.
+pub const STAGE_GENERATE: &str = "generate";
+pub const STAGE_FRONTEND: &str = "frontend";
+pub const STAGE_TRANSPILE: &str = "transpile";
+pub const STAGE_COMPILE: &str = "compile";
+pub const STAGE_SIMULATE: &str = "simulate";
+pub const STAGE_SCORE: &str = "score";
+
+/// A structured pipeline diagnostic: which stage produced it, a stable
+/// machine-readable code (the validator/repair-engine code families:
+/// `G…` generation, `P…`/`D…` DSL frontend, `H…` host lowering, `A…`
+/// AscendC validation, `S…` simulation, `N…` numeric scoring), a human
+/// message, and the 1-based DSL source line when known.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Diagnostic {
+    pub stage: String,
+    pub code: String,
+    pub message: String,
+    /// 1-based DSL source line, for frontend-level diagnostics.
+    pub line: Option<usize>,
+}
+
+impl Diagnostic {
+    pub fn new(stage: &str, code: &str, message: impl Into<String>) -> Diagnostic {
+        Diagnostic { stage: stage.to_string(), code: code.to_string(), message: message.into(), line: None }
+    }
+
+    pub fn with_line(mut self, line: usize) -> Diagnostic {
+        self.line = Some(line);
+        self
+    }
+
+    /// A driver-level invariant violation (a stage ran without its input
+    /// artifact). Code `X000` — these indicate bugs, not task failures.
+    pub fn internal(stage: &str, message: impl Into<String>) -> Diagnostic {
+        Diagnostic::new(stage, "X000", message)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("stage", self.stage.as_str())
+            .set("code", self.code.as_str())
+            .set("message", self.message.as_str());
+        if let Some(line) = self.line {
+            j.set("line", line);
+        }
+        j
+    }
+
+    /// Inverse of [`Diagnostic::to_json`] (used by report consumers and the
+    /// round-trip tests). Returns `None` on a malformed object.
+    pub fn from_json(j: &Json) -> Option<Diagnostic> {
+        Some(Diagnostic {
+            stage: j.get("stage")?.as_str()?.to_string(),
+            code: j.get("code")?.as_str()?.to_string(),
+            message: j.get("message")?.as_str()?.to_string(),
+            line: j.get("line").and_then(Json::as_f64).map(|l| l as usize),
+        })
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{} {}] {}", self.stage, self.code, self.message)?;
+        if let Some(line) = self.line {
+            write!(f, " (DSL line {line})")?;
+        }
+        Ok(())
+    }
+}
+
+impl From<GenError> for Diagnostic {
+    fn from(e: GenError) -> Diagnostic {
+        Diagnostic::new(STAGE_GENERATE, &e.code, e.message)
+    }
+}
+
+impl From<DslDiagnostic> for Diagnostic {
+    fn from(d: DslDiagnostic) -> Diagnostic {
+        Diagnostic::new(STAGE_FRONTEND, &d.code, d.message).with_line(d.line)
+    }
+}
+
+impl From<TranspileError> for Diagnostic {
+    fn from(e: TranspileError) -> Diagnostic {
+        Diagnostic::new(STAGE_TRANSPILE, &e.code, format!("{} ({})", e.message, e.pass))
+    }
+}
+
+impl From<AscDiagnostic> for Diagnostic {
+    fn from(d: AscDiagnostic) -> Diagnostic {
+        let mut message = d.message;
+        if !d.kernel.is_empty() {
+            message.push_str(&format!(" [kernel {}", d.kernel));
+            if !d.stage.is_empty() {
+                message.push_str(&format!(", stage {}", d.stage));
+            }
+            message.push(']');
+        }
+        Diagnostic::new(STAGE_COMPILE, &d.code, message)
+    }
+}
+
+impl From<SimError> for Diagnostic {
+    fn from(e: SimError) -> Diagnostic {
+        let code = match &e {
+            SimError::Host(_) => "S101",
+            SimError::Kernel(_) => "S102",
+            SimError::Oob(_) => "S103",
+            SimError::StepLimit => "S104",
+        };
+        Diagnostic::new(STAGE_SIMULATE, code, e.to_string())
+    }
+}
+
+/// Did a stage complete?
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StageOutcome {
+    Ok,
+    Failed,
+}
+
+impl StageOutcome {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StageOutcome::Ok => "ok",
+            StageOutcome::Failed => "failed",
+        }
+    }
+}
+
+/// One executed stage: its canonical name, wall-clock seconds, and outcome.
+/// The session's report list *is* `TaskResult::stage_timings`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StageReport {
+    pub name: &'static str,
+    pub wall_secs: f64,
+    pub outcome: StageOutcome,
+}
+
+impl StageReport {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("name", self.name).set("secs", self.wall_secs).set("outcome", self.outcome.name());
+        j
+    }
+}
+
+/// Everything one task accumulates as it moves through the stage list:
+/// the typed intermediate artifacts, the per-stage reports, and every
+/// structured diagnostic (fatal or not). `PipelineArtifacts` exposes the
+/// whole session, which is what `ascendcraft compile --emit=…` dumps.
+#[derive(Clone, Debug)]
+pub struct Session {
+    /// Task input tensors (plus generator scratch buffers). Consumed —
+    /// moved into the simulator — by the simulate stage.
+    pub inputs: HashMap<String, Tensor>,
+    /// Transpile options; the repair combinator may revise them.
+    pub options: TranspileOptions,
+    /// Generated DSL source (None in direct mode).
+    pub dsl_source: Option<String>,
+    /// Frontend-validated DSL program.
+    pub dsl_program: Option<DslProgram>,
+    /// Transcompiled (or directly generated) AscendC program.
+    pub program: Option<AscProgram>,
+    /// Concrete tiling values from host evaluation (pass 1).
+    pub tiling: HashMap<String, i64>,
+    /// Validator diagnostics from the most recent validation (the last
+    /// transpile round, or the compile stage itself in direct mode).
+    pub compile_diags: Vec<AscDiagnostic>,
+    /// Set by the transpile stage: `compile_diags` already reflects a
+    /// full validation of `program` (so the compile stage need not pay
+    /// for a second one).
+    pub transpiled: bool,
+    /// Simulator output (tensors + timing), once simulate ran.
+    pub sim: Option<SimOutput>,
+    /// Task reference outputs, computed just before simulation.
+    pub reference: Option<HashMap<String, Tensor>>,
+    /// Compile-feedback rounds consumed by the repair combinator.
+    pub repair_rounds: usize,
+    /// One report per executed stage, in execution order.
+    pub reports: Vec<StageReport>,
+    /// Every structured diagnostic the session saw (validator warnings
+    /// included; the fatal one, if any, is also `TaskResult::failure`).
+    pub diagnostics: Vec<Diagnostic>,
+    /// Set by the compile stage: the program passed AscendC validation.
+    pub compiled: bool,
+    /// Set by the score stage: outputs matched the reference.
+    pub correct: bool,
+    started: Instant,
+}
+
+impl Session {
+    pub fn new(task: &TaskSpec, cfg: &PipelineConfig) -> Session {
+        Session {
+            inputs: task.make_inputs(cfg.seed),
+            options: cfg.options.clone(),
+            dsl_source: None,
+            dsl_program: None,
+            program: None,
+            tiling: HashMap::new(),
+            compile_diags: Vec::new(),
+            transpiled: false,
+            sim: None,
+            reference: None,
+            repair_rounds: 0,
+            reports: Vec::new(),
+            diagnostics: Vec::new(),
+            compiled: false,
+            correct: false,
+            started: Instant::now(),
+        }
+    }
+
+    /// Names of the executed stages, in order (mirrors
+    /// `TaskResult::stage_timings`).
+    pub fn stage_names(&self) -> Vec<&'static str> {
+        self.reports.iter().map(|r| r.name).collect()
+    }
+
+    /// The error-severity subset of [`Session::compile_diags`] — what the
+    /// repair loop consumes ("did not compile" means this is non-empty).
+    pub fn compile_errors(&self) -> Vec<AscDiagnostic> {
+        self.compile_diags.iter().filter(|d| d.is_error()).cloned().collect()
+    }
+
+    /// The one `TaskResult` constructor: every path out of the pipeline —
+    /// success or any-stage failure — funnels through here, so baselines
+    /// (`eager_cycles_with_cores` with the *configured* core count),
+    /// timings, and diagnostics can never diverge between paths.
+    pub fn finish(
+        mut self,
+        task: &TaskSpec,
+        cfg: &PipelineConfig,
+        failure: Option<Diagnostic>,
+    ) -> PipelineArtifacts {
+        if let Some(d) = &failure {
+            if !self.diagnostics.contains(d) {
+                self.diagnostics.push(d.clone());
+            }
+        }
+        let result = TaskResult {
+            name: task.name.to_string(),
+            category: task.category,
+            compiled: self.compiled,
+            correct: self.correct && failure.is_none(),
+            generated_cycles: self.sim.as_ref().map(|s| s.timing.total_cycles),
+            eager_cycles: eager_cycles_with_cores(task, cfg.cores),
+            failure,
+            repair_rounds: self.repair_rounds,
+            pipeline_secs: self.started.elapsed().as_secs_f64(),
+            stage_timings: self.reports.clone(),
+            // the golden (L2) cross-check is a suite-level concern: the
+            // worker in `coordinator::service::run_suite` fills this in
+            // when `SuiteConfig::golden` is set
+            golden: None,
+            golden_seeds: Vec::new(),
+        };
+        PipelineArtifacts { result, session: self }
+    }
+}
+
+/// One pipeline stage: reads its input artifacts off the [`Session`],
+/// writes its outputs back, and fails with a structured [`Diagnostic`].
+pub trait Stage {
+    /// Canonical stage name (one of the `STAGE_*` constants).
+    fn name(&self) -> &'static str;
+    fn run(&self, task: &TaskSpec, cfg: &PipelineConfig, s: &mut Session) -> Result<(), Diagnostic>;
+}
+
+/// The stage list the configuration selects. Ablations are stage-list
+/// configurations, not inline branches: direct mode drops the DSL stages
+/// entirely, `max_repair_rounds` parameterizes the repair combinator, and
+/// generic-examples mode parameterizes the generator.
+pub fn stage_list(cfg: &PipelineConfig) -> Vec<Box<dyn Stage>> {
+    match cfg.mode {
+        PipelineMode::Direct => vec![
+            Box::new(GenerateStage),
+            Box::new(CompileStage),
+            Box::new(SimulateStage),
+            Box::new(ScoreStage),
+        ],
+        PipelineMode::AscendCraft | PipelineMode::GenericExamples => vec![
+            Box::new(GenerateStage),
+            Box::new(FrontendStage),
+            Box::new(RepairLoop { max_rounds: cfg.max_repair_rounds }),
+            Box::new(CompileStage),
+            Box::new(SimulateStage),
+            Box::new(ScoreStage),
+        ],
+    }
+}
+
+/// DSL generation (paper §4.1) — or direct AscendC generation in the
+/// ablation baseline. Writes `dsl_source` (+ scratch inputs) or `program`.
+pub struct GenerateStage;
+
+impl Stage for GenerateStage {
+    fn name(&self) -> &'static str {
+        STAGE_GENERATE
+    }
+
+    fn run(&self, task: &TaskSpec, cfg: &PipelineConfig, s: &mut Session) -> Result<(), Diagnostic> {
+        match cfg.mode {
+            PipelineMode::Direct => {
+                s.program = Some(DirectGenerator.generate(task));
+                Ok(())
+            }
+            PipelineMode::AscendCraft | PipelineMode::GenericExamples => {
+                let generator = synth::templates::KnowledgeBaseSynthesizer {
+                    generic_only: cfg.mode == PipelineMode::GenericExamples,
+                };
+                let GenResult { dsl_source, scratch } =
+                    generator.generate(task).map_err(Diagnostic::from)?;
+                for (name, shape) in &scratch {
+                    s.inputs.insert(name.clone(), Tensor::zeros(shape));
+                }
+                s.dsl_source = Some(dsl_source);
+                Ok(())
+            }
+        }
+    }
+}
+
+/// DSL frontend: parse + semantic validation (paper §3). Reads
+/// `dsl_source`, writes `dsl_program`.
+pub struct FrontendStage;
+
+impl Stage for FrontendStage {
+    fn name(&self) -> &'static str {
+        STAGE_FRONTEND
+    }
+
+    fn run(&self, _task: &TaskSpec, _cfg: &PipelineConfig, s: &mut Session) -> Result<(), Diagnostic> {
+        let source = s
+            .dsl_source
+            .as_deref()
+            .ok_or_else(|| Diagnostic::internal(STAGE_FRONTEND, "no DSL source in session"))?;
+        match dsl::frontend(source) {
+            Ok(p) => {
+                s.dsl_program = Some(p);
+                Ok(())
+            }
+            Err(mut diags) => Err(Diagnostic::from(diags.remove(0))),
+        }
+    }
+}
+
+/// One transcompilation round: the four passes plus the final validation
+/// ("compile"). Reads `dsl_program` + `inputs` + `options`; writes
+/// `program`, `tiling`, and `compile_diags`. Standalone it performs no
+/// repair — [`RepairLoop`] wraps it for the feedback flow.
+pub struct TranspileStage;
+
+impl Stage for TranspileStage {
+    fn name(&self) -> &'static str {
+        STAGE_TRANSPILE
+    }
+
+    fn run(&self, _task: &TaskSpec, _cfg: &PipelineConfig, s: &mut Session) -> Result<(), Diagnostic> {
+        let out = {
+            let dsl_program = s.dsl_program.as_ref().ok_or_else(|| {
+                Diagnostic::internal(STAGE_TRANSPILE, "no validated DSL program in session")
+            })?;
+            transpile::transpile(dsl_program, &s.inputs, &s.options).map_err(Diagnostic::from)?
+        };
+        s.program = Some(out.program);
+        s.tiling = out.tiling;
+        s.compile_diags = out.diagnostics;
+        s.transpiled = true;
+        Ok(())
+    }
+}
+
+/// The per-pass correction-feedback combinator (paper §4.2): wraps
+/// [`TranspileStage`], feeding validator errors to the repair engine and
+/// re-running until the program compiles cleanly or the round budget is
+/// spent. `max_rounds = 0` is the feedback-ablated configuration.
+pub struct RepairLoop {
+    pub max_rounds: usize,
+}
+
+impl Stage for RepairLoop {
+    fn name(&self) -> &'static str {
+        STAGE_TRANSPILE
+    }
+
+    fn run(&self, task: &TaskSpec, cfg: &PipelineConfig, s: &mut Session) -> Result<(), Diagnostic> {
+        loop {
+            TranspileStage.run(task, cfg, s)?;
+            let errors = s.compile_errors();
+            if errors.is_empty() {
+                return Ok(());
+            }
+            if s.repair_rounds >= self.max_rounds {
+                let mut d = Diagnostic::from(errors[0].clone());
+                // the validator produced the code, but the *transpile*
+                // stage is what failed — keep `failure.stage` consistent
+                // with the stage_timings entry that records the failure
+                d.stage = STAGE_TRANSPILE.to_string();
+                d.message = format!("{} (after {} repair rounds)", d.message, s.repair_rounds);
+                return Err(d);
+            }
+            let source = s.dsl_source.as_deref().unwrap_or_default();
+            match repair::propose(&errors, source, &s.options) {
+                Some(outcome) => {
+                    s.repair_rounds += 1;
+                    // record the errors this round repaired away, so the
+                    // session's diagnostic list (--emit=diag) explains
+                    // every repair round, not just the final verdict
+                    for e in &errors {
+                        let mut d = Diagnostic::from(e.clone());
+                        d.stage = STAGE_TRANSPILE.to_string();
+                        d.message =
+                            format!("{} (repaired: round {})", d.message, s.repair_rounds);
+                        s.diagnostics.push(d);
+                    }
+                    s.options = outcome.options;
+                    match dsl::frontend(&outcome.dsl_source) {
+                        Ok(p) => {
+                            s.dsl_program = Some(p);
+                            s.dsl_source = Some(outcome.dsl_source);
+                        }
+                        Err(mut diags) => {
+                            s.dsl_source = Some(outcome.dsl_source);
+                            let mut d = Diagnostic::from(diags.remove(0));
+                            d.stage = STAGE_TRANSPILE.to_string();
+                            d.message = format!("repaired DSL invalid: {}", d.message);
+                            return Err(d);
+                        }
+                    }
+                }
+                None => {
+                    let mut d = Diagnostic::from(errors[0].clone());
+                    d.stage = STAGE_TRANSPILE.to_string();
+                    d.message = format!("{} (no repair rule)", d.message);
+                    return Err(d);
+                }
+            }
+        }
+    }
+}
+
+/// The "compile" gate: AscendC structural validation of the session's
+/// program against the concrete tiling (paper's Comp@1 criterion). After a
+/// clean repair loop this re-confirms zero errors; in direct mode it is
+/// the only compile check. Warnings are recorded as non-fatal diagnostics.
+pub struct CompileStage;
+
+impl Stage for CompileStage {
+    fn name(&self) -> &'static str {
+        STAGE_COMPILE
+    }
+
+    fn run(&self, _task: &TaskSpec, _cfg: &PipelineConfig, s: &mut Session) -> Result<(), Diagnostic> {
+        if s.program.is_none() {
+            return Err(Diagnostic::internal(STAGE_COMPILE, "no AscendC program in session"));
+        }
+        // the transpile stage already validated this program against the
+        // identical tiling env and left the result in `compile_diags` —
+        // reuse it instead of paying for a second validation. Direct mode
+        // reaches here without a transpile round and validates fresh.
+        if !s.transpiled {
+            let env = ValidateEnv::new(s.tiling.clone());
+            s.compile_diags = validate(s.program.as_ref().unwrap(), &env);
+        }
+        let mut first_error = None;
+        for d in s.compile_diags.clone() {
+            let is_error = d.is_error();
+            let converted = Diagnostic::from(d);
+            if is_error && first_error.is_none() {
+                first_error = Some(converted.clone());
+            }
+            s.diagnostics.push(converted);
+        }
+        match first_error {
+            Some(d) => Err(d),
+            None => {
+                s.compiled = true;
+                Ok(())
+            }
+        }
+    }
+}
+
+/// NPU simulation (functional + timing). Computes the task reference first
+/// (it only reads inputs), then moves the input tensors into the simulator
+/// without an extra GM-sized clone (§Perf P5). Writes `sim` + `reference`.
+pub struct SimulateStage;
+
+impl Stage for SimulateStage {
+    fn name(&self) -> &'static str {
+        STAGE_SIMULATE
+    }
+
+    fn run(&self, task: &TaskSpec, cfg: &PipelineConfig, s: &mut Session) -> Result<(), Diagnostic> {
+        let program = s
+            .program
+            .take()
+            .ok_or_else(|| Diagnostic::internal(STAGE_SIMULATE, "no AscendC program in session"))?;
+        s.reference = Some(task.reference(&s.inputs));
+        let inputs = std::mem::take(&mut s.inputs);
+        let outcome = sim::simulate_owned(&program, inputs, cfg.cores);
+        s.program = Some(program);
+        match outcome {
+            Ok(o) => {
+                s.sim = Some(o);
+                Ok(())
+            }
+            Err(e) => Err(Diagnostic::from(e)),
+        }
+    }
+}
+
+/// Pass@1 scoring: every reference output must exist, match shape, and be
+/// allclose within the task tolerances. Codes: `N101` missing output,
+/// `N102` shape mismatch, `N103` numeric mismatch.
+pub struct ScoreStage;
+
+impl Stage for ScoreStage {
+    fn name(&self) -> &'static str {
+        STAGE_SCORE
+    }
+
+    fn run(&self, task: &TaskSpec, _cfg: &PipelineConfig, s: &mut Session) -> Result<(), Diagnostic> {
+        let sim = s
+            .sim
+            .as_ref()
+            .ok_or_else(|| Diagnostic::internal(STAGE_SCORE, "no simulator output in session"))?;
+        let reference = s
+            .reference
+            .as_ref()
+            .ok_or_else(|| Diagnostic::internal(STAGE_SCORE, "no reference outputs in session"))?;
+        for (name, want) in reference {
+            let Some(got) = sim.tensors.get(name) else {
+                return Err(Diagnostic::new(STAGE_SCORE, "N101", format!("output '{name}' missing")));
+            };
+            if got.shape != want.shape {
+                return Err(Diagnostic::new(
+                    STAGE_SCORE,
+                    "N102",
+                    format!("output '{name}' shape {:?} != reference {:?}", got.shape, want.shape),
+                ));
+            }
+            let rep = allclose_report(got, want, task.rtol, task.atol);
+            if !rep.ok {
+                return Err(Diagnostic::new(
+                    STAGE_SCORE,
+                    "N103",
+                    format!("output '{name}': {}", rep.summary()),
+                ));
+            }
+        }
+        s.correct = true;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite::tasks::task_by_name;
+
+    #[test]
+    fn diagnostic_display_includes_stage_code_and_line() {
+        let d = Diagnostic::new(STAGE_FRONTEND, "D101", "tl.load outside copyin").with_line(7);
+        let text = d.to_string();
+        assert!(text.contains("frontend"), "{text}");
+        assert!(text.contains("D101"), "{text}");
+        assert!(text.contains("line 7"), "{text}");
+    }
+
+    #[test]
+    fn diagnostic_json_round_trips() {
+        let d = Diagnostic::new(STAGE_COMPILE, "A301", "UB over-subscribed").with_line(3);
+        let parsed = Json::parse(&d.to_json().to_string()).unwrap();
+        assert_eq!(Diagnostic::from_json(&parsed), Some(d));
+        let no_line = Diagnostic::new(STAGE_SCORE, "N103", "drift");
+        let parsed = Json::parse(&no_line.to_json().to_string()).unwrap();
+        assert_eq!(Diagnostic::from_json(&parsed), Some(no_line));
+    }
+
+    #[test]
+    fn conversions_keep_stage_and_code() {
+        let d: Diagnostic = GenError::new("no template").into();
+        assert_eq!((d.stage.as_str(), d.code.as_str()), (STAGE_GENERATE, "G001"));
+        let d: Diagnostic = DslDiagnostic { code: "D201".into(), message: "m".into(), line: 4 }.into();
+        assert_eq!((d.stage.as_str(), d.line), (STAGE_FRONTEND, Some(4)));
+        let d: Diagnostic = TranspileError::new("pass1", "H201", "tiling".into()).into();
+        assert_eq!((d.stage.as_str(), d.code.as_str()), (STAGE_TRANSPILE, "H201"));
+        assert!(d.message.contains("pass1"));
+        let d: Diagnostic = SimError::StepLimit.into();
+        assert_eq!((d.stage.as_str(), d.code.as_str()), (STAGE_SIMULATE, "S104"));
+    }
+
+    #[test]
+    fn stage_list_matches_mode() {
+        let full = stage_list(&PipelineConfig::default());
+        let names: Vec<_> = full.iter().map(|s| s.name()).collect();
+        assert_eq!(
+            names,
+            [STAGE_GENERATE, STAGE_FRONTEND, STAGE_TRANSPILE, STAGE_COMPILE, STAGE_SIMULATE, STAGE_SCORE]
+        );
+        let direct = stage_list(&PipelineConfig {
+            mode: PipelineMode::Direct,
+            ..Default::default()
+        });
+        let names: Vec<_> = direct.iter().map(|s| s.name()).collect();
+        assert_eq!(names, [STAGE_GENERATE, STAGE_COMPILE, STAGE_SIMULATE, STAGE_SCORE]);
+    }
+
+    #[test]
+    fn session_finish_is_the_single_result_constructor() {
+        let task = task_by_name("relu").unwrap();
+        let cfg = PipelineConfig { cores: 8, ..Default::default() };
+        let session = Session::new(&task, &cfg);
+        let failure = Diagnostic::new(STAGE_GENERATE, "G001", "boom");
+        let art = session.finish(&task, &cfg, Some(failure.clone()));
+        assert!(!art.result.compiled && !art.result.correct);
+        assert_eq!(art.result.failure, Some(failure.clone()));
+        // the fatal diagnostic is recorded on the session too
+        assert!(art.session.diagnostics.contains(&failure));
+        // the configured core count drives the eager baseline (not the
+        // hard-coded default) — the satellite regression this API fixes
+        assert_eq!(
+            art.result.eager_cycles,
+            eager_cycles_with_cores(&task, 8)
+        );
+    }
+}

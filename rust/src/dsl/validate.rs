@@ -17,7 +17,9 @@
 use super::ast::*;
 use std::collections::{HashMap, HashSet};
 
-/// A validation diagnostic. `line` is 1-based source line.
+/// A validation diagnostic. `line` is 1-based source line. Converts into
+/// the pipeline-level [`crate::coordinator::stage::Diagnostic`] (stage
+/// `frontend`) via `From`, keeping code and line.
 #[derive(Clone, Debug, PartialEq)]
 pub struct DslDiagnostic {
     pub code: String,
@@ -28,6 +30,12 @@ pub struct DslDiagnostic {
 impl DslDiagnostic {
     fn new(code: &str, line: usize, message: String) -> DslDiagnostic {
         DslDiagnostic { code: code.to_string(), message, line }
+    }
+}
+
+impl std::fmt::Display for DslDiagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} (line {}): {}", self.code, self.line, self.message)
     }
 }
 

@@ -2,8 +2,12 @@
 //!
 //! ```text
 //! ascendcraft suite [--mode ascendcraft|direct|generic] [--workers N]
+//!                   [--tasks A,B,..] [--cores N] [--min-pass N]
 //!                   [--json PATH] [--quiet] [--golden]
 //!                   [--golden-seeds N]                  reproduce Tables 1+2
+//! ascendcraft compile TASK [--emit=dsl|ascendc|diag|timings] [--seed N]
+//!                   [--mode M] [--cores N]          staged pipeline, dump
+//!                                                   any session artifact
 //! ascendcraft gen --task NAME [--emit-dsl] [--emit-ascendc] [--emit-prompt]
 //! ascendcraft mhc [--rows N]                         RQ3 case study
 //! ascendcraft oracle [--op NAME] [--workers N]       golden cross-check
@@ -27,6 +31,7 @@ fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let code = match args.first().map(String::as_str) {
         Some("suite") => cmd_suite(&args[1..]),
+        Some("compile") => cmd_compile(&args[1..]),
         Some("gen") => cmd_gen(&args[1..]),
         Some("mhc") => cmd_mhc(&args[1..]),
         Some("oracle") => cmd_oracle(&args[1..]),
@@ -51,7 +56,8 @@ fn print_usage() {
         "AscendCraft: DSL-guided AscendC kernel generation (reproduction)\n\
          \n\
          USAGE:\n\
-         \x20 ascendcraft suite [--mode ascendcraft|direct|generic] [--workers N] [--json PATH] [--quiet] [--golden] [--golden-seeds N]\n\
+         \x20 ascendcraft suite [--mode ascendcraft|direct|generic] [--workers N] [--tasks A,B,..] [--cores N] [--min-pass N] [--json PATH] [--quiet] [--golden] [--golden-seeds N]\n\
+         \x20 ascendcraft compile TASK [--emit=dsl|ascendc|diag|timings] [--seed N] [--mode M] [--cores N]\n\
          \x20 ascendcraft gen --task NAME [--emit-dsl] [--emit-ascendc] [--emit-prompt]\n\
          \x20 ascendcraft mhc [--rows N]\n\
          \x20 ascendcraft oracle [--op NAME] [--workers N]\n\
@@ -59,6 +65,15 @@ fn print_usage() {
          \x20 ascendcraft export [--out DIR]   write DSL+AscendC for all tasks\n\
          \x20 ascendcraft prompt CATEGORY"
     );
+}
+
+fn parse_mode(name: &str) -> Option<PipelineMode> {
+    match name {
+        "ascendcraft" => Some(PipelineMode::AscendCraft),
+        "direct" => Some(PipelineMode::Direct),
+        "generic" => Some(PipelineMode::GenericExamples),
+        _ => None,
+    }
 }
 
 fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
@@ -70,14 +85,10 @@ fn has_flag(args: &[String], name: &str) -> bool {
 }
 
 fn cmd_suite(args: &[String]) -> i32 {
-    let mode = match flag_value(args, "--mode").unwrap_or("ascendcraft") {
-        "ascendcraft" => PipelineMode::AscendCraft,
-        "direct" => PipelineMode::Direct,
-        "generic" => PipelineMode::GenericExamples,
-        other => {
-            eprintln!("unknown mode '{other}'");
-            return 2;
-        }
+    let mode_name = flag_value(args, "--mode").unwrap_or("ascendcraft");
+    let Some(mode) = parse_mode(mode_name) else {
+        eprintln!("unknown mode '{mode_name}'");
+        return 2;
     };
     let golden_seeds = if has_flag(args, "--golden-seeds") {
         // a typo'd or missing count must fail loudly, not silently verify
@@ -97,8 +108,38 @@ fn cmd_suite(args: &[String]) -> i32 {
         1
     };
     let golden = has_flag(args, "--golden") || has_flag(args, "--golden-seeds");
+    // --cores N drives the simulated core count for BOTH the generated
+    // kernel and the eager baseline (the staged session threads it into
+    // `eager_cycles_with_cores`, so reported speedups stay like-for-like)
+    let cores = if has_flag(args, "--cores") {
+        match flag_value(args, "--cores").map(str::parse::<usize>) {
+            Some(Ok(n)) if n >= 1 => Some(n),
+            _ => {
+                eprintln!("--cores expects a positive integer");
+                return 2;
+            }
+        }
+    } else {
+        None
+    };
+    // parsed up front so a typo fails before the run, not after it
+    let min_pass = if has_flag(args, "--min-pass") {
+        match flag_value(args, "--min-pass").map(str::parse::<usize>) {
+            Some(Ok(n)) => Some(n),
+            _ => {
+                eprintln!("--min-pass expects an integer");
+                return 2;
+            }
+        }
+    } else {
+        None
+    };
+    let mut pipeline = PipelineConfig { mode, ..Default::default() };
+    if let Some(n) = cores {
+        pipeline.cores = n;
+    }
     let mut cfg = SuiteConfig {
-        pipeline: PipelineConfig { mode, ..Default::default() },
+        pipeline,
         verbose: !has_flag(args, "--quiet"),
         // --golden folds the L2↔L3 cross-check into the suite run itself:
         // each worker checks its task right after the pipeline, sharing
@@ -116,10 +157,35 @@ fn cmd_suite(args: &[String]) -> i32 {
     if let Some(w) = flag_value(args, "--workers").and_then(|v| v.parse().ok()) {
         cfg.workers = w;
     }
-    let tasks = all_tasks();
+    // --tasks A,B,.. restricts the run to a named subset (the CI smoke
+    // step uses this; unknown names must fail loudly, not shrink the run)
+    let tasks = match flag_value(args, "--tasks") {
+        Some(list) => {
+            let mut subset = Vec::new();
+            for name in list.split(',').filter(|n| !n.is_empty()) {
+                match task_by_name(name) {
+                    Some(t) => subset.push(t),
+                    None => {
+                        eprintln!("unknown task '{name}' in --tasks (see 'ascendcraft list')");
+                        return 2;
+                    }
+                }
+            }
+            if subset.is_empty() {
+                eprintln!("--tasks expects a comma-separated list of task names");
+                return 2;
+            }
+            subset
+        }
+        None => all_tasks(),
+    };
     let suite = run_suite(&tasks, &cfg);
     println!("\n{}", suite.render_table1());
     println!("{}", suite.render_table2());
+    let failures = suite.render_failures();
+    if !failures.is_empty() {
+        println!("{failures}");
+    }
     if let Some(path) = flag_value(args, "--json") {
         if let Err(e) = std::fs::write(path, suite.to_json().to_pretty()) {
             eprintln!("writing {path}: {e}");
@@ -143,7 +209,153 @@ fn cmd_suite(args: &[String]) -> i32 {
             return 1;
         }
     }
+    // --min-pass N gates the exit code on Pass@1 count (smoke runs assert
+    // a nonzero floor so a silently-broken pipeline cannot look green)
+    if let Some(min) = min_pass {
+        let correct = suite.totals().correct;
+        if correct < min {
+            eprintln!("suite passed {correct} tasks, below the --min-pass floor of {min}");
+            return 1;
+        }
+        println!("min-pass check: {correct} >= {min} tasks correct");
+    }
     0
+}
+
+/// Run one task through the staged pipeline and dump any intermediate
+/// session artifact: `--emit=dsl` (generated DSL source), `--emit=ascendc`
+/// (printed AscendC), `--emit=diag` (every structured diagnostic),
+/// `--emit=timings` (per-stage wall time + outcome). These are the same
+/// artifacts a suite run produces for the task at the same seed/config.
+fn cmd_compile(args: &[String]) -> i32 {
+    let mut emits: Vec<String> = Vec::new();
+    let mut task_name: Option<&str> = None;
+    let mut cfg = PipelineConfig::default();
+    let mut i = 0;
+    while i < args.len() {
+        let a = args[i].as_str();
+        if let Some(kinds) = a.strip_prefix("--emit=") {
+            emits.extend(kinds.split(',').filter(|k| !k.is_empty()).map(String::from));
+        } else if a == "--emit" {
+            i += 1;
+            match args.get(i) {
+                Some(v) => emits.extend(v.split(',').filter(|k| !k.is_empty()).map(String::from)),
+                None => {
+                    eprintln!("--emit requires a value (dsl|ascendc|diag|timings)");
+                    return 2;
+                }
+            }
+        } else if a == "--seed" {
+            i += 1;
+            match args.get(i).and_then(|v| v.parse::<u64>().ok()) {
+                Some(s) => cfg.seed = s,
+                None => {
+                    eprintln!("--seed expects an integer");
+                    return 2;
+                }
+            }
+        } else if a == "--cores" {
+            i += 1;
+            match args.get(i).and_then(|v| v.parse::<usize>().ok()) {
+                Some(n) if n >= 1 => cfg.cores = n,
+                _ => {
+                    eprintln!("--cores expects a positive integer");
+                    return 2;
+                }
+            }
+        } else if a == "--mode" {
+            i += 1;
+            match args.get(i).map(String::as_str).and_then(parse_mode) {
+                Some(m) => cfg.mode = m,
+                None => {
+                    eprintln!("--mode expects ascendcraft|direct|generic");
+                    return 2;
+                }
+            }
+        } else if a.starts_with("--") {
+            eprintln!("unknown flag '{a}'");
+            return 2;
+        } else if task_name.is_none() {
+            task_name = Some(a);
+        } else {
+            eprintln!("unexpected argument '{a}'");
+            return 2;
+        }
+        i += 1;
+    }
+    let Some(name) = task_name else {
+        eprintln!("compile requires a task name (see 'ascendcraft list')");
+        return 2;
+    };
+    let Some(task) = task_by_name(name) else {
+        eprintln!("unknown task '{name}'");
+        return 2;
+    };
+    for kind in &emits {
+        if !matches!(kind.as_str(), "dsl" | "ascendc" | "diag" | "timings") {
+            eprintln!("unknown --emit kind '{kind}' (dsl|ascendc|diag|timings)");
+            return 2;
+        }
+    }
+
+    let art = run_task(&task, &cfg);
+    for kind in &emits {
+        match kind.as_str() {
+            "dsl" => match art.dsl_source() {
+                Some(src) => println!("# --- generated DSL ---\n{src}"),
+                None => println!("(no DSL generated)"),
+            },
+            "ascendc" => match art.program() {
+                Some(p) => println!(
+                    "// --- generated AscendC ---\n{}",
+                    ascendcraft::ascendc::print_ascendc(p)
+                ),
+                None => println!("(no AscendC generated)"),
+            },
+            "diag" => {
+                if art.session.diagnostics.is_empty() {
+                    println!("(no diagnostics)");
+                }
+                for d in &art.session.diagnostics {
+                    println!("{d}");
+                }
+            }
+            "timings" => {
+                println!("{:<12} {:>12} {:>8}", "stage", "wall_ms", "outcome");
+                for r in &art.result.stage_timings {
+                    println!(
+                        "{:<12} {:>12.3} {:>8}",
+                        r.name,
+                        r.wall_secs * 1e3,
+                        r.outcome.name()
+                    );
+                }
+                println!(
+                    "{:<12} {:>12.3}",
+                    "total",
+                    art.result.pipeline_secs * 1e3
+                );
+            }
+            _ => unreachable!("validated above"),
+        }
+    }
+    let r = &art.result;
+    println!(
+        "task {:<18} compiled={} correct={} repairs={} speedup={}",
+        r.name,
+        r.compiled,
+        r.correct,
+        r.repair_rounds,
+        r.speedup().map(|s| format!("{s:.2}x")).unwrap_or_else(|| "-".into())
+    );
+    if let Some(d) = &r.failure {
+        println!("failure: {d}");
+    }
+    if r.correct {
+        0
+    } else {
+        1
+    }
 }
 
 fn cmd_gen(args: &[String]) -> i32 {
@@ -161,13 +373,13 @@ fn cmd_gen(args: &[String]) -> i32 {
     }
     let art = run_task(&task, &PipelineConfig::default());
     if has_flag(args, "--emit-dsl") {
-        match &art.dsl_source {
+        match art.dsl_source() {
             Some(src) => println!("# --- generated DSL ---\n{src}"),
             None => println!("(no DSL generated)"),
         }
     }
     if has_flag(args, "--emit-ascendc") {
-        match &art.program {
+        match art.program() {
             Some(p) => {
                 println!("// --- generated AscendC ---\n{}", ascendcraft::ascendc::print_ascendc(p))
             }
@@ -297,11 +509,11 @@ fn cmd_export(args: &[String]) -> i32 {
     let mut written = 0;
     for task in all_tasks() {
         let art = run_task(&task, &PipelineConfig::default());
-        if let Some(dsl) = &art.dsl_source {
+        if let Some(dsl) = art.dsl_source() {
             let _ = std::fs::write(format!("{out_dir}/{}.dsl", task.name), dsl);
             written += 1;
         }
-        if let Some(p) = &art.program {
+        if let Some(p) = art.program() {
             let _ = std::fs::write(
                 format!("{out_dir}/{}.cpp", task.name),
                 ascendcraft::ascendc::print_ascendc(p),

@@ -41,12 +41,16 @@ pub struct GenResult {
 
 #[derive(Clone, Debug)]
 pub struct GenError {
+    /// Stable code (`G001` = no template / knowledge gap) so generation
+    /// failures convert into structured pipeline diagnostics
+    /// ([`crate::coordinator::stage::Diagnostic`]) like every other stage.
+    pub code: String,
     pub message: String,
 }
 
 impl GenError {
     pub fn new(m: impl Into<String>) -> GenError {
-        GenError { message: m.into() }
+        GenError { code: "G001".to_string(), message: m.into() }
     }
 }
 

@@ -81,6 +81,9 @@ impl std::error::Error for TranspileError {}
 #[derive(Clone, Debug)]
 pub struct TranspileOutput {
     pub program: AscProgram,
+    /// Validator diagnostics from the final "compile" check; errors here
+    /// mean "did not compile" and feed the `RepairLoop` combinator in
+    /// [`crate::coordinator::stage`].
     pub diagnostics: Vec<AscDiagnostic>,
     pub tiling: HashMap<String, i64>,
 }

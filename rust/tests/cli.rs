@@ -83,3 +83,122 @@ fn oracle_unknown_op_fails_loudly() {
     let text = String::from_utf8_lossy(&out.stdout);
     assert!(text.contains("NO ARTIFACT"), "{text}");
 }
+
+/// The DSL block a `gen --emit-dsl` / `compile --emit=dsl` run printed
+/// (everything between the marker and the trailing summary line).
+fn dsl_block(text: &str) -> String {
+    let mut out = String::new();
+    let mut in_block = false;
+    for line in text.lines() {
+        if line.starts_with("# --- generated DSL ---") {
+            in_block = true;
+            continue;
+        }
+        if line.starts_with("task ") {
+            in_block = false;
+        }
+        if in_block {
+            out.push_str(line);
+            out.push('\n');
+        }
+    }
+    out
+}
+
+#[test]
+fn compile_emit_dsl_prints_the_same_artifact_as_gen() {
+    let c = bin().args(["compile", "relu", "--emit=dsl"]).output().expect("run compile");
+    assert!(c.status.success(), "{}", String::from_utf8_lossy(&c.stderr));
+    let g = bin().args(["gen", "--task", "relu", "--emit-dsl"]).output().expect("run gen");
+    assert!(g.status.success());
+    let (c_dsl, g_dsl) = (
+        dsl_block(&String::from_utf8_lossy(&c.stdout)),
+        dsl_block(&String::from_utf8_lossy(&g.stdout)),
+    );
+    assert!(!c_dsl.is_empty());
+    // same default seed/config -> byte-identical DSL artifact
+    assert_eq!(c_dsl, g_dsl);
+}
+
+#[test]
+fn compile_emit_ascendc_prints_the_kernel_source() {
+    let out = bin().args(["compile", "relu", "--emit=ascendc"]).output().expect("run compile");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("class KernelReluKernel"), "{text}");
+    assert!(text.contains("correct=true"), "{text}");
+}
+
+#[test]
+fn compile_emit_timings_lists_every_stage() {
+    let out = bin().args(["compile", "relu", "--emit=timings"]).output().expect("run compile");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    for stage in ["generate", "frontend", "transpile", "compile", "simulate", "score", "total"] {
+        assert!(text.contains(stage), "missing '{stage}' in:\n{text}");
+    }
+}
+
+#[test]
+fn compile_emit_diag_exposes_the_structured_failure() {
+    let out =
+        bin().args(["compile", "mask_cumsum", "--emit=diag,timings"]).output().expect("run compile");
+    assert_eq!(out.status.code(), Some(1));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("bool"), "{text}");
+    // structured rendering: "[stage code] message"; failure.stage names
+    // the failing stage (matching stage_timings), the code keeps the
+    // validator provenance
+    assert!(text.contains("[transpile A40"), "{text}");
+    assert!(text.contains("failure: "), "{text}");
+}
+
+#[test]
+fn compile_rejects_unknown_emit_kind_and_missing_task() {
+    let out = bin().args(["compile", "relu", "--emit=hlo"]).output().expect("run compile");
+    assert_eq!(out.status.code(), Some(2));
+    let out = bin().args(["compile", "--emit=dsl"]).output().expect("run compile");
+    assert_eq!(out.status.code(), Some(2));
+    let out = bin().args(["compile", "not_a_task"]).output().expect("run compile");
+    assert_eq!(out.status.code(), Some(2));
+}
+
+#[test]
+fn suite_tasks_subset_with_min_pass_gate() {
+    let out = bin()
+        .args(["suite", "--quiet", "--tasks", "relu,gelu", "--min-pass", "2"])
+        .output()
+        .expect("run suite");
+    assert!(
+        out.status.success(),
+        "{}\n{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("min-pass check: 2 >= 2"), "{text}");
+
+    // an unreachable floor fails the run
+    let out = bin()
+        .args(["suite", "--quiet", "--tasks", "relu", "--min-pass", "5"])
+        .output()
+        .expect("run suite");
+    assert_eq!(out.status.code(), Some(1));
+
+    // unknown task names fail loudly instead of shrinking the run
+    let out = bin().args(["suite", "--quiet", "--tasks", "bogus"]).output().expect("run suite");
+    assert_eq!(out.status.code(), Some(2));
+}
+
+#[test]
+fn suite_failure_table_names_stage_and_code() {
+    let out = bin()
+        .args(["suite", "--quiet", "--tasks", "relu,mask_cumsum"])
+        .output()
+        .expect("run suite");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("Failures (1 tasks)"), "{text}");
+    assert!(text.contains("mask_cumsum"), "{text}");
+    assert!(text.contains("transpile"), "{text}");
+}

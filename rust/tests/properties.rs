@@ -59,7 +59,7 @@ fn prop_random_elementwise_kernels_verify_end_to_end() {
             art.result.correct,
             "expr {expr:?} failed: {:?}\nDSL:\n{}",
             art.result.failure,
-            art.dsl_source.unwrap_or_default()
+            art.session.dsl_source.unwrap_or_default()
         );
     });
 }
