@@ -23,11 +23,12 @@ bench: build
 
 # Release-mode end-to-end smoke over a small task subset with the golden
 # cross-check folded in: exercises the staged pipeline, the suite runner,
-# and the L2<->L3 oracle path beyond what unit tests cover. --min-pass
-# asserts a nonzero Pass@1 floor so a silently-broken pipeline cannot
-# look green.
+# and the L2<->L3 oracle path beyond what unit tests cover. --backend all
+# shards the tasks across every registered backend (ascend-sim + cpu-ref)
+# in one worker pool; --min-pass asserts the Pass@1 floor PER BACKEND so
+# a silently-broken pipeline — or a diverging backend — cannot look green.
 smoke: build
-	./target/release/ascendcraft suite --quiet --golden \
+	./target/release/ascendcraft suite --quiet --golden --backend all \
 		--tasks relu,gelu,softmax,mse_loss,adam --min-pass 5
 
 # Build the API docs with warnings denied (same gate as CI): broken

@@ -7,6 +7,7 @@
 //!
 //! Run: `cargo bench --bench hotpath`
 
+use ascendcraft::backend::{Backend as _, BackendRegistry};
 use ascendcraft::bench_suite::tasks::task_by_name;
 use ascendcraft::coordinator::pipeline::{run_task, PipelineConfig};
 use ascendcraft::coordinator::service::{run_suite, SuiteConfig};
@@ -169,6 +170,41 @@ fn main() {
             }
         }
         println!("{row}");
+    }
+    println!();
+
+    // 2c. backend group: per-task execute time of the SAME compiled
+    // kernel on every registered backend — the timing simulator
+    // (ascend-sim) vs the functional-only triage path (cpu-ref)
+    println!("backend execute (compiled kernel reused, fresh inputs per iter):");
+    let registry = BackendRegistry::builtin();
+    for name in ["relu", "softmax", "adam"] {
+        let task = task_by_name(name).unwrap();
+        let cfg = PipelineConfig::default();
+        let art = run_task(&task, &cfg);
+        assert!(art.result.correct, "{name}: {:?}", art.result.failure);
+        let kernel = art.session.kernel.clone().expect("compile stage produced a kernel");
+        // rebuild the simulate-stage inputs: task tensors + generator scratch
+        let synth = KnowledgeBaseSynthesizer::default();
+        let gen = synth.generate(&task).unwrap();
+        let mut inputs = task.make_inputs(cfg.seed);
+        for (sname, shape) in &gen.scratch {
+            inputs.insert(sname.clone(), ascendcraft::util::tensor::Tensor::zeros(shape));
+        }
+        let mut secs = Vec::new();
+        for backend in registry.all() {
+            let s = time(&format!("backend[{name}]: execute on {}", backend.name()), 5, || {
+                backend.execute(&kernel, inputs.clone(), cfg.cores).expect("execute succeeds")
+            });
+            secs.push(s);
+        }
+        if let [sim_secs, cpu_secs] = secs[..] {
+            println!(
+                "{:<46} {:>9.2}x",
+                "  -> cpu-ref speedup vs ascend-sim",
+                sim_secs / cpu_secs
+            );
+        }
     }
     println!();
 

@@ -1,0 +1,41 @@
+//! The default backend: the Ascend NPU functional + timing simulator.
+//!
+//! `compile` is the AscendC structural validator (the Comp@1 gate) and
+//! `execute` is `crate::sim::exec::simulate_owned` — exactly the calls the
+//! pre-registry `CompileStage`/`SimulateStage` made inline, so results are
+//! bit-identical to the unparameterized pipeline (enforced by
+//! `tests/backend_api.rs`).
+
+use super::{
+    compile_with_validator, Backend, CompileReport, CompiledKernel, ExecOutput, BACKEND_ASCEND_SIM,
+};
+use crate::ascendc::AscProgram;
+use crate::coordinator::stage::{Diagnostic, Session};
+use crate::sim;
+use crate::util::tensor::Tensor;
+use std::collections::HashMap;
+
+/// NPU simulator backend (`"ascend-sim"`): functional execution with the
+/// per-unit timing model, producing Fastₓ cycles.
+pub struct AscendSimBackend;
+
+impl Backend for AscendSimBackend {
+    fn name(&self) -> &'static str {
+        BACKEND_ASCEND_SIM
+    }
+
+    fn compile(&self, session: &Session, program: AscProgram) -> CompileReport {
+        compile_with_validator(BACKEND_ASCEND_SIM, session, program)
+    }
+
+    fn execute(
+        &self,
+        kernel: &CompiledKernel,
+        inputs: HashMap<String, Tensor>,
+        cores: usize,
+    ) -> Result<ExecOutput, Diagnostic> {
+        sim::exec::simulate_owned(&kernel.program, inputs, cores)
+            .map(|o| ExecOutput { tensors: o.tensors, cycles: Some(o.timing.total_cycles) })
+            .map_err(Diagnostic::from)
+    }
+}

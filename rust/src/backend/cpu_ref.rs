@@ -1,0 +1,634 @@
+//! The CPU-reference backend: functional execution of the transpiled
+//! AscendC program directly on the shared op-kernel layer
+//! (`crate::util::kernels`), with **no timing model** — no per-unit
+//! timelines, no queue-slot clocks, no cycle accounting.
+//!
+//! This is the fast Pass@1 triage path: it answers "does the generated
+//! kernel compute the right numbers" without paying for the NPU
+//! simulation that prices it. Correctness verdicts agree with
+//! [`super::AscendSimBackend`] by construction — the compile gate is the
+//! same validator, the host evaluation is shared
+//! ([`crate::sim::host::eval_host`]), scalar semantics come from the same
+//! [`crate::sim::exec::eval_kernel_scalar`], and the data loops are the
+//! same `util::kernels` the simulator runs — and the differential test in
+//! `tests/backend_api.rs` enforces it over the whole default suite.
+//!
+//! Because there is no timing model, [`ExecOutput::cycles`] is `None`:
+//! cpu-ref tasks have no Fastₓ speedup (functional triage only).
+
+use super::{
+    compile_with_validator, Backend, CompileReport, CompiledKernel, ExecOutput, BACKEND_CPU_REF,
+};
+use crate::ascendc::ir::*;
+use crate::coordinator::stage::{Diagnostic, Session};
+use crate::sim::exec::{eval_kernel_scalar, vec_bin_op, vec_scalar_op, vec_un_op, STEP_LIMIT};
+use crate::sim::host::eval_host;
+use crate::sim::SimError;
+use crate::util::kernels::{self, BinOp};
+use crate::util::tensor::{f16_round_trip, DType, Tensor};
+use std::collections::{HashMap, VecDeque};
+
+/// Functional-only backend (`"cpu-ref"`): executes kernels on the host
+/// with the shared op-kernel loops, skipping the NPU timing simulation.
+pub struct CpuRefBackend;
+
+impl Backend for CpuRefBackend {
+    fn name(&self) -> &'static str {
+        BACKEND_CPU_REF
+    }
+
+    fn compile(&self, session: &Session, program: AscProgram) -> CompileReport {
+        // same compile gate as ascend-sim: what "compiles" is a property
+        // of the AscendC program, not of the execution target
+        compile_with_validator(BACKEND_CPU_REF, session, program)
+    }
+
+    fn execute(
+        &self,
+        kernel: &CompiledKernel,
+        inputs: HashMap<String, Tensor>,
+        _cores: usize,
+    ) -> Result<ExecOutput, Diagnostic> {
+        execute_functional(&kernel.program, inputs)
+            .map(|tensors| ExecOutput { tensors, cycles: None })
+            .map_err(Diagnostic::from)
+    }
+}
+
+/// Execute a whole AscendC program functionally (host eval → launches →
+/// blocks) over concrete host tensors. Errors use the same [`SimError`]
+/// families as the simulator so diagnostic codes (`S101`–`S104`) agree
+/// across backends.
+pub fn execute_functional(
+    program: &AscProgram,
+    inputs: HashMap<String, Tensor>,
+) -> Result<HashMap<String, Tensor>, SimError> {
+    let mut gm = inputs;
+    let host_eval = eval_host(&program.host, &gm)?;
+    for (kernel_name, block_dim, args) in &host_eval.launches {
+        let kernel = program
+            .kernel(kernel_name)
+            .ok_or_else(|| SimError::Host(format!("launch of unknown kernel '{kernel_name}'")))?;
+        if kernel.globals.len() != args.len() {
+            return Err(SimError::Host(format!(
+                "kernel '{kernel_name}' binds {} globals, launch passes {}",
+                kernel.globals.len(),
+                args.len()
+            )));
+        }
+        for block in 0..*block_dim {
+            let mut interp = FuncInterp::new(kernel, &host_eval.tiling, args, &mut gm, block)?;
+            for stmt in &kernel.init_body {
+                interp.exec(stmt)?;
+            }
+            for stmt in &kernel.process_body {
+                interp.exec(stmt)?;
+            }
+        }
+    }
+    Ok(gm)
+}
+
+/// On-chip buffer, functional view only (no readiness clocks).
+struct FuncBuf {
+    data: Vec<f32>,
+    dtype: DType,
+}
+
+/// What a tensor name resolves to.
+enum Resolved {
+    Local(usize),
+    Global(String),
+}
+
+#[derive(Clone, Copy)]
+enum ScratchSel {
+    A,
+    B,
+}
+
+/// Per-block functional interpreter. Mirrors the simulator's
+/// `sim::exec::Interp` statement by statement, minus every timing
+/// concern: queues are plain FIFOs, `SyncAll` is a no-op, and `DataCopy`
+/// is just a copy. The step limit uses the simulator's accounting so
+/// runaway-kernel verdicts agree across backends.
+struct FuncInterp<'a> {
+    kernel: &'a AscKernel,
+    bufs: Vec<FuncBuf>,
+    /// local-tensor variable bindings -> slab index
+    vars: HashMap<String, usize>,
+    scalars: HashMap<String, f64>,
+    queues: HashMap<String, VecDeque<usize>>,
+    tbuf_idx: HashMap<String, usize>,
+    gm: &'a mut HashMap<String, Tensor>,
+    /// global member name -> host tensor key
+    gm_bind: HashMap<String, String>,
+    steps: u64,
+    scratch_a: Vec<f32>,
+    scratch_b: Vec<f32>,
+    scratch_c: Vec<f32>,
+    /// freed tile buffers, pooled by capacity (same allocation-avoidance
+    /// trick as the simulator's §Perf P1)
+    free_bufs: Vec<Vec<f32>>,
+}
+
+impl<'a> FuncInterp<'a> {
+    fn new(
+        kernel: &'a AscKernel,
+        tiling: &HashMap<String, i64>,
+        args: &[String],
+        gm: &'a mut HashMap<String, Tensor>,
+        block: usize,
+    ) -> Result<FuncInterp<'a>, SimError> {
+        let mut scalars: HashMap<String, f64> = HashMap::new();
+        for field in &kernel.tiling_fields {
+            let v = tiling.get(field).ok_or_else(|| {
+                SimError::Kernel(format!("tiling field '{field}' not computed by host"))
+            })?;
+            scalars.insert(field.clone(), *v as f64);
+        }
+        scalars.insert("__block_idx".into(), block as f64);
+
+        let mut gm_bind = HashMap::new();
+        for g in &kernel.globals {
+            let arg = args.get(g.arg_index).ok_or_else(|| {
+                SimError::Kernel(format!(
+                    "global '{}' binds arg {} but launch has {} args",
+                    g.name,
+                    g.arg_index,
+                    args.len()
+                ))
+            })?;
+            gm_bind.insert(g.name.clone(), arg.clone());
+        }
+
+        let mut bufs = Vec::new();
+        let mut tbuf_idx = HashMap::new();
+        for t in &kernel.tbufs {
+            bufs.push(FuncBuf { data: vec![0.0; t.capacity], dtype: t.dtype });
+            tbuf_idx.insert(t.name.clone(), bufs.len() - 1);
+        }
+
+        let queues = kernel.queues.iter().map(|q| (q.name.clone(), VecDeque::new())).collect();
+
+        Ok(FuncInterp {
+            kernel,
+            bufs,
+            vars: HashMap::new(),
+            scalars,
+            queues,
+            tbuf_idx,
+            gm,
+            gm_bind,
+            steps: 0,
+            scratch_a: Vec::new(),
+            scratch_b: Vec::new(),
+            scratch_c: Vec::new(),
+            free_bufs: Vec::new(),
+        })
+    }
+
+    fn step(&mut self, n: u64) -> Result<(), SimError> {
+        self.steps += n;
+        if self.steps > STEP_LIMIT {
+            return Err(SimError::StepLimit);
+        }
+        Ok(())
+    }
+
+    fn kerr(&self, msg: String) -> SimError {
+        SimError::Kernel(format!("[{}] {msg}", self.kernel.name))
+    }
+
+    fn eval(&self, e: &CExpr) -> Result<f64, SimError> {
+        eval_kernel_scalar(&self.scalars, e).map_err(|m| self.kerr(m))
+    }
+
+    fn eval_usize(&self, e: &CExpr, what: &str) -> Result<usize, SimError> {
+        let v = self.eval(e)?;
+        if v < 0.0 || !v.is_finite() {
+            return Err(self.kerr(format!("{what} evaluated to invalid value {v}")));
+        }
+        Ok(v as usize)
+    }
+
+    fn resolve(&self, name: &str) -> Result<Resolved, SimError> {
+        if let Some(&idx) = self.vars.get(name) {
+            return Ok(Resolved::Local(idx));
+        }
+        if let Some(&idx) = self.tbuf_idx.get(name) {
+            return Ok(Resolved::Local(idx));
+        }
+        if let Some(host_key) = self.gm_bind.get(name) {
+            return Ok(Resolved::Global(host_key.clone()));
+        }
+        Err(self.kerr(format!("tensor '{name}' is not bound")))
+    }
+
+    /// Read `count` elements at `r` into the selected scratch buffer.
+    fn read_into(&mut self, r: &TensorRef, count: usize, which: ScratchSel) -> Result<(), SimError> {
+        let off = self.eval_usize(&r.offset, "offset")?;
+        let slice: &[f32] = match self.resolve(&r.name)? {
+            Resolved::Local(idx) => {
+                let buf = &self.bufs[idx];
+                if off + count > buf.data.len() {
+                    return Err(SimError::Oob(format!(
+                        "read of {count} @ {off} from local '{}' (capacity {})",
+                        r.name,
+                        buf.data.len()
+                    )));
+                }
+                &buf.data[off..off + count]
+            }
+            Resolved::Global(key) => {
+                let t = &self.gm[&key];
+                if off + count > t.data.len() {
+                    return Err(SimError::Oob(format!(
+                        "read of {count} @ {off} from global '{}' (size {})",
+                        r.name,
+                        t.data.len()
+                    )));
+                }
+                &t.data[off..off + count]
+            }
+        };
+        match which {
+            ScratchSel::A => {
+                self.scratch_a.clear();
+                self.scratch_a.extend_from_slice(slice);
+            }
+            ScratchSel::B => {
+                self.scratch_b.clear();
+                self.scratch_b.extend_from_slice(slice);
+            }
+        }
+        Ok(())
+    }
+
+    /// Write `values` to `r` (local or global), quantizing through f16
+    /// when the destination buffer is half precision — identical numeric
+    /// effect to the simulator's writes.
+    fn write_from(&mut self, r: &TensorRef, values: &[f32]) -> Result<(), SimError> {
+        let off = self.eval_usize(&r.offset, "offset")?;
+        match self.resolve(&r.name)? {
+            Resolved::Local(idx) => {
+                let buf = &mut self.bufs[idx];
+                if off + values.len() > buf.data.len() {
+                    return Err(SimError::Oob(format!(
+                        "write of {} @ {off} into local '{}' (capacity {})",
+                        values.len(),
+                        r.name,
+                        buf.data.len()
+                    )));
+                }
+                if buf.dtype == DType::F16 {
+                    for (d, &v) in buf.data[off..off + values.len()].iter_mut().zip(values) {
+                        *d = f16_round_trip(v);
+                    }
+                } else {
+                    buf.data[off..off + values.len()].copy_from_slice(values);
+                }
+            }
+            Resolved::Global(key) => {
+                let t = self.gm.get_mut(&key).unwrap();
+                if off + values.len() > t.data.len() {
+                    return Err(SimError::Oob(format!(
+                        "write of {} @ {off} into global '{}' (size {})",
+                        values.len(),
+                        r.name,
+                        t.data.len()
+                    )));
+                }
+                if t.dtype == DType::F16 {
+                    for (d, &v) in t.data[off..off + values.len()].iter_mut().zip(values) {
+                        *d = f16_round_trip(v);
+                    }
+                } else {
+                    t.data[off..off + values.len()].copy_from_slice(values);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn exec(&mut self, stmt: &CStmt) -> Result<(), SimError> {
+        self.step(1)?;
+        match stmt {
+            CStmt::Comment(_) => {}
+            CStmt::DeclAssign { name, value } | CStmt::Assign { name, value } => {
+                let v = self.eval(value)?;
+                self.scalars.insert(name.clone(), v);
+            }
+            CStmt::AllocTensor { queue, var } => {
+                let qdecl = self
+                    .kernel
+                    .queue(queue)
+                    .ok_or_else(|| self.kerr(format!("AllocTensor on unknown queue '{queue}'")))?;
+                let (capacity, dtype) = (qdecl.capacity, qdecl.dtype);
+                let data = match self.free_bufs.iter().position(|b| b.len() == capacity) {
+                    Some(i) => self.free_bufs.swap_remove(i),
+                    None => vec![0.0; capacity],
+                };
+                self.bufs.push(FuncBuf { data, dtype });
+                self.vars.insert(var.clone(), self.bufs.len() - 1);
+            }
+            CStmt::EnQue { queue, var } => {
+                let idx = *self
+                    .vars
+                    .get(var)
+                    .ok_or_else(|| self.kerr(format!("EnQue of unbound tensor '{var}'")))?;
+                self.vars.remove(var);
+                let q = self
+                    .queues
+                    .get_mut(queue)
+                    .ok_or_else(|| SimError::Kernel(format!("EnQue on unknown queue '{queue}'")))?;
+                q.push_back(idx);
+            }
+            CStmt::DeQue { queue, var } => {
+                let q = self
+                    .queues
+                    .get_mut(queue)
+                    .ok_or_else(|| SimError::Kernel(format!("DeQue on unknown queue '{queue}'")))?;
+                let idx = q.pop_front().ok_or_else(|| {
+                    SimError::Kernel(format!(
+                        "[{}] DeQue on empty queue '{queue}' (pipeline deadlock)",
+                        self.kernel.name
+                    ))
+                })?;
+                self.vars.insert(var.clone(), idx);
+            }
+            CStmt::FreeTensor { queue, var } => {
+                let idx = *self
+                    .vars
+                    .get(var)
+                    .ok_or_else(|| self.kerr(format!("FreeTensor of unbound tensor '{var}'")))?;
+                self.vars.remove(var);
+                if !self.queues.contains_key(queue) {
+                    return Err(SimError::Kernel(format!(
+                        "FreeTensor on unknown queue '{queue}'"
+                    )));
+                }
+                let data = std::mem::take(&mut self.bufs[idx].data);
+                if self.free_bufs.len() < 64 {
+                    self.free_bufs.push(data);
+                }
+            }
+            CStmt::GetTBuf { tbuf, var } => {
+                let idx = *self
+                    .tbuf_idx
+                    .get(tbuf)
+                    .ok_or_else(|| self.kerr(format!("Get on unknown TBuf '{tbuf}'")))?;
+                self.vars.insert(var.clone(), idx);
+            }
+            CStmt::DataCopy { dst, src, count } | CStmt::DataCopyPad { dst, src, count } => {
+                let n = self.eval_usize(count, "DataCopy count")?;
+                self.step((n / 64 + 1) as u64)?;
+                self.read_into(src, n, ScratchSel::A)?;
+                let out = std::mem::take(&mut self.scratch_a);
+                self.write_from(dst, &out)?;
+                self.scratch_a = out;
+            }
+            CStmt::VecBin { op, dst, a, b, count } => {
+                let n = self.eval_usize(count, "count")?;
+                self.step((n / 64 + 1) as u64)?;
+                self.read_into(a, n, ScratchSel::A)?;
+                self.read_into(b, n, ScratchSel::B)?;
+                let mut out = std::mem::take(&mut self.scratch_a);
+                kernels::binary_inplace(&mut out, &self.scratch_b, vec_bin_op(op));
+                self.write_from(dst, &out)?;
+                self.scratch_a = out;
+            }
+            CStmt::VecScalar { op, dst, src, scalar, count } => {
+                let n = self.eval_usize(count, "count")?;
+                self.step((n / 64 + 1) as u64)?;
+                let s = self.eval(scalar)? as f32;
+                self.read_into(src, n, ScratchSel::A)?;
+                let mut out = std::mem::take(&mut self.scratch_a);
+                kernels::scalar_rhs_inplace(&mut out, s, vec_scalar_op(op));
+                self.write_from(dst, &out)?;
+                self.scratch_a = out;
+            }
+            CStmt::VecUn { op, dst, src, count } => {
+                let n = self.eval_usize(count, "count")?;
+                self.step((n / 64 + 1) as u64)?;
+                self.read_into(src, n, ScratchSel::A)?;
+                let mut out = std::mem::take(&mut self.scratch_a);
+                if let Some(k) = vec_un_op(op) {
+                    kernels::unary_inplace(&mut out, k);
+                }
+                self.write_from(dst, &out)?;
+                self.scratch_a = out;
+            }
+            CStmt::Duplicate { dst, value, count } => {
+                let n = self.eval_usize(count, "count")?;
+                self.step((n / 64 + 1) as u64)?;
+                let v = self.eval(value)? as f32;
+                let mut out = std::mem::take(&mut self.scratch_a);
+                out.clear();
+                out.resize(n, v);
+                self.write_from(dst, &out)?;
+                self.scratch_a = out;
+            }
+            CStmt::Reduce { kind, dst, src, count } => {
+                let n = self.eval_usize(count, "count")?;
+                self.step((n / 64 + 1) as u64)?;
+                self.read_into(src, n, ScratchSel::A)?;
+                if n == 0 {
+                    return Err(self.kerr("Reduce over zero elements".into()));
+                }
+                let result = match kind {
+                    ReduceKind::Sum => kernels::fold_f32(&self.scratch_a, 0.0, BinOp::Add),
+                    ReduceKind::Max => {
+                        kernels::fold_f32(&self.scratch_a, f32::NEG_INFINITY, BinOp::Max)
+                    }
+                    ReduceKind::Min => {
+                        kernels::fold_f32(&self.scratch_a, f32::INFINITY, BinOp::Min)
+                    }
+                };
+                self.write_from(dst, &[result])?;
+            }
+            CStmt::Scan { kind, dst, src, count, reverse } => {
+                let n = self.eval_usize(count, "count")?;
+                self.step(n as u64)?;
+                self.read_into(src, n, ScratchSel::A)?;
+                let mut out = std::mem::take(&mut self.scratch_a);
+                let apply = |acc: f32, x: f32| match kind {
+                    ScanKind::Sum => acc + x,
+                    ScanKind::Prod => acc * x,
+                };
+                let mut acc = match kind {
+                    ScanKind::Sum => 0.0,
+                    ScanKind::Prod => 1.0,
+                };
+                if *reverse {
+                    for i in (0..n).rev() {
+                        acc = apply(acc, out[i]);
+                        out[i] = acc;
+                    }
+                } else {
+                    for x in out.iter_mut() {
+                        acc = apply(acc, *x);
+                        *x = acc;
+                    }
+                }
+                self.write_from(dst, &out)?;
+                self.scratch_a = out;
+            }
+            CStmt::SelectGe { dst, cond, a, b, count } => {
+                let n = self.eval_usize(count, "count")?;
+                self.step((n / 64 + 1) as u64)?;
+                self.read_into(cond, n, ScratchSel::A)?;
+                std::mem::swap(&mut self.scratch_a, &mut self.scratch_c);
+                let cvals = std::mem::take(&mut self.scratch_c);
+                self.read_into(a, n, ScratchSel::A)?;
+                self.read_into(b, n, ScratchSel::B)?;
+                let mut out = std::mem::take(&mut self.scratch_a);
+                kernels::select_if_negative(&mut out[..n], &cvals[..n], &self.scratch_b[..n]);
+                self.write_from(dst, &out)?;
+                self.scratch_a = out;
+                self.scratch_c = cvals;
+            }
+            CStmt::Mmad { c, a, b, m, k, n } => {
+                let (m, k, n) = (
+                    self.eval_usize(m, "m")?,
+                    self.eval_usize(k, "k")?,
+                    self.eval_usize(n, "n")?,
+                );
+                self.step((m * k * n / 64 + 1) as u64)?;
+                self.read_into(a, m * k, ScratchSel::A)?;
+                std::mem::swap(&mut self.scratch_a, &mut self.scratch_c);
+                let avals = std::mem::take(&mut self.scratch_c);
+                self.read_into(b, k * n, ScratchSel::B)?;
+                self.read_into(c, m * n, ScratchSel::A)?;
+                let mut out = std::mem::take(&mut self.scratch_a);
+                kernels::matmul_acc(&mut out[..m * n], &avals[..m * k], &self.scratch_b[..k * n], m, k, n);
+                self.write_from(c, &out)?;
+                self.scratch_a = out;
+                self.scratch_c = avals;
+            }
+            CStmt::SetValue { tensor, index, value } => {
+                let idx = self.eval_usize(index, "index")?;
+                let v = self.eval(value)? as f32;
+                let base = self.eval_usize(&tensor.offset, "offset")?;
+                match self.resolve(&tensor.name)? {
+                    Resolved::Local(i) => {
+                        let buf = &mut self.bufs[i];
+                        let pos = base + idx;
+                        if pos >= buf.data.len() {
+                            return Err(SimError::Oob(format!(
+                                "SetValue at {pos} in local '{}' (capacity {})",
+                                tensor.name,
+                                buf.data.len()
+                            )));
+                        }
+                        buf.data[pos] =
+                            if buf.dtype == DType::F16 { f16_round_trip(v) } else { v };
+                    }
+                    Resolved::Global(_) => {
+                        return Err(self.kerr(format!(
+                            "SetValue on GlobalTensor '{}' (scalar GM writes unsupported)",
+                            tensor.name
+                        )));
+                    }
+                }
+            }
+            CStmt::GetValue { var, tensor, index } => {
+                let idx = self.eval_usize(index, "index")?;
+                let base = self.eval_usize(&tensor.offset, "offset")?;
+                let v = match self.resolve(&tensor.name)? {
+                    Resolved::Local(i) => {
+                        let buf = &self.bufs[i];
+                        let pos = base + idx;
+                        if pos >= buf.data.len() {
+                            return Err(SimError::Oob(format!(
+                                "GetValue at {pos} in local '{}' (capacity {})",
+                                tensor.name,
+                                buf.data.len()
+                            )));
+                        }
+                        buf.data[pos]
+                    }
+                    Resolved::Global(_) => {
+                        return Err(self.kerr(format!(
+                            "GetValue on GlobalTensor '{}' (stage data must come through queues)",
+                            tensor.name
+                        )));
+                    }
+                };
+                self.scalars.insert(var.clone(), v as f64);
+            }
+            CStmt::Cast { dst, src, to, count } => {
+                let n = self.eval_usize(count, "count")?;
+                self.step((n / 64 + 1) as u64)?;
+                self.read_into(src, n, ScratchSel::A)?;
+                let mut out = std::mem::take(&mut self.scratch_a);
+                match to {
+                    DType::F16 => out.iter_mut().for_each(|x| *x = f16_round_trip(*x)),
+                    DType::I32 => out.iter_mut().for_each(|x| *x = x.trunc()),
+                    DType::I8 => out.iter_mut().for_each(|x| *x = x.trunc().clamp(-128.0, 127.0)),
+                    _ => {}
+                }
+                self.write_from(dst, &out)?;
+                self.scratch_a = out;
+            }
+            CStmt::For { var, start, end, step, body } => {
+                let s = self.eval(start)?;
+                let e = self.eval(end)?;
+                let st = self.eval(step)?;
+                if st <= 0.0 {
+                    return Err(self.kerr(format!("for-loop step {st} must be positive")));
+                }
+                let mut i = s;
+                while i < e {
+                    self.scalars.insert(var.clone(), i);
+                    for b in body {
+                        self.exec(b)?;
+                    }
+                    i += st;
+                }
+            }
+            CStmt::While { cond, body } => {
+                let mut guard = 0u64;
+                while self.eval(cond)? != 0.0 {
+                    for b in body {
+                        self.exec(b)?;
+                    }
+                    guard += 1;
+                    if guard > 10_000_000 {
+                        return Err(SimError::StepLimit);
+                    }
+                }
+            }
+            CStmt::If { cond, then, orelse } => {
+                let c = self.eval(cond)?;
+                let branch = if c != 0.0 { then } else { orelse };
+                for s in branch {
+                    self.exec(s)?;
+                }
+            }
+            CStmt::CallStage { name, args } => {
+                let stage = self
+                    .kernel
+                    .stage(name)
+                    .ok_or_else(|| self.kerr(format!("call to unknown stage '{name}'")))?;
+                if stage.params.len() != args.len() {
+                    return Err(self.kerr(format!(
+                        "stage '{name}' arity mismatch: {} params, {} args",
+                        stage.params.len(),
+                        args.len()
+                    )));
+                }
+                for (p, a) in stage.params.iter().zip(args) {
+                    let v = self.eval(a)?;
+                    self.scalars.insert(p.clone(), v);
+                }
+                for s in &stage.body {
+                    self.exec(s)?;
+                }
+            }
+            // cross-core barrier: purely a timing construct
+            CStmt::SyncAll => {}
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,277 @@
+//! Pluggable execution backends: the compile/simulate surface of the
+//! pipeline as a first-class API.
+//!
+//! The paper's pipeline ends in backend-specific lowering and execution
+//! (an Ascend 910B testbed there; the NPU simulator here). This module
+//! makes that seam explicit: a [`Backend`] owns the *compile gate*
+//! (structural validation of the transpiled program), *execution* of the
+//! compiled kernel over concrete host tensors, and the *baseline cost
+//! hook* the Fastₓ ratio divides by. The staged pipeline
+//! (`crate::coordinator::stage`) is parameterized by `Arc<dyn Backend>`
+//! — `CompileStage`/`SimulateStage` never call `ascendc::validate` or
+//! `sim::exec` directly — so new targets slot in as alternative
+//! compile/simulate implementations without touching the stage driver.
+//!
+//! Two backends ship built in:
+//!
+//! * [`AscendSimBackend`] (`"ascend-sim"`, the default) — the NPU
+//!   functional + timing simulator. Results are bit-identical to the
+//!   pre-registry pipeline.
+//! * [`CpuRefBackend`] (`"cpu-ref"`) — executes the transpiled program
+//!   functionally on the shared op-kernel layer (`crate::util::kernels`)
+//!   with no timing model: fast Pass@1 triage, no Fastₓ cycles.
+//!
+//! [`BackendRegistry`] provides name-based lookup for the CLI
+//! (`suite --backend ascend-sim|cpu-ref|all`, `compile --backend …`) and
+//! an embedding point for custom backends.
+
+pub mod ascend_sim;
+pub mod cpu_ref;
+
+pub use ascend_sim::AscendSimBackend;
+pub use cpu_ref::CpuRefBackend;
+
+use crate::ascendc::validate::{validate, ValidateEnv};
+use crate::ascendc::AscProgram;
+use crate::baselines::eager::eager_cycles_with_cores;
+use crate::bench_suite::spec::TaskSpec;
+use crate::coordinator::stage::{Diagnostic, Session};
+use crate::util::tensor::Tensor;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Canonical name of the default (NPU simulator) backend.
+pub const BACKEND_ASCEND_SIM: &str = "ascend-sim";
+/// Canonical name of the CPU-reference (functional-only) backend.
+pub const BACKEND_CPU_REF: &str = "cpu-ref";
+
+/// A backend-compiled kernel: the program that passed the backend's
+/// compile gate, plus the concrete tiling it was validated against and
+/// the name of the backend that produced it.
+#[derive(Clone, Debug)]
+pub struct CompiledKernel {
+    /// Name of the backend that compiled it (a `BACKEND_*` constant for
+    /// the built-ins).
+    pub backend: &'static str,
+    /// The validated AscendC program.
+    pub program: AscProgram,
+    /// Concrete tiling values the compile gate validated against.
+    pub tiling: HashMap<String, i64>,
+}
+
+/// Everything a backend's compile gate produces: the compiled kernel (the
+/// kernel is produced even when compilation failed, so artifact dumps can
+/// still print the rejected program), every diagnostic in validator order
+/// (warnings included), and the first error if any.
+#[derive(Clone, Debug)]
+pub struct CompileReport {
+    pub kernel: CompiledKernel,
+    /// All diagnostics, converted to the structured pipeline form.
+    pub diagnostics: Vec<Diagnostic>,
+    /// First error-severity diagnostic — `Some` means compilation failed.
+    pub error: Option<Diagnostic>,
+}
+
+impl CompileReport {
+    /// Did the program pass the compile gate?
+    pub fn ok(&self) -> bool {
+        self.error.is_none()
+    }
+}
+
+/// Result of executing a compiled kernel on a backend.
+#[derive(Clone, Debug)]
+pub struct ExecOutput {
+    /// All host tensors after execution (outputs written in place).
+    pub tensors: HashMap<String, Tensor>,
+    /// Modeled device cycles, when the backend has a timing model
+    /// (`None` for functional-only backends; the task then has no Fastₓ
+    /// speedup, matching "incorrect kernels are never fast").
+    pub cycles: Option<f64>,
+}
+
+/// An execution backend: the compile gate + kernel execution + baseline
+/// cost model behind the pipeline's `CompileStage`/`SimulateStage`.
+///
+/// Implementations must be `Send + Sync`: one backend instance is shared
+/// by every worker of a suite run via `Arc<dyn Backend>`.
+pub trait Backend: Send + Sync {
+    /// Stable backend name (`suite --backend <name>` selects by it).
+    fn name(&self) -> &'static str;
+
+    /// The compile gate: validate `program` against the session's
+    /// concrete tiling. Takes the program by value (the stage moves it
+    /// out of the session) and returns it inside the [`CompiledKernel`].
+    fn compile(&self, session: &Session, program: AscProgram) -> CompileReport;
+
+    /// Execute a compiled kernel over owned host tensors with the
+    /// configured core count. Functional failures come back as structured
+    /// [`Diagnostic`]s (the simulate stage's `S…` code family).
+    fn execute(
+        &self,
+        kernel: &CompiledKernel,
+        inputs: HashMap<String, Tensor>,
+        cores: usize,
+    ) -> Result<ExecOutput, Diagnostic>;
+
+    /// Baseline cost of the task's eager reference decomposition, in the
+    /// backend's cycle units — the denominator of the Fastₓ ratio. The
+    /// default is the shared PyTorch-eager-on-NPU cost model, so
+    /// cross-backend Fastₓ numbers compare like with like.
+    fn eager_cycles(&self, task: &TaskSpec, cores: usize) -> f64 {
+        eager_cycles_with_cores(task, cores)
+    }
+}
+
+/// The default backend (what `PipelineConfig::default()` uses):
+/// [`AscendSimBackend`].
+pub fn default_backend() -> Arc<dyn Backend> {
+    Arc::new(AscendSimBackend)
+}
+
+/// Shared compile-gate implementation for backends that target the
+/// AscendC structural validator (both built-ins do — they differ in
+/// *execution*, not in what "compiles"). Reuses the transpile stage's
+/// validation result when the session already carries one for this exact
+/// program + tiling, so the happy path pays for validation once.
+pub fn compile_with_validator(
+    backend: &'static str,
+    session: &Session,
+    program: AscProgram,
+) -> CompileReport {
+    let raw = if session.transpiled {
+        session.compile_diags.clone()
+    } else {
+        validate(&program, &ValidateEnv::new(session.tiling.clone()))
+    };
+    let mut diagnostics = Vec::with_capacity(raw.len());
+    let mut error = None;
+    for d in raw {
+        let is_error = d.is_error();
+        let converted = Diagnostic::from(d);
+        if is_error && error.is_none() {
+            error = Some(converted.clone());
+        }
+        diagnostics.push(converted);
+    }
+    CompileReport {
+        kernel: CompiledKernel { backend, program, tiling: session.tiling.clone() },
+        diagnostics,
+        error,
+    }
+}
+
+/// Name-based backend lookup. The `Default` instance (same as
+/// [`BackendRegistry::builtin`]) holds the two built-in backends;
+/// [`BackendRegistry::register`] adds (or replaces, by name) custom ones.
+#[derive(Clone)]
+pub struct BackendRegistry {
+    entries: Vec<Arc<dyn Backend>>,
+}
+
+impl BackendRegistry {
+    /// Registry with the built-in backends, in presentation order
+    /// (`ascend-sim` first — it is the default).
+    pub fn builtin() -> BackendRegistry {
+        let mut reg = BackendRegistry::empty();
+        reg.register(Arc::new(AscendSimBackend));
+        reg.register(Arc::new(CpuRefBackend));
+        reg
+    }
+
+    /// An empty registry (for embedders that only want custom backends).
+    pub fn empty() -> BackendRegistry {
+        BackendRegistry { entries: Vec::new() }
+    }
+
+    /// Register a backend; an existing entry with the same name is
+    /// replaced (latest registration wins), preserving its position.
+    pub fn register(&mut self, backend: Arc<dyn Backend>) {
+        match self.entries.iter().position(|b| b.name() == backend.name()) {
+            Some(i) => self.entries[i] = backend,
+            None => self.entries.push(backend),
+        }
+    }
+
+    /// Look up a backend by name.
+    pub fn get(&self, name: &str) -> Option<Arc<dyn Backend>> {
+        self.entries.iter().find(|b| b.name() == name).cloned()
+    }
+
+    /// Registered backend names, in registration order.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.entries.iter().map(|b| b.name()).collect()
+    }
+
+    /// All registered backends, in registration order.
+    pub fn all(&self) -> Vec<Arc<dyn Backend>> {
+        self.entries.clone()
+    }
+}
+
+impl Default for BackendRegistry {
+    fn default() -> BackendRegistry {
+        BackendRegistry::builtin()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_registry_lists_both_backends_in_order() {
+        let reg = BackendRegistry::builtin();
+        assert_eq!(reg.names(), [BACKEND_ASCEND_SIM, BACKEND_CPU_REF]);
+        assert!(reg.get("ascend-sim").is_some());
+        assert!(reg.get("cpu-ref").is_some());
+        assert!(reg.get("tpu").is_none());
+        assert_eq!(reg.all().len(), 2);
+    }
+
+    #[test]
+    fn register_replaces_by_name_in_place() {
+        struct Fake;
+        impl Backend for Fake {
+            fn name(&self) -> &'static str {
+                BACKEND_CPU_REF
+            }
+            fn compile(&self, session: &Session, program: AscProgram) -> CompileReport {
+                compile_with_validator(self.name(), session, program)
+            }
+            fn execute(
+                &self,
+                _kernel: &CompiledKernel,
+                inputs: HashMap<String, Tensor>,
+                _cores: usize,
+            ) -> Result<ExecOutput, Diagnostic> {
+                Ok(ExecOutput { tensors: inputs, cycles: Some(1.0) })
+            }
+        }
+        let mut reg = BackendRegistry::builtin();
+        reg.register(Arc::new(Fake));
+        // still two entries, same order, latest registration won
+        assert_eq!(reg.names(), [BACKEND_ASCEND_SIM, BACKEND_CPU_REF]);
+        let fake = reg.get(BACKEND_CPU_REF).unwrap();
+        let kernel = CompiledKernel {
+            backend: BACKEND_CPU_REF,
+            program: AscProgram {
+                host: crate::ascendc::ir::AscHost {
+                    name: "h".into(),
+                    params: vec![],
+                    tiling_assigns: vec![],
+                    launches: vec![],
+                },
+                kernels: vec![],
+            },
+            tiling: HashMap::new(),
+        };
+        let out = fake.execute(&kernel, HashMap::new(), 1).unwrap();
+        assert_eq!(out.cycles, Some(1.0));
+    }
+
+    #[test]
+    fn default_backend_is_ascend_sim() {
+        assert_eq!(default_backend().name(), BACKEND_ASCEND_SIM);
+    }
+}

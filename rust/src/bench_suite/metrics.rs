@@ -29,6 +29,9 @@ pub struct GoldenStatus {
 pub struct TaskResult {
     pub name: String,
     pub category: Category,
+    /// Name of the execution backend that produced this result (the
+    /// default suite runs on `"ascend-sim"`).
+    pub backend: String,
     pub compiled: bool,
     pub correct: bool,
     /// Simulated cycles of the generated kernel (if it ran).
@@ -71,6 +74,7 @@ impl TaskResult {
         let mut j = Json::obj();
         j.set("name", self.name.as_str())
             .set("category", self.category.name())
+            .set("backend", self.backend.as_str())
             .set("compiled", self.compiled)
             .set("correct", self.correct)
             .set("eager_cycles", self.eager_cycles)
@@ -255,8 +259,19 @@ impl SuiteResult {
         s
     }
 
-    /// Render Table 2 (performance by category) as aligned text.
+    /// Render Table 2 (performance by category) as aligned text. A run
+    /// on a timing-less backend (no result carries cycles, e.g. cpu-ref)
+    /// has no Fastₓ story at all: its cells render as `-` rather than a
+    /// 0.0 that reads as "measured and never fast".
     pub fn render_table2(&self) -> String {
+        let timed = self.results.iter().any(|r| r.generated_cycles.is_some());
+        let fast = |pct: f64| {
+            if timed {
+                format!("{pct:>10.1}")
+            } else {
+                format!("{:>10}", "-")
+            }
+        };
         let mut s = String::new();
         s.push_str("Table 2. Performance vs PyTorch-eager baseline by category.\n");
         s.push_str(&format!(
@@ -265,20 +280,20 @@ impl SuiteResult {
         ));
         for row in self.by_category() {
             s.push_str(&format!(
-                "{:<28} {:>10.1} {:>10.1} {:>10.1}\n",
+                "{:<28} {} {} {}\n",
                 row.category,
-                row.metrics.fast02_pct(),
-                row.metrics.fast08_pct(),
-                row.metrics.fast10_pct()
+                fast(row.metrics.fast02_pct()),
+                fast(row.metrics.fast08_pct()),
+                fast(row.metrics.fast10_pct())
             ));
         }
         let t = self.totals();
         s.push_str(&format!(
-            "{:<28} {:>10.1} {:>10.1} {:>10.1}\n",
+            "{:<28} {} {} {}\n",
             "Total",
-            t.fast02_pct(),
-            t.fast08_pct(),
-            t.fast10_pct()
+            fast(t.fast02_pct()),
+            fast(t.fast08_pct()),
+            fast(t.fast10_pct())
         ));
         s
     }
@@ -310,6 +325,7 @@ mod tests {
         TaskResult {
             name: "t".into(),
             category: cat,
+            backend: "ascend-sim".into(),
             compiled,
             correct,
             generated_cycles: gen,
@@ -351,6 +367,7 @@ mod tests {
         assert!(text.contains("\"code\":\"A402\""), "{text}");
         assert!(text.contains("\"stage_timings\""), "{text}");
         assert!(text.contains("\"outcome\":\"failed\""), "{text}");
+        assert!(text.contains("\"backend\":\"ascend-sim\""), "{text}");
     }
 
     #[test]

@@ -10,7 +10,9 @@
 //! * [`service`] — a std-thread worker pool that runs many tasks
 //!   concurrently (the deployment shape: a codegen service consuming kernel
 //!   requests and emitting verified AscendC), plus suite runners for the
-//!   benchmark tables.
+//!   benchmark tables. [`service::run_suite_multi`] shards one task list
+//!   across several execution backends (`crate::backend`) in the same
+//!   pool and reports a cross-backend comparison.
 //!
 //! Python never appears on this path; the JAX golden oracle in `runtime`
 //! (HLO text executed by the built-in interpreter) is a cross-check
@@ -21,5 +23,5 @@ pub mod service;
 pub mod stage;
 
 pub use pipeline::{run_task, PipelineConfig, PipelineMode};
-pub use service::{run_suite, SuiteConfig};
+pub use service::{run_suite, run_suite_multi, MultiSuiteResult, SuiteConfig};
 pub use stage::{Diagnostic, Session, Stage, StageOutcome, StageReport};

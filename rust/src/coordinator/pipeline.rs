@@ -17,9 +17,12 @@
 
 use super::stage::{stage_list, Session, Stage, StageOutcome, StageReport};
 use crate::ascendc::AscProgram;
+use crate::backend::{default_backend, Backend};
 use crate::bench_suite::metrics::TaskResult;
 use crate::bench_suite::spec::TaskSpec;
 use crate::transpile::TranspileOptions;
+use std::fmt;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Which generation path to run.
@@ -34,7 +37,7 @@ pub enum PipelineMode {
 }
 
 /// Pipeline configuration (ablation knobs included).
-#[derive(Clone, Debug)]
+#[derive(Clone)]
 pub struct PipelineConfig {
     pub mode: PipelineMode,
     pub options: TranspileOptions,
@@ -45,6 +48,10 @@ pub struct PipelineConfig {
     /// Simulated core count (drives both the generated kernel's timing and
     /// the eager baseline, so Fastₓ compares like with like).
     pub cores: usize,
+    /// Execution backend the compile/simulate stages target (default:
+    /// the NPU simulator, `crate::backend::AscendSimBackend`). Shared —
+    /// suite workers clone the config, not the backend.
+    pub backend: Arc<dyn Backend>,
 }
 
 impl Default for PipelineConfig {
@@ -55,7 +62,22 @@ impl Default for PipelineConfig {
             max_repair_rounds: 4,
             seed: 0xA5CE_17D0,
             cores: crate::sim::cost::NUM_CORES,
+            backend: default_backend(),
         }
+    }
+}
+
+impl fmt::Debug for PipelineConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // manual impl: `dyn Backend` is not Debug; its name is what matters
+        f.debug_struct("PipelineConfig")
+            .field("mode", &self.mode)
+            .field("options", &self.options)
+            .field("max_repair_rounds", &self.max_repair_rounds)
+            .field("seed", &self.seed)
+            .field("cores", &self.cores)
+            .field("backend", &self.backend.name())
+            .finish()
     }
 }
 
@@ -74,9 +96,11 @@ impl PipelineArtifacts {
         self.session.dsl_source.as_deref()
     }
 
-    /// Final AscendC program, if one was produced.
+    /// Final AscendC program, if one was produced. After the compile
+    /// stage the program lives inside the backend-compiled kernel; before
+    /// it (or when compile never ran) it is still on the session.
     pub fn program(&self) -> Option<&AscProgram> {
-        self.session.program.as_ref()
+        self.session.kernel.as_ref().map(|k| &k.program).or(self.session.program.as_ref())
     }
 }
 
@@ -137,7 +161,7 @@ mod tests {
         let art = run("mse_loss");
         assert!(art.result.correct, "{:?}", art.result.failure);
         // two kernels: partial + combine
-        assert_eq!(art.session.program.unwrap().kernels.len(), 2);
+        assert_eq!(art.program().unwrap().kernels.len(), 2);
     }
 
     #[test]
@@ -190,6 +214,6 @@ mod tests {
         assert_eq!(last.outcome, StageOutcome::Failed);
         // nothing after the failing stage ran
         assert_eq!(art.result.stage_timings.len(), 3);
-        assert!(art.session.sim.is_none());
+        assert!(art.session.exec.is_none());
     }
 }

@@ -5,10 +5,12 @@
 //! the offline crate set; generation jobs are CPU-bound anyway).
 
 use super::pipeline::{run_task, PipelineArtifacts, PipelineConfig};
+use crate::backend::Backend;
 use crate::bench_suite::metrics::{GoldenStatus, SuiteResult};
 use crate::bench_suite::spec::TaskSpec;
 use crate::runtime::OracleRegistry;
 use crate::util::compare::allclose_report;
+use crate::util::json::Json;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
@@ -51,9 +53,83 @@ pub fn run_suite(tasks: &[TaskSpec], cfg: &SuiteConfig) -> SuiteResult {
     SuiteResult { results: artifacts.into_iter().map(|a| a.result).collect() }
 }
 
+/// One worker-pool job: a task, the pipeline configuration to run it
+/// under (multi-backend runs clone the config per backend), and whether
+/// this job carries the golden cross-check (backend-independent, so
+/// multi-backend runs attach it to one backend's jobs only).
+struct Job<'a> {
+    task: &'a TaskSpec,
+    pipeline: PipelineConfig,
+    golden: bool,
+}
+
 /// Like [`run_suite`] but keeps the generated DSL/AscendC artifacts.
 pub fn run_suite_artifacts(tasks: &[TaskSpec], cfg: &SuiteConfig) -> Vec<PipelineArtifacts> {
-    let n = tasks.len();
+    let jobs: Vec<Job> = tasks
+        .iter()
+        .map(|task| Job { task, pipeline: cfg.pipeline.clone(), golden: true })
+        .collect();
+    run_jobs(&jobs, cfg, false)
+}
+
+/// Run one task list on several backends, sharded across **one** worker
+/// pool: the job list is every (backend, task) pair, and idle workers
+/// steal whichever job is next regardless of backend, so a slow backend
+/// cannot serialize the run. Results come back grouped per backend, in
+/// backend order, with task order preserved inside each group.
+pub fn run_suite_multi(
+    tasks: &[TaskSpec],
+    cfg: &SuiteConfig,
+    backends: &[Arc<dyn Backend>],
+) -> MultiSuiteResult {
+    let mut jobs: Vec<Job> = Vec::with_capacity(tasks.len() * backends.len());
+    for (bi, backend) in backends.iter().enumerate() {
+        for task in tasks {
+            let mut pipeline = cfg.pipeline.clone();
+            pipeline.backend = Arc::clone(backend);
+            // the L2↔L3 golden cross-check is backend-independent (it
+            // compares the oracle against the Rust reference, not against
+            // a backend), so only the first backend's jobs pay for it;
+            // the verdicts are copied to the other backends below
+            jobs.push(Job { task, pipeline, golden: bi == 0 });
+        }
+    }
+    let arts = run_jobs(&jobs, cfg, true);
+    let mut per_backend: Vec<(String, SuiteResult)> = backends
+        .iter()
+        .enumerate()
+        .map(|(bi, backend)| {
+            let results = arts[bi * tasks.len()..(bi + 1) * tasks.len()]
+                .iter()
+                .map(|a| a.result.clone())
+                .collect();
+            (backend.name().to_string(), SuiteResult { results })
+        })
+        .collect();
+    if cfg.golden.is_some() && per_backend.len() > 1 {
+        let first: Vec<(Option<GoldenStatus>, Vec<GoldenStatus>)> = per_backend[0]
+            .1
+            .results
+            .iter()
+            .map(|r| (r.golden.clone(), r.golden_seeds.clone()))
+            .collect();
+        for (_, suite) in per_backend.iter_mut().skip(1) {
+            for (r, (g, gs)) in suite.results.iter_mut().zip(&first) {
+                r.golden = g.clone();
+                r.golden_seeds = gs.clone();
+            }
+        }
+    }
+    MultiSuiteResult { per_backend }
+}
+
+/// The worker pool proper: drain an explicit (task, pipeline-config) job
+/// list. Single-backend suite runs and multi-backend sharded runs are the
+/// same pool with different job lists. `tag_backend` adds the backend
+/// name to verbose progress lines (off for single-backend runs, whose
+/// output stays byte-identical to the pre-registry suite).
+fn run_jobs(jobs: &[Job], cfg: &SuiteConfig, tag_backend: bool) -> Vec<PipelineArtifacts> {
+    let n = jobs.len();
     let next = Arc::new(Mutex::new(0usize));
     let (tx, rx) = mpsc::channel::<(usize, PipelineArtifacts)>();
 
@@ -61,7 +137,6 @@ pub fn run_suite_artifacts(tasks: &[TaskSpec], cfg: &SuiteConfig) -> Vec<Pipelin
         for _ in 0..cfg.workers.max(1).min(n.max(1)) {
             let next = Arc::clone(&next);
             let tx = tx.clone();
-            let pipeline = cfg.pipeline.clone();
             let verbose = cfg.verbose;
             let golden = cfg.golden.clone();
             let golden_seeds = cfg.golden_seeds;
@@ -75,17 +150,22 @@ pub fn run_suite_artifacts(tasks: &[TaskSpec], cfg: &SuiteConfig) -> Vec<Pipelin
                     *guard += 1;
                     i
                 };
-                let mut art = run_task(&tasks[idx], &pipeline);
-                if let Some(reg) = &golden {
-                    // the L2↔L3 cross-check shards across the same worker
-                    // pool as the pipeline runs (the compiled, Send + Sync
-                    // oracle is shared by all workers); all seeds of the
-                    // task run through one batched oracle execution
-                    let seeds: Vec<u64> =
-                        (0..golden_seeds.max(1) as u64).map(|k| pipeline.seed + k).collect();
-                    let per_seed = cross_check_task_seeds(&tasks[idx], reg, &seeds);
-                    art.result.golden = Some(summarize_golden(&per_seed));
-                    art.result.golden_seeds = per_seed;
+                let job = &jobs[idx];
+                let mut art = run_task(job.task, &job.pipeline);
+                if job.golden {
+                    if let Some(reg) = &golden {
+                        // the L2↔L3 cross-check shards across the same
+                        // worker pool as the pipeline runs (the compiled,
+                        // Send + Sync oracle is shared by all workers);
+                        // all seeds of the task run through one batched
+                        // oracle execution
+                        let seeds: Vec<u64> = (0..golden_seeds.max(1) as u64)
+                            .map(|k| job.pipeline.seed + k)
+                            .collect();
+                        let per_seed = cross_check_task_seeds(job.task, reg, &seeds);
+                        art.result.golden = Some(summarize_golden(&per_seed));
+                        art.result.golden_seeds = per_seed;
+                    }
                 }
                 if verbose {
                     let r = &art.result;
@@ -107,8 +187,10 @@ pub fn run_suite_artifacts(tasks: &[TaskSpec], cfg: &SuiteConfig) -> Vec<Pipelin
                         .as_ref()
                         .map(|d| format!("  [{} {}]", d.stage, d.code))
                         .unwrap_or_default();
+                    let backend_note =
+                        if tag_backend { format!("  @{}", r.backend) } else { String::new() };
                     eprintln!(
-                        "[{:>2}/{n}] {:<18} {status}  ({} repairs, {:.2}s){golden_note}{fail_note}",
+                        "[{:>2}/{n}] {:<18} {status}  ({} repairs, {:.2}s){golden_note}{fail_note}{backend_note}",
                         idx + 1,
                         r.name,
                         r.repair_rounds,
@@ -125,6 +207,140 @@ pub fn run_suite_artifacts(tasks: &[TaskSpec], cfg: &SuiteConfig) -> Vec<Pipelin
         }
         out.into_iter().map(|a| a.expect("worker dropped a task")).collect()
     })
+}
+
+/// Verdict agreement between two backends over the same task list.
+#[derive(Clone, Debug)]
+pub struct BackendAgreement {
+    /// Tasks compared.
+    pub total: usize,
+    /// Tasks where both backends reached the same `correct` verdict.
+    pub agree: usize,
+    /// Tasks where verdicts differ: (task name, first backend's verdict,
+    /// second backend's verdict).
+    pub disagreements: Vec<(String, bool, bool)>,
+}
+
+/// Results of one task list sharded across several backends (see
+/// [`run_suite_multi`]): per-backend [`SuiteResult`]s plus the
+/// cross-backend comparison.
+#[derive(Clone, Debug)]
+pub struct MultiSuiteResult {
+    /// One `(backend name, suite result)` per backend, in backend order;
+    /// task order inside each suite matches the input task list.
+    pub per_backend: Vec<(String, SuiteResult)>,
+}
+
+impl MultiSuiteResult {
+    /// The suite result for one backend, by name.
+    pub fn get(&self, backend: &str) -> Option<&SuiteResult> {
+        self.per_backend.iter().find(|(name, _)| name == backend).map(|(_, suite)| suite)
+    }
+
+    /// Verdict agreement between two backends (by name). `None` when
+    /// either backend is absent.
+    pub fn agreement(&self, a: &str, b: &str) -> Option<BackendAgreement> {
+        let (ra, rb) = (self.get(a)?, self.get(b)?);
+        let mut agreement = BackendAgreement {
+            total: ra.results.len().min(rb.results.len()),
+            agree: 0,
+            disagreements: Vec::new(),
+        };
+        for (x, y) in ra.results.iter().zip(&rb.results) {
+            if x.correct == y.correct {
+                agreement.agree += 1;
+            } else {
+                agreement.disagreements.push((x.name.clone(), x.correct, y.correct));
+            }
+        }
+        Some(agreement)
+    }
+
+    /// Render the cross-backend comparison table: per-backend Comp@1 /
+    /// Pass@1 / Fastₓ rates and pairwise verdict agreement (the
+    /// sim-vs-cpu-ref consistency check).
+    pub fn render_comparison(&self) -> String {
+        let tasks = self.per_backend.first().map(|(_, r)| r.results.len()).unwrap_or(0);
+        let mut s = String::new();
+        s.push_str(&format!(
+            "Cross-backend comparison ({} backends, {tasks} tasks each).\n",
+            self.per_backend.len()
+        ));
+        s.push_str(&format!(
+            "{:<14} {:>8} {:>8} {:>10} {:>10} {:>10}\n",
+            "Backend", "Comp@1", "Pass@1", "Fast0.2@1", "Fast0.8@1", "Fast1.0@1"
+        ));
+        for (name, suite) in &self.per_backend {
+            let t = suite.totals();
+            // a backend without a timing model (every result lacks cycles)
+            // has no Fastₓ story at all — render '-' rather than a 0.0
+            // that reads as "measured and never fast"
+            let timed = suite.results.iter().any(|r| r.generated_cycles.is_some());
+            let fast = |pct: f64| {
+                if timed {
+                    format!("{pct:>10.1}")
+                } else {
+                    format!("{:>10}", "-")
+                }
+            };
+            s.push_str(&format!(
+                "{:<14} {:>8.1} {:>8.1} {} {} {}\n",
+                name,
+                t.comp_pct(),
+                t.pass_pct(),
+                fast(t.fast02_pct()),
+                fast(t.fast08_pct()),
+                fast(t.fast10_pct())
+            ));
+        }
+        for i in 0..self.per_backend.len() {
+            for j in i + 1..self.per_backend.len() {
+                let (a, _) = &self.per_backend[i];
+                let (b, _) = &self.per_backend[j];
+                let ag = self.agreement(a, b).expect("both backends present");
+                s.push_str(&format!(
+                    "agreement {a} vs {b}: {}/{} tasks agree on correctness\n",
+                    ag.agree, ag.total
+                ));
+                for (task, va, vb) in &ag.disagreements {
+                    s.push_str(&format!("  {task:<18} {a}:{va} {b}:{vb}\n"));
+                }
+            }
+        }
+        s
+    }
+
+    /// JSON export: per-backend suite reports plus the pairwise agreement
+    /// summaries.
+    pub fn to_json(&self) -> Json {
+        let mut backends = Json::obj();
+        for (name, suite) in &self.per_backend {
+            backends.set(name, suite.to_json());
+        }
+        let mut agreements = Json::Arr(vec![]);
+        for i in 0..self.per_backend.len() {
+            for j in i + 1..self.per_backend.len() {
+                let (a, _) = &self.per_backend[i];
+                let (b, _) = &self.per_backend[j];
+                let ag = self.agreement(a, b).expect("both backends present");
+                let mut entry = Json::obj();
+                entry
+                    .set("a", a.as_str())
+                    .set("b", b.as_str())
+                    .set("agree", ag.agree)
+                    .set("total", ag.total);
+                let mut dis = Json::Arr(vec![]);
+                for (task, _, _) in &ag.disagreements {
+                    dis.push(task.as_str());
+                }
+                entry.set("disagreements", dis);
+                agreements.push(entry);
+            }
+        }
+        let mut j = Json::obj();
+        j.set("backends", backends).set("agreements", agreements);
+        j
+    }
 }
 
 /// Cross-check every task that has a golden artifact against the Rust
@@ -403,6 +619,57 @@ mod tests {
             assert_eq!(t.name, r.name);
             assert!(r.correct, "{}: {:?}", r.name, r.failure);
         }
+    }
+
+    #[test]
+    fn run_suite_multi_shards_one_pool_across_backends() {
+        use crate::backend::BackendRegistry;
+        let tasks: Vec<_> =
+            ["relu", "softsign"].iter().map(|n| task_by_name(n).unwrap()).collect();
+        let cfg = SuiteConfig { workers: 4, verbose: false, ..Default::default() };
+        let multi = run_suite_multi(&tasks, &cfg, &BackendRegistry::builtin().all());
+        assert_eq!(multi.per_backend.len(), 2);
+        assert_eq!(multi.per_backend[0].0, "ascend-sim");
+        assert_eq!(multi.per_backend[1].0, "cpu-ref");
+        for (backend, suite) in &multi.per_backend {
+            assert_eq!(suite.results.len(), tasks.len(), "{backend}");
+            for (t, r) in tasks.iter().zip(&suite.results) {
+                assert_eq!(t.name, r.name, "{backend}: task order preserved");
+                assert_eq!(&r.backend, backend, "result records its backend");
+                assert!(r.correct, "{backend}/{}: {:?}", r.name, r.failure);
+            }
+        }
+        // the timing model is an ascend-sim concern: cpu-ref has no cycles
+        let sim = multi.get("ascend-sim").unwrap();
+        assert!(sim.results.iter().all(|r| r.generated_cycles.is_some()));
+        let cpu = multi.get("cpu-ref").unwrap();
+        assert!(cpu.results.iter().all(|r| r.generated_cycles.is_none()));
+    }
+
+    #[test]
+    fn multi_suite_comparison_reports_rates_and_agreement() {
+        use crate::backend::BackendRegistry;
+        let tasks: Vec<_> = ["relu", "gelu"].iter().map(|n| task_by_name(n).unwrap()).collect();
+        let cfg = SuiteConfig { workers: 2, verbose: false, ..Default::default() };
+        let multi = run_suite_multi(&tasks, &cfg, &BackendRegistry::builtin().all());
+        let ag = multi.agreement("ascend-sim", "cpu-ref").unwrap();
+        assert_eq!((ag.agree, ag.total), (2, 2));
+        assert!(ag.disagreements.is_empty());
+        let table = multi.render_comparison();
+        assert!(table.contains("ascend-sim"), "{table}");
+        assert!(table.contains("cpu-ref"), "{table}");
+        assert!(table.contains("2/2 tasks agree"), "{table}");
+        // the timing-less backend renders '-' for all three Fastₓ columns
+        // (not a 0.0 that reads as "measured and never fast")
+        let cpu_line = table.lines().find(|l| l.starts_with("cpu-ref")).unwrap();
+        assert_eq!(cpu_line.matches(" -").count(), 3, "{table}");
+        let sim_line = table.lines().find(|l| l.starts_with("ascend-sim")).unwrap();
+        assert_eq!(sim_line.matches(" -").count(), 0, "{table}");
+        let json = multi.to_json().to_string();
+        assert!(json.contains("\"backends\""), "{json}");
+        assert!(json.contains("\"agreements\""), "{json}");
+        // round-trips through the hand-rolled parser
+        assert!(crate::util::json::Json::parse(&json).is_ok());
     }
 
     #[test]

@@ -9,11 +9,17 @@
 //!
 //! Each box is a [`Stage`]: a named unit that reads and writes typed
 //! artifacts on a [`Session`] (DSL source, validated [`DslProgram`],
-//! [`AscProgram`], [`SimOutput`], …). The driver in
+//! [`AscProgram`], [`CompiledKernel`], [`ExecOutput`], …). The driver in
 //! [`super::pipeline::run_task`] walks a stage list selected from the
 //! [`PipelineConfig`] (ablations pick different lists, not different code
 //! paths), records a [`StageReport`] with wall time and outcome per
 //! executed stage, and stops at the first failure.
+//!
+//! The compile and simulate boxes are *backend-mediated*: they call the
+//! configured [`crate::backend::Backend`] (`PipelineConfig::backend`)
+//! instead of reaching into `ascendc::validate`/`sim::exec` directly, so
+//! alternative targets (the CPU-reference backend, future hardware
+//! backends) plug in without touching the stage driver.
 //!
 //! Failures are structured [`Diagnostic`]s — stage name, stable code,
 //! message, optional DSL line — never ad-hoc strings. Every error type in
@@ -24,13 +30,13 @@
 //! [`crate::util::json::Json::parse`]).
 
 use super::pipeline::{PipelineArtifacts, PipelineConfig, PipelineMode};
-use crate::ascendc::validate::{validate, AscDiagnostic, ValidateEnv};
+use crate::ascendc::validate::AscDiagnostic;
 use crate::ascendc::AscProgram;
-use crate::baselines::eager::eager_cycles_with_cores;
+use crate::backend::{Backend as _, CompiledKernel, ExecOutput};
 use crate::bench_suite::metrics::TaskResult;
 use crate::bench_suite::spec::TaskSpec;
 use crate::dsl::{self, DslDiagnostic, DslProgram};
-use crate::sim::{self, SimError, SimOutput};
+use crate::sim::SimError;
 use crate::synth::{self, direct::DirectGenerator, repair, GenError, GenResult, Generator};
 use crate::transpile::{self, TranspileError, TranspileOptions};
 use crate::util::compare::allclose_report;
@@ -215,8 +221,14 @@ pub struct Session {
     /// full validation of `program` (so the compile stage need not pay
     /// for a second one).
     pub transpiled: bool,
-    /// Simulator output (tensors + timing), once simulate ran.
-    pub sim: Option<SimOutput>,
+    /// The backend-compiled kernel, once the compile stage ran. The
+    /// program moves from [`Session::program`] into the kernel at that
+    /// point (artifact dumps read it back via
+    /// `PipelineArtifacts::program`).
+    pub kernel: Option<CompiledKernel>,
+    /// Backend execution output (tensors + optional cycles), once the
+    /// simulate stage ran.
+    pub exec: Option<ExecOutput>,
     /// Task reference outputs, computed just before simulation.
     pub reference: Option<HashMap<String, Tensor>>,
     /// Compile-feedback rounds consumed by the repair combinator.
@@ -244,7 +256,8 @@ impl Session {
             tiling: HashMap::new(),
             compile_diags: Vec::new(),
             transpiled: false,
-            sim: None,
+            kernel: None,
+            exec: None,
             reference: None,
             repair_rounds: 0,
             reports: Vec::new(),
@@ -269,8 +282,9 @@ impl Session {
 
     /// The one `TaskResult` constructor: every path out of the pipeline —
     /// success or any-stage failure — funnels through here, so baselines
-    /// (`eager_cycles_with_cores` with the *configured* core count),
-    /// timings, and diagnostics can never diverge between paths.
+    /// (the configured backend's eager-cost hook with the *configured*
+    /// core count), timings, and diagnostics can never diverge between
+    /// paths.
     pub fn finish(
         mut self,
         task: &TaskSpec,
@@ -285,10 +299,11 @@ impl Session {
         let result = TaskResult {
             name: task.name.to_string(),
             category: task.category,
+            backend: cfg.backend.name().to_string(),
             compiled: self.compiled,
             correct: self.correct && failure.is_none(),
-            generated_cycles: self.sim.as_ref().map(|s| s.timing.total_cycles),
-            eager_cycles: eager_cycles_with_cores(task, cfg.cores),
+            generated_cycles: self.exec.as_ref().and_then(|e| e.cycles),
+            eager_cycles: cfg.backend.eager_cycles(task, cfg.cores),
             failure,
             repair_rounds: self.repair_rounds,
             pipeline_secs: self.started.elapsed().as_secs_f64(),
@@ -484,10 +499,14 @@ impl Stage for RepairLoop {
     }
 }
 
-/// The "compile" gate: AscendC structural validation of the session's
-/// program against the concrete tiling (paper's Comp@1 criterion). After a
-/// clean repair loop this re-confirms zero errors; in direct mode it is
-/// the only compile check. Warnings are recorded as non-fatal diagnostics.
+/// The "compile" gate, delegated to the configured backend: structural
+/// validation of the session's program against the concrete tiling (the
+/// paper's Comp@1 criterion). After a clean repair loop the backend
+/// re-confirms zero errors for free (it reuses the transpile round's
+/// validation); in direct mode it is the only compile check. Warnings are
+/// recorded as non-fatal diagnostics. On success (and on failure — so
+/// artifact dumps can still print the rejected program) the compiled
+/// kernel lands in [`Session::kernel`].
 pub struct CompileStage;
 
 impl Stage for CompileStage {
@@ -495,28 +514,15 @@ impl Stage for CompileStage {
         STAGE_COMPILE
     }
 
-    fn run(&self, _task: &TaskSpec, _cfg: &PipelineConfig, s: &mut Session) -> Result<(), Diagnostic> {
-        if s.program.is_none() {
-            return Err(Diagnostic::internal(STAGE_COMPILE, "no AscendC program in session"));
-        }
-        // the transpile stage already validated this program against the
-        // identical tiling env and left the result in `compile_diags` —
-        // reuse it instead of paying for a second validation. Direct mode
-        // reaches here without a transpile round and validates fresh.
-        if !s.transpiled {
-            let env = ValidateEnv::new(s.tiling.clone());
-            s.compile_diags = validate(s.program.as_ref().unwrap(), &env);
-        }
-        let mut first_error = None;
-        for d in s.compile_diags.clone() {
-            let is_error = d.is_error();
-            let converted = Diagnostic::from(d);
-            if is_error && first_error.is_none() {
-                first_error = Some(converted.clone());
-            }
-            s.diagnostics.push(converted);
-        }
-        match first_error {
+    fn run(&self, _task: &TaskSpec, cfg: &PipelineConfig, s: &mut Session) -> Result<(), Diagnostic> {
+        let program = s
+            .program
+            .take()
+            .ok_or_else(|| Diagnostic::internal(STAGE_COMPILE, "no AscendC program in session"))?;
+        let report = cfg.backend.compile(s, program);
+        s.diagnostics.extend(report.diagnostics);
+        s.kernel = Some(report.kernel);
+        match report.error {
             Some(d) => Err(d),
             None => {
                 s.compiled = true;
@@ -526,9 +532,11 @@ impl Stage for CompileStage {
     }
 }
 
-/// NPU simulation (functional + timing). Computes the task reference first
-/// (it only reads inputs), then moves the input tensors into the simulator
-/// without an extra GM-sized clone (§Perf P5). Writes `sim` + `reference`.
+/// Kernel execution on the configured backend (NPU simulation on the
+/// default `ascend-sim`; functional-only on `cpu-ref`). Computes the task
+/// reference first (it only reads inputs), then moves the input tensors
+/// into the backend without an extra GM-sized clone (§Perf P5). Writes
+/// `exec` + `reference`.
 pub struct SimulateStage;
 
 impl Stage for SimulateStage {
@@ -537,20 +545,20 @@ impl Stage for SimulateStage {
     }
 
     fn run(&self, task: &TaskSpec, cfg: &PipelineConfig, s: &mut Session) -> Result<(), Diagnostic> {
-        let program = s
-            .program
+        let kernel = s
+            .kernel
             .take()
-            .ok_or_else(|| Diagnostic::internal(STAGE_SIMULATE, "no AscendC program in session"))?;
+            .ok_or_else(|| Diagnostic::internal(STAGE_SIMULATE, "no compiled kernel in session"))?;
         s.reference = Some(task.reference(&s.inputs));
         let inputs = std::mem::take(&mut s.inputs);
-        let outcome = sim::simulate_owned(&program, inputs, cfg.cores);
-        s.program = Some(program);
+        let outcome = cfg.backend.execute(&kernel, inputs, cfg.cores);
+        s.kernel = Some(kernel);
         match outcome {
             Ok(o) => {
-                s.sim = Some(o);
+                s.exec = Some(o);
                 Ok(())
             }
-            Err(e) => Err(Diagnostic::from(e)),
+            Err(d) => Err(d),
         }
     }
 }
@@ -566,16 +574,16 @@ impl Stage for ScoreStage {
     }
 
     fn run(&self, task: &TaskSpec, _cfg: &PipelineConfig, s: &mut Session) -> Result<(), Diagnostic> {
-        let sim = s
-            .sim
+        let exec = s
+            .exec
             .as_ref()
-            .ok_or_else(|| Diagnostic::internal(STAGE_SCORE, "no simulator output in session"))?;
+            .ok_or_else(|| Diagnostic::internal(STAGE_SCORE, "no backend output in session"))?;
         let reference = s
             .reference
             .as_ref()
             .ok_or_else(|| Diagnostic::internal(STAGE_SCORE, "no reference outputs in session"))?;
         for (name, want) in reference {
-            let Some(got) = sim.tensors.get(name) else {
+            let Some(got) = exec.tensors.get(name) else {
                 return Err(Diagnostic::new(STAGE_SCORE, "N101", format!("output '{name}' missing")));
             };
             if got.shape != want.shape {
@@ -602,6 +610,7 @@ impl Stage for ScoreStage {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::baselines::eager::eager_cycles_with_cores;
     use crate::bench_suite::tasks::task_by_name;
 
     #[test]
@@ -669,5 +678,7 @@ mod tests {
             art.result.eager_cycles,
             eager_cycles_with_cores(&task, 8)
         );
+        // every result names the backend that produced it
+        assert_eq!(art.result.backend, crate::backend::BACKEND_ASCEND_SIM);
     }
 }

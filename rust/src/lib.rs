@@ -1,5 +1,6 @@
 //! AscendCraft: DSL-guided transcompilation for Ascend NPU kernel generation.
 pub mod ascendc;
+pub mod backend;
 pub mod baselines;
 pub mod bench_suite;
 pub mod coordinator;

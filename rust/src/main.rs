@@ -2,30 +2,33 @@
 //!
 //! ```text
 //! ascendcraft suite [--mode ascendcraft|direct|generic] [--workers N]
+//!                   [--backend ascend-sim|cpu-ref|all]
 //!                   [--tasks A,B,..] [--cores N] [--min-pass N]
 //!                   [--json PATH] [--quiet] [--golden]
 //!                   [--golden-seeds N]                  reproduce Tables 1+2
 //! ascendcraft compile TASK [--emit=dsl|ascendc|diag|timings] [--seed N]
 //!                   [--mode M] [--cores N]          staged pipeline, dump
-//!                                                   any session artifact
+//!                   [--backend NAME]                any session artifact
 //! ascendcraft gen --task NAME [--emit-dsl] [--emit-ascendc] [--emit-prompt]
 //! ascendcraft mhc [--rows N]                         RQ3 case study
 //! ascendcraft oracle [--op NAME] [--workers N]       golden cross-check
-//!                                                    (HLO interpreter)
-//! ascendcraft list                                   list benchmark tasks
+//!                   [--seed N]                       (HLO interpreter)
+//! ascendcraft list [--json]                          list benchmark tasks
 //! ascendcraft prompt CATEGORY                        show a category prompt
 //! ```
 //!
 //! (clap is not in the crate set — the crate has zero external
 //! dependencies by policy; arguments are parsed by hand.)
 
+use ascendcraft::backend::BackendRegistry;
 use ascendcraft::bench_suite::spec::{Category, TaskSpec};
 use ascendcraft::bench_suite::tasks::{all_tasks, task_by_name};
 use ascendcraft::coordinator::pipeline::{run_task, PipelineConfig, PipelineMode};
-use ascendcraft::coordinator::service::{cross_check_suite, run_suite, SuiteConfig};
+use ascendcraft::coordinator::service::{cross_check_suite, run_suite, run_suite_multi, SuiteConfig};
 use ascendcraft::mhc::{self, run_case_study, MhcDims};
 use ascendcraft::runtime::{fixtures, OracleRegistry};
 use ascendcraft::synth::prompt;
+use ascendcraft::util::json::Json;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -35,7 +38,7 @@ fn main() {
         Some("gen") => cmd_gen(&args[1..]),
         Some("mhc") => cmd_mhc(&args[1..]),
         Some("oracle") => cmd_oracle(&args[1..]),
-        Some("list") => cmd_list(),
+        Some("list") => cmd_list(&args[1..]),
         Some("export") => cmd_export(&args[1..]),
         Some("prompt") => cmd_prompt(&args[1..]),
         Some("--help") | Some("-h") | None => {
@@ -56,12 +59,12 @@ fn print_usage() {
         "AscendCraft: DSL-guided AscendC kernel generation (reproduction)\n\
          \n\
          USAGE:\n\
-         \x20 ascendcraft suite [--mode ascendcraft|direct|generic] [--workers N] [--tasks A,B,..] [--cores N] [--min-pass N] [--json PATH] [--quiet] [--golden] [--golden-seeds N]\n\
-         \x20 ascendcraft compile TASK [--emit=dsl|ascendc|diag|timings] [--seed N] [--mode M] [--cores N]\n\
+         \x20 ascendcraft suite [--mode ascendcraft|direct|generic] [--backend ascend-sim|cpu-ref|all] [--workers N] [--tasks A,B,..] [--cores N] [--min-pass N] [--json PATH] [--quiet] [--golden] [--golden-seeds N]\n\
+         \x20 ascendcraft compile TASK [--emit=dsl|ascendc|diag|timings] [--seed N] [--mode M] [--cores N] [--backend NAME]\n\
          \x20 ascendcraft gen --task NAME [--emit-dsl] [--emit-ascendc] [--emit-prompt]\n\
          \x20 ascendcraft mhc [--rows N]\n\
-         \x20 ascendcraft oracle [--op NAME] [--workers N]\n\
-         \x20 ascendcraft list\n\
+         \x20 ascendcraft oracle [--op NAME] [--workers N] [--seed N]\n\
+         \x20 ascendcraft list [--json]\n\
          \x20 ascendcraft export [--out DIR]   write DSL+AscendC for all tasks\n\
          \x20 ascendcraft prompt CATEGORY"
     );
@@ -134,9 +137,45 @@ fn cmd_suite(args: &[String]) -> i32 {
     } else {
         None
     };
+    // --backend selects the execution backend: one by name, or 'all' to
+    // shard every task across every registered backend in one worker pool
+    // (both `--backend NAME` and `--backend=NAME` forms are accepted —
+    // a typo'd backend must fail loudly, never silently run the default)
+    let registry = BackendRegistry::builtin();
+    let mut backend_all = false;
+    let mut backend = None;
+    let backend_sel = if let Some(v) = args.iter().find_map(|a| a.strip_prefix("--backend=")) {
+        Some(Some(v))
+    } else if has_flag(args, "--backend") {
+        Some(flag_value(args, "--backend"))
+    } else {
+        None
+    };
+    if let Some(sel) = backend_sel {
+        match sel {
+            Some("all") => backend_all = true,
+            Some(name) => match registry.get(name) {
+                Some(b) => backend = Some(b),
+                None => {
+                    eprintln!(
+                        "unknown backend '{name}' (available: {}, or 'all')",
+                        registry.names().join(", ")
+                    );
+                    return 2;
+                }
+            },
+            None => {
+                eprintln!("--backend requires a value ({}|all)", registry.names().join("|"));
+                return 2;
+            }
+        }
+    }
     let mut pipeline = PipelineConfig { mode, ..Default::default() };
     if let Some(n) = cores {
         pipeline.cores = n;
+    }
+    if let Some(b) = backend {
+        pipeline.backend = b;
     }
     let mut cfg = SuiteConfig {
         pipeline,
@@ -179,6 +218,9 @@ fn cmd_suite(args: &[String]) -> i32 {
         }
         None => all_tasks(),
     };
+    if backend_all {
+        return suite_all_backends(&tasks, &cfg, &registry, args, golden, min_pass);
+    }
     let suite = run_suite(&tasks, &cfg);
     println!("\n{}", suite.render_table1());
     println!("{}", suite.render_table2());
@@ -222,12 +264,82 @@ fn cmd_suite(args: &[String]) -> i32 {
     0
 }
 
+/// `suite --backend all`: every task on every registered backend, sharded
+/// across one worker pool, with per-backend tables, the cross-backend
+/// comparison, and per-backend `--min-pass` / `--golden` gates.
+fn suite_all_backends(
+    tasks: &[TaskSpec],
+    cfg: &SuiteConfig,
+    registry: &BackendRegistry,
+    args: &[String],
+    golden: bool,
+    min_pass: Option<usize>,
+) -> i32 {
+    let multi = run_suite_multi(tasks, cfg, &registry.all());
+    for (name, suite) in &multi.per_backend {
+        println!("\n=== backend: {name} ===");
+        println!("{}", suite.render_table1());
+        println!("{}", suite.render_table2());
+        let failures = suite.render_failures();
+        if !failures.is_empty() {
+            println!("{failures}");
+        }
+    }
+    println!("{}", multi.render_comparison());
+    if let Some(path) = flag_value(args, "--json") {
+        if let Err(e) = std::fs::write(path, multi.to_json().to_pretty()) {
+            eprintln!("writing {path}: {e}");
+            return 1;
+        }
+        println!("wrote {path}");
+    }
+    let mut code = 0;
+    // the golden cross-check is backend-independent (oracle vs Rust
+    // reference), ran once, and was copied onto every backend's results —
+    // report it once so a mismatch never reads as a per-backend divergence
+    if golden {
+        if let Some((_, suite)) = multi.per_backend.first() {
+            let failed = suite.golden_failures();
+            println!(
+                "golden cross-check: {} artifacts checked, {} failed",
+                suite.golden_checked(),
+                failed.len()
+            );
+            for r in &failed {
+                if let Some(g) = &r.golden {
+                    println!("  {:<18} {}", r.name, g.detail);
+                }
+            }
+            if !failed.is_empty() {
+                code = 1;
+            }
+        }
+    }
+    // the --min-pass floor applies to EVERY backend: a functional-triage
+    // backend silently passing fewer tasks must fail the smoke gate too
+    if let Some(min) = min_pass {
+        for (name, suite) in &multi.per_backend {
+            let correct = suite.totals().correct;
+            if correct < min {
+                eprintln!(
+                    "[{name}] suite passed {correct} tasks, below the --min-pass floor of {min}"
+                );
+                code = 1;
+            } else {
+                println!("min-pass check [{name}]: {correct} >= {min} tasks correct");
+            }
+        }
+    }
+    code
+}
+
 /// Run one task through the staged pipeline and dump any intermediate
 /// session artifact: `--emit=dsl` (generated DSL source), `--emit=ascendc`
 /// (printed AscendC), `--emit=diag` (every structured diagnostic),
 /// `--emit=timings` (per-stage wall time + outcome). These are the same
 /// artifacts a suite run produces for the task at the same seed/config.
 fn cmd_compile(args: &[String]) -> i32 {
+    let registry = BackendRegistry::builtin();
     let mut emits: Vec<String> = Vec::new();
     let mut task_name: Option<&str> = None;
     let mut cfg = PipelineConfig::default();
@@ -269,6 +381,33 @@ fn cmd_compile(args: &[String]) -> i32 {
                 Some(m) => cfg.mode = m,
                 None => {
                     eprintln!("--mode expects ascendcraft|direct|generic");
+                    return 2;
+                }
+            }
+        } else if a == "--backend" {
+            i += 1;
+            let Some(name) = args.get(i) else {
+                eprintln!("--backend requires a value ({})", registry.names().join("|"));
+                return 2;
+            };
+            match registry.get(name) {
+                Some(b) => cfg.backend = b,
+                None => {
+                    eprintln!(
+                        "unknown backend '{name}' (available: {})",
+                        registry.names().join(", ")
+                    );
+                    return 2;
+                }
+            }
+        } else if let Some(name) = a.strip_prefix("--backend=") {
+            match registry.get(name) {
+                Some(b) => cfg.backend = b,
+                None => {
+                    eprintln!(
+                        "unknown backend '{name}' (available: {})",
+                        registry.names().join(", ")
+                    );
                     return 2;
                 }
             }
@@ -433,6 +572,19 @@ fn cmd_mhc(args: &[String]) -> i32 {
 }
 
 fn cmd_oracle(args: &[String]) -> i32 {
+    // --seed drives the cross-check inputs (regression: this used to be
+    // hard-coded to 1234; that value stays the default)
+    let seed: u64 = if has_flag(args, "--seed") {
+        match flag_value(args, "--seed").map(str::parse::<u64>) {
+            Some(Ok(s)) => s,
+            _ => {
+                eprintln!("--seed expects a non-negative integer");
+                return 2;
+            }
+        }
+    } else {
+        1234
+    };
     let reg = OracleRegistry::default_dir();
     let names = match flag_value(args, "--op") {
         Some(op) => vec![op.to_string()],
@@ -455,7 +607,7 @@ fn cmd_oracle(args: &[String]) -> i32 {
 
     // benchmark-task artifacts cross-check in parallel on the worker pool
     let tasks: Vec<TaskSpec> = present.iter().filter_map(|n| task_by_name(n)).collect();
-    for (t, c) in tasks.iter().zip(cross_check_suite(&tasks, &reg, workers, 1234)) {
+    for (t, c) in tasks.iter().zip(cross_check_suite(&tasks, &reg, workers, seed)) {
         if c.ok {
             println!("  {:<18} {}", t.name, c.detail);
         } else {
@@ -469,7 +621,7 @@ fn cmd_oracle(args: &[String]) -> i32 {
     for name in present.iter().filter(|n| task_by_name(n).is_none()) {
         match name.as_str() {
             "mhc_post" | "mhc_post_grad" => {
-                match mhc::golden_cross_check(&reg, name, 1234, 2e-3, 2e-4) {
+                match mhc::golden_cross_check(&reg, name, seed, 2e-3, 2e-4) {
                     Ok(()) => println!("  {name:<18} golden == rust reference"),
                     Err(e) => {
                         println!("  {name:<18} MISMATCH\n    {e}");
@@ -478,7 +630,7 @@ fn cmd_oracle(args: &[String]) -> i32 {
                 }
             }
             n if fixtures::EXTRA_FIXTURES.contains(&n) => {
-                match fixtures::cross_check_fixture(&reg, n, 1234) {
+                match fixtures::cross_check_fixture(&reg, n, seed) {
                     Ok(()) => println!("  {name:<18} golden == rust reference"),
                     Err(e) => {
                         println!("  {name:<18} MISMATCH\n    {e}");
@@ -532,8 +684,25 @@ fn cmd_export(args: &[String]) -> i32 {
     0
 }
 
-fn cmd_list() -> i32 {
+fn cmd_list(args: &[String]) -> i32 {
     let tasks = all_tasks();
+    // --json: machine-readable task enumeration (name, category, input
+    // shapes) so suite tooling never has to parse the text table
+    if has_flag(args, "--json") {
+        let mut arr = Json::Arr(vec![]);
+        for t in &tasks {
+            let mut j = Json::obj();
+            j.set("name", t.name).set("category", t.category.name());
+            let mut shapes = Json::Arr(vec![]);
+            for (_, shape, _) in &t.inputs {
+                shapes.push(Json::Arr(shape.iter().map(|&d| Json::from(d)).collect()));
+            }
+            j.set("shapes", shapes);
+            arr.push(j);
+        }
+        println!("{}", arr.to_pretty());
+        return 0;
+    }
     for c in Category::all() {
         println!("{}:", c.name());
         for t in tasks.iter().filter(|t| t.category == c) {

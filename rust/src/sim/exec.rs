@@ -19,7 +19,7 @@ use crate::util::tensor::{f16_round_trip, DType, Tensor};
 use std::collections::{HashMap, VecDeque};
 use std::fmt;
 
-fn vec_bin_op(op: &VecBinOp) -> BinOp {
+pub(crate) fn vec_bin_op(op: &VecBinOp) -> BinOp {
     match op {
         VecBinOp::Add => BinOp::Add,
         VecBinOp::Sub => BinOp::Sub,
@@ -30,7 +30,7 @@ fn vec_bin_op(op: &VecBinOp) -> BinOp {
     }
 }
 
-fn vec_scalar_op(op: &VecScalarOp) -> BinOp {
+pub(crate) fn vec_scalar_op(op: &VecScalarOp) -> BinOp {
     match op {
         VecScalarOp::Adds => BinOp::Add,
         VecScalarOp::Muls => BinOp::Mul,
@@ -41,7 +41,7 @@ fn vec_scalar_op(op: &VecScalarOp) -> BinOp {
 
 /// AscendC vector unary -> shared kernel op. `Copy` has no kernel (the
 /// staging copy is a no-op on the data).
-fn vec_un_op(op: &VecUnOp) -> Option<UnaryOp> {
+pub(crate) fn vec_un_op(op: &VecUnOp) -> Option<UnaryOp> {
     Some(match op {
         VecUnOp::Exp => UnaryOp::Exp,
         VecUnOp::Ln => UnaryOp::Ln,
@@ -164,6 +164,15 @@ enum Resolved {
     Global(String),
 }
 
+/// Per-block interpreter state (functional + timing).
+///
+/// NOTE: the CPU-reference backend (`crate::backend::cpu_ref::FuncInterp`)
+/// mirrors this interpreter's *functional* semantics statement by
+/// statement (scalar evaluation is already shared via
+/// [`eval_kernel_scalar`]). Any change to the numeric effect of a
+/// statement arm here must be applied there too — the cross-backend
+/// differential test in `tests/backend_api.rs` enforces agreement over
+/// the benchmark suite, but only for program shapes the suite exercises.
 struct Interp<'a> {
     kernel: &'a AscKernel,
     bufs: Vec<LocalBuf>,
@@ -186,7 +195,76 @@ struct Interp<'a> {
 }
 
 /// Hard cap on interpreted operations per block (runaway-loop guard).
-const STEP_LIMIT: u64 = 20_000_000;
+/// Shared with the CPU-reference backend so runaway verdicts agree.
+pub const STEP_LIMIT: u64 = 20_000_000;
+
+/// Evaluate a kernel-side scalar expression over a scalar environment
+/// (tiling fields, loop variables, and the `__block_idx` this-block id).
+/// The one implementation shared by the timing simulator and the
+/// CPU-reference backend (`crate::backend::cpu_ref`), so scalar semantics
+/// cannot diverge between execution backends. Errors are bare messages;
+/// callers add kernel context.
+pub fn eval_kernel_scalar(scalars: &HashMap<String, f64>, e: &CExpr) -> Result<f64, String> {
+    Ok(match e {
+        CExpr::Int(v) => *v as f64,
+        CExpr::Float(v) => *v,
+        CExpr::Var(n) => {
+            *scalars.get(n).ok_or_else(|| format!("scalar '{n}' undefined"))?
+        }
+        CExpr::GetBlockIdx => *scalars
+            .get("__block_idx")
+            .ok_or_else(|| "GetBlockIdx() outside a block".to_string())?,
+        CExpr::ShapeOf(..) => {
+            return Err("ShapeOf is host-only".to_string());
+        }
+        CExpr::Min(a, b) => {
+            eval_kernel_scalar(scalars, a)?.min(eval_kernel_scalar(scalars, b)?)
+        }
+        CExpr::Max(a, b) => {
+            eval_kernel_scalar(scalars, a)?.max(eval_kernel_scalar(scalars, b)?)
+        }
+        CExpr::Un(f, a) => {
+            let x = eval_kernel_scalar(scalars, a)?;
+            match f {
+                CUnFn::Neg => -x,
+                CUnFn::Not => (x == 0.0) as i64 as f64,
+                CUnFn::Exp => x.exp(),
+                CUnFn::Ln => x.ln(),
+                CUnFn::Sqrt => x.sqrt(),
+                CUnFn::Abs => x.abs(),
+            }
+        }
+        CExpr::Bin(op, a, b) => {
+            let (a, b) = (eval_kernel_scalar(scalars, a)?, eval_kernel_scalar(scalars, b)?);
+            match op {
+                CBinOp::Add => a + b,
+                CBinOp::Sub => a - b,
+                CBinOp::Mul => a * b,
+                CBinOp::Div => a / b,
+                CBinOp::FloorDiv => {
+                    if b == 0.0 {
+                        return Err("floor-division by zero".to_string());
+                    }
+                    (a / b).floor()
+                }
+                CBinOp::Mod => {
+                    if b == 0.0 {
+                        return Err("modulo by zero".to_string());
+                    }
+                    a.rem_euclid(b)
+                }
+                CBinOp::Lt => (a < b) as i64 as f64,
+                CBinOp::Le => (a <= b) as i64 as f64,
+                CBinOp::Gt => (a > b) as i64 as f64,
+                CBinOp::Ge => (a >= b) as i64 as f64,
+                CBinOp::Eq => (a == b) as i64 as f64,
+                CBinOp::Ne => (a != b) as i64 as f64,
+                CBinOp::And => ((a != 0.0) && (b != 0.0)) as i64 as f64,
+                CBinOp::Or => ((a != 0.0) || (b != 0.0)) as i64 as f64,
+            }
+        }
+    })
+}
 
 impl<'a> Interp<'a> {
     fn new(
@@ -264,60 +342,7 @@ impl<'a> Interp<'a> {
     // ---- scalar expression evaluation ----
 
     fn eval(&self, e: &CExpr) -> Result<f64, SimError> {
-        Ok(match e {
-            CExpr::Int(v) => *v as f64,
-            CExpr::Float(v) => *v,
-            CExpr::Var(n) => *self
-                .scalars
-                .get(n)
-                .ok_or_else(|| self.kerr(format!("scalar '{n}' undefined")))?,
-            CExpr::GetBlockIdx => self.scalars["__block_idx"],
-            CExpr::ShapeOf(..) => {
-                return Err(self.kerr("ShapeOf is host-only".into()));
-            }
-            CExpr::Min(a, b) => self.eval(a)?.min(self.eval(b)?),
-            CExpr::Max(a, b) => self.eval(a)?.max(self.eval(b)?),
-            CExpr::Un(f, a) => {
-                let x = self.eval(a)?;
-                match f {
-                    CUnFn::Neg => -x,
-                    CUnFn::Not => (x == 0.0) as i64 as f64,
-                    CUnFn::Exp => x.exp(),
-                    CUnFn::Ln => x.ln(),
-                    CUnFn::Sqrt => x.sqrt(),
-                    CUnFn::Abs => x.abs(),
-                }
-            }
-            CExpr::Bin(op, a, b) => {
-                let (a, b) = (self.eval(a)?, self.eval(b)?);
-                match op {
-                    CBinOp::Add => a + b,
-                    CBinOp::Sub => a - b,
-                    CBinOp::Mul => a * b,
-                    CBinOp::Div => a / b,
-                    CBinOp::FloorDiv => {
-                        if b == 0.0 {
-                            return Err(self.kerr("floor-division by zero".into()));
-                        }
-                        (a / b).floor()
-                    }
-                    CBinOp::Mod => {
-                        if b == 0.0 {
-                            return Err(self.kerr("modulo by zero".into()));
-                        }
-                        a.rem_euclid(b)
-                    }
-                    CBinOp::Lt => (a < b) as i64 as f64,
-                    CBinOp::Le => (a <= b) as i64 as f64,
-                    CBinOp::Gt => (a > b) as i64 as f64,
-                    CBinOp::Ge => (a >= b) as i64 as f64,
-                    CBinOp::Eq => (a == b) as i64 as f64,
-                    CBinOp::Ne => (a != b) as i64 as f64,
-                    CBinOp::And => ((a != 0.0) && (b != 0.0)) as i64 as f64,
-                    CBinOp::Or => ((a != 0.0) || (b != 0.0)) as i64 as f64,
-                }
-            }
-        })
+        eval_kernel_scalar(&self.scalars, e).map_err(|m| self.kerr(m))
     }
 
     fn eval_usize(&self, e: &CExpr, what: &str) -> Result<usize, SimError> {

@@ -551,6 +551,103 @@ mod tests {
     }
 
     #[test]
+    fn parse_decodes_every_escape_sequence() {
+        // the two-character escapes, including the rarely-hit \b \f \/
+        assert_eq!(
+            Json::parse(r#""\"\\\/\n\r\t\b\f""#).unwrap(),
+            Json::Str("\"\\/\n\r\t\u{8}\u{c}".into())
+        );
+        // unknown escapes are structured errors, not silent passthrough
+        let err = Json::parse(r#""\x41""#).unwrap_err();
+        assert!(err.contains("bad escape"), "{err}");
+    }
+
+    #[test]
+    fn parse_rejects_malformed_unicode_escapes() {
+        // truncated \uXXXX
+        assert!(Json::parse("\"\\u00\"").is_err());
+        assert!(Json::parse("\"\\u").is_err());
+        // non-hex digits
+        assert!(Json::parse("\"\\uzzzz\"").is_err());
+        // lone high surrogate (no low half follows)
+        assert!(Json::parse("\"\\ud83d\"").is_err());
+        // high surrogate followed by a non-surrogate escape
+        let err = Json::parse("\"\\ud83d\\u0041\"").unwrap_err();
+        assert!(err.contains("surrogate"), "{err}");
+        // unpaired low surrogate maps to no scalar value
+        assert!(Json::parse("\"\\udc00\"").is_err());
+    }
+
+    #[test]
+    fn parse_depth_bound_is_exact() {
+        // exactly MAX_DEPTH nested arrays parse ...
+        let ok = format!("{}1{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        assert!(Json::parse(&ok).is_ok());
+        // ... one more is rejected with a structured error
+        let deep = format!("{}1{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+        let err = Json::parse(&deep).unwrap_err();
+        assert!(err.contains("nesting"), "{err}");
+        // objects count against the same bound
+        let objs = format!("{}1{}", "{\"k\":[".repeat(70), "]}".repeat(70));
+        let err = Json::parse(&objs).unwrap_err();
+        assert!(err.contains("nesting"), "{err}");
+    }
+
+    #[test]
+    fn parse_rejects_trailing_garbage_after_any_value() {
+        for text in ["{} x", "[1]]", "null,", "1 2", "\"a\" \"b\"", "true false"] {
+            let err = Json::parse(text).unwrap_err();
+            assert!(err.contains("trailing"), "{text}: {err}");
+        }
+        // trailing whitespace alone is fine
+        assert!(Json::parse("{}  \n\t ").is_ok());
+    }
+
+    /// Random JSON document (bounded depth; finite numbers only — the
+    /// writer stringifies non-finite values by design, which is lossy).
+    fn random_json(g: &mut crate::util::prop::Gen, depth: usize) -> Json {
+        let pick = if depth == 0 { g.usize_range(0, 4) } else { g.usize_range(0, 6) };
+        match pick {
+            0 => Json::Null,
+            1 => Json::Bool(g.bool()),
+            2 => {
+                if g.bool() {
+                    Json::Num(g.usize_range(0, 1_000_000) as f64)
+                } else {
+                    Json::Num(g.f32_range(-1e6, 1e6) as f64)
+                }
+            }
+            3 => Json::Str(random_string(g)),
+            4 => Json::Arr((0..g.usize_range(0, 4)).map(|_| random_json(g, depth - 1)).collect()),
+            _ => {
+                let mut o = Json::obj();
+                for i in 0..g.usize_range(0, 4) {
+                    o.set(&format!("k{i}_{}", random_string(g)), random_json(g, depth - 1));
+                }
+                o
+            }
+        }
+    }
+
+    fn random_string(g: &mut crate::util::prop::Gen) -> String {
+        // stress escaping: quotes, backslashes, control chars, multibyte
+        const POOL: [char; 12] =
+            ['a', 'Z', '"', '\\', '\n', '\t', '\u{1}', '\u{7f}', 'é', '漢', '\u{1F600}', '/'];
+        (0..g.usize_range(0, 8)).map(|_| POOL[g.usize_range(0, POOL.len())]).collect()
+    }
+
+    #[test]
+    fn property_random_documents_round_trip_through_parse() {
+        crate::util::prop::prop_check("json parse ∘ to_string = identity", 128, |g| {
+            let doc = random_json(g, 4);
+            let compact = doc.to_string();
+            assert_eq!(Json::parse(&compact).unwrap(), doc, "{compact}");
+            let pretty = doc.to_pretty();
+            assert_eq!(Json::parse(&pretty).unwrap(), doc, "{pretty}");
+        });
+    }
+
+    #[test]
     fn writer_output_round_trips() {
         let mut inner = Json::obj();
         inner

@@ -1,0 +1,141 @@
+//! Tests for the pluggable backend API: registry lookup, the bit-identity
+//! guarantee of the default `ascend-sim` backend against the raw
+//! simulator, the cpu-ref/ascend-sim differential over the whole default
+//! suite, and multi-backend suite sharding.
+
+use ascendcraft::backend::{
+    AscendSimBackend, Backend, BackendRegistry, CpuRefBackend, BACKEND_ASCEND_SIM, BACKEND_CPU_REF,
+};
+use ascendcraft::bench_suite::tasks::{all_tasks, task_by_name};
+use ascendcraft::coordinator::pipeline::{run_task, PipelineConfig};
+use ascendcraft::coordinator::service::{run_suite, run_suite_multi, SuiteConfig};
+use ascendcraft::coordinator::stage::{
+    CompileStage, FrontendStage, GenerateStage, RepairLoop, Session, Stage,
+};
+use ascendcraft::sim;
+use ascendcraft::util::json::Json;
+use std::sync::Arc;
+
+/// Drive one task through the stages up to (and including) compile, so
+/// the test owns the compiled kernel AND the exact input tensors the
+/// simulate stage would consume (generator scratch buffers included).
+fn compiled_session(name: &str, cfg: &PipelineConfig) -> Session {
+    let task = task_by_name(name).unwrap();
+    let mut s = Session::new(&task, cfg);
+    GenerateStage.run(&task, cfg, &mut s).unwrap();
+    FrontendStage.run(&task, cfg, &mut s).unwrap();
+    RepairLoop { max_rounds: cfg.max_repair_rounds }.run(&task, cfg, &mut s).unwrap();
+    CompileStage.run(&task, cfg, &mut s).unwrap();
+    s
+}
+
+#[test]
+fn registry_resolves_builtin_backends_by_name() {
+    let reg = BackendRegistry::builtin();
+    assert_eq!(reg.names(), [BACKEND_ASCEND_SIM, BACKEND_CPU_REF]);
+    assert_eq!(reg.get("ascend-sim").unwrap().name(), BACKEND_ASCEND_SIM);
+    assert_eq!(reg.get("cpu-ref").unwrap().name(), BACKEND_CPU_REF);
+    assert!(reg.get("gpu").is_none());
+}
+
+#[test]
+fn default_pipeline_backend_is_ascend_sim() {
+    assert_eq!(PipelineConfig::default().backend.name(), BACKEND_ASCEND_SIM);
+}
+
+#[test]
+fn ascend_sim_backend_is_bit_identical_to_raw_simulator() {
+    let cfg = PipelineConfig::default();
+    for name in ["relu", "softmax", "adam"] {
+        let s = compiled_session(name, &cfg);
+        let kernel = s.kernel.clone().expect("compile stage produced a kernel");
+        let want =
+            sim::exec::simulate_owned(&kernel.program, s.inputs.clone(), cfg.cores).unwrap();
+        let got = AscendSimBackend.execute(&kernel, s.inputs.clone(), cfg.cores).unwrap();
+        assert_eq!(got.cycles, Some(want.timing.total_cycles), "{name}: cycles diverge");
+        assert_eq!(got.tensors.len(), want.tensors.len(), "{name}");
+        for (key, t) in &want.tensors {
+            // bitwise: the backend is the same simulator behind the trait
+            assert_eq!(t.data, got.tensors[key].data, "{name}/{key}: tensors diverge");
+        }
+    }
+}
+
+#[test]
+fn cpu_ref_backend_matches_simulator_numerics_without_cycles() {
+    let cfg = PipelineConfig::default();
+    for name in ["relu", "softmax", "mse_loss"] {
+        let s = compiled_session(name, &cfg);
+        let kernel = s.kernel.clone().unwrap();
+        let want = AscendSimBackend.execute(&kernel, s.inputs.clone(), cfg.cores).unwrap();
+        let got = CpuRefBackend.execute(&kernel, s.inputs.clone(), cfg.cores).unwrap();
+        assert_eq!(got.cycles, None, "{name}: cpu-ref has no timing model");
+        for (key, t) in &want.tensors {
+            // the functional executor runs the same op-kernel loops in the
+            // same order, so outputs agree bit for bit
+            assert_eq!(t.data, got.tensors[key].data, "{name}/{key}: tensors diverge");
+        }
+    }
+}
+
+#[test]
+fn suite_without_backend_flag_matches_explicit_ascend_sim() {
+    // the acceptance regression: a default suite run (no --backend) is the
+    // AscendSimBackend run — identical tables, cycles, and verdicts
+    let tasks: Vec<_> =
+        ["relu", "softmax", "mse_loss"].iter().map(|n| task_by_name(n).unwrap()).collect();
+    let default_run =
+        run_suite(&tasks, &SuiteConfig { workers: 2, verbose: false, ..Default::default() });
+    let mut explicit_cfg = SuiteConfig { workers: 2, verbose: false, ..Default::default() };
+    explicit_cfg.pipeline.backend = Arc::new(AscendSimBackend);
+    let explicit_run = run_suite(&tasks, &explicit_cfg);
+    assert_eq!(default_run.render_table1(), explicit_run.render_table1());
+    assert_eq!(default_run.render_table2(), explicit_run.render_table2());
+    assert_eq!(default_run.render_failures(), explicit_run.render_failures());
+    for (a, b) in default_run.results.iter().zip(&explicit_run.results) {
+        assert_eq!(a.backend, BACKEND_ASCEND_SIM);
+        assert_eq!(a.generated_cycles, b.generated_cycles, "{}", a.name);
+        assert_eq!(a.correct, b.correct, "{}", a.name);
+    }
+}
+
+#[test]
+fn task_result_json_records_the_backend() {
+    let task = task_by_name("relu").unwrap();
+    let mut cfg = PipelineConfig::default();
+    cfg.backend = Arc::new(CpuRefBackend);
+    let art = run_task(&task, &cfg);
+    assert!(art.result.correct, "{:?}", art.result.failure);
+    let parsed = Json::parse(&art.result.to_json().to_string()).unwrap();
+    assert_eq!(parsed.get("backend").and_then(Json::as_str), Some(BACKEND_CPU_REF));
+    // no timing model: cycles and speedup serialize as null
+    assert_eq!(parsed.get("generated_cycles"), Some(&Json::Null));
+    assert_eq!(parsed.get("speedup"), Some(&Json::Null));
+}
+
+#[test]
+fn cpu_ref_agrees_with_ascend_sim_on_every_default_suite_verdict() {
+    // the acceptance differential: correctness verdicts (and compile
+    // verdicts, which share one validator) agree on ALL tasks
+    let tasks = all_tasks();
+    let cfg = SuiteConfig { verbose: false, ..Default::default() };
+    let multi = run_suite_multi(&tasks, &cfg, &BackendRegistry::builtin().all());
+    let sim_suite = multi.get(BACKEND_ASCEND_SIM).unwrap();
+    let cpu_suite = multi.get(BACKEND_CPU_REF).unwrap();
+    assert_eq!(sim_suite.results.len(), tasks.len());
+    assert_eq!(cpu_suite.results.len(), tasks.len());
+    for (a, b) in sim_suite.results.iter().zip(&cpu_suite.results) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.compiled, b.compiled, "{}: compile verdicts differ", a.name);
+        assert_eq!(
+            a.correct, b.correct,
+            "{}: correctness verdicts differ (ascend-sim failure {:?}, cpu-ref failure {:?})",
+            a.name, a.failure, b.failure
+        );
+    }
+    let ag = multi.agreement(BACKEND_ASCEND_SIM, BACKEND_CPU_REF).unwrap();
+    assert_eq!(ag.agree, ag.total, "disagreements: {:?}", ag.disagreements);
+    // the suite is not vacuous: it contains passes AND documented failures
+    let totals = sim_suite.totals();
+    assert!(totals.correct > 0 && totals.correct < totals.total);
+}

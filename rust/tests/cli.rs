@@ -20,6 +20,28 @@ fn list_shows_all_categories_and_52_tasks() {
 }
 
 #[test]
+fn list_json_enumerates_tasks_machine_readably() {
+    let out = bin().args(["list", "--json"]).output().expect("run list --json");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    let parsed = ascendcraft::util::json::Json::parse(&text).expect("valid JSON");
+    let tasks = parsed.as_arr().expect("top-level array");
+    assert_eq!(tasks.len(), 52);
+    for t in tasks {
+        assert!(t.get("name").and_then(|j| j.as_str()).is_some());
+        assert!(t.get("category").and_then(|j| j.as_str()).is_some());
+        let shapes = t.get("shapes").and_then(|j| j.as_arr()).expect("shapes array");
+        assert!(!shapes.is_empty());
+    }
+    // spot-check one known task
+    let relu = tasks
+        .iter()
+        .find(|t| t.get("name").and_then(|j| j.as_str()) == Some("relu"))
+        .expect("relu listed");
+    assert_eq!(relu.get("category").and_then(|j| j.as_str()), Some("Activation"));
+}
+
+#[test]
 fn gen_emits_dsl_and_ascendc_for_relu() {
     let out = bin()
         .args(["gen", "--task", "relu", "--emit-dsl", "--emit-ascendc"])
@@ -187,6 +209,87 @@ fn suite_tasks_subset_with_min_pass_gate() {
 
     // unknown task names fail loudly instead of shrinking the run
     let out = bin().args(["suite", "--quiet", "--tasks", "bogus"]).output().expect("run suite");
+    assert_eq!(out.status.code(), Some(2));
+}
+
+#[test]
+fn suite_backend_all_shards_and_renders_the_comparison() {
+    let out = bin()
+        .args(["suite", "--quiet", "--tasks", "relu,gelu", "--backend", "all", "--min-pass", "2"])
+        .output()
+        .expect("run suite --backend all");
+    assert!(
+        out.status.success(),
+        "{}\n{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("=== backend: ascend-sim ==="), "{text}");
+    assert!(text.contains("=== backend: cpu-ref ==="), "{text}");
+    assert!(text.contains("Cross-backend comparison"), "{text}");
+    assert!(text.contains("2/2 tasks agree"), "{text}");
+    // the min-pass floor is enforced per backend
+    assert!(text.contains("min-pass check [ascend-sim]: 2 >= 2"), "{text}");
+    assert!(text.contains("min-pass check [cpu-ref]: 2 >= 2"), "{text}");
+}
+
+#[test]
+fn suite_single_backend_selection_and_unknown_backend() {
+    let out = bin()
+        .args(["suite", "--quiet", "--tasks", "relu", "--backend", "cpu-ref"])
+        .output()
+        .expect("run suite --backend cpu-ref");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let out = bin()
+        .args(["suite", "--quiet", "--tasks", "relu", "--backend", "tpu"])
+        .output()
+        .expect("run suite");
+    assert_eq!(out.status.code(), Some(2));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown backend"));
+
+    // the --backend=NAME form is accepted too (and typos still fail
+    // loudly instead of silently running the default backend)
+    let out = bin()
+        .args(["suite", "--quiet", "--tasks", "relu", "--backend=cpu-ref"])
+        .output()
+        .expect("run suite");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let out = bin()
+        .args(["suite", "--quiet", "--tasks", "relu", "--backend=tpu"])
+        .output()
+        .expect("run suite");
+    assert_eq!(out.status.code(), Some(2));
+}
+
+#[test]
+fn compile_on_cpu_ref_backend_verifies_without_cycles() {
+    let out = bin()
+        .args(["compile", "relu", "--backend", "cpu-ref"])
+        .output()
+        .expect("run compile --backend cpu-ref");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stdout));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("correct=true"), "{text}");
+    // no timing model -> no speedup figure
+    assert!(text.contains("speedup=-"), "{text}");
+
+    let out = bin()
+        .args(["compile", "relu", "--backend", "bogus"])
+        .output()
+        .expect("run compile");
+    assert_eq!(out.status.code(), Some(2));
+}
+
+#[test]
+fn oracle_accepts_an_explicit_seed() {
+    let out =
+        bin().args(["oracle", "--op", "softmax", "--seed", "7"]).output().expect("run oracle");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stdout));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("golden == rust reference"), "{text}");
+    // a malformed seed fails loudly before any execution
+    let out = bin().args(["oracle", "--seed", "nope"]).output().expect("run oracle");
     assert_eq!(out.status.code(), Some(2));
 }
 

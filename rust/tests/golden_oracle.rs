@@ -158,7 +158,7 @@ fn simulated_kernel_matches_golden_not_just_rust_reference() {
     // re-simulate to get the outputs
     let inputs =
         task.make_inputs(ascendcraft::coordinator::pipeline::PipelineConfig::default().seed);
-    let sim = ascendcraft::sim::simulate(&art.session.program.unwrap(), &inputs).unwrap();
+    let sim = ascendcraft::sim::simulate(art.program().unwrap(), &inputs).unwrap();
     let oracle = reg.get("softmax").unwrap();
     let golden = oracle.run(&[&inputs["x"]]).unwrap();
     let rep = allclose_report(&sim.tensors["y"], &golden[0], 1e-3, 1e-4);

@@ -27,7 +27,7 @@ fn generated_kernels_have_paper_structure() {
     // every generated kernel: stage functions with fixed roles, Process
     // orchestrating, queue traffic balanced (validator-enforced)
     let art = run("sigmoid");
-    let program = art.session.program.unwrap();
+    let program = art.program().unwrap();
     let k = &program.kernels[0];
     assert!(k.stages.len() >= 3);
     let kinds: Vec<_> = k.stages.iter().map(|s| s.kind).collect();
@@ -48,7 +48,7 @@ fn generated_kernels_have_paper_structure() {
 fn scalar_stores_are_padded_by_pass4() {
     // reduce kernels store 1 element per row -> DataCopyPad must appear
     let art = run("sum_dim");
-    let program = art.session.program.unwrap();
+    let program = art.program().unwrap();
     let mut pads = 0;
     for k in &program.kernels {
         k.walk_stmts(|_, s| {
@@ -105,7 +105,7 @@ fn the_four_documented_failures_fail_for_the_documented_reasons() {
 fn multi_kernel_programs_share_scratch_through_gm() {
     let art = run("frobenius_norm");
     assert!(art.result.correct, "{:?}", art.result.failure);
-    let p = art.session.program.unwrap();
+    let p = art.program().unwrap();
     assert_eq!(p.kernels.len(), 2, "partial + combine kernels");
     assert_eq!(p.host.launches.len(), 2);
 }
@@ -158,7 +158,7 @@ fn deterministic_across_runs() {
 fn emitted_ascendc_source_is_printable_for_every_compiling_task() {
     for t in all_tasks() {
         let art = run_task(&t, &PipelineConfig::default());
-        if let Some(p) = &art.session.program {
+        if let Some(p) = art.program() {
             let text = ascendcraft::ascendc::print_ascendc(p);
             assert!(text.contains("class Kernel"), "{}", t.name);
             assert!(text.contains("Process()"), "{}", t.name);

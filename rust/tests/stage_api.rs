@@ -123,8 +123,13 @@ fn simulate_and_score_stages_run_standalone() {
     FrontendStage.run(&task, &cfg, &mut s).unwrap();
     TranspileStage.run(&task, &cfg, &mut s).unwrap();
     CompileStage.run(&task, &cfg, &mut s).unwrap();
+    // the compile stage moves the program into the backend-compiled kernel
+    assert!(s.program.is_none() && s.kernel.is_some());
+    assert_eq!(s.kernel.as_ref().unwrap().backend, "ascend-sim");
     SimulateStage.run(&task, &cfg, &mut s).unwrap();
-    assert!(s.sim.is_some() && s.reference.is_some());
+    assert!(s.exec.is_some() && s.reference.is_some());
+    // the default backend models timing, so cycles are present
+    assert!(s.exec.as_ref().unwrap().cycles.is_some());
     ScoreStage.run(&task, &cfg, &mut s).unwrap();
     assert!(s.correct);
 }
@@ -230,8 +235,11 @@ fn artifacts_expose_the_full_session() {
     let art = run_task(&task_by_name("softmax").unwrap(), &PipelineConfig::default());
     assert!(art.session.dsl_source.is_some());
     assert!(art.session.dsl_program.is_some());
-    assert!(art.session.program.is_some());
-    assert!(art.session.sim.is_some());
+    // after compile the program lives inside the backend-compiled kernel;
+    // the artifacts accessor finds it either way
+    assert!(art.session.kernel.is_some());
+    assert!(art.program().is_some());
+    assert!(art.session.exec.is_some());
     assert!(art.session.compiled && art.session.correct);
     // a verified run carries no fatal diagnostic (validator warnings may
     // still be on the session's diagnostic list)

@@ -1,0 +1,100 @@
+//! Direct coverage for the suite-level renderers and groupers
+//! (`SuiteResult::render_failures`, `SuiteResult::by_category`) that were
+//! previously exercised only indirectly through CLI runs: the empty
+//! suite, the all-pass suite, and a mixed-failure suite with stage/code
+//! assertions on every rendered row.
+
+use ascendcraft::bench_suite::metrics::{SuiteResult, TaskResult};
+use ascendcraft::bench_suite::spec::Category;
+use ascendcraft::coordinator::stage::Diagnostic;
+
+fn task_result(name: &str, cat: Category, compiled: bool, correct: bool) -> TaskResult {
+    TaskResult {
+        name: name.into(),
+        category: cat,
+        backend: "ascend-sim".into(),
+        compiled,
+        correct,
+        generated_cycles: if correct { Some(500.0) } else { None },
+        eager_cycles: 1000.0,
+        failure: None,
+        repair_rounds: 0,
+        pipeline_secs: 0.0,
+        stage_timings: Vec::new(),
+        golden: None,
+        golden_seeds: Vec::new(),
+    }
+}
+
+#[test]
+fn empty_suite_renders_totals_only_and_no_failures() {
+    let suite = SuiteResult { results: vec![] };
+    assert!(suite.by_category().is_empty());
+    assert!(suite.render_failures().is_empty());
+    let t1 = suite.render_table1();
+    assert!(t1.contains("Total (0 kernels)"), "{t1}");
+    let totals = suite.totals();
+    assert_eq!((totals.total, totals.correct), (0, 0));
+    // percentage arithmetic must not divide by zero
+    assert_eq!(totals.pass_pct(), 0.0);
+    assert_eq!(totals.fast10_pct(), 0.0);
+}
+
+#[test]
+fn all_pass_suite_has_full_rates_and_empty_failure_table() {
+    let suite = SuiteResult {
+        results: vec![
+            task_result("relu", Category::Activation, true, true),
+            task_result("gelu", Category::Activation, true, true),
+            task_result("mse_loss", Category::Loss, true, true),
+        ],
+    };
+    assert!(suite.render_failures().is_empty());
+    let rows = suite.by_category();
+    assert_eq!(rows.len(), 2);
+    // BTreeMap grouping: categories come out in declaration order
+    assert!(rows[0].category.starts_with("Activation"), "{}", rows[0].category);
+    assert!(rows[0].category.contains("(2 kernels)"), "{}", rows[0].category);
+    assert_eq!(rows[0].metrics.total, 2);
+    assert_eq!(rows[0].metrics.correct, 2);
+    assert!(rows[1].category.starts_with("Loss"), "{}", rows[1].category);
+    assert_eq!(rows[1].metrics.total, 1);
+    let totals = suite.totals();
+    assert_eq!(totals.pass_pct(), 100.0);
+    assert_eq!(totals.comp_pct(), 100.0);
+}
+
+#[test]
+fn mixed_failure_suite_renders_stage_and_code_per_row() {
+    let mut nocompile = task_result("mask_cumsum", Category::Math, false, false);
+    nocompile.failure = Some(Diagnostic::new("transpile", "A402", "bool has no UB mapping"));
+    let mut wrong = task_result("cross_entropy", Category::Loss, true, false);
+    wrong.failure = Some(Diagnostic::new("score", "N103", "output 'loss': max drift 3.1"));
+    let suite = SuiteResult {
+        results: vec![
+            task_result("relu", Category::Activation, true, true),
+            nocompile,
+            wrong,
+        ],
+    };
+    let table = suite.render_failures();
+    assert!(table.contains("Failures (2 tasks)"), "{table}");
+    // one aligned row per failed task: name, stage, code, message
+    assert!(table.contains("mask_cumsum"), "{table}");
+    assert!(table.contains("transpile"), "{table}");
+    assert!(table.contains("A402"), "{table}");
+    assert!(table.contains("cross_entropy"), "{table}");
+    assert!(table.contains("score"), "{table}");
+    assert!(table.contains("N103"), "{table}");
+    assert!(table.contains("max drift"), "{table}");
+    // passing tasks never appear
+    assert!(!table.contains("relu"), "{table}");
+
+    let rows = suite.by_category();
+    assert_eq!(rows.len(), 3);
+    // per-category metrics keep compile and pass verdicts apart
+    let loss = rows.iter().find(|r| r.category.starts_with("Loss")).unwrap();
+    assert_eq!((loss.metrics.compiled, loss.metrics.correct), (1, 0));
+    let math = rows.iter().find(|r| r.category.starts_with("Math")).unwrap();
+    assert_eq!((math.metrics.compiled, math.metrics.correct), (0, 0));
+}
