@@ -27,9 +27,12 @@ bench: build
 # shards the tasks across every registered backend (ascend-sim + cpu-ref)
 # in one worker pool; --min-pass asserts the Pass@1 floor PER BACKEND so
 # a silently-broken pipeline — or a diverging backend — cannot look green.
+# The lint sweep then runs the static analyzer across all 52 tasks and
+# fails on any analyzer error: the transpiler must stay analyzer-clean.
 smoke: build
 	./target/release/ascendcraft suite --quiet --golden --backend all \
 		--tasks relu,gelu,softmax,mse_loss,adam --min-pass 5
+	./target/release/ascendcraft lint --all
 
 # Build the API docs with warnings denied (same gate as CI): broken
 # intra-doc links fail instead of rotting silently.

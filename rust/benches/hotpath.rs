@@ -7,6 +7,7 @@
 //!
 //! Run: `cargo bench --bench hotpath`
 
+use ascendcraft::analysis::{analyze, AnalyzeEnv, Cfg};
 use ascendcraft::backend::{Backend as _, BackendRegistry};
 use ascendcraft::bench_suite::tasks::task_by_name;
 use ascendcraft::coordinator::pipeline::{run_task, PipelineConfig};
@@ -138,8 +139,8 @@ fn main() {
     // baseline for the staged compilation-session API's timings
     println!("pipeline stage timings (mean of {PIPELINE_ITERS} runs, ms):");
     println!(
-        "{:<28} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9}",
-        "task", "generate", "frontend", "transpile", "compile", "simulate", "score"
+        "{:<28} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9}",
+        "task", "generate", "frontend", "transpile", "analyze", "compile", "simulate", "score"
     );
     const PIPELINE_ITERS: usize = 3;
     for name in ["gelu", "mse_loss", "cumsum", "rmsnorm", "adam", "sum_dim", "maxpool2d"] {
@@ -161,7 +162,9 @@ fn main() {
             }
         }
         let mut row = format!("{:<28}", format!("pipeline[{name}]"));
-        for stage in ["generate", "frontend", "transpile", "compile", "simulate", "score"] {
+        let stages =
+            ["generate", "frontend", "transpile", "analyze", "compile", "simulate", "score"];
+        for stage in stages {
             match names.iter().position(|n| *n == stage) {
                 Some(i) => {
                     row.push_str(&format!(" {:>9.3}", acc[i] / PIPELINE_ITERS as f64 * 1e3))
@@ -224,6 +227,18 @@ fn main() {
     time("transpile: 4 passes adam program", 200, || {
         transpile(&program, &inputs, &TranspileOptions::default()).unwrap()
     });
+    println!();
+
+    // 3b. analysis group: the CFG/dataflow lint passes over the
+    // transpiled IR (the analyze stage's whole cost, then the CFG
+    // construction alone)
+    let out = transpile(&program, &inputs, &TranspileOptions::default()).unwrap();
+    let numel: std::collections::HashMap<String, usize> =
+        inputs.iter().map(|(n, t)| (n.clone(), t.numel())).collect();
+    let aenv = AnalyzeEnv::new(out.tiling.clone()).with_numel(numel);
+    time("analysis: all passes, adam program", 200, || analyze(&out.program, &aenv));
+    let first_kernel = &out.program.kernels[0];
+    time("analysis: CFG build, adam kernel", 500, || Cfg::build(first_kernel));
     println!();
 
     // 4. worker scaling on a 12-task slice (NOTE: on a single-core host

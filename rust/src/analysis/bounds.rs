@@ -1,0 +1,440 @@
+//! Global-memory bounds check (ASCAN402).
+//!
+//! For each launch of a kernel, every `DataCopy`/`DataCopyPad`/
+//! `SetValue`/`GetValue` touching a `GlobalTensor` is checked against
+//! the element count of the host tensor bound to it. Offsets are
+//! symbolic expressions over loop variables, `GetBlockIdx()`, tiling
+//! members, and scalar locals; the pass:
+//!
+//! 1. substitutes scalar assignments and `CallStage` arguments
+//!    symbolically (self-referential accumulators and branch-divergent
+//!    assignments are *poisoned* — accesses depending on them bail);
+//! 2. resolves tiling members to concrete integers from the
+//!    [`ValidateEnv`];
+//! 3. evaluates the final index expression at every **corner** of the
+//!    remaining free variables — each loop variable at its range
+//!    endpoints, `GetBlockIdx` at `0` and `block_dim - 1`.
+//!
+//! Corner evaluation preserves correlations that interval arithmetic
+//! destroys (`min(tile, per - t*tile)` stays exact), so a report means
+//! a *specific, jointly attainable* assignment indexes out of bounds:
+//! the pass errs silent, never wrong. Loops whose bounds are not
+//! closed-form (or reference other free variables), `While` bodies, and
+//! expressions with more than [`MAX_CORNER_VARS`] free variables are
+//! skipped.
+
+use crate::ascendc::ir::*;
+use crate::ascendc::validate::{AscDiagnostic, ValidateEnv};
+use crate::diag::Severity;
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+/// One launch's concrete context: tiling values, the element count of
+/// each global (via the launch argument bound to it), and the evaluated
+/// block dimension (None when not closed-form).
+pub struct LaunchCtx<'a> {
+    pub env: &'a ValidateEnv,
+    pub numel: BTreeMap<String, usize>,
+    pub block_dim: Option<i64>,
+}
+
+/// Above this many free variables, corner enumeration is skipped
+/// (2^6 = 64 evaluations is plenty for real kernels).
+const MAX_CORNER_VARS: usize = 6;
+const MAX_SUBST_DEPTH: usize = 16;
+const MAX_CALL_DEPTH: usize = 4;
+
+pub fn check_bounds(kernel: &AscKernel, ctx: &LaunchCtx) -> Vec<AscDiagnostic> {
+    let mut w = Walker {
+        kernel,
+        ctx,
+        sym: HashMap::new(),
+        poisoned: HashSet::new(),
+        ranges: Vec::new(),
+        unknown_vars: HashSet::new(),
+        while_depth: 0,
+        stage: None,
+        top_idx: None,
+        diags: Vec::new(),
+        seen: HashSet::new(),
+    };
+    w.walk_body(&kernel.init_body, true, 0);
+    w.walk_body(&kernel.process_body, true, 0);
+    w.diags
+}
+
+struct Walker<'a> {
+    kernel: &'a AscKernel,
+    ctx: &'a LaunchCtx<'a>,
+    /// scalar name → symbolic value over {Int, loop vars, GetBlockIdx}
+    sym: HashMap<String, CExpr>,
+    /// names whose value is iteration- or branch-dependent
+    poisoned: HashSet<String>,
+    /// loop variables in scope with inclusive ranges
+    ranges: Vec<(String, i64, i64)>,
+    /// loop variables whose range is not closed-form
+    unknown_vars: HashSet<String>,
+    while_depth: usize,
+    stage: Option<String>,
+    top_idx: Option<usize>,
+    diags: Vec<AscDiagnostic>,
+    seen: HashSet<(String, Option<usize>, String)>,
+}
+
+impl<'a> Walker<'a> {
+    fn walk_body(&mut self, body: &[CStmt], top: bool, depth: usize) {
+        for (i, stmt) in body.iter().enumerate() {
+            if top {
+                self.top_idx = Some(i);
+            }
+            self.walk_stmt(stmt, depth);
+        }
+    }
+
+    fn walk_stmt(&mut self, stmt: &CStmt, depth: usize) {
+        match stmt {
+            CStmt::DeclAssign { name, value } | CStmt::Assign { name, value } => {
+                self.assign(name, value);
+            }
+            CStmt::For { var, start, end, step, body } => {
+                let lo = self.eval_closed(start);
+                let hi = self.eval_closed(end);
+                let st = self.eval_closed(step);
+                // the loop variable shadows any same-named scalar
+                let shadowed = self.sym.remove(var);
+                let was_poisoned = self.poisoned.remove(var);
+                let known = match (lo, hi, st) {
+                    (Some(lo), Some(hi), Some(1)) if hi > lo => {
+                        self.ranges.push((var.clone(), lo, hi - 1));
+                        true
+                    }
+                    _ => {
+                        self.unknown_vars.insert(var.clone());
+                        false
+                    }
+                };
+                let saved_top = self.top_idx;
+                self.top_idx = None;
+                self.walk_body(body, false, depth);
+                self.top_idx = saved_top;
+                if known {
+                    self.ranges.pop();
+                } else {
+                    self.unknown_vars.remove(var);
+                }
+                if let Some(s) = shadowed {
+                    self.sym.insert(var.clone(), s);
+                }
+                if was_poisoned {
+                    self.poisoned.insert(var.clone());
+                }
+            }
+            CStmt::While { body, .. } => {
+                self.while_depth += 1;
+                let saved_top = self.top_idx;
+                self.top_idx = None;
+                self.walk_body(body, false, depth);
+                self.top_idx = saved_top;
+                self.while_depth -= 1;
+            }
+            CStmt::If { then, orelse, .. } => {
+                let snap_sym = self.sym.clone();
+                let snap_poison = self.poisoned.clone();
+                let saved_top = self.top_idx;
+                self.top_idx = None;
+                self.walk_body(then, false, depth);
+                let then_sym = std::mem::replace(&mut self.sym, snap_sym.clone());
+                let then_poison = std::mem::replace(&mut self.poisoned, snap_poison.clone());
+                self.walk_body(orelse, false, depth);
+                self.top_idx = saved_top;
+                // merge: keep bindings the branches agree on, poison the rest
+                let mut merged = HashMap::new();
+                let mut poison = snap_poison;
+                poison.extend(then_poison);
+                poison.extend(self.poisoned.drain());
+                let mut names: HashSet<&String> = then_sym.keys().collect();
+                names.extend(self.sym.keys());
+                for name in names {
+                    match (then_sym.get(name), self.sym.get(name)) {
+                        (Some(a), Some(b)) if a == b && !poison.contains(name) => {
+                            merged.insert(name.clone(), a.clone());
+                        }
+                        _ => {
+                            poison.insert(name.clone());
+                        }
+                    }
+                }
+                self.sym = merged;
+                self.poisoned = poison;
+            }
+            CStmt::CallStage { name, args } if depth < MAX_CALL_DEPTH => {
+                let Some(stage) = self.kernel.stage(name) else { return };
+                if stage.params.len() != args.len() {
+                    return;
+                }
+                let snap_sym = self.sym.clone();
+                let snap_poison = self.poisoned.clone();
+                let snap_stage = self.stage.clone();
+                let saved_top = self.top_idx;
+                for (p, a) in stage.params.iter().zip(args) {
+                    match self.resolve(a, 0) {
+                        Some(e) => {
+                            self.sym.insert(p.clone(), e);
+                            self.poisoned.remove(p);
+                        }
+                        None => {
+                            self.poisoned.insert(p.clone());
+                        }
+                    }
+                }
+                self.stage = Some(stage.name.clone());
+                self.walk_body(&stage.body, true, depth + 1);
+                self.sym = snap_sym;
+                self.poisoned = snap_poison;
+                self.stage = snap_stage;
+                self.top_idx = saved_top;
+            }
+            CStmt::DataCopy { dst, src, count } | CStmt::DataCopyPad { dst, src, count } => {
+                self.check_gm(dst, count, "DataCopy");
+                self.check_gm(src, count, "DataCopy");
+            }
+            CStmt::SetValue { tensor, index, .. } => self.check_gm_index(tensor, index),
+            CStmt::GetValue { tensor, index, .. } => self.check_gm_index(tensor, index),
+            _ => {}
+        }
+    }
+
+    fn assign(&mut self, name: &str, value: &CExpr) {
+        // self-referential accumulator (`off = off + tile`) — its value
+        // is iteration-dependent; poison it
+        let mut self_ref = false;
+        value.walk(&mut |e| {
+            if let CExpr::Var(n) = e {
+                if n == name || self.poisoned.contains(n) {
+                    self_ref = true;
+                }
+            }
+        });
+        if self_ref {
+            self.sym.remove(name);
+            self.poisoned.insert(name.to_string());
+            return;
+        }
+        match self.resolve(value, 0) {
+            Some(e) => {
+                self.sym.insert(name.to_string(), e);
+                self.poisoned.remove(name);
+            }
+            None => {
+                self.sym.remove(name);
+                self.poisoned.insert(name.to_string());
+            }
+        }
+    }
+
+    /// Substitute scalar bindings and tiling members; leaves loop vars
+    /// and `GetBlockIdx` free. `None` means the expression depends on a
+    /// poisoned name or exceeded the substitution depth.
+    fn resolve(&self, e: &CExpr, depth: usize) -> Option<CExpr> {
+        if depth > MAX_SUBST_DEPTH {
+            return None;
+        }
+        Some(match e {
+            CExpr::Var(n) => {
+                if self.poisoned.contains(n) {
+                    return None;
+                }
+                if let Some(bound) = self.sym.get(n) {
+                    // bindings are already resolved; no depth recursion
+                    // into an identical Var avoids cycles
+                    if bound == e {
+                        e.clone()
+                    } else {
+                        self.resolve(bound, depth + 1)?
+                    }
+                } else if let Some(v) = self.ctx.env.tiling.get(n) {
+                    CExpr::Int(*v)
+                } else {
+                    // loop var or genuinely unknown; corner evaluation
+                    // decides which
+                    e.clone()
+                }
+            }
+            CExpr::Bin(op, a, b) => {
+                CExpr::bin(*op, self.resolve(a, depth + 1)?, self.resolve(b, depth + 1)?)
+            }
+            CExpr::Un(f, a) => CExpr::Un(*f, Box::new(self.resolve(a, depth + 1)?)),
+            CExpr::Min(a, b) => CExpr::Min(
+                Box::new(self.resolve(a, depth + 1)?),
+                Box::new(self.resolve(b, depth + 1)?),
+            ),
+            CExpr::Max(a, b) => CExpr::Max(
+                Box::new(self.resolve(a, depth + 1)?),
+                Box::new(self.resolve(b, depth + 1)?),
+            ),
+            _ => e.clone(),
+        })
+    }
+
+    /// Evaluate with no free variables allowed.
+    fn eval_closed(&self, e: &CExpr) -> Option<i64> {
+        let r = self.resolve(e, 0)?;
+        eval_concrete(&r, &HashMap::new(), None)
+    }
+
+    fn check_gm(&mut self, r: &TensorRef, count: &CExpr, what: &str) {
+        if self.while_depth > 0 {
+            return;
+        }
+        let Some(&numel) = self.ctx.numel.get(&r.name) else { return };
+        // last element touched: offset + count - 1
+        let last = CExpr::sub(CExpr::add(r.offset.clone(), count.clone()), CExpr::Int(1));
+        self.check_expr(&last, &r.offset, numel, &r.name, what);
+    }
+
+    fn check_gm_index(&mut self, r: &TensorRef, index: &CExpr) {
+        if self.while_depth > 0 {
+            return;
+        }
+        let Some(&numel) = self.ctx.numel.get(&r.name) else { return };
+        let idx = CExpr::add(r.offset.clone(), index.clone());
+        self.check_expr(&idx, &idx.clone(), numel, &r.name, "element access");
+    }
+
+    /// Corner-evaluate `last` (the highest index touched) and `first`
+    /// (the lowest); report when the maximum provably escapes `numel`
+    /// or the minimum goes negative.
+    fn check_expr(&mut self, last: &CExpr, first: &CExpr, numel: usize, gm: &str, what: &str) {
+        let Some((last_min, last_max)) = self.corner_range(last) else { return };
+        let Some((first_min, _)) = self.corner_range(first) else { return };
+        if last_max >= numel as i64 {
+            self.push(format!(
+                "{what} on global '{gm}' reaches element {last_max}, but the bound host \
+                 tensor has {numel} elements",
+            ), gm);
+        } else if first_min < 0 {
+            self.push(format!(
+                "{what} on global '{gm}' reaches negative element index {first_min}",
+            ), gm);
+        }
+    }
+
+    /// Min/max of the expression over all corners of its free
+    /// variables. `None` when any free variable has no known range.
+    fn corner_range(&self, e: &CExpr) -> Option<(i64, i64)> {
+        let resolved = self.resolve(e, 0)?;
+        let mut free: Vec<(String, i64, i64)> = Vec::new();
+        let mut uses_blockidx = false;
+        let mut unknown = false;
+        resolved.walk(&mut |x| match x {
+            CExpr::Var(n) => {
+                if let Some(r) = self.ranges.iter().rev().find(|(v, _, _)| v == n) {
+                    if !free.iter().any(|(v, _, _)| v == n) {
+                        free.push(r.clone());
+                    }
+                } else {
+                    unknown = true;
+                }
+            }
+            CExpr::GetBlockIdx => uses_blockidx = true,
+            CExpr::Float(_) | CExpr::ShapeOf(..) => unknown = true,
+            _ => {}
+        });
+        if unknown {
+            return None;
+        }
+        let block_dim = if uses_blockidx {
+            match self.ctx.block_dim {
+                Some(b) if b >= 1 => Some(b),
+                _ => return None,
+            }
+        } else {
+            None
+        };
+        if free.len() + usize::from(uses_blockidx) > MAX_CORNER_VARS {
+            return None;
+        }
+
+        let n = free.len();
+        let combos = 1usize << (n + usize::from(uses_blockidx));
+        let mut min = i64::MAX;
+        let mut max = i64::MIN;
+        for c in 0..combos {
+            let mut vars = HashMap::new();
+            for (i, (v, lo, hi)) in free.iter().enumerate() {
+                vars.insert(v.clone(), if c & (1 << i) == 0 { *lo } else { *hi });
+            }
+            let bi = block_dim.map(|b| if c & (1 << n) == 0 { 0 } else { b - 1 });
+            let val = eval_concrete(&resolved, &vars, bi)?;
+            min = min.min(val);
+            max = max.max(val);
+        }
+        Some((min, max))
+    }
+
+    fn push(&mut self, message: String, gm: &str) {
+        let stage = self.stage.clone().unwrap_or_default();
+        let key = (stage.clone(), self.top_idx, gm.to_string());
+        if !self.seen.insert(key) {
+            return;
+        }
+        let mut d = AscDiagnostic::new(
+            "ASCAN402",
+            Severity::Error,
+            message,
+            &self.kernel.name,
+            &stage,
+        );
+        d.stmt = self.top_idx;
+        self.diags.push(d);
+    }
+}
+
+/// Integer evaluation with a concrete variable assignment. Mirrors
+/// `ValidateEnv::try_eval` semantics (euclidean div/mod, comparisons as
+/// 0/1) but over corner-assigned variables.
+fn eval_concrete(e: &CExpr, vars: &HashMap<String, i64>, block_idx: Option<i64>) -> Option<i64> {
+    match e {
+        CExpr::Int(v) => Some(*v),
+        CExpr::Float(_) | CExpr::ShapeOf(..) => None,
+        CExpr::Var(n) => vars.get(n).copied(),
+        CExpr::GetBlockIdx => block_idx,
+        CExpr::Min(a, b) => {
+            Some(eval_concrete(a, vars, block_idx)?.min(eval_concrete(b, vars, block_idx)?))
+        }
+        CExpr::Max(a, b) => {
+            Some(eval_concrete(a, vars, block_idx)?.max(eval_concrete(b, vars, block_idx)?))
+        }
+        CExpr::Un(CUnFn::Neg, a) => Some(-eval_concrete(a, vars, block_idx)?),
+        CExpr::Un(CUnFn::Abs, a) => Some(eval_concrete(a, vars, block_idx)?.abs()),
+        CExpr::Un(_, _) => None,
+        CExpr::Bin(op, a, b) => {
+            let a = eval_concrete(a, vars, block_idx)?;
+            let b = eval_concrete(b, vars, block_idx)?;
+            Some(match op {
+                CBinOp::Add => a + b,
+                CBinOp::Sub => a - b,
+                CBinOp::Mul => a * b,
+                CBinOp::Div | CBinOp::FloorDiv => {
+                    if b == 0 {
+                        return None;
+                    }
+                    a.div_euclid(b)
+                }
+                CBinOp::Mod => {
+                    if b == 0 {
+                        return None;
+                    }
+                    a.rem_euclid(b)
+                }
+                CBinOp::Lt => (a < b) as i64,
+                CBinOp::Le => (a <= b) as i64,
+                CBinOp::Gt => (a > b) as i64,
+                CBinOp::Ge => (a >= b) as i64,
+                CBinOp::Eq => (a == b) as i64,
+                CBinOp::Ne => (a != b) as i64,
+                CBinOp::And => ((a != 0) && (b != 0)) as i64,
+                CBinOp::Or => ((a != 0) || (b != 0)) as i64,
+            })
+        }
+    }
+}

@@ -1,0 +1,202 @@
+//! Unified-Buffer budget checks (ASCAN301, ASCAN302).
+//!
+//! * **ASCAN301** — the kernel's static UB reservation (every queue's
+//!   `depth × capacity` tiles plus every TBuf) exceeds the 192 KiB
+//!   Unified Buffer under the concrete tiling. This supersedes the flat
+//!   A301 check with a message that also reports the *path-sensitive
+//!   peak-live* footprint (from the queue pass's slot-occupancy
+//!   analysis): when peak-live fits but the static reservation does
+//!   not, dropping double buffering is a sufficient repair.
+//! * **ASCAN302** — a `DataCopy`/vector op moves more elements than its
+//!   destination (or source) local tile holds, under the concrete
+//!   tiling. The flat validator checks alignment (A101/A103); this
+//!   check compares the evaluated element count plus local offset
+//!   against the tile capacity of the queue or TBuf the handle was
+//!   bound from.
+
+use crate::ascendc::ir::*;
+use crate::ascendc::validate::{AscDiagnostic, ValidateEnv};
+use crate::diag::Severity;
+use std::collections::BTreeMap;
+
+pub fn check_budget(
+    kernel: &AscKernel,
+    env: &ValidateEnv,
+    peak_slots: &BTreeMap<String, i64>,
+) -> Vec<AscDiagnostic> {
+    let mut diags = Vec::new();
+
+    // ASCAN301: static reservation vs capacity, annotated with the
+    // path-sensitive peak
+    let reserved = kernel.ub_bytes();
+    if reserved > env.ub_capacity {
+        let mut peak: i64 = 0;
+        for q in &kernel.queues {
+            let slots = peak_slots.get(&q.name).copied().unwrap_or(q.depth as i64);
+            peak += slots * q.capacity as i64 * q.dtype.size_bytes() as i64;
+        }
+        for t in &kernel.tbufs {
+            peak += t.ub_bytes() as i64;
+        }
+        let hint = if (peak as usize) <= env.ub_capacity {
+            " — peak-live fits, so dropping double buffering is a sufficient repair"
+        } else {
+            ""
+        };
+        diags.push(AscDiagnostic::new(
+            "ASCAN301",
+            Severity::Error,
+            format!(
+                "kernel '{}' statically reserves {} UB bytes > {} available \
+                 (path-sensitive peak live: {} bytes{})",
+                kernel.name, reserved, env.ub_capacity, peak, hint,
+            ),
+            &kernel.name,
+            "",
+        ));
+    }
+
+    // ASCAN302: per-stage tile-capacity accounting
+    for st in &kernel.stages {
+        let mut checker = TileChecker {
+            kernel,
+            env,
+            stage: st,
+            bindings: BTreeMap::new(),
+            diags: &mut diags,
+            top_idx: 0,
+        };
+        // TBufs are usable by name without an explicit Get
+        for t in &kernel.tbufs {
+            checker.bindings.insert(t.name.clone(), (t.capacity, format!("TBuf '{}'", t.name)));
+        }
+        for (i, top) in st.body.iter().enumerate() {
+            checker.top_idx = i;
+            top.walk(&mut |s| checker.visit(s));
+        }
+    }
+
+    diags
+}
+
+/// Per-stage walker: tracks which local handle came from which
+/// queue/TBuf (hence its tile capacity in elements) and checks every
+/// data-movement count against it.
+struct TileChecker<'a> {
+    kernel: &'a AscKernel,
+    env: &'a ValidateEnv,
+    stage: &'a StageFn,
+    /// local name → (capacity in elements, provenance for messages)
+    bindings: BTreeMap<String, (usize, String)>,
+    diags: &'a mut Vec<AscDiagnostic>,
+    top_idx: usize,
+}
+
+impl<'a> TileChecker<'a> {
+    fn bind_queue(&mut self, queue: &str, var: &str) {
+        if let Some(q) = self.kernel.queue(queue) {
+            self.bindings
+                .insert(var.to_string(), (q.capacity, format!("queue '{}' tiles", queue)));
+        }
+    }
+
+    fn visit(&mut self, s: &CStmt) {
+        match s {
+            CStmt::AllocTensor { queue, var } | CStmt::DeQue { queue, var } => {
+                self.bind_queue(queue, var);
+            }
+            CStmt::GetTBuf { tbuf, var } => {
+                if let Some(t) = self.kernel.tbuf(tbuf) {
+                    self.bindings
+                        .insert(var.clone(), (t.capacity, format!("TBuf '{}'", tbuf)));
+                }
+            }
+            CStmt::DataCopy { dst, src, count } | CStmt::DataCopyPad { dst, src, count } => {
+                self.check_ref("DataCopy", dst, count);
+                self.check_ref("DataCopy", src, count);
+            }
+            CStmt::VecBin { dst, a, b, count, .. } => {
+                self.check_ref("vector op", dst, count);
+                self.check_ref("vector op", a, count);
+                self.check_ref("vector op", b, count);
+            }
+            CStmt::VecScalar { dst, src, count, .. }
+            | CStmt::VecUn { dst, src, count, .. }
+            | CStmt::Scan { dst, src, count, .. }
+            | CStmt::Cast { dst, src, count, .. } => {
+                self.check_ref("vector op", dst, count);
+                self.check_ref("vector op", src, count);
+            }
+            CStmt::Reduce { src, count, .. } => {
+                self.check_ref("reduce", src, count);
+            }
+            CStmt::Duplicate { dst, count, .. } => {
+                self.check_ref("Duplicate", dst, count);
+            }
+            CStmt::SelectGe { dst, cond, a, b, count } => {
+                self.check_ref("SelectGe", dst, count);
+                self.check_ref("SelectGe", cond, count);
+                self.check_ref("SelectGe", a, count);
+                self.check_ref("SelectGe", b, count);
+            }
+            CStmt::SetValue { tensor, index, .. } => self.check_index(tensor, index),
+            CStmt::GetValue { tensor, index, .. } => self.check_index(tensor, index),
+            _ => {}
+        }
+    }
+
+    fn check_ref(&mut self, what: &str, r: &TensorRef, count: &CExpr) {
+        let Some((cap, provenance)) = self.bindings.get(&r.name).cloned() else { return };
+        let (Some(c), Some(o)) = (self.env.try_eval(count), self.env.try_eval(&r.offset))
+        else {
+            return;
+        };
+        if c <= 0 || o < 0 {
+            return; // degenerate counts are the flat validator's concern
+        }
+        if (o + c) as usize > cap {
+            self.push(format!(
+                "{what} touches {c} element{} of '{}' at offset {o}, but {} hold {cap} \
+                 elements under the current tiling",
+                if c == 1 { "" } else { "s" },
+                r.name,
+                provenance,
+            ));
+        }
+    }
+
+    fn check_index(&mut self, r: &TensorRef, index: &CExpr) {
+        let Some((cap, provenance)) = self.bindings.get(&r.name).cloned() else { return };
+        let (Some(i), Some(o)) = (self.env.try_eval(index), self.env.try_eval(&r.offset))
+        else {
+            return;
+        };
+        if i >= 0 && o >= 0 && (o + i) as usize >= cap {
+            self.push(format!(
+                "element access at index {} of '{}' is outside {} ({cap} elements)",
+                o + i,
+                r.name,
+                provenance,
+            ));
+        }
+    }
+
+    fn push(&mut self, message: String) {
+        let mut d = AscDiagnostic::new(
+            "ASCAN302",
+            Severity::Error,
+            message,
+            &self.kernel.name,
+            &self.stage.name,
+        );
+        d.stmt = Some(self.top_idx);
+        // one report per (stage, statement) is plenty
+        if !self
+            .diags
+            .iter()
+            .any(|e| e.code == "ASCAN302" && e.stage == d.stage && e.stmt == d.stmt)
+        {
+            self.diags.push(d);
+        }
+    }
+}

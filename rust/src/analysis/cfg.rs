@@ -1,0 +1,455 @@
+//! Control-flow-graph construction over AscendC kernels, plus a generic
+//! forward-dataflow fixpoint engine.
+//!
+//! The CFG is interprocedural in the only sense AscendC needs: `CallStage`
+//! statements in the `Process` body are spliced inline (with scalar
+//! parameters substituted by their call arguments), so a path through the
+//! graph is a real execution path through `Init` → `Process` → stage
+//! functions. Structured control flow becomes edges:
+//!
+//! * `If` lowers to a diamond;
+//! * `For`/`While` lower to a **peeled** loop — one explicit first
+//!   iteration, then a header joining all subsequent iterations — so the
+//!   first trip through a pipeline loop is analyzed with the precise
+//!   entry state (a `DeQue` before the first matching `EnQue` is a
+//!   definite error, not a may-error), plus a zero-iteration bypass edge.
+//!
+//! Leaf statements keep their provenance (`stage`, top-level statement
+//! index), which is what lets analysis passes point diagnostics at a
+//! statement instead of a whole kernel.
+
+use crate::ascendc::ir::*;
+use std::collections::HashMap;
+
+/// A leaf statement placed in the CFG, with provenance for diagnostics.
+#[derive(Clone, Debug)]
+pub struct Spanned {
+    /// The statement, with stage parameters substituted by call
+    /// arguments. Control flow never appears here — it becomes edges.
+    pub stmt: CStmt,
+    /// `(stage name, stage kind)` when spliced from a stage function;
+    /// `None` for Init/Process statements.
+    pub stage: Option<(String, StageKind)>,
+    /// Index of the enclosing top-level statement in the originating
+    /// body (stage body, init body, or process body).
+    pub stmt_index: Option<usize>,
+}
+
+/// A basic block: straight-line leaf statements plus edges.
+#[derive(Clone, Debug, Default)]
+pub struct Block {
+    pub stmts: Vec<Spanned>,
+    pub succs: Vec<usize>,
+    pub preds: Vec<usize>,
+}
+
+/// The kernel CFG. `entry` starts the Init body; `exit` is reached when
+/// `Process` returns.
+#[derive(Clone, Debug)]
+pub struct Cfg {
+    pub blocks: Vec<Block>,
+    pub entry: usize,
+    pub exit: usize,
+}
+
+/// Lowering context: which stage we are splicing (if any) and the
+/// parameter→argument substitution accumulated through `CallStage`.
+#[derive(Clone, Default)]
+struct Ctx {
+    stage: Option<(String, StageKind)>,
+    subst: HashMap<String, CExpr>,
+}
+
+struct Builder<'k> {
+    kernel: &'k AscKernel,
+    blocks: Vec<Block>,
+}
+
+impl Cfg {
+    pub fn build(kernel: &AscKernel) -> Cfg {
+        let mut b = Builder { kernel, blocks: Vec::new() };
+        let entry = b.new_block();
+        let ctx = Ctx::default();
+        let mut cur = b.seq(&kernel.init_body, entry, &ctx, true, 0);
+        cur = b.seq(&kernel.process_body, cur, &ctx, true, 0);
+        Cfg { blocks: b.blocks, entry, exit: cur }
+    }
+
+    /// Blocks in construction order (a reasonable forward iteration
+    /// order: every loop body appears after its preheader).
+    pub fn len(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+}
+
+/// Guard against pathological `CallStage` recursion (never produced by
+/// the transpiler, but the IR can express it).
+const MAX_SPLICE_DEPTH: usize = 4;
+
+impl<'k> Builder<'k> {
+    fn new_block(&mut self) -> usize {
+        self.blocks.push(Block::default());
+        self.blocks.len() - 1
+    }
+
+    fn edge(&mut self, from: usize, to: usize) {
+        self.blocks[from].succs.push(to);
+        self.blocks[to].preds.push(from);
+    }
+
+    /// Lower `stmts` starting in block `cur`; returns the block where
+    /// control continues afterwards. `top` means the slice is a
+    /// top-level body, so indices are recorded on the leaves.
+    fn seq(&mut self, stmts: &[CStmt], mut cur: usize, ctx: &Ctx, top: bool, depth: usize) -> usize {
+        for (i, stmt) in stmts.iter().enumerate() {
+            let idx = if top { Some(i) } else { None };
+            cur = self.stmt(stmt, cur, ctx, idx, depth);
+        }
+        cur
+    }
+
+    fn stmt(
+        &mut self,
+        stmt: &CStmt,
+        cur: usize,
+        ctx: &Ctx,
+        idx: Option<usize>,
+        depth: usize,
+    ) -> usize {
+        match stmt {
+            CStmt::For { body, .. } | CStmt::While { body, .. } => {
+                self.lower_loop(body, cur, ctx, depth)
+            }
+            CStmt::If { then, orelse, .. } => {
+                let join = self.new_block();
+                let t0 = self.new_block();
+                self.edge(cur, t0);
+                let t_end = self.seq(then, t0, ctx, false, depth);
+                self.edge(t_end, join);
+                if orelse.is_empty() {
+                    self.edge(cur, join);
+                } else {
+                    let e0 = self.new_block();
+                    self.edge(cur, e0);
+                    let e_end = self.seq(orelse, e0, ctx, false, depth);
+                    self.edge(e_end, join);
+                }
+                join
+            }
+            CStmt::CallStage { name, args } if ctx.stage.is_none() && depth < MAX_SPLICE_DEPTH => {
+                match self.kernel.stage(name) {
+                    Some(stage) if stage.params.len() == args.len() => {
+                        let mut subst = HashMap::new();
+                        for (p, a) in stage.params.iter().zip(args) {
+                            subst.insert(p.clone(), subst_expr(a, &ctx.subst));
+                        }
+                        let inner =
+                            Ctx { stage: Some((stage.name.clone(), stage.kind)), subst };
+                        // splice the stage body; its own indices are
+                        // top-level indices of the stage body
+                        self.seq(&stage.body, cur, &inner, true, depth + 1)
+                    }
+                    // undefined stage / arity mismatch: the structural
+                    // validator owns that error (A502/A503); keep the
+                    // call as an opaque leaf
+                    _ => {
+                        self.push_leaf(cur, stmt, ctx, idx);
+                        cur
+                    }
+                }
+            }
+            _ => {
+                self.push_leaf(cur, stmt, ctx, idx);
+                cur
+            }
+        }
+    }
+
+    /// Peeled loop: `cur → first-iteration body → header`, then
+    /// `header → steady-state body → header` and `header → after`, plus
+    /// the zero-iteration bypass `cur → after`.
+    fn lower_loop(&mut self, body: &[CStmt], cur: usize, ctx: &Ctx, depth: usize) -> usize {
+        let first = self.new_block();
+        self.edge(cur, first);
+        let first_end = self.seq(body, first, ctx, false, depth);
+        let header = self.new_block();
+        self.edge(first_end, header);
+        let steady = self.new_block();
+        self.edge(header, steady);
+        let steady_end = self.seq(body, steady, ctx, false, depth);
+        self.edge(steady_end, header);
+        let after = self.new_block();
+        self.edge(header, after);
+        self.edge(cur, after); // zero iterations
+        after
+    }
+
+    fn push_leaf(&mut self, cur: usize, stmt: &CStmt, ctx: &Ctx, idx: Option<usize>) {
+        let stmt = if ctx.subst.is_empty() { stmt.clone() } else { subst_stmt(stmt, &ctx.subst) };
+        self.blocks[cur].stmts.push(Spanned {
+            stmt,
+            stage: ctx.stage.clone(),
+            stmt_index: idx,
+        });
+    }
+}
+
+/// Substitute scalar variables in an expression.
+pub fn subst_expr(e: &CExpr, map: &HashMap<String, CExpr>) -> CExpr {
+    match e {
+        CExpr::Var(n) => map.get(n).cloned().unwrap_or_else(|| e.clone()),
+        CExpr::Bin(op, a, b) => CExpr::bin(*op, subst_expr(a, map), subst_expr(b, map)),
+        CExpr::Un(f, a) => CExpr::Un(*f, Box::new(subst_expr(a, map))),
+        CExpr::Min(a, b) => {
+            CExpr::Min(Box::new(subst_expr(a, map)), Box::new(subst_expr(b, map)))
+        }
+        CExpr::Max(a, b) => {
+            CExpr::Max(Box::new(subst_expr(a, map)), Box::new(subst_expr(b, map)))
+        }
+        _ => e.clone(),
+    }
+}
+
+fn subst_ref(r: &TensorRef, map: &HashMap<String, CExpr>) -> TensorRef {
+    TensorRef { name: r.name.clone(), offset: subst_expr(&r.offset, map) }
+}
+
+/// Substitute scalar variables in a leaf statement's expressions.
+pub fn subst_stmt(s: &CStmt, map: &HashMap<String, CExpr>) -> CStmt {
+    match s {
+        CStmt::DeclAssign { name, value } => {
+            CStmt::DeclAssign { name: name.clone(), value: subst_expr(value, map) }
+        }
+        CStmt::Assign { name, value } => {
+            CStmt::Assign { name: name.clone(), value: subst_expr(value, map) }
+        }
+        CStmt::DataCopy { dst, src, count } => CStmt::DataCopy {
+            dst: subst_ref(dst, map),
+            src: subst_ref(src, map),
+            count: subst_expr(count, map),
+        },
+        CStmt::DataCopyPad { dst, src, count } => CStmt::DataCopyPad {
+            dst: subst_ref(dst, map),
+            src: subst_ref(src, map),
+            count: subst_expr(count, map),
+        },
+        CStmt::VecBin { op, dst, a, b, count } => CStmt::VecBin {
+            op: *op,
+            dst: subst_ref(dst, map),
+            a: subst_ref(a, map),
+            b: subst_ref(b, map),
+            count: subst_expr(count, map),
+        },
+        CStmt::VecScalar { op, dst, src, scalar, count } => CStmt::VecScalar {
+            op: *op,
+            dst: subst_ref(dst, map),
+            src: subst_ref(src, map),
+            scalar: subst_expr(scalar, map),
+            count: subst_expr(count, map),
+        },
+        CStmt::VecUn { op, dst, src, count } => CStmt::VecUn {
+            op: *op,
+            dst: subst_ref(dst, map),
+            src: subst_ref(src, map),
+            count: subst_expr(count, map),
+        },
+        CStmt::Duplicate { dst, value, count } => CStmt::Duplicate {
+            dst: subst_ref(dst, map),
+            value: subst_expr(value, map),
+            count: subst_expr(count, map),
+        },
+        CStmt::Reduce { kind, dst, src, count } => CStmt::Reduce {
+            kind: *kind,
+            dst: subst_ref(dst, map),
+            src: subst_ref(src, map),
+            count: subst_expr(count, map),
+        },
+        CStmt::Scan { kind, dst, src, count, reverse } => CStmt::Scan {
+            kind: *kind,
+            dst: subst_ref(dst, map),
+            src: subst_ref(src, map),
+            count: subst_expr(count, map),
+            reverse: *reverse,
+        },
+        CStmt::SelectGe { dst, cond, a, b, count } => CStmt::SelectGe {
+            dst: subst_ref(dst, map),
+            cond: subst_ref(cond, map),
+            a: subst_ref(a, map),
+            b: subst_ref(b, map),
+            count: subst_expr(count, map),
+        },
+        CStmt::Mmad { c, a, b, m, k, n } => CStmt::Mmad {
+            c: subst_ref(c, map),
+            a: subst_ref(a, map),
+            b: subst_ref(b, map),
+            m: subst_expr(m, map),
+            k: subst_expr(k, map),
+            n: subst_expr(n, map),
+        },
+        CStmt::SetValue { tensor, index, value } => CStmt::SetValue {
+            tensor: subst_ref(tensor, map),
+            index: subst_expr(index, map),
+            value: subst_expr(value, map),
+        },
+        CStmt::GetValue { var, tensor, index } => CStmt::GetValue {
+            var: var.clone(),
+            tensor: subst_ref(tensor, map),
+            index: subst_expr(index, map),
+        },
+        CStmt::Cast { dst, src, to, count } => CStmt::Cast {
+            dst: subst_ref(dst, map),
+            src: subst_ref(src, map),
+            to: *to,
+            count: subst_expr(count, map),
+        },
+        _ => s.clone(),
+    }
+}
+
+/// Round cap for the fixpoint loop. Queue-occupancy lattices are finite
+/// and tiny (intervals over `0..=depth+1`), so convergence is fast; the
+/// cap is a safety net, not a widening policy.
+const MAX_ROUNDS: usize = 64;
+
+/// Forward dataflow to fixpoint. Returns the state at each block's
+/// **entry** (`None` for unreachable blocks). `transfer` must be
+/// monotone over a finite-height lattice, or the round cap truncates
+/// the analysis (still sound for our emit-on-definite-state passes).
+pub fn forward_fixpoint<L, J, T>(cfg: &Cfg, init: L, join: J, transfer: T) -> Vec<Option<L>>
+where
+    L: Clone + PartialEq,
+    J: Fn(&L, &L) -> L,
+    T: Fn(&Block, &L) -> L,
+{
+    let n = cfg.blocks.len();
+    let mut entries: Vec<Option<L>> = vec![None; n];
+    let mut outs: Vec<Option<L>> = vec![None; n];
+    for _round in 0..MAX_ROUNDS {
+        let mut changed = false;
+        for b in 0..n {
+            let mut state: Option<L> = if b == cfg.entry { Some(init.clone()) } else { None };
+            for &p in &cfg.blocks[b].preds {
+                if let Some(out) = &outs[p] {
+                    state = Some(match state {
+                        Some(s) => join(&s, out),
+                        None => out.clone(),
+                    });
+                }
+            }
+            let Some(state) = state else { continue };
+            if entries[b].as_ref() != Some(&state) {
+                changed = true;
+                entries[b] = Some(state.clone());
+            }
+            let out = transfer(&cfg.blocks[b], &state);
+            if outs[b].as_ref() != Some(&out) {
+                changed = true;
+                outs[b] = Some(out);
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    entries
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tensor::DType;
+
+    fn loop_kernel() -> AscKernel {
+        AscKernel {
+            name: "k".into(),
+            tiling_fields: vec!["nTiles".into()],
+            globals: vec![GlobalDecl { name: "xGm".into(), dtype: DType::F32, arg_index: 0 }],
+            queues: vec![QueueDecl {
+                name: "inQ".into(),
+                pos: QueuePos::VecIn,
+                depth: 2,
+                dtype: DType::F32,
+                capacity: 64,
+            }],
+            tbufs: vec![],
+            init_body: vec![CStmt::DeclAssign {
+                name: "base".into(),
+                value: CExpr::GetBlockIdx,
+            }],
+            stages: vec![StageFn {
+                name: "CopyIn0".into(),
+                kind: StageKind::CopyIn,
+                params: vec!["off".into()],
+                body: vec![
+                    CStmt::AllocTensor { queue: "inQ".into(), var: "xLocal".into() },
+                    CStmt::DataCopy {
+                        dst: TensorRef::base("xLocal"),
+                        src: TensorRef::at("xGm", CExpr::var("off")),
+                        count: CExpr::Int(64),
+                    },
+                    CStmt::EnQue { queue: "inQ".into(), var: "xLocal".into() },
+                ],
+            }],
+            process_body: vec![CStmt::For {
+                var: "t".into(),
+                start: CExpr::Int(0),
+                end: CExpr::var("nTiles"),
+                step: CExpr::Int(1),
+                body: vec![CStmt::CallStage {
+                    name: "CopyIn0".into(),
+                    args: vec![CExpr::mul(CExpr::var("t"), CExpr::Int(64))],
+                }],
+            }],
+        }
+    }
+
+    #[test]
+    fn callstage_is_spliced_with_substituted_args() {
+        let cfg = Cfg::build(&loop_kernel());
+        let mut copies = 0;
+        for b in &cfg.blocks {
+            for s in &b.stmts {
+                if let CStmt::DataCopy { src, .. } = &s.stmt {
+                    copies += 1;
+                    // `off` was substituted by `t * 64`
+                    assert_eq!(src.offset, CExpr::mul(CExpr::var("t"), CExpr::Int(64)));
+                    assert_eq!(
+                        s.stage,
+                        Some(("CopyIn0".to_string(), StageKind::CopyIn)),
+                    );
+                    assert_eq!(s.stmt_index, Some(1));
+                }
+            }
+        }
+        // peeled loop: the body appears twice (first + steady state)
+        assert_eq!(copies, 2);
+    }
+
+    #[test]
+    fn every_block_is_reachable_and_exit_postdominates() {
+        let cfg = Cfg::build(&loop_kernel());
+        // trivial reachability dataflow: count visited blocks
+        let entries = forward_fixpoint(&cfg, (), |_, _| (), |_, _| ());
+        assert!(entries.iter().all(|e| e.is_some()), "unreachable block in {entries:?}");
+        assert!(cfg.blocks[cfg.exit].succs.is_empty());
+    }
+
+    #[test]
+    fn fixpoint_counts_loop_statements_saturating() {
+        // saturating statement counter: loops converge via the cap at 9
+        let cfg = Cfg::build(&loop_kernel());
+        let entries = forward_fixpoint(
+            &cfg,
+            0usize,
+            |a: &usize, b: &usize| (*a).max(*b),
+            |blk: &Block, s: &usize| (s + blk.stmts.len()).min(9),
+        );
+        let exit_state = entries[cfg.exit].unwrap();
+        // init stmt + at least one loop iteration flowed to the exit
+        assert!(exit_state >= 4, "{exit_state}");
+    }
+}

@@ -1,0 +1,341 @@
+//! Pipeline-hazard and initialization checks (ASCAN201, ASCAN202,
+//! ASCAN401).
+//!
+//! * **ASCAN201** — a local tensor is used in one stage but only ever
+//!   defined (AllocTensor / DeQue / GetTBuf) in a *different* stage.
+//!   Local tensor handles are not shared state between stages; the only
+//!   legal way to move a tile across stages is a queue handoff, so a
+//!   cross-stage use means a dropped `DeQue` (the classic mutation) or
+//!   a stage boundary drawn through the middle of a computation.
+//! * **ASCAN202** — a global tensor is written by one stage and read by
+//!   another with *no* queue chain ordering the two. With double
+//!   buffering, stage invocations from adjacent loop iterations overlap
+//!   in time; only a queue dependency (transitively) pins their order.
+//!   Reported as a warning: per-core program order still sequences the
+//!   stages on the simulator, but the schedule is not pipeline-safe.
+//! * **ASCAN401** — a tensor local is used before any definition on the
+//!   straight-line stage path (error), or is never defined anywhere in
+//!   the kernel at all (warning, structural sibling of A509).
+//!
+//! This pass is structural (per-stage walks, no CFG): the properties
+//! are about *which stage* touches a name, not about path-sensitive
+//! counts.
+
+use crate::ascendc::ir::*;
+use crate::ascendc::validate::AscDiagnostic;
+use crate::diag::Severity;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// A recorded tensor-local definition or use inside one stage.
+struct Site {
+    name: String,
+    /// Index of the enclosing top-level statement in the stage body.
+    top_idx: usize,
+    /// True when the site sits inside nested control flow, where
+    /// straight-line ordering against other top-level sites is not
+    /// meaningful.
+    nested: bool,
+}
+
+/// Tensor names a statement *defines* (binds a fresh local handle).
+fn defs_of(stmt: &CStmt) -> Option<&str> {
+    match stmt {
+        CStmt::AllocTensor { var, .. }
+        | CStmt::DeQue { var, .. }
+        | CStmt::GetTBuf { var, .. } => Some(var),
+        _ => None,
+    }
+}
+
+/// Tensor names a statement *uses* (reads or writes through an existing
+/// handle). Scalar variables never appear here — `TensorRef`s and queue
+/// handles only.
+fn uses_of(stmt: &CStmt, out: &mut Vec<String>) {
+    let mut r = |t: &TensorRef| out.push(t.name.clone());
+    match stmt {
+        CStmt::DataCopy { dst, src, .. } | CStmt::DataCopyPad { dst, src, .. } => {
+            r(dst);
+            r(src);
+        }
+        CStmt::VecBin { dst, a, b, .. } => {
+            r(dst);
+            r(a);
+            r(b);
+        }
+        CStmt::VecScalar { dst, src, .. }
+        | CStmt::VecUn { dst, src, .. }
+        | CStmt::Reduce { dst, src, .. }
+        | CStmt::Scan { dst, src, .. } => {
+            r(dst);
+            r(src);
+        }
+        CStmt::Cast { dst, src, .. } => {
+            r(dst);
+            r(src);
+        }
+        CStmt::SelectGe { dst, cond, a, b, .. } => {
+            r(dst);
+            r(cond);
+            r(a);
+            r(b);
+        }
+        CStmt::Mmad { c, a, b, .. } => {
+            r(c);
+            r(a);
+            r(b);
+        }
+        CStmt::Duplicate { dst, .. } => r(dst),
+        CStmt::SetValue { tensor, .. } | CStmt::GetValue { tensor, .. } => r(tensor),
+        CStmt::EnQue { var, .. } | CStmt::FreeTensor { var, .. } => out.push(var.clone()),
+        _ => {}
+    }
+}
+
+/// Collect definition and use sites for one stage body, walking nested
+/// control flow but attributing inner sites to their enclosing
+/// top-level statement.
+fn collect_sites(body: &[CStmt]) -> (Vec<Site>, Vec<Site>) {
+    let mut defs = Vec::new();
+    let mut uses = Vec::new();
+    for (top_idx, top) in body.iter().enumerate() {
+        let nested_body = matches!(
+            top,
+            CStmt::For { .. } | CStmt::While { .. } | CStmt::If { .. }
+        );
+        top.walk(&mut |s| {
+            let nested = nested_body && !std::ptr::eq(s, top);
+            if let Some(d) = defs_of(s) {
+                defs.push(Site { name: d.to_string(), top_idx, nested });
+            }
+            let mut names = Vec::new();
+            uses_of(s, &mut names);
+            for name in names {
+                uses.push(Site { name, top_idx, nested });
+            }
+        });
+    }
+    (defs, uses)
+}
+
+pub fn check_hazards(kernel: &AscKernel) -> Vec<AscDiagnostic> {
+    let mut diags = Vec::new();
+
+    // names that are not tensor locals: globals, tbufs, queues
+    let mut not_local: BTreeSet<&str> = BTreeSet::new();
+    for g in &kernel.globals {
+        not_local.insert(&g.name);
+    }
+    for t in &kernel.tbufs {
+        not_local.insert(&t.name);
+    }
+    for q in &kernel.queues {
+        not_local.insert(&q.name);
+    }
+
+    // per-stage def/use sites
+    let mut stage_defs: BTreeMap<&str, Vec<Site>> = BTreeMap::new();
+    let mut stage_uses: BTreeMap<&str, Vec<Site>> = BTreeMap::new();
+    for st in &kernel.stages {
+        let (d, u) = collect_sites(&st.body);
+        stage_defs.insert(&st.name, d);
+        stage_uses.insert(&st.name, u);
+    }
+
+    // all definitions anywhere in the kernel (incl. init/process, which
+    // the transpiler never uses for tensor locals, but be permissive)
+    let mut all_defs: BTreeSet<String> = BTreeSet::new();
+    kernel.walk_stmts(|_, s| {
+        if let Some(d) = defs_of(s) {
+            all_defs.insert(d.to_string());
+        }
+    });
+
+    for st in &kernel.stages {
+        let defs = &stage_defs[st.name.as_str()];
+        let uses = &stage_uses[st.name.as_str()];
+        let own: BTreeSet<&str> = defs.iter().map(|s| s.name.as_str()).collect();
+        let mut reported: BTreeSet<(&str, &str)> = BTreeSet::new();
+        for u in uses {
+            let name = u.name.as_str();
+            if not_local.contains(name) {
+                continue;
+            }
+            if own.contains(name) {
+                // defined somewhere in this stage; flag only a definite
+                // straight-line use-before-def at top level
+                let first_def = defs
+                    .iter()
+                    .filter(|d| d.name == u.name)
+                    .map(|d| d.top_idx)
+                    .min()
+                    .unwrap();
+                if !u.nested && first_def > u.top_idx {
+                    let all_nested_defs =
+                        defs.iter().filter(|d| d.name == u.name).all(|d| d.nested);
+                    if !all_nested_defs && reported.insert(("401", name)) {
+                        let mut d = AscDiagnostic::new(
+                            "ASCAN401",
+                            Severity::Error,
+                            format!(
+                                "tensor '{}' is used before it is bound in stage {} — the \
+                                 first AllocTensor/DeQue/GetTBuf for it comes later in the \
+                                 stage body",
+                                name, st.name,
+                            ),
+                            &kernel.name,
+                            &st.name,
+                        );
+                        d.stmt = Some(u.top_idx);
+                        diags.push(d);
+                    }
+                }
+            } else if all_defs.contains(name) {
+                if reported.insert(("201", name)) {
+                    let where_def = kernel
+                        .stages
+                        .iter()
+                        .find(|s2| {
+                            stage_defs[s2.name.as_str()].iter().any(|d| d.name == u.name)
+                        })
+                        .map(|s2| s2.name.clone())
+                        .unwrap_or_else(|| "another body".into());
+                    let mut d = AscDiagnostic::new(
+                        "ASCAN201",
+                        Severity::Error,
+                        format!(
+                            "tensor '{}' is used in stage {} but only bound in {} — local \
+                             tiles cross stages only through an EnQue/DeQue handoff",
+                            name, st.name, where_def,
+                        ),
+                        &kernel.name,
+                        &st.name,
+                    );
+                    d.stmt = Some(u.top_idx);
+                    diags.push(d);
+                }
+            } else if reported.insert(("401w", name)) {
+                let mut d = AscDiagnostic::new(
+                    "ASCAN401",
+                    Severity::Warning,
+                    format!(
+                        "tensor '{}' is used in stage {} but never bound anywhere in kernel \
+                         '{}'",
+                        name, st.name, kernel.name,
+                    ),
+                    &kernel.name,
+                    &st.name,
+                );
+                d.stmt = Some(u.top_idx);
+                diags.push(d);
+            }
+        }
+    }
+
+    diags.extend(check_gm_ordering(kernel));
+    diags
+}
+
+/// ASCAN202: global-memory def/use pairs across stages not ordered by a
+/// queue chain.
+fn check_gm_ordering(kernel: &AscKernel) -> Vec<AscDiagnostic> {
+    let n = kernel.stages.len();
+    if n < 2 {
+        return Vec::new();
+    }
+    let globals: BTreeSet<&str> = kernel.globals.iter().map(|g| g.name.as_str()).collect();
+
+    // queue producer/consumer stage sets
+    let mut produces: BTreeMap<&str, BTreeSet<usize>> = BTreeMap::new();
+    let mut consumes: BTreeMap<&str, BTreeSet<usize>> = BTreeMap::new();
+    // per-stage GM writes/reads (through DataCopy-family and
+    // SetValue/GetValue — vector ops only touch UB locals)
+    let mut writes: Vec<BTreeSet<String>> = vec![BTreeSet::new(); n];
+    let mut reads: Vec<BTreeSet<String>> = vec![BTreeSet::new(); n];
+
+    for (i, st) in kernel.stages.iter().enumerate() {
+        for top in &st.body {
+            top.walk(&mut |s| match s {
+                CStmt::EnQue { queue, .. } => {
+                    produces.entry(queue).or_default().insert(i);
+                }
+                CStmt::DeQue { queue, .. } => {
+                    consumes.entry(queue).or_default().insert(i);
+                }
+                CStmt::DataCopy { dst, src, .. } | CStmt::DataCopyPad { dst, src, .. } => {
+                    if globals.contains(dst.name.as_str()) {
+                        writes[i].insert(dst.name.clone());
+                    }
+                    if globals.contains(src.name.as_str()) {
+                        reads[i].insert(src.name.clone());
+                    }
+                }
+                CStmt::SetValue { tensor, .. } => {
+                    if globals.contains(tensor.name.as_str()) {
+                        writes[i].insert(tensor.name.clone());
+                    }
+                }
+                CStmt::GetValue { tensor, .. } => {
+                    if globals.contains(tensor.name.as_str()) {
+                        reads[i].insert(tensor.name.clone());
+                    }
+                }
+                _ => {}
+            });
+        }
+    }
+
+    // reachability over the queue-handoff relation (Floyd–Warshall on a
+    // handful of stages)
+    let mut reach = vec![vec![false; n]; n];
+    for (q, prods) in &produces {
+        if let Some(cons) = consumes.get(q) {
+            for &p in prods {
+                for &c in cons {
+                    if p != c {
+                        reach[p][c] = true;
+                    }
+                }
+            }
+        }
+    }
+    for k in 0..n {
+        for i in 0..n {
+            for j in 0..n {
+                if reach[i][k] && reach[k][j] {
+                    reach[i][j] = true;
+                }
+            }
+        }
+    }
+
+    let mut diags = Vec::new();
+    let mut seen: BTreeSet<(usize, usize, String)> = BTreeSet::new();
+    for w in 0..n {
+        for r in 0..n {
+            if w == r {
+                continue;
+            }
+            // write-read and write-write pairs matter; read-read does not
+            for g in &writes[w] {
+                let conflicting = reads[r].contains(g) || writes[r].contains(g);
+                let key = (w.min(r), w.max(r), g.clone());
+                if conflicting && !reach[w][r] && !reach[r][w] && seen.insert(key) {
+                    let d = AscDiagnostic::new(
+                        "ASCAN202",
+                        Severity::Warning,
+                        format!(
+                            "global '{}' is written by stage {} and accessed by stage {} with \
+                             no queue handoff ordering them — under double buffering these \
+                             stage invocations may overlap",
+                            g, kernel.stages[w].name, kernel.stages[r].name,
+                        ),
+                        &kernel.name,
+                        &kernel.stages[w].name,
+                    );
+                    diags.push(d);
+                }
+            }
+        }
+    }
+    diags
+}

@@ -1,0 +1,433 @@
+//! Ascend-semantics static analyzer: CFG + dataflow lint over AscendC IR.
+//!
+//! The flat validator (`ascendc::validate`) checks structural rules one
+//! statement at a time. This module checks *path* properties — the ones
+//! the simulator only reveals by deadlocking or trapping at runtime:
+//!
+//! | pass       | codes                 | property                            |
+//! |------------|-----------------------|-------------------------------------|
+//! | [`queue`]  | ASCAN101–ASCAN104     | EnQue/DeQue/Alloc/Free balance,     |
+//! |            |                       | depth overflow, DeQue-on-empty,     |
+//! |            |                       | wrong-stage queue access            |
+//! | [`hazard`] | ASCAN201, 202, 401    | cross-stage tensor smuggling, GM    |
+//! |            |                       | races not ordered by queue handoff, |
+//! |            |                       | use-before-init                     |
+//! | [`budget`] | ASCAN301, ASCAN302    | UB byte budget (path-sensitive      |
+//! |            |                       | peak), tile-capacity overruns       |
+//! | [`bounds`] | ASCAN402              | GM indexing vs host tensor extents  |
+//!
+//! Everything runs over the concrete tiling in [`ValidateEnv`] plus the
+//! element counts of the launch's host tensors ([`AnalyzeEnv::numel`]),
+//! which is exactly the information the repair loop already has in
+//! hand. Findings are ordinary [`AscDiagnostic`]s with `ASCAN###`
+//! codes, so they flow through the same rendering, repair-feedback, and
+//! suite-metrics paths as validator output. Design rule: **errors are
+//! definite** (a concrete violated execution), anything merely possible
+//! is a warning — the lint gate and the differential harness count
+//! errors only.
+
+pub mod bounds;
+pub mod budget;
+pub mod cfg;
+pub mod hazard;
+pub mod queue;
+
+pub use cfg::Cfg;
+
+use crate::ascendc::ir::*;
+use crate::ascendc::validate::{AscDiagnostic, ValidateEnv};
+use std::collections::{BTreeMap, HashMap};
+
+/// Analysis environment: the validator's concrete tiling plus the
+/// element count of each host tensor that can be bound to a launch
+/// argument.
+pub struct AnalyzeEnv {
+    pub env: ValidateEnv,
+    /// host tensor name → element count
+    pub numel: HashMap<String, usize>,
+}
+
+impl AnalyzeEnv {
+    pub fn new(tiling: HashMap<String, i64>) -> AnalyzeEnv {
+        AnalyzeEnv { env: ValidateEnv::new(tiling), numel: HashMap::new() }
+    }
+
+    pub fn with_numel(mut self, numel: HashMap<String, usize>) -> AnalyzeEnv {
+        self.numel = numel;
+        self
+    }
+}
+
+/// Run every analysis pass over every kernel of the program.
+pub fn analyze(program: &AscProgram, aenv: &AnalyzeEnv) -> Vec<AscDiagnostic> {
+    let mut diags = Vec::new();
+    for kernel in &program.kernels {
+        let cfg = Cfg::build(kernel);
+        let report = queue::check_queues(kernel, &cfg);
+        let peak_slots = report.peak_slots;
+        diags.extend(report.diags);
+        diags.extend(hazard::check_hazards(kernel));
+        diags.extend(budget::check_budget(kernel, &aenv.env, &peak_slots));
+        for launch in &program.host.launches {
+            if launch.kernel != kernel.name {
+                continue;
+            }
+            let mut numel = BTreeMap::new();
+            for g in &kernel.globals {
+                if let Some(arg) = launch.args.get(g.arg_index) {
+                    if let Some(&n) = aenv.numel.get(arg) {
+                        numel.insert(g.name.clone(), n);
+                    }
+                }
+            }
+            let ctx = bounds::LaunchCtx {
+                env: &aenv.env,
+                numel,
+                block_dim: aenv.env.try_eval(&launch.block_dim),
+            };
+            diags.extend(bounds::check_bounds(kernel, &ctx));
+        }
+    }
+    // a kernel launched several times can repeat a bounds finding
+    let mut seen = std::collections::BTreeSet::new();
+    diags.retain(|d| {
+        seen.insert((d.code.clone(), d.kernel.clone(), d.stage.clone(), d.stmt, d.message.clone()))
+    });
+    diags
+}
+
+/// Errors only — what the lint gate and the repair loop act on.
+pub fn analyze_errors(program: &AscProgram, aenv: &AnalyzeEnv) -> Vec<AscDiagnostic> {
+    analyze(program, aenv).into_iter().filter(|d| d.is_error()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tensor::DType;
+
+    /// The canonical clean double-buffered pipeline: `y = exp(x)` tiled
+    /// over 16 tiles of 1024 f32 elements, depth-2 queues.
+    fn good_kernel() -> AscKernel {
+        AscKernel {
+            name: "exp_k".into(),
+            tiling_fields: vec!["tileLen".into(), "nTiles".into()],
+            globals: vec![
+                GlobalDecl { name: "xGm".into(), dtype: DType::F32, arg_index: 0 },
+                GlobalDecl { name: "yGm".into(), dtype: DType::F32, arg_index: 1 },
+            ],
+            queues: vec![
+                QueueDecl {
+                    name: "inQ".into(),
+                    pos: QueuePos::VecIn,
+                    depth: 2,
+                    dtype: DType::F32,
+                    capacity: 1024,
+                },
+                QueueDecl {
+                    name: "outQ".into(),
+                    pos: QueuePos::VecOut,
+                    depth: 2,
+                    dtype: DType::F32,
+                    capacity: 1024,
+                },
+            ],
+            tbufs: vec![],
+            init_body: vec![],
+            stages: vec![
+                StageFn {
+                    name: "CopyIn0".into(),
+                    kind: StageKind::CopyIn,
+                    params: vec!["off".into()],
+                    body: vec![
+                        CStmt::AllocTensor { queue: "inQ".into(), var: "xLocal".into() },
+                        CStmt::DataCopy {
+                            dst: TensorRef::base("xLocal"),
+                            src: TensorRef::at("xGm", CExpr::var("off")),
+                            count: CExpr::var("tileLen"),
+                        },
+                        CStmt::EnQue { queue: "inQ".into(), var: "xLocal".into() },
+                    ],
+                },
+                StageFn {
+                    name: "Compute0".into(),
+                    kind: StageKind::Compute,
+                    params: vec![],
+                    body: vec![
+                        CStmt::DeQue { queue: "inQ".into(), var: "xLocal".into() },
+                        CStmt::AllocTensor { queue: "outQ".into(), var: "yLocal".into() },
+                        CStmt::VecUn {
+                            op: VecUnOp::Exp,
+                            dst: TensorRef::base("yLocal"),
+                            src: TensorRef::base("xLocal"),
+                            count: CExpr::var("tileLen"),
+                        },
+                        CStmt::EnQue { queue: "outQ".into(), var: "yLocal".into() },
+                        CStmt::FreeTensor { queue: "inQ".into(), var: "xLocal".into() },
+                    ],
+                },
+                StageFn {
+                    name: "CopyOut0".into(),
+                    kind: StageKind::CopyOut,
+                    params: vec!["off".into()],
+                    body: vec![
+                        CStmt::DeQue { queue: "outQ".into(), var: "yLocal".into() },
+                        CStmt::DataCopy {
+                            dst: TensorRef::at("yGm", CExpr::var("off")),
+                            src: TensorRef::base("yLocal"),
+                            count: CExpr::var("tileLen"),
+                        },
+                        CStmt::FreeTensor { queue: "outQ".into(), var: "yLocal".into() },
+                    ],
+                },
+            ],
+            process_body: vec![CStmt::For {
+                var: "t".into(),
+                start: CExpr::Int(0),
+                end: CExpr::var("nTiles"),
+                step: CExpr::Int(1),
+                body: vec![
+                    CStmt::CallStage {
+                        name: "CopyIn0".into(),
+                        args: vec![CExpr::mul(CExpr::var("t"), CExpr::var("tileLen"))],
+                    },
+                    CStmt::CallStage { name: "Compute0".into(), args: vec![] },
+                    CStmt::CallStage {
+                        name: "CopyOut0".into(),
+                        args: vec![CExpr::mul(CExpr::var("t"), CExpr::var("tileLen"))],
+                    },
+                ],
+            }],
+        }
+    }
+
+    fn good_program() -> AscProgram {
+        AscProgram {
+            host: AscHost {
+                name: "exp_host".into(),
+                params: vec!["x".into(), "y".into()],
+                tiling_assigns: vec![],
+                launches: vec![Launch {
+                    kernel: "exp_k".into(),
+                    block_dim: CExpr::Int(1),
+                    args: vec!["x".into(), "y".into()],
+                }],
+            },
+            kernels: vec![good_kernel()],
+        }
+    }
+
+    fn env() -> AnalyzeEnv {
+        let tiling: HashMap<String, i64> =
+            [("tileLen".to_string(), 1024), ("nTiles".to_string(), 16)].into();
+        let numel: HashMap<String, usize> =
+            [("x".to_string(), 16384), ("y".to_string(), 16384)].into();
+        AnalyzeEnv::new(tiling).with_numel(numel)
+    }
+
+    fn codes(diags: &[AscDiagnostic]) -> Vec<String> {
+        diags.iter().map(|d| d.code.clone()).collect()
+    }
+
+    #[test]
+    fn clean_pipeline_is_silent() {
+        let diags = analyze(&good_program(), &env());
+        assert!(diags.is_empty(), "expected no findings, got {diags:?}");
+    }
+
+    #[test]
+    fn dropped_deque_flags_cross_stage_use() {
+        let mut p = good_program();
+        // drop the DeQue that binds xLocal in Compute0
+        p.kernels[0].stages[1].body.remove(0);
+        let errs = analyze_errors(&p, &env());
+        assert!(
+            codes(&errs).contains(&"ASCAN201".to_string()),
+            "want ASCAN201 in {errs:?}"
+        );
+        let d = errs.iter().find(|d| d.code == "ASCAN201").unwrap();
+        assert_eq!(d.kernel, "exp_k");
+        assert_eq!(d.stage, "Compute0");
+        assert!(d.message.contains("xLocal"), "{}", d.message);
+        // the unconsumed inQ also shows up as growing occupancy
+        let all = analyze(&p, &env());
+        assert!(codes(&all).contains(&"ASCAN102".to_string()), "{all:?}");
+    }
+
+    #[test]
+    fn depth_one_double_buffer_overflows() {
+        let mut p = good_program();
+        for q in &mut p.kernels[0].queues {
+            q.depth = 1;
+        }
+        // double-buffered schedule: two CopyIns in flight per iteration
+        let extra = CStmt::CallStage {
+            name: "CopyIn0".into(),
+            args: vec![CExpr::mul(CExpr::var("t"), CExpr::var("tileLen"))],
+        };
+        if let CStmt::For { body, .. } = &mut p.kernels[0].process_body[0] {
+            body.insert(1, extra);
+        }
+        let errs = analyze_errors(&p, &env());
+        assert!(
+            codes(&errs).contains(&"ASCAN102".to_string()),
+            "want ASCAN102 in {errs:?}"
+        );
+    }
+
+    #[test]
+    fn reordered_copyout_dequeues_empty_queue() {
+        let mut p = good_program();
+        if let CStmt::For { body, .. } = &mut p.kernels[0].process_body[0] {
+            let copyout = body.remove(2);
+            body.insert(0, copyout);
+        }
+        let errs = analyze_errors(&p, &env());
+        let d = errs.iter().find(|d| d.code == "ASCAN103");
+        assert!(d.is_some(), "want ASCAN103 error in {errs:?}");
+        assert_eq!(d.unwrap().stage, "CopyOut0");
+    }
+
+    #[test]
+    fn wrong_stage_queue_access_flagged() {
+        let mut p = good_program();
+        // EnQue into inQ (a VECIN queue) from the Compute stage
+        p.kernels[0].stages[1].body.insert(
+            1,
+            CStmt::EnQue { queue: "inQ".into(), var: "xLocal".into() },
+        );
+        let errs = analyze_errors(&p, &env());
+        assert!(
+            codes(&errs).contains(&"ASCAN104".to_string()),
+            "want ASCAN104 in {errs:?}"
+        );
+    }
+
+    #[test]
+    fn leaked_queue_entry_flagged_at_exit() {
+        let mut p = good_program();
+        // trailing EnQue after the pipeline loop, never consumed
+        p.kernels[0].process_body.push(CStmt::CallStage {
+            name: "CopyIn0".into(),
+            args: vec![CExpr::Int(0)],
+        });
+        let diags = analyze(&p, &env());
+        assert!(
+            codes(&diags).contains(&"ASCAN101".to_string()),
+            "want ASCAN101 in {diags:?}"
+        );
+        // trailing entry is on every path: definite leak
+        let d = diags.iter().find(|d| d.code == "ASCAN101").unwrap();
+        assert!(d.is_error(), "{d:?}");
+    }
+
+    #[test]
+    fn ub_oversubscription_reports_peak_live() {
+        let mut env = env();
+        env.env.ub_capacity = 8 * 1024; // queues need 2*2*1024*4 = 16 KiB
+        let errs = analyze_errors(&good_program(), &env);
+        let d = errs.iter().find(|d| d.code == "ASCAN301");
+        assert!(d.is_some(), "want ASCAN301 in {errs:?}");
+        assert!(d.unwrap().message.contains("peak live"), "{}", d.unwrap().message);
+    }
+
+    #[test]
+    fn oversized_tile_copy_flagged() {
+        let mut p = good_program();
+        if let CStmt::DataCopy { count, .. } = &mut p.kernels[0].stages[0].body[1] {
+            *count = CExpr::mul(CExpr::var("tileLen"), CExpr::Int(2));
+        }
+        let errs = analyze_errors(&p, &env());
+        assert!(
+            codes(&errs).contains(&"ASCAN302".to_string()),
+            "want ASCAN302 in {errs:?}"
+        );
+    }
+
+    #[test]
+    fn use_before_init_in_stage_flagged() {
+        let mut p = good_program();
+        // compute on yLocal before the AllocTensor that binds it
+        let body = &mut p.kernels[0].stages[1].body;
+        let alloc = body.remove(1);
+        body.insert(2, alloc);
+        let errs = analyze_errors(&p, &env());
+        let d = errs.iter().find(|d| d.code == "ASCAN401");
+        assert!(d.is_some(), "want ASCAN401 in {errs:?}");
+    }
+
+    #[test]
+    fn gm_overrun_detected_via_corner_evaluation() {
+        // same kernel, but the host tensors only hold 8 tiles
+        let tiling: HashMap<String, i64> =
+            [("tileLen".to_string(), 1024), ("nTiles".to_string(), 16)].into();
+        let numel: HashMap<String, usize> =
+            [("x".to_string(), 8192), ("y".to_string(), 8192)].into();
+        let env = AnalyzeEnv::new(tiling).with_numel(numel);
+        let errs = analyze_errors(&good_program(), &env);
+        let d = errs.iter().find(|d| d.code == "ASCAN402");
+        assert!(d.is_some(), "want ASCAN402 in {errs:?}");
+        assert!(d.unwrap().message.contains("16383"), "{}", d.unwrap().message);
+    }
+
+    #[test]
+    fn gm_bounds_respect_min_correlations() {
+        // tail tile: count = min(tileLen, total - off). Interval
+        // arithmetic would flag this; corner evaluation must not.
+        let mut p = good_program();
+        if let CStmt::DataCopy { count, .. } = &mut p.kernels[0].stages[0].body[1] {
+            *count = CExpr::Min(
+                Box::new(CExpr::var("tileLen")),
+                Box::new(CExpr::sub(CExpr::Int(16000), CExpr::var("off"))),
+            );
+        }
+        // also uncheckable in budget terms? count resolves via corner
+        // only — budget skips (off unresolved), bounds must stay silent
+        let tiling: HashMap<String, i64> =
+            [("tileLen".to_string(), 1024), ("nTiles".to_string(), 16)].into();
+        let numel: HashMap<String, usize> =
+            [("x".to_string(), 16000), ("y".to_string(), 16384)].into();
+        let env = AnalyzeEnv::new(tiling).with_numel(numel);
+        let errs = analyze_errors(&p, &env);
+        assert!(
+            !codes(&errs).contains(&"ASCAN402".to_string()),
+            "min-correlated tail copy is in bounds: {errs:?}"
+        );
+    }
+
+    #[test]
+    fn unordered_gm_write_read_warns() {
+        // two disconnected pipelines sharing a global: stage CopyOut0
+        // writes yGm, an extra CopyIn1 reads it with no queue chain
+        let mut p = good_program();
+        let k = &mut p.kernels[0];
+        k.queues.push(QueueDecl {
+            name: "in2Q".into(),
+            pos: QueuePos::VecIn,
+            depth: 2,
+            dtype: DType::F32,
+            capacity: 1024,
+        });
+        k.stages.push(StageFn {
+            name: "CopyIn1".into(),
+            kind: StageKind::CopyIn,
+            params: vec![],
+            body: vec![
+                CStmt::AllocTensor { queue: "in2Q".into(), var: "zLocal".into() },
+                CStmt::DataCopy {
+                    dst: TensorRef::base("zLocal"),
+                    src: TensorRef::at("yGm", CExpr::Int(0)),
+                    count: CExpr::var("tileLen"),
+                },
+                CStmt::EnQue { queue: "in2Q".into(), var: "zLocal".into() },
+            ],
+        });
+        k.process_body.push(CStmt::CallStage { name: "CopyIn1".into(), args: vec![] });
+        let diags = analyze(&p, &env());
+        let d = diags.iter().find(|d| d.code == "ASCAN202");
+        assert!(d.is_some(), "want ASCAN202 in {diags:?}");
+        assert!(!d.unwrap().is_error(), "ASCAN202 is advisory");
+        // but the dangling in2Q entry leaks — that part is real
+        assert!(codes(&diags).contains(&"ASCAN101".to_string()));
+    }
+}

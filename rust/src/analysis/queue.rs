@@ -1,0 +1,370 @@
+//! Queue-protocol checker (ASCAN101–ASCAN104).
+//!
+//! Runs an interval occupancy analysis over the kernel CFG. Each queue
+//! carries two intervals:
+//!
+//! * **entries** — items `EnQue`d but not yet `DeQue`d. On hardware a
+//!   `TQue` holds at most `depth` pending entries; enqueueing into a
+//!   full queue (or dequeueing from an empty one) blocks forever in the
+//!   single-threaded stage schedule, i.e. a pipeline deadlock.
+//! * **slots** — tensors `AllocTensor`d but not yet `FreeTensor`d. The
+//!   queue's buffer pool has `depth` slots; over-allocating also
+//!   deadlocks.
+//!
+//! Both intervals saturate at `depth + 1`, so the lattice is finite and
+//! the fixpoint converges without widening. After the fixpoint, a
+//! replay over each block emits diagnostics from *definite* facts
+//! (`lo`/`hi` bounds), so a clean double-buffered pipeline is silent:
+//! its loop bodies are occupancy-neutral, and the peeled first
+//! iteration proves every `DeQue` is preceded by a matching `EnQue`.
+
+use super::cfg::{forward_fixpoint, Block, Cfg, Spanned};
+use crate::ascendc::ir::*;
+use crate::ascendc::validate::AscDiagnostic;
+use crate::diag::Severity;
+use std::collections::BTreeMap;
+
+/// Interval `[lo, hi]` of possible counts at a program point.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct Interval {
+    lo: i64,
+    hi: i64,
+}
+
+impl Interval {
+    const ZERO: Interval = Interval { lo: 0, hi: 0 };
+
+    fn join(self, other: Interval) -> Interval {
+        Interval { lo: self.lo.min(other.lo), hi: self.hi.max(other.hi) }
+    }
+
+    fn bump(self, delta: i64, cap: i64) -> Interval {
+        Interval {
+            lo: (self.lo + delta).clamp(0, cap),
+            hi: (self.hi + delta).clamp(0, cap),
+        }
+    }
+}
+
+/// Per-queue occupancy: `entries` (EnQue/DeQue) and `slots`
+/// (AllocTensor/FreeTensor).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+struct Occupancy {
+    entries: Interval,
+    slots: Interval,
+}
+
+impl Default for Interval {
+    fn default() -> Interval {
+        Interval::ZERO
+    }
+}
+
+type QState = BTreeMap<String, Occupancy>;
+
+fn join_states(a: &QState, b: &QState) -> QState {
+    let mut out = a.clone();
+    for (k, v) in b {
+        let cur = out.entry(k.clone()).or_default();
+        cur.entries = cur.entries.join(v.entries);
+        cur.slots = cur.slots.join(v.slots);
+    }
+    out
+}
+
+fn apply(state: &mut QState, stmt: &CStmt, caps: &BTreeMap<String, i64>) {
+    let (queue, d_entries, d_slots) = match stmt {
+        CStmt::EnQue { queue, .. } => (queue, 1, 0),
+        CStmt::DeQue { queue, .. } => (queue, -1, 0),
+        CStmt::AllocTensor { queue, .. } => (queue, 0, 1),
+        CStmt::FreeTensor { queue, .. } => (queue, 0, -1),
+        _ => return,
+    };
+    let Some(&cap) = caps.get(queue) else { return }; // undeclared: A507's job
+    let occ = state.entry(queue.clone()).or_default();
+    if d_entries != 0 {
+        occ.entries = occ.entries.bump(d_entries, cap);
+    }
+    if d_slots != 0 {
+        occ.slots = occ.slots.bump(d_slots, cap);
+    }
+}
+
+/// Which stage kinds may legally perform which queue operation, given
+/// the queue's position (mirrors A201/A202 but along spliced paths).
+fn op_legal(pos: QueuePos, produces: bool, kind: StageKind) -> bool {
+    match (pos, produces) {
+        (QueuePos::VecIn, true) => kind == StageKind::CopyIn,
+        (QueuePos::VecIn, false) => kind == StageKind::Compute,
+        (QueuePos::VecOut, true) => kind == StageKind::Compute,
+        (QueuePos::VecOut, false) => kind == StageKind::CopyOut,
+    }
+}
+
+/// Results of the queue-protocol pass: diagnostics plus the peak
+/// simultaneous slot allocation observed per queue (consumed by the
+/// UB-budget pass for its "peak live" accounting).
+pub struct QueueReport {
+    pub diags: Vec<AscDiagnostic>,
+    pub peak_slots: BTreeMap<String, i64>,
+}
+
+pub fn check_queues(kernel: &AscKernel, cfg: &Cfg) -> QueueReport {
+    let mut caps = BTreeMap::new();
+    let mut depths = BTreeMap::new();
+    for q in &kernel.queues {
+        // saturation point one past the depth: enough to distinguish
+        // "at capacity" from "over capacity"
+        caps.insert(q.name.clone(), q.depth as i64 + 1);
+        depths.insert(q.name.clone(), q.depth as i64);
+    }
+
+    let init: QState = kernel
+        .queues
+        .iter()
+        .map(|q| (q.name.clone(), Occupancy::default()))
+        .collect();
+
+    let entries = forward_fixpoint(cfg, init, join_states, |blk: &Block, s: &QState| {
+        let mut out = s.clone();
+        for sp in &blk.stmts {
+            apply(&mut out, &sp.stmt, &caps);
+        }
+        out
+    });
+
+    let mut emit = Emitter { kernel, depths: &depths, diags: Vec::new(), seen: Vec::new() };
+
+    // replay each reachable block from its entry state, flagging
+    // definite protocol violations at the statement that commits them
+    for (b, blk) in cfg.blocks.iter().enumerate() {
+        let Some(entry) = &entries[b] else { continue };
+        let mut state = entry.clone();
+        for sp in &blk.stmts {
+            emit.visit(sp, &state);
+            apply(&mut state, &sp.stmt, &caps);
+        }
+    }
+
+    // leak check at kernel exit
+    if let Some(exit_state) = &entries[cfg.exit] {
+        // the exit block holds trailing statements; run them first
+        let mut state = exit_state.clone();
+        for sp in &cfg.blocks[cfg.exit].stmts {
+            apply(&mut state, &sp.stmt, &caps);
+        }
+        for (q, occ) in &state {
+            if occ.entries.lo > 0 || occ.slots.lo > 0 {
+                emit.push(
+                    "ASCAN101",
+                    Severity::Error,
+                    format!(
+                        "queue '{}' still holds {} entr{} / {} allocated slot{} at kernel exit \
+                         (leaked pipeline state)",
+                        q,
+                        occ.entries.lo,
+                        if occ.entries.lo == 1 { "y" } else { "ies" },
+                        occ.slots.lo,
+                        if occ.slots.lo == 1 { "" } else { "s" },
+                    ),
+                    None,
+                );
+            } else if occ.entries.hi > 0 || occ.slots.hi > 0 {
+                emit.push(
+                    "ASCAN101",
+                    Severity::Warning,
+                    format!(
+                        "queue '{q}' may hold up to {} entr{} / {} slot{} at kernel exit on \
+                         some path",
+                        occ.entries.hi,
+                        if occ.entries.hi == 1 { "y" } else { "ies" },
+                        occ.slots.hi,
+                        if occ.slots.hi == 1 { "" } else { "s" },
+                    ),
+                    None,
+                );
+            }
+        }
+    }
+
+    let mut peak_slots = BTreeMap::new();
+    for (b, blk) in cfg.blocks.iter().enumerate() {
+        let Some(entry) = &entries[b] else { continue };
+        let mut state = entry.clone();
+        for sp in &blk.stmts {
+            apply(&mut state, &sp.stmt, &caps);
+            for (q, occ) in &state {
+                let p = peak_slots.entry(q.clone()).or_insert(0i64);
+                *p = (*p).max(occ.slots.hi);
+            }
+        }
+    }
+    // a queue never touched still reserves depth slots statically
+    for q in &kernel.queues {
+        peak_slots.entry(q.name.clone()).or_insert(0);
+    }
+
+    QueueReport { diags: emit.diags, peak_slots }
+}
+
+struct Emitter<'k> {
+    kernel: &'k AscKernel,
+    depths: &'k BTreeMap<String, i64>,
+    diags: Vec<AscDiagnostic>,
+    /// dedupe key: (code, stage, stmt_index, queue) — the peeled loop
+    /// duplicates statements, and the fixpoint replay must not report
+    /// the same site twice
+    seen: Vec<(String, String, Option<usize>, String)>,
+}
+
+impl<'k> Emitter<'k> {
+    fn stage_name(sp: &Spanned) -> String {
+        sp.stage.as_ref().map(|(n, _)| n.clone()).unwrap_or_default()
+    }
+
+    fn push(&mut self, code: &str, sev: Severity, msg: String, site: Option<(&Spanned, &str)>) {
+        let (stage, idx, queue) = match site {
+            Some((sp, q)) => (Self::stage_name(sp), sp.stmt_index, q.to_string()),
+            None => (String::new(), None, msg.clone()),
+        };
+        let key = (code.to_string(), stage.clone(), idx, queue);
+        if self.seen.contains(&key) {
+            // keep the worst severity for a site reported twice
+            if sev == Severity::Error {
+                for d in &mut self.diags {
+                    if d.code == code && d.stage == stage && d.stmt == idx {
+                        if d.severity == Severity::Warning {
+                            d.severity = Severity::Error;
+                            d.message = msg.clone();
+                        }
+                        return;
+                    }
+                }
+            }
+            return;
+        }
+        self.seen.push(key);
+        let mut d = AscDiagnostic::new(code, sev, msg, &self.kernel.name, &stage);
+        d.stmt = idx;
+        self.diags.push(d);
+    }
+
+    fn visit(&mut self, sp: &Spanned, state: &QState) {
+        let (queue, produces, op) = match &sp.stmt {
+            CStmt::EnQue { queue, .. } => (queue, true, "EnQue"),
+            CStmt::DeQue { queue, .. } => (queue, false, "DeQue"),
+            CStmt::AllocTensor { queue, .. } => (queue, true, "AllocTensor"),
+            CStmt::FreeTensor { queue, .. } => (queue, false, "FreeTensor"),
+            _ => return,
+        };
+        let Some(&depth) = self.depths.get(queue) else { return };
+        let occ = state.get(queue).copied().unwrap_or_default();
+
+        // ASCAN104: queue op from a stage kind that can't legally touch
+        // this side of the queue
+        if let Some((_, kind)) = &sp.stage {
+            let pos = self.kernel.queue(queue).map(|q| q.pos);
+            if let Some(pos) = pos {
+                if !op_legal(pos, produces, *kind) {
+                    self.push(
+                        "ASCAN104",
+                        Severity::Error,
+                        format!(
+                            "{op} on {:?} queue '{queue}' from a {} stage — this side of the \
+                             queue belongs to the {} stage kind",
+                            pos,
+                            kind.name(),
+                            expected_kind(pos, produces),
+                        ),
+                        Some((sp, queue)),
+                    );
+                }
+            }
+        }
+
+        match &sp.stmt {
+            CStmt::EnQue { .. } => {
+                if occ.entries.lo >= depth {
+                    self.push(
+                        "ASCAN102",
+                        Severity::Error,
+                        format!(
+                            "EnQue on '{queue}' with {} entr{} already pending (depth {depth}) \
+                             — the pipeline deadlocks waiting for a free entry",
+                            occ.entries.lo,
+                            if occ.entries.lo == 1 { "y" } else { "ies" },
+                        ),
+                        Some((sp, queue)),
+                    );
+                } else if occ.entries.hi >= depth {
+                    self.push(
+                        "ASCAN102",
+                        Severity::Warning,
+                        format!(
+                            "EnQue on '{queue}' may find up to {} entries pending (depth \
+                             {depth}) on some path",
+                            occ.entries.hi,
+                        ),
+                        Some((sp, queue)),
+                    );
+                }
+            }
+            CStmt::AllocTensor { .. } => {
+                if occ.slots.lo >= depth {
+                    self.push(
+                        "ASCAN102",
+                        Severity::Error,
+                        format!(
+                            "AllocTensor on '{queue}' with {} slot{} already allocated (depth \
+                             {depth}) — the pipeline deadlocks waiting for a free slot",
+                            occ.slots.lo,
+                            if occ.slots.lo == 1 { "" } else { "s" },
+                        ),
+                        Some((sp, queue)),
+                    );
+                } else if occ.slots.hi >= depth {
+                    self.push(
+                        "ASCAN102",
+                        Severity::Warning,
+                        format!(
+                            "AllocTensor on '{queue}' may find up to {} slots allocated (depth \
+                             {depth}) on some path",
+                            occ.slots.hi,
+                        ),
+                        Some((sp, queue)),
+                    );
+                }
+            }
+            CStmt::DeQue { .. } => {
+                if occ.entries.hi == 0 {
+                    self.push(
+                        "ASCAN103",
+                        Severity::Error,
+                        format!(
+                            "DeQue on '{queue}' which is empty on every path reaching this \
+                             statement — the pipeline deadlocks waiting for an entry",
+                        ),
+                        Some((sp, queue)),
+                    );
+                } else if occ.entries.lo == 0 {
+                    self.push(
+                        "ASCAN103",
+                        Severity::Warning,
+                        format!("DeQue on '{queue}' which may be empty on some path"),
+                        Some((sp, queue)),
+                    );
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+fn expected_kind(pos: QueuePos, produces: bool) -> &'static str {
+    match (pos, produces) {
+        (QueuePos::VecIn, true) => "CopyIn",
+        (QueuePos::VecIn, false) => "Compute",
+        (QueuePos::VecOut, true) => "Compute",
+        (QueuePos::VecOut, false) => "CopyOut",
+    }
+}

@@ -24,11 +24,9 @@ use super::ir::*;
 use crate::util::tensor::DType;
 use std::collections::{HashMap, HashSet};
 
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Severity {
-    Error,
-    Warning,
-}
+// The one Severity shared by every checker in the crate (DSL validator,
+// this validator, and the static analyzer in `analysis/`).
+pub use crate::diag::Severity;
 
 /// A compiler-style diagnostic.
 #[derive(Clone, Debug, PartialEq)]
@@ -39,11 +37,42 @@ pub struct AscDiagnostic {
     /// Kernel and stage the diagnostic points into (empty = host).
     pub kernel: String,
     pub stage: String,
+    /// Top-level statement index inside the named stage body, if known.
+    pub stmt: Option<usize>,
+    /// Originating DSL source line, where the transpiler preserved one.
+    pub dsl_line: Option<usize>,
 }
 
 impl AscDiagnostic {
+    pub fn new(
+        code: &str,
+        severity: Severity,
+        message: String,
+        kernel: &str,
+        stage: &str,
+    ) -> AscDiagnostic {
+        AscDiagnostic {
+            code: code.into(),
+            severity,
+            message,
+            kernel: kernel.into(),
+            stage: stage.into(),
+            stmt: None,
+            dsl_line: None,
+        }
+    }
+
     pub fn is_error(&self) -> bool {
         self.severity == Severity::Error
+    }
+
+    /// `stage[#stmt]` rendering for lint output, empty for host findings.
+    pub fn location(&self) -> String {
+        match (self.stage.is_empty(), self.stmt) {
+            (true, _) => String::new(),
+            (false, None) => self.stage.clone(),
+            (false, Some(i)) => format!("{}#{i}", self.stage),
+        }
     }
 }
 
@@ -65,7 +94,8 @@ impl ValidateEnv {
 
     /// Try to evaluate a scalar expression using only tiling values and
     /// integer literals. Loop variables and block ids are not resolvable.
-    fn try_eval(&self, e: &CExpr) -> Option<i64> {
+    /// Public so the static analyzer (`analysis/`) shares one evaluator.
+    pub fn try_eval(&self, e: &CExpr) -> Option<i64> {
         match e {
             CExpr::Int(v) => Some(*v),
             CExpr::Float(_) => None,
@@ -129,27 +159,27 @@ pub fn validate_errors(program: &AscProgram, env: &ValidateEnv) -> Vec<AscDiagno
 fn validate_host(program: &AscProgram, diags: &mut Vec<AscDiagnostic>) {
     for launch in &program.host.launches {
         match program.kernel(&launch.kernel) {
-            None => diags.push(AscDiagnostic {
-                code: "A504".into(),
-                severity: Severity::Error,
-                message: format!("host launches unknown kernel '{}'", launch.kernel),
-                kernel: String::new(),
-                stage: String::new(),
-            }),
+            None => diags.push(AscDiagnostic::new(
+                "A504",
+                Severity::Error,
+                format!("host launches unknown kernel '{}'", launch.kernel),
+                "",
+                "",
+            )),
             Some(k) => {
                 if launch.args.len() != k.globals.len() {
-                    diags.push(AscDiagnostic {
-                        code: "A505".into(),
-                        severity: Severity::Error,
-                        message: format!(
+                    diags.push(AscDiagnostic::new(
+                        "A505",
+                        Severity::Error,
+                        format!(
                             "kernel '{}' declares {} GlobalTensor bindings but launch passes {} arguments",
                             k.name,
                             k.globals.len(),
                             launch.args.len()
                         ),
-                        kernel: k.name.clone(),
-                        stage: String::new(),
-                    });
+                        &k.name,
+                        "",
+                    ));
                 }
             }
         }
@@ -163,6 +193,8 @@ struct KernelChecker<'a> {
     /// local tensor var -> backing queue/tbuf dtype
     local_dtypes: HashMap<String, DType>,
     stage_name: String,
+    /// Top-level statement index within the body being checked, if any.
+    stmt_index: Option<usize>,
 }
 
 impl<'a> KernelChecker<'a> {
@@ -173,6 +205,8 @@ impl<'a> KernelChecker<'a> {
             message,
             kernel: self.kernel.name.clone(),
             stage: self.stage_name.clone(),
+            stmt: self.stmt_index,
+            dsl_line: None,
         });
     }
 
@@ -192,6 +226,7 @@ fn validate_kernel(kernel: &AscKernel, env: &ValidateEnv, diags: &mut Vec<AscDia
         diags,
         local_dtypes: HashMap::new(),
         stage_name: String::new(),
+        stmt_index: None,
     };
 
     // --- resource declarations ---
@@ -255,7 +290,8 @@ fn validate_kernel(kernel: &AscKernel, env: &ValidateEnv, diags: &mut Vec<AscDia
     // --- stage bodies ---
     // Init body: treated as scalar-only; queue ops are illegal there.
     ck.stage_name = "Init".into();
-    for stmt in &kernel.init_body {
+    for (i, stmt) in kernel.init_body.iter().enumerate() {
+        ck.stmt_index = Some(i);
         check_init_stmt(&mut ck, stmt);
     }
 
@@ -266,10 +302,12 @@ fn validate_kernel(kernel: &AscKernel, env: &ValidateEnv, diags: &mut Vec<AscDia
         ck.stage_name = stage.name.clone();
         ck.local_dtypes.clear();
         let mut balance: HashMap<String, QueueBalance> = HashMap::new();
-        for stmt in &stage.body {
+        for (i, stmt) in stage.body.iter().enumerate() {
+            ck.stmt_index = Some(i);
             check_stage_stmt(&mut ck, stage.kind, stmt, &mut balance);
         }
-        // queue traffic balance within the stage
+        // queue traffic balance within the stage (no single statement)
+        ck.stmt_index = None;
         for (qname, b) in balance {
             if b.alloc != b.enque && ck.kernel.queue(&qname).is_some() {
                 ck.err(
@@ -294,7 +332,8 @@ fn validate_kernel(kernel: &AscKernel, env: &ValidateEnv, diags: &mut Vec<AscDia
 
     // --- process body: only scalar control flow + stage calls + SyncAll ---
     ck.stage_name = "Process".into();
-    for stmt in &kernel.process_body {
+    for (i, stmt) in kernel.process_body.iter().enumerate() {
+        ck.stmt_index = Some(i);
         check_process_stmt(&mut ck, stmt, &stage_kinds);
     }
 }
@@ -910,6 +949,88 @@ mod tests {
         }
         let env = env_with(&[("tileLen", 1024), ("nTiles", 16)]);
         assert!(errors(&p, &env).contains(&"A103".to_string()));
+    }
+
+    #[test]
+    fn deque_in_wrong_stage_rejected() {
+        let mut p = good_program();
+        // move Compute's DeQue of the VECIN queue into the CopyIn stage
+        let deque = p.kernels[0].stages[1].body.remove(0);
+        p.kernels[0].stages[0].body.insert(0, deque);
+        let env = env_with(&[("tileLen", 1024), ("nTiles", 16)]);
+        let errs = errors(&p, &env);
+        assert!(errs.contains(&"A202".to_string()), "{errs:?}");
+    }
+
+    #[test]
+    fn unbalanced_deque_free_rejected() {
+        let mut p = good_program();
+        // drop Compute's FreeTensor: 1 DeQue vs 0 FreeTensor on inQ
+        p.kernels[0].stages[1].body.pop();
+        let env = env_with(&[("tileLen", 1024), ("nTiles", 16)]);
+        assert!(errors(&p, &env).contains(&"A204".to_string()));
+    }
+
+    #[test]
+    fn zero_capacity_queue_rejected() {
+        let mut p = good_program();
+        p.kernels[0].queues[0].capacity = 0;
+        let env = env_with(&[("tileLen", 1024), ("nTiles", 16)]);
+        assert!(errors(&p, &env).contains(&"A303".to_string()));
+    }
+
+    #[test]
+    fn duplicate_resource_name_rejected() {
+        let mut p = good_program();
+        p.kernels[0].tbufs.push(TBufDecl { name: "inQ".into(), dtype: DType::F32, capacity: 8 });
+        let env = env_with(&[("tileLen", 1024), ("nTiles", 16)]);
+        assert!(errors(&p, &env).contains(&"A304".to_string()));
+    }
+
+    #[test]
+    fn op_on_undeclared_queue_rejected() {
+        let mut p = good_program();
+        p.kernels[0].stages[0].body.insert(
+            0,
+            CStmt::AllocTensor { queue: "ghostQ".into(), var: "gLocal".into() },
+        );
+        let env = env_with(&[("tileLen", 1024), ("nTiles", 16)]);
+        assert!(errors(&p, &env).contains(&"A507".to_string()));
+    }
+
+    #[test]
+    fn unbound_tensor_reference_warns() {
+        let mut p = good_program();
+        p.kernels[0].stages[1].body.insert(
+            3,
+            CStmt::VecUn {
+                op: VecUnOp::Exp,
+                dst: TensorRef::base("yLocal"),
+                src: TensorRef::base("mystery"),
+                count: CExpr::var("tileLen"),
+            },
+        );
+        let env = env_with(&[("tileLen", 1024), ("nTiles", 16)]);
+        let all = validate(&p, &env);
+        assert!(all.iter().any(|d| d.code == "A509" && d.severity == Severity::Warning));
+        assert!(all.iter().all(|d| !d.is_error()), "{all:?}");
+    }
+
+    #[test]
+    fn diagnostics_carry_statement_locations() {
+        let mut p = good_program();
+        // the Compute-stage DataCopy lands at statement index 5
+        p.kernels[0].stages[1].body.push(CStmt::DataCopy {
+            dst: TensorRef::base("yLocal"),
+            src: TensorRef::at("xGm", CExpr::Int(0)),
+            count: CExpr::var("tileLen"),
+        });
+        let env = env_with(&[("tileLen", 1024), ("nTiles", 16)]);
+        let all = validate(&p, &env);
+        let d = all.iter().find(|d| d.code == "A501").expect("A501 fires");
+        assert_eq!(d.stmt, Some(5));
+        assert_eq!(d.location(), "Compute0#5");
+        assert_eq!(d.kernel, "exp_k");
     }
 
     #[test]

@@ -43,6 +43,11 @@ pub struct TaskResult {
     pub failure: Option<Diagnostic>,
     /// Number of repair-feedback rounds consumed across passes.
     pub repair_rounds: usize,
+    /// Error-severity findings from the static analyzer (`ASCAN###`
+    /// codes; 0 for tasks that never reached the analyze stage).
+    pub analysis_errors: usize,
+    /// Warning-severity analyzer findings.
+    pub analysis_warnings: usize,
     /// Wall-clock seconds the pipeline spent on this task.
     pub pipeline_secs: f64,
     /// Per-stage wall time + outcome, in execution order (the session's
@@ -79,6 +84,8 @@ impl TaskResult {
             .set("correct", self.correct)
             .set("eager_cycles", self.eager_cycles)
             .set("repair_rounds", self.repair_rounds)
+            .set("analysis_errors", self.analysis_errors)
+            .set("analysis_warnings", self.analysis_warnings)
             .set("pipeline_secs", self.pipeline_secs);
         match self.generated_cycles {
             Some(g) => j.set("generated_cycles", g),
@@ -259,6 +266,44 @@ impl SuiteResult {
         s
     }
 
+    /// Suite-wide analyzer-finding totals: (errors, warnings, tasks with
+    /// at least one finding).
+    pub fn analysis_totals(&self) -> (usize, usize, usize) {
+        let errors = self.results.iter().map(|r| r.analysis_errors).sum();
+        let warnings = self.results.iter().map(|r| r.analysis_warnings).sum();
+        let tasks = self
+            .results
+            .iter()
+            .filter(|r| r.analysis_errors + r.analysis_warnings > 0)
+            .count();
+        (errors, warnings, tasks)
+    }
+
+    /// Render per-suite static-analyzer statistics: one aligned row per
+    /// task with findings. Empty string when the whole suite analyzed
+    /// clean (the expected steady state).
+    pub fn render_analysis(&self) -> String {
+        let (errors, warnings, tasks) = self.analysis_totals();
+        if errors + warnings == 0 {
+            return String::new();
+        }
+        let mut s = String::new();
+        s.push_str(&format!(
+            "Static analysis ({errors} errors, {warnings} warnings across {tasks} tasks).\n\
+             {:<18} {:>8} {:>9}\n",
+            "Task", "Errors", "Warnings"
+        ));
+        for r in &self.results {
+            if r.analysis_errors + r.analysis_warnings > 0 {
+                s.push_str(&format!(
+                    "{:<18} {:>8} {:>9}\n",
+                    r.name, r.analysis_errors, r.analysis_warnings
+                ));
+            }
+        }
+        s
+    }
+
     /// Render Table 2 (performance by category) as aligned text. A run
     /// on a timing-less backend (no result carries cycles, e.g. cpu-ref)
     /// has no Fastₓ story at all: its cells render as `-` rather than a
@@ -304,13 +349,17 @@ impl SuiteResult {
             tasks.push(r.to_json());
         }
         let t = self.totals();
+        let (a_err, a_warn, a_tasks) = self.analysis_totals();
         let mut totals = Json::obj();
         totals
             .set("comp_pct", t.comp_pct())
             .set("pass_pct", t.pass_pct())
             .set("fast02_pct", t.fast02_pct())
             .set("fast08_pct", t.fast08_pct())
-            .set("fast10_pct", t.fast10_pct());
+            .set("fast10_pct", t.fast10_pct())
+            .set("analysis_errors", a_err)
+            .set("analysis_warnings", a_warn)
+            .set("analysis_flagged_tasks", a_tasks);
         let mut j = Json::obj();
         j.set("tasks", tasks).set("totals", totals);
         j
@@ -332,6 +381,8 @@ mod tests {
             eager_cycles: eager,
             failure: None,
             repair_rounds: 0,
+            analysis_errors: 0,
+            analysis_warnings: 0,
             pipeline_secs: 0.0,
             stage_timings: Vec::new(),
             golden: None,
@@ -428,6 +479,25 @@ mod tests {
         assert!(t1.contains("Total"));
         let t2 = s.render_table2();
         assert!(t2.contains("Fast0.2@1"));
+    }
+
+    #[test]
+    fn analysis_stats_render_and_serialize() {
+        let mut flagged = result(Category::Math, true, false, None, 1.0);
+        flagged.analysis_errors = 2;
+        flagged.analysis_warnings = 1;
+        let clean = result(Category::Math, true, true, Some(1.0), 1.0);
+        let s = SuiteResult { results: vec![clean.clone(), flagged] };
+        assert_eq!(s.analysis_totals(), (2, 1, 1));
+        let table = s.render_analysis();
+        assert!(table.contains("2 errors"), "{table}");
+        assert!(table.contains("1 warnings"), "{table}");
+        let j = s.to_json().to_string();
+        assert!(j.contains("\"analysis_errors\""), "{j}");
+        // a clean suite renders nothing
+        let quiet = SuiteResult { results: vec![clean] };
+        assert!(quiet.render_analysis().is_empty());
+        assert!(quiet.to_json().to_string().contains("\"analysis_flagged_tasks\":0"));
     }
 
     #[test]

@@ -201,7 +201,10 @@ mod tests {
     fn every_stage_is_timed_in_order() {
         let art = run("relu");
         let names: Vec<_> = art.result.stage_timings.iter().map(|r| r.name).collect();
-        assert_eq!(names, ["generate", "frontend", "transpile", "compile", "simulate", "score"]);
+        assert_eq!(
+            names,
+            ["generate", "frontend", "transpile", "analyze", "compile", "simulate", "score"]
+        );
         assert!(art.result.stage_timings.iter().all(|r| r.wall_secs >= 0.0));
         assert!(art.result.stage_timings.iter().all(|r| r.outcome == StageOutcome::Ok));
     }

@@ -2,9 +2,9 @@
 //! first-class, inspectable pipeline instead of one monolithic function.
 //!
 //! ```text
-//! generate ──► frontend ──► transpile (repair combinator) ──► compile
-//!                                                              │
-//!                      score ◄── simulate ◄───────────────────┘
+//! generate ──► frontend ──► transpile (repair combinator) ──► analyze ──► compile
+//!                                                                          │
+//!                                   score ◄── simulate ◄─────────────────┘
 //! ```
 //!
 //! Each box is a [`Stage`]: a named unit that reads and writes typed
@@ -51,6 +51,7 @@ use std::time::Instant;
 pub const STAGE_GENERATE: &str = "generate";
 pub const STAGE_FRONTEND: &str = "frontend";
 pub const STAGE_TRANSPILE: &str = "transpile";
+pub const STAGE_ANALYZE: &str = "analyze";
 pub const STAGE_COMPILE: &str = "compile";
 pub const STAGE_SIMULATE: &str = "simulate";
 pub const STAGE_SCORE: &str = "score";
@@ -141,12 +142,15 @@ impl From<AscDiagnostic> for Diagnostic {
         let mut message = d.message;
         if !d.kernel.is_empty() {
             message.push_str(&format!(" [kernel {}", d.kernel));
-            if !d.stage.is_empty() {
-                message.push_str(&format!(", stage {}", d.stage));
+            let loc = d.location();
+            if !loc.is_empty() {
+                message.push_str(&format!(", {loc}"));
             }
             message.push(']');
         }
-        Diagnostic::new(STAGE_COMPILE, &d.code, message)
+        let mut out = Diagnostic::new(STAGE_COMPILE, &d.code, message);
+        out.line = d.dsl_line;
+        out
     }
 }
 
@@ -221,6 +225,12 @@ pub struct Session {
     /// full validation of `program` (so the compile stage need not pay
     /// for a second one).
     pub transpiled: bool,
+    /// Static-analyzer findings from the analyze stage (queue protocol,
+    /// pipeline hazards, UB budget, GM bounds — the `ASCAN###` family).
+    pub analysis_diags: Vec<AscDiagnostic>,
+    /// Set by the analyze stage: `analysis_diags` reflects a full
+    /// analysis of `program`.
+    pub analyzed: bool,
     /// The backend-compiled kernel, once the compile stage ran. The
     /// program moves from [`Session::program`] into the kernel at that
     /// point (artifact dumps read it back via
@@ -256,6 +266,8 @@ impl Session {
             tiling: HashMap::new(),
             compile_diags: Vec::new(),
             transpiled: false,
+            analysis_diags: Vec::new(),
+            analyzed: false,
             kernel: None,
             exec: None,
             reference: None,
@@ -306,6 +318,8 @@ impl Session {
             eager_cycles: cfg.backend.eager_cycles(task, cfg.cores),
             failure,
             repair_rounds: self.repair_rounds,
+            analysis_errors: self.analysis_diags.iter().filter(|d| d.is_error()).count(),
+            analysis_warnings: self.analysis_diags.iter().filter(|d| !d.is_error()).count(),
             pipeline_secs: self.started.elapsed().as_secs_f64(),
             stage_timings: self.reports.clone(),
             // the golden (L2) cross-check is a suite-level concern: the
@@ -342,6 +356,7 @@ pub fn stage_list(cfg: &PipelineConfig) -> Vec<Box<dyn Stage>> {
             Box::new(GenerateStage),
             Box::new(FrontendStage),
             Box::new(RepairLoop { max_rounds: cfg.max_repair_rounds }),
+            Box::new(AnalyzeStage),
             Box::new(CompileStage),
             Box::new(SimulateStage),
             Box::new(ScoreStage),
@@ -430,10 +445,20 @@ impl Stage for TranspileStage {
     }
 }
 
+/// Build the analysis environment a session implies: the concrete
+/// tiling from host evaluation plus the element count of every host
+/// tensor (inputs, zeroed outputs, generator scratch) a launch argument
+/// can bind to.
+fn analysis_env(s: &Session) -> crate::analysis::AnalyzeEnv {
+    let numel = s.inputs.iter().map(|(n, t)| (n.clone(), t.numel())).collect();
+    crate::analysis::AnalyzeEnv::new(s.tiling.clone()).with_numel(numel)
+}
+
 /// The per-pass correction-feedback combinator (paper §4.2): wraps
-/// [`TranspileStage`], feeding validator errors to the repair engine and
-/// re-running until the program compiles cleanly or the round budget is
-/// spent. `max_rounds = 0` is the feedback-ablated configuration.
+/// [`TranspileStage`], feeding validator errors *and* static-analyzer
+/// errors to the repair engine and re-running until the program
+/// compiles and analyzes cleanly or the round budget is spent.
+/// `max_rounds = 0` is the feedback-ablated configuration.
 pub struct RepairLoop {
     pub max_rounds: usize,
 }
@@ -446,7 +471,13 @@ impl Stage for RepairLoop {
     fn run(&self, task: &TaskSpec, cfg: &PipelineConfig, s: &mut Session) -> Result<(), Diagnostic> {
         loop {
             TranspileStage.run(task, cfg, s)?;
-            let errors = s.compile_errors();
+            let mut errors = s.compile_errors();
+            // analyzer findings join the feedback: path-sensitive errors
+            // (queue protocol, UB budget, bounds) are repairable with the
+            // same rules as their flat-validator cousins
+            if let Some(program) = &s.program {
+                errors.extend(crate::analysis::analyze_errors(program, &analysis_env(s)));
+            }
             if errors.is_empty() {
                 return Ok(());
             }
@@ -495,6 +526,45 @@ impl Stage for RepairLoop {
                     return Err(d);
                 }
             }
+        }
+    }
+}
+
+/// Ascend-semantics static analysis over the transpiled program: CFG +
+/// dataflow passes for queue-protocol balance (ASCAN1xx), pipeline
+/// hazards and use-before-init (ASCAN2xx/ASCAN401), UB budget under the
+/// concrete tiling (ASCAN3xx), and GM bounds via corner evaluation
+/// (ASCAN402). All findings land in [`Session::analysis_diags`] and the
+/// session diagnostic list; the first error-severity finding fails the
+/// stage. Warnings never fail anything — the analyzer's contract is
+/// that errors describe a concrete violated execution.
+pub struct AnalyzeStage;
+
+impl Stage for AnalyzeStage {
+    fn name(&self) -> &'static str {
+        STAGE_ANALYZE
+    }
+
+    fn run(&self, _task: &TaskSpec, _cfg: &PipelineConfig, s: &mut Session) -> Result<(), Diagnostic> {
+        let program = s
+            .program
+            .as_ref()
+            .ok_or_else(|| Diagnostic::internal(STAGE_ANALYZE, "no AscendC program in session"))?;
+        let diags = crate::analysis::analyze(program, &analysis_env(s));
+        for d in &diags {
+            let mut diag = Diagnostic::from(d.clone());
+            diag.stage = STAGE_ANALYZE.to_string();
+            s.diagnostics.push(diag);
+        }
+        s.analysis_diags = diags;
+        s.analyzed = true;
+        match s.analysis_diags.iter().find(|d| d.is_error()) {
+            Some(first) => {
+                let mut d = Diagnostic::from(first.clone());
+                d.stage = STAGE_ANALYZE.to_string();
+                Err(d)
+            }
+            None => Ok(()),
         }
     }
 }
@@ -636,7 +706,13 @@ mod tests {
     fn conversions_keep_stage_and_code() {
         let d: Diagnostic = GenError::new("no template").into();
         assert_eq!((d.stage.as_str(), d.code.as_str()), (STAGE_GENERATE, "G001"));
-        let d: Diagnostic = DslDiagnostic { code: "D201".into(), message: "m".into(), line: 4 }.into();
+        let d: Diagnostic = DslDiagnostic {
+            code: "D201".into(),
+            message: "m".into(),
+            line: 4,
+            severity: crate::diag::Severity::Error,
+        }
+        .into();
         assert_eq!((d.stage.as_str(), d.line), (STAGE_FRONTEND, Some(4)));
         let d: Diagnostic = TranspileError::new("pass1", "H201", "tiling".into()).into();
         assert_eq!((d.stage.as_str(), d.code.as_str()), (STAGE_TRANSPILE, "H201"));
@@ -651,7 +727,15 @@ mod tests {
         let names: Vec<_> = full.iter().map(|s| s.name()).collect();
         assert_eq!(
             names,
-            [STAGE_GENERATE, STAGE_FRONTEND, STAGE_TRANSPILE, STAGE_COMPILE, STAGE_SIMULATE, STAGE_SCORE]
+            [
+                STAGE_GENERATE,
+                STAGE_FRONTEND,
+                STAGE_TRANSPILE,
+                STAGE_ANALYZE,
+                STAGE_COMPILE,
+                STAGE_SIMULATE,
+                STAGE_SCORE
+            ]
         );
         let direct = stage_list(&PipelineConfig {
             mode: PipelineMode::Direct,

@@ -1,0 +1,125 @@
+//! Shared diagnostic vocabulary: one `Severity` for every checker in the
+//! crate (DSL validator, AscendC validator, static analyzer) and the
+//! authoritative code tables pinned to `docs/DIAGNOSTICS.md` by
+//! `tests/diagnostics_spec.rs`.
+//!
+//! Every diagnostic family renders through the same
+//! `coordinator::stage::Diagnostic` `From` impls, so a code listed here
+//! is exactly what `--emit=diag`, `--emit=lint`, suite JSON, and the
+//! repair loop see.
+
+/// How bad a finding is. `Error` findings gate the pipeline (Comp@1 /
+/// the `lint` exit code); `Warning` findings are informational.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Severity {
+    Error,
+    Warning,
+}
+
+impl Severity {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+        }
+    }
+}
+
+/// DSL frontend codes (`dsl/validate.rs`, plus the parser's `P000`).
+pub const DSL_CODES: &[(&str, &str)] = &[
+    ("P000", "DSL source fails to parse"),
+    ("D101", "stage block nested inside another stage"),
+    ("D102", "kernel launch inside a kernel body"),
+    ("D103", "call to an unknown tile-language primitive"),
+    ("D104", "primitive used in the wrong stage kind"),
+    ("D105", "stage-only primitive used outside any stage block"),
+    ("D201", "tile buffer allocated inside a stage block"),
+    ("D202", "tile buffer allocated inside a loop or branch"),
+    ("D203", "tile buffer allocated twice"),
+    ("D204", "tile buffer name reassigned"),
+    ("D205", "tile buffer used before allocation"),
+    ("D301", "augmented assignment to an undefined name"),
+    ("D302", "launch of an unknown kernel"),
+    ("D303", "kernel launch arity mismatch"),
+    ("D304", "stage block in host code"),
+    ("D305", "kernel defined but never launched"),
+];
+
+/// AscendC structural-validator codes (`ascendc/validate.rs`).
+pub const ASC_CODES: &[(&str, &str)] = &[
+    ("A101", "DataCopy count not 32-byte aligned"),
+    ("A102", "DataCopy count not statically evaluable (warning)"),
+    ("A103", "GlobalTensor offset not 32-byte aligned"),
+    ("A201", "AllocTensor/EnQue in the wrong stage for the queue position"),
+    ("A202", "DeQue/FreeTensor in the wrong stage for the queue position"),
+    ("A203", "AllocTensor/EnQue imbalance inside a stage"),
+    ("A204", "DeQue/FreeTensor imbalance inside a stage"),
+    ("A301", "unified-buffer over-subscription under the concrete tiling"),
+    ("A302", "queue depth outside 1..=4"),
+    ("A303", "queue or TBuf declared with zero capacity"),
+    ("A304", "duplicate queue/TBuf/global resource name"),
+    ("A401", "unsupported element type for a queue or TBuf"),
+    ("A402", "bool global tensor or DataCopy of bool data"),
+    ("A501", "statement kind misplaced in Init/Process/stage structure"),
+    ("A502", "call to an undefined stage function"),
+    ("A503", "stage call arity mismatch"),
+    ("A504", "launch of an unknown kernel"),
+    ("A505", "kernel launch arity mismatch"),
+    ("A506", "compute or data-movement op directly in the Process body"),
+    ("A507", "queue/TBuf op on an undeclared resource"),
+    ("A508", "vector op applied to a GlobalTensor"),
+    ("A509", "tensor reference not visibly bound in its stage (warning)"),
+];
+
+/// Static-analyzer codes (`analysis/`): CFG/dataflow findings over the
+/// AscendC IR. Severity noted where a code is always a warning.
+pub const ANALYSIS_CODES: &[(&str, &str)] = &[
+    ("ASCAN101", "queue still holds live entries when Process exits (leak)"),
+    ("ASCAN102", "EnQue exceeds the declared queue depth on some path"),
+    ("ASCAN103", "DeQue on an empty queue (pipeline deadlock)"),
+    ("ASCAN104", "queue op executed by the wrong stage kind on some path"),
+    ("ASCAN201", "local tensor crosses stages without a queue handoff"),
+    ("ASCAN202", "GM tensor written and read by queue-unordered stages (warning)"),
+    ("ASCAN301", "UB reservation exceeds capacity under the concrete tiling"),
+    ("ASCAN302", "copy/vector count overruns the destination local buffer"),
+    ("ASCAN401", "local tensor used before it is initialized in its stage"),
+    ("ASCAN402", "GM access out of bounds for the launched tensor shapes"),
+];
+
+/// Look a code up across every table.
+pub fn describe(code: &str) -> Option<&'static str> {
+    DSL_CODES
+        .iter()
+        .chain(ASC_CODES.iter())
+        .chain(ANALYSIS_CODES.iter())
+        .find(|(c, _)| *c == code)
+        .map(|(_, d)| *d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn severity_names_render() {
+        assert_eq!(Severity::Error.name(), "error");
+        assert_eq!(Severity::Warning.name(), "warning");
+    }
+
+    #[test]
+    fn code_tables_are_sorted_and_unique() {
+        for table in [DSL_CODES, ASC_CODES, ANALYSIS_CODES] {
+            for pair in table.windows(2) {
+                assert!(pair[0].0 < pair[1].0, "{} must sort before {}", pair[0].0, pair[1].0);
+            }
+        }
+    }
+
+    #[test]
+    fn describe_finds_every_family() {
+        assert!(describe("D101").is_some());
+        assert!(describe("A301").is_some());
+        assert!(describe("ASCAN102").is_some());
+        assert!(describe("Z999").is_none());
+    }
+}

@@ -27,7 +27,12 @@ pub use validate::{validate_program, DslDiagnostic};
 /// before transcompilation begins.
 pub fn frontend(source: &str) -> Result<DslProgram, Vec<DslDiagnostic>> {
     let program = parser::parse_program(source).map_err(|e| {
-        vec![DslDiagnostic { code: "P000".into(), message: e.to_string(), line: e.line }]
+        vec![DslDiagnostic {
+            code: "P000".into(),
+            message: e.to_string(),
+            line: e.line,
+            severity: crate::diag::Severity::Error,
+        }]
     })?;
     let diags = validate::validate_program(&program);
     if diags.is_empty() {

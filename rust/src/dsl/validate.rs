@@ -15,6 +15,7 @@
 //! host) so the synthesizer's repair engine can pattern-match them.
 
 use super::ast::*;
+use crate::diag::Severity;
 use std::collections::{HashMap, HashSet};
 
 /// A validation diagnostic. `line` is 1-based source line. Converts into
@@ -25,11 +26,14 @@ pub struct DslDiagnostic {
     pub code: String,
     pub message: String,
     pub line: usize,
+    /// Every frontend rule is currently fatal; the field keeps the DSL
+    /// validator on the same severity vocabulary as the other checkers.
+    pub severity: Severity,
 }
 
 impl DslDiagnostic {
     fn new(code: &str, line: usize, message: String) -> DslDiagnostic {
-        DslDiagnostic { code: code.to_string(), message, line }
+        DslDiagnostic { code: code.to_string(), message, line, severity: Severity::Error }
     }
 }
 
@@ -544,6 +548,75 @@ def h(x):
     k[1](x, 64)
 ";
         assert!(codes(src).contains(&"D204".to_string()));
+    }
+
+    #[test]
+    fn launch_inside_kernel_flagged() {
+        let src = "
+@ascend_kernel
+def k(x_ptr, tile_len):
+    k[1](x_ptr, tile_len)
+
+def h(x):
+    k[1](x, 64)
+";
+        assert!(codes(src).contains(&"D102".to_string()));
+    }
+
+    #[test]
+    fn alloc_inside_stage_flagged() {
+        let src = "
+@ascend_kernel
+def k(x_ptr, tile_len):
+    with tl.copyin():
+        a_ub = tl.alloc_ub(tile_len, dtype=tl.float32)
+        tl.load(x_ptr, a_ub, tile_len)
+
+def h(x):
+    k[1](x, 64)
+";
+        assert!(codes(src).contains(&"D201".to_string()));
+    }
+
+    #[test]
+    fn augassign_of_undefined_name_flagged() {
+        let src = "
+@ascend_kernel
+def k(x_ptr, tile_len):
+    acc += 1
+
+def h(x):
+    k[1](x, 64)
+";
+        assert!(codes(src).contains(&"D301".to_string()));
+    }
+
+    #[test]
+    fn stage_block_in_host_flagged() {
+        let src = "
+@ascend_kernel
+def k(x_ptr):
+    pid = tl.program_id(0)
+
+def h(x):
+    k[1](x)
+    with tl.copyin():
+        pass
+";
+        assert!(codes(src).contains(&"D304".to_string()));
+    }
+
+    #[test]
+    fn dsl_diagnostics_are_errors_on_the_shared_severity() {
+        let d = &diags_for("
+@ascend_kernel
+def k(x_ptr):
+    acc += 1
+
+def h(x):
+    k[1](x)
+")[0];
+        assert_eq!(d.severity, Severity::Error);
     }
 
     #[test]

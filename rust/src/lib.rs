@@ -1,9 +1,11 @@
 //! AscendCraft: DSL-guided transcompilation for Ascend NPU kernel generation.
+pub mod analysis;
 pub mod ascendc;
 pub mod backend;
 pub mod baselines;
 pub mod bench_suite;
 pub mod coordinator;
+pub mod diag;
 pub mod dsl;
 pub mod mhc;
 pub mod runtime;

@@ -6,9 +6,11 @@
 //!                   [--tasks A,B,..] [--cores N] [--min-pass N]
 //!                   [--json PATH] [--quiet] [--golden]
 //!                   [--golden-seeds N]                  reproduce Tables 1+2
-//! ascendcraft compile TASK [--emit=dsl|ascendc|diag|timings] [--seed N]
+//! ascendcraft compile TASK [--emit=dsl|ascendc|diag|timings|lint] [--seed N]
 //!                   [--mode M] [--cores N]          staged pipeline, dump
 //!                   [--backend NAME]                any session artifact
+//! ascendcraft lint TASK|--all [--backend NAME]      static analyzer only
+//!                   [--seed N]                      (exit 1 on any error)
 //! ascendcraft gen --task NAME [--emit-dsl] [--emit-ascendc] [--emit-prompt]
 //! ascendcraft mhc [--rows N]                         RQ3 case study
 //! ascendcraft oracle [--op NAME] [--workers N]       golden cross-check
@@ -35,6 +37,7 @@ fn main() {
     let code = match args.first().map(String::as_str) {
         Some("suite") => cmd_suite(&args[1..]),
         Some("compile") => cmd_compile(&args[1..]),
+        Some("lint") => cmd_lint(&args[1..]),
         Some("gen") => cmd_gen(&args[1..]),
         Some("mhc") => cmd_mhc(&args[1..]),
         Some("oracle") => cmd_oracle(&args[1..]),
@@ -60,7 +63,8 @@ fn print_usage() {
          \n\
          USAGE:\n\
          \x20 ascendcraft suite [--mode ascendcraft|direct|generic] [--backend ascend-sim|cpu-ref|all] [--workers N] [--tasks A,B,..] [--cores N] [--min-pass N] [--json PATH] [--quiet] [--golden] [--golden-seeds N]\n\
-         \x20 ascendcraft compile TASK [--emit=dsl|ascendc|diag|timings] [--seed N] [--mode M] [--cores N] [--backend NAME]\n\
+         \x20 ascendcraft compile TASK [--emit=dsl|ascendc|diag|timings|lint] [--seed N] [--mode M] [--cores N] [--backend NAME]\n\
+         \x20 ascendcraft lint TASK|--all [--backend NAME] [--seed N]   static analyzer verdicts\n\
          \x20 ascendcraft gen --task NAME [--emit-dsl] [--emit-ascendc] [--emit-prompt]\n\
          \x20 ascendcraft mhc [--rows N]\n\
          \x20 ascendcraft oracle [--op NAME] [--workers N] [--seed N]\n\
@@ -227,6 +231,12 @@ fn cmd_suite(args: &[String]) -> i32 {
     let failures = suite.render_failures();
     if !failures.is_empty() {
         println!("{failures}");
+    }
+    // analyzer findings are silent in the steady state; any error or
+    // warning that survived the repair loop gets a per-task table
+    let analysis = suite.render_analysis();
+    if !analysis.is_empty() {
+        println!("{analysis}");
     }
     if let Some(path) = flag_value(args, "--json") {
         if let Err(e) = std::fs::write(path, suite.to_json().to_pretty()) {
@@ -431,8 +441,8 @@ fn cmd_compile(args: &[String]) -> i32 {
         return 2;
     };
     for kind in &emits {
-        if !matches!(kind.as_str(), "dsl" | "ascendc" | "diag" | "timings") {
-            eprintln!("unknown --emit kind '{kind}' (dsl|ascendc|diag|timings)");
+        if !matches!(kind.as_str(), "dsl" | "ascendc" | "diag" | "timings" | "lint") {
+            eprintln!("unknown --emit kind '{kind}' (dsl|ascendc|diag|timings|lint)");
             return 2;
         }
     }
@@ -457,6 +467,17 @@ fn cmd_compile(args: &[String]) -> i32 {
                 }
                 for d in &art.session.diagnostics {
                     println!("{d}");
+                }
+            }
+            "lint" => {
+                if !art.session.analyzed {
+                    println!("(analysis did not run — the pipeline failed earlier)");
+                } else if art.session.analysis_diags.is_empty() {
+                    println!("(analysis clean: 0 findings)");
+                } else {
+                    for d in &art.session.analysis_diags {
+                        println!("{}", render_finding(d));
+                    }
                 }
             }
             "timings" => {
@@ -491,6 +512,156 @@ fn cmd_compile(args: &[String]) -> i32 {
         println!("failure: {d}");
     }
     if r.correct {
+        0
+    } else {
+        1
+    }
+}
+
+/// Render one analyzer finding the way the CLI prints it: severity,
+/// stable ASCAN code, kernel/stage location, message.
+fn render_finding(d: &ascendcraft::ascendc::AscDiagnostic) -> String {
+    let loc = d.location();
+    if loc.is_empty() {
+        format!("{} {} [kernel {}] {}", d.severity.name(), d.code, d.kernel, d.message)
+    } else {
+        format!("{} {} [kernel {}, {}] {}", d.severity.name(), d.code, d.kernel, loc, d.message)
+    }
+}
+
+/// `ascendcraft lint TASK|--all`: run the DSL pipeline up to and including
+/// the static analyzer (generate → frontend → transpile+repair → analyze),
+/// print every finding, and gate the exit code on analyzer *errors* only.
+/// Tasks that fail before the analyzer can run (e.g. `mask_cumsum`'s
+/// unsupported dtype) are reported as skipped and do not fail the gate —
+/// unless the pre-analysis failure is itself an analyzer finding (an
+/// `ASCAN` code surfaced through the repair loop), which counts.
+fn cmd_lint(args: &[String]) -> i32 {
+    use ascendcraft::coordinator::pipeline::run_stages;
+    use ascendcraft::coordinator::stage::{
+        AnalyzeStage, FrontendStage, GenerateStage, RepairLoop, Stage,
+    };
+
+    let registry = BackendRegistry::builtin();
+    let mut cfg = PipelineConfig::default();
+    let mut all = false;
+    let mut task_name: Option<&str> = None;
+    let mut i = 0;
+    while i < args.len() {
+        let a = args[i].as_str();
+        if a == "--all" {
+            all = true;
+        } else if a == "--seed" {
+            i += 1;
+            match args.get(i).and_then(|v| v.parse::<u64>().ok()) {
+                Some(s) => cfg.seed = s,
+                None => {
+                    eprintln!("--seed expects an integer");
+                    return 2;
+                }
+            }
+        } else if a == "--backend" {
+            i += 1;
+            let Some(name) = args.get(i) else {
+                eprintln!("--backend requires a value ({})", registry.names().join("|"));
+                return 2;
+            };
+            match registry.get(name) {
+                Some(b) => cfg.backend = b,
+                None => {
+                    eprintln!(
+                        "unknown backend '{name}' (available: {})",
+                        registry.names().join(", ")
+                    );
+                    return 2;
+                }
+            }
+        } else if let Some(name) = a.strip_prefix("--backend=") {
+            match registry.get(name) {
+                Some(b) => cfg.backend = b,
+                None => {
+                    eprintln!(
+                        "unknown backend '{name}' (available: {})",
+                        registry.names().join(", ")
+                    );
+                    return 2;
+                }
+            }
+        } else if a.starts_with("--") {
+            eprintln!("unknown flag '{a}'");
+            return 2;
+        } else if task_name.is_none() {
+            task_name = Some(a);
+        } else {
+            eprintln!("unexpected argument '{a}'");
+            return 2;
+        }
+        i += 1;
+    }
+    let tasks = if all {
+        if task_name.is_some() {
+            eprintln!("lint takes a task name or --all, not both");
+            return 2;
+        }
+        all_tasks()
+    } else {
+        let Some(name) = task_name else {
+            eprintln!("lint requires a task name or --all (see 'ascendcraft list')");
+            return 2;
+        };
+        match task_by_name(name) {
+            Some(t) => vec![t],
+            None => {
+                eprintln!("unknown task '{name}'");
+                return 2;
+            }
+        }
+    };
+
+    // lint stops after the analyzer: no backend compile, no simulation
+    let stages: Vec<Box<dyn Stage>> = vec![
+        Box::new(GenerateStage),
+        Box::new(FrontendStage),
+        Box::new(RepairLoop { max_rounds: cfg.max_repair_rounds }),
+        Box::new(AnalyzeStage),
+    ];
+    let (mut errors, mut warnings, mut skipped) = (0usize, 0usize, 0usize);
+    for task in &tasks {
+        let art = run_stages(task, &cfg, &stages);
+        let s = &art.session;
+        if s.analyzed {
+            let e = s.analysis_diags.iter().filter(|d| d.is_error()).count();
+            let w = s.analysis_diags.len() - e;
+            errors += e;
+            warnings += w;
+            println!("  {:<18} {e} errors, {w} warnings", task.name);
+            for d in &s.analysis_diags {
+                println!("    {}", render_finding(d));
+            }
+        } else {
+            let failure = art.result.failure.as_ref();
+            let is_ascan = failure.map(|d| d.code.starts_with("ASCAN")).unwrap_or(false);
+            if is_ascan {
+                // the repair loop hit an unrepairable analyzer error before
+                // the analyze stage itself could run — that IS a lint error
+                errors += 1;
+                println!("  {:<18} 1 errors (unrepairable, via repair loop)", task.name);
+                if let Some(d) = failure {
+                    println!("    {d}");
+                }
+            } else {
+                skipped += 1;
+                let stage = failure.map(|d| d.stage.as_str()).unwrap_or("?");
+                let code = failure.map(|d| d.code.as_str()).unwrap_or("?");
+                println!("  {:<18} skipped (failed at {stage}: {code})", task.name);
+            }
+        }
+    }
+    println!(
+        "lint: {} tasks analyzed, {skipped} skipped, {errors} errors, {warnings} warnings",
+        tasks.len() - skipped,
+    );
+    if errors == 0 {
         0
     } else {
         1

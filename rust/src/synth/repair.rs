@@ -45,7 +45,10 @@ pub fn propose(
 ) -> Option<RepairOutcome> {
     for d in diags.iter().filter(|d| d.is_error()) {
         match d.code.as_str() {
-            "A301" => {
+            // the analyzer's path-sensitive UB verdict (ASCAN301) is
+            // repaired exactly like the flat validator's A301 — its
+            // message even says when dropping double buffering suffices
+            "A301" | "ASCAN301" => {
                 if options.queue_depth > 1 {
                     return Some(RepairOutcome {
                         dsl_source: dsl_source.to_string(),
@@ -72,8 +75,23 @@ pub fn propose(
                 }
                 return None;
             }
-            // no rule for unsupported dtypes (A401/A402) or structural
-            // errors (A2xx/A5xx — the transpiler doesn't produce them)
+            // an analyzer tile-capacity overrun: a smaller tile shrinks
+            // the offending copy count (best-effort — injected IR
+            // mutations stay unrepairable, which is the point)
+            "ASCAN302" => {
+                if let Some((src, old, new)) = halve_tile_constant(dsl_source) {
+                    return Some(RepairOutcome {
+                        dsl_source: src,
+                        options: options.clone(),
+                        applied: Repair::HalveTile { old, new },
+                    });
+                }
+                return None;
+            }
+            // no rule for unsupported dtypes (A401/A402), structural
+            // errors (A2xx/A5xx — the transpiler doesn't produce them),
+            // or analyzer protocol/hazard findings (ASCAN1xx/2xx/4xx —
+            // those indicate a broken schedule, not a tunable knob)
             _ => continue,
         }
     }
@@ -108,13 +126,7 @@ mod tests {
     use crate::ascendc::validate::Severity;
 
     fn diag(code: &str) -> AscDiagnostic {
-        AscDiagnostic {
-            code: code.into(),
-            severity: Severity::Error,
-            message: String::new(),
-            kernel: "k".into(),
-            stage: String::new(),
-        }
+        AscDiagnostic::new(code, Severity::Error, String::new(), "k", "")
     }
 
     #[test]
@@ -154,6 +166,28 @@ mod tests {
         let opts = TranspileOptions::default();
         assert!(propose(&[diag("A401")], "src", &opts).is_none());
         assert!(propose(&[diag("A402")], "src", &opts).is_none());
+    }
+
+    #[test]
+    fn analyzer_ub_verdict_repairs_like_a301() {
+        let opts = TranspileOptions::default();
+        let out = propose(&[diag("ASCAN301")], "tile_len = min(8192, per_core)", &opts).unwrap();
+        assert_eq!(out.applied, Repair::DropDoubleBuffering);
+        assert_eq!(out.options.queue_depth, 1);
+    }
+
+    #[test]
+    fn analyzer_tile_overrun_halves_tiles() {
+        let opts = TranspileOptions::default();
+        let out = propose(&[diag("ASCAN302")], "tile_len = min(8192, per_core)", &opts).unwrap();
+        assert_eq!(out.applied, Repair::HalveTile { old: 8192, new: 4096 });
+    }
+
+    #[test]
+    fn analyzer_protocol_findings_are_unrepairable() {
+        let opts = TranspileOptions::default();
+        assert!(propose(&[diag("ASCAN103")], "src", &opts).is_none());
+        assert!(propose(&[diag("ASCAN201")], "src", &opts).is_none());
     }
 
     #[test]

@@ -1,0 +1,323 @@
+//! Mutation-based differential tests for the static analyzer: inject
+//! known-bad schedule mutations into every task's transpiled program and
+//! assert that the analyzer flags each one with the expected stable
+//! `ASCAN` code — and that it stays silent (zero errors) on every clean
+//! program the transpiler actually produces.
+//!
+//! Four mutations, mirroring real Ascend pipeline bugs:
+//!
+//! * **drop-DeQue** — delete the first `DeQue` in a Compute stage: the
+//!   tile is consumed without the queue handoff (ASCAN201);
+//! * **depth-1 double buffer** — force every queue to depth 1 and issue
+//!   the CopyIn stage twice per iteration: the second `AllocTensor`
+//!   overflows the queue (ASCAN102);
+//! * **oversized tile** — double the first CopyIn `DataCopy` count: the
+//!   copy overruns the tile capacity and/or the GM extent
+//!   (ASCAN302/ASCAN402);
+//! * **reordered stages** — hoist the CopyOut call above the Compute
+//!   call: the first iteration dequeues an empty queue (ASCAN103).
+//!
+//! A final test confirms the analyzer's verdicts against the simulator:
+//! the mutations the functional model can observe (dropped DeQue,
+//! reordered stages, oversized copies) crash it, while the clean
+//! programs execute.
+
+use ascendcraft::analysis::{analyze, AnalyzeEnv};
+use ascendcraft::ascendc::ir::{AscProgram, CExpr, CStmt, StageKind};
+use ascendcraft::bench_suite::tasks::{all_tasks, task_by_name};
+use ascendcraft::coordinator::pipeline::{run_stages, PipelineConfig};
+use ascendcraft::coordinator::stage::{FrontendStage, GenerateStage, RepairLoop, Stage};
+use ascendcraft::sim;
+use ascendcraft::util::tensor::Tensor;
+use std::collections::{BTreeSet, HashMap};
+
+/// One task's transpiled (and repaired) program plus the concrete
+/// analysis environment its session implies.
+struct Built {
+    name: String,
+    program: AscProgram,
+    env: AnalyzeEnv,
+    inputs: HashMap<String, Tensor>,
+}
+
+/// Run every benchmark task up to the end of the repair loop and keep
+/// the ones that produced a program (`mask_cumsum` legitimately fails in
+/// the transpiler and is excluded here).
+fn build_all() -> Vec<Built> {
+    let cfg = PipelineConfig::default();
+    let stages: Vec<Box<dyn Stage>> = vec![
+        Box::new(GenerateStage),
+        Box::new(FrontendStage),
+        Box::new(RepairLoop { max_rounds: cfg.max_repair_rounds }),
+    ];
+    all_tasks()
+        .iter()
+        .filter_map(|task| {
+            let art = run_stages(task, &cfg, &stages);
+            let s = art.session;
+            let program = s.program?;
+            let numel: HashMap<String, usize> =
+                s.inputs.iter().map(|(n, t)| (n.clone(), t.numel())).collect();
+            Some(Built {
+                name: task.name.to_string(),
+                program,
+                env: AnalyzeEnv::new(s.tiling.clone()).with_numel(numel),
+                inputs: s.inputs,
+            })
+        })
+        .collect()
+}
+
+fn error_codes(program: &AscProgram, env: &AnalyzeEnv) -> BTreeSet<String> {
+    analyze(program, env).iter().filter(|d| d.is_error()).map(|d| d.code.clone()).collect()
+}
+
+/// Depth-first search for the first statement list where `f` applies;
+/// returns true once `f` mutated a body.
+fn first_body(body: &mut Vec<CStmt>, f: &mut impl FnMut(&mut Vec<CStmt>) -> bool) -> bool {
+    if f(body) {
+        return true;
+    }
+    for s in body.iter_mut() {
+        match s {
+            CStmt::For { body: b, .. } | CStmt::While { body: b, .. } => {
+                if first_body(b, f) {
+                    return true;
+                }
+            }
+            CStmt::If { then, orelse, .. } => {
+                if first_body(then, f) || first_body(orelse, f) {
+                    return true;
+                }
+            }
+            _ => {}
+        }
+    }
+    false
+}
+
+/// Names of a kernel's stages of one kind.
+fn stage_names(p: &AscProgram, ki: usize, kind: StageKind) -> BTreeSet<String> {
+    p.kernels[ki]
+        .stages
+        .iter()
+        .filter(|s| s.kind == kind)
+        .map(|s| s.name.clone())
+        .collect()
+}
+
+/// Mutation 1: delete the first `DeQue` in a Compute stage.
+fn drop_compute_deque(p: &AscProgram) -> Option<AscProgram> {
+    for (ki, k) in p.kernels.iter().enumerate() {
+        for (si, st) in k.stages.iter().enumerate() {
+            if st.kind != StageKind::Compute {
+                continue;
+            }
+            if let Some(i) = st.body.iter().position(|s| matches!(s, CStmt::DeQue { .. })) {
+                let mut m = p.clone();
+                m.kernels[ki].stages[si].body.remove(i);
+                return Some(m);
+            }
+        }
+    }
+    None
+}
+
+/// Mutation 2: force every queue to depth 1 and call the CopyIn stage
+/// twice per process iteration — the second `AllocTensor` has no free
+/// slot until a `FreeTensor` that never comes this iteration.
+fn depth_one_double_issue(p: &AscProgram) -> Option<AscProgram> {
+    let mut p = p.clone();
+    for ki in 0..p.kernels.len() {
+        let copyin = stage_names(&p, ki, StageKind::CopyIn);
+        if copyin.is_empty() {
+            continue;
+        }
+        let k = &mut p.kernels[ki];
+        let applied = first_body(&mut k.process_body, &mut |body| {
+            let pos = body.iter().position(
+                |s| matches!(s, CStmt::CallStage { name, .. } if copyin.contains(name)),
+            );
+            match pos {
+                Some(i) => {
+                    let dup = body[i].clone();
+                    body.insert(i + 1, dup);
+                    true
+                }
+                None => false,
+            }
+        });
+        if applied {
+            for q in &mut k.queues {
+                q.depth = 1;
+            }
+            return Some(p);
+        }
+    }
+    None
+}
+
+/// Mutation 3: double the element count of the first CopyIn `DataCopy`.
+fn oversize_copyin(p: &AscProgram) -> Option<AscProgram> {
+    for (ki, k) in p.kernels.iter().enumerate() {
+        for (si, st) in k.stages.iter().enumerate() {
+            if st.kind != StageKind::CopyIn {
+                continue;
+            }
+            let pos = st.body.iter().position(
+                |s| matches!(s, CStmt::DataCopy { .. } | CStmt::DataCopyPad { .. }),
+            );
+            if let Some(bi) = pos {
+                let mut m = p.clone();
+                if let CStmt::DataCopy { count, .. } | CStmt::DataCopyPad { count, .. } =
+                    &mut m.kernels[ki].stages[si].body[bi]
+                {
+                    *count = CExpr::mul(count.clone(), CExpr::Int(2));
+                }
+                return Some(m);
+            }
+        }
+    }
+    None
+}
+
+/// Mutation 4: hoist the CopyOut call above the Compute call in the
+/// process loop — its `DeQue` now runs before anything was enqueued.
+fn reorder_copyout_first(p: &AscProgram) -> Option<AscProgram> {
+    let mut p = p.clone();
+    for ki in 0..p.kernels.len() {
+        let compute = stage_names(&p, ki, StageKind::Compute);
+        let copyout = stage_names(&p, ki, StageKind::CopyOut);
+        if compute.is_empty() || copyout.is_empty() {
+            continue;
+        }
+        let k = &mut p.kernels[ki];
+        let applied = first_body(&mut k.process_body, &mut |body| {
+            let ci = body.iter().position(
+                |s| matches!(s, CStmt::CallStage { name, .. } if compute.contains(name)),
+            );
+            let oi = body.iter().position(
+                |s| matches!(s, CStmt::CallStage { name, .. } if copyout.contains(name)),
+            );
+            match (ci, oi) {
+                (Some(ci), Some(oi)) if ci < oi => {
+                    let call = body.remove(oi);
+                    body.insert(ci, call);
+                    true
+                }
+                _ => false,
+            }
+        });
+        if applied {
+            return Some(p);
+        }
+    }
+    None
+}
+
+/// Apply one mutation across the suite and assert every applicable task
+/// is flagged with an error carrying one of the expected codes.
+fn assert_mutation_flagged(
+    built: &[Built],
+    mutate: impl Fn(&AscProgram) -> Option<AscProgram>,
+    expected: &[&str],
+    min_applied: usize,
+    what: &str,
+) {
+    let mut applied = 0;
+    let mut missed = Vec::new();
+    for b in built {
+        let Some(mutant) = mutate(&b.program) else { continue };
+        applied += 1;
+        let codes = error_codes(&mutant, &b.env);
+        if !expected.iter().any(|c| codes.contains(*c)) {
+            missed.push(format!("{}: got {codes:?}", b.name));
+        }
+    }
+    assert!(
+        applied >= min_applied,
+        "{what}: mutation applied to only {applied} tasks (expected >= {min_applied})"
+    );
+    assert!(missed.is_empty(), "{what}: expected one of {expected:?} on every mutant:\n{}",
+        missed.join("\n"));
+}
+
+#[test]
+fn clean_transpiled_programs_analyze_without_errors() {
+    let built = build_all();
+    assert!(built.len() >= 45, "only {} tasks transpiled", built.len());
+    let mut dirty = Vec::new();
+    for b in &built {
+        let codes = error_codes(&b.program, &b.env);
+        if !codes.is_empty() {
+            dirty.push(format!("{}: {codes:?}", b.name));
+        }
+    }
+    assert!(dirty.is_empty(), "analyzer false positives on clean programs:\n{}", dirty.join("\n"));
+}
+
+#[test]
+fn dropped_deque_is_flagged_as_cross_stage_use() {
+    let built = build_all();
+    assert_mutation_flagged(&built, drop_compute_deque, &["ASCAN201"], 30, "drop-DeQue");
+}
+
+#[test]
+fn depth_one_double_buffering_overflows_the_queue() {
+    let built = build_all();
+    assert_mutation_flagged(&built, depth_one_double_issue, &["ASCAN102"], 30, "depth-1");
+}
+
+#[test]
+fn oversized_tile_copy_breaks_capacity_or_gm_bounds() {
+    let built = build_all();
+    assert_mutation_flagged(
+        &built,
+        oversize_copyin,
+        &["ASCAN302", "ASCAN402"],
+        30,
+        "oversized-tile",
+    );
+}
+
+#[test]
+fn reordered_copyout_dequeues_an_empty_queue() {
+    let built = build_all();
+    assert_mutation_flagged(&built, reorder_copyout_first, &["ASCAN103"], 25, "reorder");
+}
+
+#[test]
+fn analyzer_verdicts_agree_with_simulator_crashes() {
+    // the subset of mutations the functional simulator can observe:
+    // dropped handoffs and reordered stages dequeue empty queues or touch
+    // unbound locals; oversized copies overrun tensors. (The depth-1
+    // overflow is analyzer-only: the simulator's queue is unbounded.)
+    let sim_visible: [(&str, fn(&AscProgram) -> Option<AscProgram>); 3] = [
+        ("drop-DeQue", drop_compute_deque),
+        ("oversized-tile", oversize_copyin),
+        ("reorder", reorder_copyout_first),
+    ];
+    let cfg = PipelineConfig::default();
+    let stages: Vec<Box<dyn Stage>> = vec![
+        Box::new(GenerateStage),
+        Box::new(FrontendStage),
+        Box::new(RepairLoop { max_rounds: cfg.max_repair_rounds }),
+    ];
+    for name in ["relu", "softmax", "adam"] {
+        let task = task_by_name(name).unwrap();
+        let art = run_stages(&task, &cfg, &stages);
+        let s = art.session;
+        let program = s.program.expect("task transpiles");
+        assert!(
+            sim::simulate(&program, &s.inputs).is_ok(),
+            "{name}: clean program must simulate"
+        );
+        for (what, mutate) in sim_visible {
+            let Some(mutant) = mutate(&program) else { continue };
+            assert!(
+                sim::simulate(&mutant, &s.inputs).is_err(),
+                "{name}/{what}: the analyzer flags this mutant, so the simulator must crash too"
+            );
+        }
+    }
+}

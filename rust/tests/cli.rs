@@ -156,9 +156,66 @@ fn compile_emit_timings_lists_every_stage() {
     let out = bin().args(["compile", "relu", "--emit=timings"]).output().expect("run compile");
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
     let text = String::from_utf8_lossy(&out.stdout);
-    for stage in ["generate", "frontend", "transpile", "compile", "simulate", "score", "total"] {
+    let stages =
+        ["generate", "frontend", "transpile", "analyze", "compile", "simulate", "score", "total"];
+    for stage in stages {
         assert!(text.contains(stage), "missing '{stage}' in:\n{text}");
     }
+}
+
+#[test]
+fn compile_emit_lint_reports_a_clean_analysis() {
+    let out = bin().args(["compile", "relu", "--emit=lint"]).output().expect("run compile");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("analysis clean"), "{text}");
+}
+
+#[test]
+fn lint_single_task_exits_zero_on_clean_analysis() {
+    let out = bin().args(["lint", "relu"]).output().expect("run lint");
+    assert!(
+        out.status.success(),
+        "{}\n{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("0 errors"), "{text}");
+    assert!(text.contains("1 tasks analyzed, 0 skipped"), "{text}");
+}
+
+#[test]
+fn lint_skips_tasks_that_fail_before_analysis() {
+    // mask_cumsum dies in the transpiler (unsupported bool dtype) — lint
+    // reports the skip without failing the gate
+    let out = bin().args(["lint", "mask_cumsum"]).output().expect("run lint");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stdout));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("skipped (failed at transpile"), "{text}");
+    assert!(text.contains("0 tasks analyzed, 1 skipped"), "{text}");
+}
+
+#[test]
+fn lint_repaired_task_still_analyzes_clean() {
+    // adam trips the UB budget; the repair loop fixes it, so the final
+    // program must lint clean
+    let out = bin().args(["lint", "adam"]).output().expect("run lint");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stdout));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("0 errors"), "{text}");
+}
+
+#[test]
+fn lint_rejects_bad_usage() {
+    let out = bin().arg("lint").output().expect("run lint");
+    assert_eq!(out.status.code(), Some(2));
+    let out = bin().args(["lint", "not_a_task"]).output().expect("run lint");
+    assert_eq!(out.status.code(), Some(2));
+    let out = bin().args(["lint", "relu", "--all"]).output().expect("run lint");
+    assert_eq!(out.status.code(), Some(2));
+    let out = bin().args(["lint", "relu", "--backend", "tpu"]).output().expect("run lint");
+    assert_eq!(out.status.code(), Some(2));
 }
 
 #[test]

@@ -1,0 +1,90 @@
+//! Keeps `docs/DIAGNOSTICS.md` honest: the three code tables in the doc
+//! (between `<!-- dsl-codes -->`, `<!-- asc-codes -->`, and
+//! `<!-- analysis-codes -->` markers) must list exactly the codes and
+//! descriptions in `diag::{DSL_CODES, ASC_CODES, ANALYSIS_CODES}` — no
+//! more, no less, in the same order.
+
+use ascendcraft::diag::{describe, ANALYSIS_CODES, ASC_CODES, DSL_CODES};
+
+fn doc_text() -> String {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../docs/DIAGNOSTICS.md");
+    std::fs::read_to_string(path).expect("docs/DIAGNOSTICS.md is checked in")
+}
+
+/// Extract (code, description) from each table row between the markers;
+/// rows look like ``| `A301` | unified-buffer over-subscription ... |``.
+fn table_rows(doc: &str, begin: &str, end: &str) -> Vec<(String, String)> {
+    let start = doc.find(begin).unwrap_or_else(|| panic!("marker '{begin}' missing from doc"));
+    let stop = doc[start..]
+        .find(end)
+        .map(|o| start + o)
+        .unwrap_or_else(|| panic!("marker '{end}' missing from doc"));
+    let mut rows = Vec::new();
+    for line in doc[start..stop].lines() {
+        let line = line.trim();
+        let Some(cell) = line.strip_prefix('|').map(str::trim) else { continue };
+        // skip the header and separator rows
+        let Some(rest) = cell.strip_prefix('`') else { continue };
+        let Some(close) = rest.find('`') else { continue };
+        let code = rest[..close].to_string();
+        let desc = rest[close + 1..]
+            .trim_start_matches(|c: char| c.is_whitespace() || c == '|')
+            .trim_end_matches('|')
+            .trim()
+            .to_string();
+        rows.push((code, desc));
+    }
+    rows
+}
+
+fn assert_table_matches(doc: &str, begin: &str, end: &str, codes: &[(&str, &str)]) {
+    let documented = table_rows(doc, begin, end);
+    let source: Vec<(String, String)> =
+        codes.iter().map(|(c, d)| (c.to_string(), d.to_string())).collect();
+    assert_eq!(
+        documented, source,
+        "docs/DIAGNOSTICS.md table {begin} does not match diag.rs \
+         (update both sides in the same change)"
+    );
+}
+
+#[test]
+fn documented_dsl_codes_match_the_source() {
+    assert_table_matches(&doc_text(), "<!-- dsl-codes-begin -->", "<!-- dsl-codes-end -->", DSL_CODES);
+}
+
+#[test]
+fn documented_asc_codes_match_the_source() {
+    assert_table_matches(&doc_text(), "<!-- asc-codes-begin -->", "<!-- asc-codes-end -->", ASC_CODES);
+}
+
+#[test]
+fn documented_analysis_codes_match_the_source() {
+    assert_table_matches(
+        &doc_text(),
+        "<!-- analysis-codes-begin -->",
+        "<!-- analysis-codes-end -->",
+        ANALYSIS_CODES,
+    );
+}
+
+#[test]
+fn every_documented_code_resolves_through_describe() {
+    let doc = doc_text();
+    for (begin, end) in [
+        ("<!-- dsl-codes-begin -->", "<!-- dsl-codes-end -->"),
+        ("<!-- asc-codes-begin -->", "<!-- asc-codes-end -->"),
+        ("<!-- analysis-codes-begin -->", "<!-- analysis-codes-end -->"),
+    ] {
+        for (code, _) in table_rows(&doc, begin, end) {
+            assert!(describe(&code).is_some(), "documented code {code} unknown to diag::describe");
+        }
+    }
+}
+
+#[test]
+fn doc_states_the_error_gating_contract() {
+    let doc = doc_text();
+    assert!(doc.contains("exit code 1"), "doc must state the lint gate");
+    assert!(doc.contains("--emit=lint"), "doc must mention the compile --emit=lint dump");
+}

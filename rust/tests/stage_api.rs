@@ -8,8 +8,8 @@ use ascendcraft::baselines::eager::eager_cycles_with_cores;
 use ascendcraft::bench_suite::tasks::task_by_name;
 use ascendcraft::coordinator::pipeline::{run_stages, run_task, PipelineConfig, PipelineMode};
 use ascendcraft::coordinator::stage::{
-    CompileStage, Diagnostic, FrontendStage, GenerateStage, RepairLoop, ScoreStage, Session,
-    SimulateStage, Stage, StageOutcome, TranspileStage,
+    AnalyzeStage, CompileStage, Diagnostic, FrontendStage, GenerateStage, RepairLoop, ScoreStage,
+    Session, SimulateStage, Stage, StageOutcome, TranspileStage,
 };
 use ascendcraft::util::json::Json;
 
@@ -84,6 +84,40 @@ fn repair_loop_combinator_repairs_adam_and_counts_rounds() {
         "{:?}",
         s.diagnostics
     );
+    // the static analyzer's path-sensitive UB verdict (ASCAN301) joined
+    // the repair feedback alongside the flat validator's A301
+    assert!(
+        s.diagnostics.iter().any(|d| d.code == "ASCAN301" && d.message.contains("repaired")),
+        "{:?}",
+        s.diagnostics
+    );
+}
+
+#[test]
+fn analyze_stage_runs_standalone_and_passes_clean_programs() {
+    let task = task_by_name("relu").unwrap();
+    let cfg = PipelineConfig::default();
+    let mut s = Session::new(&task, &cfg);
+    GenerateStage.run(&task, &cfg, &mut s).unwrap();
+    FrontendStage.run(&task, &cfg, &mut s).unwrap();
+    TranspileStage.run(&task, &cfg, &mut s).unwrap();
+    AnalyzeStage.run(&task, &cfg, &mut s).unwrap();
+    assert!(s.analyzed);
+    assert!(
+        s.analysis_diags.iter().all(|d| !d.is_error()),
+        "transpiled relu must analyze clean: {:?}",
+        s.analysis_diags
+    );
+}
+
+#[test]
+fn analyze_stage_without_program_reports_internal_diagnostic() {
+    let task = task_by_name("relu").unwrap();
+    let cfg = PipelineConfig::default();
+    let mut s = Session::new(&task, &cfg);
+    let err = AnalyzeStage.run(&task, &cfg, &mut s).unwrap_err();
+    assert_eq!((err.stage.as_str(), err.code.as_str()), ("analyze", "X000"));
+    assert!(!s.analyzed);
 }
 
 #[test]
@@ -166,7 +200,10 @@ fn stage_timings_match_executed_stage_list() {
     // full pipeline, success: every stage present, in order, all ok
     let art = run_task(&task_by_name("relu").unwrap(), &PipelineConfig::default());
     let names: Vec<&str> = art.result.stage_timings.iter().map(|r| r.name).collect();
-    assert_eq!(names, ["generate", "frontend", "transpile", "compile", "simulate", "score"]);
+    assert_eq!(
+        names,
+        ["generate", "frontend", "transpile", "analyze", "compile", "simulate", "score"]
+    );
     assert!(art.result.stage_timings.iter().all(|r| r.outcome == StageOutcome::Ok));
     assert_eq!(art.session.stage_names(), names);
 

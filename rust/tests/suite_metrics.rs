@@ -19,6 +19,8 @@ fn task_result(name: &str, cat: Category, compiled: bool, correct: bool) -> Task
         eager_cycles: 1000.0,
         failure: None,
         repair_rounds: 0,
+        analysis_errors: 0,
+        analysis_warnings: 0,
         pipeline_secs: 0.0,
         stage_timings: Vec::new(),
         golden: None,
