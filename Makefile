@@ -8,7 +8,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: all build test bench smoke artifacts doc fmt clean
+.PHONY: all build test bench bench-snapshot smoke artifacts doc fmt clean
 
 all: build
 
@@ -20,6 +20,15 @@ test:
 
 bench: build
 	$(CARGO) bench
+
+# Re-measure the kernel-layer perf trajectory: runs the hotpath bench's
+# kernel groups (matmul naive-vs-tiled, elementwise/reduction thread
+# scaling) and rewrites BENCH_PR7.json at the repo root. The bench
+# self-validates the snapshot (reparse + required groups) and exits
+# non-zero on a malformed file. Add BENCH_QUICK=1 for the reduced-size
+# CI variant.
+bench-snapshot:
+	$(CARGO) bench --bench hotpath -- $(if $(BENCH_QUICK),--quick) --json BENCH_PR7.json
 
 # Release-mode end-to-end smoke over a small task subset with the golden
 # cross-check folded in: exercises the staged pipeline, the suite runner,

@@ -1,11 +1,21 @@
 //! Bench E7 — hot-path microbenchmarks for the §Perf optimization pass:
 //!
-//! * simulator elementwise throughput (modeled elements / wall second),
+//! * op-kernel layer: tiled/packed `matmul_acc` vs the naive reference,
+//!   and elementwise/reduction thread scaling on the worker pool
+//!   (bit-identical at every width — asserted before timing),
+//! * oracle: the compile-once/execute-many HLO plan vs the tree-walking
+//!   evaluator, plus wave-parallel plan execution,
 //! * full pipeline latency per task class (generation -> verified kernel),
 //! * suite wall-clock scaling with worker threads,
 //! * DSL frontend + transcompiler throughput.
 //!
 //! Run: `cargo bench --bench hotpath`
+//!
+//! Args (after `--`): `--quick` runs only the kernel groups at reduced
+//! sizes (the CI snapshot mode); `--json PATH` writes the kernel-group
+//! medians as a machine-readable snapshot (see `BENCH_PR7.json` at the
+//! repo root for the checked-in trajectory baseline) and exits non-zero
+//! if the snapshot fails its own validation.
 
 use ascendcraft::analysis::{analyze, AnalyzeEnv, Cfg};
 use ascendcraft::backend::{Backend as _, BackendRegistry};
@@ -17,23 +27,205 @@ use ascendcraft::runtime::hlo::{evaluate, parse_module, ExecutablePlan, PlanOpti
 use ascendcraft::runtime::GoldenOracle;
 use ascendcraft::synth::{templates::KnowledgeBaseSynthesizer, Generator};
 use ascendcraft::transpile::{transpile, TranspileOptions};
+use ascendcraft::util::json::Json;
+use ascendcraft::util::kernels::{self, UnaryOp};
+use ascendcraft::util::pool::WorkerPool;
+use ascendcraft::util::rng::XorShiftRng;
 use ascendcraft::util::tensor::Tensor;
 use std::time::Instant;
 
 fn time<T>(label: &str, iters: usize, mut f: impl FnMut() -> T) -> f64 {
     // warmup
     let _ = f();
-    let started = Instant::now();
+    let mut samples = Vec::with_capacity(iters);
     for _ in 0..iters {
+        let started = Instant::now();
         std::hint::black_box(f());
+        samples.push(started.elapsed().as_secs_f64());
     }
-    let secs = started.elapsed().as_secs_f64() / iters as f64;
+    samples.sort_by(f64::total_cmp);
+    let secs = samples[samples.len() / 2]; // median
     println!("{label:<46} {:>10.2} ms/iter", secs * 1e3);
     secs
 }
 
+/// Kernel-group medians collected for the machine-readable snapshot
+/// (`--json PATH`): `group -> metric -> value`. Serialization goes
+/// through [`Json`]'s BTreeMap objects, so file keys come out sorted
+/// and snapshot diffs stay stable across runs.
+#[derive(Default)]
+struct Snapshot {
+    groups: Vec<(String, Vec<(String, f64)>)>,
+}
+
+/// Groups the snapshot must contain — the CI quick-mode step fails when
+/// one is missing or the JSON does not reparse.
+const REQUIRED_GROUPS: [&str; 3] = ["matmul", "elementwise", "reduction"];
+
+impl Snapshot {
+    fn metric(&mut self, group: &str, name: &str, value: f64) {
+        match self.groups.iter_mut().find(|(g, _)| g == group) {
+            Some((_, metrics)) => metrics.push((name.to_string(), value)),
+            None => self.groups.push((group.to_string(), vec![(name.to_string(), value)])),
+        }
+    }
+
+    fn to_json(&self, quick: bool) -> Json {
+        let mut groups = Json::obj();
+        for (group, metrics) in &self.groups {
+            let mut g = Json::obj();
+            for (name, value) in metrics {
+                g.set(name, *value);
+            }
+            groups.set(group, g);
+        }
+        let mut j = Json::obj();
+        j.set("bench", "hotpath")
+            .set("version", 1usize)
+            .set("mode", if quick { "quick" } else { "full" })
+            .set("note", "ms metrics are medians; speedups are vs the serial baseline");
+        j.set("groups", groups);
+        j
+    }
+}
+
+fn write_snapshot(path: &str, snap: &Snapshot, quick: bool) -> Result<(), String> {
+    let text = snap.to_json(quick).to_pretty();
+    // self-validation before anything touches disk: the snapshot must
+    // reparse through the same hand-rolled JSON layer and contain every
+    // required group (a malformed trajectory file is worse than none)
+    let parsed = Json::parse(&text).map_err(|e| format!("snapshot does not reparse: {e}"))?;
+    let groups = match parsed.get("groups") {
+        Some(g) => g,
+        None => return Err("snapshot missing 'groups'".to_string()),
+    };
+    for g in REQUIRED_GROUPS {
+        if groups.get(g).is_none() {
+            return Err(format!("snapshot missing required group '{g}'"));
+        }
+    }
+    std::fs::write(path, text + "\n").map_err(|e| format!("write {path}: {e}"))
+}
+
 fn main() {
-    println!("hot-path microbenchmarks (release, single thread unless noted):\n");
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    println!(
+        "hot-path microbenchmarks (release, {}):\n",
+        if quick {
+            "quick mode: kernel groups only"
+        } else {
+            "single thread unless noted"
+        }
+    );
+
+    let mut snap = Snapshot::default();
+    let kiters = if quick { 3 } else { 5 };
+
+    // K1. matmul: the naive triple loop (the accumulation-order contract
+    // reference) vs the tiled/packed kernel, single thread. The largest
+    // shape is the acceptance gate for the tiling work.
+    println!("kernel: matmul_acc naive vs tiled/packed (1 thread):");
+    let serial = WorkerPool::new(1);
+    let shapes: &[(usize, usize, usize)] = if quick {
+        &[(96, 96, 96), (192, 192, 192)]
+    } else {
+        &[(128, 128, 128), (256, 256, 256), (384, 384, 384), (512, 512, 512)]
+    };
+    let mut rng = XorShiftRng::new(0xBE7C);
+    let mut matmul_speedup = 0.0;
+    for &(m, k, n) in shapes {
+        let a = rng.normal_vec(m * k);
+        let b = rng.normal_vec(k * n);
+        // bitwise identity before timing anything
+        let mut c_naive = vec![0.0f32; m * n];
+        kernels::matmul_acc_naive(&mut c_naive, &a, &b, m, k, n);
+        let mut c_tiled = vec![0.0f32; m * n];
+        serial.install(|| kernels::matmul_acc(&mut c_tiled, &a, &b, m, k, n));
+        assert!(
+            c_naive.iter().zip(&c_tiled).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "matmul {m}x{k}x{n}: tiled kernel diverged from naive"
+        );
+        let label = format!("{m}x{k}x{n}");
+        let mut c = vec![0.0f32; m * n];
+        let t_naive = time(&format!("matmul[{label}]: naive"), kiters, || {
+            kernels::fill(&mut c, 0.0);
+            kernels::matmul_acc_naive(&mut c, &a, &b, m, k, n);
+        });
+        let t_tiled = serial.install(|| {
+            time(&format!("matmul[{label}]: tiled"), kiters, || {
+                kernels::fill(&mut c, 0.0);
+                kernels::matmul_acc(&mut c, &a, &b, m, k, n);
+            })
+        });
+        matmul_speedup = t_naive / t_tiled;
+        println!("{:<46} {matmul_speedup:>9.2}x", "  -> tiled speedup vs naive");
+        snap.metric("matmul", &format!("{label} naive ms"), t_naive * 1e3);
+        snap.metric("matmul", &format!("{label} tiled ms"), t_tiled * 1e3);
+        snap.metric("matmul", &format!("{label} speedup"), matmul_speedup);
+    }
+    snap.metric("matmul", "largest shape speedup", matmul_speedup);
+    println!();
+
+    // K2. elementwise + row-reduction thread scaling on the worker pool.
+    // logistic is self-stabilizing (outputs in (0,1)), so re-running it
+    // in place does identical work every iteration; the reduction reads
+    // an immutable source. Partitions are deterministic and bit-identical
+    // at every width (see tests/determinism.rs).
+    println!("kernel: elementwise / reduction thread scaling:");
+    let n_elem = if quick { 1 << 21 } else { 1 << 24 };
+    let mut buf = rng.normal_vec(n_elem);
+    let mut base = 0.0;
+    for threads in [1usize, 2, 4] {
+        let pool = WorkerPool::new(threads);
+        let secs = pool.install(|| {
+            time(&format!("elementwise[logistic {n_elem}]: {threads} thr"), kiters, || {
+                kernels::unary_inplace(&mut buf, UnaryOp::Logistic)
+            })
+        });
+        if threads == 1 {
+            base = secs;
+        }
+        snap.metric("elementwise", &format!("logistic {threads}t ms"), secs * 1e3);
+        snap.metric("elementwise", &format!("logistic {threads}t speedup"), base / secs);
+    }
+    let cols = 1024usize;
+    let rows = n_elem / cols;
+    let src = std::mem::take(&mut buf);
+    let mut out = vec![0.0f32; rows];
+    let mut base_r = 0.0;
+    for threads in [1usize, 2, 4] {
+        let pool = WorkerPool::new(threads);
+        let secs = pool.install(|| {
+            time(&format!("reduction[row-sum {rows}x{cols}]: {threads} thr"), kiters, || {
+                kernels::reduce_rows_wide(&src, cols, 0.0, false, &mut out)
+            })
+        });
+        if threads == 1 {
+            base_r = secs;
+        }
+        snap.metric("reduction", &format!("row-sum {threads}t ms"), secs * 1e3);
+        snap.metric("reduction", &format!("row-sum {threads}t speedup"), base_r / secs);
+    }
+    println!();
+
+    if let Some(path) = &json_path {
+        match write_snapshot(path, &snap, quick) {
+            Ok(()) => println!("snapshot written to {path}\n"),
+            Err(e) => {
+                eprintln!("snapshot error: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+    if quick {
+        return;
+    }
 
     // 0. oracle group: the compile-once/execute-many HLO plan vs the
     // retired tree-walking evaluator, on checked-in fixtures. The
@@ -51,8 +243,11 @@ fn main() {
             ExecutablePlan::compile(&module).unwrap()
         });
         let plan = ExecutablePlan::compile(&module).unwrap();
-        let plan_noarena =
-            ExecutablePlan::compile_with(&module, PlanOptions { reuse_buffers: false }).unwrap();
+        let plan_noarena = ExecutablePlan::compile_with(
+            &module,
+            PlanOptions { reuse_buffers: false, parallel: false },
+        )
+        .unwrap();
 
         // sanity: identical numerics before timing anything
         let want = evaluate(&module, &ins).unwrap();
@@ -80,6 +275,29 @@ fn main() {
             "  -> plan speedup vs tree-walker",
             t_eval / t_plan,
             t_eval / t_noarena
+        );
+
+        // wave-parallel plan execution on a 4-thread pool (independent
+        // steps run concurrently; numerics stay bitwise — the schedule
+        // only reorders hazard-free steps)
+        let plan_par = ExecutablePlan::compile_with(
+            &module,
+            PlanOptions { reuse_buffers: true, parallel: true },
+        )
+        .unwrap();
+        let wave_pool = WorkerPool::new(4);
+        let mut pscratch = PlanScratch::default();
+        let t_waves = wave_pool.install(|| {
+            time(&format!("oracle[{name}]: plan execute (waves, 4 thr)"), 5, || {
+                plan_par.execute_with_scratch(&ins, &mut pscratch).unwrap()
+            })
+        });
+        println!(
+            "{:<46} {:>9.2}x ({} waves / {} steps)",
+            "  -> wave-parallel speedup vs serial plan",
+            t_plan / t_waves,
+            plan_par.wave_count(),
+            plan_par.step_count()
         );
 
         // batched multi-seed execution (the suite --golden-seeds path):
@@ -257,13 +475,14 @@ fn main() {
     let mut base = 0.0;
     let max_workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     for workers in [1usize, 2, 4, 8].into_iter().filter(|w| *w <= max_workers.max(2)) {
+        let pool = WorkerPool::new(workers);
         let cfg = SuiteConfig {
             workers,
             verbose: false,
             ..Default::default()
         };
         let started = Instant::now();
-        let suite = run_suite(&slice, &cfg);
+        let suite = pool.install(|| run_suite(&slice, &cfg));
         let secs = started.elapsed().as_secs_f64();
         assert!(suite.totals().correct == slice.len());
         if workers == 1 {

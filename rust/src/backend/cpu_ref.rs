@@ -15,6 +15,11 @@
 //!
 //! Because there is no timing model, [`ExecOutput::cycles`] is `None`:
 //! cpu-ref tasks have no Fastₓ speedup (functional triage only).
+//!
+//! Speed comes from the kernel layer itself: cpu-ref inherits the tiled/
+//! packed `matmul_acc` and the pool-parallel elementwise/reduction splits
+//! (bit-identical at any `--threads` setting), which is what keeps this
+//! triage path cheap on large shapes.
 
 use super::{
     compile_with_validator, Backend, CompileReport, CompiledKernel, ExecOutput, BACKEND_CPU_REF,

@@ -1,8 +1,12 @@
-//! Codegen service: a worker pool that runs many kernel-generation jobs
-//! concurrently and aggregates suite results. This is the deployment shape
-//! of AscendCraft — a service that takes kernel requests (task specs) and
-//! returns verified AscendC — scaled down to std threads (tokio is not in
-//! the offline crate set; generation jobs are CPU-bound anyway).
+//! Codegen service: runs many kernel-generation jobs concurrently on the
+//! shared persistent worker pool ([`crate::util::pool`]) and aggregates
+//! suite results. This is the deployment shape of AscendCraft — a service
+//! that takes kernel requests (task specs) and returns verified AscendC —
+//! scaled down to std threads (tokio is not in the offline crate set;
+//! generation jobs are CPU-bound anyway). Jobs claim work in index order
+//! off one atomic counter, so a slow task never serializes the rest, and
+//! nested parallelism (a job's own kernel/plan work) shares the same pool
+//! without oversubscribing.
 
 use super::pipeline::{run_task, PipelineArtifacts, PipelineConfig};
 use crate::backend::Backend;
@@ -11,7 +15,7 @@ use crate::bench_suite::spec::TaskSpec;
 use crate::runtime::OracleRegistry;
 use crate::util::compare::allclose_report;
 use crate::util::json::Json;
-use std::sync::mpsc;
+use crate::util::pool;
 use std::sync::{Arc, Mutex};
 
 /// Suite-run configuration.
@@ -39,7 +43,7 @@ impl Default for SuiteConfig {
     fn default() -> SuiteConfig {
         SuiteConfig {
             pipeline: PipelineConfig::default(),
-            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            workers: pool::configured_threads(),
             verbose: false,
             golden: None,
             golden_seeds: 1,
@@ -130,83 +134,60 @@ pub fn run_suite_multi(
 /// output stays byte-identical to the pre-registry suite).
 fn run_jobs(jobs: &[Job], cfg: &SuiteConfig, tag_backend: bool) -> Vec<PipelineArtifacts> {
     let n = jobs.len();
-    let next = Arc::new(Mutex::new(0usize));
-    let (tx, rx) = mpsc::channel::<(usize, PipelineArtifacts)>();
-
-    std::thread::scope(|scope| {
-        for _ in 0..cfg.workers.max(1).min(n.max(1)) {
-            let next = Arc::clone(&next);
-            let tx = tx.clone();
-            let verbose = cfg.verbose;
-            let golden = cfg.golden.clone();
-            let golden_seeds = cfg.golden_seeds;
-            scope.spawn(move || loop {
-                let idx = {
-                    let mut guard = next.lock().unwrap();
-                    if *guard >= n {
-                        return;
-                    }
-                    let i = *guard;
-                    *guard += 1;
-                    i
-                };
-                let job = &jobs[idx];
-                let mut art = run_task(job.task, &job.pipeline);
-                if job.golden {
-                    if let Some(reg) = &golden {
-                        // the L2↔L3 cross-check shards across the same
-                        // worker pool as the pipeline runs (the compiled,
-                        // Send + Sync oracle is shared by all workers);
-                        // all seeds of the task run through one batched
-                        // oracle execution
-                        let seeds: Vec<u64> = (0..golden_seeds.max(1) as u64)
-                            .map(|k| job.pipeline.seed + k)
-                            .collect();
-                        let per_seed = cross_check_task_seeds(job.task, reg, &seeds);
-                        art.result.golden = Some(summarize_golden(&per_seed));
-                        art.result.golden_seeds = per_seed;
-                    }
-                }
-                if verbose {
-                    let r = &art.result;
-                    let status = if r.correct {
-                        format!("pass  {:>7.2}x", r.speedup().unwrap_or(0.0))
-                    } else if r.compiled {
-                        "WRONG     ".to_string()
-                    } else {
-                        "NOCOMPILE ".to_string()
-                    };
-                    let golden_note = match &r.golden {
-                        Some(g) if g.checked && !g.ok => "  golden:FAIL",
-                        Some(g) if g.checked => "  golden:ok",
-                        _ => "",
-                    };
-                    // failures are structured: name the stage + code inline
-                    let fail_note = r
-                        .failure
-                        .as_ref()
-                        .map(|d| format!("  [{} {}]", d.stage, d.code))
-                        .unwrap_or_default();
-                    let backend_note =
-                        if tag_backend { format!("  @{}", r.backend) } else { String::new() };
-                    eprintln!(
-                        "[{:>2}/{n}] {:<18} {status}  ({} repairs, {:.2}s){golden_note}{fail_note}{backend_note}",
-                        idx + 1,
-                        r.name,
-                        r.repair_rounds,
-                        r.pipeline_secs
-                    );
-                }
-                let _ = tx.send((idx, art));
-            });
+    let slots: Vec<Mutex<Option<PipelineArtifacts>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    pool::global().run_bounded(n, cfg.workers.max(1), |idx| {
+        let job = &jobs[idx];
+        let mut art = run_task(job.task, &job.pipeline);
+        if job.golden {
+            if let Some(reg) = &cfg.golden {
+                // the L2↔L3 cross-check shards across the same worker
+                // pool as the pipeline runs (the compiled, Send + Sync
+                // oracle is shared by all workers); all seeds of the
+                // task run through one batched oracle execution
+                let seeds: Vec<u64> = (0..cfg.golden_seeds.max(1) as u64)
+                    .map(|k| job.pipeline.seed + k)
+                    .collect();
+                let per_seed = cross_check_task_seeds(job.task, reg, &seeds);
+                art.result.golden = Some(summarize_golden(&per_seed));
+                art.result.golden_seeds = per_seed;
+            }
         }
-        drop(tx);
-        let mut out: Vec<Option<PipelineArtifacts>> = (0..n).map(|_| None).collect();
-        for (idx, art) in rx {
-            out[idx] = Some(art);
+        if cfg.verbose {
+            let r = &art.result;
+            let status = if r.correct {
+                format!("pass  {:>7.2}x", r.speedup().unwrap_or(0.0))
+            } else if r.compiled {
+                "WRONG     ".to_string()
+            } else {
+                "NOCOMPILE ".to_string()
+            };
+            let golden_note = match &r.golden {
+                Some(g) if g.checked && !g.ok => "  golden:FAIL",
+                Some(g) if g.checked => "  golden:ok",
+                _ => "",
+            };
+            // failures are structured: name the stage + code inline
+            let fail_note = r
+                .failure
+                .as_ref()
+                .map(|d| format!("  [{} {}]", d.stage, d.code))
+                .unwrap_or_default();
+            let backend_note =
+                if tag_backend { format!("  @{}", r.backend) } else { String::new() };
+            eprintln!(
+                "[{:>2}/{n}] {:<18} {status}  ({} repairs, {:.2}s){golden_note}{fail_note}{backend_note}",
+                idx + 1,
+                r.name,
+                r.repair_rounds,
+                r.pipeline_secs
+            );
         }
-        out.into_iter().map(|a| a.expect("worker dropped a task")).collect()
-    })
+        *slots[idx].lock().unwrap() = Some(art);
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap().expect("worker dropped a task"))
+        .collect()
 }
 
 /// Verdict agreement between two backends over the same task list.
@@ -357,32 +338,14 @@ pub fn cross_check_suite(
     seed: u64,
 ) -> Vec<GoldenStatus> {
     let n = tasks.len();
-    let next = Arc::new(Mutex::new(0usize));
-    let (tx, rx) = mpsc::channel::<(usize, GoldenStatus)>();
-    std::thread::scope(|scope| {
-        for _ in 0..workers.max(1).min(n.max(1)) {
-            let next = Arc::clone(&next);
-            let tx = tx.clone();
-            scope.spawn(move || loop {
-                let idx = {
-                    let mut guard = next.lock().unwrap();
-                    if *guard >= n {
-                        return;
-                    }
-                    let i = *guard;
-                    *guard += 1;
-                    i
-                };
-                let _ = tx.send((idx, cross_check_task(&tasks[idx], reg, seed)));
-            });
-        }
-        drop(tx);
-        let mut out: Vec<Option<GoldenStatus>> = (0..n).map(|_| None).collect();
-        for (idx, check) in rx {
-            out[idx] = Some(check);
-        }
-        out.into_iter().map(|c| c.expect("worker dropped a cross-check")).collect()
-    })
+    let slots: Vec<Mutex<Option<GoldenStatus>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    pool::global().run_bounded(n, workers.max(1), |idx| {
+        *slots[idx].lock().unwrap() = Some(cross_check_task(&tasks[idx], reg, seed));
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap().expect("worker dropped a cross-check"))
+        .collect()
 }
 
 /// Cross-check a single task against its golden artifact (if present).

@@ -19,6 +19,12 @@
 //! ascendcraft prompt CATEGORY                        show a category prompt
 //! ```
 //!
+//! Every command also accepts a global `--threads N`, which sizes the
+//! shared worker pool ([`ascendcraft::util::pool`]) before first use:
+//! suite workers, oracle cross-checks, intra-op kernel parallelism, and
+//! plan wave scheduling all draw from that one pool. `--threads 1` is
+//! exactly serial.
+//!
 //! (clap is not in the crate set — the crate has zero external
 //! dependencies by policy; arguments are parsed by hand.)
 
@@ -34,6 +40,26 @@ use ascendcraft::util::json::Json;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
+    // --threads N is global (valid on every command): it sizes the shared
+    // worker pool before its first use, so suite workers, the oracle
+    // cross-check, intra-op kernel splits, and plan wave execution all
+    // honor it. --threads 1 reproduces serial behavior exactly.
+    if has_flag(&args, "--threads") {
+        match flag_value(&args, "--threads").map(str::parse::<usize>) {
+            Some(Ok(n)) if n >= 1 => ascendcraft::util::pool::set_threads(n),
+            _ => {
+                eprintln!("--threads expects a positive integer");
+                std::process::exit(2);
+            }
+        }
+    }
+    // the flag may also lead the command line (`--threads 4 suite ...`):
+    // skip the pair so command dispatch sees the verb
+    let args: &[String] = if args.first().map(String::as_str) == Some("--threads") {
+        &args[2.min(args.len())..]
+    } else {
+        &args[..]
+    };
     let code = match args.first().map(String::as_str) {
         Some("suite") => cmd_suite(&args[1..]),
         Some("compile") => cmd_compile(&args[1..]),
@@ -70,7 +96,9 @@ fn print_usage() {
          \x20 ascendcraft oracle [--op NAME] [--workers N] [--seed N]\n\
          \x20 ascendcraft list [--json]\n\
          \x20 ascendcraft export [--out DIR]   write DSL+AscendC for all tasks\n\
-         \x20 ascendcraft prompt CATEGORY"
+         \x20 ascendcraft prompt CATEGORY\n\
+         \n\
+         Global: --threads N   size the shared worker pool (1 = serial)"
     );
 }
 
@@ -767,7 +795,7 @@ fn cmd_oracle(args: &[String]) -> i32 {
     }
     let workers = flag_value(args, "--workers")
         .and_then(|v| v.parse().ok())
-        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4));
+        .unwrap_or_else(ascendcraft::util::pool::configured_threads);
     let mut failures = 0;
     let (present, missing): (Vec<&String>, Vec<&String>) =
         names.iter().partition(|n| reg.available(n));

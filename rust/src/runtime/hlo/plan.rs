@@ -42,19 +42,26 @@ use super::parser::{CmpDir, Instr, InstrShape, Module, Opcode};
 use super::MAX_WHILE_ITERS;
 use crate::util::kernels::{self, BinOp, CmpOp, UnaryOp};
 use crate::util::tensor::{DType, Tensor};
+use std::sync::Mutex;
 
 /// Plan compilation knobs (the hotpath bench flips the arena off to
-/// measure what buffer recycling is worth).
+/// measure what buffer recycling is worth, and flips `parallel` on to
+/// measure the wave schedule).
 #[derive(Clone, Copy, Debug)]
 pub struct PlanOptions {
     /// Recycle dead output buffers through a free list (the arena). When
     /// false every step gets a private slot.
     pub reuse_buffers: bool,
+    /// Execute independent steps concurrently on the worker pool, wave by
+    /// wave over the step dependency DAG. Bit-identical to serial
+    /// execution — the schedule only reorders steps that share no arena
+    /// hazard — and a no-op on a one-thread pool.
+    pub parallel: bool,
 }
 
 impl Default for PlanOptions {
     fn default() -> PlanOptions {
-        PlanOptions { reuse_buffers: true }
+        PlanOptions { reuse_buffers: true, parallel: false }
     }
 }
 
@@ -273,6 +280,17 @@ struct WhileScratch {
     body: PlanScratch,
 }
 
+/// One level of the step dependency DAG: every step in a wave is mutually
+/// hazard-free on the slot arena, so the wave may execute concurrently.
+/// `While` steps are scheduled into their wave but always run serially
+/// (after the wave's parallel batch) — their nested plans own mutable
+/// per-step scratch state.
+#[derive(Clone, Debug)]
+struct Wave {
+    steps: Vec<usize>,
+    whiles: Vec<usize>,
+}
+
 /// A compiled, executable HLO module. Plain data (`Send + Sync`): many
 /// worker threads can execute the same plan concurrently.
 #[derive(Clone, Debug)]
@@ -283,6 +301,11 @@ pub struct ExecutablePlan {
     /// Output sources with their dims and logical dtype.
     roots: Vec<(Src, Vec<usize>, DType)>,
     param_dims: Vec<Vec<usize>>,
+    /// Wave schedule over the step DAG (see [`Wave`]); executed instead of
+    /// the serial step list when `parallel` is set and the worker pool is
+    /// wider than one thread.
+    waves: Vec<Wave>,
+    parallel: bool,
 }
 
 // ------------------------------------------------------------- flattening
@@ -867,8 +890,17 @@ impl ExecutablePlan {
 
         let (steps, slot_caps, root_srcs) =
             assign_slots(st.steps, roots, &nodes, opts.reuse_buffers)?;
+        let waves = build_waves(&steps, slot_caps.len());
 
-        Ok(ExecutablePlan { steps, consts: st.consts, slot_caps, roots: root_srcs, param_dims })
+        Ok(ExecutablePlan {
+            steps,
+            consts: st.consts,
+            slot_caps,
+            roots: root_srcs,
+            param_dims,
+            waves,
+            parallel: opts.parallel,
+        })
     }
 
     /// Number of executable steps (post fusion).
@@ -879,6 +911,13 @@ impl ExecutablePlan {
     /// Number of arena buffers the plan executes with.
     pub fn slot_count(&self) -> usize {
         self.slot_caps.len()
+    }
+
+    /// Number of levels in the wave schedule: the plan's critical-path
+    /// length over the step DAG. `wave_count() == step_count()` means a
+    /// fully serial chain (no step-level parallelism to exploit).
+    pub fn wave_count(&self) -> usize {
+        self.waves.len()
     }
 }
 
@@ -1652,6 +1691,61 @@ fn assign_slots(
     Ok((steps, slot_caps, root_srcs))
 }
 
+/// Level-schedule the (slot-rewritten) steps into waves. A step depends on
+/// the last writer of every slot it reads (RAW) and — because the arena
+/// recycles slots — on the last writer (WAW) and every reader since that
+/// write (WAR) of every slot it writes. A step's wave is one past the
+/// deepest wave it depends on, so steps sharing a wave are mutually
+/// independent and may run in any order or concurrently.
+fn build_waves(steps: &[Step], nslots: usize) -> Vec<Wave> {
+    if steps.is_empty() {
+        return Vec::new();
+    }
+    let mut wave_of = vec![0usize; steps.len()];
+    let mut last_writer: Vec<Option<usize>> = vec![None; nslots];
+    let mut readers: Vec<Vec<usize>> = vec![Vec::new(); nslots];
+    let mut ins = Vec::new();
+    let mut outs = Vec::new();
+    let mut deepest = 0usize;
+    for (s, step) in steps.iter().enumerate() {
+        let mut w = 0usize;
+        step_inputs(step, &mut ins);
+        for &slot in &ins {
+            if let Some(lw) = last_writer[slot] {
+                w = w.max(wave_of[lw] + 1);
+            }
+        }
+        step_outs(step, &mut outs);
+        for &slot in &outs {
+            if let Some(lw) = last_writer[slot] {
+                w = w.max(wave_of[lw] + 1);
+            }
+            for &r in &readers[slot] {
+                w = w.max(wave_of[r] + 1);
+            }
+        }
+        wave_of[s] = w;
+        deepest = deepest.max(w);
+        for &slot in &ins {
+            readers[slot].push(s);
+        }
+        for &slot in &outs {
+            last_writer[slot] = Some(s);
+            readers[slot].clear();
+        }
+    }
+    let mut waves: Vec<Wave> =
+        (0..=deepest).map(|_| Wave { steps: Vec::new(), whiles: Vec::new() }).collect();
+    for (s, step) in steps.iter().enumerate() {
+        if matches!(step, Step::While { .. }) {
+            waves[wave_of[s]].whiles.push(s);
+        } else {
+            waves[wave_of[s]].steps.push(s);
+        }
+    }
+    waves
+}
+
 // -------------------------------------------------------------- execution
 
 /// Fused chunks stay L1-resident: each op in a fused expression streams
@@ -1772,8 +1866,14 @@ impl ExecutablePlan {
             scratch.slots = self.slot_caps.iter().map(|&c| vec![0.0f32; c]).collect();
         }
         let PlanScratch { slots, pool, big, whiles } = scratch;
-        for step in &self.steps {
-            self.run_step(step, inputs, slots, pool, big, whiles)?;
+        if self.parallel && crate::util::pool::current_parallelism() > 1 {
+            for wave in &self.waves {
+                self.run_wave(wave, inputs, slots, pool, big, whiles)?;
+            }
+        } else {
+            for step in &self.steps {
+                self.run_step(step, inputs, slots, pool, big, whiles)?;
+            }
         }
         let ctx = Ctx { inputs, consts: &self.consts, slots: slots.as_slice() };
         let mut outs = Vec::with_capacity(self.roots.len());
@@ -1837,8 +1937,27 @@ impl ExecutablePlan {
         }
         let out_idx = step_single_out(step);
         let mut out = std::mem::take(&mut slots[out_idx]);
+        let res = self.compute_step(step, inputs, slots.as_slice(), &mut out, pool, big);
+        slots[out_idx] = out;
+        res
+    }
+
+    /// Run one non-`While` step against an immutable view of the arena,
+    /// writing into `out` (the step's taken output buffer). Factored out of
+    /// [`Self::run_step`] so [`Self::run_wave`] can execute the steps of a
+    /// wave concurrently against the same shared view, each task with its
+    /// own temp pools.
+    fn compute_step(
+        &self,
+        step: &Step,
+        inputs: &[&Tensor],
+        slots: &[Vec<f32>],
+        out: &mut [f32],
+        pool: &mut Vec<Vec<f32>>,
+        big: &mut Vec<Vec<f32>>,
+    ) -> Result<(), String> {
         {
-            let ctx = Ctx { inputs, consts: &self.consts, slots: slots.as_slice() };
+            let ctx = Ctx { inputs, consts: &self.consts, slots };
             match step {
                 Step::Fused { expr, n, .. } => {
                     let mut start = 0usize;
@@ -1978,7 +2097,64 @@ impl ExecutablePlan {
                 Step::While { .. } => unreachable!("handled above"),
             }
         }
-        slots[out_idx] = out;
+        Ok(())
+    }
+
+    /// Execute one wave: the wave's non-`While` steps concurrently on the
+    /// worker pool, then its `While` steps serially (their nested plans own
+    /// mutable per-step scratch). Every output buffer is taken from the
+    /// arena up front, so the parallel batch runs against an immutable slot
+    /// view; parallel tasks use fresh temp pools (the shared scratch pools
+    /// are not thread-safe), a trade wave execution makes for concurrency.
+    fn run_wave(
+        &self,
+        wave: &Wave,
+        inputs: &[&Tensor],
+        slots: &mut Vec<Vec<f32>>,
+        pool: &mut Vec<Vec<f32>>,
+        big: &mut Vec<Vec<f32>>,
+        whiles: &mut Vec<WhileScratch>,
+    ) -> Result<(), String> {
+        if wave.steps.len() <= 1 {
+            for &si in &wave.steps {
+                self.run_step(&self.steps[si], inputs, slots, pool, big, whiles)?;
+            }
+        } else {
+            let mut outs: Vec<Vec<f32>> = wave
+                .steps
+                .iter()
+                .map(|&si| std::mem::take(&mut slots[step_single_out(&self.steps[si])]))
+                .collect();
+            let err: Mutex<Option<String>> = Mutex::new(None);
+            {
+                let view: &[Vec<f32>] = slots.as_slice();
+                let obase = outs.as_mut_ptr() as usize;
+                crate::util::pool::run_parts(wave.steps.len(), |i| {
+                    // SAFETY: part i exclusively owns outs[i]; `outs` is not
+                    // touched again until run_parts has joined every part
+                    let out = unsafe { &mut *(obase as *mut Vec<f32>).add(i) };
+                    let step = &self.steps[wave.steps[i]];
+                    let (mut tpool, mut tbig) = (Vec::new(), Vec::new());
+                    if let Err(e) =
+                        self.compute_step(step, inputs, view, out, &mut tpool, &mut tbig)
+                    {
+                        let mut first = err.lock().unwrap();
+                        if first.is_none() {
+                            *first = Some(e);
+                        }
+                    }
+                });
+            }
+            for (i, buf) in outs.into_iter().enumerate() {
+                slots[step_single_out(&self.steps[wave.steps[i]])] = buf;
+            }
+            if let Some(e) = err.into_inner().unwrap() {
+                return Err(e);
+            }
+        }
+        for &si in &wave.whiles {
+            self.run_step(&self.steps[si], inputs, slots, pool, big, whiles)?;
+        }
         Ok(())
     }
 }
@@ -2058,8 +2234,9 @@ mod tests {
         let m = parse_module(text).unwrap();
         let want = evaluate(&m, inputs).unwrap();
         for opts in [
-            PlanOptions { reuse_buffers: true },
-            PlanOptions { reuse_buffers: false },
+            PlanOptions { reuse_buffers: true, parallel: false },
+            PlanOptions { reuse_buffers: false, parallel: false },
+            PlanOptions { reuse_buffers: true, parallel: true },
         ] {
             let plan = ExecutablePlan::compile_with(&m, opts).unwrap();
             let got = plan.execute(inputs).unwrap();
@@ -2084,6 +2261,26 @@ mod tests {
         let out = plan.execute(&[&x]).unwrap();
         assert_eq!(out[0].data, vec![0.0, 0.0, 0.0, 1.0, 2.0, 0.0, 0.5, 3.0]);
         run_both(text, &[&x]);
+    }
+
+    #[test]
+    fn independent_steps_share_a_wave_and_run_in_parallel() {
+        let text = "HloModule t\n\nradd {\n  a = f32[] parameter(0)\n  b = f32[] parameter(1)\n  ROOT s = f32[] add(a, b)\n}\n\nENTRY e {\n  x = f32[4,8]{1,0} parameter(0)\n  y = f32[4,8]{1,0} parameter(1)\n  z = f32[] constant(0)\n  sx = f32[4]{0} reduce(x, z), dimensions={1}, to_apply=radd\n  sy = f32[4]{0} reduce(y, z), dimensions={1}, to_apply=radd\n  ROOT r = f32[4]{0} add(sx, sy)\n}\n";
+        let m = parse_module(text).unwrap();
+        let opts = PlanOptions { reuse_buffers: true, parallel: true };
+        let plan = ExecutablePlan::compile_with(&m, opts).unwrap();
+        assert_eq!(plan.step_count(), 3);
+        assert_eq!(plan.wave_count(), 2, "independent reduces share a wave; add waits");
+        let x = Tensor::new(vec![4, 8], DType::F32, (0..32).map(|i| i as f32).collect());
+        let y = Tensor::new(vec![4, 8], DType::F32, (0..32).map(|i| (31 - i) as f32).collect());
+        let serial = ExecutablePlan::compile(&m).unwrap().execute(&[&x, &y]).unwrap();
+        // force a multi-thread pool so the wave path actually runs
+        let pool = crate::util::pool::WorkerPool::new(4);
+        let par = pool.install(|| plan.execute(&[&x, &y]).unwrap());
+        assert_eq!(par.len(), serial.len());
+        for (p, s) in par.iter().zip(&serial) {
+            assert_eq!(p.data, s.data, "wave execution must be bit-identical");
+        }
     }
 
     #[test]

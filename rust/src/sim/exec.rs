@@ -8,7 +8,12 @@
 //! The elementwise / reduce / matmul data loops are the shared op-kernel
 //! layer in [`crate::util::kernels`] — the same loops the HLO oracle's
 //! execution plans run on — so the simulator and the oracle cannot drift
-//! apart numerically.
+//! apart numerically. That layer's performance work (tiled/packed
+//! `matmul_acc`, pool-parallel splits above the size thresholds) is
+//! inherited here for free and is bit-identical by construction, so
+//! simulated numerics stay stable across `--threads` settings; the
+//! *timing* model below is unaffected (cycle costs are computed from
+//! shapes, never from wall-clock).
 
 use super::cost;
 use super::host::{eval_host, HostEval};

@@ -9,6 +9,54 @@
 //! Everything operates on raw `&[f32]` / `&mut [f32]` so callers can run
 //! the loops over whole tensors or over cache-sized chunks (the fused
 //! elementwise executor in `runtime::hlo::plan` does the latter).
+//!
+//! Large inputs are additionally partitioned across the worker pool
+//! ([`super::pool`]): elementwise ops split into fixed-size granules,
+//! matmul and row reductions split across output rows. Every split keeps
+//! each output element's computation byte-for-byte what the serial loop
+//! does — partitions only decide *which thread* runs an element, never
+//! *how* it is computed — so results are bit-identical for any thread
+//! count (the determinism contract `rust/tests/determinism.rs` pins).
+
+use super::pool;
+
+/// Elementwise inputs below this many elements run serially — pool
+/// handoff costs more than the loop.
+const PAR_MIN: usize = 1 << 15;
+/// Fixed elementwise granule (elements). Partition boundaries depend only
+/// on problem size, never on thread count.
+const GRANULE: usize = 1 << 14;
+/// Matmuls below this many multiply-adds use the plain triple loop: the
+/// packed/tiled path's B-repack overhead only pays for itself above it.
+const MATMUL_TILED_MIN: usize = 4096;
+/// Matmuls below this many multiply-adds stay on one thread.
+const MATMUL_PAR_MIN: usize = 1 << 18;
+/// Rows per parallel matmul granule (a multiple of `MR`).
+const MATMUL_ROW_GRANULE: usize = 32;
+
+/// Disjoint mutable granule view used by the parallel wrappers. The base
+/// pointer travels as `usize` so the closure stays `Sync`.
+///
+/// SAFETY: callers guarantee the `[start, start + len)` ranges handed to
+/// concurrent closures are pairwise disjoint and inside the allocation.
+unsafe fn subslice_mut<'x>(base: usize, start: usize, len: usize) -> &'x mut [f32] {
+    std::slice::from_raw_parts_mut((base as *mut f32).add(start), len)
+}
+
+/// Run `f(start, len)` over fixed-size granules of `0..n` on the worker
+/// pool, or as one `f(0, n)` call when `n` is small (or the pool is one
+/// thread wide). Granule boundaries are a pure function of `n`.
+fn par_ranges(n: usize, f: impl Fn(usize, usize) + Sync) {
+    if n < PAR_MIN || pool::current_parallelism() == 1 {
+        f(0, n);
+        return;
+    }
+    let parts = n.div_ceil(GRANULE);
+    pool::run_parts(parts, |g| {
+        let start = g * GRANULE;
+        f(start, GRANULE.min(n - start));
+    });
+}
 
 /// Elementwise unary operations shared by both interpreters.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -157,9 +205,7 @@ impl CmpOp {
     }
 }
 
-/// `xs[i] = op(xs[i])`. One tight per-op loop: the match is hoisted out of
-/// the element loop so simple ops (neg/abs/relu/max) autovectorize.
-pub fn unary_inplace(xs: &mut [f32], op: UnaryOp) {
+fn unary_serial(xs: &mut [f32], op: UnaryOp) {
     match op {
         UnaryOp::Exp => xs.iter_mut().for_each(|x| *x = x.exp()),
         UnaryOp::Ln => xs.iter_mut().for_each(|x| *x = x.ln()),
@@ -184,8 +230,15 @@ pub fn unary_inplace(xs: &mut [f32], op: UnaryOp) {
     }
 }
 
-/// `xs[i] = op(xs[i], ys[i])` over `min(len)` elements.
-pub fn binary_inplace(xs: &mut [f32], ys: &[f32], op: BinOp) {
+/// `xs[i] = op(xs[i])`. One tight per-op loop: the match is hoisted out of
+/// the element loop so simple ops (neg/abs/relu/max) autovectorize. Large
+/// slices run granule-parallel on the worker pool.
+pub fn unary_inplace(xs: &mut [f32], op: UnaryOp) {
+    let base = xs.as_mut_ptr() as usize;
+    par_ranges(xs.len(), |s, l| unary_serial(unsafe { subslice_mut(base, s, l) }, op));
+}
+
+fn binary_serial(xs: &mut [f32], ys: &[f32], op: BinOp) {
     match op {
         BinOp::Add => xs.iter_mut().zip(ys).for_each(|(x, &y)| *x += y),
         BinOp::Sub => xs.iter_mut().zip(ys).for_each(|(x, &y)| *x -= y),
@@ -197,8 +250,14 @@ pub fn binary_inplace(xs: &mut [f32], ys: &[f32], op: BinOp) {
     }
 }
 
-/// `xs[i] = op(xs[i], s)`.
-pub fn scalar_rhs_inplace(xs: &mut [f32], s: f32, op: BinOp) {
+/// `xs[i] = op(xs[i], ys[i])` over `min(len)` elements.
+pub fn binary_inplace(xs: &mut [f32], ys: &[f32], op: BinOp) {
+    let n = xs.len().min(ys.len());
+    let base = xs.as_mut_ptr() as usize;
+    par_ranges(n, |s, l| binary_serial(unsafe { subslice_mut(base, s, l) }, &ys[s..s + l], op));
+}
+
+fn scalar_rhs_serial(xs: &mut [f32], s: f32, op: BinOp) {
     match op {
         BinOp::Add => xs.iter_mut().for_each(|x| *x += s),
         BinOp::Sub => xs.iter_mut().for_each(|x| *x -= s),
@@ -210,8 +269,13 @@ pub fn scalar_rhs_inplace(xs: &mut [f32], s: f32, op: BinOp) {
     }
 }
 
-/// `xs[i] = op(s, xs[i])` (the non-commutative orientation).
-pub fn scalar_lhs_inplace(s: f32, xs: &mut [f32], op: BinOp) {
+/// `xs[i] = op(xs[i], s)`.
+pub fn scalar_rhs_inplace(xs: &mut [f32], s: f32, op: BinOp) {
+    let base = xs.as_mut_ptr() as usize;
+    par_ranges(xs.len(), |st, l| scalar_rhs_serial(unsafe { subslice_mut(base, st, l) }, s, op));
+}
+
+fn scalar_lhs_serial(s: f32, xs: &mut [f32], op: BinOp) {
     match op {
         BinOp::Add => xs.iter_mut().for_each(|x| *x = s + *x),
         BinOp::Sub => xs.iter_mut().for_each(|x| *x = s - *x),
@@ -223,8 +287,13 @@ pub fn scalar_lhs_inplace(s: f32, xs: &mut [f32], op: BinOp) {
     }
 }
 
-/// `xs[i] = if cmp(xs[i], ys[i]) { 1.0 } else { 0.0 }`.
-pub fn compare_inplace(xs: &mut [f32], ys: &[f32], op: CmpOp) {
+/// `xs[i] = op(s, xs[i])` (the non-commutative orientation).
+pub fn scalar_lhs_inplace(s: f32, xs: &mut [f32], op: BinOp) {
+    let base = xs.as_mut_ptr() as usize;
+    par_ranges(xs.len(), |st, l| scalar_lhs_serial(s, unsafe { subslice_mut(base, st, l) }, op));
+}
+
+fn compare_serial(xs: &mut [f32], ys: &[f32], op: CmpOp) {
     match op {
         CmpOp::Eq => xs.iter_mut().zip(ys).for_each(|(x, &y)| *x = (*x == y) as u8 as f32),
         CmpOp::Ne => xs.iter_mut().zip(ys).for_each(|(x, &y)| *x = (*x != y) as u8 as f32),
@@ -235,29 +304,49 @@ pub fn compare_inplace(xs: &mut [f32], ys: &[f32], op: CmpOp) {
     }
 }
 
+/// `xs[i] = if cmp(xs[i], ys[i]) { 1.0 } else { 0.0 }`.
+pub fn compare_inplace(xs: &mut [f32], ys: &[f32], op: CmpOp) {
+    let n = xs.len().min(ys.len());
+    let base = xs.as_mut_ptr() as usize;
+    par_ranges(n, |s, l| compare_serial(unsafe { subslice_mut(base, s, l) }, &ys[s..s + l], op));
+}
+
 /// HLO `select` with `xs` pre-loaded with the on-true values:
 /// `xs[i] = ys[i]` wherever `cond[i] == 0.0`.
 pub fn select_if_zero(xs: &mut [f32], cond: &[f32], ys: &[f32]) {
-    for ((x, &c), &y) in xs.iter_mut().zip(cond).zip(ys) {
-        if c == 0.0 {
-            *x = y;
+    let n = xs.len().min(cond.len()).min(ys.len());
+    let base = xs.as_mut_ptr() as usize;
+    par_ranges(n, |s, l| {
+        let chunk = unsafe { subslice_mut(base, s, l) };
+        for ((x, &c), &y) in chunk.iter_mut().zip(&cond[s..s + l]).zip(&ys[s..s + l]) {
+            if c == 0.0 {
+                *x = y;
+            }
         }
-    }
+    });
 }
 
 /// AscendC `SelectGe` with `xs` pre-loaded with the on-true values:
 /// `xs[i] = ys[i]` wherever `cond[i] < 0.0`.
 pub fn select_if_negative(xs: &mut [f32], cond: &[f32], ys: &[f32]) {
-    for ((x, &c), &y) in xs.iter_mut().zip(cond).zip(ys) {
-        if c < 0.0 {
-            *x = y;
+    let n = xs.len().min(cond.len()).min(ys.len());
+    let base = xs.as_mut_ptr() as usize;
+    par_ranges(n, |s, l| {
+        let chunk = unsafe { subslice_mut(base, s, l) };
+        for ((x, &c), &y) in chunk.iter_mut().zip(&cond[s..s + l]).zip(&ys[s..s + l]) {
+            if c < 0.0 {
+                *x = y;
+            }
         }
-    }
+    });
 }
 
 /// `xs[i] = v`.
 pub fn fill(xs: &mut [f32], v: f32) {
-    xs.iter_mut().for_each(|x| *x = v);
+    let base = xs.as_mut_ptr() as usize;
+    par_ranges(xs.len(), |s, l| {
+        unsafe { subslice_mut(base, s, l) }.iter_mut().for_each(|x| *x = v);
+    });
 }
 
 /// Sequential fold in `f32` (the AscendC vector-reduce semantics).
@@ -271,10 +360,7 @@ pub fn fold_f32(xs: &[f32], init: f32, op: BinOp) -> f32 {
     }
 }
 
-/// Row-wise sum/product reduction with `f64` accumulation (oracle grade —
-/// a row can span millions of elements). `src.len()` must be
-/// `out.len() * cols`; rows are contiguous (suffix reduction).
-pub fn reduce_rows_wide(src: &[f32], cols: usize, init: f32, mul: bool, out: &mut [f32]) {
+fn reduce_rows_wide_serial(src: &[f32], cols: usize, init: f32, mul: bool, out: &mut [f32]) {
     for (r, slot) in out.iter_mut().enumerate() {
         let row = &src[r * cols..(r + 1) * cols];
         let mut acc = init as f64;
@@ -291,11 +377,53 @@ pub fn reduce_rows_wide(src: &[f32], cols: usize, init: f32, mul: bool, out: &mu
     }
 }
 
-/// Row-wise fold reduction in `f32` (max/min and exotic monoids).
-pub fn reduce_rows_fold(src: &[f32], cols: usize, init: f32, op: BinOp, out: &mut [f32]) {
+/// Run a row-contiguous reduction granule-parallel over *whole rows*: a
+/// row's accumulation chain is never split (splitting would reorder the
+/// reduction), so any partition is bit-identical to the serial loop.
+/// Granule size is a pure function of `cols`.
+fn par_rows(src: &[f32], cols: usize, out: &mut [f32], f: impl Fn(&[f32], &mut [f32]) + Sync) {
+    let rows = out.len();
+    if rows < 2 || rows.saturating_mul(cols) < PAR_MIN || pool::current_parallelism() == 1 {
+        f(&src[..rows * cols], out);
+        return;
+    }
+    let rows_per = (GRANULE / cols.max(1)).max(1);
+    let parts = rows.div_ceil(rows_per);
+    let base = out.as_mut_ptr() as usize;
+    pool::run_parts(parts, |g| {
+        let r0 = g * rows_per;
+        let r1 = rows.min(r0 + rows_per);
+        let chunk = unsafe { subslice_mut(base, r0, r1 - r0) };
+        f(&src[r0 * cols..r1 * cols], chunk);
+    });
+}
+
+/// Row-wise sum/product reduction with `f64` accumulation (oracle grade —
+/// a row can span millions of elements). `src.len()` must be at least
+/// `out.len() * cols`; rows are contiguous (suffix reduction). `cols == 0`
+/// yields `init` in every output slot.
+pub fn reduce_rows_wide(src: &[f32], cols: usize, init: f32, mul: bool, out: &mut [f32]) {
+    if cols == 0 {
+        fill(out, init);
+        return;
+    }
+    par_rows(src, cols, out, |s, o| reduce_rows_wide_serial(s, cols, init, mul, o));
+}
+
+fn reduce_rows_fold_serial(src: &[f32], cols: usize, init: f32, op: BinOp, out: &mut [f32]) {
     for (r, slot) in out.iter_mut().enumerate() {
         *slot = fold_f32(&src[r * cols..(r + 1) * cols], init, op);
     }
+}
+
+/// Row-wise fold reduction in `f32` (max/min and exotic monoids).
+/// `cols == 0` yields `init` in every output slot.
+pub fn reduce_rows_fold(src: &[f32], cols: usize, init: f32, op: BinOp, out: &mut [f32]) {
+    if cols == 0 {
+        fill(out, init);
+        return;
+    }
+    par_rows(src, cols, out, |s, o| reduce_rows_fold_serial(s, cols, init, op, o));
 }
 
 /// Row-major strides (in elements) for a dense shape.
@@ -318,14 +446,7 @@ pub fn gather_strided(
     ostr: &[usize],
     sstr: &[usize],
 ) {
-    let rank = out_dims.len();
-    for (li, slot) in out.iter_mut().enumerate() {
-        let mut si = 0usize;
-        for d in 0..rank {
-            si += ((li / ostr[d]) % out_dims[d]) * sstr[d];
-        }
-        *slot = src[si];
-    }
+    gather_strided_offset(src, out, out_dims, ostr, sstr, 0)
 }
 
 /// [`gather_strided`] with a constant base offset into `src`: the
@@ -339,13 +460,19 @@ pub fn gather_strided_offset(
     base: usize,
 ) {
     let rank = out_dims.len();
-    for (li, slot) in out.iter_mut().enumerate() {
-        let mut si = base;
-        for d in 0..rank {
-            si += ((li / ostr[d]) % out_dims[d]) * sstr[d];
+    let obase = out.as_mut_ptr() as usize;
+    let n = out.len();
+    par_ranges(n, |start, len| {
+        let chunk = unsafe { subslice_mut(obase, start, len) };
+        for (off, slot) in chunk.iter_mut().enumerate() {
+            let li = start + off;
+            let mut si = base;
+            for d in 0..rank {
+                si += ((li / ostr[d]) % out_dims[d]) * sstr[d];
+            }
+            *slot = src[si];
         }
-        *slot = src[si];
-    }
+    });
 }
 
 /// HLO `iota`: `out[li]` is the index of `li` along dimension `dim`, as
@@ -359,11 +486,21 @@ pub fn iota_fill(out: &mut [f32], dims: &[usize], ostr: &[usize], dim: usize) {
     }
 }
 
-/// `c[m,n] += a[m,k] · b[k,n]` (row-major, accumulating). The p-outer /
-/// n-inner loop order keeps the inner loop a contiguous FMA the
-/// autovectorizer handles, and matches the accumulation order both
-/// interpreters historically used (bitwise-stable refactor).
-pub fn matmul_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+// ----------------------------------------------------------------- matmul
+
+/// Rows per register tile. `MR × NR` accumulators live in registers across
+/// the whole k loop (4 × 8 × 4 bytes = 8 SSE registers, within the 16 the
+/// x86-64 baseline offers alongside the B row and the A broadcast).
+const MR: usize = 4;
+/// Columns per register tile / packed-B panel width.
+const NR: usize = 8;
+
+/// `c[m,n] += a[m,k] · b[k,n]` (row-major, accumulating). The reference
+/// triple loop: p-outer / n-inner keeps the inner loop a contiguous
+/// mul-add the autovectorizer handles. Each `c[i][j]` accumulates its
+/// products in increasing-p order starting from the incoming value — the
+/// accumulation-order contract every faster path below must preserve.
+pub fn matmul_acc_naive(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
     for i in 0..m {
         let crow = &mut c[i * n..(i + 1) * n];
         for p in 0..k {
@@ -376,9 +513,104 @@ pub fn matmul_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: us
     }
 }
 
+/// Pack `b[k,n]` into column panels of width `NR`: panel `jp` holds
+/// columns `jp*NR .. jp*NR+NR` contiguously per `p` row (ragged right
+/// edge zero-padded). The microkernel then streams both operands
+/// sequentially from L1.
+fn pack_b_panels(b: &[f32], k: usize, n: usize) -> Vec<f32> {
+    let npanels = n.div_ceil(NR);
+    let mut bp = vec![0.0f32; npanels * k * NR];
+    for jp in 0..npanels {
+        let j0 = jp * NR;
+        let jw = NR.min(n - j0);
+        let panel = &mut bp[jp * k * NR..(jp + 1) * k * NR];
+        for p in 0..k {
+            panel[p * NR..p * NR + jw].copy_from_slice(&b[p * n + j0..p * n + j0 + jw]);
+        }
+    }
+    bp
+}
+
+/// Tiled matmul over a row range of C, reading pre-packed B panels.
+/// Bitwise-identical to [`matmul_acc_naive`]: every `c[i][j]` still sees a
+/// single chain of `acc += a * b` adds in increasing-p order (the register
+/// round-trip through `acc` does not change f32 results, and rustc never
+/// contracts `mul + add` into an FMA). Ragged tile edges are handled by
+/// zero-padding the packs: padded lanes compute garbage that is never
+/// stored.
+fn matmul_rows_packed(c: &mut [f32], a: &[f32], bp: &[f32], m: usize, k: usize, n: usize) {
+    let npanels = n.div_ceil(NR);
+    let mut ap = vec![0.0f32; MR * k];
+    for i0 in (0..m).step_by(MR) {
+        let mh = MR.min(m - i0);
+        // pack the A tile transposed: ap[p*MR + r] = a[(i0+r)*k + p]
+        if mh < MR {
+            ap.iter_mut().for_each(|v| *v = 0.0);
+        }
+        for r in 0..mh {
+            let arow = &a[(i0 + r) * k..(i0 + r) * k + k];
+            for (p, &av) in arow.iter().enumerate() {
+                ap[p * MR + r] = av;
+            }
+        }
+        for jp in 0..npanels {
+            let j0 = jp * NR;
+            let jw = NR.min(n - j0);
+            let panel = &bp[jp * k * NR..(jp + 1) * k * NR];
+            let mut acc = [[0.0f32; NR]; MR];
+            for (r, row) in acc.iter_mut().enumerate().take(mh) {
+                row[..jw].copy_from_slice(&c[(i0 + r) * n + j0..(i0 + r) * n + j0 + jw]);
+            }
+            for p in 0..k {
+                let brow = &panel[p * NR..(p + 1) * NR];
+                let avs = &ap[p * MR..(p + 1) * MR];
+                for (r, row) in acc.iter_mut().enumerate() {
+                    let ar = avs[r];
+                    for (slot, &bv) in row.iter_mut().zip(brow) {
+                        *slot += ar * bv;
+                    }
+                }
+            }
+            for (r, row) in acc.iter().enumerate().take(mh) {
+                c[(i0 + r) * n + j0..(i0 + r) * n + j0 + jw].copy_from_slice(&row[..jw]);
+            }
+        }
+    }
+}
+
+/// `c[m,n] += a[m,k] · b[k,n]` (row-major, accumulating). Dispatches from
+/// the naive triple loop (small problems) to a packed register-tiled
+/// kernel, row-parallel on the worker pool above [`MATMUL_PAR_MIN`]
+/// multiply-adds. All paths are bit-identical (see
+/// [`matmul_rows_packed`]); degenerate `m/k/n == 0` shapes are no-ops.
+pub fn matmul_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    let work = m * k * n;
+    if work < MATMUL_TILED_MIN {
+        matmul_acc_naive(c, a, b, m, k, n);
+        return;
+    }
+    let bp = pack_b_panels(b, k, n);
+    let parts = m.div_ceil(MATMUL_ROW_GRANULE);
+    if work < MATMUL_PAR_MIN || parts < 2 || pool::current_parallelism() == 1 {
+        matmul_rows_packed(c, a, &bp, m, k, n);
+        return;
+    }
+    let cbase = c.as_mut_ptr() as usize;
+    pool::run_parts(parts, |g| {
+        let i0 = g * MATMUL_ROW_GRANULE;
+        let i1 = m.min(i0 + MATMUL_ROW_GRANULE);
+        let crows = unsafe { subslice_mut(cbase, i0 * n, (i1 - i0) * n) };
+        matmul_rows_packed(crows, &a[i0 * k..i1 * k], &bp, i1 - i0, k, n);
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::XorShiftRng;
 
     #[test]
     fn unary_ops_match_scalar_apply() {
@@ -456,6 +688,19 @@ mod tests {
     }
 
     #[test]
+    fn empty_slices_are_no_ops() {
+        let mut xs: [f32; 0] = [];
+        unary_inplace(&mut xs, UnaryOp::Exp);
+        binary_inplace(&mut xs, &[], BinOp::Add);
+        compare_inplace(&mut xs, &[], CmpOp::Lt);
+        scalar_rhs_inplace(&mut xs, 2.0, BinOp::Mul);
+        scalar_lhs_inplace(2.0, &mut xs, BinOp::Sub);
+        select_if_zero(&mut xs, &[], &[]);
+        fill(&mut xs, 1.0);
+        assert_eq!(fold_f32(&xs, 7.0, BinOp::Add), 7.0);
+    }
+
+    #[test]
     fn folds_match_std() {
         let xs = [1.0f32, 5.0, 2.0, -1.0];
         assert_eq!(fold_f32(&xs, 0.0, BinOp::Add), xs.iter().sum::<f32>());
@@ -472,6 +717,20 @@ mod tests {
         let mut out = [0.0f32; 2];
         reduce_rows_fold(&src, 3, f32::NEG_INFINITY, BinOp::Max, &mut out);
         assert_eq!(out, [3.0, 30.0]);
+    }
+
+    #[test]
+    fn reduce_rows_with_zero_cols_yields_init() {
+        let src: [f32; 0] = [];
+        let mut out = [99.0f32; 3];
+        reduce_rows_wide(&src, 0, 0.5, false, &mut out);
+        assert_eq!(out, [0.5, 0.5, 0.5]);
+        let mut out = [99.0f32; 3];
+        reduce_rows_wide(&src, 0, 2.0, true, &mut out);
+        assert_eq!(out, [2.0, 2.0, 2.0]);
+        let mut out = [99.0f32; 3];
+        reduce_rows_fold(&src, 0, f32::NEG_INFINITY, BinOp::Max, &mut out);
+        assert_eq!(out, [f32::NEG_INFINITY; 3]);
     }
 
     #[test]
@@ -535,12 +794,57 @@ mod tests {
     }
 
     #[test]
-    fn matmul_acc_matches_naive() {
+    fn matmul_acc_matches_reference() {
         let a = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]; // 2x3
         let b = [7.0f32, 8.0, 9.0, 10.0, 11.0, 12.0]; // 3x2
         let mut c = [0.0f32; 4];
         matmul_acc(&mut c, &a, &b, 2, 3, 2);
         assert_eq!(c, [58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn matmul_with_zero_dims_is_a_no_op() {
+        // m = 0: no output rows
+        matmul_acc(&mut [], &[], &[1.0, 2.0], 0, 2, 1);
+        // n = 0: no output cols
+        matmul_acc(&mut [], &[1.0, 2.0], &[], 2, 1, 0);
+        // k = 0: accumulating an empty sum leaves c untouched
+        let mut c = [3.0f32, 4.0, 5.0, 6.0];
+        matmul_acc(&mut c, &[], &[], 2, 0, 2);
+        assert_eq!(c, [3.0, 4.0, 5.0, 6.0]);
+        matmul_acc_naive(&mut c, &[], &[], 2, 0, 2);
+        assert_eq!(c, [3.0, 4.0, 5.0, 6.0]);
+    }
+
+    /// The tiled/packed path must be *bitwise* identical to the naive
+    /// triple loop — this is what lets the plan executor, the simulator,
+    /// and the tree-walking evaluator all swap in the fast kernel without
+    /// perturbing the differential tests. Shapes sweep all tile-edge
+    /// cases (m % MR, n % NR, tiny k) and cross the parallel threshold.
+    #[test]
+    fn tiled_matmul_is_bitwise_identical_to_naive() {
+        let mut rng = XorShiftRng::new(0x4d41_544d_554c);
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (3, 5, 7),
+            (4, 16, 8),
+            (5, 17, 9),
+            (13, 64, 31),
+            (32, 96, 40),
+            (65, 33, 129),
+            (128, 64, 72),
+        ] {
+            let a = rng.normal_vec(m * k);
+            let b = rng.normal_vec(k * n);
+            let seed_c = rng.normal_vec(m * n);
+            let mut c_fast = seed_c.clone();
+            let mut c_ref = seed_c.clone();
+            matmul_acc(&mut c_fast, &a, &b, m, k, n);
+            matmul_acc_naive(&mut c_ref, &a, &b, m, k, n);
+            for (i, (x, y)) in c_fast.iter().zip(&c_ref).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "({m},{k},{n}) diverges at {i}: {x} vs {y}");
+            }
+        }
     }
 
     #[test]

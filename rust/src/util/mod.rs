@@ -1,11 +1,13 @@
 //! Shared utilities: dense tensors, the low-level op-kernel layer both
-//! interpreters execute on, deterministic PRNG, numeric comparison, a small
-//! property-testing framework (the offline substitute for proptest), and a
-//! minimal JSON writer used by reports.
+//! interpreters execute on, the persistent worker pool that powers every
+//! parallel site in the crate, deterministic PRNG, numeric comparison, a
+//! small property-testing framework (the offline substitute for proptest),
+//! and a minimal JSON writer used by reports.
 
 pub mod compare;
 pub mod json;
 pub mod kernels;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod tensor;

@@ -1,0 +1,420 @@
+//! Hand-rolled persistent worker pool (the zero-crates stand-in for
+//! `rayon`). One pool of long-lived threads serves every parallel site in
+//! the crate: suite workers in `coordinator::service`, intra-op data
+//! parallelism in [`super::kernels`], and wave-parallel plan execution in
+//! `runtime::hlo::plan`.
+//!
+//! The only primitive is a parallel index loop, [`WorkerPool::run`]: run
+//! `f(0..parts)` with the *calling thread participating*. Workers and the
+//! caller claim indices from a shared atomic counter, so the loop is
+//! deadlock-free under nesting — an `f(i)` that itself calls `run` drains
+//! its inner index space on its own thread even when every worker is busy,
+//! and only ever waits on indices being actively executed elsewhere.
+//!
+//! Determinism contract: the pool decides *who* runs an index, never *what*
+//! an index computes. Callers must partition work so each output element is
+//! produced by exactly one index with a thread-count-independent
+//! computation; under that rule `threads = 1` and `threads = N` are
+//! bit-identical (see `docs/ARCHITECTURE.md`, "Performance & threading
+//! model").
+//!
+//! Thread count resolution: [`set_threads`] (the CLI `--threads` flag)
+//! overrides `std::thread::available_parallelism`, and is read once when
+//! the [`global`] pool is first used. A pool built with `new(1)` spawns no
+//! threads at all and every `run` is the plain serial loop — `--threads 1`
+//! reproduces single-threaded behavior exactly, scheduling included.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct Queue {
+    state: Mutex<QueueState>,
+    cond: Condvar,
+}
+
+/// A persistent pool of `threads - 1` worker threads (the calling thread
+/// is the remaining unit of parallelism). Dropping the pool drains queued
+/// jobs and joins the workers.
+pub struct WorkerPool {
+    queue: Arc<Queue>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    helpers: usize,
+}
+
+/// One `run` call's shared scope: the claim counter, the completion latch,
+/// and the first captured panic.
+struct ScopeState {
+    next: AtomicUsize,
+    parts: usize,
+    done: Mutex<usize>,
+    done_cv: Condvar,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+/// An unsafely-`'static` borrow of the scope closure. Sound because the
+/// pointer is only dereferenced *after* claiming an index `< parts`
+/// (see [`drive`]): a successful claim proves the scope is still open —
+/// [`WorkerPool::run_bounded`] blocks until every claimed index is
+/// counted done — so a stale queued job whose scope already finished
+/// observes `next >= parts` and exits without touching the pointer.
+#[derive(Clone, Copy)]
+struct FnRef(*const (dyn Fn(usize) + Sync));
+unsafe impl Send for FnRef {}
+unsafe impl Sync for FnRef {}
+
+fn worker_loop(q: &Queue) {
+    let mut guard = q.state.lock().unwrap();
+    loop {
+        if let Some(job) = guard.jobs.pop_front() {
+            drop(guard);
+            job();
+            guard = q.state.lock().unwrap();
+        } else if guard.shutdown {
+            return;
+        } else {
+            guard = q.cond.wait(guard).unwrap();
+        }
+    }
+}
+
+/// The claim loop shared by the caller and every worker job: grab the next
+/// unclaimed index, run `f` on it, count it done. Panics are captured (the
+/// scope owner re-raises the first one after the latch closes) so one bad
+/// index cannot leave the latch open forever.
+fn drive(state: &ScopeState, f: FnRef) {
+    loop {
+        let i = state.next.fetch_add(1, Ordering::Relaxed);
+        if i >= state.parts {
+            return;
+        }
+        // SAFETY: claiming an index below `parts` proves the scope is
+        // still open (its owner blocks until every claimed index is
+        // counted done), so the closure behind `f` is alive; see `FnRef`.
+        let call = unsafe { &*f.0 };
+        if let Err(p) = catch_unwind(AssertUnwindSafe(|| call(i))) {
+            let mut slot = state.panic.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(p);
+            }
+        }
+        let mut done = state.done.lock().unwrap();
+        *done += 1;
+        if *done == state.parts {
+            state.done_cv.notify_all();
+        }
+    }
+}
+
+impl WorkerPool {
+    /// Build a pool with `threads` total units of parallelism (including
+    /// the calling thread): `new(1)` spawns no worker threads.
+    pub fn new(threads: usize) -> WorkerPool {
+        let helpers = threads.max(1) - 1;
+        let queue = Arc::new(Queue {
+            state: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
+            cond: Condvar::new(),
+        });
+        let handles = (0..helpers)
+            .map(|i| {
+                let q = Arc::clone(&queue);
+                std::thread::Builder::new()
+                    .name(format!("ascendcraft-pool-{i}"))
+                    .spawn(move || worker_loop(&q))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { queue, handles, helpers }
+    }
+
+    /// Total parallelism (worker threads + the calling thread).
+    pub fn parallelism(&self) -> usize {
+        self.helpers + 1
+    }
+
+    /// Run `f(i)` for every `i in 0..parts` across the pool, returning when
+    /// all parts are done. The calling thread participates; with a 1-thread
+    /// pool this is exactly `for i in 0..parts { f(i) }`.
+    pub fn run(&self, parts: usize, f: impl Fn(usize) + Sync) {
+        self.run_bounded(parts, usize::MAX, f);
+    }
+
+    /// [`run`](Self::run) with the concurrency additionally capped at
+    /// `max_workers` simultaneous executors (the suite runner's `--workers`
+    /// semantics: a cap on concurrent jobs, independent of pool size).
+    pub fn run_bounded(&self, parts: usize, max_workers: usize, f: impl Fn(usize) + Sync) {
+        if parts == 0 {
+            return;
+        }
+        let _guard = self.enter();
+        let cap = max_workers.saturating_sub(1);
+        let helpers = self.helpers.min(parts.saturating_sub(1)).min(cap);
+        if helpers == 0 {
+            // the serial path is the plain loop — no catch_unwind, no
+            // queue traffic — so a 1-thread pool reproduces single-threaded
+            // behavior exactly
+            for i in 0..parts {
+                f(i);
+            }
+            return;
+        }
+        let state = Arc::new(ScopeState {
+            next: AtomicUsize::new(0),
+            parts,
+            done: Mutex::new(0),
+            done_cv: Condvar::new(),
+            panic: Mutex::new(None),
+        });
+        let local: &(dyn Fn(usize) + Sync) = &f;
+        // SAFETY: lifetime-erase the borrow of `f`; see `FnRef`.
+        let fref = FnRef(unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), *const (dyn Fn(usize) + Sync)>(local)
+        });
+        let pool_ptr = SendPool(self as *const WorkerPool);
+        {
+            let mut q = self.queue.state.lock().unwrap();
+            for _ in 0..helpers {
+                let st = Arc::clone(&state);
+                let fr = fref;
+                let pp = pool_ptr;
+                q.jobs.push_back(Box::new(move || {
+                    // SAFETY: the pool outlives every queued job (Drop
+                    // joins workers after draining the queue), and the
+                    // scope keeps `f` alive until the latch closes.
+                    let pool = unsafe { &*pp.0 };
+                    let _guard = pool.enter();
+                    drive(&st, fr);
+                }));
+            }
+        }
+        self.queue.cond.notify_all();
+        // the caller claims indices too — this is what makes nested `run`
+        // calls deadlock-free even when every worker is busy
+        drive(&state, fref);
+        let mut done = state.done.lock().unwrap();
+        while *done < parts {
+            done = state.done_cv.wait(done).unwrap();
+        }
+        drop(done);
+        if let Some(p) = state.panic.lock().unwrap().take() {
+            resume_unwind(p);
+        }
+    }
+
+    /// Make this pool the thread's *current* pool for the duration of `f`:
+    /// every [`run_parts`] / [`current_parallelism`] call inside (kernels,
+    /// plan waves) resolves to it instead of the [`global`] pool. Worker
+    /// threads executing this pool's jobs inherit the installation, so the
+    /// override follows the work. Used by the determinism tests to pin
+    /// exact thread counts without touching global state.
+    pub fn install<R>(&self, f: impl FnOnce() -> R) -> R {
+        let _guard = self.enter();
+        f()
+    }
+
+    fn enter(&self) -> InstallGuard {
+        let prev = CURRENT.with(|c| c.replace(self as *const WorkerPool));
+        InstallGuard { prev }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.queue.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.queue.cond.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[derive(Clone, Copy)]
+struct SendPool(*const WorkerPool);
+unsafe impl Send for SendPool {}
+unsafe impl Sync for SendPool {}
+
+thread_local! {
+    static CURRENT: std::cell::Cell<*const WorkerPool> =
+        const { std::cell::Cell::new(std::ptr::null()) };
+}
+
+struct InstallGuard {
+    prev: *const WorkerPool,
+}
+
+impl Drop for InstallGuard {
+    fn drop(&mut self) {
+        CURRENT.with(|c| c.set(self.prev));
+    }
+}
+
+/// Run `f(i)` for `i in 0..parts` on the thread's current pool (the
+/// innermost [`WorkerPool::install`], else the [`global`] pool). This is
+/// the entry point the kernels and the plan executor use.
+pub fn run_parts(parts: usize, f: impl Fn(usize) + Sync) {
+    let cur = CURRENT.with(|c| c.get());
+    if cur.is_null() {
+        global().run(parts, f);
+    } else {
+        // SAFETY: `CURRENT` is only non-null inside an `install`/`enter`
+        // scope, whose guard keeps the pool borrowed for the duration.
+        unsafe { &*cur }.run(parts, f);
+    }
+}
+
+/// Parallelism of the thread's current pool (see [`run_parts`]).
+pub fn current_parallelism() -> usize {
+    let cur = CURRENT.with(|c| c.get());
+    if cur.is_null() {
+        global().parallelism()
+    } else {
+        unsafe { &*cur }.parallelism()
+    }
+}
+
+static CONFIGURED: AtomicUsize = AtomicUsize::new(0);
+static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+
+/// Set the global pool's thread count (the `--threads N` CLI flag). Takes
+/// effect if called before the first [`global`] use; later calls are
+/// ignored (the pool is already built).
+pub fn set_threads(n: usize) {
+    CONFIGURED.store(n.max(1), Ordering::SeqCst);
+}
+
+/// The thread count the global pool uses: [`set_threads`] if called, else
+/// `std::thread::available_parallelism`. This is also the default worker
+/// count for the suite runner — the one place that replaces the ad-hoc
+/// `available_parallelism()` defaults that used to be scattered per call
+/// site.
+pub fn configured_threads() -> usize {
+    match CONFIGURED.load(Ordering::SeqCst) {
+        0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        n => n,
+    }
+}
+
+/// The process-wide pool, built on first use with [`configured_threads`].
+pub fn global() -> &'static WorkerPool {
+    GLOBAL.get_or_init(|| WorkerPool::new(configured_threads()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn one_thread_pool_is_the_plain_loop() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.parallelism(), 1);
+        let mut order = Vec::new();
+        let cell = Mutex::new(&mut order);
+        pool.run(5, |i| cell.lock().unwrap().push(i));
+        assert_eq!(order, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn all_parts_run_exactly_once() {
+        for threads in [1, 2, 4, 8] {
+            let pool = WorkerPool::new(threads);
+            let hits: Vec<AtomicU64> = (0..100).map(|_| AtomicU64::new(0)).collect();
+            pool.run(100, |i| {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1, "part {i} with {threads} threads");
+            }
+        }
+    }
+
+    #[test]
+    fn disjoint_writes_land() {
+        let pool = WorkerPool::new(4);
+        let mut out = vec![0u64; 1000];
+        let base = out.as_mut_ptr() as usize;
+        pool.run(1000, |i| {
+            // each part owns element i
+            unsafe { *(base as *mut u64).add(i) = i as u64 * 3 };
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i as u64 * 3);
+        }
+    }
+
+    #[test]
+    fn nested_runs_do_not_deadlock() {
+        let pool = WorkerPool::new(2);
+        let total = AtomicU64::new(0);
+        pool.run(4, |_| {
+            run_parts(8, |j| {
+                total.fetch_add(j as u64, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 4 * (0..8).sum::<u64>());
+    }
+
+    #[test]
+    fn install_scopes_the_current_pool() {
+        let pool = WorkerPool::new(3);
+        let seen = pool.install(current_parallelism);
+        assert_eq!(seen, 3);
+        // inside a run, worker threads see the same pool
+        let max_seen = AtomicU64::new(0);
+        pool.run(8, |_| {
+            max_seen.fetch_max(current_parallelism() as u64, Ordering::SeqCst);
+        });
+        assert_eq!(max_seen.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn run_bounded_caps_concurrency() {
+        let pool = WorkerPool::new(8);
+        let live = AtomicU64::new(0);
+        let peak = AtomicU64::new(0);
+        pool.run_bounded(32, 2, |_| {
+            let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+            peak.fetch_max(now, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            live.fetch_sub(1, Ordering::SeqCst);
+        });
+        assert!(peak.load(Ordering::SeqCst) <= 2, "peak {}", peak.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn panics_propagate_to_the_caller() {
+        let pool = WorkerPool::new(4);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(16, |i| {
+                if i == 7 {
+                    panic!("part seven failed");
+                }
+            });
+        }));
+        let msg = format!("{:?}", r.unwrap_err().downcast_ref::<&str>());
+        assert!(msg.contains("part seven failed"));
+        // the pool survives a panicked scope
+        let n = AtomicU64::new(0);
+        pool.run(4, |_| {
+            n.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(n.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn zero_parts_is_a_no_op() {
+        let pool = WorkerPool::new(2);
+        pool.run(0, |_| panic!("must not run"));
+    }
+}

@@ -362,3 +362,22 @@ fn suite_failure_table_names_stage_and_code() {
     assert!(text.contains("mask_cumsum"), "{text}");
     assert!(text.contains("transpile"), "{text}");
 }
+
+#[test]
+fn threads_flag_is_global_and_position_independent() {
+    // leading position: dispatch must still see the command verb
+    let out = bin().args(["--threads", "2", "list"]).output().expect("run list");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("Activation:"));
+
+    // trailing position works too
+    let out = bin().args(["list", "--threads", "1"]).output().expect("run list");
+    assert!(out.status.success());
+
+    // zero and non-numeric values fail loudly before any work happens
+    for bad in [&["--threads", "0", "list"][..], &["--threads", "nope", "list"][..]] {
+        let out = bin().args(bad).output().expect("run list");
+        assert_eq!(out.status.code(), Some(2), "args: {bad:?}");
+        assert!(String::from_utf8_lossy(&out.stderr).contains("positive integer"));
+    }
+}

@@ -1,0 +1,181 @@
+//! Shared helpers for the integration-test crates (each `tests/*.rs` file
+//! compiles separately; this module is included with `mod common;`).
+
+use ascendcraft::util::prop::Gen;
+
+/// Random square-shaped HLO program builder. Values are either "full"
+/// ([n,n]) or "row" ([n]); instructions draw from the interpreter's op
+/// set: unary/binary elementwise, scalar broadcasts, compare+select,
+/// reduce (add/max), row broadcast, transpose, cumsum reduce-window, dot,
+/// iota (+ s32 convert), dynamic-slice with a runtime start index.
+/// Returns the program text and the square dimension `n` (callers build
+/// two `[n,n]` f32 parameters).
+pub fn random_program(g: &mut Gen) -> (String, usize) {
+    let n = g.usize_range(2, 6);
+    let mut text = String::new();
+    text.push_str("HloModule prop\n\n");
+    text.push_str("radd {\n  a = f32[] parameter(0)\n  b = f32[] parameter(1)\n  ROOT s = f32[] add(a, b)\n}\n\n");
+    text.push_str("rmax {\n  a = f32[] parameter(0)\n  b = f32[] parameter(1)\n  ROOT m = f32[] maximum(a, b)\n}\n\n");
+    text.push_str("ENTRY main {\n");
+    let full = format!("f32[{n},{n}]{{1,0}}");
+    let row = format!("f32[{n}]{{0}}");
+    text.push_str(&format!("  p0 = {full} parameter(0)\n"));
+    text.push_str(&format!("  p1 = {full} parameter(1)\n"));
+    let mut fulls: Vec<String> = vec!["p0".into(), "p1".into()];
+    let mut rows: Vec<String> = Vec::new();
+    let mut next_id = 0usize;
+    let mut fresh = |prefix: &str| {
+        next_id += 1;
+        format!("{prefix}{next_id}")
+    };
+    let steps = g.usize_range(3, 11);
+    for _ in 0..steps {
+        match g.usize_range(0, 11) {
+            0 => {
+                let op = *g.choose(&[
+                    "exponential",
+                    "tanh",
+                    "abs",
+                    "negate",
+                    "logistic",
+                    "sign",
+                    "floor",
+                ]);
+                let a = g.choose(&fulls).clone();
+                let v = fresh("u");
+                text.push_str(&format!("  {v} = {full} {op}({a})\n"));
+                fulls.push(v);
+            }
+            1 => {
+                let op = *g.choose(&["add", "subtract", "multiply", "maximum", "minimum"]);
+                let a = g.choose(&fulls).clone();
+                let b = g.choose(&fulls).clone();
+                let v = fresh("b");
+                text.push_str(&format!("  {v} = {full} {op}({a}, {b})\n"));
+                fulls.push(v);
+            }
+            2 => {
+                // scalar constant broadcast into a binary op
+                let cv = g.f32_range(-2.0, 2.0);
+                let c = fresh("c");
+                let bc = fresh("cb");
+                let a = g.choose(&fulls).clone();
+                let v = fresh("s");
+                text.push_str(&format!("  {c} = f32[] constant({cv})\n"));
+                text.push_str(&format!("  {bc} = {full} broadcast({c}), dimensions={{}}\n"));
+                text.push_str(&format!("  {v} = {full} multiply({a}, {bc})\n"));
+                fulls.push(v);
+            }
+            3 => {
+                let dir = *g.choose(&["EQ", "NE", "GE", "GT", "LE", "LT"]);
+                let a = g.choose(&fulls).clone();
+                let b = g.choose(&fulls).clone();
+                let t = g.choose(&fulls).clone();
+                let f = g.choose(&fulls).clone();
+                let c = fresh("cmp");
+                let v = fresh("sel");
+                text.push_str(&format!(
+                    "  {c} = pred[{n},{n}]{{1,0}} compare({a}, {b}), direction={dir}\n"
+                ));
+                text.push_str(&format!("  {v} = {full} select({c}, {t}, {f})\n"));
+                fulls.push(v);
+            }
+            4 => {
+                // reduce last axis to a row
+                let (comb, init) = *g.choose(&[("radd", "0"), ("rmax", "-inf")]);
+                let z = fresh("z");
+                let a = g.choose(&fulls).clone();
+                let v = fresh("r");
+                text.push_str(&format!("  {z} = f32[] constant({init})\n"));
+                text.push_str(&format!(
+                    "  {v} = {row} reduce({a}, {z}), dimensions={{1}}, to_apply={comb}\n"
+                ));
+                rows.push(v);
+            }
+            5 if !rows.is_empty() => {
+                // broadcast a row back to full (strided gather)
+                let r = g.choose(&rows).clone();
+                let v = fresh("rb");
+                let d = g.usize_range(0, 2);
+                text.push_str(&format!("  {v} = {full} broadcast({r}), dimensions={{{d}}}\n"));
+                fulls.push(v);
+            }
+            6 => {
+                let a = g.choose(&fulls).clone();
+                let v = fresh("t");
+                text.push_str(&format!("  {v} = {full} transpose({a}), dimensions={{1,0}}\n"));
+                fulls.push(v);
+            }
+            7 => {
+                // cumsum along the last axis (reduce-window scan path)
+                let z = fresh("z");
+                let a = g.choose(&fulls).clone();
+                let v = fresh("w");
+                text.push_str(&format!("  {z} = f32[] constant(0)\n"));
+                text.push_str(&format!(
+                    "  {v} = {full} reduce-window({a}, {z}), window={{size=1x{n} pad=0_0x{}_0}}, to_apply=radd\n",
+                    n - 1
+                ));
+                fulls.push(v);
+            }
+            8 => {
+                // iota (s32 or f32) converted to f32 and folded into the pool
+                let d = g.usize_range(0, 2);
+                let ty = *g.choose(&["s32", "f32"]);
+                let io = fresh("io");
+                let ic = fresh("ic");
+                let a = g.choose(&fulls).clone();
+                let v = fresh("is");
+                text.push_str(&format!(
+                    "  {io} = {ty}[{n},{n}]{{1,0}} iota(), iota_dimension={d}\n"
+                ));
+                text.push_str(&format!("  {ic} = {full} convert({io})\n"));
+                text.push_str(&format!("  {v} = {full} add({a}, {ic})\n"));
+                fulls.push(v);
+            }
+            9 => {
+                // dynamic-slice of a full row block with a runtime start
+                // index derived from data (exercises clamping), broadcast
+                // back to full so the pool shape is preserved
+                let a = g.choose(&fulls).clone();
+                let src = g.choose(&fulls).clone();
+                let z = fresh("z");
+                let sc = fresh("sc");
+                let sr = fresh("sr");
+                let si = fresh("si");
+                let ds = fresh("ds");
+                let rs = fresh("rs");
+                let v = fresh("db");
+                text.push_str(&format!("  {z} = s32[] constant(0)\n"));
+                // start index: a data element converted to s32 (truncated),
+                // which may fall outside [0, n-1] and must clamp
+                // identically in plan and eval
+                text.push_str(&format!("  {sc} = f32[1,1]{{1,0}} dynamic-slice({a}, {z}, {z}), dynamic_slice_sizes={{1,1}}\n"));
+                text.push_str(&format!("  {sr} = f32[] reshape({sc})\n"));
+                text.push_str(&format!("  {si} = s32[] convert({sr})\n"));
+                text.push_str(&format!(
+                    "  {ds} = f32[1,{n}]{{1,0}} dynamic-slice({src}, {si}, {z}), dynamic_slice_sizes={{1,{n}}}\n"
+                ));
+                text.push_str(&format!("  {rs} = {row} reshape({ds})\n"));
+                text.push_str(&format!("  {v} = {full} broadcast({rs}), dimensions={{1}}\n"));
+                fulls.push(v);
+            }
+            _ => {
+                let a = g.choose(&fulls).clone();
+                let b = g.choose(&fulls).clone();
+                let v = fresh("d");
+                text.push_str(&format!(
+                    "  {v} = {full} dot({a}, {b}), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}\n"
+                ));
+                fulls.push(v);
+            }
+        }
+    }
+    let o1 = g.choose(&fulls).clone();
+    let o2 = g.choose(&fulls).clone();
+    text.push_str(&format!(
+        "  ROOT out = ({full}, {full}) tuple({o1}, {o2})\n"
+    ));
+    text.push_str("}\n");
+    (text, n)
+}

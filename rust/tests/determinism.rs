@@ -1,0 +1,177 @@
+//! Thread-count determinism: every kernel and every plan execution must be
+//! **bit-identical** across worker-pool widths (1, 2, and 8 threads) and
+//! with wave-parallel plan execution on or off. The pool's partitioning
+//! rules only decide *who* computes an element, never *how* — each
+//! element's scalar operation sequence is fixed — so there is nothing to
+//! tolerate: outputs are compared by their raw f32 bit patterns (which
+//! also makes NaN == NaN). Runs over large synthetic kernel inputs, every
+//! checked-in HLO fixture, and the randomized program generator shared
+//! with `plan_differential.rs`.
+
+use ascendcraft::runtime::hlo::{parse_module, ExecutablePlan, PlanOptions};
+use ascendcraft::util::kernels::{self, BinOp, CmpOp, UnaryOp};
+use ascendcraft::util::pool::WorkerPool;
+use ascendcraft::util::prop::prop_check;
+use ascendcraft::util::rng::XorShiftRng;
+use ascendcraft::util::tensor::{DType, Tensor};
+
+mod common;
+use common::random_program;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Run `f` under a 1-thread pool (exactly serial), then under 2- and
+/// 8-thread pools, and require bitwise-identical results every time.
+fn identical_across_widths(label: &str, f: &(dyn Fn() -> Vec<f32> + Sync)) {
+    let base = WorkerPool::new(1).install(|| f());
+    for width in [2usize, 8] {
+        let got = WorkerPool::new(width).install(|| f());
+        assert_eq!(
+            bits(&base),
+            bits(&got),
+            "{label}: {width}-thread result diverged from serial"
+        );
+    }
+}
+
+#[test]
+fn elementwise_kernels_are_bit_identical_across_widths() {
+    // large enough to clear the kernel layer's parallel-split threshold
+    let n = (1 << 16) + 13;
+    let mut rng = XorShiftRng::new(0xD17E_4);
+    let xs = rng.normal_vec(n);
+    let ys = rng.normal_vec(n);
+    for op in [UnaryOp::Exp, UnaryOp::Tanh, UnaryOp::Logistic, UnaryOp::Rsqrt] {
+        identical_across_widths(&format!("unary {op:?}"), &|| {
+            let mut v = xs.clone();
+            kernels::unary_inplace(&mut v, op);
+            v
+        });
+    }
+    for op in [BinOp::Add, BinOp::Mul, BinOp::Div, BinOp::Pow] {
+        identical_across_widths(&format!("binary {op:?}"), &|| {
+            let mut v = xs.clone();
+            kernels::binary_inplace(&mut v, &ys, op);
+            v
+        });
+    }
+    identical_across_widths("scalar rhs", &|| {
+        let mut v = xs.clone();
+        kernels::scalar_rhs_inplace(&mut v, 1.7, BinOp::Mul);
+        v
+    });
+    identical_across_widths("compare", &|| {
+        let mut v = xs.clone();
+        kernels::compare_inplace(&mut v, &ys, CmpOp::Gt);
+        v
+    });
+    identical_across_widths("select", &|| {
+        let mut v = xs.clone();
+        let cond: Vec<f32> = ys.iter().map(|&y| if y > 0.0 { 1.0 } else { 0.0 }).collect();
+        kernels::select_if_zero(&mut v, &cond, &ys);
+        v
+    });
+}
+
+#[test]
+fn row_reductions_are_bit_identical_across_widths() {
+    // rows * cols clears the parallel threshold; reductions split across
+    // whole rows only, so each row's accumulation chain never changes
+    let (rows, cols) = (600, 128);
+    let mut rng = XorShiftRng::new(0x52_45_44);
+    let src = rng.normal_vec(rows * cols);
+    identical_across_widths("reduce_rows_wide sum", &|| {
+        let mut out = vec![0.0f32; rows];
+        kernels::reduce_rows_wide(&src, cols, 0.0, false, &mut out);
+        out
+    });
+    identical_across_widths("reduce_rows_fold max", &|| {
+        let mut out = vec![0.0f32; rows];
+        kernels::reduce_rows_fold(&src, cols, f32::NEG_INFINITY, BinOp::Max, &mut out);
+        out
+    });
+}
+
+#[test]
+fn tiled_parallel_matmul_is_bit_identical_across_widths() {
+    let mut rng = XorShiftRng::new(0x4D4D);
+    // above both the tiling and the parallel-split thresholds
+    for (m, k, n) in [(65, 70, 60), (128, 96, 80)] {
+        let a = rng.normal_vec(m * k);
+        let b = rng.normal_vec(k * n);
+        let c0 = rng.normal_vec(m * n); // accumulate into nonzero C
+        identical_across_widths(&format!("matmul {m}x{k}x{n}"), &|| {
+            let mut c = c0.clone();
+            kernels::matmul_acc(&mut c, &a, &b, m, k, n);
+            c
+        });
+    }
+}
+
+/// Baseline: serial plan (parallel=false) on a 1-thread pool. Every other
+/// (parallel mode, pool width) combination must reproduce it bit for bit.
+fn assert_plan_deterministic(text: &str, inputs: &[&Tensor]) {
+    let m = parse_module(text).unwrap_or_else(|e| panic!("parse: {e}\n{text}"));
+    let serial = PlanOptions { reuse_buffers: true, parallel: false };
+    let base_plan = ExecutablePlan::compile_with(&m, serial).unwrap();
+    let base = WorkerPool::new(1).install(|| base_plan.execute(inputs).unwrap());
+    for parallel in [false, true] {
+        let opts = PlanOptions { reuse_buffers: true, parallel };
+        let plan = ExecutablePlan::compile_with(&m, opts).unwrap();
+        for width in [1usize, 2, 8] {
+            let got = WorkerPool::new(width).install(|| plan.execute(inputs).unwrap());
+            assert_eq!(got.len(), base.len(), "output arity\n{text}");
+            for (i, (g, b)) in got.iter().zip(&base).enumerate() {
+                assert_eq!(g.shape, b.shape, "output {i} shape\n{text}");
+                assert_eq!(
+                    bits(&g.data),
+                    bits(&b.data),
+                    "output {i} diverged (threads={width}, parallel={parallel})\n{text}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn every_checked_in_fixture_is_bit_identical_across_widths() {
+    let dir = format!("{}/../artifacts", env!("CARGO_MANIFEST_DIR"));
+    let mut paths: Vec<_> = std::fs::read_dir(&dir)
+        .expect("checked-in artifacts/ directory")
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| p.to_string_lossy().ends_with(".hlo.txt"))
+        .collect();
+    paths.sort();
+    assert!(!paths.is_empty(), "no .hlo.txt fixtures under {dir}");
+    for (i, path) in paths.iter().enumerate() {
+        let text = std::fs::read_to_string(path).unwrap();
+        let m = parse_module(&text).unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        // deterministic inputs shaped from the module's own params
+        let comp = m.entry_computation();
+        let mut rng = XorShiftRng::new(0xF1D0 ^ i as u64);
+        let inputs: Vec<Tensor> = comp
+            .params
+            .iter()
+            .map(|&idx| {
+                let dims = comp.instrs[idx].shape.array().unwrap().dims.clone();
+                let numel = dims.iter().product();
+                Tensor::new(dims, DType::F32, rng.uniform_vec(numel, 0.05, 1.0))
+            })
+            .collect();
+        let ins: Vec<&Tensor> = inputs.iter().collect();
+        assert_plan_deterministic(&text, &ins);
+    }
+}
+
+#[test]
+fn random_plans_are_bit_identical_across_widths_and_modes() {
+    prop_check("plan thread determinism", 16, |g| {
+        let (text, n) = random_program(g);
+        let a = Tensor::new(vec![n, n], DType::F32, g.normal_vec(n * n));
+        let b = Tensor::new(vec![n, n], DType::F32, g.normal_vec(n * n));
+        assert_plan_deterministic(&text, &[&a, &b]);
+    });
+}
