@@ -8,7 +8,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: all build test bench bench-snapshot smoke artifacts doc fmt clean
+.PHONY: all build test bench bench-snapshot smoke regress resume-smoke artifacts doc fmt clean
 
 all: build
 
@@ -42,6 +42,37 @@ smoke: build
 	./target/release/ascendcraft suite --quiet --golden --backend all \
 		--tasks relu,gelu,softmax,mse_loss,adam --min-pass 5
 	./target/release/ascendcraft lint --all
+
+# Regression gate: run the smoke tasks on every backend and diff the
+# metrics and per-task verdicts against the checked-in baseline. The
+# baseline is hand-authored conservatively (verdicts only, no cycle
+# counts), so Fast@1 can only improve; any Comp@1/Pass@1 drop or a
+# compiled/correct verdict flipping true->false exits 1. Update
+# BASELINE_SMOKE.json deliberately when the expected verdicts change.
+regress: build
+	./target/release/ascendcraft suite --quiet --backend all \
+		--tasks relu,gelu,softmax,mse_loss,adam \
+		--compare BASELINE_SMOKE.json
+
+# Kill/resume smoke: start a serial journaled run over a mid-size task
+# subset, kill it hard after 2 seconds (SIGKILL — no chance to clean
+# up, exactly the failure --resume exists for), then resume from the
+# journal's durable prefix and require the resumed run to finish green
+# with the same Pass@1 floor as `make smoke`. The || true swallows the
+# kill's exit status; the resume run is the assertion. (If the first
+# run beats the timeout, the resume degenerates to a pure replay — the
+# gate still holds.)
+RESUME_TASKS = relu,gelu,softsign,tanh_act,sigmoid,relu6,softmax,mse_loss,adam
+
+resume-smoke: build
+	rm -f target/resume-smoke.jsonl
+	timeout -s KILL 2 ./target/release/ascendcraft suite --quiet \
+		--workers 1 --tasks $(RESUME_TASKS) \
+		--journal target/resume-smoke.jsonl || true
+	./target/release/ascendcraft suite --quiet \
+		--tasks $(RESUME_TASKS) \
+		--resume target/resume-smoke.jsonl --min-pass 5
+	rm -f target/resume-smoke.jsonl
 
 # Build the API docs with warnings denied (same gate as CI): broken
 # intra-doc links fail instead of rotting silently.

@@ -15,7 +15,7 @@ use std::collections::BTreeMap;
 /// Outcome of the L2↔L3 golden cross-check that `run_suite` performs per
 /// task when `SuiteConfig::golden` is set: the JAX golden oracle (HLO
 /// executed by the compiled plan) compared against the Rust reference.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct GoldenStatus {
     /// An artifact existed and was executed (false = vacuous pass).
     pub checked: bool,
@@ -24,8 +24,25 @@ pub struct GoldenStatus {
     pub detail: String,
 }
 
+impl GoldenStatus {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("checked", self.checked).set("ok", self.ok).set("detail", self.detail.as_str());
+        j
+    }
+
+    /// Inverse of [`GoldenStatus::to_json`]; `None` on a malformed object.
+    pub fn from_json(j: &Json) -> Option<GoldenStatus> {
+        Some(GoldenStatus {
+            checked: j.get("checked")?.as_bool()?,
+            ok: j.get("ok")?.as_bool()?,
+            detail: j.get("detail")?.as_str()?.to_string(),
+        })
+    }
+}
+
 /// Outcome of one task through the full pipeline.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct TaskResult {
     pub name: String,
     pub category: Category,
@@ -104,25 +121,98 @@ impl TaskResult {
         }
         j.set("stage_timings", timings);
         if let Some(g) = &self.golden {
-            let mut gj = Json::obj();
-            gj.set("checked", g.checked).set("ok", g.ok).set("detail", g.detail.as_str());
-            j.set("golden", gj);
+            j.set("golden", g.to_json());
         }
         if !self.golden_seeds.is_empty() {
             let mut arr = Json::Arr(vec![]);
             for g in &self.golden_seeds {
-                let mut gj = Json::obj();
-                gj.set("checked", g.checked).set("ok", g.ok).set("detail", g.detail.as_str());
-                arr.push(gj);
+                arr.push(g.to_json());
             }
             j.set("golden_seeds", arr);
         }
         j
     }
+
+    /// Inverse of [`TaskResult::to_json`] (the suite journal and
+    /// `--compare` baselines load through here). `name`, `category`,
+    /// `backend`, `compiled`, and `correct` are required; every other
+    /// field defaults when absent, so a hand-authored baseline can state
+    /// only the verdicts it wants to pin. The derived `speedup` field is
+    /// ignored — it is recomputed from cycles. Returns `None` on a
+    /// malformed object.
+    pub fn from_json(j: &Json) -> Option<TaskResult> {
+        let mut stage_timings = Vec::new();
+        if let Some(arr) = j.get("stage_timings") {
+            for st in arr.as_arr()? {
+                stage_timings.push(StageReport::from_json(st)?);
+            }
+        }
+        let mut golden_seeds = Vec::new();
+        if let Some(arr) = j.get("golden_seeds") {
+            for g in arr.as_arr()? {
+                golden_seeds.push(GoldenStatus::from_json(g)?);
+            }
+        }
+        Some(TaskResult {
+            name: j.get("name")?.as_str()?.to_string(),
+            category: Category::from_name(j.get("category")?.as_str()?)?,
+            backend: j.get("backend")?.as_str()?.to_string(),
+            compiled: j.get("compiled")?.as_bool()?,
+            correct: j.get("correct")?.as_bool()?,
+            generated_cycles: match j.get("generated_cycles") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(v.as_f64()?),
+            },
+            eager_cycles: match j.get("eager_cycles") {
+                None => 0.0,
+                Some(v) => v.as_f64()?,
+            },
+            failure: match j.get("failure") {
+                None => None,
+                Some(f) => Some(Diagnostic::from_json(f)?),
+            },
+            repair_rounds: match j.get("repair_rounds") {
+                None => 0,
+                Some(v) => v.as_f64()? as usize,
+            },
+            analysis_errors: match j.get("analysis_errors") {
+                None => 0,
+                Some(v) => v.as_f64()? as usize,
+            },
+            analysis_warnings: match j.get("analysis_warnings") {
+                None => 0,
+                Some(v) => v.as_f64()? as usize,
+            },
+            pipeline_secs: match j.get("pipeline_secs") {
+                None => 0.0,
+                Some(v) => v.as_f64()?,
+            },
+            stage_timings,
+            golden: match j.get("golden") {
+                None => None,
+                Some(g) => Some(GoldenStatus::from_json(g)?),
+            },
+            golden_seeds,
+        })
+    }
+
+    /// This result with the wall-clock measurement fields zeroed
+    /// (`pipeline_secs` and per-stage `wall_secs`). Everything else the
+    /// pipeline produces is deterministic at a fixed configuration, so
+    /// two runs of the same tuple — or an interrupted-and-resumed run vs
+    /// an uninterrupted one — compare equal under `canonical`.
+    pub fn canonical(&self) -> TaskResult {
+        let mut r = self.clone();
+        r.pipeline_secs = 0.0;
+        for st in &mut r.stage_timings {
+            st.wall_secs = 0.0;
+        }
+        r
+    }
 }
 
 /// Aggregate metrics for a set of task results.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Metrics {
     pub total: usize,
     pub compiled: usize,
@@ -179,7 +269,7 @@ pub struct CategoryRow {
 }
 
 /// Full-suite result with table renderers.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SuiteResult {
     pub results: Vec<TaskResult>,
 }
@@ -364,6 +454,177 @@ impl SuiteResult {
         j.set("tasks", tasks).set("totals", totals);
         j
     }
+
+    /// Inverse of [`SuiteResult::to_json`]: reads the `tasks` array (the
+    /// `totals` object is derived data and is recomputed, never trusted).
+    /// Returns `None` on a malformed object.
+    pub fn from_json(j: &Json) -> Option<SuiteResult> {
+        let mut results = Vec::new();
+        for t in j.get("tasks")?.as_arr()? {
+            results.push(TaskResult::from_json(t)?);
+        }
+        Some(SuiteResult { results })
+    }
+
+    /// Per-task [`TaskResult::canonical`] over the whole suite.
+    pub fn canonical(&self) -> SuiteResult {
+        SuiteResult { results: self.results.iter().map(TaskResult::canonical).collect() }
+    }
+}
+
+/// One aggregate metric compared against a baseline snapshot.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetricDelta {
+    pub name: &'static str,
+    /// Percentage points, recomputed from the baseline's task records.
+    pub baseline: f64,
+    pub current: f64,
+}
+
+impl MetricDelta {
+    /// A drop in the aggregate is a regression; equal-or-better is not.
+    /// The epsilon absorbs float noise from recomputing percentages.
+    pub fn regressed(&self) -> bool {
+        self.current < self.baseline - 1e-9
+    }
+}
+
+/// A per-task verdict that differs from the baseline. `baseline: true,
+/// current: false` is a regression; the opposite direction is an
+/// improvement (reported, never gated).
+#[derive(Clone, Debug, PartialEq)]
+pub struct VerdictChange {
+    pub task: String,
+    /// Which verdict flipped: `compiled`, `correct`, or `fast0.2/0.8/1.0`.
+    pub what: &'static str,
+    pub baseline: bool,
+    pub current: bool,
+}
+
+impl VerdictChange {
+    pub fn regressed(&self) -> bool {
+        self.baseline && !self.current
+    }
+}
+
+/// The diff `suite --compare BASELINE.json` renders and gates on:
+/// aggregate metric deltas, per-task verdict flips, and coverage changes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SuiteDelta {
+    /// Comp@1 / Pass@1 / Fastₓ, in render order (always five entries).
+    pub metrics: Vec<MetricDelta>,
+    /// Per-task verdicts that changed in either direction.
+    pub verdicts: Vec<VerdictChange>,
+    /// Baseline tasks absent from the current run — lost coverage is a
+    /// regression.
+    pub missing: Vec<String>,
+    /// Current tasks the baseline doesn't know (informational only).
+    pub added: Vec<String>,
+}
+
+impl SuiteDelta {
+    /// The `--compare` exit-1 condition: any metric drop, any true→false
+    /// verdict flip, or any baseline task missing from the current run.
+    pub fn regressed(&self) -> bool {
+        !self.missing.is_empty()
+            || self.metrics.iter().any(MetricDelta::regressed)
+            || self.verdicts.iter().any(VerdictChange::regressed)
+    }
+
+    /// Render the delta table (aligned text, same style as Tables 1+2).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str("Baseline comparison.\n");
+        s.push_str(&format!(
+            "{:<12} {:>10} {:>10} {:>8}\n",
+            "Metric", "baseline", "current", "delta"
+        ));
+        for m in &self.metrics {
+            s.push_str(&format!(
+                "{:<12} {:>10.1} {:>10.1} {:>+8.1}{}\n",
+                m.name,
+                m.baseline,
+                m.current,
+                m.current - m.baseline,
+                if m.regressed() { "  REGRESSED" } else { "" }
+            ));
+        }
+        for v in &self.verdicts {
+            s.push_str(&format!(
+                "verdict {:<18} {:<9} {} -> {}{}\n",
+                v.task,
+                v.what,
+                v.baseline,
+                v.current,
+                if v.regressed() { "  REGRESSED" } else { "  improved" }
+            ));
+        }
+        for t in &self.missing {
+            s.push_str(&format!("missing from current run: {t}  REGRESSED\n"));
+        }
+        for t in &self.added {
+            s.push_str(&format!("new task (not in baseline): {t}\n"));
+        }
+        s.push_str(if self.regressed() {
+            "verdict: REGRESSED vs baseline\n"
+        } else {
+            "verdict: no regression vs baseline\n"
+        });
+        s
+    }
+}
+
+/// Diff a current suite run against a baseline snapshot. Aggregates are
+/// recomputed from each side's task records (so a conservative
+/// hand-authored baseline — verdicts only, no cycles — can never gate on
+/// a Fastₓ value it didn't claim: missing cycles make `fast_at` false,
+/// which current runs can only match or beat). Tasks are matched by name.
+pub fn compare_suites(baseline: &SuiteResult, current: &SuiteResult) -> SuiteDelta {
+    let bt = baseline.totals();
+    let ct = current.totals();
+    let metrics = vec![
+        MetricDelta { name: "Comp@1", baseline: bt.comp_pct(), current: ct.comp_pct() },
+        MetricDelta { name: "Pass@1", baseline: bt.pass_pct(), current: ct.pass_pct() },
+        MetricDelta { name: "Fast0.2@1", baseline: bt.fast02_pct(), current: ct.fast02_pct() },
+        MetricDelta { name: "Fast0.8@1", baseline: bt.fast08_pct(), current: ct.fast08_pct() },
+        MetricDelta { name: "Fast1.0@1", baseline: bt.fast10_pct(), current: ct.fast10_pct() },
+    ];
+    let by_name: BTreeMap<&str, &TaskResult> =
+        current.results.iter().map(|r| (r.name.as_str(), r)).collect();
+    let mut verdicts = Vec::new();
+    let mut missing = Vec::new();
+    for b in &baseline.results {
+        let Some(c) = by_name.get(b.name.as_str()) else {
+            missing.push(b.name.clone());
+            continue;
+        };
+        let checks: [(&'static str, bool, bool); 5] = [
+            ("compiled", b.compiled, c.compiled),
+            ("correct", b.correct, c.correct),
+            ("fast0.2", b.fast_at(0.2), c.fast_at(0.2)),
+            ("fast0.8", b.fast_at(0.8), c.fast_at(0.8)),
+            ("fast1.0", b.fast_at(1.0), c.fast_at(1.0)),
+        ];
+        for (what, bv, cv) in checks {
+            if bv != cv {
+                verdicts.push(VerdictChange {
+                    task: b.name.clone(),
+                    what,
+                    baseline: bv,
+                    current: cv,
+                });
+            }
+        }
+    }
+    let base_names: std::collections::BTreeSet<&str> =
+        baseline.results.iter().map(|r| r.name.as_str()).collect();
+    let added = current
+        .results
+        .iter()
+        .filter(|r| !base_names.contains(r.name.as_str()))
+        .map(|r| r.name.clone())
+        .collect();
+    SuiteDelta { metrics, verdicts, missing, added }
 }
 
 #[cfg(test)]
@@ -508,5 +769,126 @@ mod tests {
         let j = s.to_json().to_string();
         assert!(j.contains("\"totals\""));
         assert!(j.contains("\"speedup\":10"));
+    }
+
+    #[test]
+    fn task_result_json_round_trips() {
+        use crate::coordinator::stage::StageOutcome;
+        let mut r = result(Category::Loss, true, false, Some(123.5), 1000.0);
+        r.failure = Some(Diagnostic::new("score", "N103", "output 'y': drift").with_line(3));
+        r.stage_timings = vec![
+            StageReport { name: "generate", wall_secs: 0.001, outcome: StageOutcome::Ok },
+            StageReport { name: "score", wall_secs: 0.25, outcome: StageOutcome::Failed },
+        ];
+        r.repair_rounds = 2;
+        r.analysis_warnings = 1;
+        r.pipeline_secs = 0.875;
+        r.golden = Some(GoldenStatus { checked: true, ok: true, detail: "2 seeds".into() });
+        r.golden_seeds = vec![
+            GoldenStatus { checked: true, ok: true, detail: "seed 0".into() },
+            GoldenStatus { checked: true, ok: true, detail: "seed 1".into() },
+        ];
+        let parsed = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(TaskResult::from_json(&parsed), Some(r));
+    }
+
+    #[test]
+    fn task_result_from_json_defaults_optional_fields() {
+        let j = Json::parse(
+            r#"{"backend":"ascend-sim","category":"Math","compiled":true,"correct":true,"name":"relu"}"#,
+        )
+        .unwrap();
+        let r = TaskResult::from_json(&j).unwrap();
+        assert_eq!(r.name, "relu");
+        assert!(r.compiled && r.correct);
+        assert_eq!(r.generated_cycles, None);
+        assert!(r.stage_timings.is_empty() && r.golden.is_none());
+        // a verdict-only record is never "fast" — missing cycles can't gate
+        assert!(!r.fast_at(0.2));
+        // required fields missing → malformed
+        let bad = Json::parse(r#"{"name":"relu","compiled":true}"#).unwrap();
+        assert_eq!(TaskResult::from_json(&bad), None);
+    }
+
+    #[test]
+    fn suite_result_json_round_trips_and_canonical_zeroes_clocks() {
+        let mut a = result(Category::Math, true, true, Some(10.0), 100.0);
+        a.pipeline_secs = 1.5;
+        a.stage_timings = vec![StageReport {
+            name: "generate",
+            wall_secs: 0.5,
+            outcome: crate::coordinator::stage::StageOutcome::Ok,
+        }];
+        let s = SuiteResult { results: vec![a] };
+        let parsed = Json::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(SuiteResult::from_json(&parsed), Some(s.clone()));
+        let canon = s.canonical();
+        assert_eq!(canon.results[0].pipeline_secs, 0.0);
+        assert_eq!(canon.results[0].stage_timings[0].wall_secs, 0.0);
+        // everything that isn't a clock survives
+        assert_eq!(canon.results[0].generated_cycles, Some(10.0));
+        // two runs differing only in wall time are canonical-equal
+        let mut b = s.clone();
+        b.results[0].pipeline_secs = 9.0;
+        assert_ne!(b, s);
+        assert_eq!(b.canonical(), s.canonical());
+    }
+
+    #[test]
+    fn compare_flags_metric_and_verdict_regressions() {
+        let mut ok = result(Category::Math, true, true, Some(500.0), 1000.0);
+        ok.name = "a".into();
+        let mut slow = ok.clone();
+        slow.name = "b".into();
+        let baseline = SuiteResult { results: vec![ok.clone(), slow.clone()] };
+        // identical run: no regression, five metric rows
+        let delta = compare_suites(&baseline, &baseline);
+        assert!(!delta.regressed());
+        assert_eq!(delta.metrics.len(), 5);
+        assert!(delta.verdicts.is_empty() && delta.missing.is_empty());
+        // a task goes incorrect: verdict + Pass@1 + Fastₓ regress
+        let mut broken = slow.clone();
+        broken.correct = false;
+        let current = SuiteResult { results: vec![ok.clone(), broken] };
+        let delta = compare_suites(&baseline, &current);
+        assert!(delta.regressed());
+        assert!(delta
+            .verdicts
+            .iter()
+            .any(|v| v.task == "b" && v.what == "correct" && v.regressed()));
+        assert!(delta.metrics.iter().any(|m| m.name == "Pass@1" && m.regressed()));
+        let rendered = delta.render();
+        assert!(rendered.contains("REGRESSED"), "{rendered}");
+        // a slower kernel: fast verdict flips without touching Pass@1
+        let mut crawling = slow.clone();
+        crawling.generated_cycles = Some(2000.0); // 0.5x
+        let current = SuiteResult { results: vec![ok.clone(), crawling] };
+        let delta = compare_suites(&baseline, &current);
+        assert!(delta.regressed());
+        assert!(delta.verdicts.iter().any(|v| v.what == "fast0.8" && v.regressed()));
+        assert!(delta.metrics.iter().any(|m| m.name == "Pass@1" && !m.regressed()));
+    }
+
+    #[test]
+    fn compare_flags_missing_tasks_and_reports_improvements() {
+        let mut was_bad = result(Category::Math, true, false, None, 1000.0);
+        was_bad.name = "a".into();
+        let baseline = SuiteResult { results: vec![was_bad] };
+        // the task improves and a new task appears: no regression
+        let mut now_good = result(Category::Math, true, true, Some(500.0), 1000.0);
+        now_good.name = "a".into();
+        let mut extra = now_good.clone();
+        extra.name = "z".into();
+        let current = SuiteResult { results: vec![now_good, extra] };
+        let delta = compare_suites(&baseline, &current);
+        assert!(!delta.regressed());
+        assert!(delta.verdicts.iter().any(|v| v.what == "correct" && !v.regressed()));
+        assert_eq!(delta.added, vec!["z".to_string()]);
+        assert!(delta.render().contains("improved"));
+        // dropping a baseline task is lost coverage → regression
+        let empty = SuiteResult { results: vec![] };
+        let delta = compare_suites(&baseline, &empty);
+        assert!(delta.regressed());
+        assert_eq!(delta.missing, vec!["a".to_string()]);
     }
 }

@@ -46,6 +46,11 @@ impl Category {
             Category::Pooling,
         ]
     }
+
+    /// Inverse of [`Category::name`] (report/journal deserialization).
+    pub fn from_name(name: &str) -> Option<Category> {
+        Category::all().into_iter().find(|c| c.name() == name)
+    }
 }
 
 /// Scalar-to-scalar expression trees for element-wise computation. The
@@ -449,6 +454,14 @@ fn fxhash(s: &str) -> u64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn category_names_round_trip() {
+        for c in Category::all() {
+            assert_eq!(Category::from_name(c.name()), Some(c));
+        }
+        assert_eq!(Category::from_name("Convolution"), None);
+    }
 
     #[test]
     fn opexpr_eval_composites() {

@@ -1,0 +1,403 @@
+//! Content-addressed suite result journal: incremental, resumable runs.
+//!
+//! `suite --journal PATH` records every finished task as one JSON line
+//! keyed by a hash of the full execution tuple — task spec, seed, mode,
+//! cores, backend, repair budget, transpile options, stage-list version,
+//! golden-seed count (see [`KEY_FIELDS`], pinned to
+//! `docs/ARCHITECTURE.md` by `tests/docs_spec.rs`). A re-run with the
+//! same journal skips every tuple that already has a durable record, so
+//! only *changed* configurations (or new tasks) execute; `--resume PATH`
+//! additionally tolerates a partial trailing record — the signature of a
+//! run killed mid-append — by truncating the file to its durable prefix
+//! and re-running exactly the records that never landed.
+//!
+//! Durability model: records are appended one line at a time, flushed and
+//! fsync'd per record (a suite task costs orders of magnitude more than
+//! an fsync). A record is durable iff its terminating newline is on
+//! disk; [`crate::util::json::parse_jsonl`] draws exactly that line.
+//! Append-only writes can only ever corrupt the *tail*, so tolerant mode
+//! still refuses malformed interior lines — that file was not produced
+//! by this writer, and silently skipping records would fake coverage.
+//!
+//! File format (`format`/`version` pinned below):
+//!
+//! ```text
+//! {"format":"ascendcraft-suite-journal","version":1}
+//! {"key":"64af…16 hex…","result":{…TaskResult::to_json…},"task":"relu"}
+//! …one line per completed (backend, task) tuple…
+//! ```
+
+use crate::bench_suite::metrics::TaskResult;
+use crate::bench_suite::spec::TaskSpec;
+use crate::coordinator::pipeline::PipelineConfig;
+use crate::coordinator::stage::stage_list_fingerprint;
+use crate::util::json::{parse_jsonl, Json};
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+/// Journal header `format` value — a wrong value means the file is some
+/// other JSON-lines document and is rejected rather than appended to.
+pub const JOURNAL_FORMAT: &str = "ascendcraft-suite-journal";
+
+/// Journal schema version; bump on incompatible record changes.
+pub const JOURNAL_VERSION: u64 = 1;
+
+/// The fields of the canonical key string, in order. Every field that
+/// changes execution semantics must appear here: a tuple's recorded
+/// result is replayed *instead of running the pipeline*, so any
+/// semantic input missing from the key would let a stale result
+/// masquerade as current. Pinned to the table in `docs/ARCHITECTURE.md`
+/// ("Suite at scale") by `tests/docs_spec.rs`.
+pub const KEY_FIELDS: [&str; 9] =
+    ["spec", "seed", "mode", "cores", "backend", "repair", "options", "stages", "golden"];
+
+/// FNV-1a 64-bit over raw bytes — the same constants as the task-spec
+/// hash in `bench_suite/spec.rs`, hand-rolled per the zero-crates policy.
+/// Pinned against golden values in `tests/journal_props.rs` so an
+/// accidental constant change fails loudly (every journal key would
+/// silently miss otherwise).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// The readable canonical string a journal key hashes:
+/// `spec=<TaskSpec Debug>;seed=…;mode=…;cores=…;backend=…;repair=…;`
+/// `options=<TranspileOptions Debug>;stages=<stage-list fingerprint>;`
+/// `golden=<effective golden seed count, 0 when the check is off>`.
+/// `TaskSpec` and `TranspileOptions` are plain data (no function
+/// pointers, no addresses), so their `Debug` output is a deterministic
+/// fingerprint of everything the pipeline reads from them.
+pub fn canonical_key(task: &TaskSpec, cfg: &PipelineConfig, golden_seeds: usize) -> String {
+    let values: [String; 9] = [
+        format!("{task:?}"),
+        cfg.seed.to_string(),
+        format!("{:?}", cfg.mode),
+        cfg.cores.to_string(),
+        cfg.backend.name().to_string(),
+        cfg.max_repair_rounds.to_string(),
+        format!("{:?}", cfg.options),
+        stage_list_fingerprint(cfg),
+        golden_seeds.to_string(),
+    ];
+    KEY_FIELDS
+        .iter()
+        .zip(values.iter())
+        .map(|(k, v)| format!("{k}={v}"))
+        .collect::<Vec<_>>()
+        .join(";")
+}
+
+/// Hash a canonical string into the 16-hex-digit journal key. Split out
+/// from [`task_key`] so tests can pin literal key values on fixed
+/// canonical strings.
+pub fn key_of_canonical(canonical: &str) -> String {
+    format!("{:016x}", fnv1a64(canonical.as_bytes()))
+}
+
+/// The content-address of one (task, pipeline, golden) execution tuple.
+pub fn task_key(task: &TaskSpec, cfg: &PipelineConfig, golden_seeds: usize) -> String {
+    key_of_canonical(&canonical_key(task, cfg, golden_seeds))
+}
+
+/// An open suite journal: the in-memory record map plus the append
+/// handle. Construction validates (and in tolerant mode, repairs) the
+/// on-disk file; see [`Journal::open`].
+pub struct Journal {
+    path: PathBuf,
+    file: File,
+    records: BTreeMap<String, TaskResult>,
+    /// Tolerant open dropped a partial trailing record (the kill marker).
+    pub dropped_partial: bool,
+    hits: usize,
+    appended: usize,
+}
+
+impl Journal {
+    /// Open (or create) a journal. `tolerant` is the `--resume`
+    /// semantics: a truncated final line — a record whose append was
+    /// interrupted — is dropped and the file is truncated back to its
+    /// durable prefix. Strict mode (`--journal`) errors on *any*
+    /// malformed content instead, as does either mode on interior
+    /// corruption or a foreign header.
+    pub fn open(path: &Path, tolerant: bool) -> Result<Journal, String> {
+        let existing = match std::fs::read_to_string(path) {
+            // an empty file (e.g. a run killed between create and the
+            // header write) is a fresh journal, not a malformed one
+            Ok(text) if text.is_empty() => None,
+            Ok(text) => Some(text),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => None,
+            Err(e) => return Err(format!("read {}: {e}", path.display())),
+        };
+        let mut records = BTreeMap::new();
+        let mut dropped_partial = false;
+        match existing {
+            None => {
+                let mut header = Json::obj();
+                header.set("format", JOURNAL_FORMAT).set("version", JOURNAL_VERSION);
+                std::fs::write(path, format!("{}\n", header.to_string()))
+                    .map_err(|e| format!("create {}: {e}", path.display()))?;
+            }
+            Some(text) => {
+                let doc = parse_jsonl(&text, tolerant)
+                    .map_err(|e| format!("{}: {e}", path.display()))?;
+                dropped_partial = doc.dropped_partial;
+                let mut lines = doc.lines.into_iter();
+                let header = lines.next().ok_or_else(|| {
+                    format!("{}: missing journal header", path.display())
+                })?;
+                let format = header.0.get("format").and_then(Json::as_str);
+                let version = header.0.get("version").and_then(Json::as_f64);
+                if format != Some(JOURNAL_FORMAT) || version != Some(JOURNAL_VERSION as f64) {
+                    return Err(format!(
+                        "{}: not a {JOURNAL_FORMAT} v{JOURNAL_VERSION} file",
+                        path.display()
+                    ));
+                }
+                let mut durable_len = doc.durable_len;
+                let total = lines.len();
+                for (i, (line, end)) in lines.enumerate() {
+                    match Self::record_of(&line) {
+                        Some((key, result)) => {
+                            records.insert(key, result);
+                        }
+                        None if tolerant && i + 1 == total => {
+                            // a structurally-valid JSON line that is not a
+                            // valid record can only be a torn tail that
+                            // happened to parse — drop it like any partial
+                            durable_len = end - line_len(&text, end);
+                            dropped_partial = true;
+                        }
+                        None => {
+                            return Err(format!(
+                                "{}: malformed journal record on line {}",
+                                path.display(),
+                                i + 2
+                            ));
+                        }
+                    }
+                }
+                if dropped_partial && durable_len < text.len() {
+                    let f = OpenOptions::new()
+                        .write(true)
+                        .open(path)
+                        .map_err(|e| format!("truncate {}: {e}", path.display()))?;
+                    f.set_len(durable_len as u64)
+                        .map_err(|e| format!("truncate {}: {e}", path.display()))?;
+                }
+            }
+        }
+        let file = OpenOptions::new()
+            .append(true)
+            .open(path)
+            .map_err(|e| format!("append-open {}: {e}", path.display()))?;
+        Ok(Journal {
+            path: path.to_path_buf(),
+            file,
+            records,
+            dropped_partial,
+            hits: 0,
+            appended: 0,
+        })
+    }
+
+    fn record_of(line: &Json) -> Option<(String, TaskResult)> {
+        let key = line.get("key")?.as_str()?.to_string();
+        let result = TaskResult::from_json(line.get("result")?)?;
+        Some((key, result))
+    }
+
+    /// The recorded result for a key, if any. Callers that replay a hit
+    /// should call [`Journal::note_hit`] so the run summary can report
+    /// cached-vs-executed counts.
+    pub fn lookup(&self, key: &str) -> Option<&TaskResult> {
+        self.records.get(key)
+    }
+
+    pub fn note_hit(&mut self) {
+        self.hits += 1;
+    }
+
+    /// Append one finished tuple as a durable record: a single line,
+    /// flushed and fsync'd before returning.
+    pub fn append(&mut self, key: &str, result: &TaskResult) -> Result<(), String> {
+        let mut line = Json::obj();
+        line.set("key", key).set("task", result.name.as_str()).set("result", result.to_json());
+        let text = format!("{}\n", line.to_string());
+        self.file
+            .write_all(text.as_bytes())
+            .and_then(|()| self.file.flush())
+            .and_then(|()| self.file.sync_data())
+            .map_err(|e| format!("append {}: {e}", self.path.display()))?;
+        self.records.insert(key.to_string(), result.clone());
+        self.appended += 1;
+        Ok(())
+    }
+
+    /// Number of durable records currently known.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// (cache hits replayed, records appended) since open.
+    pub fn stats(&self) -> (usize, usize) {
+        (self.hits, self.appended)
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// Byte length of the line ending at byte offset `end` (including its
+/// `'\n'`), used to walk one durable line backwards when the final
+/// record — not the final line — is the torn one.
+fn line_len(text: &str, end: usize) -> usize {
+    let body = &text.as_bytes()[..end.saturating_sub(1)];
+    let start = body.iter().rposition(|&b| b == b'\n').map_or(0, |p| p + 1);
+    end - start
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::BackendRegistry;
+    use crate::bench_suite::tasks::task_by_name;
+    use crate::coordinator::pipeline::PipelineMode;
+
+    fn temp_path(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "ascendcraft_journal_unit_{tag}_{}.jsonl",
+            std::process::id()
+        ))
+    }
+
+    fn sample_result(name: &str) -> TaskResult {
+        TaskResult {
+            name: name.to_string(),
+            category: crate::bench_suite::spec::Category::Math,
+            backend: "ascend-sim".into(),
+            compiled: true,
+            correct: true,
+            generated_cycles: Some(250.0),
+            eager_cycles: 1000.0,
+            failure: None,
+            repair_rounds: 1,
+            analysis_errors: 0,
+            analysis_warnings: 0,
+            pipeline_secs: 0.5,
+            stage_timings: Vec::new(),
+            golden: None,
+            golden_seeds: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn fresh_journal_writes_header_and_round_trips_records() {
+        let path = temp_path("fresh");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut j = Journal::open(&path, false).unwrap();
+            assert!(j.is_empty() && !j.dropped_partial);
+            j.append("00000000000000aa", &sample_result("cumsum")).unwrap();
+            j.append("00000000000000bb", &sample_result("relu")).unwrap();
+            assert_eq!(j.stats(), (0, 2));
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with(&format!("{{\"format\":\"{JOURNAL_FORMAT}\"")), "{text}");
+        assert_eq!(text.lines().count(), 3);
+        let j = Journal::open(&path, false).unwrap();
+        assert_eq!(j.len(), 2);
+        assert_eq!(j.lookup("00000000000000aa"), Some(&sample_result("cumsum")));
+        assert_eq!(j.lookup("missing"), None);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn tolerant_open_truncates_a_torn_tail_strict_rejects_it() {
+        let path = temp_path("torn");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut j = Journal::open(&path, false).unwrap();
+            j.append("00000000000000aa", &sample_result("cumsum")).unwrap();
+            j.append("00000000000000bb", &sample_result("relu")).unwrap();
+        }
+        let full = std::fs::read_to_string(&path).unwrap();
+        // kill mid-append: half of the final record, no newline
+        let cut = full.len() - 20;
+        std::fs::write(&path, &full[..cut]).unwrap();
+        assert!(Journal::open(&path, false).is_err(), "strict must reject a torn tail");
+        let durable: String =
+            full.lines().take(2).map(|l| format!("{l}\n")).collect();
+        let j = Journal::open(&path, true).unwrap();
+        assert!(j.dropped_partial);
+        assert_eq!(j.len(), 1);
+        assert_eq!(j.lookup("00000000000000bb"), None);
+        // the file was truncated back to its durable prefix, byte-exact
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), durable);
+        // ... and the repaired file now opens strict
+        assert!(Journal::open(&path, false).is_ok());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn foreign_files_are_rejected_in_both_modes() {
+        let path = temp_path("foreign");
+        std::fs::write(&path, "{\"format\":\"something-else\",\"version\":1}\n").unwrap();
+        assert!(Journal::open(&path, false).is_err());
+        assert!(Journal::open(&path, true).is_err());
+        std::fs::write(&path, "not json at all\n").unwrap();
+        assert!(Journal::open(&path, false).is_err());
+        assert!(Journal::open(&path, true).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn key_changes_with_every_tuple_field() {
+        let task = task_by_name("relu").unwrap();
+        let cfg = PipelineConfig::default();
+        let base = task_key(&task, &cfg, 0);
+        assert_eq!(base, task_key(&task, &cfg, 0), "key must be deterministic");
+        assert_eq!(base.len(), 16);
+        let other_task = task_by_name("gelu").unwrap();
+        assert_ne!(base, task_key(&other_task, &cfg, 0));
+        assert_ne!(base, task_key(&task, &PipelineConfig { seed: 7, ..cfg.clone() }, 0));
+        assert_ne!(base, task_key(&task, &PipelineConfig { cores: 4, ..cfg.clone() }, 0));
+        assert_ne!(
+            base,
+            task_key(&task, &PipelineConfig { max_repair_rounds: 0, ..cfg.clone() }, 0)
+        );
+        assert_ne!(
+            base,
+            task_key(&task, &PipelineConfig { mode: PipelineMode::Direct, ..cfg.clone() }, 0)
+        );
+        let cpu = BackendRegistry::builtin().get("cpu-ref").unwrap();
+        assert_ne!(base, task_key(&task, &PipelineConfig { backend: cpu, ..cfg.clone() }, 0));
+        let mut opts = cfg.clone();
+        opts.options.queue_depth = 4;
+        assert_ne!(base, task_key(&task, &opts, 0));
+        assert_ne!(base, task_key(&task, &cfg, 1), "golden seeds are part of the tuple");
+    }
+
+    #[test]
+    fn canonical_key_names_every_pinned_field() {
+        let task = task_by_name("relu").unwrap();
+        let canonical = canonical_key(&task, &PipelineConfig::default(), 2);
+        for field in KEY_FIELDS {
+            assert!(canonical.contains(&format!("{field}=")), "{field} missing: {canonical}");
+        }
+        assert!(canonical.contains("backend=ascend-sim"), "{canonical}");
+        assert!(canonical.contains("golden=2"), "{canonical}");
+        assert!(canonical.contains("stages=v1:generate>"), "{canonical}");
+    }
+}

@@ -10,18 +10,24 @@
 //! * [`service`] — a std-thread worker pool that runs many tasks
 //!   concurrently (the deployment shape: a codegen service consuming kernel
 //!   requests and emitting verified AscendC), plus suite runners for the
-//!   benchmark tables. [`service::run_suite_multi`] shards one task list
-//!   across several execution backends (`crate::backend`) in the same
-//!   pool and reports a cross-backend comparison.
+//!   benchmark tables. [`service::run_suite_multi`] spreads one
+//!   (backend, task) job list across the pool via the work-stealing
+//!   scheduler ([`service::schedule_jobs`]) and reports a cross-backend
+//!   comparison.
+//! * [`journal`] — the content-addressed result journal behind
+//!   `suite --journal/--resume`: incremental re-runs skip tuples with a
+//!   durable record; interrupted runs resume from the last one.
 //!
 //! Python never appears on this path; the JAX golden oracle in `runtime`
 //! (HLO text executed by the built-in interpreter) is a cross-check
 //! loaded from the checked-in artifacts — see [`service::cross_check_suite`].
 
+pub mod journal;
 pub mod pipeline;
 pub mod service;
 pub mod stage;
 
+pub use journal::Journal;
 pub use pipeline::{run_task, PipelineConfig, PipelineMode};
-pub use service::{run_suite, run_suite_multi, MultiSuiteResult, SuiteConfig};
+pub use service::{run_suite, run_suite_multi, MultiSuiteResult, Schedule, SuiteConfig};
 pub use stage::{Diagnostic, Session, Stage, StageOutcome, StageReport};

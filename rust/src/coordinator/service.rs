@@ -8,15 +8,77 @@
 //! nested parallelism (a job's own kernel/plan work) shares the same pool
 //! without oversubscribing.
 
+use super::journal::{self, Journal};
 use super::pipeline::{run_task, PipelineArtifacts, PipelineConfig};
+use super::stage::Session;
 use crate::backend::Backend;
-use crate::bench_suite::metrics::{GoldenStatus, SuiteResult};
+use crate::bench_suite::metrics::{GoldenStatus, SuiteResult, TaskResult};
 use crate::bench_suite::spec::TaskSpec;
 use crate::runtime::OracleRegistry;
 use crate::util::compare::allclose_report;
 use crate::util::json::Json;
 use crate::util::pool;
 use std::sync::{Arc, Mutex};
+
+/// How the suite spreads its job list across workers.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Schedule {
+    /// Work-stealing (the default): every executor claims the next
+    /// unstarted job off one shared counter, so a slow task occupies one
+    /// executor while the rest drain everything else.
+    #[default]
+    WorkSteal,
+    /// Static round-robin shards (the pre-journal `run_suite_multi`
+    /// behavior, kept as the scheduling ablation): worker `w` runs jobs
+    /// `w, w+W, w+2W, …` serially, so a slow task delays everything
+    /// behind it in its shard.
+    StaticShard,
+}
+
+impl Schedule {
+    /// Parse the CLI `--schedule` value.
+    pub fn parse(name: &str) -> Option<Schedule> {
+        match name {
+            "steal" => Some(Schedule::WorkSteal),
+            "static" => Some(Schedule::StaticShard),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Schedule::WorkSteal => "steal",
+            Schedule::StaticShard => "static",
+        }
+    }
+}
+
+/// Run `f(idx)` for every job index under the chosen schedule, capped at
+/// `workers` concurrent executors. Both schedules run every index exactly
+/// once with the same per-index computation — scheduling decides *who*
+/// runs an index and *when*, never *what* it computes — so results are
+/// bit-identical across schedules and worker counts (the pool's
+/// determinism contract). Resolves through the thread's current pool
+/// ([`pool::run_parts_bounded`]) so tests can pin exact thread counts.
+pub fn schedule_jobs(n: usize, workers: usize, schedule: Schedule, f: impl Fn(usize) + Sync) {
+    if n == 0 {
+        return;
+    }
+    let workers = workers.max(1);
+    match schedule {
+        Schedule::WorkSteal => pool::run_parts_bounded(n, workers, f),
+        Schedule::StaticShard => {
+            let shards = workers.min(n);
+            pool::run_parts_bounded(shards, shards, |shard| {
+                let mut idx = shard;
+                while idx < n {
+                    f(idx);
+                    idx += shards;
+                }
+            });
+        }
+    }
+}
 
 /// Suite-run configuration.
 #[derive(Clone)]
@@ -37,6 +99,14 @@ pub struct SuiteConfig {
     /// whole batch. Per-seed outcomes land on `TaskResult::golden_seeds`;
     /// the aggregate stays on `TaskResult::golden`.
     pub golden_seeds: usize,
+    /// Content-addressed result journal (`suite --journal/--resume`).
+    /// Jobs whose tuple key has a durable record replay it instead of
+    /// running the pipeline; completed jobs append theirs. Shared behind
+    /// a mutex — workers touch it once per job (lookup is batched before
+    /// the pool starts; appends are one lock each).
+    pub journal: Option<Arc<Mutex<Journal>>>,
+    /// Job scheduling policy (work-stealing by default).
+    pub schedule: Schedule,
 }
 
 impl Default for SuiteConfig {
@@ -47,6 +117,8 @@ impl Default for SuiteConfig {
             verbose: false,
             golden: None,
             golden_seeds: 1,
+            journal: None,
+            schedule: Schedule::WorkSteal,
         }
     }
 }
@@ -134,24 +206,69 @@ pub fn run_suite_multi(
 /// output stays byte-identical to the pre-registry suite).
 fn run_jobs(jobs: &[Job], cfg: &SuiteConfig, tag_backend: bool) -> Vec<PipelineArtifacts> {
     let n = jobs.len();
-    let slots: Vec<Mutex<Option<PipelineArtifacts>>> = (0..n).map(|_| Mutex::new(None)).collect();
-    pool::global().run_bounded(n, cfg.workers.max(1), |idx| {
-        let job = &jobs[idx];
-        let mut art = run_task(job.task, &job.pipeline);
-        if job.golden {
-            if let Some(reg) = &cfg.golden {
-                // the L2↔L3 cross-check shards across the same worker
-                // pool as the pipeline runs (the compiled, Send + Sync
-                // oracle is shared by all workers); all seeds of the
-                // task run through one batched oracle execution
-                let seeds: Vec<u64> = (0..cfg.golden_seeds.max(1) as u64)
-                    .map(|k| job.pipeline.seed + k)
-                    .collect();
-                let per_seed = cross_check_task_seeds(job.task, reg, &seeds);
-                art.result.golden = Some(summarize_golden(&per_seed));
-                art.result.golden_seeds = per_seed;
-            }
+    // Resolve journal keys and replayable hits up front under one lock:
+    // workers then run lock-free until their own append. The key's golden
+    // component counts the seeds a run would actually cross-check, so a
+    // plain run and a --golden run never share a record.
+    let cached: Vec<Option<(String, Option<TaskResult>)>> = match &cfg.journal {
+        Some(shared) => {
+            let mut jr = shared.lock().unwrap();
+            jobs.iter()
+                .map(|job| {
+                    let seeds = if job.golden && cfg.golden.is_some() {
+                        cfg.golden_seeds.max(1)
+                    } else {
+                        0
+                    };
+                    let key = journal::task_key(job.task, &job.pipeline, seeds);
+                    let hit = jr.lookup(&key).cloned();
+                    if hit.is_some() {
+                        jr.note_hit();
+                    }
+                    Some((key, hit))
+                })
+                .collect()
         }
+        None => (0..n).map(|_| None).collect(),
+    };
+    let slots: Vec<Mutex<Option<PipelineArtifacts>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    schedule_jobs(n, cfg.workers, cfg.schedule, |idx| {
+        let job = &jobs[idx];
+        let hit = cached[idx].as_ref().and_then(|(_, hit)| hit.as_ref());
+        let replayed = hit.is_some();
+        let art = match hit {
+            // Journal hit: the key covers every semantic input, so the
+            // recorded result stands in for a fresh pipeline run.
+            Some(result) => PipelineArtifacts {
+                result: result.clone(),
+                session: Session::new(job.task, &job.pipeline),
+            },
+            None => {
+                let mut art = run_task(job.task, &job.pipeline);
+                if job.golden {
+                    if let Some(reg) = &cfg.golden {
+                        // the L2↔L3 cross-check shards across the same worker
+                        // pool as the pipeline runs (the compiled, Send + Sync
+                        // oracle is shared by all workers); all seeds of the
+                        // task run through one batched oracle execution
+                        let seeds: Vec<u64> = (0..cfg.golden_seeds.max(1) as u64)
+                            .map(|k| job.pipeline.seed + k)
+                            .collect();
+                        let per_seed = cross_check_task_seeds(job.task, reg, &seeds);
+                        art.result.golden = Some(summarize_golden(&per_seed));
+                        art.result.golden_seeds = per_seed;
+                    }
+                }
+                if let (Some((key, _)), Some(shared)) = (cached[idx].as_ref(), &cfg.journal) {
+                    // a failed append must not fail the suite: the journal
+                    // is a cache, the result is still in memory
+                    if let Err(e) = shared.lock().unwrap().append(key, &art.result) {
+                        eprintln!("warning: journal append failed: {e}");
+                    }
+                }
+                art
+            }
+        };
         if cfg.verbose {
             let r = &art.result;
             let status = if r.correct {
@@ -174,8 +291,9 @@ fn run_jobs(jobs: &[Job], cfg: &SuiteConfig, tag_backend: bool) -> Vec<PipelineA
                 .unwrap_or_default();
             let backend_note =
                 if tag_backend { format!("  @{}", r.backend) } else { String::new() };
+            let cache_note = if replayed { "  (cached)" } else { "" };
             eprintln!(
-                "[{:>2}/{n}] {:<18} {status}  ({} repairs, {:.2}s){golden_note}{fail_note}{backend_note}",
+                "[{:>2}/{n}] {:<18} {status}  ({} repairs, {:.2}s){golden_note}{fail_note}{backend_note}{cache_note}",
                 idx + 1,
                 r.name,
                 r.repair_rounds,
@@ -645,5 +763,98 @@ mod tests {
             assert_eq!(x.correct, y.correct);
             assert_eq!(x.generated_cycles, y.generated_cycles);
         }
+    }
+
+    #[test]
+    fn schedule_parse_round_trips() {
+        assert_eq!(Schedule::parse("steal"), Some(Schedule::WorkSteal));
+        assert_eq!(Schedule::parse("static"), Some(Schedule::StaticShard));
+        assert_eq!(Schedule::parse("dynamic"), None);
+        for s in [Schedule::WorkSteal, Schedule::StaticShard] {
+            assert_eq!(Schedule::parse(s.name()), Some(s));
+        }
+        assert_eq!(Schedule::default(), Schedule::WorkSteal);
+    }
+
+    #[test]
+    fn schedule_jobs_runs_every_index_exactly_once_under_both_schedules() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        for schedule in [Schedule::WorkSteal, Schedule::StaticShard] {
+            for workers in [1usize, 2, 8, 64] {
+                let n = 23;
+                let counts: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+                schedule_jobs(n, workers, schedule, |idx| {
+                    counts[idx].fetch_add(1, Ordering::SeqCst);
+                });
+                for (idx, c) in counts.iter().enumerate() {
+                    assert_eq!(
+                        c.load(Ordering::SeqCst),
+                        1,
+                        "{schedule:?} workers={workers} idx={idx}"
+                    );
+                }
+            }
+        }
+        // n == 0 must not hang or panic
+        schedule_jobs(0, 4, Schedule::WorkSteal, |_| unreachable!());
+        schedule_jobs(0, 4, Schedule::StaticShard, |_| unreachable!());
+    }
+
+    #[test]
+    fn static_shard_schedule_matches_work_steal_results() {
+        let tasks: Vec<_> =
+            ["relu", "softsign"].iter().map(|n| task_by_name(n).unwrap()).collect();
+        let steal = run_suite(
+            &tasks,
+            &SuiteConfig { workers: 2, schedule: Schedule::WorkSteal, ..Default::default() },
+        );
+        let shard = run_suite(
+            &tasks,
+            &SuiteConfig { workers: 2, schedule: Schedule::StaticShard, ..Default::default() },
+        );
+        assert_eq!(steal.canonical(), shard.canonical());
+    }
+
+    #[test]
+    fn journaled_suite_replays_cached_results() {
+        let dir = std::env::temp_dir().join(format!("ac-svc-journal-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("suite.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let tasks: Vec<_> =
+            ["relu", "sigmoid"].iter().map(|n| task_by_name(n).unwrap()).collect();
+        let journal = Arc::new(Mutex::new(Journal::open(&path, false).unwrap()));
+        let cfg = SuiteConfig {
+            workers: 2,
+            journal: Some(Arc::clone(&journal)),
+            ..Default::default()
+        };
+        let first = run_suite(&tasks, &cfg);
+        assert_eq!(journal.lock().unwrap().stats(), (0, 2));
+
+        // a second run over the same journal replays everything; results
+        // are identical to the first run byte for byte (clocks included,
+        // because the replay *is* the first run's record)
+        let journal2 = Arc::new(Mutex::new(Journal::open(&path, false).unwrap()));
+        let cfg2 = SuiteConfig {
+            workers: 2,
+            journal: Some(Arc::clone(&journal2)),
+            ..Default::default()
+        };
+        let second = run_suite(&tasks, &cfg2);
+        assert_eq!(journal2.lock().unwrap().stats(), (2, 0));
+        assert_eq!(first, second);
+
+        // a config change (different seed) misses the cache entirely
+        let journal3 = Arc::new(Mutex::new(Journal::open(&path, false).unwrap()));
+        let cfg3 = SuiteConfig {
+            pipeline: PipelineConfig { seed: 99, ..Default::default() },
+            workers: 2,
+            journal: Some(Arc::clone(&journal3)),
+            ..Default::default()
+        };
+        let _ = run_suite(&tasks, &cfg3);
+        assert_eq!(journal3.lock().unwrap().stats(), (0, 2));
+        let _ = std::fs::remove_file(&path);
     }
 }

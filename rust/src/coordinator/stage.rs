@@ -56,6 +56,42 @@ pub const STAGE_COMPILE: &str = "compile";
 pub const STAGE_SIMULATE: &str = "simulate";
 pub const STAGE_SCORE: &str = "score";
 
+/// Version of the stage-list semantics. Bump this whenever a stage's
+/// *behavior* changes in a way that invalidates previously recorded
+/// results without changing the stage names (the names themselves are
+/// part of [`stage_list_fingerprint`] already). The fingerprint feeds
+/// the suite journal's content-address
+/// ([`crate::coordinator::journal::task_key`]), so bumping it makes
+/// every journaled result a miss — exactly what a semantic change needs.
+pub const STAGE_LIST_VERSION: &str = "v1";
+
+/// The pipeline-version component of the journal key: the stage-list
+/// semantic version plus the ordered stage names the configuration
+/// selects, e.g.
+/// `v1:generate>frontend>transpile>analyze>compile>simulate>score`
+/// (or the four-stage direct-mode list). Adding, removing, or reordering
+/// stages changes this string and therefore every journal key.
+pub fn stage_list_fingerprint(cfg: &PipelineConfig) -> String {
+    let names: Vec<&str> = stage_list(cfg).iter().map(|s| s.name()).collect();
+    format!("{STAGE_LIST_VERSION}:{}", names.join(">"))
+}
+
+/// Map a parsed stage name back to its canonical `&'static str` constant
+/// (the `STAGE_*` family). `StageReport::name` is `&'static str`, so
+/// deserialization must intern through here; unknown names are rejected.
+pub fn canonical_stage_name(name: &str) -> Option<&'static str> {
+    match name {
+        STAGE_GENERATE => Some(STAGE_GENERATE),
+        STAGE_FRONTEND => Some(STAGE_FRONTEND),
+        STAGE_TRANSPILE => Some(STAGE_TRANSPILE),
+        STAGE_ANALYZE => Some(STAGE_ANALYZE),
+        STAGE_COMPILE => Some(STAGE_COMPILE),
+        STAGE_SIMULATE => Some(STAGE_SIMULATE),
+        STAGE_SCORE => Some(STAGE_SCORE),
+        _ => None,
+    }
+}
+
 /// A structured pipeline diagnostic: which stage produced it, a stable
 /// machine-readable code (the validator/repair-engine code families:
 /// `G…` generation, `P…`/`D…` DSL frontend, `H…` host lowering, `A…`
@@ -72,7 +108,12 @@ pub struct Diagnostic {
 
 impl Diagnostic {
     pub fn new(stage: &str, code: &str, message: impl Into<String>) -> Diagnostic {
-        Diagnostic { stage: stage.to_string(), code: code.to_string(), message: message.into(), line: None }
+        Diagnostic {
+            stage: stage.to_string(),
+            code: code.to_string(),
+            message: message.into(),
+            line: None,
+        }
     }
 
     pub fn with_line(mut self, line: usize) -> Diagnostic {
@@ -180,6 +221,15 @@ impl StageOutcome {
             StageOutcome::Failed => "failed",
         }
     }
+
+    /// Inverse of [`StageOutcome::name`].
+    pub fn from_name(name: &str) -> Option<StageOutcome> {
+        match name {
+            "ok" => Some(StageOutcome::Ok),
+            "failed" => Some(StageOutcome::Failed),
+            _ => None,
+        }
+    }
 }
 
 /// One executed stage: its canonical name, wall-clock seconds, and outcome.
@@ -196,6 +246,17 @@ impl StageReport {
         let mut j = Json::obj();
         j.set("name", self.name).set("secs", self.wall_secs).set("outcome", self.outcome.name());
         j
+    }
+
+    /// Inverse of [`StageReport::to_json`] (the suite journal replays
+    /// recorded results through here). Returns `None` on a malformed
+    /// object or a non-canonical stage name.
+    pub fn from_json(j: &Json) -> Option<StageReport> {
+        Some(StageReport {
+            name: canonical_stage_name(j.get("name")?.as_str()?)?,
+            wall_secs: j.get("secs")?.as_f64()?,
+            outcome: StageOutcome::from_name(j.get("outcome")?.as_str()?)?,
+        })
     }
 }
 
@@ -743,6 +804,43 @@ mod tests {
         });
         let names: Vec<_> = direct.iter().map(|s| s.name()).collect();
         assert_eq!(names, [STAGE_GENERATE, STAGE_COMPILE, STAGE_SIMULATE, STAGE_SCORE]);
+    }
+
+    #[test]
+    fn stage_list_fingerprint_pins_version_and_order() {
+        assert_eq!(
+            stage_list_fingerprint(&PipelineConfig::default()),
+            "v1:generate>frontend>transpile>analyze>compile>simulate>score"
+        );
+        let direct = PipelineConfig { mode: PipelineMode::Direct, ..Default::default() };
+        assert_eq!(stage_list_fingerprint(&direct), "v1:generate>compile>simulate>score");
+    }
+
+    #[test]
+    fn canonical_stage_names_round_trip() {
+        for name in [
+            STAGE_GENERATE,
+            STAGE_FRONTEND,
+            STAGE_TRANSPILE,
+            STAGE_ANALYZE,
+            STAGE_COMPILE,
+            STAGE_SIMULATE,
+            STAGE_SCORE,
+        ] {
+            assert_eq!(canonical_stage_name(name), Some(name));
+        }
+        assert_eq!(canonical_stage_name("linker"), None);
+    }
+
+    #[test]
+    fn stage_report_json_round_trips() {
+        let report =
+            StageReport { name: STAGE_SIMULATE, wall_secs: 0.0625, outcome: StageOutcome::Failed };
+        let parsed = Json::parse(&report.to_json().to_string()).unwrap();
+        assert_eq!(StageReport::from_json(&parsed), Some(report));
+        // non-canonical stage names are rejected, not interned
+        let bogus = Json::parse(r#"{"name":"linker","secs":1.0,"outcome":"ok"}"#).unwrap();
+        assert_eq!(StageReport::from_json(&bogus), None);
     }
 
     #[test]

@@ -6,6 +6,9 @@
 //!                   [--tasks A,B,..] [--cores N] [--min-pass N]
 //!                   [--json PATH] [--quiet] [--golden]
 //!                   [--golden-seeds N]                  reproduce Tables 1+2
+//!                   [--journal PATH] [--resume PATH]    incremental/resumable
+//!                   [--schedule steal|static]           job scheduler
+//!                   [--compare BASELINE.json]           regression gate
 //! ascendcraft compile TASK [--emit=dsl|ascendc|diag|timings|lint] [--seed N]
 //!                   [--mode M] [--cores N]          staged pipeline, dump
 //!                   [--backend NAME]                any session artifact
@@ -29,14 +32,19 @@
 //! dependencies by policy; arguments are parsed by hand.)
 
 use ascendcraft::backend::BackendRegistry;
+use ascendcraft::bench_suite::metrics::{compare_suites, SuiteResult};
 use ascendcraft::bench_suite::spec::{Category, TaskSpec};
 use ascendcraft::bench_suite::tasks::{all_tasks, task_by_name};
+use ascendcraft::coordinator::journal::Journal;
 use ascendcraft::coordinator::pipeline::{run_task, PipelineConfig, PipelineMode};
-use ascendcraft::coordinator::service::{cross_check_suite, run_suite, run_suite_multi, SuiteConfig};
+use ascendcraft::coordinator::service::{
+    cross_check_suite, run_suite, run_suite_multi, Schedule, SuiteConfig,
+};
 use ascendcraft::mhc::{self, run_case_study, MhcDims};
 use ascendcraft::runtime::{fixtures, OracleRegistry};
 use ascendcraft::synth::prompt;
 use ascendcraft::util::json::Json;
+use std::sync::{Arc, Mutex};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -88,7 +96,7 @@ fn print_usage() {
         "AscendCraft: DSL-guided AscendC kernel generation (reproduction)\n\
          \n\
          USAGE:\n\
-         \x20 ascendcraft suite [--mode ascendcraft|direct|generic] [--backend ascend-sim|cpu-ref|all] [--workers N] [--tasks A,B,..] [--cores N] [--min-pass N] [--json PATH] [--quiet] [--golden] [--golden-seeds N]\n\
+         \x20 ascendcraft suite [--mode ascendcraft|direct|generic] [--backend ascend-sim|cpu-ref|all] [--workers N] [--tasks A,B,..] [--cores N] [--min-pass N] [--json PATH] [--quiet] [--golden] [--golden-seeds N] [--journal PATH | --resume PATH] [--schedule steal|static] [--compare BASELINE.json]\n\
          \x20 ascendcraft compile TASK [--emit=dsl|ascendc|diag|timings|lint] [--seed N] [--mode M] [--cores N] [--backend NAME]\n\
          \x20 ascendcraft lint TASK|--all [--backend NAME] [--seed N]   static analyzer verdicts\n\
          \x20 ascendcraft gen --task NAME [--emit-dsl] [--emit-ascendc] [--emit-prompt]\n\
@@ -202,6 +210,85 @@ fn cmd_suite(args: &[String]) -> i32 {
             }
         }
     }
+    // --schedule selects the suite job scheduler: 'steal' (work-stealing,
+    // the default) or 'static' (round-robin shards, the scheduling ablation)
+    let schedule = if has_flag(args, "--schedule") {
+        match flag_value(args, "--schedule").and_then(Schedule::parse) {
+            Some(s) => s,
+            None => {
+                eprintln!("--schedule expects steal|static");
+                return 2;
+            }
+        }
+    } else {
+        Schedule::default()
+    };
+    // --journal PATH records every finished tuple as a durable JSONL line
+    // and replays tuples already recorded; --resume PATH is the same file
+    // opened tolerantly (a torn trailing record — the mark of a killed
+    // run — is dropped and the file truncated to its durable prefix).
+    if has_flag(args, "--journal") && has_flag(args, "--resume") {
+        eprintln!("--journal and --resume are mutually exclusive (resume opens the same journal)");
+        return 2;
+    }
+    let journal_sel = if has_flag(args, "--journal") {
+        Some(("--journal", flag_value(args, "--journal"), false))
+    } else if has_flag(args, "--resume") {
+        Some(("--resume", flag_value(args, "--resume"), true))
+    } else {
+        None
+    };
+    let journal = match journal_sel {
+        None => None,
+        Some((flag, None, _)) => {
+            eprintln!("{flag} requires a path");
+            return 2;
+        }
+        Some((_, Some(path), tolerant)) => {
+            match Journal::open(std::path::Path::new(path), tolerant) {
+                Ok(j) => {
+                    if j.dropped_partial {
+                        eprintln!("resume: dropped a partial trailing record from {path}");
+                    }
+                    Some(Arc::new(Mutex::new(j)))
+                }
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 2;
+                }
+            }
+        }
+    };
+    // --compare BASELINE.json is parsed before the run so a malformed
+    // baseline fails fast (exit 2) instead of after minutes of work; a
+    // baseline whose shape doesn't match the run (single- vs
+    // multi-backend) is a usage error, not a regression
+    let baseline = if has_flag(args, "--compare") {
+        let Some(path) = flag_value(args, "--compare") else {
+            eprintln!("--compare requires a baseline path");
+            return 2;
+        };
+        match load_baseline(path) {
+            Ok(b) => Some(b),
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+    } else {
+        None
+    };
+    match (&baseline, backend_all) {
+        (Some(Baseline::Multi(_)), false) => {
+            eprintln!("--compare baseline is multi-backend; run with --backend all");
+            return 2;
+        }
+        (Some(Baseline::Single(_)), true) => {
+            eprintln!("--compare baseline is single-backend; drop --backend all");
+            return 2;
+        }
+        _ => {}
+    }
     let mut pipeline = PipelineConfig { mode, ..Default::default() };
     if let Some(n) = cores {
         pipeline.cores = n;
@@ -223,6 +310,8 @@ fn cmd_suite(args: &[String]) -> i32 {
             None
         },
         golden_seeds,
+        journal,
+        schedule,
         ..Default::default()
     };
     if let Some(w) = flag_value(args, "--workers").and_then(|v| v.parse().ok()) {
@@ -251,7 +340,7 @@ fn cmd_suite(args: &[String]) -> i32 {
         None => all_tasks(),
     };
     if backend_all {
-        return suite_all_backends(&tasks, &cfg, &registry, args, golden, min_pass);
+        return suite_all_backends(&tasks, &cfg, &registry, args, golden, min_pass, &baseline);
     }
     let suite = run_suite(&tasks, &cfg);
     println!("\n{}", suite.render_table1());
@@ -266,6 +355,7 @@ fn cmd_suite(args: &[String]) -> i32 {
     if !analysis.is_empty() {
         println!("{analysis}");
     }
+    let mut code = 0;
     if let Some(path) = flag_value(args, "--json") {
         if let Err(e) = std::fs::write(path, suite.to_json().to_pretty()) {
             eprintln!("writing {path}: {e}");
@@ -286,7 +376,7 @@ fn cmd_suite(args: &[String]) -> i32 {
             }
         }
         if !failed.is_empty() {
-            return 1;
+            code = 1;
         }
     }
     // --min-pass N gates the exit code on Pass@1 count (smoke runs assert
@@ -295,11 +385,60 @@ fn cmd_suite(args: &[String]) -> i32 {
         let correct = suite.totals().correct;
         if correct < min {
             eprintln!("suite passed {correct} tasks, below the --min-pass floor of {min}");
-            return 1;
+            code = 1;
+        } else {
+            println!("min-pass check: {correct} >= {min} tasks correct");
         }
-        println!("min-pass check: {correct} >= {min} tasks correct");
     }
-    0
+    // --compare renders the delta against the baseline snapshot and gates
+    // the exit code: any metric drop, verdict flip, or lost task is exit 1
+    if let Some(Baseline::Single(base)) = &baseline {
+        let delta = compare_suites(base, &suite);
+        println!("{}", delta.render());
+        if delta.regressed() {
+            code = 1;
+        }
+    }
+    if let Some(j) = &cfg.journal {
+        let jr = j.lock().unwrap();
+        let (hits, appended) = jr.stats();
+        println!("journal: {hits} cached, {appended} executed ({})", jr.path().display());
+    }
+    code
+}
+
+/// A parsed `--compare` baseline: either one suite snapshot
+/// (`suite --json` output) or a multi-backend snapshot
+/// (`suite --backend all --json` output, keyed by backend name).
+enum Baseline {
+    Single(SuiteResult),
+    Multi(Vec<(String, SuiteResult)>),
+}
+
+/// Load and shape-check a `--compare` baseline file. Any failure here is
+/// a usage error (exit 2): a regression gate must never pass because its
+/// baseline didn't parse.
+fn load_baseline(path: &str) -> Result<Baseline, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+    let j = Json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+    if let Some(Json::Obj(backends)) = j.get("backends") {
+        let mut out = Vec::new();
+        for (name, suite) in backends {
+            let s = SuiteResult::from_json(suite)
+                .ok_or_else(|| format!("{path}: malformed suite for backend '{name}'"))?;
+            out.push((name.clone(), s));
+        }
+        if out.is_empty() {
+            return Err(format!("{path}: baseline has no backends"));
+        }
+        Ok(Baseline::Multi(out))
+    } else if j.get("tasks").is_some() {
+        SuiteResult::from_json(&j)
+            .map(Baseline::Single)
+            .ok_or_else(|| format!("{path}: malformed suite baseline"))
+    } else {
+        Err(format!("{path}: not a suite baseline (no 'tasks' or 'backends' key)"))
+    }
 }
 
 /// `suite --backend all`: every task on every registered backend, sharded
@@ -312,6 +451,7 @@ fn suite_all_backends(
     args: &[String],
     golden: bool,
     min_pass: Option<usize>,
+    baseline: &Option<Baseline>,
 ) -> i32 {
     let multi = run_suite_multi(tasks, cfg, &registry.all());
     for (name, suite) in &multi.per_backend {
@@ -367,6 +507,32 @@ fn suite_all_backends(
                 println!("min-pass check [{name}]: {correct} >= {min} tasks correct");
             }
         }
+    }
+    // --compare gates every baseline backend: one delta table per backend,
+    // and a backend the baseline covered but this run didn't is itself a
+    // regression (lost coverage), not a skipped comparison
+    if let Some(Baseline::Multi(base)) = baseline {
+        for (name, bsuite) in base {
+            match multi.get(name) {
+                Some(cur) => {
+                    println!("=== compare: {name} ===");
+                    let delta = compare_suites(bsuite, cur);
+                    println!("{}", delta.render());
+                    if delta.regressed() {
+                        code = 1;
+                    }
+                }
+                None => {
+                    eprintln!("baseline backend '{name}' missing from this run  REGRESSED");
+                    code = 1;
+                }
+            }
+        }
+    }
+    if let Some(j) = &cfg.journal {
+        let jr = j.lock().unwrap();
+        let (hits, appended) = jr.stats();
+        println!("journal: {hits} cached, {appended} executed ({})", jr.path().display());
     }
     code
 }

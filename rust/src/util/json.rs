@@ -164,6 +164,84 @@ impl Json {
     }
 }
 
+/// A parsed JSON-lines document: one value per newline-terminated line.
+/// Produced by [`parse_jsonl`]; the suite journal
+/// (`coordinator/journal.rs`) builds its durability story on it.
+#[derive(Debug)]
+pub struct JsonLines {
+    /// One entry per parsed line: the value and the byte offset just past
+    /// that line's terminating `'\n'` (so `text[..end]` is the document
+    /// prefix that includes it).
+    pub lines: Vec<(Json, usize)>,
+    /// Byte length of the durable prefix: everything up to and including
+    /// the last newline-terminated line. Truncating a file to this length
+    /// removes exactly the partial tail, nothing else.
+    pub durable_len: usize,
+    /// Tolerant mode dropped an unterminated (or unparsable) final line.
+    pub dropped_partial: bool,
+}
+
+/// Parse a JSON-lines document (`\n`-separated values, blank lines
+/// ignored). A line only counts as *durable* once its `'\n'` terminator
+/// is on disk — an append interrupted mid-record leaves an unterminated
+/// tail.
+///
+/// * `tolerant_tail = false` (strict): every non-blank line, including an
+///   unterminated final one, must parse; any failure is an error.
+/// * `tolerant_tail = true`: an unterminated final line is dropped
+///   (`dropped_partial`) whether or not it happens to parse — a record
+///   without its terminator is not durable. Malformed *interior* lines
+///   are still errors: append-only writes can only ever corrupt the tail,
+///   so interior damage means the file is not what this writer produced.
+pub fn parse_jsonl(text: &str, tolerant_tail: bool) -> Result<JsonLines, String> {
+    // split into non-blank lines first so "is this the final line?" is a
+    // plain index check when deciding how to treat a parse failure
+    let bytes = text.as_bytes();
+    let mut spans: Vec<(usize, usize, bool)> = Vec::new(); // (start, end-incl-nl, terminated)
+    let mut pos = 0usize;
+    while pos < bytes.len() {
+        let (line_end, terminated) = match bytes[pos..].iter().position(|&b| b == b'\n') {
+            Some(nl) => (pos + nl, true),
+            None => (bytes.len(), false),
+        };
+        let end = if terminated { line_end + 1 } else { line_end };
+        if !text[pos..line_end].trim().is_empty() {
+            spans.push((pos, end, terminated));
+        }
+        pos = end;
+    }
+    let mut lines = Vec::new();
+    for (i, &(start, end, terminated)) in spans.iter().enumerate() {
+        let last = i + 1 == spans.len();
+        let line_text = text[start..end].trim_end_matches('\n');
+        match Json::parse(line_text) {
+            Ok(value) if terminated || !tolerant_tail => lines.push((value, end)),
+            Ok(_) => {
+                // tolerant: an unterminated tail is not durable even if it
+                // happens to parse — drop it so resume re-runs that record
+                return Ok(JsonLines {
+                    durable_len: start,
+                    lines,
+                    dropped_partial: true,
+                });
+            }
+            Err(e) => {
+                if tolerant_tail && last {
+                    return Ok(JsonLines {
+                        durable_len: start,
+                        lines,
+                        dropped_partial: true,
+                    });
+                }
+                return Err(format!("line {}: {e}", i + 1));
+            }
+        }
+    }
+    let durable_len = lines.last().map_or(0, |&(_, end)| end);
+    let durable_len = if tolerant_tail { durable_len } else { text.len() };
+    Ok(JsonLines { lines, durable_len, dropped_partial: false })
+}
+
 /// Nesting bound for the parser: hostile input errors instead of
 /// overflowing the stack.
 const MAX_DEPTH: usize = 128;
@@ -645,6 +723,59 @@ mod tests {
             let pretty = doc.to_pretty();
             assert_eq!(Json::parse(&pretty).unwrap(), doc, "{pretty}");
         });
+    }
+
+    #[test]
+    fn jsonl_parses_terminated_lines() {
+        let text = "{\"a\":1}\n\n{\"b\":2}\n";
+        let doc = parse_jsonl(text, false).unwrap();
+        assert_eq!(doc.lines.len(), 2);
+        assert_eq!(doc.lines[0].0.get("a").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(doc.lines[1].1, text.len());
+        assert_eq!(doc.durable_len, text.len());
+        assert!(!doc.dropped_partial);
+    }
+
+    #[test]
+    fn jsonl_strict_accepts_unterminated_tail_that_parses() {
+        let doc = parse_jsonl("{\"a\":1}\n{\"b\":2}", false).unwrap();
+        assert_eq!(doc.lines.len(), 2);
+        assert!(!doc.dropped_partial);
+    }
+
+    #[test]
+    fn jsonl_strict_rejects_any_malformed_line() {
+        let err = parse_jsonl("{\"a\":1}\n{\"b\":\n{\"c\":3}\n", false).unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(parse_jsonl("{\"a\":1}\n{\"b\"", false).is_err());
+    }
+
+    #[test]
+    fn jsonl_tolerant_drops_only_the_partial_tail() {
+        // a record truncated mid-write: no terminator
+        let full = "{\"a\":1}\n{\"b\":2}\n";
+        let cut = &full[..full.len() - 4]; // "{\"b\""… unterminated
+        let doc = parse_jsonl(cut, true).unwrap();
+        assert_eq!(doc.lines.len(), 1);
+        assert!(doc.dropped_partial);
+        assert_eq!(doc.durable_len, "{\"a\":1}\n".len());
+        // an unterminated tail that *parses* is still not durable
+        let doc = parse_jsonl("{\"a\":1}\n{\"b\":2}", true).unwrap();
+        assert_eq!(doc.lines.len(), 1);
+        assert!(doc.dropped_partial);
+        // interior corruption is never skipped, even when tolerant
+        assert!(parse_jsonl("{\"a\":\n{\"b\":2}\n", true).is_err());
+    }
+
+    #[test]
+    fn jsonl_tolerant_on_clean_input_is_lossless() {
+        let text = "{\"a\":1}\n{\"b\":2}\n";
+        let doc = parse_jsonl(text, true).unwrap();
+        assert_eq!(doc.lines.len(), 2);
+        assert!(!doc.dropped_partial);
+        assert_eq!(doc.durable_len, text.len());
+        let empty = parse_jsonl("", true).unwrap();
+        assert!(empty.lines.is_empty() && empty.durable_len == 0);
     }
 
     #[test]

@@ -273,6 +273,22 @@ pub fn run_parts(parts: usize, f: impl Fn(usize) + Sync) {
     }
 }
 
+/// [`run_parts`] with the concurrency additionally capped at
+/// `max_workers` (the [`WorkerPool::run_bounded`] semantics, resolved
+/// against the thread's current pool). The suite scheduler
+/// (`coordinator::service::schedule_jobs`) runs through here so tests can
+/// pin exact thread counts with [`WorkerPool::install`].
+pub fn run_parts_bounded(parts: usize, max_workers: usize, f: impl Fn(usize) + Sync) {
+    let cur = CURRENT.with(|c| c.get());
+    if cur.is_null() {
+        global().run_bounded(parts, max_workers, f);
+    } else {
+        // SAFETY: `CURRENT` is only non-null inside an `install`/`enter`
+        // scope, whose guard keeps the pool borrowed for the duration.
+        unsafe { &*cur }.run_bounded(parts, max_workers, f);
+    }
+}
+
 /// Parallelism of the thread's current pool (see [`run_parts`]).
 pub fn current_parallelism() -> usize {
     let cur = CURRENT.with(|c| c.get());
@@ -410,6 +426,18 @@ mod tests {
             n.fetch_add(1, Ordering::SeqCst);
         });
         assert_eq!(n.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn run_parts_bounded_resolves_the_installed_pool() {
+        let pool = WorkerPool::new(2);
+        let max_seen = AtomicU64::new(0);
+        pool.install(|| {
+            run_parts_bounded(8, 4, |_| {
+                max_seen.fetch_max(current_parallelism() as u64, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(max_seen.load(Ordering::SeqCst), 2);
     }
 
     #[test]

@@ -363,6 +363,233 @@ fn suite_failure_table_names_stage_and_code() {
     assert!(text.contains("transpile"), "{text}");
 }
 
+fn fixture(name: &str) -> String {
+    format!("{}/tests/fixtures/{name}", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn temp_journal(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("ascendcraft_cli_{tag}_{}.jsonl", std::process::id()))
+}
+
+#[test]
+fn suite_journal_caches_a_second_run_without_touching_the_file() {
+    let path = temp_journal("cache");
+    let _ = std::fs::remove_file(&path);
+    let run = |args: &[&str]| {
+        bin().args(["suite", "--quiet", "--tasks", "relu,gelu", "--journal"])
+            .arg(&path)
+            .args(args)
+            .output()
+            .expect("run suite --journal")
+    };
+    let out = run(&[]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("journal: 0 cached, 2 executed"), "{text}");
+    let bytes = std::fs::read(&path).unwrap();
+
+    // second run over the same journal: everything replays, the file is
+    // byte-identical (no re-append, no rewrite)
+    let out = run(&[]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("journal: 2 cached, 0 executed"), "{text}");
+    assert_eq!(std::fs::read(&path).unwrap(), bytes, "cached run must not touch the file");
+
+    // a config change (different core count) misses the cache
+    let out = run(&["--cores", "4"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("journal: 0 cached, 2 executed"), "{text}");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn suite_resume_recovers_a_torn_journal_where_strict_mode_refuses() {
+    let path = temp_journal("resume");
+    let _ = std::fs::remove_file(&path);
+    // serial run so the append order (and thus the torn record) is fixed
+    let out = bin()
+        .args(["suite", "--quiet", "--workers", "1", "--tasks", "relu,gelu", "--journal"])
+        .arg(&path)
+        .output()
+        .expect("run suite --journal");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    // tear the final record as a kill mid-append would
+    let full = std::fs::read_to_string(&path).unwrap();
+    std::fs::write(&path, &full[..full.len() - 20]).unwrap();
+
+    // strict --journal refuses the torn file outright (exit 2, no run)
+    let out = bin()
+        .args(["suite", "--quiet", "--tasks", "relu,gelu", "--journal"])
+        .arg(&path)
+        .output()
+        .expect("run suite --journal on torn file");
+    assert_eq!(out.status.code(), Some(2), "{}", String::from_utf8_lossy(&out.stderr));
+
+    // --resume drops the torn record, replays the durable one, and
+    // re-executes only the lost task
+    let out = bin()
+        .args(["suite", "--quiet", "--tasks", "relu,gelu", "--resume"])
+        .arg(&path)
+        .output()
+        .expect("run suite --resume");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("dropped a partial trailing record"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("journal: 1 cached, 1 executed"), "{text}");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn suite_journal_flag_usage_errors() {
+    // --journal and --resume together make no sense
+    let out = bin()
+        .args(["suite", "--quiet", "--tasks", "relu"])
+        .args(["--journal", "a.jsonl", "--resume", "b.jsonl"])
+        .output()
+        .expect("run suite");
+    assert_eq!(out.status.code(), Some(2));
+
+    // a foreign file is rejected in BOTH modes (interior corruption is
+    // never a resumable condition)
+    let path = temp_journal("foreign");
+    std::fs::write(&path, "this is not a journal\n").unwrap();
+    for flag in ["--journal", "--resume"] {
+        let out = bin()
+            .args(["suite", "--quiet", "--tasks", "relu", flag])
+            .arg(&path)
+            .output()
+            .expect("run suite");
+        assert_eq!(out.status.code(), Some(2), "{flag} must reject a foreign file");
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn suite_compare_passes_against_a_matching_baseline() {
+    let out = bin()
+        .args(["suite", "--quiet", "--tasks", "relu", "--compare", &fixture("baseline_tiny.json")])
+        .output()
+        .expect("run suite --compare");
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert_eq!(out.status.code(), Some(0), "{text}\n{}", String::from_utf8_lossy(&out.stderr));
+    assert!(text.contains("Baseline comparison."), "{text}");
+    assert!(text.contains("verdict: no regression vs baseline"), "{text}");
+}
+
+#[test]
+fn suite_compare_exits_one_on_a_verdict_regression() {
+    // the baseline claims mask_cumsum compiles; it never has — the
+    // comparison must flag the flip and gate the exit code
+    let out = bin()
+        .args([
+            "suite",
+            "--quiet",
+            "--tasks",
+            "relu,mask_cumsum",
+            "--compare",
+            &fixture("baseline_tiny_regress.json"),
+        ])
+        .output()
+        .expect("run suite --compare");
+    assert_eq!(out.status.code(), Some(1));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("verdict: REGRESSED vs baseline"), "{text}");
+    assert!(text.contains("mask_cumsum"), "{text}");
+}
+
+#[test]
+fn suite_compare_rejects_malformed_baselines() {
+    // missing file
+    let out = bin()
+        .args(["suite", "--quiet", "--tasks", "relu", "--compare", "/nonexistent/base.json"])
+        .output()
+        .expect("run suite");
+    assert_eq!(out.status.code(), Some(2));
+
+    // unparseable JSON and wrong schema both fail before any run
+    let path = temp_journal("badbase");
+    for bad in ["{not json", "{\"foo\": 1}"] {
+        std::fs::write(&path, bad).unwrap();
+        let out = bin()
+            .args(["suite", "--quiet", "--tasks", "relu", "--compare"])
+            .arg(&path)
+            .output()
+            .expect("run suite");
+        assert_eq!(out.status.code(), Some(2), "baseline {bad:?} must be a usage error");
+    }
+
+    // shape mismatch: a single-suite baseline cannot gate a --backend all
+    // run (and vice versa)
+    let out = bin()
+        .args([
+            "suite",
+            "--quiet",
+            "--tasks",
+            "relu",
+            "--backend",
+            "all",
+            "--compare",
+            &fixture("baseline_tiny.json"),
+        ])
+        .output()
+        .expect("run suite");
+    assert_eq!(out.status.code(), Some(2));
+    let smoke = format!("{}/../BASELINE_SMOKE.json", env!("CARGO_MANIFEST_DIR"));
+    let out = bin()
+        .args(["suite", "--quiet", "--tasks", "relu", "--compare", &smoke])
+        .output()
+        .expect("run suite");
+    assert_eq!(out.status.code(), Some(2));
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn suite_backend_all_compares_against_the_checked_in_smoke_baseline() {
+    // the CI regression gate, exercised end to end: the smoke tasks on
+    // every backend vs the checked-in conservative baseline
+    let smoke = format!("{}/../BASELINE_SMOKE.json", env!("CARGO_MANIFEST_DIR"));
+    let out = bin()
+        .args([
+            "suite",
+            "--quiet",
+            "--backend",
+            "all",
+            "--tasks",
+            "relu,gelu,softmax,mse_loss,adam",
+            "--compare",
+            &smoke,
+        ])
+        .output()
+        .expect("run suite --backend all --compare");
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert_eq!(out.status.code(), Some(0), "{text}\n{}", String::from_utf8_lossy(&out.stderr));
+    assert!(text.contains("=== compare: ascend-sim ==="), "{text}");
+    assert!(text.contains("=== compare: cpu-ref ==="), "{text}");
+    assert!(!text.contains("REGRESSED"), "{text}");
+}
+
+#[test]
+fn suite_schedule_flag_selects_the_scheduler() {
+    let out = bin()
+        .args(["suite", "--quiet", "--tasks", "relu", "--schedule", "static"])
+        .output()
+        .expect("run suite --schedule static");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let out = bin()
+        .args(["suite", "--quiet", "--tasks", "relu", "--schedule", "bogus"])
+        .output()
+        .expect("run suite");
+    assert_eq!(out.status.code(), Some(2));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("steal|static"));
+}
+
 #[test]
 fn threads_flag_is_global_and_position_independent() {
     // leading position: dispatch must still see the command verb

@@ -1,13 +1,19 @@
-//! Keeps `docs/HLO_SUBSET.md` honest: the opcode and element-type tables
-//! in the spec (between `<!-- opcodes-begin/end -->` and
-//! `<!-- elem-types-begin/end -->` markers) must list exactly the names
-//! the parser accepts — no more, no less, in the parser's order.
+//! Keeps the docs honest: marker-delimited tables in the markdown must
+//! list exactly the names the code accepts — no more, no less, in the
+//! code's order. Covers the HLO opcode/element-type tables in
+//! `docs/HLO_SUBSET.md` and the journal-key field table in
+//! `docs/ARCHITECTURE.md`.
 
+use ascendcraft::coordinator::journal::KEY_FIELDS;
 use ascendcraft::runtime::hlo::parser::{SUPPORTED_ELEM_TYPES, SUPPORTED_OPCODES};
 
+fn read_doc(rel: &str) -> String {
+    let path = format!("{}/../docs/{rel}", env!("CARGO_MANIFEST_DIR"));
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("docs/{rel} is checked in: {e}"))
+}
+
 fn doc_text() -> String {
-    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../docs/HLO_SUBSET.md");
-    std::fs::read_to_string(path).expect("docs/HLO_SUBSET.md is checked in")
+    read_doc("HLO_SUBSET.md")
 }
 
 /// Extract the first backticked name of each table row between the two
@@ -58,6 +64,18 @@ fn documented_elem_types_match_the_parser() {
     assert_eq!(
         documented, supported,
         "docs/HLO_SUBSET.md element-type table does not match parser::SUPPORTED_ELEM_TYPES"
+    );
+}
+
+#[test]
+fn documented_journal_key_fields_match_the_implementation() {
+    let doc = read_doc("ARCHITECTURE.md");
+    let documented = table_names(&doc, "<!-- journal-key-begin -->", "<!-- journal-key-end -->");
+    let fields: Vec<String> = KEY_FIELDS.iter().map(|s| s.to_string()).collect();
+    assert_eq!(
+        documented, fields,
+        "docs/ARCHITECTURE.md journal-key table does not match journal::KEY_FIELDS \
+         (a field change invalidates every existing journal — update both sides deliberately)"
     );
 }
 

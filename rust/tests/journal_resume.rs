@@ -1,0 +1,116 @@
+//! Crash/resume integration tests for the suite journal: a journaled run
+//! killed mid-append and resumed with `--resume` semantics must execute
+//! only the tasks whose records never became durable, and its final
+//! [`SuiteResult`] must be identical (modulo wall clocks) to an
+//! uninterrupted run.
+
+use ascendcraft::bench_suite::spec::TaskSpec;
+use ascendcraft::bench_suite::tasks::task_by_name;
+use ascendcraft::coordinator::journal::Journal;
+use ascendcraft::coordinator::service::{run_suite, SuiteConfig};
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+fn temp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("ascendcraft_resume_{tag}_{}.jsonl", std::process::id()))
+}
+
+fn tasks() -> Vec<TaskSpec> {
+    ["relu", "gelu", "softsign", "tanh_act"].iter().map(|n| task_by_name(n).unwrap()).collect()
+}
+
+fn cfg(workers: usize, journal: Option<Arc<Mutex<Journal>>>) -> SuiteConfig {
+    SuiteConfig { workers, journal, ..Default::default() }
+}
+
+#[test]
+fn interrupted_journal_resumes_to_the_uninterrupted_result() {
+    let path = temp_path("torn");
+    let _ = std::fs::remove_file(&path);
+    let tasks = tasks();
+
+    // run A: journaled, all four tasks execute and append
+    let journal = Arc::new(Mutex::new(Journal::open(&path, false).unwrap()));
+    let a = run_suite(&tasks, &cfg(2, Some(Arc::clone(&journal))));
+    assert_eq!(journal.lock().unwrap().stats(), (0, 4));
+    drop(journal);
+
+    // the uninterrupted reference run (no journal at all)
+    let uninterrupted = run_suite(&tasks, &cfg(2, None));
+    assert_eq!(a.canonical(), uninterrupted.canonical());
+
+    // simulate a kill mid-append: cut into the middle of the final record
+    // (its terminating newline never reached the disk)
+    let full = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(full.lines().count(), 5, "header + one record per task:\n{full}");
+    std::fs::write(&path, &full[..full.len() - 25]).unwrap();
+
+    // strict (--journal) refuses the torn file; tolerant (--resume) drops
+    // exactly the torn record and truncates the file to its durable prefix
+    assert!(Journal::open(&path, false).is_err());
+    let resumed = Arc::new(Mutex::new(Journal::open(&path, true).unwrap()));
+    {
+        let j = resumed.lock().unwrap();
+        assert!(j.dropped_partial);
+        assert_eq!(j.len(), 3);
+    }
+    let durable: String = full.lines().take(4).map(|l| format!("{l}\n")).collect();
+    assert_eq!(std::fs::read_to_string(&path).unwrap(), durable);
+
+    // the resumed run replays the three durable records and executes only
+    // the one task whose record was torn
+    let b = run_suite(&tasks, &cfg(2, Some(Arc::clone(&resumed))));
+    assert_eq!(resumed.lock().unwrap().stats(), (3, 1));
+    assert_eq!(b.canonical(), uninterrupted.canonical());
+    // the three replays are bitwise-identical to run A's results — wall
+    // clocks included, because a replay IS run A's record
+    let replayed = a.results.iter().zip(&b.results).filter(|(x, y)| x == y).count();
+    assert!(replayed >= 3, "only {replayed} of 4 results replayed bitwise");
+
+    // after the resume the file is whole again: the durable prefix is
+    // untouched (append-only repair) and the re-run task was re-appended
+    let after = std::fs::read_to_string(&path).unwrap();
+    assert!(after.starts_with(&durable), "resume must not rewrite durable records");
+    assert_eq!(after.lines().count(), 5);
+
+    // a third run over the repaired journal replays everything bitwise
+    let again = Arc::new(Mutex::new(Journal::open(&path, false).unwrap()));
+    let c = run_suite(&tasks, &cfg(2, Some(Arc::clone(&again))));
+    assert_eq!(again.lock().unwrap().stats(), (4, 0));
+    assert_eq!(c, b);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn resume_from_a_clean_record_boundary_runs_only_the_missing_tasks() {
+    let path = temp_path("boundary");
+    let _ = std::fs::remove_file(&path);
+    let tasks = tasks();
+
+    // workers = 1 makes the append order the task order, so dropping the
+    // final line is a kill between the last two tasks
+    let journal = Arc::new(Mutex::new(Journal::open(&path, false).unwrap()));
+    let a = run_suite(&tasks, &cfg(1, Some(Arc::clone(&journal))));
+    drop(journal);
+    let full = std::fs::read_to_string(&path).unwrap();
+    let durable: String = full.lines().take(4).map(|l| format!("{l}\n")).collect();
+    std::fs::write(&path, &durable).unwrap();
+
+    // a file that simply has fewer records is valid in BOTH modes — no
+    // partial tail to drop
+    let strict = Journal::open(&path, false).unwrap();
+    assert!(!strict.dropped_partial);
+    assert_eq!(strict.len(), 3);
+    drop(strict);
+
+    let resumed = Arc::new(Mutex::new(Journal::open(&path, true).unwrap()));
+    assert!(!resumed.lock().unwrap().dropped_partial);
+    let b = run_suite(&tasks, &cfg(1, Some(Arc::clone(&resumed))));
+    assert_eq!(resumed.lock().unwrap().stats(), (3, 1));
+    assert_eq!(a.canonical(), b.canonical());
+    // serial order: the first three results replay bitwise, clocks included
+    for i in 0..3 {
+        assert_eq!(a.results[i], b.results[i], "task {} must replay bitwise", tasks[i].name);
+    }
+    let _ = std::fs::remove_file(&path);
+}

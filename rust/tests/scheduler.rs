@@ -1,0 +1,110 @@
+//! Work-stealing scheduler tests: suite results are bit-identical across
+//! worker counts and schedules (the scheduler decides *who* runs a job,
+//! never *what* it computes), and the fairness property that motivates
+//! stealing — a slow job cannot starve unrelated fast jobs — actually
+//! holds, while the static-shard ablation demonstrably starves.
+
+use ascendcraft::backend::BackendRegistry;
+use ascendcraft::bench_suite::spec::TaskSpec;
+use ascendcraft::bench_suite::tasks::task_by_name;
+use ascendcraft::coordinator::service::{run_suite_multi, schedule_jobs, Schedule, SuiteConfig};
+use ascendcraft::util::pool::WorkerPool;
+use std::sync::Mutex;
+use std::time::Duration;
+
+fn tasks() -> Vec<TaskSpec> {
+    ["relu", "gelu", "softsign"].iter().map(|n| task_by_name(n).unwrap()).collect()
+}
+
+#[test]
+fn run_suite_multi_is_identical_across_worker_counts_and_schedules() {
+    let tasks = tasks();
+    let backends = BackendRegistry::builtin().all();
+    // serial reference: 1 worker on a 1-thread pool is the plain loop
+    let base = WorkerPool::new(1).install(|| {
+        run_suite_multi(&tasks, &SuiteConfig { workers: 1, ..Default::default() }, &backends)
+    });
+    for schedule in [Schedule::WorkSteal, Schedule::StaticShard] {
+        for threads in [1usize, 2, 8] {
+            let multi = WorkerPool::new(threads).install(|| {
+                let cfg = SuiteConfig { workers: threads, schedule, ..Default::default() };
+                run_suite_multi(&tasks, &cfg, &backends)
+            });
+            assert_eq!(multi.per_backend.len(), base.per_backend.len());
+            for ((bn, bs), (cn, cs)) in base.per_backend.iter().zip(&multi.per_backend) {
+                assert_eq!(bn, cn, "{schedule:?}/{threads}: backend order");
+                assert_eq!(
+                    bs.canonical(),
+                    cs.canonical(),
+                    "{schedule:?}/{threads}/{bn}: results diverged from serial"
+                );
+            }
+        }
+    }
+}
+
+/// 1 slow job + 8 fast jobs on 2 executors. Jobs are claimed in index
+/// order off one shared counter: whichever executor claims the sleeper
+/// holds it for 300ms while the other drains every remaining job, so the
+/// sleeper always finishes last.
+#[test]
+fn work_stealing_drains_fast_jobs_past_a_slow_one() {
+    let order: Mutex<Vec<usize>> = Mutex::new(Vec::new());
+    WorkerPool::new(2).install(|| {
+        schedule_jobs(9, 2, Schedule::WorkSteal, |idx| {
+            if idx == 0 {
+                std::thread::sleep(Duration::from_millis(300));
+            }
+            order.lock().unwrap().push(idx);
+        });
+    });
+    let order = order.into_inner().unwrap();
+    assert_eq!(order.len(), 9);
+    assert_eq!(*order.last().unwrap(), 0, "every fast job must overtake the sleeper: {order:?}");
+}
+
+/// The same workload under static sharding: the sleeper's shard
+/// (0,2,4,6,8 round-robin on 2 workers) runs serially behind it, so its
+/// fast jobs are starved for the whole sleep — while the other shard
+/// (1,3,5,7) drains immediately. This is the ablation that justifies
+/// work-stealing as the default.
+#[test]
+fn static_sharding_starves_the_slow_shard() {
+    let order: Mutex<Vec<usize>> = Mutex::new(Vec::new());
+    WorkerPool::new(2).install(|| {
+        schedule_jobs(9, 2, Schedule::StaticShard, |idx| {
+            if idx == 0 {
+                std::thread::sleep(Duration::from_millis(300));
+            }
+            order.lock().unwrap().push(idx);
+        });
+    });
+    let order = order.into_inner().unwrap();
+    assert_eq!(order.len(), 9);
+    let pos = |i: usize| order.iter().position(|&x| x == i).unwrap();
+    // shard 0 is strictly serial behind the sleeper...
+    assert!(pos(2) > pos(0), "shard-mate 2 ran before its shard's sleeper: {order:?}");
+    assert!(pos(8) > pos(0), "shard-mate 8 ran before its shard's sleeper: {order:?}");
+    // ...while the other shard finished everything before the sleeper woke
+    assert!(pos(7) < pos(0), "the unimpeded shard should drain during the sleep: {order:?}");
+}
+
+/// Both schedules run every index exactly once even when the worker cap
+/// exceeds the pool, the job count, or both.
+#[test]
+fn schedules_cover_every_index_under_odd_caps() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    for schedule in [Schedule::WorkSteal, Schedule::StaticShard] {
+        for (n, workers) in [(1usize, 8usize), (7, 3), (16, 16), (5, 100)] {
+            let counts: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            WorkerPool::new(4).install(|| {
+                schedule_jobs(n, workers, schedule, |idx| {
+                    counts[idx].fetch_add(1, Ordering::SeqCst);
+                });
+            });
+            for (idx, c) in counts.iter().enumerate() {
+                assert_eq!(c.load(Ordering::SeqCst), 1, "{schedule:?} n={n} w={workers} idx={idx}");
+            }
+        }
+    }
+}
