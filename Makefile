@@ -8,7 +8,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: all build test bench bench-snapshot smoke regress resume-smoke artifacts doc fmt clean
+.PHONY: all build test bench bench-snapshot bench-regress smoke regress resume-smoke serve-smoke artifacts doc fmt clean
 
 all: build
 
@@ -21,14 +21,26 @@ test:
 bench: build
 	$(CARGO) bench
 
-# Re-measure the kernel-layer perf trajectory: runs the hotpath bench's
-# kernel groups (matmul naive-vs-tiled, elementwise/reduction thread
-# scaling) and rewrites BENCH_PR7.json at the repo root. The bench
-# self-validates the snapshot (reparse + required groups) and exits
-# non-zero on a malformed file. Add BENCH_QUICK=1 for the reduced-size
-# CI variant.
+# Re-measure the perf trajectory: runs the hotpath bench's kernel groups
+# (matmul naive-vs-tiled, elementwise/reduction thread scaling) plus the
+# serve cold-vs-warm cache replay, and rewrites BENCH_PR9.json at the
+# repo root. The bench self-validates the snapshot (reparse + required
+# groups) and exits non-zero on a malformed file. Add BENCH_QUICK=1 for
+# the reduced-size CI variant.
 bench-snapshot:
-	$(CARGO) bench --bench hotpath -- $(if $(BENCH_QUICK),--quick) --json BENCH_PR7.json
+	$(CARGO) bench --bench hotpath -- $(if $(BENCH_QUICK),--quick) --json BENCH_PR9.json
+
+# Perf regression gate: re-measure a full-mode snapshot into target/ and
+# diff its speedup RATIOS against the checked-in BENCH_PR9.json (raw ms
+# medians are host-dependent; ratios are not). The wide tolerance absorbs
+# run-to-run jitter — this gate exists to catch a tiling/threading/cache
+# collapse, not a 10% wobble. Full mode only: quick mode measures smaller
+# matmul shapes, so its metric names would read as missing (= regressed).
+bench-regress: build
+	$(CARGO) bench --bench hotpath -- --json target/BENCH_CURRENT.json
+	./target/release/ascendcraft suite \
+		--compare BENCH_PR9.json --bench target/BENCH_CURRENT.json \
+		--tolerance 0.35
 
 # Release-mode end-to-end smoke over a small task subset with the golden
 # cross-check folded in: exercises the staged pipeline, the suite runner,
@@ -73,6 +85,28 @@ resume-smoke: build
 		--tasks $(RESUME_TASKS) \
 		--resume target/resume-smoke.jsonl --min-pass 5
 	rm -f target/resume-smoke.jsonl
+
+# Serve smoke: boot the daemon twice over one persistent cache file.
+# The first invocation executes relu through the full pipeline and
+# appends it to the cache; the second must answer the same request with
+# "cache_hit":true WITHOUT running any pipeline stages — the restart-
+# warmth acceptance criterion, end to end over the real stdio protocol.
+# --workers 1 keeps the replay deterministic (no coalescing window).
+serve-smoke: build
+	rm -f target/serve-smoke-cache.jsonl
+	printf '%s\n' \
+		'{"op":"generate","id":1,"task":"relu"}' \
+		'{"op":"shutdown","id":2}' \
+	| ./target/release/ascendcraft serve --stdio --workers 1 \
+		--cache target/serve-smoke-cache.jsonl \
+	| grep -q '"ok":true'
+	printf '%s\n' \
+		'{"op":"generate","id":1,"task":"relu"}' \
+		'{"op":"shutdown","id":2}' \
+	| ./target/release/ascendcraft serve --stdio --workers 1 \
+		--cache target/serve-smoke-cache.jsonl \
+	| grep -q '"cache_hit":true'
+	rm -f target/serve-smoke-cache.jsonl
 
 # Build the API docs with warnings denied (same gate as CI): broken
 # intra-doc links fail instead of rotting silently.

@@ -1,108 +1,115 @@
 //! Codegen-service demo: AscendCraft as a deployed kernel-generation
-//! service (the L3 coordinator's intended shape).
+//! service — now a thin client of the real `serve` subsystem instead of
+//! an ad-hoc mpsc worker pool.
 //!
-//! A client thread submits kernel requests (task specs) to a bounded job
-//! queue; a worker pool drains it, running the full generation pipeline
-//! per request and returning verified AscendC plus a report. Demonstrates
-//! concurrency, per-request artifacts, and failure reporting for
-//! unsupported requests (the bool-dtype kernel).
+//! Spawns the daemon in-process ([`Daemon::start`]), submits a mixed
+//! batch of kernel requests through the same [`KernelRequest`] objects
+//! the JSONL wire protocol parses into — including one the service must
+//! reject (the bool-dtype `mask_cumsum` kernel) — then replays the batch
+//! to show the content-addressed cache: every warm response is a hit and
+//! carries the byte-identical verdict with no pipeline stages run.
 //!
 //! Run: `cargo run --release --example serve_codegen`
 
-use ascendcraft::bench_suite::tasks::task_by_name;
-use ascendcraft::coordinator::pipeline::{run_task, PipelineConfig};
-use std::sync::mpsc;
-use std::time::Instant;
+use ascendcraft::serve::{Daemon, KernelRequest, Response, ServeConfig};
 
-struct Request {
-    id: usize,
-    task_name: &'static str,
+/// The demo batch: seven kernels the service verifies end-to-end plus
+/// `mask_cumsum`, whose bool dtype the transpiler rejects (`ok` stays
+/// true — the request was *served*; the verdict lives in the result).
+const BATCH: [&str; 8] =
+    ["relu", "gelu", "softmax", "adam", "cumsum", "mse_loss", "mask_cumsum", "l2norm"];
+
+fn submit_batch(daemon: &Daemon) -> Vec<Response> {
+    let tickets: Vec<_> = BATCH
+        .iter()
+        .enumerate()
+        .map(|(id, name)| {
+            let mut req = KernelRequest::new(name);
+            req.id = id as u64;
+            daemon.submit(req)
+        })
+        .collect();
+    let mut responses: Vec<Response> = tickets.into_iter().map(|t| t.wait()).collect();
+    responses.sort_by_key(|r| r.id);
+    responses
 }
 
-struct Response {
-    id: usize,
-    task_name: &'static str,
-    ok: bool,
-    detail: String,
-    ascendc_lines: usize,
-    secs: f64,
+fn print_batch(phase: &str, responses: &[Response]) -> usize {
+    println!(
+        "{:<4} {:<14} {:<8} {:<6} {:>7}  detail",
+        "id", "kernel", "verdict", "cache", "secs"
+    );
+    let mut correct = 0;
+    for r in responses {
+        let result = r.result.as_ref().expect("served request carries a result");
+        let verdict = if result.correct {
+            "pass"
+        } else if result.compiled {
+            "wrong"
+        } else {
+            "nocompile"
+        };
+        correct += usize::from(result.correct);
+        let detail = match &result.failure {
+            Some(d) => d.to_string(),
+            None => format!(
+                "verified, {:.2}x vs eager, {} repair rounds",
+                result.speedup().unwrap_or(0.0),
+                result.repair_rounds
+            ),
+        };
+        println!(
+            "{:<4} {:<14} {:<8} {:<6} {:>6.2}s  {}",
+            r.id,
+            result.name,
+            verdict,
+            if r.cache_hit {
+                "hit"
+            } else if r.coalesced {
+                "join"
+            } else {
+                "miss"
+            },
+            r.secs,
+            &detail[..detail.len().min(80)]
+        );
+    }
+    println!("  ({phase} pass: {correct}/{} verified)\n", responses.len());
+    correct
 }
 
 fn main() {
-    let (req_tx, req_rx) = mpsc::channel::<Request>();
-    let (resp_tx, resp_rx) = mpsc::channel::<Response>();
-    let req_rx = std::sync::Arc::new(std::sync::Mutex::new(req_rx));
+    let daemon = Daemon::start(ServeConfig { workers: 4, ..ServeConfig::default() })
+        .expect("daemon starts");
 
-    let workers = 4;
-    std::thread::scope(|scope| {
-        // worker pool
-        for worker_id in 0..workers {
-            let req_rx = std::sync::Arc::clone(&req_rx);
-            let resp_tx = resp_tx.clone();
-            scope.spawn(move || loop {
-                let req = {
-                    let guard = req_rx.lock().unwrap();
-                    guard.recv()
-                };
-                let Ok(req) = req else { return };
-                let started = Instant::now();
-                let task = task_by_name(req.task_name).expect("known task");
-                let art = run_task(&task, &PipelineConfig::default());
-                let ascendc_lines = art
-                    .program()
-                    .map(|p| ascendcraft::ascendc::print_ascendc(p).lines().count())
-                    .unwrap_or(0);
-                let _ = resp_tx.send(Response {
-                    id: req.id,
-                    task_name: req.task_name,
-                    ok: art.result.correct,
-                    detail: art
-                        .result
-                        .failure
-                        .as_ref()
-                        .map(|d| d.to_string())
-                        .unwrap_or_else(|| {
-                            format!(
-                                "verified, {:.2}x vs eager, {} repair rounds (worker {worker_id})",
-                                art.result.speedup().unwrap_or(0.0),
-                                art.result.repair_rounds
-                            )
-                        }),
-                    ascendc_lines,
-                    secs: started.elapsed().as_secs_f64(),
-                });
-            });
-        }
-        drop(resp_tx);
+    // cold pass: every request is a miss and runs the full pipeline
+    let cold = submit_batch(&daemon);
+    let cold_ok = print_batch("cold", &cold);
+    assert_eq!(cold.len(), BATCH.len());
+    assert!(cold.iter().all(|r| r.ok), "every request must be served, not rejected");
+    assert!(cold.iter().all(|r| !r.cache_hit), "first pass must not hit the cache");
+    assert_eq!(cold_ok, BATCH.len() - 1, "exactly mask_cumsum should fail");
 
-        // client: submit a mixed batch of requests, including one the
-        // service must reject (bool mask kernel)
-        let batch = [
-            "relu", "gelu", "softmax", "adam", "cumsum", "mse_loss", "mask_cumsum", "l2norm",
-        ];
-        for (id, name) in batch.iter().enumerate() {
-            req_tx.send(Request { id, task_name: name }).unwrap();
-        }
-        drop(req_tx);
+    // warm pass: the same batch again — all cache hits, identical verdicts
+    let warm = submit_batch(&daemon);
+    let warm_ok = print_batch("warm", &warm);
+    assert_eq!(warm_ok, cold_ok);
+    for (c, w) in cold.iter().zip(&warm) {
+        assert!(w.cache_hit, "repeat request {} must be a cache hit", w.id);
+        assert_eq!(
+            c.result, w.result,
+            "cached verdict must be identical to the executed one"
+        );
+    }
 
-        let mut responses: Vec<Response> = resp_rx.iter().collect();
-        responses.sort_by_key(|r| r.id);
-        println!("{:<4} {:<14} {:<6} {:>8} {:>7}  detail", "id", "kernel", "ok", "ascendc", "secs");
-        let mut ok_count = 0;
-        for r in &responses {
-            println!(
-                "{:<4} {:<14} {:<6} {:>8} {:>6.2}s  {}",
-                r.id,
-                r.task_name,
-                r.ok,
-                r.ascendc_lines,
-                r.secs,
-                &r.detail[..r.detail.len().min(80)]
-            );
-            ok_count += r.ok as usize;
-        }
-        assert_eq!(responses.len(), batch.len());
-        assert_eq!(ok_count, batch.len() - 1, "exactly mask_cumsum should fail");
-        println!("\nserved {} requests, {} verified kernels", responses.len(), ok_count);
-    });
+    let stats = daemon.shutdown();
+    println!("{}", stats.render());
+    assert_eq!(stats.cache.executed, BATCH.len(), "each tuple ran the pipeline exactly once");
+    assert_eq!(stats.cache.hits, BATCH.len(), "the warm pass was served entirely from cache");
+    println!(
+        "served {} requests, {} verified kernels, hit rate {:.0}%",
+        stats.requests,
+        warm_ok,
+        stats.hit_rate().unwrap_or(0.0) * 100.0
+    );
 }

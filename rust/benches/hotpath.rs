@@ -25,6 +25,7 @@ use ascendcraft::coordinator::service::{run_suite, SuiteConfig};
 use ascendcraft::dsl;
 use ascendcraft::runtime::hlo::{evaluate, parse_module, ExecutablePlan, PlanOptions, PlanScratch};
 use ascendcraft::runtime::GoldenOracle;
+use ascendcraft::serve::{Daemon, KernelRequest, ServeConfig};
 use ascendcraft::synth::{templates::KnowledgeBaseSynthesizer, Generator};
 use ascendcraft::transpile::{transpile, TranspileOptions};
 use ascendcraft::util::json::Json;
@@ -60,7 +61,7 @@ struct Snapshot {
 
 /// Groups the snapshot must contain — the CI quick-mode step fails when
 /// one is missing or the JSON does not reparse.
-const REQUIRED_GROUPS: [&str; 3] = ["matmul", "elementwise", "reduction"];
+const REQUIRED_GROUPS: [&str; 4] = ["matmul", "elementwise", "reduction", "serve"];
 
 impl Snapshot {
     fn metric(&mut self, group: &str, name: &str, value: f64) {
@@ -212,6 +213,64 @@ fn main() {
         snap.metric("reduction", &format!("row-sum {threads}t ms"), secs * 1e3);
         snap.metric("reduction", &format!("row-sum {threads}t speedup"), base_r / secs);
     }
+    println!();
+
+    // K3. serve loadgen: a mixed request stream (including the failing
+    // mask_cumsum — failures are cached too) replayed against an
+    // in-process daemon, cold then warm. The cold pass runs every task
+    // through the full pipeline; the warm pass must be all cache hits
+    // with no stages run. The warm/cold ratio is the cache's value and
+    // is host-independent (the `--compare` gate checks only ratios).
+    // Measured with raw Instant, not `time()` — the cold pass is not
+    // idempotent (a warmup would fill the cache and erase it).
+    println!("serve: mixed request stream, cold vs warm cache:");
+    let serve_tasks: &[&str] = if quick {
+        &["relu", "gelu", "mse_loss", "mask_cumsum"]
+    } else {
+        &["relu", "gelu", "softmax", "adam", "cumsum", "mse_loss", "mask_cumsum", "l2norm"]
+    };
+    let daemon =
+        Daemon::start(ServeConfig { workers: 2, ..ServeConfig::default() }).expect("start daemon");
+    let mut cold_secs = 0.0;
+    for phase in ["cold", "warm"] {
+        let started = Instant::now();
+        let tickets: Vec<_> = serve_tasks
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                let mut req = KernelRequest::new(t);
+                req.id = i as u64;
+                daemon.submit(req)
+            })
+            .collect();
+        let responses: Vec<_> = tickets.into_iter().map(|t| t.wait()).collect();
+        let secs = started.elapsed().as_secs_f64();
+        for r in &responses {
+            assert!(r.ok, "serve bench: request rejected: {:?}", r.error);
+            assert!(r.result.is_some(), "serve bench: served request must carry a result");
+            if phase == "warm" {
+                assert!(r.cache_hit || r.coalesced, "warm pass must be served from cache");
+            }
+        }
+        println!(
+            "{:<46} {:>10.2} ms",
+            format!("serve[{} tasks]: {phase} pass", serve_tasks.len()),
+            secs * 1e3
+        );
+        snap.metric("serve", &format!("{phase} ms"), secs * 1e3);
+        if phase == "cold" {
+            cold_secs = secs;
+        } else {
+            let speedup = cold_secs / secs;
+            println!("{:<46} {speedup:>9.2}x", "  -> warm speedup vs cold");
+            snap.metric("serve", "warm speedup", speedup);
+        }
+    }
+    let stats = daemon.stats();
+    let hit_rate = stats.hit_rate().expect("generate requests completed");
+    println!("{:<46} {:>9.1}%", "  -> cache hit rate across both passes", hit_rate * 100.0);
+    snap.metric("serve", "warm hit rate", hit_rate);
+    drop(daemon);
     println!();
 
     if let Some(path) = &json_path {

@@ -17,9 +17,11 @@
 //! full-suite runtime in seconds.
 
 pub mod metrics;
+pub mod snapshot;
 pub mod spec;
 pub mod tasks;
 
 pub use metrics::{CategoryRow, Metrics, SuiteResult, TaskResult};
+pub use snapshot::{compare_bench, BenchDelta, BenchSnapshot};
 pub use spec::{Category, ComputeSpec, EagerOp, OpExpr, TaskSpec};
 pub use tasks::all_tasks;

@@ -1,0 +1,231 @@
+//! Perf-snapshot comparison: ratio-based, host-independent gating over
+//! `BENCH_*.json` files written by `cargo bench --bench hotpath -- --json`.
+//!
+//! Raw millisecond medians are machine-dependent, so `suite --compare`
+//! gates **only the speedup ratios** (metric names containing
+//! `"speedup"`): a tiling or threading regression shows up as a ratio
+//! drop on any host, while a slower CI machine shifts every absolute
+//! number uniformly and leaves the ratios alone. A metric must drop more
+//! than the tolerance (default 10%) below its baseline ratio to count as
+//! a regression; a baseline speedup metric missing from the current
+//! snapshot is always a regression (deleting the measurement must not
+//! silence the gate).
+
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Allowed relative drop in a speedup ratio before it gates
+/// (`current < baseline * (1 - tolerance)` regresses).
+pub const DEFAULT_TOLERANCE: f64 = 0.10;
+
+/// A parsed `BENCH_*.json` snapshot: `group -> metric -> value`.
+pub struct BenchSnapshot {
+    pub bench: String,
+    pub mode: String,
+    pub groups: Vec<(String, Vec<(String, f64)>)>,
+}
+
+impl BenchSnapshot {
+    /// Parse a snapshot object (detected by its `bench` + `groups` keys).
+    pub fn from_json(j: &Json) -> Option<BenchSnapshot> {
+        let bench = j.get("bench")?.as_str()?.to_string();
+        let Json::Obj(groups_obj) = j.get("groups")? else { return None };
+        let mut groups = Vec::new();
+        for (gname, g) in groups_obj {
+            let Json::Obj(metrics_obj) = g else { return None };
+            let mut metrics = Vec::new();
+            for (mname, v) in metrics_obj {
+                metrics.push((mname.clone(), v.as_f64()?));
+            }
+            groups.push((gname.clone(), metrics));
+        }
+        Some(BenchSnapshot {
+            bench,
+            mode: j.get("mode").and_then(Json::as_str).unwrap_or("").to_string(),
+            groups,
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<BenchSnapshot, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+        BenchSnapshot::from_json(&j)
+            .ok_or_else(|| format!("{}: not a bench snapshot (no 'bench'/'groups')", path.display()))
+    }
+
+    pub fn metric(&self, group: &str, name: &str) -> Option<f64> {
+        let (_, metrics) = self.groups.iter().find(|(g, _)| g == group)?;
+        metrics.iter().find(|(m, _)| m == name).map(|(_, v)| *v)
+    }
+
+    /// Every `(group, metric, value)` whose metric name names a speedup —
+    /// the host-independent subset the gate compares.
+    pub fn speedups(&self) -> Vec<(&str, &str, f64)> {
+        let mut out = Vec::new();
+        for (group, metrics) in &self.groups {
+            for (name, value) in metrics {
+                if name.contains("speedup") {
+                    out.push((group.as_str(), name.as_str(), *value));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One compared speedup metric.
+pub struct BenchRow {
+    pub group: String,
+    pub metric: String,
+    pub baseline: f64,
+    pub current: f64,
+}
+
+impl BenchRow {
+    pub fn regressed(&self, tolerance: f64) -> bool {
+        self.current < self.baseline * (1.0 - tolerance)
+    }
+}
+
+/// The comparison outcome: per-metric rows plus baseline speedups the
+/// current snapshot no longer reports.
+pub struct BenchDelta {
+    pub tolerance: f64,
+    pub rows: Vec<BenchRow>,
+    /// `group/metric` names present in the baseline but absent now.
+    pub missing: Vec<String>,
+}
+
+/// Compare every baseline speedup ratio against the current snapshot.
+/// New metrics (in current, not baseline) pass silently — they have no
+/// reference yet.
+pub fn compare_bench(baseline: &BenchSnapshot, current: &BenchSnapshot, tolerance: f64) -> BenchDelta {
+    let mut rows = Vec::new();
+    let mut missing = Vec::new();
+    for (group, metric, base) in baseline.speedups() {
+        match current.metric(group, metric) {
+            Some(cur) => rows.push(BenchRow {
+                group: group.to_string(),
+                metric: metric.to_string(),
+                baseline: base,
+                current: cur,
+            }),
+            None => missing.push(format!("{group}/{metric}")),
+        }
+    }
+    BenchDelta { tolerance, rows, missing }
+}
+
+impl BenchDelta {
+    pub fn regressed(&self) -> bool {
+        !self.missing.is_empty() || self.rows.iter().any(|r| r.regressed(self.tolerance))
+    }
+
+    /// Aligned-text report in the suite-table style.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "Bench snapshot comparison (speedup ratios only, tolerance {:.0}%).\n",
+            self.tolerance * 100.0
+        ));
+        s.push_str(&format!(
+            "{:<14} {:<28} {:>10} {:>10}  {}\n",
+            "Group", "Metric", "Baseline", "Current", "Status"
+        ));
+        for r in &self.rows {
+            s.push_str(&format!(
+                "{:<14} {:<28} {:>9.2}x {:>9.2}x  {}\n",
+                r.group,
+                r.metric,
+                r.baseline,
+                r.current,
+                if r.regressed(self.tolerance) { "REGRESSED" } else { "ok" }
+            ));
+        }
+        for m in &self.missing {
+            s.push_str(&format!("missing from current snapshot: {m}  REGRESSED\n"));
+        }
+        s.push_str(if self.regressed() {
+            "RESULT: regression detected\n"
+        } else {
+            "RESULT: no regression\n"
+        });
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(pairs: &[(&str, &str, f64)]) -> BenchSnapshot {
+        let mut s = BenchSnapshot { bench: "hotpath".into(), mode: "full".into(), groups: Vec::new() };
+        for (g, m, v) in pairs {
+            match s.groups.iter_mut().find(|(name, _)| name == g) {
+                Some((_, metrics)) => metrics.push((m.to_string(), *v)),
+                None => s.groups.push((g.to_string(), vec![(m.to_string(), *v)])),
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn only_speedup_metrics_are_gated() {
+        let baseline = snap(&[
+            ("matmul", "512 speedup", 4.0),
+            ("matmul", "512 tiled ms", 40.0),
+        ]);
+        // ms blew up 10x (slow host) but the ratio held: no regression
+        let current = snap(&[
+            ("matmul", "512 speedup", 3.9),
+            ("matmul", "512 tiled ms", 400.0),
+        ]);
+        let delta = compare_bench(&baseline, &current, DEFAULT_TOLERANCE);
+        assert!(!delta.regressed(), "{}", delta.render());
+        assert_eq!(delta.rows.len(), 1, "only the speedup row is compared");
+    }
+
+    #[test]
+    fn a_ratio_drop_beyond_tolerance_regresses() {
+        let baseline = snap(&[("serve", "warm speedup", 10.0)]);
+        let ok = snap(&[("serve", "warm speedup", 9.1)]);
+        assert!(!compare_bench(&baseline, &ok, DEFAULT_TOLERANCE).regressed());
+        let bad = snap(&[("serve", "warm speedup", 8.9)]);
+        let delta = compare_bench(&baseline, &bad, DEFAULT_TOLERANCE);
+        assert!(delta.regressed());
+        assert!(delta.render().contains("REGRESSED"), "{}", delta.render());
+    }
+
+    #[test]
+    fn a_missing_baseline_speedup_regresses() {
+        let baseline = snap(&[("matmul", "512 speedup", 4.0)]);
+        let current = snap(&[("matmul", "512 tiled ms", 40.0)]);
+        let delta = compare_bench(&baseline, &current, DEFAULT_TOLERANCE);
+        assert!(delta.regressed());
+        assert_eq!(delta.missing, vec!["matmul/512 speedup".to_string()]);
+    }
+
+    #[test]
+    fn new_current_metrics_pass_without_a_reference() {
+        let baseline = snap(&[("matmul", "512 speedup", 4.0)]);
+        let current =
+            snap(&[("matmul", "512 speedup", 4.2), ("serve", "warm speedup", 11.0)]);
+        assert!(!compare_bench(&baseline, &current, DEFAULT_TOLERANCE).regressed());
+    }
+
+    #[test]
+    fn snapshot_round_trips_through_json() {
+        let text = r#"{"bench":"hotpath","version":1,"mode":"quick",
+            "groups":{"matmul":{"512 speedup":4.6,"512 tiled ms":46.8}}}"#;
+        let j = Json::parse(text).unwrap();
+        let s = BenchSnapshot::from_json(&j).unwrap();
+        assert_eq!(s.bench, "hotpath");
+        assert_eq!(s.mode, "quick");
+        assert_eq!(s.metric("matmul", "512 speedup"), Some(4.6));
+        assert_eq!(s.speedups(), vec![("matmul", "512 speedup", 4.6)]);
+        // a suite baseline is not a bench snapshot
+        let suite = Json::parse(r#"{"tasks":[]}"#).unwrap();
+        assert!(BenchSnapshot::from_json(&suite).is_none());
+    }
+}

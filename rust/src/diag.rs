@@ -86,12 +86,25 @@ pub const ANALYSIS_CODES: &[(&str, &str)] = &[
     ("ASCAN402", "GM access out of bounds for the launched tensor shapes"),
 ];
 
+/// Serve-daemon codes (`serve/`): request-level rejections carried on a
+/// `Diagnostic` with stage `"serve"`. These never classify kernels — a
+/// served request whose kernel fails still answers `ok:true` with the
+/// pipeline's own diagnostic in the result.
+pub const SERVE_CODES: &[(&str, &str)] = &[
+    ("SRV400", "malformed request line (bad JSON, unknown op or field, bad value)"),
+    ("SRV404", "unknown task or backend name"),
+    ("SRV429", "request queue full; admission refused (backpressure)"),
+    ("SRV500", "execution aborted before completing (worker failure)"),
+    ("SRV503", "daemon is shutting down; admission closed"),
+];
+
 /// Look a code up across every table.
 pub fn describe(code: &str) -> Option<&'static str> {
     DSL_CODES
         .iter()
         .chain(ASC_CODES.iter())
         .chain(ANALYSIS_CODES.iter())
+        .chain(SERVE_CODES.iter())
         .find(|(c, _)| *c == code)
         .map(|(_, d)| *d)
 }
@@ -108,7 +121,7 @@ mod tests {
 
     #[test]
     fn code_tables_are_sorted_and_unique() {
-        for table in [DSL_CODES, ASC_CODES, ANALYSIS_CODES] {
+        for table in [DSL_CODES, ASC_CODES, ANALYSIS_CODES, SERVE_CODES] {
             for pair in table.windows(2) {
                 assert!(pair[0].0 < pair[1].0, "{} must sort before {}", pair[0].0, pair[1].0);
             }
@@ -120,6 +133,7 @@ mod tests {
         assert!(describe("D101").is_some());
         assert!(describe("A301").is_some());
         assert!(describe("ASCAN102").is_some());
+        assert!(describe("SRV429").is_some());
         assert!(describe("Z999").is_none());
     }
 }

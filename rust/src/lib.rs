@@ -9,6 +9,7 @@ pub mod diag;
 pub mod dsl;
 pub mod mhc;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod synth;
 pub mod transpile;

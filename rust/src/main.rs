@@ -9,6 +9,11 @@
 //!                   [--journal PATH] [--resume PATH]    incremental/resumable
 //!                   [--schedule steal|static]           job scheduler
 //!                   [--compare BASELINE.json]           regression gate
+//!                   [--bench CURRENT.json]              (bench-snapshot compare
+//!                   [--tolerance FRAC]                   mode; see below)
+//! ascendcraft serve [--addr HOST:PORT | --stdio] [--workers N]
+//!                   [--queue-cap N] [--cache PATH]     kernel-generation daemon
+//!                   [--mode M]                         (JSONL request protocol)
 //! ascendcraft compile TASK [--emit=dsl|ascendc|diag|timings|lint] [--seed N]
 //!                   [--mode M] [--cores N]          staged pipeline, dump
 //!                   [--backend NAME]                any session artifact
@@ -33,6 +38,7 @@
 
 use ascendcraft::backend::BackendRegistry;
 use ascendcraft::bench_suite::metrics::{compare_suites, SuiteResult};
+use ascendcraft::bench_suite::snapshot::{compare_bench, BenchSnapshot, DEFAULT_TOLERANCE};
 use ascendcraft::bench_suite::spec::{Category, TaskSpec};
 use ascendcraft::bench_suite::tasks::{all_tasks, task_by_name};
 use ascendcraft::coordinator::journal::Journal;
@@ -42,6 +48,7 @@ use ascendcraft::coordinator::service::{
 };
 use ascendcraft::mhc::{self, run_case_study, MhcDims};
 use ascendcraft::runtime::{fixtures, OracleRegistry};
+use ascendcraft::serve::{serve_addr, serve_stdio, ServeConfig};
 use ascendcraft::synth::prompt;
 use ascendcraft::util::json::Json;
 use std::sync::{Arc, Mutex};
@@ -70,6 +77,7 @@ fn main() {
     };
     let code = match args.first().map(String::as_str) {
         Some("suite") => cmd_suite(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
         Some("compile") => cmd_compile(&args[1..]),
         Some("lint") => cmd_lint(&args[1..]),
         Some("gen") => cmd_gen(&args[1..]),
@@ -96,7 +104,8 @@ fn print_usage() {
         "AscendCraft: DSL-guided AscendC kernel generation (reproduction)\n\
          \n\
          USAGE:\n\
-         \x20 ascendcraft suite [--mode ascendcraft|direct|generic] [--backend ascend-sim|cpu-ref|all] [--workers N] [--tasks A,B,..] [--cores N] [--min-pass N] [--json PATH] [--quiet] [--golden] [--golden-seeds N] [--journal PATH | --resume PATH] [--schedule steal|static] [--compare BASELINE.json]\n\
+         \x20 ascendcraft suite [--mode ascendcraft|direct|generic] [--backend ascend-sim|cpu-ref|all] [--workers N] [--tasks A,B,..] [--cores N] [--min-pass N] [--json PATH] [--quiet] [--golden] [--golden-seeds N] [--journal PATH | --resume PATH] [--schedule steal|static] [--compare BASELINE.json [--bench CURRENT.json] [--tolerance FRAC]]\n\
+         \x20 ascendcraft serve [--addr HOST:PORT | --stdio] [--workers N] [--queue-cap N] [--cache PATH] [--mode M]   kernel-generation daemon (JSONL protocol)\n\
          \x20 ascendcraft compile TASK [--emit=dsl|ascendc|diag|timings|lint] [--seed N] [--mode M] [--cores N] [--backend NAME]\n\
          \x20 ascendcraft lint TASK|--all [--backend NAME] [--seed N]   static analyzer verdicts\n\
          \x20 ascendcraft gen --task NAME [--emit-dsl] [--emit-ascendc] [--emit-prompt]\n\
@@ -278,6 +287,46 @@ fn cmd_suite(args: &[String]) -> i32 {
     } else {
         None
     };
+    // a bench-snapshot baseline (BENCH_*.json) switches --compare into
+    // pure perf-gating mode: no suite runs, the current snapshot comes
+    // from --bench, and only speedup ratios are compared (raw ms medians
+    // are host-dependent, ratios are not)
+    if let Some(Baseline::Bench(base)) = &baseline {
+        let Some(cur_path) = flag_value(args, "--bench") else {
+            eprintln!(
+                "--compare got a bench snapshot; pass the current one with --bench CURRENT.json"
+            );
+            return 2;
+        };
+        let tolerance = if has_flag(args, "--tolerance") {
+            match flag_value(args, "--tolerance").map(str::parse::<f64>) {
+                Some(Ok(t)) if (0.0..1.0).contains(&t) => t,
+                _ => {
+                    eprintln!("--tolerance expects a fraction in [0.0, 1.0)");
+                    return 2;
+                }
+            }
+        } else {
+            DEFAULT_TOLERANCE
+        };
+        let current = match BenchSnapshot::load(std::path::Path::new(cur_path)) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        let delta = compare_bench(base, &current, tolerance);
+        print!("{}", delta.render());
+        return if delta.regressed() { 1 } else { 0 };
+    }
+    // outside bench-compare mode these flags have no meaning — reject
+    // them loudly rather than silently ignoring a perf gate the user
+    // thought was armed
+    if has_flag(args, "--bench") || has_flag(args, "--tolerance") {
+        eprintln!("--bench/--tolerance require --compare with a bench snapshot (BENCH_*.json)");
+        return 2;
+    }
     match (&baseline, backend_all) {
         (Some(Baseline::Multi(_)), false) => {
             eprintln!("--compare baseline is multi-backend; run with --backend all");
@@ -407,12 +456,15 @@ fn cmd_suite(args: &[String]) -> i32 {
     code
 }
 
-/// A parsed `--compare` baseline: either one suite snapshot
-/// (`suite --json` output) or a multi-backend snapshot
-/// (`suite --backend all --json` output, keyed by backend name).
+/// A parsed `--compare` baseline: one suite snapshot (`suite --json`
+/// output), a multi-backend snapshot (`suite --backend all --json`
+/// output, keyed by backend name), or a perf snapshot
+/// (`cargo bench --bench hotpath -- --json` output, gated on speedup
+/// ratios only).
 enum Baseline {
     Single(SuiteResult),
     Multi(Vec<(String, SuiteResult)>),
+    Bench(BenchSnapshot),
 }
 
 /// Load and shape-check a `--compare` baseline file. Any failure here is
@@ -436,8 +488,99 @@ fn load_baseline(path: &str) -> Result<Baseline, String> {
         SuiteResult::from_json(&j)
             .map(Baseline::Single)
             .ok_or_else(|| format!("{path}: malformed suite baseline"))
+    } else if j.get("bench").is_some() && j.get("groups").is_some() {
+        BenchSnapshot::from_json(&j)
+            .map(Baseline::Bench)
+            .ok_or_else(|| format!("{path}: malformed bench snapshot"))
     } else {
-        Err(format!("{path}: not a suite baseline (no 'tasks' or 'backends' key)"))
+        Err(format!("{path}: not a baseline (no 'tasks', 'backends', or 'bench' key)"))
+    }
+}
+
+/// `ascendcraft serve`: the long-running kernel-generation daemon.
+/// Speaks the JSONL protocol over stdin/stdout (the default) or a TCP
+/// listener (`--addr HOST:PORT`); see `docs/ARCHITECTURE.md`, "Serve
+/// daemon". In stdio mode stdout is the protocol stream, so the shutdown
+/// stats report goes to stderr.
+fn cmd_serve(args: &[String]) -> i32 {
+    let mut cfg = ServeConfig::default();
+    let mut addr: Option<String> = None;
+    let mut stdio = false;
+    let mut i = 0;
+    while i < args.len() {
+        let a = args[i].as_str();
+        if a == "--addr" {
+            i += 1;
+            match args.get(i) {
+                Some(v) => addr = Some(v.clone()),
+                None => {
+                    eprintln!("--addr requires HOST:PORT");
+                    return 2;
+                }
+            }
+        } else if a == "--stdio" {
+            stdio = true;
+        } else if a == "--workers" {
+            i += 1;
+            match args.get(i).and_then(|v| v.parse::<usize>().ok()) {
+                Some(n) if n >= 1 => cfg.workers = n,
+                _ => {
+                    eprintln!("--workers expects a positive integer");
+                    return 2;
+                }
+            }
+        } else if a == "--queue-cap" {
+            i += 1;
+            match args.get(i).and_then(|v| v.parse::<usize>().ok()) {
+                Some(n) if n >= 1 => cfg.queue_cap = n,
+                _ => {
+                    eprintln!("--queue-cap expects a positive integer");
+                    return 2;
+                }
+            }
+        } else if a == "--cache" {
+            i += 1;
+            match args.get(i) {
+                Some(p) => cfg.cache_path = Some(std::path::PathBuf::from(p)),
+                None => {
+                    eprintln!("--cache requires a path");
+                    return 2;
+                }
+            }
+        } else if a == "--mode" {
+            i += 1;
+            match args.get(i).map(String::as_str).and_then(parse_mode) {
+                Some(m) => cfg.defaults.mode = m,
+                None => {
+                    eprintln!("--mode expects ascendcraft|direct|generic");
+                    return 2;
+                }
+            }
+        } else if a.starts_with("--") {
+            eprintln!("unknown flag '{a}'");
+            return 2;
+        } else {
+            eprintln!("unexpected argument '{a}'");
+            return 2;
+        }
+        i += 1;
+    }
+    if addr.is_some() && stdio {
+        eprintln!("--addr and --stdio are mutually exclusive");
+        return 2;
+    }
+    let outcome = match addr {
+        Some(a) => serve_addr(&a, cfg).map(|stats| println!("{}", stats.render())),
+        // stdio is the default front-end; stats to stderr (stdout is
+        // the protocol stream)
+        None => serve_stdio(cfg).map(|stats| eprintln!("{}", stats.render())),
+    };
+    match outcome {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("{e}");
+            1
+        }
     }
 }
 

@@ -1,0 +1,343 @@
+//! Content-addressed compiled-kernel cache with request coalescing.
+//!
+//! The cache is keyed by the suite journal's execution tuple
+//! ([`crate::coordinator::journal::task_key`] over `KEY_FIELDS`: task
+//! spec, seed, mode, cores, backend, repair budget, transpile options,
+//! stage-list fingerprint, golden-seed count — `0` for serve requests),
+//! and persists through the **same** append-only JSONL format as
+//! `suite --journal`: one fsync'd `{"key":…,"result":…,"task":…}` line
+//! per finished tuple after the format header. That identity is
+//! deliberate — a `suite --journal run.jsonl` file passed as
+//! `serve --cache run.jsonl` warms the daemon, and vice versa, because
+//! both sides hash the exact same tuple. The daemon opens the file
+//! tolerantly (a kill mid-append tears at most the trailing record,
+//! which is dropped and truncated like `suite --resume`), so restarts
+//! are warm from the durable prefix.
+//!
+//! Failed generations are cached too: the pipeline is deterministic per
+//! tuple, so a `mask_cumsum` failure replays as exactly the same
+//! structured diagnostic without paying the stages again.
+//!
+//! **Coalescing.** [`KernelCache::claim`] is the single admission point:
+//! the first claimant of a missing key becomes the [`Claim::Owner`] and
+//! must run the pipeline; every concurrent claimant of the same key gets
+//! [`Claim::Wait`] on the owner's [`Flight`] and receives the one result
+//! when it lands. The owner token completes its flight even if the
+//! worker unwinds (a `Drop` backstop fills an `SRV500` error), so
+//! waiters can never hang on a dead execution.
+
+use crate::bench_suite::metrics::TaskResult;
+use crate::coordinator::journal::Journal;
+use crate::coordinator::stage::Diagnostic;
+use crate::serve::protocol::STAGE_SERVE;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// One in-flight execution: waiters block on the condvar until the owner
+/// fills the slot.
+pub struct Flight {
+    slot: Mutex<Option<Result<TaskResult, Diagnostic>>>,
+    done: Condvar,
+}
+
+impl Flight {
+    fn new() -> Flight {
+        Flight { slot: Mutex::new(None), done: Condvar::new() }
+    }
+
+    fn fill(&self, outcome: Result<TaskResult, Diagnostic>) {
+        *self.slot.lock().unwrap() = Some(outcome);
+        self.done.notify_all();
+    }
+
+    /// Block until the owning execution lands and return its outcome.
+    pub fn wait(&self) -> Result<TaskResult, Diagnostic> {
+        let mut slot = self.slot.lock().unwrap();
+        loop {
+            if let Some(outcome) = slot.as_ref() {
+                return outcome.clone();
+            }
+            slot = self.done.wait(slot).unwrap();
+        }
+    }
+}
+
+/// What [`KernelCache::claim`] resolved a key to.
+pub enum Claim {
+    /// A durable record exists — no stages run at all.
+    Hit(TaskResult),
+    /// This claimant owns the execution: run the pipeline, then call
+    /// [`OwnerToken::complete`].
+    Owner(OwnerToken),
+    /// An identical tuple is already executing; wait on its flight.
+    Wait(Arc<Flight>),
+}
+
+/// The obligation to finish an owned execution. Dropping the token
+/// without [`OwnerToken::complete`] (a panicking worker) fills the
+/// flight with an `SRV500` diagnostic so coalesced waiters fail loudly
+/// instead of hanging.
+pub struct OwnerToken {
+    key: String,
+    flight: Arc<Flight>,
+    state: Arc<Mutex<CacheState>>,
+    completed: bool,
+}
+
+impl OwnerToken {
+    /// Record the finished result (durable when the cache has a file),
+    /// publish it to every waiter, and retire the flight.
+    pub fn complete(mut self, result: &TaskResult) {
+        {
+            let mut st = self.state.lock().unwrap();
+            st.insert(&self.key, result);
+            st.executed += 1;
+            st.inflight.remove(&self.key);
+        }
+        self.flight.fill(Ok(result.clone()));
+        self.completed = true;
+    }
+
+    pub fn key(&self) -> &str {
+        &self.key
+    }
+}
+
+impl Drop for OwnerToken {
+    fn drop(&mut self) {
+        if self.completed {
+            return;
+        }
+        self.state.lock().unwrap().inflight.remove(&self.key);
+        self.flight.fill(Err(Diagnostic::new(
+            STAGE_SERVE,
+            "SRV500",
+            "kernel generation aborted before completing (worker failure)",
+        )));
+    }
+}
+
+/// Cache counters for the stats report.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheCounters {
+    /// Requests answered from a durable record.
+    pub hits: usize,
+    /// Requests that attached to another request's in-flight execution.
+    pub coalesced: usize,
+    /// Pipeline executions actually run (owner completions).
+    pub executed: usize,
+    /// Durable records currently known.
+    pub records: usize,
+}
+
+struct CacheState {
+    journal: Option<Journal>,
+    /// Overlay for a memory-only cache, and the fallback when a journal
+    /// append fails (the record is still servable this process).
+    mem: BTreeMap<String, TaskResult>,
+    inflight: BTreeMap<String, Arc<Flight>>,
+    hits: usize,
+    coalesced: usize,
+    executed: usize,
+}
+
+impl CacheState {
+    fn lookup(&self, key: &str) -> Option<&TaskResult> {
+        self.journal.as_ref().and_then(|j| j.lookup(key)).or_else(|| self.mem.get(key))
+    }
+
+    fn insert(&mut self, key: &str, result: &TaskResult) {
+        if let Some(j) = &mut self.journal {
+            match j.append(key, result) {
+                Ok(()) => return,
+                Err(e) => {
+                    // the cache file is an optimization; the result is
+                    // still served from memory for this process lifetime
+                    eprintln!("warning: serve cache append failed: {e}");
+                }
+            }
+        }
+        self.mem.insert(key.to_string(), result.clone());
+    }
+}
+
+/// The daemon-wide cache: one lock over (records, in-flight map) so a
+/// completion and a concurrent claim can never race into a duplicate
+/// execution.
+pub struct KernelCache {
+    state: Arc<Mutex<CacheState>>,
+    path: Option<PathBuf>,
+}
+
+impl KernelCache {
+    /// Open the cache. With a path, the persistent store is a journal
+    /// opened tolerantly (torn tails dropped + truncated — the daemon
+    /// gets killed, not shut down); without, the cache is memory-only.
+    pub fn open(path: Option<&Path>) -> Result<KernelCache, String> {
+        let journal = match path {
+            Some(p) => {
+                let j = Journal::open(p, true)?;
+                if j.dropped_partial {
+                    eprintln!(
+                        "serve cache: dropped a partial trailing record from {}",
+                        p.display()
+                    );
+                }
+                Some(j)
+            }
+            None => None,
+        };
+        Ok(KernelCache {
+            state: Arc::new(Mutex::new(CacheState {
+                journal,
+                mem: BTreeMap::new(),
+                inflight: BTreeMap::new(),
+                hits: 0,
+                coalesced: 0,
+                executed: 0,
+            })),
+            path: path.map(Path::to_path_buf),
+        })
+    }
+
+    /// Resolve `key`: hit, wait, or own. This is the coalescing point —
+    /// the check of the record map and the in-flight map happens under
+    /// one lock, so exactly one claimant ever owns a given key at a time
+    /// and a completion is visible to the very next claim.
+    pub fn claim(&self, key: &str) -> Claim {
+        let mut st = self.state.lock().unwrap();
+        if let Some(r) = st.lookup(key) {
+            let r = r.clone();
+            st.hits += 1;
+            return Claim::Hit(r);
+        }
+        if let Some(flight) = st.inflight.get(key) {
+            let flight = Arc::clone(flight);
+            st.coalesced += 1;
+            return Claim::Wait(flight);
+        }
+        let flight = Arc::new(Flight::new());
+        st.inflight.insert(key.to_string(), Arc::clone(&flight));
+        Claim::Owner(OwnerToken {
+            key: key.to_string(),
+            flight,
+            state: Arc::clone(&self.state),
+            completed: false,
+        })
+    }
+
+    /// Non-claiming lookup (used by tests and warm-start checks).
+    pub fn peek(&self, key: &str) -> Option<TaskResult> {
+        self.state.lock().unwrap().lookup(key).cloned()
+    }
+
+    pub fn counters(&self) -> CacheCounters {
+        let st = self.state.lock().unwrap();
+        CacheCounters {
+            hits: st.hits,
+            coalesced: st.coalesced,
+            executed: st.executed,
+            records: st.journal.as_ref().map(Journal::len).unwrap_or(0) + st.mem.len(),
+        }
+    }
+
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite::spec::Category;
+
+    fn sample(name: &str) -> TaskResult {
+        TaskResult {
+            name: name.to_string(),
+            category: Category::Math,
+            backend: "ascend-sim".into(),
+            compiled: true,
+            correct: true,
+            generated_cycles: Some(100.0),
+            eager_cycles: 400.0,
+            failure: None,
+            repair_rounds: 0,
+            analysis_errors: 0,
+            analysis_warnings: 0,
+            pipeline_secs: 0.1,
+            stage_timings: Vec::new(),
+            golden: None,
+            golden_seeds: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn owner_completes_and_the_next_claim_hits() {
+        let cache = KernelCache::open(None).unwrap();
+        let Claim::Owner(own) = cache.claim("k1") else { panic!("first claim must own") };
+        own.complete(&sample("relu"));
+        match cache.claim("k1") {
+            Claim::Hit(r) => assert_eq!(r.name, "relu"),
+            _ => panic!("second claim must hit"),
+        }
+        let c = cache.counters();
+        assert_eq!((c.hits, c.coalesced, c.executed, c.records), (1, 0, 1, 1));
+    }
+
+    #[test]
+    fn concurrent_claims_coalesce_into_exactly_one_owner() {
+        let cache = Arc::new(KernelCache::open(None).unwrap());
+        let Claim::Owner(own) = cache.claim("k") else { panic!("first claim must own") };
+        // every further claim while the owner is in flight must wait
+        let waiters: Vec<_> = (0..6)
+            .map(|_| {
+                let cache = Arc::clone(&cache);
+                std::thread::spawn(move || match cache.claim("k") {
+                    Claim::Wait(flight) => flight.wait().unwrap(),
+                    Claim::Hit(r) => r,
+                    Claim::Owner(_) => panic!("key is in flight; nobody else may own it"),
+                })
+            })
+            .collect();
+        // give the spawned threads a chance to register as waiters
+        while cache.counters().coalesced < 6 {
+            std::thread::yield_now();
+        }
+        own.complete(&sample("gelu"));
+        for w in waiters {
+            assert_eq!(w.join().unwrap().name, "gelu");
+        }
+        let c = cache.counters();
+        assert_eq!(c.executed, 1, "exactly one pipeline execution");
+        assert_eq!(c.coalesced, 6);
+    }
+
+    #[test]
+    fn dropped_owner_fails_waiters_with_srv500_and_releases_the_key() {
+        let cache = KernelCache::open(None).unwrap();
+        let Claim::Owner(own) = cache.claim("k") else { panic!() };
+        let Claim::Wait(flight) = cache.claim("k") else { panic!("second claim waits") };
+        drop(own); // worker died without completing
+        let err = flight.wait().unwrap_err();
+        assert_eq!(err.code, "SRV500");
+        // the key is free again: the next claim owns a fresh execution
+        assert!(matches!(cache.claim("k"), Claim::Owner(_)));
+    }
+
+    #[test]
+    fn persisted_cache_is_warm_after_reopen() {
+        let path = std::env::temp_dir()
+            .join(format!("ascendcraft_serve_cache_unit_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        {
+            let cache = KernelCache::open(Some(&path)).unwrap();
+            let Claim::Owner(own) = cache.claim("deadbeefdeadbeef") else { panic!() };
+            own.complete(&sample("relu"));
+        }
+        let cache = KernelCache::open(Some(&path)).unwrap();
+        assert!(matches!(cache.claim("deadbeefdeadbeef"), Claim::Hit(_)));
+        assert_eq!(cache.counters().records, 1);
+        let _ = std::fs::remove_file(&path);
+    }
+}

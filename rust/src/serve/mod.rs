@@ -1,0 +1,27 @@
+//! `ascendcraft serve`: the long-running kernel-generation daemon.
+//!
+//! The paper frames AscendCraft as a generation *service* — categorize →
+//! generate → transpile → verify on demand. This module is that surface:
+//! a daemon speaking a JSONL [`protocol`] (stdio or `std::net` TCP, zero
+//! external crates) whose requests flow through a bounded admission
+//! [`queue`] into a worker pool, fronted by a content-addressed
+//! compiled-kernel [`cache`] keyed by the suite journal's execution tuple
+//! and persisted in the same JSONL journal format (restarts are warm, and
+//! suite journals double as cache seeds). Identical in-flight requests
+//! coalesce onto one pipeline execution; [`stats`] tracks hit rate, queue
+//! high-water mark, and per-verdict latency percentiles.
+//!
+//! See `docs/ARCHITECTURE.md` ("Serve daemon") for the protocol schema
+//! and the backpressure contract.
+
+pub mod cache;
+pub mod protocol;
+pub mod queue;
+pub mod server;
+pub mod stats;
+
+pub use cache::{CacheCounters, Claim, KernelCache};
+pub use protocol::{KernelRequest, Request, Response};
+pub use queue::{BoundedQueue, Rejected};
+pub use server::{serve_addr, serve_stdio, Daemon, ServeConfig, Ticket};
+pub use stats::ServeStats;

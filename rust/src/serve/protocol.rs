@@ -1,0 +1,422 @@
+//! The serve daemon's JSONL wire protocol: one JSON object per line, in
+//! both directions, hand-rolled on [`crate::util::json`] per the
+//! zero-crates policy.
+//!
+//! Requests (`op` selects the kind; every other field is optional and
+//! defaults to the daemon's pipeline configuration):
+//!
+//! ```text
+//! {"op":"generate","id":1,"task":"relu","seed":123,"mode":"ascendcraft",
+//!  "cores":8,"backend":"ascend-sim","repair":4}
+//! {"op":"stats","id":2}
+//! {"op":"shutdown","id":3}
+//! ```
+//!
+//! Responses echo `id` and always carry `ok`/`cache_hit`/`coalesced`/
+//! `secs`; a handled `generate` adds `result` (the full
+//! [`TaskResult`] JSON — the verdict lives there, `ok` only means the
+//! request was served rather than rejected), `stats` adds `stats`, and
+//! any rejection carries `error` (a structured
+//! [`Diagnostic`] with stage `"serve"` and an `SRV…` code — see
+//! `diag::SERVE_CODES`). The field names are pinned to the tables in
+//! `docs/ARCHITECTURE.md` by `tests/docs_spec.rs` — the protocol is an
+//! interface contract, not an implementation detail.
+
+use crate::backend::BackendRegistry;
+use crate::bench_suite::metrics::TaskResult;
+use crate::bench_suite::spec::TaskSpec;
+use crate::bench_suite::tasks::task_by_name;
+use crate::coordinator::pipeline::{PipelineConfig, PipelineMode};
+use crate::coordinator::stage::Diagnostic;
+use crate::util::json::Json;
+
+/// The `Diagnostic::stage` every serve-layer rejection carries.
+pub const STAGE_SERVE: &str = "serve";
+
+/// Request field names, in canonical order. Pinned to
+/// `docs/ARCHITECTURE.md` by `tests/docs_spec.rs`; unknown fields are
+/// rejected (`SRV400`) so a typo'd option can never be silently ignored.
+pub const REQUEST_FIELDS: [&str; 8] =
+    ["op", "id", "task", "seed", "mode", "cores", "backend", "repair"];
+
+/// Response field names, in canonical order (same pinning).
+pub const RESPONSE_FIELDS: [&str; 8] =
+    ["id", "ok", "cache_hit", "coalesced", "secs", "result", "stats", "error"];
+
+/// The three request kinds (`op` values).
+pub const REQUEST_OPS: [&str; 3] = ["generate", "stats", "shutdown"];
+
+/// A malformed-request diagnostic (`SRV400`).
+pub fn bad_request(message: impl Into<String>) -> Diagnostic {
+    Diagnostic::new(STAGE_SERVE, "SRV400", message)
+}
+
+/// An unknown-task/backend diagnostic (`SRV404`).
+pub fn not_found(message: impl Into<String>) -> Diagnostic {
+    Diagnostic::new(STAGE_SERVE, "SRV404", message)
+}
+
+/// One parsed request line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Generate(KernelRequest),
+    Stats { id: u64 },
+    Shutdown { id: u64 },
+}
+
+impl Request {
+    /// Parse one protocol line. Any failure is a structured `SRV400`
+    /// diagnostic the server sends back verbatim — the client always
+    /// gets JSON, never a closed socket.
+    pub fn parse(line: &str) -> Result<Request, Diagnostic> {
+        let j = Json::parse(line.trim()).map_err(|e| bad_request(format!("bad JSON: {e}")))?;
+        let Json::Obj(fields) = &j else {
+            return Err(bad_request("request must be a JSON object"));
+        };
+        for key in fields.keys() {
+            if !REQUEST_FIELDS.contains(&key.as_str()) {
+                return Err(bad_request(format!("unknown request field '{key}'")));
+            }
+        }
+        let id = match j.get("id") {
+            None => 0,
+            Some(v) => field_u64(v).ok_or_else(|| bad_request("'id' must be a non-negative integer"))?,
+        };
+        match j.get("op").and_then(Json::as_str) {
+            Some("generate") => Ok(Request::Generate(KernelRequest::from_json(&j)?)),
+            Some("stats") => Ok(Request::Stats { id }),
+            Some("shutdown") => Ok(Request::Shutdown { id }),
+            Some(other) => Err(bad_request(format!(
+                "unknown op '{other}' (expected {})",
+                REQUEST_OPS.join("|")
+            ))),
+            None => Err(bad_request("request is missing the 'op' field")),
+        }
+    }
+
+    /// Render the request as its protocol line (for clients).
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::Generate(k) => k.to_json(),
+            Request::Stats { id } => {
+                let mut j = Json::obj();
+                j.set("op", "stats").set("id", *id as f64);
+                j
+            }
+            Request::Shutdown { id } => {
+                let mut j = Json::obj();
+                j.set("op", "shutdown").set("id", *id as f64);
+                j
+            }
+        }
+    }
+}
+
+/// A `generate` request: which task to run and any pipeline overrides.
+/// Unset fields fall back to the daemon's default [`PipelineConfig`], so
+/// two clients sending `{"op":"generate","task":"relu"}` hash to the same
+/// cache key.
+#[derive(Clone, Debug, PartialEq)]
+pub struct KernelRequest {
+    pub id: u64,
+    pub task: String,
+    pub seed: Option<u64>,
+    pub mode: Option<PipelineMode>,
+    pub cores: Option<usize>,
+    pub backend: Option<String>,
+    pub repair: Option<usize>,
+}
+
+impl KernelRequest {
+    /// A minimal request for `task` with every override unset.
+    pub fn new(task: &str) -> KernelRequest {
+        KernelRequest {
+            id: 0,
+            task: task.to_string(),
+            seed: None,
+            mode: None,
+            cores: None,
+            backend: None,
+            repair: None,
+        }
+    }
+
+    fn from_json(j: &Json) -> Result<KernelRequest, Diagnostic> {
+        let task = j
+            .get("task")
+            .and_then(Json::as_str)
+            .ok_or_else(|| bad_request("'generate' requires a 'task' string"))?
+            .to_string();
+        let id = match j.get("id") {
+            None => 0,
+            Some(v) => field_u64(v).ok_or_else(|| bad_request("'id' must be a non-negative integer"))?,
+        };
+        let seed = opt_u64(j, "seed")?;
+        let cores = match opt_u64(j, "cores")? {
+            Some(0) => return Err(bad_request("'cores' must be a positive integer")),
+            other => other.map(|n| n as usize),
+        };
+        let repair = opt_u64(j, "repair")?.map(|n| n as usize);
+        let mode = match j.get("mode") {
+            None => None,
+            Some(v) => match v.as_str().and_then(parse_mode) {
+                Some(m) => Some(m),
+                None => return Err(bad_request("'mode' must be ascendcraft|direct|generic")),
+            },
+        };
+        let backend = match j.get("backend") {
+            None => None,
+            Some(v) => match v.as_str() {
+                Some(name) => Some(name.to_string()),
+                None => return Err(bad_request("'backend' must be a string")),
+            },
+        };
+        Ok(KernelRequest { id, task, seed, mode, cores, backend, repair })
+    }
+
+    /// Render as a protocol line (only set fields appear, so the line is
+    /// itself canonical for the request).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("op", "generate").set("id", self.id as f64).set("task", self.task.as_str());
+        if let Some(s) = self.seed {
+            j.set("seed", s as f64);
+        }
+        if let Some(m) = self.mode {
+            j.set("mode", mode_name(m));
+        }
+        if let Some(c) = self.cores {
+            j.set("cores", c as f64);
+        }
+        if let Some(b) = &self.backend {
+            j.set("backend", b.as_str());
+        }
+        if let Some(r) = self.repair {
+            j.set("repair", r as f64);
+        }
+        j
+    }
+
+    /// Resolve the request against the task table and backend registry
+    /// into the concrete execution tuple. The returned config is what the
+    /// cache key hashes (`journal::task_key`), so two requests resolving
+    /// identically share one cache entry — and one in-flight execution.
+    pub fn resolve(
+        &self,
+        registry: &BackendRegistry,
+        defaults: &PipelineConfig,
+    ) -> Result<(TaskSpec, PipelineConfig), Diagnostic> {
+        let Some(task) = task_by_name(&self.task) else {
+            return Err(not_found(format!("unknown task '{}' (see 'ascendcraft list')", self.task)));
+        };
+        let mut cfg = defaults.clone();
+        if let Some(s) = self.seed {
+            cfg.seed = s;
+        }
+        if let Some(m) = self.mode {
+            cfg.mode = m;
+        }
+        if let Some(c) = self.cores {
+            cfg.cores = c;
+        }
+        if let Some(r) = self.repair {
+            cfg.max_repair_rounds = r;
+        }
+        if let Some(name) = &self.backend {
+            match registry.get(name) {
+                Some(b) => cfg.backend = b,
+                None => {
+                    return Err(not_found(format!(
+                        "unknown backend '{name}' (available: {})",
+                        registry.names().join(", ")
+                    )))
+                }
+            }
+        }
+        Ok((task, cfg))
+    }
+}
+
+/// One response line. `ok` distinguishes *served* from *rejected*: a
+/// request whose kernel failed to compile is still `ok:true` (the
+/// verdict is in `result`); `ok:false` means the daemon never ran the
+/// pipeline and `error` says why.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Response {
+    pub id: u64,
+    pub ok: bool,
+    /// Served from the content-addressed cache (no pipeline stages ran).
+    pub cache_hit: bool,
+    /// Attached to another request's in-flight execution of the same key.
+    pub coalesced: bool,
+    /// Wall-clock seconds from admission to response.
+    pub secs: f64,
+    pub result: Option<TaskResult>,
+    pub stats: Option<Json>,
+    pub error: Option<Diagnostic>,
+}
+
+impl Response {
+    pub fn success(id: u64, result: TaskResult, cache_hit: bool, coalesced: bool, secs: f64) -> Response {
+        Response { id, ok: true, cache_hit, coalesced, secs, result: Some(result), stats: None, error: None }
+    }
+
+    pub fn failure(id: u64, error: Diagnostic) -> Response {
+        Response { id, ok: false, cache_hit: false, coalesced: false, secs: 0.0, result: None, stats: None, error: Some(error) }
+    }
+
+    pub fn stats(id: u64, stats: Json) -> Response {
+        Response { id, ok: true, cache_hit: false, coalesced: false, secs: 0.0, result: None, stats: Some(stats), error: None }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("id", self.id as f64)
+            .set("ok", self.ok)
+            .set("cache_hit", self.cache_hit)
+            .set("coalesced", self.coalesced)
+            .set("secs", self.secs);
+        if let Some(r) = &self.result {
+            j.set("result", r.to_json());
+        }
+        if let Some(s) = &self.stats {
+            j.set("stats", s.clone());
+        }
+        if let Some(e) = &self.error {
+            j.set("error", e.to_json());
+        }
+        j
+    }
+
+    /// Parse a response line back (the client side of the protocol).
+    pub fn from_json(j: &Json) -> Option<Response> {
+        Some(Response {
+            id: j.get("id").and_then(field_u64)?,
+            ok: j.get("ok").and_then(Json::as_bool)?,
+            cache_hit: j.get("cache_hit").and_then(Json::as_bool).unwrap_or(false),
+            coalesced: j.get("coalesced").and_then(Json::as_bool).unwrap_or(false),
+            secs: j.get("secs").and_then(Json::as_f64).unwrap_or(0.0),
+            result: match j.get("result") {
+                Some(r) => Some(TaskResult::from_json(r)?),
+                None => None,
+            },
+            stats: j.get("stats").cloned(),
+            error: match j.get("error") {
+                Some(e) => Some(Diagnostic::from_json(e)?),
+                None => None,
+            },
+        })
+    }
+}
+
+fn field_u64(v: &Json) -> Option<u64> {
+    let n = v.as_f64()?;
+    // JSON numbers are f64; protocol integers must be exact (<= 2^53)
+    if n < 0.0 || n.fract() != 0.0 || n > 9_007_199_254_740_992.0 {
+        return None;
+    }
+    Some(n as u64)
+}
+
+fn opt_u64(j: &Json, key: &str) -> Result<Option<u64>, Diagnostic> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(v) => field_u64(v)
+            .map(Some)
+            .ok_or_else(|| bad_request(format!("'{key}' must be a non-negative integer"))),
+    }
+}
+
+fn parse_mode(name: &str) -> Option<PipelineMode> {
+    match name {
+        "ascendcraft" => Some(PipelineMode::AscendCraft),
+        "direct" => Some(PipelineMode::Direct),
+        "generic" => Some(PipelineMode::GenericExamples),
+        _ => None,
+    }
+}
+
+fn mode_name(mode: PipelineMode) -> &'static str {
+    match mode {
+        PipelineMode::AscendCraft => "ascendcraft",
+        PipelineMode::Direct => "direct",
+        PipelineMode::GenericExamples => "generic",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_round_trips_through_its_protocol_line() {
+        let mut req = KernelRequest::new("relu");
+        req.id = 7;
+        req.seed = Some(99);
+        req.mode = Some(PipelineMode::Direct);
+        req.cores = Some(4);
+        req.backend = Some("cpu-ref".into());
+        req.repair = Some(2);
+        let line = Request::Generate(req.clone()).to_json().to_string();
+        assert_eq!(Request::parse(&line).unwrap(), Request::Generate(req));
+    }
+
+    #[test]
+    fn control_ops_round_trip() {
+        for (line, want) in [
+            ("{\"op\":\"stats\",\"id\":3}", Request::Stats { id: 3 }),
+            ("{\"op\":\"shutdown\"}", Request::Shutdown { id: 0 }),
+        ] {
+            let parsed = Request::parse(line).unwrap();
+            assert_eq!(parsed, want);
+            assert_eq!(Request::parse(&parsed.to_json().to_string()).unwrap(), parsed);
+        }
+    }
+
+    #[test]
+    fn malformed_requests_are_srv400() {
+        for line in [
+            "not json",
+            "[1,2]",
+            "{\"task\":\"relu\"}",                     // missing op
+            "{\"op\":\"fly\"}",                        // unknown op
+            "{\"op\":\"generate\"}",                   // missing task
+            "{\"op\":\"generate\",\"task\":\"relu\",\"turbo\":1}", // unknown field
+            "{\"op\":\"generate\",\"task\":\"relu\",\"seed\":-1}",
+            "{\"op\":\"generate\",\"task\":\"relu\",\"cores\":0}",
+            "{\"op\":\"generate\",\"task\":\"relu\",\"mode\":\"warp\"}",
+        ] {
+            let err = Request::parse(line).unwrap_err();
+            assert_eq!((err.stage.as_str(), err.code.as_str()), (STAGE_SERVE, "SRV400"), "{line}");
+        }
+    }
+
+    #[test]
+    fn resolve_rejects_unknown_names_with_srv404() {
+        let registry = BackendRegistry::builtin();
+        let defaults = PipelineConfig::default();
+        let err = KernelRequest::new("warp_drive").resolve(&registry, &defaults).unwrap_err();
+        assert_eq!(err.code, "SRV404");
+        let mut req = KernelRequest::new("relu");
+        req.backend = Some("tpu".into());
+        assert_eq!(req.resolve(&registry, &defaults).unwrap_err().code, "SRV404");
+    }
+
+    #[test]
+    fn resolve_applies_overrides_onto_the_defaults() {
+        let registry = BackendRegistry::builtin();
+        let defaults = PipelineConfig::default();
+        let mut req = KernelRequest::new("relu");
+        req.seed = Some(5);
+        req.cores = Some(2);
+        req.repair = Some(0);
+        req.backend = Some("cpu-ref".into());
+        let (task, cfg) = req.resolve(&registry, &defaults).unwrap();
+        assert_eq!(task.name, "relu");
+        assert_eq!((cfg.seed, cfg.cores, cfg.max_repair_rounds), (5, 2, 0));
+        assert_eq!(cfg.backend.name(), "cpu-ref");
+        // unset fields keep the daemon defaults
+        let (_, plain) = KernelRequest::new("relu").resolve(&registry, &defaults).unwrap();
+        assert_eq!(plain.seed, defaults.seed);
+    }
+}

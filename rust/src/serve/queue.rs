@@ -1,0 +1,197 @@
+//! Bounded MPMC request queue with admission control — the backpressure
+//! layer between protocol handlers and the worker pool.
+//!
+//! Admission is **non-blocking**: [`BoundedQueue::try_push`] either
+//! admits the item or returns it with a reason (`Full`/`Closed`), so a
+//! flooded daemon answers with a structured 429-style rejection instead
+//! of buffering unboundedly or stalling the connection. Workers block in
+//! [`BoundedQueue::pop`]; [`BoundedQueue::close`] lets them drain every
+//! admitted item and then exit — an admitted request is always answered,
+//! even across shutdown.
+//!
+//! The queue also tracks the depth high-water mark and the rejection
+//! count for the daemon's stats report.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// Why [`BoundedQueue::try_push`] returned the item instead of queueing
+/// it. The item rides along so the caller can answer its response
+/// channel.
+#[derive(Debug)]
+pub enum Rejected<T> {
+    /// The queue is at capacity — the 429 case.
+    Full(T),
+    /// [`BoundedQueue::close`] already ran — the daemon is shutting down.
+    Closed(T),
+}
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+    high_water: usize,
+    rejected: usize,
+}
+
+/// A Mutex+Condvar bounded queue (zero-crates; same primitives as
+/// [`crate::util::pool`]'s job queue, but bounded and non-blocking on the
+/// producer side).
+pub struct BoundedQueue<T> {
+    cap: usize,
+    state: Mutex<QueueState<T>>,
+    ready: Condvar,
+}
+
+impl<T> BoundedQueue<T> {
+    /// A queue admitting at most `cap` waiting items. `cap == 0` is the
+    /// degenerate reject-everything queue (useful for testing the
+    /// rejection path deterministically).
+    pub fn new(cap: usize) -> BoundedQueue<T> {
+        BoundedQueue {
+            cap,
+            state: Mutex::new(QueueState {
+                items: VecDeque::new(),
+                closed: false,
+                high_water: 0,
+                rejected: 0,
+            }),
+            ready: Condvar::new(),
+        }
+    }
+
+    /// Admit `item` or return it with the reason. Never blocks.
+    pub fn try_push(&self, item: T) -> Result<(), Rejected<T>> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(Rejected::Closed(item));
+        }
+        if st.items.len() >= self.cap {
+            st.rejected += 1;
+            return Err(Rejected::Full(item));
+        }
+        st.items.push_back(item);
+        st.high_water = st.high_water.max(st.items.len());
+        drop(st);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Wait for the next item. Returns `None` only once the queue is
+    /// closed **and** drained — every admitted item is handed to exactly
+    /// one worker.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.ready.wait(st).unwrap();
+        }
+    }
+
+    /// Stop admitting; wake every waiting worker so they drain and exit.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.ready.notify_all();
+    }
+
+    /// Current depth (items waiting, not yet claimed by a worker).
+    pub fn depth(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    /// Deepest the queue ever got — the stats report's backpressure
+    /// signal (a HWM at cap means rejections were close or happening).
+    pub fn high_water_mark(&self) -> usize {
+        self.state.lock().unwrap().high_water
+    }
+
+    /// Admissions refused with [`Rejected::Full`] since construction.
+    pub fn rejected(&self) -> usize {
+        self.state.lock().unwrap().rejected
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn rejects_when_full_and_admits_after_a_pop() {
+        let q = BoundedQueue::new(2);
+        assert!(q.try_push(1).is_ok());
+        assert!(q.try_push(2).is_ok());
+        match q.try_push(3) {
+            Err(Rejected::Full(3)) => {}
+            other => panic!("expected Full(3), got {other:?}"),
+        }
+        assert_eq!((q.depth(), q.high_water_mark(), q.rejected()), (2, 2, 1));
+        assert_eq!(q.pop(), Some(1));
+        assert!(q.try_push(3).is_ok());
+    }
+
+    #[test]
+    fn zero_capacity_rejects_everything() {
+        let q = BoundedQueue::new(0);
+        assert!(matches!(q.try_push(1), Err(Rejected::Full(1))));
+        assert_eq!(q.high_water_mark(), 0);
+    }
+
+    #[test]
+    fn close_drains_admitted_items_then_returns_none() {
+        let q = BoundedQueue::new(8);
+        q.try_push("a").unwrap();
+        q.try_push("b").unwrap();
+        q.close();
+        assert!(matches!(q.try_push("c"), Err(Rejected::Closed("c"))));
+        assert_eq!(q.pop(), Some("a"));
+        assert_eq!(q.pop(), Some("b"));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.pop(), None, "closed+empty stays None");
+    }
+
+    #[test]
+    fn every_item_is_claimed_by_exactly_one_worker() {
+        let q = Arc::new(BoundedQueue::new(256));
+        let seen = Arc::new(AtomicUsize::new(0));
+        let workers: Vec<_> = (0..4)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                let seen = Arc::clone(&seen);
+                std::thread::spawn(move || {
+                    while q.pop().is_some() {
+                        seen.fetch_add(1, Ordering::SeqCst);
+                    }
+                })
+            })
+            .collect();
+        for i in 0..200 {
+            // producers retry on Full so all 200 eventually land
+            let mut v = i;
+            loop {
+                match q.try_push(v) {
+                    Ok(()) => break,
+                    Err(Rejected::Full(back)) => {
+                        v = back;
+                        std::thread::yield_now();
+                    }
+                    Err(Rejected::Closed(_)) => unreachable!(),
+                }
+            }
+        }
+        q.close();
+        for w in workers {
+            w.join().unwrap();
+        }
+        assert_eq!(seen.load(Ordering::SeqCst), 200);
+    }
+}

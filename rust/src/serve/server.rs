@@ -1,0 +1,442 @@
+//! The serve daemon: admission → bounded queue → worker pool → cache →
+//! pipeline, plus the stdio and TCP front-ends.
+//!
+//! Request flow for `generate`:
+//!
+//! ```text
+//! submit ── resolve (SRV404?) ── try_push (SRV429/SRV503?) ── queue
+//!             worker: pop ── cache.claim ──┬─ Hit: answer, no stages run
+//!                                          ├─ Wait: attach to in-flight twin
+//!                                          └─ Owner: run_task → complete
+//! ```
+//!
+//! Backpressure is structural: the queue is bounded and admission never
+//! blocks, so a flooded daemon's memory is capped at
+//! `queue cap × request size` and overflow is answered immediately with a
+//! structured `SRV429` diagnostic. Admitted requests are always answered,
+//! including across shutdown (close-then-drain).
+//!
+//! The worker pool is [`crate::util::pool::WorkerPool`]; each worker
+//! blocks in [`BoundedQueue::pop`]. A kernel execution that fans out
+//! through `run_parts` inside a worker drains its own indices on that
+//! worker's thread (the pool's claim-counter design), so per-request
+//! kernel parallelism degrades to serial under full load instead of
+//! deadlocking.
+
+use crate::backend::BackendRegistry;
+use crate::coordinator::journal::task_key;
+use crate::coordinator::pipeline::{run_task, PipelineConfig};
+use crate::coordinator::stage::Diagnostic;
+use crate::serve::cache::{Claim, KernelCache};
+use crate::serve::protocol::{KernelRequest, Request, Response, STAGE_SERVE};
+use crate::serve::queue::{BoundedQueue, Rejected};
+use crate::serve::stats::{verdict_of, LatencyLog, ServeStats};
+use crate::util::pool::{configured_threads, WorkerPool};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+/// Daemon configuration (the `ascendcraft serve` flags).
+pub struct ServeConfig {
+    /// Pipeline defaults a request's unset fields resolve against.
+    pub defaults: PipelineConfig,
+    /// Worker threads draining the queue.
+    pub workers: usize,
+    /// Bounded queue capacity; overflow is rejected with `SRV429`.
+    /// `0` rejects every generate request (the admission-test hook).
+    pub queue_cap: usize,
+    /// Persistent cache path; `None` keeps the cache in memory only.
+    pub cache_path: Option<PathBuf>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            defaults: PipelineConfig::default(),
+            workers: configured_threads(),
+            queue_cap: 64,
+            cache_path: None,
+        }
+    }
+}
+
+/// One admitted request: the resolved execution tuple plus the response
+/// channel and the admission timestamp (latency measures admission →
+/// response, queue time included).
+struct Job {
+    id: u64,
+    task: crate::bench_suite::spec::TaskSpec,
+    cfg: PipelineConfig,
+    key: String,
+    resp: mpsc::Sender<Response>,
+    queued_at: Instant,
+}
+
+struct Inner {
+    queue: BoundedQueue<Job>,
+    cache: KernelCache,
+    latency: Mutex<LatencyLog>,
+    registry: BackendRegistry,
+    defaults: PipelineConfig,
+}
+
+/// A pending response. [`Ticket::wait`] blocks until the daemon answers;
+/// rejected requests answer immediately.
+pub struct Ticket {
+    rx: mpsc::Receiver<Response>,
+}
+
+impl Ticket {
+    pub fn wait(self) -> Response {
+        self.rx.recv().unwrap_or_else(|_| {
+            Response::failure(
+                0,
+                Diagnostic::new(
+                    STAGE_SERVE,
+                    "SRV500",
+                    "response channel closed without an answer (worker failure)",
+                ),
+            )
+        })
+    }
+}
+
+/// The in-process daemon handle. [`Daemon::submit`] is thread-safe;
+/// [`Daemon::shutdown`] closes admission, drains every admitted request,
+/// and returns the final stats. Dropping a daemon shuts it down too.
+pub struct Daemon {
+    inner: Arc<Inner>,
+    driver: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Daemon {
+    pub fn start(cfg: ServeConfig) -> Result<Daemon, String> {
+        let workers = cfg.workers.max(1);
+        let cache = KernelCache::open(cfg.cache_path.as_deref())?;
+        let inner = Arc::new(Inner {
+            queue: BoundedQueue::new(cfg.queue_cap),
+            cache,
+            latency: Mutex::new(LatencyLog::default()),
+            registry: BackendRegistry::builtin(),
+            defaults: cfg.defaults,
+        });
+        let drv = Arc::clone(&inner);
+        let driver = std::thread::Builder::new()
+            .name("ascendcraft-serve-driver".into())
+            .spawn(move || {
+                let pool = WorkerPool::new(workers);
+                pool.run(workers, |_| worker_loop(&drv));
+            })
+            .map_err(|e| format!("spawn serve driver: {e}"))?;
+        Ok(Daemon { inner, driver: Some(driver) })
+    }
+
+    /// Resolve and enqueue a generate request. Never blocks: resolution
+    /// failures (`SRV404`/`SRV400`-class) and queue rejections
+    /// (`SRV429`/`SRV503`) answer the ticket immediately.
+    pub fn submit(&self, req: KernelRequest) -> Ticket {
+        let (tx, rx) = mpsc::channel();
+        let id = req.id;
+        let started = Instant::now();
+        match req.resolve(&self.inner.registry, &self.inner.defaults) {
+            Err(diag) => {
+                self.record("error", started.elapsed().as_secs_f64());
+                let _ = tx.send(Response::failure(id, diag));
+            }
+            Ok((task, cfg)) => {
+                // golden=0: serve requests never run golden cross-checks,
+                // and the key must say so to stay disjoint from suite
+                // --golden journals
+                let key = task_key(&task, &cfg, 0);
+                let job = Job { id, task, cfg, key, resp: tx, queued_at: started };
+                match self.inner.queue.try_push(job) {
+                    Ok(()) => {}
+                    Err(Rejected::Full(job)) => {
+                        self.record("rejected", started.elapsed().as_secs_f64());
+                        let _ = job.resp.send(Response::failure(
+                            id,
+                            Diagnostic::new(
+                                STAGE_SERVE,
+                                "SRV429",
+                                format!(
+                                    "request queue is full ({} waiting, cap {}); retry later",
+                                    self.inner.queue.depth(),
+                                    self.inner.queue.capacity()
+                                ),
+                            ),
+                        ));
+                    }
+                    Err(Rejected::Closed(job)) => {
+                        self.record("rejected", started.elapsed().as_secs_f64());
+                        let _ = job.resp.send(Response::failure(
+                            id,
+                            Diagnostic::new(STAGE_SERVE, "SRV503", "daemon is shutting down"),
+                        ));
+                    }
+                }
+            }
+        }
+        Ticket { rx }
+    }
+
+    /// A point-in-time stats snapshot (the `stats` protocol op).
+    pub fn stats(&self) -> ServeStats {
+        ServeStats::assemble(
+            self.inner.cache.counters(),
+            self.inner.queue.rejected(),
+            self.inner.queue.high_water_mark(),
+            self.inner.queue.capacity(),
+            &self.inner.latency.lock().unwrap(),
+        )
+    }
+
+    /// Stop admission, drain every admitted request, join the workers,
+    /// and return the final stats.
+    pub fn shutdown(mut self) -> ServeStats {
+        self.stop();
+        self.stats()
+    }
+
+    fn stop(&mut self) {
+        self.inner.queue.close();
+        if let Some(d) = self.driver.take() {
+            let _ = d.join();
+        }
+    }
+
+    fn record(&self, verdict: &str, secs: f64) {
+        self.inner.latency.lock().unwrap().record(verdict, secs);
+    }
+}
+
+impl Drop for Daemon {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn worker_loop(inner: &Inner) {
+    while let Some(job) = inner.queue.pop() {
+        // one poisoned request must not take the worker down with it:
+        // the OwnerToken drop fails coalesced waiters and the dropped
+        // sender fails the requester, both with SRV500
+        if catch_unwind(AssertUnwindSafe(|| handle_job(inner, job))).is_err() {
+            eprintln!("warning: serve worker recovered from a panicked request");
+        }
+    }
+}
+
+fn handle_job(inner: &Inner, job: Job) {
+    let Job { id, task, cfg, key, resp, queued_at } = job;
+    let response = match inner.cache.claim(&key) {
+        Claim::Hit(result) => {
+            Response::success(id, result, true, false, queued_at.elapsed().as_secs_f64())
+        }
+        Claim::Wait(flight) => match flight.wait() {
+            Ok(result) => {
+                Response::success(id, result, false, true, queued_at.elapsed().as_secs_f64())
+            }
+            Err(diag) => {
+                let mut r = Response::failure(id, diag);
+                r.secs = queued_at.elapsed().as_secs_f64();
+                r
+            }
+        },
+        Claim::Owner(own) => {
+            let artifacts = run_task(&task, &cfg);
+            own.complete(&artifacts.result);
+            Response::success(id, artifacts.result, false, false, queued_at.elapsed().as_secs_f64())
+        }
+    };
+    let verdict = match &response.result {
+        Some(r) => verdict_of(r),
+        None => "error",
+    };
+    inner.latency.lock().unwrap().record(verdict, response.secs);
+    let _ = resp.send(response);
+}
+
+/// Serve the JSONL protocol over stdin/stdout until EOF or a `shutdown`
+/// op, then drain and return the final stats. Responses stream in
+/// completion order (the protocol is id-matched, not order-matched), so
+/// pipelined clients get queueing and coalescing over plain stdio.
+pub fn serve_stdio(cfg: ServeConfig) -> Result<ServeStats, String> {
+    let daemon = Daemon::start(cfg)?;
+    let (out_tx, out_rx) = mpsc::channel::<Response>();
+    let writer = std::thread::spawn(move || {
+        let stdout = std::io::stdout();
+        let mut out = stdout.lock();
+        for resp in out_rx {
+            if writeln!(out, "{}", resp.to_json()).is_err() {
+                return;
+            }
+            let _ = out.flush();
+        }
+    });
+    let stdin = std::io::stdin();
+    let mut forwarders = Vec::new();
+    let mut shutdown_id = None;
+    for line in stdin.lock().lines() {
+        let line = line.map_err(|e| format!("stdin read failed: {e}"))?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        match Request::parse(&line) {
+            Err(diag) => {
+                daemon.record("error", 0.0);
+                let _ = out_tx.send(Response::failure(0, diag));
+            }
+            Ok(Request::Generate(req)) => {
+                let ticket = daemon.submit(req);
+                let tx = out_tx.clone();
+                // a forwarder per in-flight request keeps the read loop
+                // non-blocking; overflow beyond queue cap rejects
+                // immediately, so forwarder count is bounded too
+                forwarders.push(std::thread::spawn(move || {
+                    let _ = tx.send(ticket.wait());
+                }));
+            }
+            Ok(Request::Stats { id }) => {
+                let _ = out_tx.send(Response::stats(id, daemon.stats().to_json()));
+            }
+            Ok(Request::Shutdown { id }) => {
+                shutdown_id = Some(id);
+                break;
+            }
+        }
+    }
+    for f in forwarders {
+        let _ = f.join();
+    }
+    let stats = daemon.shutdown();
+    if let Some(id) = shutdown_id {
+        // the shutdown ack carries the final stats
+        let _ = out_tx.send(Response::stats(id, stats.to_json()));
+    }
+    drop(out_tx);
+    let _ = writer.join();
+    Ok(stats)
+}
+
+/// Serve the JSONL protocol over TCP: one thread per connection, each
+/// speaking the same line protocol. A `shutdown` op from any connection
+/// stops the listener; admitted requests drain before the stats return.
+pub fn serve_addr(addr: &str, cfg: ServeConfig) -> Result<ServeStats, String> {
+    let listener = TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
+    let local = listener.local_addr().map_err(|e| format!("local_addr: {e}"))?;
+    eprintln!("ascendcraft serve: listening on {local}");
+    let daemon = Arc::new(Daemon::start(cfg)?);
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut conns = Vec::new();
+    for stream in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match stream {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("accept failed: {e}");
+                continue;
+            }
+        };
+        let daemon = Arc::clone(&daemon);
+        let stop = Arc::clone(&stop);
+        conns.push(std::thread::spawn(move || handle_conn(stream, &daemon, &stop, local)));
+    }
+    for c in conns {
+        let _ = c.join();
+    }
+    let daemon = Arc::try_unwrap(daemon)
+        .map_err(|_| "a connection thread outlived the accept loop".to_string())?;
+    Ok(daemon.shutdown())
+}
+
+fn handle_conn(stream: TcpStream, daemon: &Daemon, stop: &AtomicBool, local: SocketAddr) {
+    let reader = match stream.try_clone() {
+        Ok(s) => BufReader::new(s),
+        Err(e) => {
+            eprintln!("connection clone failed: {e}");
+            return;
+        }
+    };
+    let mut out = stream;
+    let mut send = |resp: Response| writeln!(out, "{}", resp.to_json()).is_ok();
+    for line in reader.lines() {
+        let Ok(line) = line else { return };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let ok = match Request::parse(&line) {
+            Err(diag) => {
+                daemon.record("error", 0.0);
+                send(Response::failure(0, diag))
+            }
+            Ok(Request::Generate(req)) => send(daemon.submit(req).wait()),
+            Ok(Request::Stats { id }) => send(Response::stats(id, daemon.stats().to_json())),
+            Ok(Request::Shutdown { id }) => {
+                let _ = send(Response::stats(id, daemon.stats().to_json()));
+                stop.store(true, Ordering::SeqCst);
+                // unblock the accept loop so it can observe the flag
+                let _ = TcpStream::connect(local);
+                return;
+            }
+        };
+        if !ok {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_sane() {
+        let cfg = ServeConfig::default();
+        assert!(cfg.workers >= 1);
+        assert_eq!(cfg.queue_cap, 64);
+        assert!(cfg.cache_path.is_none());
+    }
+
+    #[test]
+    fn unknown_task_answers_srv404_without_touching_the_queue() {
+        let daemon =
+            Daemon::start(ServeConfig { workers: 1, ..ServeConfig::default() }).unwrap();
+        let resp = daemon.submit(KernelRequest::new("not_a_task")).wait();
+        assert!(!resp.ok);
+        assert_eq!(resp.error.as_ref().unwrap().code, "SRV404");
+        let stats = daemon.shutdown();
+        assert_eq!(stats.queue_high_water, 0);
+        assert_eq!(stats.requests, 1);
+    }
+
+    #[test]
+    fn zero_capacity_queue_rejects_with_srv429() {
+        let daemon = Daemon::start(ServeConfig {
+            workers: 1,
+            queue_cap: 0,
+            ..ServeConfig::default()
+        })
+        .unwrap();
+        let resp = daemon.submit(KernelRequest::new("relu")).wait();
+        assert!(!resp.ok);
+        let err = resp.error.as_ref().unwrap();
+        assert_eq!((err.stage.as_str(), err.code.as_str()), (STAGE_SERVE, "SRV429"));
+        let stats = daemon.shutdown();
+        assert_eq!(stats.rejected, 1);
+    }
+
+    #[test]
+    fn submitting_after_shutdown_rejects_with_srv503() {
+        let mut daemon =
+            Daemon::start(ServeConfig { workers: 1, ..ServeConfig::default() }).unwrap();
+        daemon.stop();
+        let resp = daemon.submit(KernelRequest::new("relu")).wait();
+        assert_eq!(resp.error.as_ref().unwrap().code, "SRV503");
+    }
+}

@@ -1,0 +1,243 @@
+//! Daemon statistics: cache effectiveness, queue backpressure, and
+//! per-verdict latency percentiles, rendered in the suite's aligned-table
+//! style and exported as JSON for the `stats` protocol op.
+
+use crate::bench_suite::metrics::TaskResult;
+use crate::serve::cache::CacheCounters;
+use crate::util::json::Json;
+
+/// Verdict buckets for latency accounting. `pass`/`wrong`/`nocompile`
+/// classify completed pipeline results; `rejected` is queue admission
+/// refusal (SRV429/SRV503); `error` is everything else that answered with
+/// a diagnostic (bad request, unknown task, aborted execution).
+pub const VERDICTS: [&str; 5] = ["pass", "wrong", "nocompile", "rejected", "error"];
+
+/// Classify a completed pipeline result into its verdict bucket.
+pub fn verdict_of(result: &TaskResult) -> &'static str {
+    if result.correct {
+        "pass"
+    } else if result.compiled {
+        "wrong"
+    } else {
+        "nocompile"
+    }
+}
+
+/// Accumulates per-request latencies by verdict. The daemon owns one
+/// behind a mutex; a snapshot joins it with the cache and queue counters.
+#[derive(Default)]
+pub struct LatencyLog {
+    samples: [Vec<f64>; VERDICTS.len()],
+}
+
+impl LatencyLog {
+    pub fn record(&mut self, verdict: &str, secs: f64) {
+        let idx = VERDICTS.iter().position(|v| *v == verdict).unwrap_or(VERDICTS.len() - 1);
+        self.samples[idx].push(secs);
+    }
+
+    pub fn total(&self) -> usize {
+        self.samples.iter().map(Vec::len).sum()
+    }
+}
+
+/// Nearest-rank percentile of an unsorted sample set; `None` when empty.
+/// `q` in [0, 100].
+pub fn percentile(samples: &[f64], q: f64) -> Option<f64> {
+    if samples.is_empty() {
+        return None;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((q / 100.0) * sorted.len() as f64).ceil() as usize;
+    Some(sorted[rank.saturating_sub(1).min(sorted.len() - 1)])
+}
+
+/// One row of the latency table: a verdict with its sample count and
+/// p50/p90/p99 (in seconds).
+pub struct VerdictRow {
+    pub verdict: &'static str,
+    pub count: usize,
+    pub p50: Option<f64>,
+    pub p90: Option<f64>,
+    pub p99: Option<f64>,
+}
+
+/// A point-in-time view of the daemon, assembled at shutdown or on a
+/// `stats` request.
+pub struct ServeStats {
+    /// Total requests answered (all verdicts, including rejections).
+    pub requests: usize,
+    pub cache: CacheCounters,
+    /// Admissions refused because the queue was at capacity.
+    pub rejected: usize,
+    /// Deepest the request queue got.
+    pub queue_high_water: usize,
+    pub queue_cap: usize,
+    pub rows: Vec<VerdictRow>,
+}
+
+impl ServeStats {
+    pub fn assemble(
+        cache: CacheCounters,
+        rejected: usize,
+        queue_high_water: usize,
+        queue_cap: usize,
+        latency: &LatencyLog,
+    ) -> ServeStats {
+        let rows = VERDICTS
+            .iter()
+            .zip(&latency.samples)
+            .map(|(verdict, samples)| VerdictRow {
+                verdict,
+                count: samples.len(),
+                p50: percentile(samples, 50.0),
+                p90: percentile(samples, 90.0),
+                p99: percentile(samples, 99.0),
+            })
+            .collect();
+        ServeStats {
+            requests: latency.total(),
+            cache,
+            rejected,
+            queue_high_water,
+            queue_cap,
+            rows,
+        }
+    }
+
+    /// Requests answered without running the pipeline, as a fraction of
+    /// all generate requests that got an answer (hits + coalesced +
+    /// executed). `None` before any generate request completes.
+    pub fn hit_rate(&self) -> Option<f64> {
+        let served = self.cache.hits + self.cache.coalesced + self.cache.executed;
+        if served == 0 {
+            return None;
+        }
+        Some((self.cache.hits + self.cache.coalesced) as f64 / served as f64)
+    }
+
+    /// Aligned-text report in the suite-table style.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str("Serve daemon statistics.\n");
+        s.push_str(&format!(
+            "requests {}  executed {}  hits {}  coalesced {}  rejected {}  records {}\n",
+            self.requests,
+            self.cache.executed,
+            self.cache.hits,
+            self.cache.coalesced,
+            self.rejected,
+            self.cache.records,
+        ));
+        match self.hit_rate() {
+            Some(rate) => s.push_str(&format!("cache hit rate: {:.1}%\n", rate * 100.0)),
+            None => s.push_str("cache hit rate: n/a (no generate requests)\n"),
+        }
+        s.push_str(&format!(
+            "queue depth high-water mark: {} / cap {}\n",
+            self.queue_high_water, self.queue_cap
+        ));
+        s.push_str(&format!(
+            "{:<12} {:>8} {:>10} {:>10} {:>10}\n",
+            "Verdict", "Count", "p50 ms", "p90 ms", "p99 ms"
+        ));
+        for row in &self.rows {
+            let ms = |v: Option<f64>| match v {
+                Some(secs) => format!("{:.2}", secs * 1e3),
+                None => "-".to_string(),
+            };
+            s.push_str(&format!(
+                "{:<12} {:>8} {:>10} {:>10} {:>10}\n",
+                row.verdict,
+                row.count,
+                ms(row.p50),
+                ms(row.p90),
+                ms(row.p99)
+            ));
+        }
+        s
+    }
+
+    /// JSON payload for the `stats` protocol op.
+    pub fn to_json(&self) -> Json {
+        let mut obj = Json::obj();
+        obj.set("requests", self.requests as f64);
+        obj.set("executed", self.cache.executed as f64);
+        obj.set("hits", self.cache.hits as f64);
+        obj.set("coalesced", self.cache.coalesced as f64);
+        obj.set("rejected", self.rejected as f64);
+        obj.set("records", self.cache.records as f64);
+        if let Some(rate) = self.hit_rate() {
+            obj.set("hit_rate", rate);
+        }
+        obj.set("queue_high_water", self.queue_high_water as f64);
+        obj.set("queue_cap", self.queue_cap as f64);
+        let mut verdicts = Json::obj();
+        for row in &self.rows {
+            let mut v = Json::obj();
+            v.set("count", row.count as f64);
+            if let Some(p) = row.p50 {
+                v.set("p50_secs", p);
+            }
+            if let Some(p) = row.p90 {
+                v.set("p90_secs", p);
+            }
+            if let Some(p) = row.p99 {
+                v.set("p99_secs", p);
+            }
+            verdicts.set(row.verdict, v);
+        }
+        obj.set("verdicts", verdicts);
+        obj
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        let samples: Vec<f64> = (1..=100).map(f64::from).collect();
+        assert_eq!(percentile(&samples, 50.0), Some(50.0));
+        assert_eq!(percentile(&samples, 90.0), Some(90.0));
+        assert_eq!(percentile(&samples, 99.0), Some(99.0));
+        assert_eq!(percentile(&samples, 100.0), Some(100.0));
+        assert_eq!(percentile(&[42.0], 50.0), Some(42.0));
+        assert_eq!(percentile(&[], 50.0), None);
+    }
+
+    #[test]
+    fn stats_render_and_json_cover_every_verdict() {
+        let mut latency = LatencyLog::default();
+        latency.record("pass", 0.010);
+        latency.record("pass", 0.030);
+        latency.record("nocompile", 0.500);
+        latency.record("rejected", 0.0001);
+        latency.record("bogus-verdict", 0.001); // lands in `error`
+        let stats = ServeStats::assemble(
+            CacheCounters { hits: 3, coalesced: 1, executed: 2, records: 2 },
+            1,
+            7,
+            64,
+            &latency,
+        );
+        assert_eq!(stats.requests, 5);
+        let rate = stats.hit_rate().unwrap();
+        assert!((rate - 4.0 / 6.0).abs() < 1e-12, "{rate}");
+        let text = stats.render();
+        for v in VERDICTS {
+            assert!(text.contains(v), "render missing verdict {v}:\n{text}");
+        }
+        assert!(text.contains("high-water mark: 7 / cap 64"), "{text}");
+        let json = stats.to_json().to_string();
+        let parsed = Json::parse(&json).unwrap();
+        assert_eq!(parsed.get("requests").and_then(Json::as_f64), Some(5.0));
+        let verdicts = parsed.get("verdicts").expect("verdicts object");
+        assert_eq!(
+            verdicts.get("error").and_then(|v| v.get("count")).and_then(Json::as_f64),
+            Some(1.0)
+        );
+    }
+}

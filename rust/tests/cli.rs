@@ -590,6 +590,188 @@ fn suite_schedule_flag_selects_the_scheduler() {
     assert!(String::from_utf8_lossy(&out.stderr).contains("steal|static"));
 }
 
+/// Run `serve --stdio` with the given extra flags, feed it `lines` on
+/// stdin, and return (stdout, stderr, exit code).
+fn serve_stdio(extra: &[&str], lines: &[&str]) -> (String, String, Option<i32>) {
+    use std::io::Write;
+    use std::process::Stdio;
+    let mut child = bin()
+        .args(["serve", "--stdio"])
+        .args(extra)
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn serve --stdio");
+    {
+        let stdin = child.stdin.as_mut().expect("piped stdin");
+        for line in lines {
+            writeln!(stdin, "{line}").expect("write request line");
+        }
+    } // drop stdin -> EOF ends the read loop even without a shutdown op
+    let out = child.wait_with_output().expect("serve exits");
+    (
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+        out.status.code(),
+    )
+}
+
+#[test]
+fn serve_stdio_answers_repeats_from_cache_over_the_wire() {
+    // one worker makes the replay deterministic: the second relu request
+    // queues behind the first and is a pure cache hit, never coalesced
+    let (stdout, stderr, code) = serve_stdio(
+        &["--workers", "1"],
+        &[
+            r#"{"op":"generate","id":1,"task":"relu"}"#,
+            r#"{"op":"generate","id":2,"task":"relu"}"#,
+            r#"{"op":"stats","id":3}"#,
+            r#"{"op":"shutdown","id":4}"#,
+        ],
+    );
+    assert_eq!(code, Some(0), "{stderr}");
+    assert!(stdout.contains("\"cache_hit\":true"), "{stdout}");
+    for line in stdout.lines() {
+        let j = ascendcraft::util::json::Json::parse(line).expect("every response line is JSON");
+        assert!(j.get("ok").is_some(), "{line}");
+    }
+    // 2 generates + stats + shutdown ack
+    assert_eq!(stdout.lines().count(), 4, "{stdout}");
+    // the final stats report goes to stderr (stdout is the protocol stream)
+    assert!(stderr.contains("hit rate"), "{stderr}");
+}
+
+#[test]
+fn serve_rejects_malformed_and_unknown_requests_without_dying() {
+    let (stdout, _, code) = serve_stdio(
+        &["--workers", "1"],
+        &[
+            "{not json",
+            r#"{"op":"generate","task":"relu","bogus":1}"#,
+            r#"{"op":"generate","id":7,"task":"no_such_task"}"#,
+            r#"{"op":"generate","id":8,"task":"relu"}"#,
+            r#"{"op":"shutdown","id":9}"#,
+        ],
+    );
+    assert_eq!(code, Some(0), "bad requests answer SRV4xx; they do not kill the daemon");
+    assert!(stdout.contains("SRV400"), "{stdout}");
+    assert!(stdout.contains("SRV404"), "{stdout}");
+    // the well-formed request after the garbage is still served
+    assert!(stdout.contains("\"id\":8,\"ok\":true"), "{stdout}");
+}
+
+#[test]
+fn serve_cache_file_is_warm_across_invocations() {
+    let path = temp_journal("serve_cache");
+    let _ = std::fs::remove_file(&path);
+    let cache = path.to_string_lossy().into_owned();
+    let batch = [r#"{"op":"generate","id":1,"task":"gelu"}"#, r#"{"op":"shutdown","id":2}"#];
+
+    let (stdout, stderr, code) = serve_stdio(&["--workers", "1", "--cache", &cache], &batch);
+    assert_eq!(code, Some(0), "{stderr}");
+    assert!(stdout.contains("\"cache_hit\":false"), "{stdout}");
+
+    // a fresh process over the same cache file serves the same request
+    // without running any pipeline stages
+    let (stdout, stderr, code) = serve_stdio(&["--workers", "1", "--cache", &cache], &batch);
+    assert_eq!(code, Some(0), "{stderr}");
+    assert!(stdout.contains("\"cache_hit\":true"), "{stdout}");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn serve_rejects_bad_usage() {
+    for bad in [
+        &["serve", "--addr", "127.0.0.1:0", "--stdio"][..],
+        &["serve", "--workers", "0"][..],
+        &["serve", "--queue-cap", "nope"][..],
+        &["serve", "--cache"][..],
+        &["serve", "--bogus"][..],
+        &["serve", "relu"][..],
+    ] {
+        let out = bin().args(bad).output().expect("run serve");
+        assert_eq!(out.status.code(), Some(2), "args: {bad:?}");
+    }
+}
+
+#[test]
+fn suite_compare_gates_bench_snapshots_on_speedup_ratios() {
+    let base = temp_journal("bench_base");
+    let cur = temp_journal("bench_cur");
+    std::fs::write(
+        &base,
+        r#"{"bench":"hotpath","version":1,"mode":"quick","groups":{"serve":{"warm speedup":10.0,"warm ms":1.0}}}"#,
+    )
+    .unwrap();
+    let run = |cur_path: &std::path::Path, extra: &[&str]| {
+        bin().args(["suite", "--compare"])
+            .arg(&base)
+            .arg("--bench")
+            .arg(cur_path)
+            .args(extra)
+            .output()
+            .expect("run suite --compare --bench")
+    };
+
+    // ratio held (ms blew up: irrelevant, host-dependent) -> exit 0
+    std::fs::write(
+        &cur,
+        r#"{"bench":"hotpath","version":1,"mode":"quick","groups":{"serve":{"warm speedup":9.5,"warm ms":50.0}}}"#,
+    )
+    .unwrap();
+    let out = run(&cur, &[]);
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert_eq!(out.status.code(), Some(0), "{text}\n{}", String::from_utf8_lossy(&out.stderr));
+    assert!(text.contains("no regression"), "{text}");
+
+    // ratio dropped beyond tolerance -> exit 1
+    std::fs::write(
+        &cur,
+        r#"{"bench":"hotpath","version":1,"mode":"quick","groups":{"serve":{"warm speedup":5.0}}}"#,
+    )
+    .unwrap();
+    let out = run(&cur, &[]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("REGRESSED"));
+
+    // ...unless the tolerance is widened to allow it
+    let out = run(&cur, &["--tolerance", "0.6"]);
+    assert_eq!(out.status.code(), Some(0), "{}", String::from_utf8_lossy(&out.stdout));
+
+    // a bench baseline without --bench is a usage error, as is a bad tolerance
+    let out = bin().args(["suite", "--compare"]).arg(&base).output().expect("run suite");
+    assert_eq!(out.status.code(), Some(2));
+    let out = run(&cur, &["--tolerance", "1.5"]);
+    assert_eq!(out.status.code(), Some(2));
+
+    // --bench against a non-bench baseline is a usage error too
+    let out = bin()
+        .args(["suite", "--quiet", "--tasks", "relu", "--compare", &fixture("baseline_tiny.json")])
+        .arg("--bench")
+        .arg(&cur)
+        .output()
+        .expect("run suite");
+    assert_eq!(out.status.code(), Some(2));
+
+    let _ = std::fs::remove_file(&base);
+    let _ = std::fs::remove_file(&cur);
+}
+
+#[test]
+fn suite_compare_gates_the_checked_in_bench_snapshot_against_itself() {
+    // the CI perf gate, exercised end to end: the checked-in snapshot
+    // must pass against itself (identical ratios, zero drop)
+    let snap = format!("{}/../BENCH_PR9.json", env!("CARGO_MANIFEST_DIR"));
+    let out = bin()
+        .args(["suite", "--compare", &snap, "--bench", &snap])
+        .output()
+        .expect("run suite --compare --bench");
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert_eq!(out.status.code(), Some(0), "{text}\n{}", String::from_utf8_lossy(&out.stderr));
+    assert!(text.contains("no regression"), "{text}");
+}
+
 #[test]
 fn threads_flag_is_global_and_position_independent() {
     // leading position: dispatch must still see the command verb

@@ -6,6 +6,7 @@
 
 use ascendcraft::coordinator::journal::KEY_FIELDS;
 use ascendcraft::runtime::hlo::parser::{SUPPORTED_ELEM_TYPES, SUPPORTED_OPCODES};
+use ascendcraft::serve::protocol::{REQUEST_FIELDS, REQUEST_OPS, RESPONSE_FIELDS};
 
 fn read_doc(rel: &str) -> String {
     let path = format!("{}/../docs/{rel}", env!("CARGO_MANIFEST_DIR"));
@@ -76,6 +77,34 @@ fn documented_journal_key_fields_match_the_implementation() {
         documented, fields,
         "docs/ARCHITECTURE.md journal-key table does not match journal::KEY_FIELDS \
          (a field change invalidates every existing journal — update both sides deliberately)"
+    );
+}
+
+#[test]
+fn documented_serve_request_fields_match_the_protocol() {
+    let doc = read_doc("ARCHITECTURE.md");
+    let documented = table_names(&doc, "<!-- serve-request-begin -->", "<!-- serve-request-end -->");
+    let fields: Vec<String> = REQUEST_FIELDS.iter().map(|s| s.to_string()).collect();
+    assert_eq!(
+        documented, fields,
+        "docs/ARCHITECTURE.md serve-request table does not match protocol::REQUEST_FIELDS \
+         (the wire protocol is a compatibility surface — update both sides deliberately)"
+    );
+    // every documented op is one the parser accepts
+    for op in REQUEST_OPS {
+        assert!(doc.contains(&format!("`{op}`")), "ARCHITECTURE.md must document the '{op}' op");
+    }
+}
+
+#[test]
+fn documented_serve_response_fields_match_the_protocol() {
+    let doc = read_doc("ARCHITECTURE.md");
+    let documented =
+        table_names(&doc, "<!-- serve-response-begin -->", "<!-- serve-response-end -->");
+    let fields: Vec<String> = RESPONSE_FIELDS.iter().map(|s| s.to_string()).collect();
+    assert_eq!(
+        documented, fields,
+        "docs/ARCHITECTURE.md serve-response table does not match protocol::RESPONSE_FIELDS"
     );
 }
 

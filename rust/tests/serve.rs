@@ -1,0 +1,192 @@
+//! Integration tests for the serve daemon: cache-key discipline across
+//! the full task table, wire-protocol round-trips, end-to-end cache hits
+//! and coalescing through a live daemon, and warm restarts from a
+//! persisted cache file.
+
+use ascendcraft::backend::BackendRegistry;
+use ascendcraft::bench_suite::all_tasks;
+use ascendcraft::coordinator::journal::task_key;
+use ascendcraft::coordinator::pipeline::PipelineConfig;
+use ascendcraft::serve::{Daemon, KernelRequest, Response, ServeConfig};
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+
+fn temp_cache(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("ascendcraft_serve_{tag}_{}.jsonl", std::process::id()))
+}
+
+#[test]
+fn every_task_resolves_to_a_distinct_cache_key() {
+    // the serve cache is keyed by the same tuple as the suite journal;
+    // a key collision would silently serve one kernel's verdict for
+    // another's request
+    let registry = BackendRegistry::builtin();
+    let defaults = PipelineConfig::default();
+    let mut keys = BTreeSet::new();
+    for task in all_tasks() {
+        let req = KernelRequest::new(&task.name);
+        let (task, cfg) = req.resolve(&registry, &defaults).expect("listed task resolves");
+        let key = task_key(&task, &cfg, 0);
+        assert_eq!(key.len(), 16, "key is 16 hex chars: {key}");
+        assert!(key.chars().all(|c| c.is_ascii_hexdigit() && !c.is_ascii_uppercase()), "{key}");
+        assert!(keys.insert(key), "duplicate cache key for task {}", task.name);
+    }
+    assert_eq!(keys.len(), 52);
+}
+
+#[test]
+fn request_overrides_change_the_cache_key() {
+    let registry = BackendRegistry::builtin();
+    let defaults = PipelineConfig::default();
+    let key_of = |req: &KernelRequest| {
+        let (task, cfg) = req.resolve(&registry, &defaults).unwrap();
+        task_key(&task, &cfg, 0)
+    };
+    let base = KernelRequest::new("relu");
+    let mut seeded = KernelRequest::new("relu");
+    seeded.seed = Some(7);
+    let mut cored = KernelRequest::new("relu");
+    cored.cores = Some(4);
+    let mut backed = KernelRequest::new("relu");
+    backed.backend = Some("cpu-ref".to_string());
+    let keys: BTreeSet<String> =
+        [&base, &seeded, &cored, &backed].iter().map(|r| key_of(r)).collect();
+    assert_eq!(keys.len(), 4, "every config override must produce a distinct key");
+    // and the defaults are deterministic: same request, same key
+    assert_eq!(key_of(&base), key_of(&KernelRequest::new("relu")));
+}
+
+#[test]
+fn response_survives_a_wire_round_trip() {
+    let daemon = Daemon::start(ServeConfig { workers: 1, ..ServeConfig::default() }).unwrap();
+    let mut req = KernelRequest::new("relu");
+    req.id = 42;
+    let resp = daemon.submit(req).wait();
+    assert!(resp.ok && resp.result.is_some());
+    let line = resp.to_json().to_string();
+    assert!(!line.contains('\n'), "one response is one line");
+    let parsed = Response::from_json(&ascendcraft::util::json::Json::parse(&line).unwrap())
+        .expect("response parses back");
+    assert_eq!(parsed, resp);
+    drop(daemon);
+}
+
+#[test]
+fn a_repeated_request_is_served_from_cache_with_an_identical_verdict() {
+    let daemon = Daemon::start(ServeConfig { workers: 2, ..ServeConfig::default() }).unwrap();
+    let cold = daemon.submit(KernelRequest::new("gelu")).wait();
+    assert!(cold.ok && !cold.cache_hit && !cold.coalesced);
+    let warm = daemon.submit(KernelRequest::new("gelu")).wait();
+    assert!(warm.ok && warm.cache_hit && !warm.coalesced);
+    assert_eq!(cold.result, warm.result, "cached verdict must be byte-identical");
+
+    // failures are cached too: the pipeline is deterministic, so
+    // re-running a known-failing tuple is pure waste
+    let cold = daemon.submit(KernelRequest::new("mask_cumsum")).wait();
+    assert!(cold.ok, "a failed kernel is still a served request");
+    assert!(!cold.result.as_ref().unwrap().compiled);
+    let warm = daemon.submit(KernelRequest::new("mask_cumsum")).wait();
+    assert!(warm.cache_hit);
+    assert_eq!(cold.result, warm.result);
+
+    let stats = daemon.shutdown();
+    assert_eq!(stats.cache.executed, 2);
+    assert_eq!(stats.cache.hits, 2);
+    assert_eq!(stats.hit_rate(), Some(0.5));
+}
+
+#[test]
+fn identical_inflight_requests_coalesce_into_one_execution() {
+    const N: usize = 6;
+    let daemon = Daemon::start(ServeConfig { workers: 4, ..ServeConfig::default() }).unwrap();
+    let tickets: Vec<_> = (0..N)
+        .map(|i| {
+            let mut req = KernelRequest::new("softmax");
+            req.id = i as u64;
+            daemon.submit(req)
+        })
+        .collect();
+    let responses: Vec<Response> = tickets.into_iter().map(|t| t.wait()).collect();
+    let first = responses[0].result.clone().expect("softmax verifies");
+    for r in &responses {
+        assert!(r.ok, "all N identical requests are served");
+        assert_eq!(r.result.as_ref(), Some(&first), "one verdict for all");
+    }
+    let stats = daemon.shutdown();
+    assert_eq!(stats.cache.executed, 1, "exactly one pipeline run for N identical requests");
+    assert_eq!(
+        stats.cache.hits + stats.cache.coalesced,
+        N - 1,
+        "the other N-1 attach to the flight or hit the fresh record"
+    );
+    assert_eq!(stats.requests, N);
+}
+
+#[test]
+fn a_persisted_cache_survives_a_daemon_restart() {
+    let path = temp_cache("restart");
+    let _ = std::fs::remove_file(&path);
+    let cfg = || ServeConfig { workers: 1, cache_path: Some(path.clone()), ..ServeConfig::default() };
+
+    let daemon = Daemon::start(cfg()).unwrap();
+    let cold = daemon.submit(KernelRequest::new("relu")).wait();
+    assert!(cold.ok && !cold.cache_hit);
+    drop(daemon); // kill
+
+    // restart: the same request is a pure cache hit — no pipeline stages
+    let daemon = Daemon::start(cfg()).unwrap();
+    let warm = daemon.submit(KernelRequest::new("relu")).wait();
+    assert!(warm.cache_hit, "persisted cache must be warm after restart");
+    assert_eq!(cold.result, warm.result);
+    let stats = daemon.shutdown();
+    assert_eq!(stats.cache.executed, 0, "nothing re-ran on the warm restart");
+    assert_eq!(stats.cache.hits, 1);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn a_torn_cache_tail_is_dropped_not_fatal() {
+    let path = temp_cache("torn");
+    let _ = std::fs::remove_file(&path);
+    let cfg = || ServeConfig { workers: 1, cache_path: Some(path.clone()), ..ServeConfig::default() };
+
+    let daemon = Daemon::start(cfg()).unwrap();
+    assert!(daemon.submit(KernelRequest::new("relu")).wait().ok);
+    drop(daemon);
+
+    // tear the final record as a kill mid-append would
+    let full = std::fs::read_to_string(&path).unwrap();
+    std::fs::write(&path, &full[..full.len() - 20]).unwrap();
+
+    // the daemon still starts (tolerant open), drops the torn record,
+    // and simply re-executes the lost tuple
+    let daemon = Daemon::start(cfg()).unwrap();
+    let resp = daemon.submit(KernelRequest::new("relu")).wait();
+    assert!(resp.ok, "torn tail must not poison the daemon");
+    assert!(!resp.cache_hit, "the torn record is gone, so this re-executes");
+    let stats = daemon.shutdown();
+    assert_eq!(stats.cache.executed, 1);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn suite_journals_and_serve_caches_share_a_format() {
+    // a serve cache file opens as a suite journal would: same header,
+    // same record schema — `suite --journal` artifacts can pre-warm a
+    // daemon and vice versa
+    let path = temp_cache("format");
+    let _ = std::fs::remove_file(&path);
+    let daemon = Daemon::start(ServeConfig {
+        workers: 1,
+        cache_path: Some(path.clone()),
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    assert!(daemon.submit(KernelRequest::new("relu")).wait().ok);
+    drop(daemon);
+    let text = std::fs::read_to_string(&path).unwrap();
+    let header = text.lines().next().expect("header line");
+    assert!(header.contains("ascendcraft-suite-journal"), "{header}");
+    assert!(text.lines().count() >= 2, "header + one record");
+    let _ = std::fs::remove_file(&path);
+}
