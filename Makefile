@@ -8,7 +8,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: all build test bench bench-snapshot bench-regress smoke regress resume-smoke serve-smoke artifacts doc fmt clean
+.PHONY: all build test bench bench-snapshot bench-regress smoke regress resume-smoke serve-smoke tune-smoke artifacts doc fmt clean
 
 all: build
 
@@ -22,16 +22,16 @@ bench: build
 	$(CARGO) bench
 
 # Re-measure the perf trajectory: runs the hotpath bench's kernel groups
-# (matmul naive-vs-tiled, elementwise/reduction thread scaling) plus the
-# serve cold-vs-warm cache replay, and rewrites BENCH_PR9.json at the
-# repo root. The bench self-validates the snapshot (reparse + required
-# groups) and exits non-zero on a malformed file. Add BENCH_QUICK=1 for
-# the reduced-size CI variant.
+# (matmul naive-vs-tiled, elementwise/reduction thread scaling), the
+# serve cold-vs-warm cache replay, and the tune search-loop timing, and
+# rewrites BENCH_PR10.json at the repo root. The bench self-validates
+# the snapshot (reparse + required groups) and exits non-zero on a
+# malformed file. Add BENCH_QUICK=1 for the reduced-size CI variant.
 bench-snapshot:
-	$(CARGO) bench --bench hotpath -- $(if $(BENCH_QUICK),--quick) --json BENCH_PR9.json
+	$(CARGO) bench --bench hotpath -- $(if $(BENCH_QUICK),--quick) --json BENCH_PR10.json
 
 # Perf regression gate: re-measure a full-mode snapshot into target/ and
-# diff its speedup RATIOS against the checked-in BENCH_PR9.json (raw ms
+# diff its speedup RATIOS against the checked-in BENCH_PR10.json (raw ms
 # medians are host-dependent; ratios are not). The wide tolerance absorbs
 # run-to-run jitter — this gate exists to catch a tiling/threading/cache
 # collapse, not a 10% wobble. Full mode only: quick mode measures smaller
@@ -39,7 +39,7 @@ bench-snapshot:
 bench-regress: build
 	$(CARGO) bench --bench hotpath -- --json target/BENCH_CURRENT.json
 	./target/release/ascendcraft suite \
-		--compare BENCH_PR9.json --bench target/BENCH_CURRENT.json \
+		--compare BENCH_PR10.json --bench target/BENCH_CURRENT.json \
 		--tolerance 0.35
 
 # Release-mode end-to-end smoke over a small task subset with the golden
@@ -107,6 +107,22 @@ serve-smoke: build
 		--cache target/serve-smoke-cache.jsonl \
 	| grep -q '"cache_hit":true'
 	rm -f target/serve-smoke-cache.jsonl
+
+# Tune smoke: autotune the smoke-task subset with a tiny budget into a
+# throwaway store, then re-run the suite under that store. `suite --tuned`
+# runs the untuned baseline AND the tuned configs in one invocation,
+# prints the delta table, and exits 1 if any metric or per-task verdict
+# regresses — that exit code IS the "tuning never breaks correctness"
+# assertion. --min-pass keeps the Pass@1 floor identical to `make smoke`.
+tune-smoke: build
+	rm -f target/tune-smoke-store.jsonl
+	./target/release/ascendcraft tune \
+		--tasks relu,gelu,softmax,mse_loss,adam --budget 8 \
+		--store target/tune-smoke-store.jsonl
+	./target/release/ascendcraft suite --quiet \
+		--tasks relu,gelu,softmax,mse_loss,adam \
+		--tuned target/tune-smoke-store.jsonl --min-pass 5
+	rm -f target/tune-smoke-store.jsonl
 
 # Build the API docs with warnings denied (same gate as CI): broken
 # intra-doc links fail instead of rotting silently.

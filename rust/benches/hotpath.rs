@@ -13,7 +13,7 @@
 //!
 //! Args (after `--`): `--quick` runs only the kernel groups at reduced
 //! sizes (the CI snapshot mode); `--json PATH` writes the kernel-group
-//! medians as a machine-readable snapshot (see `BENCH_PR7.json` at the
+//! medians as a machine-readable snapshot (see `BENCH_PR10.json` at the
 //! repo root for the checked-in trajectory baseline) and exits non-zero
 //! if the snapshot fails its own validation.
 
@@ -28,6 +28,7 @@ use ascendcraft::runtime::GoldenOracle;
 use ascendcraft::serve::{Daemon, KernelRequest, ServeConfig};
 use ascendcraft::synth::{templates::KnowledgeBaseSynthesizer, Generator};
 use ascendcraft::transpile::{transpile, TranspileOptions};
+use ascendcraft::tune::{tune_task, TuneOptions};
 use ascendcraft::util::json::Json;
 use ascendcraft::util::kernels::{self, UnaryOp};
 use ascendcraft::util::pool::WorkerPool;
@@ -61,7 +62,7 @@ struct Snapshot {
 
 /// Groups the snapshot must contain — the CI quick-mode step fails when
 /// one is missing or the JSON does not reparse.
-const REQUIRED_GROUPS: [&str; 4] = ["matmul", "elementwise", "reduction", "serve"];
+const REQUIRED_GROUPS: [&str; 5] = ["matmul", "elementwise", "reduction", "serve", "tune"];
 
 impl Snapshot {
     fn metric(&mut self, group: &str, name: &str, value: f64) {
@@ -271,6 +272,32 @@ fn main() {
     println!("{:<46} {:>9.1}%", "  -> cache hit rate across both passes", hit_rate * 100.0);
     snap.metric("serve", "warm hit rate", hit_rate);
     drop(daemon);
+    println!();
+
+    // K4. tune: the autotuner's search loop on a representative
+    // elementwise task — wall time of one full tune_task() search plus
+    // the tuned-vs-untuned simulated-cycle ratio. The ratio is exact
+    // and host-independent (the search is deterministic), so it is the
+    // metric the `--compare` gate tracks; the wall-ms median tracks
+    // search-loop overhead per evaluation.
+    println!("tune: cost-model-guided search (relu):");
+    let tune_spec = task_by_name("relu").unwrap();
+    let tune_base = PipelineConfig::default();
+    let tune_opts = TuneOptions { budget: if quick { 8 } else { 16 }, beam: 2 };
+    let t_tune = time("tune[relu]: full search", if quick { 2 } else { 3 }, || {
+        tune_task(&tune_spec, &tune_base, &tune_opts)
+    });
+    let outcome = tune_task(&tune_spec, &tune_base, &tune_opts);
+    let tune_baseline = outcome.baseline_cycles.expect("relu baseline simulates");
+    let tune_best = outcome.best.as_ref().map(|(_, c)| *c).unwrap_or(tune_baseline);
+    let tune_ratio = tune_baseline / tune_best;
+    println!(
+        "{:<46} {tune_ratio:>9.2}x ({} evals)",
+        "  -> tuned speedup vs untuned (sim cycles)", outcome.evals
+    );
+    snap.metric("tune", "search ms", t_tune * 1e3);
+    snap.metric("tune", "evals", outcome.evals as f64);
+    snap.metric("tune", "cycle speedup", tune_ratio);
     println!();
 
     if let Some(path) = &json_path {

@@ -507,12 +507,35 @@ impl VerdictChange {
     }
 }
 
+/// Aggregate metric deltas restricted to one operator category (the
+/// per-category rollup `suite --compare` and `suite --tuned` print next
+/// to the per-task verdict list). Informational only: the exit-1 gate
+/// stays on the suite-wide metrics and per-task verdict flips, which
+/// already subsume any category-level drop.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CategoryDelta {
+    pub category: Category,
+    /// Same five rows as [`SuiteDelta::metrics`], over this category's
+    /// tasks only.
+    pub metrics: Vec<MetricDelta>,
+}
+
+impl CategoryDelta {
+    /// Any metric of this category dropped.
+    pub fn regressed(&self) -> bool {
+        self.metrics.iter().any(MetricDelta::regressed)
+    }
+}
+
 /// The diff `suite --compare BASELINE.json` renders and gates on:
 /// aggregate metric deltas, per-task verdict flips, and coverage changes.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SuiteDelta {
     /// Comp@1 / Pass@1 / Fastₓ, in render order (always five entries).
     pub metrics: Vec<MetricDelta>,
+    /// The same five metrics rolled up per operator category, in
+    /// [`Category`] order; categories present on either side appear.
+    pub categories: Vec<CategoryDelta>,
     /// Per-task verdicts that changed in either direction.
     pub verdicts: Vec<VerdictChange>,
     /// Baseline tasks absent from the current run — lost coverage is a
@@ -549,6 +572,23 @@ impl SuiteDelta {
                 if m.regressed() { "  REGRESSED" } else { "" }
             ));
         }
+        if !self.categories.is_empty() {
+            s.push_str("Per-category deltas (percentage points).\n");
+            s.push_str(&format!(
+                "{:<14} {:>9} {:>9} {:>9} {:>9} {:>9}\n",
+                "Category", "Comp@1", "Pass@1", "Fast0.2", "Fast0.8", "Fast1.0"
+            ));
+            for c in &self.categories {
+                s.push_str(&format!("{:<14}", c.category.name()));
+                for m in &c.metrics {
+                    s.push_str(&format!(" {:>+9.1}", m.current - m.baseline));
+                }
+                if c.regressed() {
+                    s.push_str("  REGRESSED");
+                }
+                s.push('\n');
+            }
+        }
         for v in &self.verdicts {
             s.push_str(&format!(
                 "verdict {:<18} {:<9} {} -> {}{}\n",
@@ -580,15 +620,32 @@ impl SuiteDelta {
 /// a Fastₓ value it didn't claim: missing cycles make `fast_at` false,
 /// which current runs can only match or beat). Tasks are matched by name.
 pub fn compare_suites(baseline: &SuiteResult, current: &SuiteResult) -> SuiteDelta {
-    let bt = baseline.totals();
-    let ct = current.totals();
-    let metrics = vec![
-        MetricDelta { name: "Comp@1", baseline: bt.comp_pct(), current: ct.comp_pct() },
-        MetricDelta { name: "Pass@1", baseline: bt.pass_pct(), current: ct.pass_pct() },
-        MetricDelta { name: "Fast0.2@1", baseline: bt.fast02_pct(), current: ct.fast02_pct() },
-        MetricDelta { name: "Fast0.8@1", baseline: bt.fast08_pct(), current: ct.fast08_pct() },
-        MetricDelta { name: "Fast1.0@1", baseline: bt.fast10_pct(), current: ct.fast10_pct() },
-    ];
+    let metric_rows = |b: &Metrics, c: &Metrics| {
+        vec![
+            MetricDelta { name: "Comp@1", baseline: b.comp_pct(), current: c.comp_pct() },
+            MetricDelta { name: "Pass@1", baseline: b.pass_pct(), current: c.pass_pct() },
+            MetricDelta { name: "Fast0.2@1", baseline: b.fast02_pct(), current: c.fast02_pct() },
+            MetricDelta { name: "Fast0.8@1", baseline: b.fast08_pct(), current: c.fast08_pct() },
+            MetricDelta { name: "Fast1.0@1", baseline: b.fast10_pct(), current: c.fast10_pct() },
+        ]
+    };
+    let metrics = metric_rows(&baseline.totals(), &current.totals());
+    // Per-category rollup: same five rows, restricted per category. A
+    // category present on only one side still gets a row (the other
+    // side's metrics are the empty Metrics — 0% everywhere).
+    let mut cats: std::collections::BTreeSet<Category> = std::collections::BTreeSet::new();
+    cats.extend(baseline.results.iter().map(|r| r.category));
+    cats.extend(current.results.iter().map(|r| r.category));
+    let of = |suite: &SuiteResult, cat: Category| {
+        Metrics::from_results(suite.results.iter().filter(|r| r.category == cat))
+    };
+    let categories = cats
+        .into_iter()
+        .map(|cat| CategoryDelta {
+            category: cat,
+            metrics: metric_rows(&of(baseline, cat), &of(current, cat)),
+        })
+        .collect();
     let by_name: BTreeMap<&str, &TaskResult> =
         current.results.iter().map(|r| (r.name.as_str(), r)).collect();
     let mut verdicts = Vec::new();
@@ -624,7 +681,7 @@ pub fn compare_suites(baseline: &SuiteResult, current: &SuiteResult) -> SuiteDel
         .filter(|r| !base_names.contains(r.name.as_str()))
         .map(|r| r.name.clone())
         .collect();
-    SuiteDelta { metrics, verdicts, missing, added }
+    SuiteDelta { metrics, categories, verdicts, missing, added }
 }
 
 #[cfg(test)]
@@ -867,6 +924,44 @@ mod tests {
         assert!(delta.regressed());
         assert!(delta.verdicts.iter().any(|v| v.what == "fast0.8" && v.regressed()));
         assert!(delta.metrics.iter().any(|m| m.name == "Pass@1" && !m.regressed()));
+    }
+
+    #[test]
+    fn compare_rolls_metrics_up_per_category() {
+        let mut act = result(Category::Activation, true, true, Some(500.0), 1000.0);
+        act.name = "act".into();
+        let mut loss = result(Category::Loss, true, true, Some(2000.0), 1000.0); // 0.5x
+        loss.name = "loss".into();
+        let baseline = SuiteResult { results: vec![act.clone(), loss.clone()] };
+        // the loss kernel gets faster: its category's Fast rows move, the
+        // activation category's stay put
+        let mut tuned_loss = loss.clone();
+        tuned_loss.generated_cycles = Some(800.0); // 1.25x
+        let current = SuiteResult { results: vec![act.clone(), tuned_loss] };
+        let delta = compare_suites(&baseline, &current);
+        assert_eq!(delta.categories.len(), 2);
+        let row = |cat: Category| delta.categories.iter().find(|c| c.category == cat).unwrap();
+        let loss_row = row(Category::Loss);
+        assert!(!loss_row.regressed());
+        let fast10 = loss_row.metrics.iter().find(|m| m.name == "Fast1.0@1").unwrap();
+        assert_eq!((fast10.baseline, fast10.current), (0.0, 100.0));
+        let act_row = row(Category::Activation);
+        assert!(act_row.metrics.iter().all(|m| m.baseline == m.current));
+        let rendered = delta.render();
+        assert!(rendered.contains("Per-category deltas"), "{rendered}");
+        assert!(rendered.contains("Loss"), "{rendered}");
+        assert!(rendered.contains("+100.0"), "{rendered}");
+        // a category-level drop renders REGRESSED on its row
+        let mut slow_act = act.clone();
+        slow_act.generated_cycles = Some(9000.0);
+        let worse = SuiteResult { results: vec![slow_act, loss.clone()] };
+        let delta = compare_suites(&baseline, &worse);
+        assert!(row_of(&delta, Category::Activation).regressed());
+        assert!(delta.render().contains("REGRESSED"));
+    }
+
+    fn row_of(delta: &SuiteDelta, cat: Category) -> &CategoryDelta {
+        delta.categories.iter().find(|c| c.category == cat).unwrap()
     }
 
     #[test]

@@ -261,8 +261,10 @@ impl Journal {
 
 /// Byte length of the line ending at byte offset `end` (including its
 /// `'\n'`), used to walk one durable line backwards when the final
-/// record — not the final line — is the torn one.
-fn line_len(text: &str, end: usize) -> usize {
+/// record — not the final line — is the torn one. Shared with the
+/// autotuner's best-config store (`tune/store.rs`), which replays the
+/// same torn-tail repair over its own record schema.
+pub(crate) fn line_len(text: &str, end: usize) -> usize {
     let body = &text.as_bytes()[..end.saturating_sub(1)];
     let start = body.iter().rposition(|&b| b == b'\n').map_or(0, |p| p + 1);
     end - start
@@ -386,6 +388,9 @@ mod tests {
         let mut opts = cfg.clone();
         opts.options.queue_depth = 4;
         assert_ne!(base, task_key(&task, &opts, 0));
+        let mut tuned = cfg.clone();
+        tuned.options.tiling_overrides = vec![("tile_len".to_string(), 1024)];
+        assert_ne!(base, task_key(&task, &tuned, 0), "tiling overrides are part of the tuple");
         assert_ne!(base, task_key(&task, &cfg, 1), "golden seeds are part of the tuple");
     }
 

@@ -29,5 +29,7 @@ pub mod stage;
 
 pub use journal::Journal;
 pub use pipeline::{run_task, PipelineConfig, PipelineMode};
-pub use service::{run_suite, run_suite_multi, MultiSuiteResult, Schedule, SuiteConfig};
+pub use service::{
+    run_suite, run_suite_multi, run_suite_with_pipelines, MultiSuiteResult, Schedule, SuiteConfig,
+};
 pub use stage::{Diagnostic, Session, Stage, StageOutcome, StageReport};

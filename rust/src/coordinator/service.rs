@@ -148,6 +148,29 @@ pub fn run_suite_artifacts(tasks: &[TaskSpec], cfg: &SuiteConfig) -> Vec<Pipelin
     run_jobs(&jobs, cfg, false)
 }
 
+/// Like [`run_suite`], but with an explicit pipeline configuration per
+/// task (zipped positionally; the two slices must be the same length).
+/// This is the `suite --tuned` entry point: the autotuner's best-config
+/// store maps each task to its winning overrides, so tasks no longer
+/// share one uniform `SuiteConfig::pipeline`. Everything else — golden
+/// cross-checks, journaling, scheduling — behaves exactly like
+/// [`run_suite`]; note the journal keys each job by *its own* pipeline
+/// tuple, so tuned and untuned runs never share records.
+pub fn run_suite_with_pipelines(
+    tasks: &[TaskSpec],
+    pipelines: &[PipelineConfig],
+    cfg: &SuiteConfig,
+) -> SuiteResult {
+    assert_eq!(tasks.len(), pipelines.len(), "one pipeline config per task");
+    let jobs: Vec<Job> = tasks
+        .iter()
+        .zip(pipelines)
+        .map(|(task, pipeline)| Job { task, pipeline: pipeline.clone(), golden: true })
+        .collect();
+    let arts = run_jobs(&jobs, cfg, false);
+    SuiteResult { results: arts.into_iter().map(|a| a.result).collect() }
+}
+
 /// Run one task list on several backends, sharded across **one** worker
 /// pool: the job list is every (backend, task) pair, and idle workers
 /// steal whichever job is next regardless of backend, so a slow backend
@@ -763,6 +786,29 @@ mod tests {
             assert_eq!(x.correct, y.correct);
             assert_eq!(x.generated_cycles, y.generated_cycles);
         }
+    }
+
+    #[test]
+    fn run_suite_with_pipelines_applies_per_task_configs() {
+        let tasks: Vec<_> = ["relu", "sigmoid"].iter().map(|n| task_by_name(n).unwrap()).collect();
+        let base = PipelineConfig::default();
+        let mut tuned = base.clone();
+        tuned.options.tiling_overrides = vec![("tile_len".to_string(), 1024)];
+        let uniform = run_suite(&tasks, &SuiteConfig::default());
+        let mixed = run_suite_with_pipelines(
+            &tasks,
+            &[base, tuned],
+            &SuiteConfig { workers: 2, ..Default::default() },
+        );
+        assert_eq!(mixed.results.len(), 2);
+        for (t, r) in tasks.iter().zip(&mixed.results) {
+            assert_eq!(t.name, r.name);
+            assert!(r.correct, "{}: {:?}", r.name, r.failure);
+        }
+        // task 0 ran the untouched base config: identical to the uniform run
+        assert_eq!(mixed.results[0].generated_cycles, uniform.results[0].generated_cycles);
+        // task 1 ran a different tiling: the simulated cost must differ
+        assert_ne!(mixed.results[1].generated_cycles, uniform.results[1].generated_cycles);
     }
 
     #[test]

@@ -98,6 +98,17 @@ pub const SERVE_CODES: &[(&str, &str)] = &[
     ("SRV503", "daemon is shutting down; admission closed"),
 ];
 
+/// Autotuner codes (`tune/`): store and search failures carried on a
+/// `Diagnostic` with stage `"tune"`. A task that simply has no improving
+/// candidate is not an error — these cover broken stores and tasks whose
+/// baseline pipeline cannot even produce a scoreable kernel.
+pub const TUNE_CODES: &[(&str, &str)] = &[
+    ("TUN001", "best-config store unreadable (bad header, foreign format, or I/O error)"),
+    ("TUN002", "best-config store append failed (record not persisted)"),
+    ("TUN101", "baseline pipeline failed; task has no reference to tune against"),
+    ("TUN102", "no candidate passed the correctness prefilter within the budget"),
+];
+
 /// Look a code up across every table.
 pub fn describe(code: &str) -> Option<&'static str> {
     DSL_CODES
@@ -105,6 +116,7 @@ pub fn describe(code: &str) -> Option<&'static str> {
         .chain(ASC_CODES.iter())
         .chain(ANALYSIS_CODES.iter())
         .chain(SERVE_CODES.iter())
+        .chain(TUNE_CODES.iter())
         .find(|(c, _)| *c == code)
         .map(|(_, d)| *d)
 }
@@ -121,7 +133,7 @@ mod tests {
 
     #[test]
     fn code_tables_are_sorted_and_unique() {
-        for table in [DSL_CODES, ASC_CODES, ANALYSIS_CODES, SERVE_CODES] {
+        for table in [DSL_CODES, ASC_CODES, ANALYSIS_CODES, SERVE_CODES, TUNE_CODES] {
             for pair in table.windows(2) {
                 assert!(pair[0].0 < pair[1].0, "{} must sort before {}", pair[0].0, pair[1].0);
             }
@@ -134,6 +146,7 @@ mod tests {
         assert!(describe("A301").is_some());
         assert!(describe("ASCAN102").is_some());
         assert!(describe("SRV429").is_some());
+        assert!(describe("TUN101").is_some());
         assert!(describe("Z999").is_none());
     }
 }

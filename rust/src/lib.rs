@@ -13,4 +13,5 @@ pub mod serve;
 pub mod sim;
 pub mod synth;
 pub mod transpile;
+pub mod tune;
 pub mod util;

@@ -11,9 +11,15 @@
 //!                   [--compare BASELINE.json]           regression gate
 //!                   [--bench CURRENT.json]              (bench-snapshot compare
 //!                   [--tolerance FRAC]                   mode; see below)
+//!                   [--tuned STORE.jsonl]              apply autotuned configs,
+//!                                                      delta vs untuned
+//! ascendcraft tune TASK|--all [--tasks A,B,..] [--budget N] [--beam K]
+//!                   [--store PATH] [--workers N]       autotuner: search
+//!                   [--mode M]                         tilings/cores/templates
 //! ascendcraft serve [--addr HOST:PORT | --stdio] [--workers N]
 //!                   [--queue-cap N] [--cache PATH]     kernel-generation daemon
-//!                   [--mode M]                         (JSONL request protocol)
+//!                   [--cache-max-entries N]            (JSONL request protocol)
+//!                   [--mode M] [--tuned STORE.jsonl]
 //! ascendcraft compile TASK [--emit=dsl|ascendc|diag|timings|lint] [--seed N]
 //!                   [--mode M] [--cores N]          staged pipeline, dump
 //!                   [--backend NAME]                any session artifact
@@ -44,12 +50,13 @@ use ascendcraft::bench_suite::tasks::{all_tasks, task_by_name};
 use ascendcraft::coordinator::journal::Journal;
 use ascendcraft::coordinator::pipeline::{run_task, PipelineConfig, PipelineMode};
 use ascendcraft::coordinator::service::{
-    cross_check_suite, run_suite, run_suite_multi, Schedule, SuiteConfig,
+    cross_check_suite, run_suite, run_suite_multi, run_suite_with_pipelines, Schedule, SuiteConfig,
 };
 use ascendcraft::mhc::{self, run_case_study, MhcDims};
 use ascendcraft::runtime::{fixtures, OracleRegistry};
 use ascendcraft::serve::{serve_addr, serve_stdio, ServeConfig};
 use ascendcraft::synth::prompt;
+use ascendcraft::tune::{tune_all, tuned_pipelines, TuneOptions, TuneStore};
 use ascendcraft::util::json::Json;
 use std::sync::{Arc, Mutex};
 
@@ -77,6 +84,7 @@ fn main() {
     };
     let code = match args.first().map(String::as_str) {
         Some("suite") => cmd_suite(&args[1..]),
+        Some("tune") => cmd_tune(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
         Some("compile") => cmd_compile(&args[1..]),
         Some("lint") => cmd_lint(&args[1..]),
@@ -104,8 +112,9 @@ fn print_usage() {
         "AscendCraft: DSL-guided AscendC kernel generation (reproduction)\n\
          \n\
          USAGE:\n\
-         \x20 ascendcraft suite [--mode ascendcraft|direct|generic] [--backend ascend-sim|cpu-ref|all] [--workers N] [--tasks A,B,..] [--cores N] [--min-pass N] [--json PATH] [--quiet] [--golden] [--golden-seeds N] [--journal PATH | --resume PATH] [--schedule steal|static] [--compare BASELINE.json [--bench CURRENT.json] [--tolerance FRAC]]\n\
-         \x20 ascendcraft serve [--addr HOST:PORT | --stdio] [--workers N] [--queue-cap N] [--cache PATH] [--mode M]   kernel-generation daemon (JSONL protocol)\n\
+         \x20 ascendcraft suite [--mode ascendcraft|direct|generic] [--backend ascend-sim|cpu-ref|all] [--workers N] [--tasks A,B,..] [--cores N] [--min-pass N] [--json PATH] [--quiet] [--golden] [--golden-seeds N] [--journal PATH | --resume PATH] [--schedule steal|static] [--compare BASELINE.json [--bench CURRENT.json] [--tolerance FRAC]] [--tuned STORE.jsonl]\n\
+         \x20 ascendcraft tune TASK|--all [--tasks A,B,..] [--budget N] [--beam K] [--store PATH] [--workers N] [--mode M]   autotune tilings/cores/templates, persist winners\n\
+         \x20 ascendcraft serve [--addr HOST:PORT | --stdio] [--workers N] [--queue-cap N] [--cache PATH] [--cache-max-entries N] [--mode M] [--tuned STORE.jsonl]   kernel-generation daemon (JSONL protocol)\n\
          \x20 ascendcraft compile TASK [--emit=dsl|ascendc|diag|timings|lint] [--seed N] [--mode M] [--cores N] [--backend NAME]\n\
          \x20 ascendcraft lint TASK|--all [--backend NAME] [--seed N]   static analyzer verdicts\n\
          \x20 ascendcraft gen --task NAME [--emit-dsl] [--emit-ascendc] [--emit-prompt]\n\
@@ -338,6 +347,38 @@ fn cmd_suite(args: &[String]) -> i32 {
         }
         _ => {}
     }
+    // --tuned STORE.jsonl applies the autotuner's best-config store per
+    // task and renders the tuned run's delta against an untuned run of
+    // the same configuration (the Fast@p uplift table). The orthogonal
+    // comparison modes are rejected: the untuned run IS the baseline here.
+    let tuned_store = if has_flag(args, "--tuned") {
+        let Some(path) = flag_value(args, "--tuned") else {
+            eprintln!("--tuned requires a store path");
+            return 2;
+        };
+        if backend_all {
+            eprintln!("--tuned runs on a single backend; drop --backend all");
+            return 2;
+        }
+        if baseline.is_some() {
+            eprintln!("--tuned and --compare are mutually exclusive (tuned compares against the untuned run)");
+            return 2;
+        }
+        match TuneStore::open(std::path::Path::new(path), true) {
+            Ok(s) => {
+                if s.dropped_partial {
+                    eprintln!("tuned store: dropped a partial trailing record from {path}");
+                }
+                Some(s)
+            }
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+    } else {
+        None
+    };
     let mut pipeline = PipelineConfig { mode, ..Default::default() };
     if let Some(n) = cores {
         pipeline.cores = n;
@@ -390,6 +431,9 @@ fn cmd_suite(args: &[String]) -> i32 {
     };
     if backend_all {
         return suite_all_backends(&tasks, &cfg, &registry, args, golden, min_pass, &baseline);
+    }
+    if let Some(store) = &tuned_store {
+        return suite_tuned(&tasks, &cfg, store, args, golden, min_pass);
     }
     let suite = run_suite(&tasks, &cfg);
     println!("\n{}", suite.render_table1());
@@ -454,6 +498,264 @@ fn cmd_suite(args: &[String]) -> i32 {
         println!("journal: {hits} cached, {appended} executed ({})", jr.path().display());
     }
     code
+}
+
+/// `suite --tuned STORE.jsonl`: run the task list twice — once with the
+/// untuned defaults, once with each task's stored winner applied — and
+/// render the tuned run's tables plus the per-metric and per-category
+/// delta against the untuned run. Exit 1 on any regression: the store
+/// only holds configs that beat the baseline at tune time, so a tuned
+/// run that loses a verdict means the store is stale for this template
+/// revision and must be re-tuned.
+fn suite_tuned(
+    tasks: &[TaskSpec],
+    cfg: &SuiteConfig,
+    store: &TuneStore,
+    args: &[String],
+    golden: bool,
+    min_pass: Option<usize>,
+) -> i32 {
+    let (pipelines, tuned_count) = tuned_pipelines(tasks, &cfg.pipeline, store);
+    println!(
+        "tuned store: {} records, {} of {} tasks tuned ({})",
+        store.len(),
+        tuned_count,
+        tasks.len(),
+        store.path().display()
+    );
+    let untuned = run_suite(tasks, cfg);
+    let tuned = run_suite_with_pipelines(tasks, &pipelines, cfg);
+    println!("\n=== tuned run ===");
+    println!("{}", tuned.render_table1());
+    println!("{}", tuned.render_table2());
+    let failures = tuned.render_failures();
+    if !failures.is_empty() {
+        println!("{failures}");
+    }
+    println!("=== tuned vs untuned ===");
+    let delta = compare_suites(&untuned, &tuned);
+    println!("{}", delta.render());
+    let mut code = 0;
+    if let Some(path) = flag_value(args, "--json") {
+        if let Err(e) = std::fs::write(path, tuned.to_json().to_pretty()) {
+            eprintln!("writing {path}: {e}");
+            return 1;
+        }
+        println!("wrote {path}");
+    }
+    if golden {
+        let failed = tuned.golden_failures();
+        println!(
+            "golden cross-check: {} artifacts checked, {} failed",
+            tuned.golden_checked(),
+            failed.len()
+        );
+        for r in &failed {
+            if let Some(g) = &r.golden {
+                println!("  {:<18} {}", r.name, g.detail);
+            }
+        }
+        if !failed.is_empty() {
+            code = 1;
+        }
+    }
+    if let Some(min) = min_pass {
+        let correct = tuned.totals().correct;
+        if correct < min {
+            eprintln!("tuned suite passed {correct} tasks, below the --min-pass floor of {min}");
+            code = 1;
+        } else {
+            println!("min-pass check: {correct} >= {min} tasks correct");
+        }
+    }
+    if delta.regressed() {
+        eprintln!("tuned run regressed vs untuned; re-tune the store");
+        code = 1;
+    }
+    if let Some(j) = &cfg.journal {
+        let jr = j.lock().unwrap();
+        let (hits, appended) = jr.stats();
+        println!("journal: {hits} cached, {appended} executed ({})", jr.path().display());
+    }
+    code
+}
+
+/// `ascendcraft tune TASK|--all`: per-task cost-model-guided search over
+/// tilings, core counts, queue depths, and template variants (see
+/// [`ascendcraft::tune`]), persisting every improving winner to the
+/// best-config store that `suite --tuned` and `serve --tuned` consult.
+fn cmd_tune(args: &[String]) -> i32 {
+    let mut opts = TuneOptions::default();
+    let mut store_path = "tune_store.jsonl".to_string();
+    let mut all = false;
+    let mut list: Option<String> = None;
+    let mut task_name: Option<&str> = None;
+    let mut mode = PipelineMode::AscendCraft;
+    let mut workers: Option<usize> = None;
+    let mut i = 0;
+    while i < args.len() {
+        let a = args[i].as_str();
+        if a == "--all" {
+            all = true;
+        } else if a == "--tasks" {
+            i += 1;
+            match args.get(i) {
+                Some(v) => list = Some(v.clone()),
+                None => {
+                    eprintln!("--tasks expects a comma-separated list of task names");
+                    return 2;
+                }
+            }
+        } else if a == "--budget" {
+            i += 1;
+            match args.get(i).and_then(|v| v.parse::<usize>().ok()) {
+                Some(n) if n >= 1 => opts.budget = n,
+                _ => {
+                    eprintln!("--budget expects a positive integer");
+                    return 2;
+                }
+            }
+        } else if a == "--beam" {
+            i += 1;
+            match args.get(i).and_then(|v| v.parse::<usize>().ok()) {
+                Some(n) if n >= 1 => opts.beam = n,
+                _ => {
+                    eprintln!("--beam expects a positive integer");
+                    return 2;
+                }
+            }
+        } else if a == "--store" {
+            i += 1;
+            match args.get(i) {
+                Some(p) => store_path = p.clone(),
+                None => {
+                    eprintln!("--store requires a path");
+                    return 2;
+                }
+            }
+        } else if a == "--workers" {
+            i += 1;
+            match args.get(i).and_then(|v| v.parse::<usize>().ok()) {
+                Some(n) if n >= 1 => workers = Some(n),
+                _ => {
+                    eprintln!("--workers expects a positive integer");
+                    return 2;
+                }
+            }
+        } else if a == "--mode" {
+            i += 1;
+            match args.get(i).map(String::as_str).and_then(parse_mode) {
+                Some(m) => mode = m,
+                None => {
+                    eprintln!("--mode expects ascendcraft|direct|generic");
+                    return 2;
+                }
+            }
+        } else if a.starts_with("--") {
+            eprintln!("unknown flag '{a}'");
+            return 2;
+        } else if task_name.is_none() {
+            task_name = Some(a);
+        } else {
+            eprintln!("unexpected argument '{a}'");
+            return 2;
+        }
+        i += 1;
+    }
+    let tasks: Vec<TaskSpec> = if all {
+        if task_name.is_some() || list.is_some() {
+            eprintln!("tune takes a task name, --tasks, or --all — not a combination");
+            return 2;
+        }
+        all_tasks()
+    } else if let Some(list) = &list {
+        if task_name.is_some() {
+            eprintln!("tune takes a task name, --tasks, or --all — not a combination");
+            return 2;
+        }
+        let mut subset = Vec::new();
+        for name in list.split(',').filter(|n| !n.is_empty()) {
+            match task_by_name(name) {
+                Some(t) => subset.push(t),
+                None => {
+                    eprintln!("unknown task '{name}' in --tasks (see 'ascendcraft list')");
+                    return 2;
+                }
+            }
+        }
+        if subset.is_empty() {
+            eprintln!("--tasks expects a comma-separated list of task names");
+            return 2;
+        }
+        subset
+    } else {
+        let Some(name) = task_name else {
+            eprintln!("tune requires a task name, --tasks, or --all (see 'ascendcraft list')");
+            return 2;
+        };
+        match task_by_name(name) {
+            Some(t) => vec![t],
+            None => {
+                eprintln!("unknown task '{name}'");
+                return 2;
+            }
+        }
+    };
+    let base = PipelineConfig { mode, ..Default::default() };
+    let mut store = match TuneStore::open(std::path::Path::new(&store_path), true) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    if store.dropped_partial {
+        eprintln!("store: dropped a partial trailing record from {store_path}");
+    }
+    let workers = workers.unwrap_or_else(ascendcraft::util::pool::configured_threads);
+    println!(
+        "tuning {} tasks (budget {}, beam {}) -> {store_path}",
+        tasks.len(),
+        opts.budget,
+        opts.beam
+    );
+    let outcomes = match tune_all(&tasks, &base, &opts, workers, &mut store) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let fmt = |c: Option<f64>| c.map(|v| format!("{v:.0}")).unwrap_or_else(|| "-".into());
+    for o in &outcomes {
+        let best = o.best.as_ref().map(|(_, c)| *c);
+        let note = if let Some(d) = &o.failure {
+            format!("[{} {}] {}", d.stage, d.code, d.message)
+        } else if o.improved() {
+            match (o.baseline_cycles, best) {
+                (Some(b), Some(t)) if t > 0.0 => format!("improved {:.2}x", b / t),
+                _ => "improved (baseline was incorrect)".to_string(),
+            }
+        } else {
+            "no gain (baseline kept)".to_string()
+        };
+        println!(
+            "  {:<18} baseline={:>12} best={:>12} evals={:>3}  {note}",
+            o.task,
+            fmt(o.baseline_cycles),
+            fmt(best),
+            o.evals
+        );
+    }
+    let improved = outcomes.iter().filter(|o| o.improved()).count();
+    println!(
+        "tune: {} tasks, {improved} improved, {} evaluations; store holds {} records ({})",
+        outcomes.len(),
+        outcomes.iter().map(|o| o.evals).sum::<usize>(),
+        store.len(),
+        store.path().display()
+    );
+    0
 }
 
 /// A parsed `--compare` baseline: one suite snapshot (`suite --json`
@@ -544,6 +846,24 @@ fn cmd_serve(args: &[String]) -> i32 {
                 Some(p) => cfg.cache_path = Some(std::path::PathBuf::from(p)),
                 None => {
                     eprintln!("--cache requires a path");
+                    return 2;
+                }
+            }
+        } else if a == "--cache-max-entries" {
+            i += 1;
+            match args.get(i).and_then(|v| v.parse::<usize>().ok()) {
+                Some(n) if n >= 1 => cfg.cache_max_entries = Some(n),
+                _ => {
+                    eprintln!("--cache-max-entries expects a positive integer");
+                    return 2;
+                }
+            }
+        } else if a == "--tuned" {
+            i += 1;
+            match args.get(i) {
+                Some(p) => cfg.tuned = Some(std::path::PathBuf::from(p)),
+                None => {
+                    eprintln!("--tuned requires a store path");
                     return 2;
                 }
             }

@@ -27,9 +27,10 @@
 //! waiters can never hang on a dead execution.
 
 use crate::bench_suite::metrics::TaskResult;
-use crate::coordinator::journal::Journal;
+use crate::coordinator::journal::{Journal, JOURNAL_FORMAT, JOURNAL_VERSION};
 use crate::coordinator::stage::Diagnostic;
 use crate::serve::protocol::STAGE_SERVE;
+use crate::util::json::{parse_jsonl, Json};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Condvar, Mutex};
@@ -175,6 +176,28 @@ impl KernelCache {
     /// opened tolerantly (torn tails dropped + truncated — the daemon
     /// gets killed, not shut down); without, the cache is memory-only.
     pub fn open(path: Option<&Path>) -> Result<KernelCache, String> {
+        KernelCache::open_bounded(path, None)
+    }
+
+    /// [`KernelCache::open`] with an optional size bound
+    /// (`serve --cache-max-entries N`): before the journal opens, the
+    /// file is compacted down to its newest `N` records (deduplicated by
+    /// key, later appends winning), so a long-lived daemon's cache file
+    /// stops growing without bound. The compaction rewrite is atomic
+    /// (temp file + rename) and reuses the tolerant-open parse, so a
+    /// torn tail is dropped exactly as the journal open would drop it.
+    pub fn open_bounded(
+        path: Option<&Path>,
+        max_entries: Option<usize>,
+    ) -> Result<KernelCache, String> {
+        if let (Some(p), Some(max)) = (path, max_entries) {
+            if let Some(dropped) = compact_journal(p, max)? {
+                eprintln!(
+                    "serve cache: compacted {}, dropped {dropped} superseded/oldest record(s)",
+                    p.display()
+                );
+            }
+        }
         let journal = match path {
             Some(p) => {
                 let j = Journal::open(p, true)?;
@@ -245,6 +268,70 @@ impl KernelCache {
     pub fn path(&self) -> Option<&Path> {
         self.path.as_deref()
     }
+}
+
+/// Rewrite a journal file keeping only the newest `max` records: lines
+/// are deduplicated by key (a later append supersedes an earlier one)
+/// and then the oldest survivors beyond `max` are dropped. Returns
+/// `Some(dropped)` when the file was rewritten, `None` when it was
+/// already within bounds. Anything that would make `Journal::open`
+/// reject the file — foreign header, interior corruption — is left
+/// untouched so the open reports it with its canonical error; a torn
+/// *tail* is dropped here exactly as the tolerant open would drop it.
+fn compact_journal(path: &Path, max: usize) -> Result<Option<usize>, String> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) if t.is_empty() => return Ok(None),
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(format!("read {}: {e}", path.display())),
+    };
+    // Reuse the tolerant-open parse; on any structural error defer to
+    // Journal::open, which rejects the file with its own message.
+    let Ok(doc) = parse_jsonl(&text, true) else { return Ok(None) };
+    let mut lines = doc.lines.into_iter();
+    let Some((header, header_end)) = lines.next() else { return Ok(None) };
+    let format = header.get("format").and_then(Json::as_str);
+    let version = header.get("version").and_then(Json::as_f64);
+    if format != Some(JOURNAL_FORMAT) || version != Some(JOURNAL_VERSION as f64) {
+        return Ok(None);
+    }
+    // Raw record lines as byte ranges of the original text (the rewrite
+    // must preserve records byte-exactly — re-serialization could reorder
+    // fields out from under a digest a user took of the file).
+    let mut records: Vec<(&str, String)> = Vec::new(); // (raw line, key)
+    let mut start = header_end;
+    for (line, end) in lines {
+        let Some(key) = line.get("key").and_then(Json::as_str) else {
+            // not a record (a torn tail that parsed as JSON): stop here,
+            // dropping it like the tolerant open would
+            break;
+        };
+        records.push((&text[start..end], key.to_string()));
+        start = end;
+    }
+    // Later lines supersede earlier ones with the same key.
+    let survivors: Vec<usize> = (0..records.len())
+        .filter(|&i| !records[i + 1..].iter().any(|(_, k)| *k == records[i].1))
+        .collect();
+    let keep: &[usize] = if survivors.len() > max {
+        &survivors[survivors.len() - max..]
+    } else {
+        &survivors[..]
+    };
+    let dropped = records.len() - keep.len();
+    if dropped == 0 && start == text.len() {
+        return Ok(None);
+    }
+    let mut compacted = String::with_capacity(header_end + keep.len() * 128);
+    compacted.push_str(&text[..header_end]);
+    for &i in keep {
+        compacted.push_str(records[i].0);
+    }
+    let tmp = path.with_extension("compact-tmp");
+    std::fs::write(&tmp, &compacted).map_err(|e| format!("write {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .map_err(|e| format!("rename {} -> {}: {e}", tmp.display(), path.display()))?;
+    Ok(Some(dropped))
 }
 
 #[cfg(test)]
@@ -323,6 +410,69 @@ mod tests {
         assert_eq!(err.code, "SRV500");
         // the key is free again: the next claim owns a fresh execution
         assert!(matches!(cache.claim("k"), Claim::Owner(_)));
+    }
+
+    #[test]
+    fn bounded_open_compacts_to_the_newest_records() {
+        let path = std::env::temp_dir()
+            .join(format!("ascendcraft_serve_compact_unit_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut j = Journal::open(&path, false).unwrap();
+            j.append("00000000000000aa", &sample("relu")).unwrap();
+            j.append("00000000000000bb", &sample("gelu")).unwrap();
+            // supersede the first key: the later append must win
+            j.append("00000000000000aa", &sample("tanh_x")).unwrap();
+            j.append("00000000000000cc", &sample("exp_x")).unwrap();
+        }
+        let cache = KernelCache::open_bounded(Some(&path), Some(2)).unwrap();
+        // 3 distinct keys, newest 2 kept: aa (superseded value) and cc
+        assert!(cache.peek("00000000000000bb").is_none(), "oldest key must be evicted");
+        assert_eq!(cache.peek("00000000000000aa").unwrap().name, "tanh_x");
+        assert!(cache.peek("00000000000000cc").is_some());
+        assert_eq!(cache.counters().records, 2);
+        // on disk: header + exactly 2 record lines, reopenable strict
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 3, "{text}");
+        assert!(Journal::open(&path, false).is_ok());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn bounded_open_within_limit_leaves_the_file_untouched() {
+        let path = std::env::temp_dir()
+            .join(format!("ascendcraft_serve_compact_noop_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut j = Journal::open(&path, false).unwrap();
+            j.append("00000000000000aa", &sample("relu")).unwrap();
+            j.append("00000000000000bb", &sample("gelu")).unwrap();
+        }
+        let before = std::fs::read_to_string(&path).unwrap();
+        let cache = KernelCache::open_bounded(Some(&path), Some(10)).unwrap();
+        assert_eq!(cache.counters().records, 2);
+        drop(cache);
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), before, "no-op must be byte-exact");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn bounded_open_drops_a_torn_tail_during_compaction() {
+        let path = std::env::temp_dir()
+            .join(format!("ascendcraft_serve_compact_torn_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut j = Journal::open(&path, false).unwrap();
+            j.append("00000000000000aa", &sample("relu")).unwrap();
+            j.append("00000000000000bb", &sample("gelu")).unwrap();
+        }
+        let full = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 15]).unwrap();
+        let cache = KernelCache::open_bounded(Some(&path), Some(1)).unwrap();
+        assert!(cache.peek("00000000000000aa").is_some());
+        assert!(cache.peek("00000000000000bb").is_none(), "torn record must not survive");
+        assert_eq!(cache.counters().records, 1);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -31,6 +31,7 @@ use crate::serve::cache::{Claim, KernelCache};
 use crate::serve::protocol::{KernelRequest, Request, Response, STAGE_SERVE};
 use crate::serve::queue::{BoundedQueue, Rejected};
 use crate::serve::stats::{verdict_of, LatencyLog, ServeStats};
+use crate::tune::{store_key, TuneStore};
 use crate::util::pool::{configured_threads, WorkerPool};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -51,6 +52,14 @@ pub struct ServeConfig {
     pub queue_cap: usize,
     /// Persistent cache path; `None` keeps the cache in memory only.
     pub cache_path: Option<PathBuf>,
+    /// Cache size bound (`--cache-max-entries N`): the cache journal is
+    /// compacted down to its newest N records on startup. `None` leaves
+    /// the file unbounded (append-only).
+    pub cache_max_entries: Option<usize>,
+    /// Autotuner best-config store (`--tuned PATH`): resolved requests
+    /// get their stored winning configuration applied before keying, so
+    /// a tuned daemon serves (and caches) the tuned kernels.
+    pub tuned: Option<PathBuf>,
 }
 
 impl Default for ServeConfig {
@@ -60,6 +69,8 @@ impl Default for ServeConfig {
             workers: configured_threads(),
             queue_cap: 64,
             cache_path: None,
+            cache_max_entries: None,
+            tuned: None,
         }
     }
 }
@@ -82,6 +93,8 @@ struct Inner {
     latency: Mutex<LatencyLog>,
     registry: BackendRegistry,
     defaults: PipelineConfig,
+    /// Best-config store; lookups are read-only after open.
+    tuned: Option<TuneStore>,
 }
 
 /// A pending response. [`Ticket::wait`] blocks until the daemon answers;
@@ -116,13 +129,18 @@ pub struct Daemon {
 impl Daemon {
     pub fn start(cfg: ServeConfig) -> Result<Daemon, String> {
         let workers = cfg.workers.max(1);
-        let cache = KernelCache::open(cfg.cache_path.as_deref())?;
+        let cache = KernelCache::open_bounded(cfg.cache_path.as_deref(), cfg.cache_max_entries)?;
+        let tuned = match cfg.tuned.as_deref() {
+            Some(p) => Some(TuneStore::open(p, true)?),
+            None => None,
+        };
         let inner = Arc::new(Inner {
             queue: BoundedQueue::new(cfg.queue_cap),
             cache,
             latency: Mutex::new(LatencyLog::default()),
             registry: BackendRegistry::builtin(),
             defaults: cfg.defaults,
+            tuned,
         });
         let drv = Arc::clone(&inner);
         let driver = std::thread::Builder::new()
@@ -147,7 +165,16 @@ impl Daemon {
                 self.record("error", started.elapsed().as_secs_f64());
                 let _ = tx.send(Response::failure(id, diag));
             }
-            Ok((task, cfg)) => {
+            Ok((task, mut cfg)) => {
+                // tuned store: apply the stored winner for this base
+                // tuple before keying, so the cache addresses the tuned
+                // configuration (a tuned and an untuned daemon sharing a
+                // cache file stay disjoint)
+                if let Some(store) = &self.inner.tuned {
+                    if let Some(rec) = store.lookup(&store_key(&task, &cfg)) {
+                        rec.config.apply(&mut cfg);
+                    }
+                }
                 // golden=0: serve requests never run golden cross-checks,
                 // and the key must say so to stay disjoint from suite
                 // --golden journals

@@ -45,11 +45,26 @@ pub struct TranspileOptions {
     /// (blunter than Pass 4's selective analysis; used when Pass 4 is
     /// ablated and alignment errors are repaired reactively).
     pub force_pad: bool,
+    /// Autotuner overrides: named host tiling assigns rewritten to literal
+    /// integers right after Pass 1 lowering, BEFORE the tiling env is
+    /// evaluated — so every consumer of the host program (transpile-time
+    /// validation, the timing simulator, the cpu-ref backend) sees the
+    /// overridden AST and dependent assigns recompute consistently. Names
+    /// that don't exist in the task's host are ignored (a stored config
+    /// must stay applicable across template revisions). Kept sorted by
+    /// the tuner so `Debug` output — which journal/cache keys hash — is
+    /// canonical.
+    pub tiling_overrides: Vec<(String, i64)>,
 }
 
 impl Default for TranspileOptions {
     fn default() -> TranspileOptions {
-        TranspileOptions { pass4: true, queue_depth: 2, force_pad: false }
+        TranspileOptions {
+            pass4: true,
+            queue_depth: 2,
+            force_pad: false,
+            tiling_overrides: Vec::new(),
+        }
     }
 }
 
@@ -97,7 +112,17 @@ pub fn transpile(
     options: &TranspileOptions,
 ) -> Result<TranspileOutput, TranspileError> {
     // Pass 1: host
-    let host = pass1_host::lower_host(dsl)?;
+    let mut host = pass1_host::lower_host(dsl)?;
+    // Autotuner overrides: rewrite matching tiling assigns to literals
+    // before the env is evaluated, so dependent assigns (per_core,
+    // n_tiles, …) recompute from the overridden values and every later
+    // consumer of the host AST — validation, the timing simulator, the
+    // cpu-ref backend — agrees on the tiling.
+    for (name, value) in &options.tiling_overrides {
+        if let Some(slot) = host.tiling_assigns.iter_mut().find(|(n, _)| n == name) {
+            slot.1 = crate::ascendc::ir::CExpr::Int(*value);
+        }
+    }
     let tiling_env = pass1_host::eval_tiling(&host, inputs)
         .map_err(|e| TranspileError::new("pass1", "H201", e))?;
 

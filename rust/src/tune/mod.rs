@@ -1,0 +1,410 @@
+//! Autotuner subsystem: cost-model-guided search over tilings, core
+//! counts, and synthesis-template variants, with a persisted best-config
+//! store (`tune/store.rs`).
+//!
+//! The paper's Fast@p headline (46.2% of generated kernels matching or
+//! beating PyTorch eager) is a *performance* metric, and the default
+//! synthesis templates optimize for correctness: one big tile per block
+//! (`tile_len = min(8192, per_core)`) means CopyIn → Compute → CopyOut
+//! serialize on the timing model's per-unit queues. The tuner searches
+//! the configuration space the transcompiler exposes —
+//!
+//! * **tilings** — named host tiling assigns (`tile_len`, `n_cores`)
+//!   rewritten to literal integers via
+//!   `TranspileOptions::tiling_overrides`; splitting a block into
+//!   multiple tiles lets MTE2/Vector/MTE3 overlap across loop
+//!   iterations (double buffering), and `n_cores` trades blocks per
+//!   wave against per-block work;
+//! * **queue depth** — TQue pipelining depth 1..4;
+//! * **template variant** — the synthesis mode (category template vs
+//!   generic fallback),
+//!
+//! with a two-phase evaluate loop per candidate: a `cpu-ref` functional
+//! run as the correctness prefilter (broken tilings — tails dropped by
+//! integer division, UB over-subscription — are discarded before any
+//! timing work), then the `ascend-sim` cycle count as the scoring
+//! oracle. Search is beam-style coordinate descent over the dimensions
+//! in a fixed order under a per-task evaluation budget; the repair loop
+//! runs inside every candidate evaluation exactly as in a normal
+//! pipeline run, so candidates that need alignment fixes get them.
+//!
+//! Determinism: candidate enumeration order is fixed, scores are exact
+//! simulated cycle counts, and ties break toward the earlier-enumerated
+//! candidate (the baseline enumerates first). Parallelism exists only
+//! *across* tasks (positional result slots, like the suite runner), so
+//! the winning config per task is bit-identical for any `--threads`.
+
+pub mod store;
+
+pub use store::{store_key, TuneStore, TunedConfig, TunedRecord};
+
+use crate::backend::CpuRefBackend;
+use crate::bench_suite::spec::TaskSpec;
+use crate::coordinator::pipeline::{run_task, PipelineConfig, PipelineMode};
+use crate::coordinator::stage::Diagnostic;
+use crate::util::pool;
+use std::sync::Arc;
+use std::sync::Mutex;
+
+/// Search-budget knobs (`ascendcraft tune --budget N --beam K`).
+#[derive(Clone, Debug)]
+pub struct TuneOptions {
+    /// Maximum candidate evaluations per task, the baseline included
+    /// (each evaluation is one cpu-ref prefilter run plus, if it
+    /// passes, one ascend-sim scoring run).
+    pub budget: usize,
+    /// Beam width: how many best-so-far configs seed the next dimension.
+    pub beam: usize,
+}
+
+impl Default for TuneOptions {
+    fn default() -> TuneOptions {
+        TuneOptions { budget: 24, beam: 2 }
+    }
+}
+
+/// What tuning one task produced.
+#[derive(Clone, Debug)]
+pub struct TuneOutcome {
+    pub task: String,
+    /// Simulated cycles of the untuned baseline (`None` when the
+    /// baseline pipeline failed to produce a correct, scoreable kernel).
+    pub baseline_cycles: Option<f64>,
+    /// Best correct candidate found: configuration and its cycles.
+    pub best: Option<(TunedConfig, f64)>,
+    /// Candidate evaluations spent.
+    pub evals: usize,
+    /// Why the search produced nothing (TUN101/TUN102), when it didn't.
+    pub failure: Option<Diagnostic>,
+}
+
+impl TuneOutcome {
+    /// Did the search find a config strictly better than the baseline
+    /// (or a correct config where the baseline had none)?
+    pub fn improved(&self) -> bool {
+        match (&self.best, self.baseline_cycles) {
+            (Some((_, cycles)), Some(base)) => *cycles < base,
+            (Some(_), None) => true,
+            (None, _) => false,
+        }
+    }
+
+    /// The store record for this outcome — `Some` only when tuning
+    /// actually improved on the baseline (the store holds winners, not
+    /// ties; a task whose best config *is* the baseline has no record
+    /// and consumers fall back to the untuned defaults).
+    pub fn record(&self) -> Option<TunedRecord> {
+        if !self.improved() {
+            return None;
+        }
+        let (config, cycles) = self.best.clone()?;
+        Some(TunedRecord {
+            task: self.task.clone(),
+            config,
+            cycles,
+            baseline_cycles: self.baseline_cycles,
+            evals: self.evals,
+        })
+    }
+}
+
+/// One search move: a single dimension set to a single value.
+#[derive(Clone, Debug)]
+enum Patch {
+    Tiling(String, i64),
+    QueueDepth(usize),
+    Mode(PipelineMode),
+}
+
+impl Patch {
+    fn apply(&self, config: &mut TunedConfig) {
+        match self {
+            Patch::Tiling(name, value) => {
+                match config.tiling_overrides.iter_mut().find(|(n, _)| n == name) {
+                    Some(slot) => slot.1 = *value,
+                    None => config.tiling_overrides.push((name.clone(), *value)),
+                }
+                config.tiling_overrides.sort();
+            }
+            Patch::QueueDepth(d) => config.queue_depth = *d,
+            Patch::Mode(m) => config.mode = *m,
+        }
+    }
+}
+
+/// Host tiling names the tuner overrides, with their value grids derived
+/// from the baseline's evaluated tiling env. Only *free* assigns are
+/// listed — derived ones (`per_core`, `n_tiles`, `rows_per_core`)
+/// recompute from these through the host AST.
+const TILE_NAMES: [&str; 1] = ["tile_len"];
+const CORE_NAMES: [&str; 1] = ["n_cores"];
+
+/// Queue depths the search tries (validator bounds: 1..=4).
+const QUEUE_DEPTHS: [usize; 3] = [1, 2, 4];
+
+/// Evaluate one candidate: cpu-ref correctness prefilter, then
+/// ascend-sim scoring. Returns the simulated cycles of a correct
+/// candidate, `None` for one that failed either phase.
+fn evaluate(task: &TaskSpec, base: &PipelineConfig, config: &TunedConfig) -> Option<f64> {
+    let mut sim_cfg = base.clone();
+    config.apply(&mut sim_cfg);
+    // Phase 1: functional prefilter on the cpu-ref backend — broken
+    // tilings (dropped tails, UB over-subscription) die here without
+    // paying for the timing simulation.
+    let mut pre_cfg = sim_cfg.clone();
+    pre_cfg.backend = Arc::new(CpuRefBackend);
+    let pre = run_task(task, &pre_cfg);
+    if !(pre.result.compiled && pre.result.correct) {
+        return None;
+    }
+    // Phase 2: the timing simulator is the scoring oracle.
+    let art = run_task(task, &sim_cfg);
+    if !(art.result.compiled && art.result.correct) {
+        return None;
+    }
+    art.result.generated_cycles
+}
+
+/// Run the baseline pipeline once on the scoring backend and derive the
+/// search dimensions from its artifacts: the host program's tiling
+/// assigns give the overridable names, the evaluated tiling env gives
+/// their current values (the grid anchors).
+fn probe_dimensions(
+    task: &TaskSpec,
+    base: &PipelineConfig,
+) -> (Option<f64>, Vec<Vec<Patch>>) {
+    let art = run_task(task, base);
+    let baseline_cycles = if art.result.correct { art.result.generated_cycles } else { None };
+    let mut dims: Vec<Vec<Patch>> = Vec::new();
+    let assigns: Vec<String> = art
+        .program()
+        .map(|p| p.host.tiling_assigns.iter().map(|(n, _)| n.clone()).collect())
+        .unwrap_or_default();
+    let tiling =
+        art.session.kernel.as_ref().map(|k| k.tiling.clone()).unwrap_or_default();
+    // Dimension 1: tile lengths — halve toward fine-grained pipelining.
+    for name in TILE_NAMES {
+        if !assigns.iter().any(|n| n == name) {
+            continue;
+        }
+        let Some(&cur) = tiling.get(name) else { continue };
+        let values: Vec<Patch> = [cur / 2, cur / 4, cur / 8]
+            .into_iter()
+            .filter(|&v| v >= 64 && v != cur)
+            .map(|v| Patch::Tiling(name.to_string(), v))
+            .collect();
+        if !values.is_empty() {
+            dims.push(values);
+        }
+    }
+    // Dimension 2: logical core count (blocks per launch).
+    for name in CORE_NAMES {
+        if !assigns.iter().any(|n| n == name) {
+            continue;
+        }
+        let Some(&cur) = tiling.get(name) else { continue };
+        let values: Vec<Patch> = [cur * 2, cur / 2]
+            .into_iter()
+            .filter(|&v| (8..=64).contains(&v) && v != cur)
+            .map(|v| Patch::Tiling(name.to_string(), v))
+            .collect();
+        if !values.is_empty() {
+            dims.push(values);
+        }
+    }
+    // Dimension 3: TQue pipelining depth.
+    let depths: Vec<Patch> = QUEUE_DEPTHS
+        .into_iter()
+        .filter(|&d| d != base.options.queue_depth)
+        .map(Patch::QueueDepth)
+        .collect();
+    if !depths.is_empty() {
+        dims.push(depths);
+    }
+    // Dimension 4: synthesis-template variant (last: it rarely wins, so
+    // greedy budget goes to the fruitful dimensions first).
+    if base.mode == PipelineMode::AscendCraft {
+        dims.push(vec![Patch::Mode(PipelineMode::GenericExamples)]);
+    }
+    (baseline_cycles, dims)
+}
+
+/// Tune one task: beam-style coordinate descent over the probed
+/// dimensions under `opts.budget` total candidate evaluations. Fully
+/// sequential and deterministic — ties break toward the
+/// earlier-enumerated candidate, and the baseline enumerates first.
+pub fn tune_task(task: &TaskSpec, base: &PipelineConfig, opts: &TuneOptions) -> TuneOutcome {
+    let budget = opts.budget.max(1);
+    let beam_width = opts.beam.max(1);
+    let (baseline_cycles, dims) = probe_dimensions(task, base);
+    let mut evals = 1; // the probe is the baseline's evaluation
+    if dims.is_empty() {
+        return TuneOutcome {
+            task: task.name.to_string(),
+            baseline_cycles,
+            best: None,
+            evals,
+            failure: Some(Diagnostic::new(
+                "tune",
+                "TUN101",
+                "baseline pipeline produced no host program to search over".to_string(),
+            )),
+        };
+    }
+
+    // Beam entries: (config, cycles, enumeration index) — the index is
+    // the deterministic tie-breaker.
+    let baseline_config = TunedConfig::baseline(base);
+    let mut seq = 0usize;
+    let mut beam: Vec<(TunedConfig, f64, usize)> = match baseline_cycles {
+        Some(c) => vec![(baseline_config.clone(), c, seq)],
+        None => Vec::new(),
+    };
+    let mut seen: Vec<String> = vec![format!("{baseline_config:?}")];
+
+    for dim in &dims {
+        if evals >= budget {
+            break;
+        }
+        // Seeds for this dimension: the beam, or the (possibly
+        // incorrect) baseline when nothing correct has been found yet —
+        // a later dimension may still repair the task.
+        let seeds: Vec<TunedConfig> = if beam.is_empty() {
+            vec![baseline_config.clone()]
+        } else {
+            beam.iter().map(|(c, _, _)| c.clone()).collect()
+        };
+        let mut pool: Vec<(TunedConfig, f64, usize)> = beam.clone();
+        'dim: for seed_cfg in &seeds {
+            for patch in dim {
+                let mut candidate = seed_cfg.clone();
+                patch.apply(&mut candidate);
+                let fingerprint = format!("{candidate:?}");
+                if seen.contains(&fingerprint) {
+                    continue;
+                }
+                if evals >= budget {
+                    break 'dim;
+                }
+                seen.push(fingerprint);
+                evals += 1;
+                seq += 1;
+                if let Some(cycles) = evaluate(task, base, &candidate) {
+                    pool.push((candidate, cycles, seq));
+                }
+            }
+        }
+        pool.sort_by(|a, b| {
+            a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal).then(a.2.cmp(&b.2))
+        });
+        pool.truncate(beam_width);
+        beam = pool;
+    }
+
+    let best = beam.first().map(|(c, cycles, _)| (c.clone(), *cycles));
+    let failure = if best.is_none() {
+        Some(Diagnostic::new(
+            "tune",
+            "TUN102",
+            format!("no correct candidate within a budget of {budget} evaluations"),
+        ))
+    } else {
+        None
+    };
+    TuneOutcome { task: task.name.to_string(), baseline_cycles, best, evals, failure }
+}
+
+/// Tune many tasks across the worker pool (parallelism across tasks
+/// only: each slot is positional, so results are thread-count
+/// independent) and persist every improving winner to `store` in task
+/// order — deterministic file contents for a given task list.
+pub fn tune_all(
+    tasks: &[TaskSpec],
+    base: &PipelineConfig,
+    opts: &TuneOptions,
+    workers: usize,
+    store: &mut TuneStore,
+) -> Result<Vec<TuneOutcome>, String> {
+    let slots: Vec<Mutex<Option<TuneOutcome>>> =
+        tasks.iter().map(|_| Mutex::new(None)).collect();
+    pool::run_parts_bounded(tasks.len(), workers.max(1), |i| {
+        let outcome = tune_task(&tasks[i], base, opts);
+        *slots[i].lock().unwrap() = Some(outcome);
+    });
+    let outcomes: Vec<TuneOutcome> =
+        slots.into_iter().map(|s| s.into_inner().unwrap().unwrap()).collect();
+    for outcome in &outcomes {
+        if let Some(record) = outcome.record() {
+            let task = tasks.iter().find(|t| t.name == outcome.task).unwrap();
+            store
+                .append(&store_key(task, base), &record)
+                .map_err(|e| format!("[tune TUN002] {e}"))?;
+        }
+    }
+    Ok(outcomes)
+}
+
+/// Per-task pipeline configs for a suite run: the base config with each
+/// task's stored winner applied (tasks without a record keep the base).
+/// Returns the configs plus how many tasks were tuned.
+pub fn tuned_pipelines(
+    tasks: &[TaskSpec],
+    base: &PipelineConfig,
+    store: &TuneStore,
+) -> (Vec<PipelineConfig>, usize) {
+    let mut tuned = 0;
+    let configs = tasks
+        .iter()
+        .map(|task| {
+            let mut cfg = base.clone();
+            if let Some(rec) = store.lookup(&store_key(task, base)) {
+                rec.config.apply(&mut cfg);
+                tuned += 1;
+            }
+            cfg
+        })
+        .collect();
+    (configs, tuned)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite::tasks::task_by_name;
+
+    #[test]
+    fn patches_compose_and_stay_sorted() {
+        let base = PipelineConfig::default();
+        let mut config = TunedConfig::baseline(&base);
+        Patch::Tiling("tile_len".into(), 1024).apply(&mut config);
+        Patch::Tiling("n_cores".into(), 16).apply(&mut config);
+        Patch::Tiling("tile_len".into(), 512).apply(&mut config);
+        Patch::QueueDepth(4).apply(&mut config);
+        assert_eq!(
+            config.tiling_overrides,
+            vec![("n_cores".to_string(), 16), ("tile_len".to_string(), 512)]
+        );
+        assert_eq!(config.queue_depth, 4);
+    }
+
+    #[test]
+    fn probe_finds_tile_dimension_for_elementwise() {
+        let task = task_by_name("relu").unwrap();
+        let base = PipelineConfig::default();
+        let (baseline, dims) = probe_dimensions(&task, &base);
+        assert!(baseline.is_some(), "relu baseline must be correct");
+        let has_tile = dims.iter().flatten().any(
+            |p| matches!(p, Patch::Tiling(name, _) if name == "tile_len"),
+        );
+        assert!(has_tile, "expected a tile_len grid, got {dims:?}");
+    }
+
+    #[test]
+    fn budget_caps_evaluations() {
+        let task = task_by_name("relu").unwrap();
+        let base = PipelineConfig::default();
+        let outcome = tune_task(&task, &base, &TuneOptions { budget: 2, beam: 1 });
+        assert!(outcome.evals <= 2, "budget 2 exceeded: {}", outcome.evals);
+        assert!(outcome.baseline_cycles.is_some());
+    }
+}

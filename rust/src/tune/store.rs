@@ -1,0 +1,413 @@
+//! The persisted best-config store: a content-addressed JSONL file with
+//! the same durability contract as the suite journal
+//! (`coordinator/journal.rs`) — header line, one fsync'd record per line,
+//! tolerant torn-tail recovery — holding the autotuner's winning
+//! configuration per execution tuple.
+//!
+//! Keying reuses [`task_key`](crate::coordinator::journal::task_key) over
+//! the *base* (untuned) pipeline tuple: the consumer — `suite --tuned`,
+//! `serve --tuned` — computes the key from its own defaults *before*
+//! applying any overrides, so a store tuned under the default
+//! configuration is found by any run using those defaults, and a store
+//! tuned under an ablation (different seed, cores, repair budget, …) is
+//! correctly invisible to runs with a different base tuple.
+//!
+//! Stores are mergeable like journals: records are replayed in file
+//! order and later records win ([`TuneStore::merge_from`] appends the
+//! other store's records, so its entries take precedence on key
+//! collisions — newest wins).
+//!
+//! File format (pinned to `docs/ARCHITECTURE.md` by `tests/docs_spec.rs`):
+//!
+//! ```text
+//! {"format":"ascendcraft-tune-store","version":1}
+//! {"key":"64af…","task":"relu","config":{…},"cycles":…,"baseline_cycles":…,"evals":…}
+//! ```
+
+use crate::bench_suite::spec::TaskSpec;
+use crate::coordinator::journal::{line_len, task_key};
+use crate::coordinator::pipeline::{PipelineConfig, PipelineMode};
+use crate::util::json::{parse_jsonl, Json};
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+/// Store header `format` value — distinct from the suite journal so the
+/// two JSONL families can never be appended into each other.
+pub const STORE_FORMAT: &str = "ascendcraft-tune-store";
+
+/// Store schema version; bump on incompatible record changes.
+pub const STORE_VERSION: u64 = 1;
+
+/// Top-level fields of one store record, in serialization order. Pinned
+/// to the table in `docs/ARCHITECTURE.md` ("Autotuner") by
+/// `tests/docs_spec.rs`.
+pub const STORE_FIELDS: [&str; 6] =
+    ["key", "task", "config", "cycles", "baseline_cycles", "evals"];
+
+/// One winning configuration: everything the consumer applies onto its
+/// base [`PipelineConfig`] before running the task.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TunedConfig {
+    /// Synthesis template variant (the `mode` search dimension).
+    pub mode: PipelineMode,
+    /// TQue depth the kernel plan uses (pipelining depth).
+    pub queue_depth: usize,
+    /// Host tiling assigns rewritten to literal integers, sorted by name
+    /// (the canonical order — `TranspileOptions`' `Debug` output feeds
+    /// journal/cache keys).
+    pub tiling_overrides: Vec<(String, i64)>,
+}
+
+impl TunedConfig {
+    /// The identity configuration under `base`: applying it changes
+    /// nothing.
+    pub fn baseline(base: &PipelineConfig) -> TunedConfig {
+        TunedConfig {
+            mode: base.mode,
+            queue_depth: base.options.queue_depth,
+            tiling_overrides: Vec::new(),
+        }
+    }
+
+    /// Apply this configuration onto a pipeline config (the consumer
+    /// side of the store: `suite --tuned`, `serve --tuned`).
+    pub fn apply(&self, cfg: &mut PipelineConfig) {
+        cfg.mode = self.mode;
+        cfg.options.queue_depth = self.queue_depth;
+        cfg.options.tiling_overrides = self.tiling_overrides.clone();
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut tiling = Json::obj();
+        for (name, value) in &self.tiling_overrides {
+            tiling.set(name.as_str(), *value);
+        }
+        let mut j = Json::obj();
+        j.set("mode", mode_name(self.mode))
+            .set("queue_depth", self.queue_depth)
+            .set("tiling", tiling);
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Option<TunedConfig> {
+        let mode = parse_mode(j.get("mode")?.as_str()?)?;
+        let queue_depth = exact_usize(j.get("queue_depth")?)?;
+        let mut tiling_overrides = Vec::new();
+        if let Some(Json::Obj(map)) = j.get("tiling") {
+            for (name, value) in map {
+                let v = value.as_f64()?;
+                if v.fract() != 0.0 {
+                    return None;
+                }
+                tiling_overrides.push((name.clone(), v as i64));
+            }
+        }
+        // BTreeMap iteration is already name-sorted — the canonical order
+        Some(TunedConfig { mode, queue_depth, tiling_overrides })
+    }
+}
+
+/// One store record: the winning config plus the evidence that won it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TunedRecord {
+    pub task: String,
+    pub config: TunedConfig,
+    /// Simulated cycles under the winning config.
+    pub cycles: f64,
+    /// Simulated cycles under the untuned baseline (`None` when the
+    /// baseline never produced a scoreable kernel — the tuned config
+    /// fixed a previously-failing task).
+    pub baseline_cycles: Option<f64>,
+    /// Candidate evaluations the search spent on this task.
+    pub evals: usize,
+}
+
+impl TunedRecord {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("task", self.task.as_str())
+            .set("config", self.config.to_json())
+            .set("cycles", self.cycles)
+            .set(
+                "baseline_cycles",
+                self.baseline_cycles.map(Json::from).unwrap_or(Json::Null),
+            )
+            .set("evals", self.evals);
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Option<TunedRecord> {
+        Some(TunedRecord {
+            task: j.get("task")?.as_str()?.to_string(),
+            config: TunedConfig::from_json(j.get("config")?)?,
+            cycles: j.get("cycles")?.as_f64()?,
+            baseline_cycles: match j.get("baseline_cycles") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(v.as_f64()?),
+            },
+            evals: exact_usize(j.get("evals")?)?,
+        })
+    }
+}
+
+/// The content-address a store record lives under: the base tuple with
+/// the tuned dimensions at their pre-tuning values (overrides cleared),
+/// golden off. Producer and consumers must call this — never raw
+/// [`task_key`] — so they agree on the address regardless of what is
+/// currently applied to `cfg`.
+pub fn store_key(task: &TaskSpec, cfg: &PipelineConfig) -> String {
+    let mut base = cfg.clone();
+    base.options.tiling_overrides.clear();
+    task_key(task, &base, 0)
+}
+
+/// An open best-config store: in-memory map plus the append handle.
+/// Open semantics mirror [`crate::coordinator::Journal::open`]: empty or
+/// missing file is fresh, foreign headers are rejected in both modes,
+/// tolerant mode truncates a torn tail back to the durable prefix.
+pub struct TuneStore {
+    path: PathBuf,
+    file: File,
+    records: BTreeMap<String, TunedRecord>,
+    /// Tolerant open dropped a partial trailing record.
+    pub dropped_partial: bool,
+}
+
+impl TuneStore {
+    pub fn open(path: &Path, tolerant: bool) -> Result<TuneStore, String> {
+        let existing = match std::fs::read_to_string(path) {
+            Ok(text) if text.is_empty() => None,
+            Ok(text) => Some(text),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => None,
+            Err(e) => return Err(format!("read {}: {e}", path.display())),
+        };
+        let mut records = BTreeMap::new();
+        let mut dropped_partial = false;
+        match existing {
+            None => {
+                let mut header = Json::obj();
+                header.set("format", STORE_FORMAT).set("version", STORE_VERSION);
+                std::fs::write(path, format!("{}\n", header.to_string()))
+                    .map_err(|e| format!("create {}: {e}", path.display()))?;
+            }
+            Some(text) => {
+                let doc = parse_jsonl(&text, tolerant)
+                    .map_err(|e| format!("{}: {e}", path.display()))?;
+                dropped_partial = doc.dropped_partial;
+                let mut lines = doc.lines.into_iter();
+                let header = lines
+                    .next()
+                    .ok_or_else(|| format!("{}: missing store header", path.display()))?;
+                let format = header.0.get("format").and_then(Json::as_str);
+                let version = header.0.get("version").and_then(Json::as_f64);
+                if format != Some(STORE_FORMAT) || version != Some(STORE_VERSION as f64) {
+                    return Err(format!(
+                        "{}: not a {STORE_FORMAT} v{STORE_VERSION} file",
+                        path.display()
+                    ));
+                }
+                let mut durable_len = doc.durable_len;
+                let total = lines.len();
+                for (i, (line, end)) in lines.enumerate() {
+                    match Self::record_of(&line) {
+                        Some((key, record)) => {
+                            records.insert(key, record);
+                        }
+                        None if tolerant && i + 1 == total => {
+                            durable_len = end - line_len(&text, end);
+                            dropped_partial = true;
+                        }
+                        None => {
+                            return Err(format!(
+                                "{}: malformed store record on line {}",
+                                path.display(),
+                                i + 2
+                            ));
+                        }
+                    }
+                }
+                if dropped_partial && durable_len < text.len() {
+                    let f = OpenOptions::new()
+                        .write(true)
+                        .open(path)
+                        .map_err(|e| format!("truncate {}: {e}", path.display()))?;
+                    f.set_len(durable_len as u64)
+                        .map_err(|e| format!("truncate {}: {e}", path.display()))?;
+                }
+            }
+        }
+        let file = OpenOptions::new()
+            .append(true)
+            .open(path)
+            .map_err(|e| format!("append-open {}: {e}", path.display()))?;
+        Ok(TuneStore { path: path.to_path_buf(), file, records, dropped_partial })
+    }
+
+    fn record_of(line: &Json) -> Option<(String, TunedRecord)> {
+        let key = line.get("key")?.as_str()?.to_string();
+        let record = TunedRecord::from_json(line)?;
+        Some((key, record))
+    }
+
+    /// The winning configuration stored for a key, if any.
+    pub fn lookup(&self, key: &str) -> Option<&TunedRecord> {
+        self.records.get(key)
+    }
+
+    /// Append one winner as a durable record (single line, fsync'd).
+    /// Re-appending an existing key supersedes it — the later record
+    /// wins on replay, which is what makes stores merge newest-wins.
+    pub fn append(&mut self, key: &str, record: &TunedRecord) -> Result<(), String> {
+        let mut line = Json::obj();
+        line.set("key", key).set("task", record.task.as_str());
+        if let Json::Obj(body) = record.to_json() {
+            for (k, v) in body {
+                line.set(k.as_str(), v);
+            }
+        }
+        let text = format!("{}\n", line.to_string());
+        self.file
+            .write_all(text.as_bytes())
+            .and_then(|()| self.file.flush())
+            .and_then(|()| self.file.sync_data())
+            .map_err(|e| format!("append {}: {e}", self.path.display()))?;
+        self.records.insert(key.to_string(), record.clone());
+        Ok(())
+    }
+
+    /// Merge another store into this one: every record of `other` is
+    /// appended here in its file order, so on key collisions the merged
+    /// (other) store's entries win — newest-wins, like replaying the two
+    /// logs concatenated.
+    pub fn merge_from(&mut self, other: &Path) -> Result<usize, String> {
+        let src = TuneStore::open(other, true)?;
+        let mut merged = 0;
+        for (key, record) in &src.records {
+            self.append(key, record)?;
+            merged += 1;
+        }
+        Ok(merged)
+    }
+
+    /// Number of keys with a stored winner.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// All records in key order (deterministic reporting order).
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &TunedRecord)> {
+        self.records.iter()
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// Stable mode names shared with the serve protocol's request field.
+pub fn mode_name(mode: PipelineMode) -> &'static str {
+    match mode {
+        PipelineMode::AscendCraft => "ascendcraft",
+        PipelineMode::Direct => "direct",
+        PipelineMode::GenericExamples => "generic",
+    }
+}
+
+/// Inverse of [`mode_name`].
+pub fn parse_mode(name: &str) -> Option<PipelineMode> {
+    match name {
+        "ascendcraft" => Some(PipelineMode::AscendCraft),
+        "direct" => Some(PipelineMode::Direct),
+        "generic" => Some(PipelineMode::GenericExamples),
+        _ => None,
+    }
+}
+
+fn exact_usize(j: &Json) -> Option<usize> {
+    let v = j.as_f64()?;
+    if v.fract() != 0.0 || v < 0.0 {
+        return None;
+    }
+    Some(v as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_path(tag: &str) -> PathBuf {
+        std::env::temp_dir()
+            .join(format!("ascendcraft_tune_store_unit_{tag}_{}.jsonl", std::process::id()))
+    }
+
+    fn sample_record(task: &str, cycles: f64) -> TunedRecord {
+        TunedRecord {
+            task: task.to_string(),
+            config: TunedConfig {
+                mode: PipelineMode::AscendCraft,
+                queue_depth: 2,
+                tiling_overrides: vec![("tile_len".to_string(), 1024)],
+            },
+            cycles,
+            baseline_cycles: Some(cycles * 2.0),
+            evals: 9,
+        }
+    }
+
+    #[test]
+    fn record_json_round_trips_and_names_every_pinned_field() {
+        let rec = sample_record("relu", 500.0);
+        let mut line = Json::obj();
+        line.set("key", "00000000000000aa");
+        if let Json::Obj(body) = rec.to_json() {
+            for (k, v) in body {
+                line.set(k.as_str(), v);
+            }
+        }
+        let text = line.to_string();
+        for field in STORE_FIELDS {
+            assert!(text.contains(&format!("\"{field}\"")), "{field} missing: {text}");
+        }
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(TunedRecord::from_json(&parsed), Some(rec));
+    }
+
+    #[test]
+    fn baseline_config_is_the_identity() {
+        let base = PipelineConfig::default();
+        let mut cfg = base.clone();
+        TunedConfig::baseline(&base).apply(&mut cfg);
+        assert_eq!(format!("{:?}", cfg.options), format!("{:?}", base.options));
+        assert_eq!(cfg.mode, base.mode);
+    }
+
+    #[test]
+    fn store_key_ignores_applied_overrides() {
+        let tasks = crate::bench_suite::tasks::all_tasks();
+        let task = tasks.iter().find(|t| t.name == "relu").unwrap();
+        let base = PipelineConfig::default();
+        let mut tuned = base.clone();
+        tuned.options.tiling_overrides = vec![("tile_len".to_string(), 512)];
+        assert_eq!(store_key(task, &base), store_key(task, &tuned));
+        // but a genuinely different base tuple addresses differently
+        let mut other = base.clone();
+        other.seed = 7;
+        assert_ne!(store_key(task, &base), store_key(task, &other));
+    }
+
+    #[test]
+    fn mode_names_round_trip() {
+        for mode in
+            [PipelineMode::AscendCraft, PipelineMode::Direct, PipelineMode::GenericExamples]
+        {
+            assert_eq!(parse_mode(mode_name(mode)), Some(mode));
+        }
+        assert_eq!(parse_mode("tpu"), None);
+    }
+}

@@ -762,7 +762,7 @@ fn suite_compare_gates_bench_snapshots_on_speedup_ratios() {
 fn suite_compare_gates_the_checked_in_bench_snapshot_against_itself() {
     // the CI perf gate, exercised end to end: the checked-in snapshot
     // must pass against itself (identical ratios, zero drop)
-    let snap = format!("{}/../BENCH_PR9.json", env!("CARGO_MANIFEST_DIR"));
+    let snap = format!("{}/../BENCH_PR10.json", env!("CARGO_MANIFEST_DIR"));
     let out = bin()
         .args(["suite", "--compare", &snap, "--bench", &snap])
         .output()

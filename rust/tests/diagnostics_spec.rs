@@ -4,7 +4,7 @@
 //! descriptions in `diag::{DSL_CODES, ASC_CODES, ANALYSIS_CODES}` — no
 //! more, no less, in the same order.
 
-use ascendcraft::diag::{describe, ANALYSIS_CODES, ASC_CODES, DSL_CODES, SERVE_CODES};
+use ascendcraft::diag::{describe, ANALYSIS_CODES, ASC_CODES, DSL_CODES, SERVE_CODES, TUNE_CODES};
 
 fn doc_text() -> String {
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../docs/DIAGNOSTICS.md");
@@ -79,6 +79,16 @@ fn documented_serve_codes_match_the_source() {
 }
 
 #[test]
+fn documented_tune_codes_match_the_source() {
+    assert_table_matches(
+        &doc_text(),
+        "<!-- tune-codes-begin -->",
+        "<!-- tune-codes-end -->",
+        TUNE_CODES,
+    );
+}
+
+#[test]
 fn every_documented_code_resolves_through_describe() {
     let doc = doc_text();
     for (begin, end) in [
@@ -86,6 +96,7 @@ fn every_documented_code_resolves_through_describe() {
         ("<!-- asc-codes-begin -->", "<!-- asc-codes-end -->"),
         ("<!-- analysis-codes-begin -->", "<!-- analysis-codes-end -->"),
         ("<!-- serve-codes-begin -->", "<!-- serve-codes-end -->"),
+        ("<!-- tune-codes-begin -->", "<!-- tune-codes-end -->"),
     ] {
         for (code, _) in table_rows(&doc, begin, end) {
             assert!(describe(&code).is_some(), "documented code {code} unknown to diag::describe");

@@ -7,6 +7,7 @@
 use ascendcraft::coordinator::journal::KEY_FIELDS;
 use ascendcraft::runtime::hlo::parser::{SUPPORTED_ELEM_TYPES, SUPPORTED_OPCODES};
 use ascendcraft::serve::protocol::{REQUEST_FIELDS, REQUEST_OPS, RESPONSE_FIELDS};
+use ascendcraft::tune::store::STORE_FIELDS;
 
 fn read_doc(rel: &str) -> String {
     let path = format!("{}/../docs/{rel}", env!("CARGO_MANIFEST_DIR"));
@@ -105,6 +106,18 @@ fn documented_serve_response_fields_match_the_protocol() {
     assert_eq!(
         documented, fields,
         "docs/ARCHITECTURE.md serve-response table does not match protocol::RESPONSE_FIELDS"
+    );
+}
+
+#[test]
+fn documented_tune_store_fields_match_the_implementation() {
+    let doc = read_doc("ARCHITECTURE.md");
+    let documented = table_names(&doc, "<!-- tune-store-begin -->", "<!-- tune-store-end -->");
+    let fields: Vec<String> = STORE_FIELDS.iter().map(|s| s.to_string()).collect();
+    assert_eq!(
+        documented, fields,
+        "docs/ARCHITECTURE.md tune-store table does not match store::STORE_FIELDS \
+         (the store is a persisted compatibility surface — update both sides deliberately)"
     );
 }
 

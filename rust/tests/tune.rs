@@ -1,0 +1,169 @@
+//! Autotuner integration: the tune -> store -> suite loop end to end.
+//! Covers store round-trips through a real `tune_all` run, torn-tail
+//! recovery, newest-wins merging, key distinctness across the whole
+//! task registry, and the acceptance property that a tuned suite run
+//! strictly improves at least one task's simulated cycles with zero
+//! correctness-verdict regressions.
+
+use ascendcraft::bench_suite::tasks::{all_tasks, task_by_name};
+use ascendcraft::coordinator::pipeline::PipelineConfig;
+use ascendcraft::coordinator::service::{run_suite, run_suite_with_pipelines, SuiteConfig};
+use ascendcraft::tune::{
+    store_key, tune_all, tuned_pipelines, TuneOptions, TuneStore, TunedConfig, TunedRecord,
+};
+use std::io::Write as _;
+use std::path::PathBuf;
+
+fn temp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("ascendcraft_tune_it_{tag}_{}.jsonl", std::process::id()))
+}
+
+fn record(task: &str, cycles: f64, tile: i64) -> TunedRecord {
+    let mut config = TunedConfig::baseline(&PipelineConfig::default());
+    config.tiling_overrides = vec![("tile_len".to_string(), tile)];
+    TunedRecord {
+        task: task.to_string(),
+        config,
+        cycles,
+        baseline_cycles: Some(cycles * 2.0),
+        evals: 4,
+    }
+}
+
+#[test]
+fn tune_all_winners_round_trip_through_reopen() {
+    let tasks: Vec<_> = ["relu", "gelu"].iter().map(|n| task_by_name(n).unwrap()).collect();
+    let base = PipelineConfig::default();
+    let path = temp_path("roundtrip");
+    let _ = std::fs::remove_file(&path);
+    let outcomes = {
+        let mut store = TuneStore::open(&path, false).unwrap();
+        tune_all(&tasks, &base, &TuneOptions { budget: 8, beam: 2 }, 2, &mut store).unwrap()
+    };
+    let reopened = TuneStore::open(&path, false).unwrap();
+    assert!(!reopened.dropped_partial);
+    let winners: Vec<_> = outcomes.iter().filter_map(|o| o.record()).collect();
+    assert_eq!(reopened.len(), winners.len(), "reopen must see every persisted winner");
+    for (task, outcome) in tasks.iter().zip(&outcomes) {
+        let looked_up = reopened.lookup(&store_key(task, &base));
+        assert_eq!(
+            looked_up.cloned(),
+            outcome.record(),
+            "{}: reopened record diverged from the tune outcome",
+            task.name
+        );
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn tolerant_open_recovers_the_durable_prefix_after_a_torn_tail() {
+    let path = temp_path("torn");
+    let _ = std::fs::remove_file(&path);
+    {
+        let mut store = TuneStore::open(&path, false).unwrap();
+        store.append("key-a", &record("relu", 100.0, 4096)).unwrap();
+        store.append("key-b", &record("gelu", 200.0, 2048)).unwrap();
+    }
+    // simulate a crash mid-append: a partial record with no newline
+    {
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(b"{\"key\":\"key-c\",\"task\":\"soft").unwrap();
+    }
+    // strict open refuses the damaged file; tolerant open truncates back
+    // to the durable prefix and reports the drop
+    assert!(TuneStore::open(&path, false).is_err());
+    let store = TuneStore::open(&path, true).unwrap();
+    assert!(store.dropped_partial, "tolerant open must report the dropped tail");
+    assert_eq!(store.len(), 2);
+    assert_eq!(store.lookup("key-a").unwrap().task, "relu");
+    assert_eq!(store.lookup("key-b").unwrap().task, "gelu");
+    // the truncation is durable: a later strict open succeeds
+    let store = TuneStore::open(&path, false).unwrap();
+    assert_eq!(store.len(), 2);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn merging_two_stores_is_newest_wins() {
+    let dst_path = temp_path("merge_dst");
+    let src_path = temp_path("merge_src");
+    let _ = std::fs::remove_file(&dst_path);
+    let _ = std::fs::remove_file(&src_path);
+    let mut dst = TuneStore::open(&dst_path, false).unwrap();
+    dst.append("key-shared", &record("relu", 100.0, 4096)).unwrap();
+    dst.append("key-dst-only", &record("gelu", 200.0, 2048)).unwrap();
+    {
+        let mut src = TuneStore::open(&src_path, false).unwrap();
+        src.append("key-shared", &record("relu", 80.0, 1024)).unwrap();
+        src.append("key-src-only", &record("softmax", 300.0, 512)).unwrap();
+    }
+    let merged = dst.merge_from(&src_path).unwrap();
+    assert_eq!(merged, 2);
+    assert_eq!(dst.len(), 3);
+    // the merged-in store's record supersedes on collision
+    let shared = dst.lookup("key-shared").unwrap();
+    assert_eq!(shared.cycles, 80.0);
+    assert_eq!(shared.config.tiling_overrides, vec![("tile_len".to_string(), 1024)]);
+    assert_eq!(dst.lookup("key-dst-only").unwrap().task, "gelu");
+    assert_eq!(dst.lookup("key-src-only").unwrap().task, "softmax");
+    // newest-wins survives a replay of the merged file
+    drop(dst);
+    let reopened = TuneStore::open(&dst_path, false).unwrap();
+    assert_eq!(reopened.lookup("key-shared").unwrap().cycles, 80.0);
+    let _ = std::fs::remove_file(&dst_path);
+    let _ = std::fs::remove_file(&src_path);
+}
+
+#[test]
+fn store_keys_are_distinct_across_the_whole_task_registry() {
+    let tasks = all_tasks();
+    assert!(tasks.len() >= 52, "task registry shrank to {}", tasks.len());
+    let base = PipelineConfig::default();
+    let mut seen = std::collections::HashSet::new();
+    for task in &tasks {
+        let key = store_key(task, &base);
+        assert!(seen.insert(key.clone()), "{}: store key collides: {key}", task.name);
+    }
+}
+
+#[test]
+fn tuned_suite_improves_cycles_without_verdict_regressions() {
+    let tasks: Vec<_> =
+        ["relu", "gelu", "softmax"].iter().map(|n| task_by_name(n).unwrap()).collect();
+    let base = PipelineConfig::default();
+    let path = temp_path("suite");
+    let _ = std::fs::remove_file(&path);
+    let mut store = TuneStore::open(&path, false).unwrap();
+    let outcomes =
+        tune_all(&tasks, &base, &TuneOptions { budget: 12, beam: 2 }, 2, &mut store).unwrap();
+    assert!(
+        outcomes.iter().any(|o| o.improved()),
+        "a 12-eval budget must improve at least one of relu/gelu/softmax: {outcomes:?}"
+    );
+
+    let (pipelines, tuned_count) = tuned_pipelines(&tasks, &base, &store);
+    assert_eq!(tuned_count, outcomes.iter().filter(|o| o.improved()).count());
+    let cfg = SuiteConfig { workers: 2, ..Default::default() };
+    let untuned = run_suite(&tasks, &cfg);
+    let tuned = run_suite_with_pipelines(&tasks, &pipelines, &cfg);
+
+    let mut strictly_better = 0;
+    for (u, t) in untuned.results.iter().zip(&tuned.results) {
+        assert_eq!(u.name, t.name);
+        // the acceptance bar: tuning must never flip a verdict false-ward
+        assert!(!u.compiled || t.compiled, "{}: tuned run stopped compiling", u.name);
+        assert!(!u.correct || t.correct, "{}: tuned run broke correctness", u.name);
+        if let (Some(uc), Some(tc)) = (u.generated_cycles, t.generated_cycles) {
+            assert!(tc <= uc, "{}: tuned cycles {tc} worse than untuned {uc}", u.name);
+            if tc < uc {
+                strictly_better += 1;
+            }
+        }
+    }
+    assert!(
+        strictly_better >= 1,
+        "at least one task's simulated cycles must strictly improve under the store"
+    );
+    let _ = std::fs::remove_file(&path);
+}

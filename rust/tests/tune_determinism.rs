@@ -1,0 +1,90 @@
+//! Autotuner determinism: the search must be **bit-stable** across
+//! worker-pool widths (1, 2, and 8 threads). The enumeration order is
+//! fixed, scores are exact simulated cycles, ties break to the earlier
+//! candidate, and `tune_all` parallelizes across *tasks* only into
+//! positional slots — so neither the winning configuration nor the
+//! persisted store bytes may depend on `--threads`. Companion to
+//! `tests/determinism.rs`, which pins the same contract for kernels and
+//! plan execution.
+
+use ascendcraft::bench_suite::tasks::task_by_name;
+use ascendcraft::coordinator::pipeline::PipelineConfig;
+use ascendcraft::tune::{tune_all, tune_task, TuneOptions, TuneStore};
+use ascendcraft::util::pool::WorkerPool;
+use std::path::PathBuf;
+
+fn temp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("ascendcraft_tune_det_{tag}_{}.jsonl", std::process::id()))
+}
+
+/// A budget small enough to keep the test fast but large enough for the
+/// beam to traverse more than one dimension (probe + several rounds).
+const OPTS: TuneOptions = TuneOptions { budget: 6, beam: 2 };
+
+#[test]
+fn tune_task_is_bit_identical_across_pool_widths() {
+    // one elementwise and one reduction task: different templates,
+    // different tiling grids
+    for name in ["relu", "softmax"] {
+        let task = task_by_name(name).unwrap();
+        let base = PipelineConfig::default();
+        let serial = WorkerPool::new(1).install(|| tune_task(&task, &base, &OPTS));
+        assert!(serial.baseline_cycles.is_some(), "{name}: baseline must simulate");
+        for width in [2usize, 8] {
+            let got = WorkerPool::new(width).install(|| tune_task(&task, &base, &OPTS));
+            assert_eq!(got.evals, serial.evals, "{name}: eval count diverged at {width} threads");
+            assert_eq!(
+                got.baseline_cycles.map(f64::to_bits),
+                serial.baseline_cycles.map(f64::to_bits),
+                "{name}: baseline cycles diverged at {width} threads"
+            );
+            match (&serial.best, &got.best) {
+                (Some((want_cfg, want_cycles)), Some((got_cfg, got_cycles))) => {
+                    assert_eq!(
+                        got_cfg, want_cfg,
+                        "{name}: winning config diverged at {width} threads"
+                    );
+                    assert_eq!(
+                        got_cycles.to_bits(),
+                        want_cycles.to_bits(),
+                        "{name}: winning cycles diverged at {width} threads"
+                    );
+                }
+                (None, None) => {}
+                (want, got) => {
+                    panic!("{name}: best-candidate presence diverged at {width} threads: serial {want:?} vs {got:?}")
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn tune_all_store_bytes_are_identical_at_every_worker_count() {
+    let tasks: Vec<_> =
+        ["relu", "gelu", "mse_loss"].iter().map(|n| task_by_name(n).unwrap()).collect();
+    let base = PipelineConfig::default();
+    let mut reference: Option<Vec<u8>> = None;
+    for workers in [1usize, 2, 8] {
+        let path = temp_path(&format!("w{workers}"));
+        let _ = std::fs::remove_file(&path);
+        let mut store = TuneStore::open(&path, false).unwrap();
+        let pool = WorkerPool::new(workers);
+        let outcomes =
+            pool.install(|| tune_all(&tasks, &base, &OPTS, workers, &mut store)).unwrap();
+        assert_eq!(outcomes.len(), tasks.len());
+        // outcomes come back in task order regardless of completion order
+        for (task, outcome) in tasks.iter().zip(&outcomes) {
+            assert_eq!(task.name, outcome.task, "slot order broken at {workers} workers");
+        }
+        drop(store);
+        let bytes = std::fs::read(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        match &reference {
+            None => reference = Some(bytes),
+            Some(want) => {
+                assert_eq!(&bytes, want, "store bytes diverged at {workers} workers")
+            }
+        }
+    }
+}
